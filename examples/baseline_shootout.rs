@@ -1,0 +1,58 @@
+//! Baseline shootout: Big-means vs the paper's §5 roster on one catalog
+//! dataset, printing a mini version of the paper's summary tables.
+//!
+//! ```bash
+//! cargo run --release --example baseline_shootout [dataset-name] [k]
+//! ```
+
+use bigmeans::baselines::MsscAlgorithm;
+use bigmeans::bench_harness::{paper_roster, run_experiment};
+use bigmeans::bench_harness::tables::summary_table;
+use bigmeans::data::catalog;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("Skin Segmentation");
+    let k: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10);
+
+    let entry = catalog::find(name).unwrap_or_else(|| {
+        eprintln!("unknown dataset '{name}', falling back to Skin Segmentation");
+        catalog::find("Skin Segmentation").unwrap()
+    });
+    let data = entry.generate(20220418);
+    println!(
+        "dataset: {} (m={}, n={}, chunk s={})  k={k}",
+        entry.name,
+        data.m(),
+        data.n(),
+        entry.chunk_size
+    );
+    println!("paper shape ref: m={}, n={}\n", entry.paper_m, entry.paper_n);
+
+    let roster = paper_roster(&entry);
+    let names: Vec<&str> = roster.iter().map(|a| a.name()).collect();
+    println!("roster: {names:?}\n");
+
+    let exp = run_experiment(&data, &roster, &[k], 3, 7);
+    let table = summary_table(&exp);
+
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "algorithm", "E_A min%", "E_A mean%", "E_A max%", "cpu mean", "status"
+    );
+    for row in &table.rows {
+        match (row.ea, row.cpu) {
+            (Some(ea), Some(cpu)) => println!(
+                "{:<22} {:>10.3} {:>10.3} {:>10.3} {:>9.3}s {:>10}",
+                row.algorithm, ea.min, ea.mean, ea.max, cpu.mean, "ok"
+            ),
+            _ => println!(
+                "{:<22} {:>10} {:>10} {:>10} {:>10} {:>10}",
+                row.algorithm, "—", "—", "—", "—", "failed"
+            ),
+        }
+    }
+    if let Some(row) = table.rows.first() {
+        println!("\nf_best* = {:.6e} (best across all runs here)", row.f_best);
+    }
+}

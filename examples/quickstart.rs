@@ -1,0 +1,56 @@
+//! Quickstart: cluster a synthetic big dataset with Big-means in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use std::time::Duration;
+
+use bigmeans::coordinator::config::StopCondition;
+use bigmeans::data::Synth;
+use bigmeans::{BigMeans, BigMeansConfig};
+
+fn main() {
+    // 100k points, 8 features, 10 latent clusters.
+    let data = Synth::GaussianMixture {
+        m: 100_000,
+        n: 8,
+        k_true: 10,
+        spread: 0.5,
+        box_half_width: 25.0,
+    }
+    .generate("quickstart", 42);
+
+    // Big-means: k=10 clusters, chunks of 4096 points, 2-second budget.
+    let config = BigMeansConfig::new(10, 4096)
+        .with_stop(StopCondition::MaxTime(Duration::from_secs(2)))
+        .with_seed(7);
+
+    let result = BigMeans::new(config).run(&data).expect("clustering failed");
+
+    println!("Big-means on {} points:", data.m());
+    println!("  full-dataset SSE     : {:.4e}", result.objective);
+    println!("  chunks processed     : {}", result.counters.chunks);
+    println!("  incumbent updates    : {}", result.improvements);
+    println!(
+        "  distance evaluations : {:.2e}  (vs {:.2e} for ONE full K-means pass)",
+        result.counters.distance_evals as f64,
+        (data.m() * 10) as f64
+    );
+    println!(
+        "  search/final time    : {:.3}s / {:.3}s",
+        result.cpu_init_secs, result.cpu_full_secs
+    );
+
+    // The final centroids and per-point assignment are ready to use:
+    assert_eq!(result.centroids.len(), 10 * data.n());
+    assert_eq!(result.assignment.len(), data.m());
+    let sizes = {
+        let mut s = vec![0usize; 10];
+        for &a in &result.assignment {
+            s[a as usize] += 1;
+        }
+        s
+    };
+    println!("  cluster sizes        : {sizes:?}");
+}

@@ -1,0 +1,160 @@
+"""AOT pipeline: lower the L2 computations to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the rust runtime loads the
+emitted `artifacts/*.hlo.txt` via `HloModuleProto::from_text_file` and
+executes them on the PJRT CPU client. Python never runs after this.
+
+Interchange format is HLO *text*, NOT `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Because PJRT executables are fixed-shape, we emit a family of
+`(s, n, k)` variants and a `manifest.json` describing them; the rust
+runtime picks the smallest fitting variant and pads (see the padding
+contract in model.py's docstring).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import assign as assign_kernel
+
+# Default variant family. Chunk sizes are multiples of the kernel block;
+# feature dims are zero-pad targets (distance-preserving); cluster counts
+# are +inf-pad targets (never selected).
+DEFAULT_S = (1024, 4096, 16384)
+DEFAULT_N = (4, 16, 64, 128)
+DEFAULT_K = (8, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def effective_block_s(s, block_s):
+    """Per-variant tile height.
+
+    `block_s == 0` selects the CPU-adaptive default `min(s, 4096)`: the
+    interpret-mode grid lowers to an XLA while-loop whose per-step overhead
+    dominates on CPU (measured 60 ms → 13 ms on the s=16384 assign variant
+    going 256 → 4096; EXPERIMENTS.md §Perf). On a real TPU target you would
+    emit with the VMEM-sized 256 instead (DESIGN.md §Hardware-Adaptation).
+    """
+    if block_s == 0:
+        return min(s, 4096)
+    return block_s
+
+
+def lower_variant(kind, s, n, k, tol, max_iters, block_s):
+    """Lower one (kind, s, n, k) variant; returns HLO text."""
+    block_s = effective_block_s(s, block_s)
+    pts = jax.ShapeDtypeStruct((s, n), jnp.float32)
+    cts = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    msk = jax.ShapeDtypeStruct((s,), jnp.float32)
+    uni = jax.ShapeDtypeStruct((k,), jnp.float32)
+    if kind == "lloyd":
+        fn = model.make_lloyd(tol=tol, max_iters=max_iters, block_s=block_s)
+        lowered = fn.lower(pts, cts, msk)
+    elif kind == "assign":
+        fn = model.make_assign(block_s=block_s)
+        lowered = fn.lower(pts, cts, msk)
+    elif kind == "kmeanspp":
+        fn = model.make_kmeanspp(k, block_s=block_s)
+        lowered = fn.lower(pts, msk, uni)
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir, s_list, n_list, k_list, tol, max_iters, block_s, kinds):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    total = len(s_list) * len(n_list) * len(k_list) * len(kinds)
+    done = 0
+    for s in s_list:
+        bs = effective_block_s(s, block_s)
+        if s % bs != 0:
+            raise SystemExit(f"s={s} not divisible by block_s={bs}")
+        for n in n_list:
+            for k in k_list:
+                for kind in kinds:
+                    name = f"{kind}_s{s}_n{n}_k{k}"
+                    path = os.path.join(out_dir, f"{name}.hlo.txt")
+                    text = lower_variant(kind, s, n, k, tol, max_iters, block_s)
+                    with open(path, "w") as f:
+                        f.write(text)
+                    done += 1
+                    print(f"[{done}/{total}] {name}: {len(text)} chars", flush=True)
+                    entries.append(
+                        {
+                            "name": name,
+                            "kind": kind,
+                            "s": s,
+                            "n": n,
+                            "k": k,
+                            "block_s": bs,
+                            "tol": tol,
+                            "max_iters": max_iters,
+                            "file": os.path.basename(path),
+                            "pad_centroid": model.PAD_CENTROID,
+                        }
+                    )
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+
+
+def parse_int_list(text, default):
+    if not text:
+        return list(default)
+    return [int(t) for t in text.split(",") if t.strip()]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--s", default="", help="comma list of chunk sizes")
+    ap.add_argument("--n", default="", help="comma list of feature dims")
+    ap.add_argument("--k", default="", help="comma list of cluster counts")
+    ap.add_argument("--kinds", default="lloyd,assign,kmeanspp")
+    ap.add_argument("--tol", type=float, default=model.DEFAULT_TOL)
+    ap.add_argument("--max-iters", type=int, default=model.DEFAULT_MAX_ITERS)
+    ap.add_argument(
+        "--block-s",
+        type=int,
+        default=0,
+        help="tile height; 0 = CPU-adaptive min(s, 4096) (use 256 for TPU)",
+    )
+    args = ap.parse_args()
+    emit(
+        args.out,
+        parse_int_list(args.s, DEFAULT_S),
+        parse_int_list(args.n, DEFAULT_N),
+        parse_int_list(args.k, DEFAULT_K),
+        args.tol,
+        args.max_iters,
+        args.block_s,
+        [k.strip() for k in args.kinds.split(",") if k.strip()],
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

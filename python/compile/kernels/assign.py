@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: fused assignment step of Lloyd's algorithm.
+
+The compute hot-spot of Big-means (and of every baseline) is the
+assignment step: for a chunk of `s` points and `k` centroids in
+`n`-dimensional space, find each point's nearest centroid and reduce the
+per-cluster sums/counts needed by the update step. This kernel fuses all
+of it so a Lloyd iteration makes a single pass over the chunk.
+
+TPU-idiomatic design (run under `interpret=True` on CPU — see DESIGN.md
+§Hardware-Adaptation):
+
+* The grid tiles the chunk into `(BLOCK_S, n)` point tiles streamed
+  HBM→VMEM by the BlockSpec index_map; the `(k, n)` centroid tile is small
+  (k ≤ 32, n ≤ 128 → ≤ 16 KiB fp32) and pinned whole in VMEM every step.
+* Squared distances use the `‖x‖² − 2·x·Cᵀ + ‖c‖²` decomposition so the
+  dominant FLOPs are a `(BLOCK_S, n) × (n, k)` contraction that maps onto
+  the MXU systolic array.
+* The per-cluster reduction is a second MXU contraction
+  `onehotᵀ × points`, so tiles leave the kernel already reduced to
+  `(k, n)` partial sums — the centroid update at L2 is a cheap division.
+* Cross-tile accumulation uses the standard revisiting-output pattern:
+  the sums/counts output block maps every grid step to the same window;
+  step 0 initialises, later steps accumulate.
+
+A `mask` input (1.0 = real point, 0.0 = padding) makes the kernel exact
+for chunks padded up to the compiled shape: padded rows contribute nothing
+to mins/sums/counts, and their labels are forced to -1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 256×128 fp32 = 128 KiB point tile: small enough to
+# double-buffer in ~16 MiB VMEM, large enough to keep the MXU busy.
+DEFAULT_BLOCK_S = 256
+
+
+def _assign_accumulate_kernel(x_ref, c_ref, m_ref, labels_ref, mins_ref, sums_ref, counts_ref):
+    """One grid step: assignment + partial reduction for a point tile."""
+    step = pl.program_id(0)
+    x = x_ref[...]  # (BLOCK_S, n)
+    c = c_ref[...]  # (k, n)
+    mask = m_ref[...]  # (BLOCK_S,)
+    k = c.shape[0]
+
+    # Squared distances via the MXU-friendly decomposition.
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (BLOCK_S, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, k)
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # (BLOCK_S, k)
+    d = x2 - 2.0 * xc + c2
+
+    labels = jnp.argmin(d, axis=1).astype(jnp.int32)  # (BLOCK_S,)
+    mins = jnp.maximum(jnp.min(d, axis=1), 0.0)  # clamp fp slack
+
+    valid = mask > 0.5
+    labels_ref[...] = jnp.where(valid, labels, -1)
+    mins_ref[...] = jnp.where(valid, mins, 0.0)
+
+    # One-hot with a 2-D iota (TPU requires ≥2-D iota).
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = (labels[:, None] == iota_k).astype(x.dtype) * mask[:, None]
+    part_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)  # (k, n)
+    part_counts = jnp.sum(onehot, axis=0)  # (k,)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = part_sums
+        counts_ref[...] = part_counts
+
+    @pl.when(step > 0)
+    def _accumulate():
+        sums_ref[...] += part_sums
+        counts_ref[...] += part_counts
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def assign_accumulate(points, centroids, mask, *, block_s=DEFAULT_BLOCK_S):
+    """Fused assignment step over a whole chunk.
+
+    Args:
+      points:    (s, n) float32, s divisible by block_s (pad + mask if not).
+      centroids: (k, n) float32.
+      mask:      (s,) float32, 1.0 for real rows / 0.0 for padding.
+      block_s:   rows per grid step.
+
+    Returns:
+      labels (s,) int32 (−1 on padded rows), mins (s,) float32,
+      sums (k, n) float32, counts (k,) float32.
+    """
+    s, n = points.shape
+    k = centroids.shape[0]
+    if s % block_s != 0:
+        raise ValueError(f"s={s} must be divisible by block_s={block_s}")
+    grid = (s // block_s,)
+    return pl.pallas_call(
+        _assign_accumulate_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, n), lambda i: (i, 0)),  # stream point tiles
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # centroids pinned
+            pl.BlockSpec((block_s,), lambda i: (i,)),  # mask tiles
+        ],
+        out_specs=[
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+            pl.BlockSpec((block_s,), lambda i: (i,)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),  # revisited: accumulate
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s,), jnp.int32),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,  # CPU-PJRT target; real-TPU lowering emits Mosaic
+    )(points, centroids, mask)
+
+
+def vmem_footprint_bytes(block_s, n, k):
+    """Estimated VMEM residency of one grid step (fp32), for DESIGN §Perf.
+
+    point tile + centroid tile + distance tile + onehot tile + outputs.
+    """
+    f = 4
+    return (
+        block_s * n * f  # x
+        + k * n * f  # c
+        + block_s * k * f  # d
+        + block_s * k * f  # onehot
+        + k * n * f  # sums
+        + (2 * block_s + k) * f  # labels, mins, counts
+    )
+
+
+def mxu_flops_per_step(block_s, n, k):
+    """MXU-routed FLOPs per grid step (two contractions), for DESIGN §Perf."""
+    return 2 * block_s * n * k + 2 * block_s * k * n

@@ -1,0 +1,96 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has a matching reference implementation
+here, written in straight-line jax.numpy with no tiling, no scratch buffers,
+no BlockSpecs. The pytest suite asserts allclose between kernel and oracle
+across a hypothesis-style sweep of shapes and dtypes — this is the core
+correctness signal for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(points, centroids):
+    """Squared Euclidean distances, shape (s, k).
+
+    points:    (s, n) float
+    centroids: (k, n) float
+    """
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2  (same decomposition the
+    # kernel uses, so numerics match to float tolerance).
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)  # (s, 1)
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]  # (1, k)
+    xc = points @ centroids.T  # (s, k)
+    return x2 - 2.0 * xc + c2
+
+
+def assign(points, centroids):
+    """Nearest-centroid assignment.
+
+    Returns (labels (s,), min_dists (s,)) — min_dists are squared and
+    clamped at zero (the dot-product decomposition can go slightly
+    negative).
+    """
+    d = pairwise_sq_dists(points, centroids)
+    labels = jnp.argmin(d, axis=1)
+    mins = jnp.maximum(jnp.min(d, axis=1), 0.0)
+    return labels, mins
+
+
+def accumulate(points, labels, k):
+    """Per-cluster sums and counts given labels.
+
+    Returns (sums (k, n), counts (k,)).
+    """
+    onehot = jnp.eye(k, dtype=points.dtype)[labels]  # (s, k)
+    sums = onehot.T @ points
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def assign_accumulate(points, centroids):
+    """Fused reference of the full assignment step: labels, min-distances,
+    per-cluster sums and counts. This is the contract of the Pallas kernel
+    `assign.assign_accumulate`.
+    """
+    k = centroids.shape[0]
+    labels, mins = assign(points, centroids)
+    sums, counts = accumulate(points, labels, k)
+    return labels, mins, sums, counts
+
+
+def lloyd_step(points, centroids):
+    """One Lloyd iteration: assignment + centroid update.
+
+    Degenerate (empty) clusters keep their previous centroid — the same
+    policy the L3 coordinator expects (it later reinitialises degenerates
+    via K-means++ on a fresh chunk).
+
+    Returns (new_centroids, objective, counts).
+    """
+    _, mins, sums, counts = assign_accumulate(points, centroids)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    updated = sums / safe
+    keep_old = (counts == 0.0)[:, None]
+    new_centroids = jnp.where(keep_old, centroids, updated)
+    objective = jnp.sum(mins)
+    return new_centroids, objective, counts
+
+
+def lloyd(points, centroids, iters):
+    """`iters` Lloyd iterations (fixed trip count — matches the AOT'd scan).
+
+    Returns (centroids, objective_after_last_assignment, counts).
+    """
+    c = centroids
+    obj = jnp.float32(0.0)
+    counts = jnp.zeros((centroids.shape[0],), dtype=points.dtype)
+    for _ in range(iters):
+        c, obj, counts = lloyd_step(points, c)
+    return c, obj, counts
+
+
+def objective(points, centroids):
+    """MSSC objective f(C, X) = sum_i min_j ||x_i - c_j||^2."""
+    _, mins = assign(points, centroids)
+    return jnp.sum(mins)

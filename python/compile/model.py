@@ -1,0 +1,180 @@
+"""L2: the MSSC local-search computation in JAX, calling the L1 kernel.
+
+Big-means's inner loop ("MSSC" in Algorithm 3) is K-means/Lloyd local
+search on one chunk. This module expresses it as jittable, fixed-shape JAX
+functions that `aot.py` lowers once to HLO text; the rust coordinator then
+executes them via PJRT with python out of the loop.
+
+Exported computations (all shapes static per artifact variant):
+
+* `lloyd_chunk(points, centroids, mask)` — Lloyd iterations inside a
+  `lax.while_loop` with the paper's convergence rule (relative objective
+  tolerance, max iteration cap). Degenerate clusters keep their previous
+  centroid; the coordinator reinitialises them (K-means++) between chunks.
+* `assign_chunk(points, centroids, mask)` — one assignment pass: labels +
+  per-point min squared distances (used for the final full-dataset
+  assignment and for K-means++ D² weights at L3).
+* `kmeanspp_init(points, mask, uniforms)` — K-means++ seeding on a chunk,
+  randomness supplied by the caller as `k` uniforms in [0,1) so the
+  computation stays pure and AOT-able.
+
+Padding contract (see `runtime/variant.rs`): rows beyond the real chunk
+carry mask 0.0; padded feature columns are zero (distance-preserving);
+padded centroid slots are parked at +PAD_CENTROID so no point selects them
+and they stay degenerate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import assign as assign_kernel
+
+# Paper §5.7: convergence when relative objective change < 1e-4 or the
+# iteration cap is hit (the paper uses n_full > 300 on the full dataset;
+# chunks converge far faster, 100 is roofline in practice).
+DEFAULT_TOL = 1e-4
+DEFAULT_MAX_ITERS = 100
+
+# Coordinate used to park padded/unused centroid slots out of the way.
+PAD_CENTROID = 1.0e15
+
+
+def _masked_count(mask):
+    return jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def lloyd_chunk(points, centroids, mask, *, tol=DEFAULT_TOL, max_iters=DEFAULT_MAX_ITERS,
+                block_s=assign_kernel.DEFAULT_BLOCK_S):
+    """Lloyd local search on one chunk, seeded by `centroids`.
+
+    Returns (centroids', objective, counts, iters):
+      centroids' (k, n)  — converged centroids (padded slots untouched),
+      objective  float32 — masked chunk SSE after the last assignment,
+      counts     (k,)    — cluster sizes from the last assignment,
+      iters      int32   — Lloyd iterations actually executed.
+    """
+
+    def step(carry):
+        c, _stale, last_obj, _counts, it = carry
+        _labels, mins, sums, counts = assign_kernel.assign_accumulate(
+            points, c, mask, block_s=block_s
+        )
+        obj = jnp.sum(mins)
+        safe = jnp.maximum(counts, 1.0)[:, None]
+        updated = sums / safe
+        new_c = jnp.where((counts == 0.0)[:, None], c, updated)
+        # Shift objectives: the objective of the previous iteration becomes
+        # `prev_obj`, the fresh one becomes `obj` — cond compares the two.
+        return new_c, last_obj, obj, counts, it + 1
+
+    def cond(carry):
+        _c, prev_obj, obj, _counts, it = carry
+        first = it < 1
+        # Relative tolerance on consecutive objectives (paper §5.7).
+        rel = jnp.abs(prev_obj - obj) / jnp.maximum(obj, 1e-30)
+        return jnp.logical_and(it < max_iters, jnp.logical_or(first, rel > tol))
+
+    k = centroids.shape[0]
+    init = (
+        centroids,
+        jnp.float32(jnp.inf),
+        jnp.float32(jnp.inf),
+        jnp.zeros((k,), jnp.float32),
+        jnp.int32(0),
+    )
+    # One wrinkle: `step` computes obj for the *incoming* centroids; the
+    # while_loop stops when the objective stops improving. After the loop,
+    # `obj` is the SSE of the second-to-last centroid set; run one more
+    # masked assignment to report the SSE of the returned centroids.
+    c, _prev, _obj, counts, iters = jax.lax.while_loop(cond, step, init)
+    _labels, mins, _sums, counts = assign_kernel.assign_accumulate(
+        points, c, mask, block_s=block_s
+    )
+    return c, jnp.sum(mins), counts, iters
+
+
+def assign_chunk(points, centroids, mask, *, block_s=assign_kernel.DEFAULT_BLOCK_S):
+    """One assignment pass: (labels, mins) for the chunk.
+
+    labels are −1 on padded rows; mins are 0 there (so sums are exact).
+    """
+    labels, mins, _sums, _counts = assign_kernel.assign_accumulate(
+        points, centroids, mask, block_s=block_s
+    )
+    return labels, mins
+
+
+def objective_chunk(points, centroids, mask, *, block_s=assign_kernel.DEFAULT_BLOCK_S):
+    """Masked chunk SSE for the given centroids."""
+    _labels, mins = assign_chunk(points, centroids, mask, block_s=block_s)
+    return jnp.sum(mins)
+
+
+def kmeanspp_init(points, mask, uniforms, *, k, block_s=assign_kernel.DEFAULT_BLOCK_S):
+    """K-means++ seeding on a chunk (Algorithm 2 of the paper).
+
+    Randomness comes in as `uniforms` (k,) float32 in [0,1): draw j is the
+    inverse-CDF sample of the D² distribution given uniform u_j. Masked
+    rows get zero weight. Returns (k, n) centroids.
+
+    The D² update is incremental: after adding centroid j we only compute
+    distances to that one new centroid — O(s·n) per step, the same trick
+    the rust-native seeding uses, so distance-eval counts match.
+    """
+    s, n = points.shape
+
+    def pick(weights, u):
+        # Inverse-CDF over non-negative weights; masked rows weigh 0.
+        cum = jnp.cumsum(weights)
+        total = cum[-1]
+        target = u * total
+        idx = jnp.searchsorted(cum, target, side="right")
+        return jnp.clip(idx, 0, s - 1)
+
+    # First centroid: uniform over real rows.
+    first_idx = pick(mask, uniforms[0])
+    first = points[first_idx]
+
+    centroids0 = jnp.full((k, n), PAD_CENTROID, dtype=points.dtype)
+    centroids0 = centroids0.at[0].set(first)
+
+    d2_0 = jnp.sum((points - first[None, :]) ** 2, axis=1) * mask
+
+    def body(j, carry):
+        centroids, d2 = carry
+        idx = pick(d2, uniforms[j])
+        cj = points[idx]
+        centroids = jax.lax.dynamic_update_slice(centroids, cj[None, :], (j, 0))
+        d2_new = jnp.sum((points - cj[None, :]) ** 2, axis=1) * mask
+        return centroids, jnp.minimum(d2, d2_new)
+
+    centroids, _d2 = jax.lax.fori_loop(1, k, body, (centroids0, d2_0))
+    return centroids
+
+
+# ---------------------------------------------------------------------------
+# jit wrappers with static shapes for AOT lowering (see aot.py)
+# ---------------------------------------------------------------------------
+
+def make_lloyd(tol=DEFAULT_TOL, max_iters=DEFAULT_MAX_ITERS, block_s=assign_kernel.DEFAULT_BLOCK_S):
+    @jax.jit
+    def fn(points, centroids, mask):
+        return lloyd_chunk(points, centroids, mask, tol=tol, max_iters=max_iters,
+                           block_s=block_s)
+    return fn
+
+
+def make_assign(block_s=assign_kernel.DEFAULT_BLOCK_S):
+    @jax.jit
+    def fn(points, centroids, mask):
+        return assign_chunk(points, centroids, mask, block_s=block_s)
+    return fn
+
+
+def make_kmeanspp(k, block_s=assign_kernel.DEFAULT_BLOCK_S):
+    @functools.partial(jax.jit, static_argnames=())
+    def fn(points, mask, uniforms):
+        return kmeanspp_init(points, mask, uniforms, k=k, block_s=block_s)
+    return fn

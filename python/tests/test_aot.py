@@ -1,0 +1,78 @@
+"""AOT pipeline tests: lowering produces loadable, correct HLO text.
+
+These execute the *lowered* computation through jax's own runtime (the
+rust integration test `runtime_roundtrip.rs` covers the PJRT-from-rust
+half) and check the manifest contract the rust runtime relies on.
+"""
+
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_hlo_text_parses_as_hlo_module():
+    text = aot.lower_variant("assign", 64, 4, 2, model.DEFAULT_TOL, 10, 32)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # while-free assign: no control flow expected
+    assert text.count("ROOT") >= 1
+
+
+def test_lloyd_hlo_contains_while_loop():
+    text = aot.lower_variant("lloyd", 64, 4, 2, model.DEFAULT_TOL, 10, 32)
+    assert "while" in text, "convergence loop should lower to an HLO while"
+
+
+def test_manifest_contract():
+    with tempfile.TemporaryDirectory() as d:
+        aot.emit(d, [64], [4], [2], 1e-4, 10, 32, ["lloyd", "assign", "kmeanspp"])
+        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        assert manifest["version"] == 1
+        entries = manifest["entries"]
+        assert len(entries) == 3
+        kinds = {e["kind"] for e in entries}
+        assert kinds == {"lloyd", "assign", "kmeanspp"}
+        for e in entries:
+            assert os.path.exists(os.path.join(d, e["file"]))
+            assert e["s"] == 64 and e["n"] == 4 and e["k"] == 2
+            assert e["block_s"] == 32
+            assert e["pad_centroid"] == model.PAD_CENTROID
+
+
+def test_lowered_assign_executes_correctly():
+    """Compile the lowered StableHLO and compare against direct execution."""
+    s, n, k, bs = 64, 4, 3, 32
+    fn = model.make_assign(block_s=bs)
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(s, n)).astype(np.float32)
+    cs = rng.normal(size=(k, n)).astype(np.float32)
+    mask = np.ones((s,), np.float32)
+    lowered = fn.lower(
+        jax.ShapeDtypeStruct((s, n), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((s,), jnp.float32),
+    )
+    compiled = lowered.compile()
+    got_l, got_m = compiled(jnp.asarray(pts), jnp.asarray(cs), jnp.asarray(mask))
+    want_l, want_m = fn(jnp.asarray(pts), jnp.asarray(cs), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want_l))
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m), rtol=1e-6)
+
+
+def test_indivisible_s_rejected():
+    import pytest
+
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(SystemExit, match="divisible"):
+            aot.emit(d, [100], [4], [2], 1e-4, 10, 32, ["assign"])
+
+
+def test_parse_int_list():
+    assert aot.parse_int_list("", (1, 2)) == [1, 2]
+    assert aot.parse_int_list("4,8, 16", ()) == [4, 8, 16]

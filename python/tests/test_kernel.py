@@ -1,0 +1,179 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for Layer 1 — a hypothesis sweep over
+shapes, dtype-representable value ranges, masks and degenerate layouts,
+asserting allclose between `kernels.assign.assign_accumulate` and
+`kernels.ref.assign_accumulate`.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign as ak
+from compile.kernels import ref
+
+
+def run_both(pts, cs, mask, block_s):
+    got = ak.assign_accumulate(
+        jnp.asarray(pts), jnp.asarray(cs), jnp.asarray(mask), block_s=block_s
+    )
+    want = ref.assign_accumulate(jnp.asarray(pts), jnp.asarray(cs))
+    return [np.asarray(g) for g in got], [np.asarray(w) for w in want]
+
+
+def assert_matches_ref(pts, cs, mask, block_s):
+    (labels, mins, sums, counts), (rl, rm, rs, rc) = run_both(pts, cs, mask, block_s)
+    valid = mask > 0.5
+    # Ties in argmin can break either way only when two distances are exactly
+    # equal; with continuous random data this has measure zero, and both
+    # kernel and ref use argmin-first semantics, so exact match is expected.
+    np.testing.assert_array_equal(labels[valid], rl[valid])
+    assert (labels[~valid] == -1).all()
+    np.testing.assert_allclose(mins[valid], rm[valid], rtol=1e-4, atol=1e-4)
+    assert (mins[~valid] == 0).all()
+    if valid.all():
+        np.testing.assert_allclose(sums, rs, rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(counts, rc)
+
+
+@st.composite
+def problems(draw):
+    block_s = draw(st.sampled_from([8, 16, 32]))
+    blocks = draw(st.integers(1, 6))
+    s = block_s * blocks
+    n = draw(st.integers(1, 24))
+    k = draw(st.integers(1, 9))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.sampled_from([1e-3, 1.0, 1e3]))
+    rng = np.random.default_rng(seed)
+    pts = (rng.normal(size=(s, n)) * scale).astype(np.float32)
+    cs = (rng.normal(size=(k, n)) * scale).astype(np.float32)
+    return pts, cs, block_s
+
+
+@settings(max_examples=60, deadline=None)
+@given(problems())
+def test_kernel_matches_ref_unmasked(problem):
+    pts, cs, block_s = problem
+    mask = np.ones((pts.shape[0],), np.float32)
+    assert_matches_ref(pts, cs, mask, block_s)
+
+
+@settings(max_examples=30, deadline=None)
+@given(problems(), st.integers(0, 2**31 - 1))
+def test_kernel_masked_rows_excluded(problem, mseed):
+    pts, cs, block_s = problem
+    s = pts.shape[0]
+    rng = np.random.default_rng(mseed)
+    real = rng.integers(1, s + 1)
+    mask = np.zeros((s,), np.float32)
+    mask[:real] = 1.0
+    (labels, mins, sums, counts), (rl, rm, _rs, _rc) = run_both(pts, cs, mask, block_s)
+    # Masked tail contributes nothing.
+    np.testing.assert_array_equal(labels[:real], rl[:real])
+    np.testing.assert_allclose(mins[:real], rm[:real], rtol=1e-4, atol=1e-4)
+    want_sums, want_counts = ref.accumulate(
+        jnp.asarray(pts[:real]), jnp.asarray(rl[:real]), cs.shape[0]
+    )
+    np.testing.assert_allclose(sums, np.asarray(want_sums), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(counts, np.asarray(want_counts))
+
+
+def test_counts_sum_to_mask_total():
+    rng = np.random.default_rng(7)
+    pts = rng.normal(size=(64, 5)).astype(np.float32)
+    cs = rng.normal(size=(3, 5)).astype(np.float32)
+    mask = np.ones((64,), np.float32)
+    mask[50:] = 0.0
+    (_l, _m, _s, counts), _ = run_both(pts, cs, mask, 16)
+    assert counts.sum() == 50.0
+
+
+def test_zero_feature_padding_is_distance_preserving():
+    """Zero-padding the feature dim must not change labels or mins."""
+    rng = np.random.default_rng(3)
+    pts = rng.normal(size=(32, 6)).astype(np.float32)
+    cs = rng.normal(size=(4, 6)).astype(np.float32)
+    mask = np.ones((32,), np.float32)
+    (l1, m1, _s1, c1), _ = run_both(pts, cs, mask, 16)
+    pts_pad = np.zeros((32, 16), np.float32)
+    pts_pad[:, :6] = pts
+    cs_pad = np.zeros((4, 16), np.float32)
+    cs_pad[:, :6] = cs
+    (l2, m2, _s2, c2), _ = run_both(pts_pad, cs_pad, mask, 16)
+    np.testing.assert_array_equal(l1, l2)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(c1, c2)
+
+
+def test_far_centroid_padding_never_selected():
+    """Centroid slots parked at +PAD are never selected and stay empty."""
+    from compile import model
+
+    rng = np.random.default_rng(4)
+    pts = rng.normal(size=(32, 4)).astype(np.float32)
+    cs = np.full((8, 4), model.PAD_CENTROID, np.float32)
+    cs[:3] = rng.normal(size=(3, 4)).astype(np.float32)
+    mask = np.ones((32,), np.float32)
+    (labels, _m, _s, counts), _ = run_both(pts, cs, mask, 16)
+    assert labels.max() < 3
+    assert (counts[3:] == 0).all()
+
+
+def test_single_cluster_degenerate_k1():
+    rng = np.random.default_rng(5)
+    pts = rng.normal(size=(16, 3)).astype(np.float32)
+    cs = rng.normal(size=(1, 3)).astype(np.float32)
+    mask = np.ones((16,), np.float32)
+    (labels, mins, sums, counts), _ = run_both(pts, cs, mask, 8)
+    assert (labels == 0).all()
+    assert counts[0] == 16
+    np.testing.assert_allclose(sums[0], pts.sum(axis=0), rtol=1e-4)
+    np.testing.assert_allclose(
+        mins, ((pts - cs[0]) ** 2).sum(axis=1), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_identical_points_tie_break_low_index():
+    """Point equidistant to two identical centroids → argmin picks index 0."""
+    pts = np.ones((8, 2), np.float32)
+    cs = np.ones((2, 2), np.float32)
+    mask = np.ones((8,), np.float32)
+    (labels, mins, _s, counts), _ = run_both(pts, cs, mask, 8)
+    assert (labels == 0).all()
+    assert counts[0] == 8 and counts[1] == 0
+    np.testing.assert_allclose(mins, 0.0, atol=1e-6)
+
+
+def test_block_s_invariance():
+    """Result must not depend on the tiling block size."""
+    rng = np.random.default_rng(6)
+    pts = rng.normal(size=(96, 7)).astype(np.float32)
+    cs = rng.normal(size=(5, 7)).astype(np.float32)
+    mask = np.ones((96,), np.float32)
+    outs = []
+    for bs in (8, 16, 32, 96):
+        (labels, mins, sums, counts), _ = run_both(pts, cs, mask, bs)
+        outs.append((labels, mins, sums, counts))
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0][0], other[0])
+        np.testing.assert_allclose(outs[0][1], other[1], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(outs[0][2], other[2], rtol=1e-4, atol=1e-4)
+        np.testing.assert_array_equal(outs[0][3], other[3])
+
+
+def test_indivisible_block_raises():
+    pts = np.zeros((10, 2), np.float32)
+    cs = np.zeros((2, 2), np.float32)
+    mask = np.ones((10,), np.float32)
+    with pytest.raises(ValueError, match="divisible"):
+        ak.assign_accumulate(
+            jnp.asarray(pts), jnp.asarray(cs), jnp.asarray(mask), block_s=4
+        )
+
+
+def test_vmem_and_flops_estimates_positive():
+    assert ak.vmem_footprint_bytes(256, 128, 32) < 4 << 20  # fits VMEM budget
+    assert ak.mxu_flops_per_step(256, 128, 32) > 0

@@ -1,0 +1,139 @@
+"""L2 correctness: the AOT-able model functions (Lloyd loop, K-means++)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def gaussian_blobs(seed, s, n, k_true, spread=0.05):
+    """Well-separated blobs: ideal for checking Lloyd recovers structure."""
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-10, 10, size=(k_true, n))
+    labels = rng.integers(0, k_true, size=s)
+    pts = centers[labels] + rng.normal(scale=spread, size=(s, n))
+    return pts.astype(np.float32), centers.astype(np.float32)
+
+
+def test_lloyd_monotone_objective():
+    """SSE of returned centroids ≤ SSE of the seed (Lloyd never worsens)."""
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(256, 6)).astype(np.float32)
+    seed_c = rng.normal(size=(4, 6)).astype(np.float32)
+    mask = np.ones((256,), np.float32)
+    c, obj, _counts, iters = model.lloyd_chunk(
+        jnp.asarray(pts), jnp.asarray(seed_c), jnp.asarray(mask)
+    )
+    start = float(ref.objective(jnp.asarray(pts), jnp.asarray(seed_c)))
+    assert float(obj) <= start + 1e-3
+    assert int(iters) >= 1
+
+
+def test_lloyd_recovers_separated_blobs():
+    pts, centers = gaussian_blobs(1, 512, 4, 4)
+    mask = np.ones((512,), np.float32)
+    # Seed near the true centers: Lloyd must converge to ~zero-variance SSE.
+    seed_c = centers + 0.5
+    c, obj, counts, iters = model.lloyd_chunk(
+        jnp.asarray(pts), jnp.asarray(seed_c.astype(np.float32)), jnp.asarray(mask)
+    )
+    per_point = float(obj) / 512
+    assert per_point < 4 * 0.05**2 * 4  # ≈ n·spread² with slack
+    assert (np.asarray(counts) > 0).all()
+
+
+def test_lloyd_respects_mask_padding():
+    """Padded rows must not shift the solution."""
+    pts, _ = gaussian_blobs(2, 200, 3, 3)
+    pad = np.zeros((56, 3), np.float32)  # garbage rows beyond the mask
+    full = np.vstack([pts, pad])
+    mask = np.concatenate([np.ones(200), np.zeros(56)]).astype(np.float32)
+    seed = pts[:4]
+    c_pad, obj_pad, _cnt, _it = model.lloyd_chunk(
+        jnp.asarray(full), jnp.asarray(seed), jnp.asarray(mask), block_s=64
+    )
+    c_ref, obj_ref, _cnt2, _it2 = model.lloyd_chunk(
+        jnp.asarray(pts[:200]), jnp.asarray(seed), jnp.asarray(np.ones(200, np.float32)),
+        block_s=50,
+    )
+    np.testing.assert_allclose(float(obj_pad), float(obj_ref), rtol=1e-3)
+
+
+def test_lloyd_keeps_degenerate_centroids_in_place():
+    """A far-away centroid captures nothing and must stay exactly put."""
+    pts, _ = gaussian_blobs(3, 128, 2, 2)
+    seed = np.vstack([pts[:2], np.full((1, 2), model.PAD_CENTROID, np.float32)])
+    mask = np.ones((128,), np.float32)
+    c, _obj, counts, _it = model.lloyd_chunk(
+        jnp.asarray(pts), jnp.asarray(seed), jnp.asarray(mask), block_s=64
+    )
+    assert float(np.asarray(counts)[2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(c)[2], seed[2])
+
+
+def test_lloyd_iteration_cap():
+    rng = np.random.default_rng(4)
+    pts = rng.normal(size=(256, 4)).astype(np.float32)
+    seed = rng.normal(size=(8, 4)).astype(np.float32)
+    mask = np.ones((256,), np.float32)
+    _c, _obj, _cnt, iters = model.lloyd_chunk(
+        jnp.asarray(pts), jnp.asarray(seed), jnp.asarray(mask), max_iters=3
+    )
+    assert int(iters) <= 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+def test_kmeanspp_selects_real_points(seed, k):
+    rng = np.random.default_rng(seed)
+    s, n = 128, 4
+    pts = rng.normal(size=(s, n)).astype(np.float32)
+    mask = np.ones((s,), np.float32)
+    u = rng.random(k).astype(np.float32)
+    cs = np.asarray(model.kmeanspp_init(jnp.asarray(pts), jnp.asarray(mask), jnp.asarray(u), k=k))
+    # Every selected centroid must be an actual data point.
+    for j in range(k):
+        d = ((pts - cs[j]) ** 2).sum(axis=1)
+        assert d.min() < 1e-8, f"centroid {j} is not a data point"
+
+
+def test_kmeanspp_ignores_masked_rows():
+    rng = np.random.default_rng(9)
+    s, n, k = 64, 3, 4
+    pts = rng.normal(size=(s, n)).astype(np.float32)
+    pts[32:] += 1000.0  # masked rows are far outliers — would dominate D²
+    mask = np.concatenate([np.ones(32), np.zeros(32)]).astype(np.float32)
+    u = rng.random(k).astype(np.float32)
+    cs = np.asarray(model.kmeanspp_init(jnp.asarray(pts), jnp.asarray(mask), jnp.asarray(u), k=k))
+    for j in range(k):
+        d = ((pts[:32] - cs[j]) ** 2).sum(axis=1)
+        assert d.min() < 1e-8, "selected a masked row"
+
+
+def test_kmeanspp_spreads_over_blobs():
+    """With well-separated blobs, D² seeding should hit every blob."""
+    pts, centers = gaussian_blobs(5, 256, 2, 4, spread=0.01)
+    mask = np.ones((256,), np.float32)
+    hit_all = 0
+    trials = 20
+    rng = np.random.default_rng(0)
+    for _ in range(trials):
+        u = rng.random(4).astype(np.float32)
+        cs = np.asarray(
+            model.kmeanspp_init(jnp.asarray(pts), jnp.asarray(mask), jnp.asarray(u), k=4)
+        )
+        assigned = {int(((centers - c) ** 2).sum(axis=1).argmin()) for c in cs}
+        hit_all += assigned == {0, 1, 2, 3}
+    assert hit_all >= trials * 0.8  # k-means++ hits all blobs w.h.p.
+
+
+def test_objective_chunk_matches_ref():
+    rng = np.random.default_rng(11)
+    pts = rng.normal(size=(64, 5)).astype(np.float32)
+    cs = rng.normal(size=(3, 5)).astype(np.float32)
+    mask = np.ones((64,), np.float32)
+    got = float(model.objective_chunk(jnp.asarray(pts), jnp.asarray(cs), jnp.asarray(mask), block_s=32))
+    want = float(ref.objective(jnp.asarray(pts), jnp.asarray(cs)))
+    np.testing.assert_allclose(got, want, rtol=1e-4)

@@ -1,0 +1,96 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! * **A1 — chunk size s** (paper §4.1): the central trade-off. Too small →
+//!   noisy approximation of the data shape; too large → no shaking, slower
+//!   chunks. Sweeps s and reports final SSE + chunks processed.
+//! * **A2 — DA-MSSC (q, s) grid** (paper §5.4): fixing q and growing s
+//!   improves quality at cpu cost; growing q at fixed s burns cpu without
+//!   quality gains.
+//! * **A3 — degenerate-reinit strategy**: K-means++ vs uniform random.
+//! * **A4 — keep-the-best on chunk objective** vs re-evaluating the
+//!   incumbent on each fresh chunk (pairwise comparison variant).
+//!
+//! ```bash
+//! cargo bench --bench ablation_chunk_size
+//! ```
+
+use std::time::Duration;
+
+use bigmeans::baselines::{DaMssc, MsscAlgorithm};
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, ReinitStrategy, StopCondition};
+use bigmeans::data::Synth;
+use bigmeans::BigMeans;
+
+fn main() {
+    let data = Synth::GaussianMixture {
+        m: 200_000,
+        n: 8,
+        k_true: 12,
+        spread: 0.6,
+        box_half_width: 25.0,
+    }
+    .generate("ablation", 20220418);
+    let k = 12;
+    let budget = Duration::from_millis(1200);
+
+    // --- A1: chunk size sweep ---
+    println!("### A1 — chunk size trade-off (m=200k, k={k}, budget {budget:?})");
+    println!("{:>8} {:>14} {:>9} {:>12} {:>9}", "s", "SSE", "chunks", "n_d", "improves");
+    for &s in &[500usize, 1000, 2000, 4000, 8000, 16000, 32000, 64000] {
+        let cfg = BigMeansConfig::new(k, s)
+            .with_stop(StopCondition::MaxTime(budget))
+            .with_parallel(ParallelMode::InnerParallel)
+            .with_seed(7);
+        let r = BigMeans::new(cfg).run(&data).expect("run");
+        println!(
+            "{:>8} {:>14.6e} {:>9} {:>12.3e} {:>9}",
+            s,
+            r.objective,
+            r.counters.chunks,
+            r.counters.distance_evals as f64,
+            r.improvements
+        );
+    }
+    println!("expected shape: SSE best at moderate s; extremes worse (paper §4.1).");
+
+    // --- A2: DA-MSSC (q, s) grid ---
+    println!("\n### A2 — DA-MSSC decompose/aggregate grid");
+    println!("{:>8} {:>6} {:>14} {:>9}", "s", "q", "SSE", "cpu s");
+    for &s in &[1000usize, 4000, 16000] {
+        for &q in &[4usize, 10, 25] {
+            let r = DaMssc::new(s, q).run(&data, k, 7).expect("da-mssc");
+            println!("{:>8} {:>6} {:>14.6e} {:>9.3}", s, q, r.objective, r.cpu_total_secs());
+        }
+    }
+    println!("expected shape: growing s helps quality; growing q mostly burns cpu (§5.4).");
+
+    // --- A3: reinit strategy ---
+    println!("\n### A3 — degenerate reinit: K-means++ vs random (5 seeds each)");
+    for strategy in [ReinitStrategy::KmeansPP, ReinitStrategy::Random] {
+        let mut sum = 0.0;
+        for seed in 0..5u64 {
+            let mut cfg = BigMeansConfig::new(k, 4000)
+                .with_stop(StopCondition::MaxChunks(40))
+                .with_parallel(ParallelMode::InnerParallel)
+                .with_seed(seed);
+            cfg.reinit = strategy;
+            sum += BigMeans::new(cfg).run(&data).expect("run").objective;
+        }
+        println!("  {:?}: mean SSE {:.6e}", strategy, sum / 5.0);
+    }
+
+    // --- A4: candidates-per-draw in the greedy K-means++ (paper uses 3) ---
+    println!("\n### A4 — K-means++ candidate count (paper §5.7 uses 3)");
+    for candidates in [1usize, 3, 5] {
+        let mut cfg = BigMeansConfig::new(k, 4000)
+            .with_stop(StopCondition::MaxChunks(40))
+            .with_parallel(ParallelMode::InnerParallel)
+            .with_seed(3);
+        cfg.candidates = candidates;
+        let r = BigMeans::new(cfg).run(&data).expect("run");
+        println!(
+            "  candidates={candidates}: SSE {:.6e}, n_d {:.3e}",
+            r.objective, r.counters.distance_evals as f64
+        );
+    }
+}

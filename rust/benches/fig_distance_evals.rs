@@ -1,0 +1,65 @@
+//! Regenerates the **Figures 1–4 left panels**: number of distance-function
+//! evaluations (`n_d`) vs k per algorithm, per dataset — the paper's
+//! headline visual ("our algorithm performs significantly less distance
+//! function evaluations than other algorithms on the largest datasets").
+//!
+//! Ward's/LMBM series exist but are orders of magnitude above the rest,
+//! matching the paper's note that they were left off the plots.
+//!
+//! ```bash
+//! cargo bench --bench fig_distance_evals
+//! ```
+
+use bigmeans::bench_harness::figures::{distance_evals_series, render_ascii};
+use bigmeans::bench_harness::report::{series_csv, write_report};
+use bigmeans::bench_harness::{paper_roster, run_experiment};
+use bigmeans::data::catalog;
+
+fn main() {
+    let n_exec: usize = std::env::var("BENCH_NEXEC")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let which = std::env::var("BENCH_DATASETS").unwrap_or_else(|_| "quick".into());
+    let entries = if which == "all" {
+        catalog::catalog()
+    } else {
+        catalog::quick_subset()
+    };
+    let k_grid = [2usize, 5, 10, 15, 25];
+
+    for entry in &entries {
+        let data = entry.generate(20220418);
+        let roster = paper_roster(entry);
+        let exp = run_experiment(&data, &roster, &k_grid, n_exec, 42);
+        let series = distance_evals_series(&exp);
+        println!("\n{}", render_ascii(&series, &format!("n_d vs k — {}", entry.name), true));
+        let csv = series_csv(&series, "distance_evals");
+        let path = write_report(&format!("fig_nd_{}.csv", entry.table), &csv);
+        println!("csv: {}", path.display());
+
+        // Shape check: Big-means does fewer evals than the K-means-family
+        // baselines at the largest k.
+        let last = k_grid.len() - 1;
+        let get = |name: &str| -> Option<f64> {
+            series
+                .iter()
+                .find(|s| s.algorithm == name)
+                .and_then(|s| s.values[last])
+        };
+        if let (Some(bm), Some(pp)) = (get("Big-Means"), get("K-Means++")) {
+            println!(
+                "  k={}: Big-Means n_d={bm:.2e}, K-Means++ n_d={pp:.2e} → {}",
+                k_grid[last],
+                if bm < pp { "fewer ✓" } else { "NOT fewer ✗" }
+            );
+        }
+        if let (Some(bm), Some(w)) = (get("Big-Means"), get("Ward's")) {
+            println!(
+                "  k={}: Ward's n_d / Big-Means n_d = {:.1}× (orders above, off-plot in paper)",
+                k_grid[last],
+                w / bm
+            );
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable):
+//!
+//! * assignment-step throughput, native serial vs native parallel vs PJRT
+//!   (AOT HLO), in points/s and GFLOP/s against the 4·s·n·k roofline
+//!   estimate;
+//! * chunk-local Lloyd latency per engine;
+//! * coordinator overhead: time per chunk *outside* the solver (sampling +
+//!   incumbent bookkeeping) — DESIGN.md targets < 5%.
+//!
+//! ```bash
+//! cargo bench --bench hot_path
+//! ```
+
+use std::time::{Duration, Instant};
+
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::coordinator::solver::{ChunkSolver, NativeSolver};
+use bigmeans::data::Synth;
+use bigmeans::kernels;
+use bigmeans::metrics::Counters;
+use bigmeans::runtime::{default_artifacts_dir, PjrtSolver};
+use bigmeans::util::threadpool::ThreadPool;
+use bigmeans::BigMeans;
+
+fn time_n<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // Warmup + best-of-reps wall time.
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let (s, n, k) = (16384usize, 64usize, 32usize);
+    let data = Synth::GaussianMixture {
+        m: s,
+        n,
+        k_true: k,
+        spread: 0.5,
+        box_half_width: 20.0,
+    }
+    .generate("hot", 1);
+    let pts = data.points();
+    let mut c = Counters::new();
+    let mut rng = bigmeans::util::rng::Rng::new(2);
+    let cs = kernels::kmeanspp(pts, s, n, k, 1, &mut rng, &mut c);
+    let flops = 4.0 * (s * n * k) as f64; // panel decomposition: 2 mul+add per (i,j,t)
+
+    println!("### assignment-step throughput (s={s}, n={n}, k={k})");
+    let mut report = |label: &str, secs: f64| {
+        println!(
+            "{:<26} {:>9.3} ms   {:>10.1} Mpts/s   {:>7.2} GFLOP/s",
+            label,
+            secs * 1e3,
+            s as f64 / secs / 1e6,
+            flops / secs / 1e9
+        );
+    };
+
+    let serial = time_n(5, || {
+        let mut c = Counters::new();
+        std::hint::black_box(kernels::assign_accumulate(pts, &cs, s, n, k, &mut c));
+    });
+    report("native serial", serial);
+
+    let pool = ThreadPool::with_default_size();
+    let parallel = time_n(5, || {
+        let mut c = Counters::new();
+        std::hint::black_box(kernels::assign_accumulate_parallel(
+            &pool, pts, &cs, s, n, k, &mut c,
+        ));
+    });
+    report(&format!("native parallel ×{}", pool.size()), parallel);
+
+    let artifacts = default_artifacts_dir();
+    if artifacts.join("manifest.json").exists() {
+        let solver = PjrtSolver::open(&artifacts, Default::default()).unwrap();
+        let pjrt = time_n(5, || {
+            let mut c = Counters::new();
+            std::hint::black_box(solver.assign(pts, s, n, k, &cs, &mut c));
+        });
+        report("pjrt (AOT HLO)", pjrt);
+
+        println!("\n### chunk Lloyd latency (to convergence)");
+        let native = NativeSolver::sequential(Default::default());
+        let lat_native = time_n(3, || {
+            let mut c = Counters::new();
+            std::hint::black_box(native.lloyd(pts, s, n, k, &cs, &mut c));
+        });
+        let lat_pjrt = time_n(3, || {
+            let mut c = Counters::new();
+            std::hint::black_box(solver.lloyd(pts, s, n, k, &cs, &mut c));
+        });
+        println!("  native : {:>9.3} ms", lat_native * 1e3);
+        println!("  pjrt   : {:>9.3} ms", lat_pjrt * 1e3);
+    } else {
+        println!("(pjrt rows skipped — run `make artifacts`)");
+    }
+
+    // Coordinator overhead: total wall minus solver time, per chunk.
+    println!("\n### coordinator overhead per chunk");
+    let big = Synth::GaussianMixture {
+        m: 400_000,
+        n: 16,
+        k_true: 8,
+        spread: 0.5,
+        box_half_width: 20.0,
+    }
+    .generate("coord", 3);
+    let chunks = 40u64;
+    let mut cfg = BigMeansConfig::new(8, 4096)
+        .with_stop(StopCondition::TimeOrChunks(Duration::from_secs(30), chunks))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(5);
+    cfg.skip_final_assignment = true;
+    let t0 = Instant::now();
+    let r = BigMeans::new(cfg).run(&big).expect("run");
+    let total = t0.elapsed().as_secs_f64();
+
+    // Solver-only time: re-run the same chunk workload directly.
+    let solver = NativeSolver::sequential(Default::default());
+    let mut rng = bigmeans::util::rng::Rng::new(5);
+    let mut sampler_time = 0.0;
+    let mut solver_time = 0.0;
+    let mut sampler = bigmeans::coordinator::sampler::ChunkSampler::new(4096, 16);
+    let mut seed_c = cs[..8 * 16].to_vec();
+    for _ in 0..chunks {
+        let t = Instant::now();
+        let (chunk, rows) = sampler.sample(&big, &mut rng);
+        let chunk = chunk.to_vec();
+        sampler_time += t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let mut cc = Counters::new();
+        let out = solver.lloyd(&chunk, rows, 16, 8, &seed_c, &mut cc);
+        solver_time += t.elapsed().as_secs_f64();
+        seed_c = out.centroids;
+    }
+    let per_chunk_total = total / r.counters.chunks.max(1) as f64;
+    let per_chunk_solver = solver_time / chunks as f64;
+    let overhead = (per_chunk_total - per_chunk_solver).max(0.0);
+    println!(
+        "  total/chunk {:.3} ms | solver/chunk {:.3} ms | sampling/chunk {:.3} ms",
+        per_chunk_total * 1e3,
+        per_chunk_solver * 1e3,
+        sampler_time / chunks as f64 * 1e3
+    );
+    println!(
+        "  coordinator overhead ≈ {:.1}% (target < 5%)",
+        overhead / per_chunk_total * 100.0
+    );
+}

@@ -1,0 +1,62 @@
+//! Regenerates a **per-dataset pair of tables** (summary Tables 5,7,9,…
+//! and clustering-details Tables 6,8,10,…) in the paper's row format.
+//!
+//! ```bash
+//! DATASET="Skin Segmentation" cargo bench --bench table_per_dataset
+//! DATASET=all BENCH_NEXEC=3 cargo bench --bench table_per_dataset   # all 23
+//! ```
+
+use bigmeans::bench_harness::report::{
+    render_details_markdown, render_summary_markdown, write_report,
+};
+use bigmeans::bench_harness::{details_table, paper_roster, run_experiment, summary_table};
+use bigmeans::data::catalog::{self, CatalogEntry};
+
+fn run_one(entry: &CatalogEntry, k_grid: &[usize], n_exec: usize) {
+    let data = entry.generate(20220418);
+    println!(
+        "\n=== {} (paper Tables {}–{}) m={}, n={}, s={} ===",
+        entry.name,
+        entry.table,
+        entry.table + 1,
+        data.m(),
+        data.n(),
+        entry.chunk_size
+    );
+    let roster = paper_roster(entry);
+    let exp = run_experiment(&data, &roster, k_grid, n_exec, 42);
+    let summary = summary_table(&exp);
+    let details = details_table(&exp);
+    let md = format!(
+        "{}\n{}",
+        render_summary_markdown(&summary),
+        render_details_markdown(&exp.dataset, &details)
+    );
+    println!("{md}");
+    let path = write_report(&format!("table_{}_{}.md", entry.table, entry.table + 1), &md);
+    println!("report: {}", path.display());
+}
+
+fn main() {
+    let n_exec: usize = std::env::var("BENCH_NEXEC")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let which = std::env::var("DATASET").unwrap_or_else(|_| "Skin Segmentation".into());
+    let k_grid: Vec<usize> = std::env::var("BENCH_KGRID")
+        .ok()
+        .map(|v| v.split(',').filter_map(|t| t.trim().parse().ok()).collect())
+        .unwrap_or_else(|| vec![2, 5, 15, 25]);
+
+    if which == "all" {
+        for entry in catalog::catalog() {
+            run_one(&entry, &k_grid, n_exec);
+        }
+    } else {
+        let entry = catalog::find(&which).unwrap_or_else(|| {
+            eprintln!("unknown dataset '{which}'");
+            std::process::exit(2);
+        });
+        run_one(&entry, &k_grid, n_exec);
+    }
+}

@@ -1,0 +1,85 @@
+//! Regenerates **Tables 3 & 4**: per-dataset efficiency scores for every
+//! algorithm, and the cross-dataset sum-score summary.
+//!
+//! Paper protocol: every algorithm × every dataset × k ∈ {2,…,25} ×
+//! n_exec runs; score S(A,X,q) per metric; sum over datasets.
+//!
+//! Scaled defaults keep the full run to a few minutes; set
+//! `BENCH_DATASETS=all BENCH_NEXEC=3` for the complete 23-dataset sweep.
+//!
+//! ```bash
+//! cargo bench --bench table_summary
+//! ```
+
+use bigmeans::bench_harness::report::{render_table4_markdown, write_report};
+use bigmeans::bench_harness::{dataset_scores, paper_roster, run_experiment, table4};
+use bigmeans::data::catalog;
+
+fn main() {
+    let n_exec: usize = std::env::var("BENCH_NEXEC")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let which = std::env::var("BENCH_DATASETS").unwrap_or_else(|_| "quick".into());
+    let k_grid: Vec<usize> = if which == "all" {
+        catalog::PAPER_K_GRID.to_vec()
+    } else {
+        vec![2, 5, 15, 25]
+    };
+    let entries = if which == "all" {
+        catalog::catalog()
+    } else {
+        catalog::quick_subset()
+    };
+
+    println!("# Tables 3–4 regeneration ({} datasets, k grid {:?}, n_exec {})", entries.len(), k_grid, n_exec);
+    let mut all_scores = Vec::new();
+    let mut t3_lines = vec![
+        "| Dataset | S(Big-Means, accuracy) | S(Big-Means, cpu) |".to_string(),
+        "|---|---|---|".to_string(),
+    ];
+    let t0 = std::time::Instant::now();
+    for entry in &entries {
+        let data = entry.generate(20220418);
+        let roster = paper_roster(entry);
+        let exp = run_experiment(&data, &roster, &k_grid, n_exec, 42);
+        let scores = dataset_scores(&exp);
+        let bm = scores
+            .iter()
+            .find(|(n, _, _)| *n == "Big-Means")
+            .expect("Big-Means in roster");
+        println!(
+            "[{:>5.1}s] {:<50} S_acc={:.3} S_cpu={:.3}",
+            t0.elapsed().as_secs_f64(),
+            entry.name,
+            bm.1,
+            bm.2
+        );
+        t3_lines.push(format!("| {} | {:.3} | {:.3} |", entry.name, bm.1, bm.2));
+        all_scores.push(scores);
+    }
+
+    let t4 = table4(&all_scores);
+    let md_t4 = render_table4_markdown(&t4, entries.len());
+    println!("\n{md_t4}");
+    let md_t3 = format!("## Table 3 — Big-Means scores per dataset\n{}\n", t3_lines.join("\n"));
+    let path = write_report("table_3_4_summary.md", &format!("{md_t3}\n{md_t4}"));
+    println!("report: {}", path.display());
+
+    // Shape assertions (the paper's qualitative claims).
+    let find = |name: &str| t4.iter().find(|r| r.algorithm == name).unwrap();
+    let bm = find("Big-Means");
+    println!(
+        "\nshape check: Big-Means mean score {:.0}% (paper: 97%)",
+        bm.mean_pct
+    );
+    for other in ["Forgy K-Means", "Ward's", "K-Means||", "LMBM-Clust"] {
+        let o = find(other);
+        println!(
+            "  vs {:<16} mean {:.0}% → Big-Means {} ",
+            other,
+            o.mean_pct,
+            if bm.mean_pct >= o.mean_pct { "wins/ties ✓" } else { "LOSES ✗" }
+        );
+    }
+}

@@ -1,0 +1,93 @@
+//! Shared interface for the competitive MSSC algorithms of paper §5.
+//!
+//! Every baseline (and Big-means itself, via an adapter in the bench
+//! harness) exposes the same `run(dataset, k, seed)` entry point and
+//! reports the same result record, so the evaluation tables can be
+//! generated uniformly.
+
+use crate::data::dataset::Dataset;
+use crate::metrics::Counters;
+
+/// Outcome of one algorithm execution.
+#[derive(Clone, Debug)]
+pub struct AlgoResult {
+    /// Final centroids `(k × n)`.
+    pub centroids: Vec<f32>,
+    /// Full-dataset MSSC objective of those centroids.
+    pub objective: f64,
+    /// `cpu_init`: initialization / search phase seconds.
+    pub cpu_init_secs: f64,
+    /// `cpu_full`: full-dataset clustering phase seconds.
+    pub cpu_full_secs: f64,
+    /// Work counters (`n_d`, `n_full`, …).
+    pub counters: Counters,
+}
+
+impl AlgoResult {
+    pub fn cpu_total_secs(&self) -> f64 {
+        self.cpu_init_secs + self.cpu_full_secs
+    }
+}
+
+/// Why an algorithm produced no result on a dataset (the paper's "—"
+/// entries, scored 0).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoFailure {
+    /// Estimated memory exceeds the configured cap (Ward's on large m).
+    OutOfMemory { required_bytes: u64, cap_bytes: u64 },
+    /// Estimated/observed runtime exceeds the harness budget (LMBM on
+    /// huge sets).
+    OverTimeBudget { budget_secs: f64 },
+    /// Configuration invalid for this dataset (k > m, …).
+    Invalid(String),
+}
+
+impl std::fmt::Display for AlgoFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AlgoFailure::OutOfMemory { required_bytes, cap_bytes } => write!(
+                f,
+                "out of memory: needs {required_bytes} bytes (cap {cap_bytes})"
+            ),
+            AlgoFailure::OverTimeBudget { budget_secs } => {
+                write!(f, "over time budget ({budget_secs}s)")
+            }
+            AlgoFailure::Invalid(msg) => write!(f, "invalid: {msg}"),
+        }
+    }
+}
+
+/// Uniform interface over the §5 algorithms.
+pub trait MsscAlgorithm {
+    /// Algorithm display name as it appears in the paper's tables.
+    fn name(&self) -> &'static str;
+
+    /// Cluster `data` into `k` clusters. `seed` controls all randomness.
+    fn run(&self, data: &Dataset, k: usize, seed: u64) -> Result<AlgoResult, AlgoFailure>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_display() {
+        let f = AlgoFailure::OutOfMemory { required_bytes: 100, cap_bytes: 10 };
+        assert!(f.to_string().contains("out of memory"));
+        assert!(AlgoFailure::OverTimeBudget { budget_secs: 1.0 }
+            .to_string()
+            .contains("budget"));
+    }
+
+    #[test]
+    fn result_totals() {
+        let r = AlgoResult {
+            centroids: vec![],
+            objective: 1.0,
+            cpu_init_secs: 0.25,
+            cpu_full_secs: 0.5,
+            counters: Counters::new(),
+        };
+        assert!((r.cpu_total_secs() - 0.75).abs() < 1e-12);
+    }
+}

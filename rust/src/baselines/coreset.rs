@@ -1,0 +1,220 @@
+//! Lightweight coresets (Bachem, Lucic & Krause, KDD 2018; paper §5.1).
+//!
+//! Builds an (ε, k)-lightweight coreset by importance sampling with the
+//! mixture distribution (paper eq. 10)
+//!
+//! `q(x) = ½·1/|X| + ½·‖x − μ‖² / Σ_x' ‖x' − μ‖²`
+//!
+//! then runs weighted K-means on the coreset. The paper's critique — the
+//! distribution needs two full passes over X — is visible directly in the
+//! distance-eval counters; Big-means' uniform sampling needs zero.
+
+use crate::baselines::common::{AlgoFailure, AlgoResult, MsscAlgorithm};
+use crate::data::dataset::Dataset;
+use crate::kernels::{self, distance::sq_dist, LloydParams};
+use crate::metrics::{Counters, PhaseTimer};
+use crate::util::rng::Rng;
+
+/// Lightweight-coreset K-means.
+pub struct LightweightCoreset {
+    /// Coreset size.
+    pub coreset_size: usize,
+    pub lloyd: LloydParams,
+    pub candidates: usize,
+}
+
+impl LightweightCoreset {
+    pub fn new(coreset_size: usize) -> Self {
+        LightweightCoreset {
+            coreset_size,
+            lloyd: LloydParams::default(),
+            candidates: 3,
+        }
+    }
+
+    /// Sample the coreset: returns (points, weights).
+    /// Two full passes over X (mean, then norms) — the paper's point.
+    pub fn sample(
+        &self,
+        data: &Dataset,
+        rng: &mut Rng,
+        counters: &mut Counters,
+    ) -> (Vec<f32>, Vec<f64>) {
+        let (m, n) = (data.m(), data.n());
+        let points = data.points();
+        // Pass 1: mean.
+        let mut mu = vec![0f64; n];
+        for i in 0..m {
+            for t in 0..n {
+                mu[t] += points[i * n + t] as f64;
+            }
+        }
+        for v in mu.iter_mut() {
+            *v /= m as f64;
+        }
+        let mu32: Vec<f32> = mu.iter().map(|&v| v as f32).collect();
+        // Pass 2: ‖x − μ‖².
+        let mut d2 = vec![0f64; m];
+        let mut total = 0f64;
+        for i in 0..m {
+            let d = sq_dist(&points[i * n..(i + 1) * n], &mu32) as f64;
+            d2[i] = d;
+            total += d;
+        }
+        counters.add_distance_evals(m as u64);
+
+        // q(x) and importance weights w(x) = 1 / (|C|·q(x)).
+        let size = self.coreset_size.min(m);
+        let mut coreset = Vec::with_capacity(size * n);
+        let mut weights = Vec::with_capacity(size);
+        let q: Vec<f64> = d2
+            .iter()
+            .map(|&d| 0.5 / m as f64 + if total > 0.0 { 0.5 * d / total } else { 0.0 })
+            .collect();
+        for _ in 0..size {
+            let idx = rng.weighted(&q);
+            coreset.extend_from_slice(&points[idx * n..(idx + 1) * n]);
+            weights.push(1.0 / (size as f64 * q[idx]));
+        }
+        (coreset, weights)
+    }
+}
+
+impl MsscAlgorithm for LightweightCoreset {
+    fn name(&self) -> &'static str {
+        "Lightweight Coreset"
+    }
+
+    fn run(&self, data: &Dataset, k: usize, seed: u64) -> Result<AlgoResult, AlgoFailure> {
+        let (m, n) = (data.m(), data.n());
+        let size = self.coreset_size.min(m);
+        if k == 0 || k > size {
+            return Err(AlgoFailure::Invalid(format!("k={k} out of range for coreset {size}")));
+        }
+        let mut rng = Rng::new(seed);
+        let mut counters = Counters::new();
+        let mut timer = PhaseTimer::new();
+
+        let centroids = timer.time_init(|| {
+            let (coreset, weights) = self.sample(data, &mut rng, &mut counters);
+            // Weighted Lloyd on the coreset.
+            let seed_c =
+                kernels::kmeanspp(&coreset, size, n, k, self.candidates, &mut rng, &mut counters);
+            weighted_lloyd(&coreset, &weights, size, n, k, seed_c, self.lloyd, &mut counters)
+        });
+
+        let objective = timer.time_full(|| {
+            kernels::objective(data.points(), &centroids, m, n, k, &mut counters)
+        });
+        counters.full_iterations += 1;
+        Ok(AlgoResult {
+            centroids,
+            objective,
+            cpu_init_secs: timer.init_secs(),
+            cpu_full_secs: timer.full_secs(),
+            counters,
+        })
+    }
+}
+
+/// Lloyd over weighted points.
+fn weighted_lloyd(
+    points: &[f32],
+    weights: &[f64],
+    m: usize,
+    n: usize,
+    k: usize,
+    mut centroids: Vec<f32>,
+    params: LloydParams,
+    counters: &mut Counters,
+) -> Vec<f32> {
+    let mut prev = f64::INFINITY;
+    for _ in 0..params.max_iters {
+        let mut sums = vec![0f64; k * n];
+        let mut wsum = vec![0f64; k];
+        let mut obj = 0f64;
+        for i in 0..m {
+            let x = &points[i * n..(i + 1) * n];
+            let (j, d) = kernels::distance::nearest(x, &centroids, k, n);
+            obj += weights[i] * d as f64;
+            wsum[j] += weights[i];
+            for t in 0..n {
+                sums[j * n + t] += weights[i] * x[t] as f64;
+            }
+        }
+        counters.add_distance_evals((m * k) as u64);
+        for j in 0..k {
+            if wsum[j] > 0.0 {
+                for t in 0..n {
+                    centroids[j * n + t] = (sums[j * n + t] / wsum[j]) as f32;
+                }
+            }
+        }
+        if (prev - obj).abs() <= params.tol * obj.max(1e-300) {
+            break;
+        }
+        prev = obj;
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Synth;
+
+    fn blobs(seed: u64) -> Dataset {
+        Synth::GaussianMixture {
+            m: 4000,
+            n: 3,
+            k_true: 4,
+            spread: 0.2,
+            box_half_width: 20.0,
+        }
+        .generate("t", seed)
+    }
+
+    #[test]
+    fn coreset_solution_close_to_full_kmeans() {
+        let data = blobs(1);
+        let cs = LightweightCoreset::new(512).run(&data, 4, 2).unwrap();
+        let pp = crate::baselines::kmeans_pp::KMeansPP {
+            threads: 1,
+            ..Default::default()
+        }
+        .run(&data, 4, 2)
+        .unwrap();
+        assert!(
+            cs.objective <= pp.objective * 1.3,
+            "coreset {} vs full {}",
+            cs.objective,
+            pp.objective
+        );
+    }
+
+    #[test]
+    fn weights_are_importance_weights() {
+        let data = blobs(2);
+        let algo = LightweightCoreset::new(256);
+        let mut rng = Rng::new(3);
+        let mut c = Counters::new();
+        let (coreset, weights) = algo.sample(&data, &mut rng, &mut c);
+        assert_eq!(coreset.len(), 256 * 3);
+        assert_eq!(weights.len(), 256);
+        // Total weight approximates m.
+        let total: f64 = weights.iter().sum();
+        let m = data.m() as f64;
+        assert!((total - m).abs() / m < 0.35, "Σw = {total}, m = {m}");
+    }
+
+    #[test]
+    fn two_full_passes_counted() {
+        // The distance-eval counter shows the q(x) construction pass.
+        let data = blobs(3);
+        let algo = LightweightCoreset::new(128);
+        let mut rng = Rng::new(1);
+        let mut c = Counters::new();
+        algo.sample(&data, &mut rng, &mut c);
+        assert!(c.distance_evals >= data.m() as u64);
+    }
+}

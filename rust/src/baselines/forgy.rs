@@ -1,0 +1,122 @@
+//! Forgy K-means (paper §5.2): uniform random initial centroids from the
+//! dataset, then full-dataset Lloyd to convergence. The simplest baseline —
+//! fast init, but the global Lloyd iterations dominate on big data and the
+//! solution quality depends entirely on the draw.
+
+use crate::baselines::common::{AlgoFailure, AlgoResult, MsscAlgorithm};
+use crate::data::dataset::Dataset;
+use crate::kernels::{self, LloydParams};
+use crate::metrics::{Counters, PhaseTimer};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// Forgy-initialised K-means.
+pub struct ForgyKMeans {
+    pub lloyd: LloydParams,
+    /// Worker threads for the Lloyd steps (0 = machine default, 1 = serial).
+    pub threads: usize,
+}
+
+impl Default for ForgyKMeans {
+    fn default() -> Self {
+        ForgyKMeans { lloyd: LloydParams::default(), threads: 0 }
+    }
+}
+
+impl MsscAlgorithm for ForgyKMeans {
+    fn name(&self) -> &'static str {
+        "Forgy K-Means"
+    }
+
+    fn run(&self, data: &Dataset, k: usize, seed: u64) -> Result<AlgoResult, AlgoFailure> {
+        let (m, n) = (data.m(), data.n());
+        if k == 0 || k > m {
+            return Err(AlgoFailure::Invalid(format!("k={k} out of range for m={m}")));
+        }
+        let mut rng = Rng::new(seed);
+        let mut counters = Counters::new();
+        let mut timer = PhaseTimer::new();
+
+        // Init phase: uniform distinct rows.
+        let centroids0 = timer.time_init(|| {
+            let idx = rng.sample_indices(m, k);
+            data.gather(&idx)
+        });
+
+        // Full phase: Lloyd on the whole dataset.
+        let pool = match self.threads {
+            1 => None,
+            0 => Some(ThreadPool::with_default_size()),
+            t => Some(ThreadPool::new(t)),
+        };
+        let result = timer.time_full(|| {
+            kernels::lloyd(
+                data.points(),
+                &centroids0,
+                m,
+                n,
+                k,
+                self.lloyd,
+                pool.as_ref(),
+                &mut counters,
+            )
+        });
+        counters.full_iterations += result.iters as u64 + 1;
+        Ok(AlgoResult {
+            centroids: result.centroids,
+            objective: result.objective,
+            cpu_init_secs: timer.init_secs(),
+            cpu_full_secs: timer.full_secs(),
+            counters,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Synth;
+
+    #[test]
+    fn clusters_blobs() {
+        let data = Synth::GaussianMixture {
+            m: 1000,
+            n: 3,
+            k_true: 4,
+            spread: 0.2,
+            box_half_width: 20.0,
+        }
+        .generate("t", 1);
+        let algo = ForgyKMeans { threads: 1, ..Default::default() };
+        let r = algo.run(&data, 4, 7).unwrap();
+        assert!(r.objective.is_finite());
+        assert_eq!(r.centroids.len(), 12);
+        assert!(r.counters.full_iterations >= 2);
+        assert!(r.counters.distance_evals > 0);
+    }
+
+    #[test]
+    fn rejects_bad_k() {
+        let data = Dataset::from_vec("t", vec![0.0; 8], 4, 2);
+        let algo = ForgyKMeans { threads: 1, ..Default::default() };
+        assert!(algo.run(&data, 0, 1).is_err());
+        assert!(algo.run(&data, 5, 1).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let data = Synth::GaussianMixture {
+            m: 500,
+            n: 2,
+            k_true: 3,
+            spread: 0.3,
+            box_half_width: 10.0,
+        }
+        .generate("t", 2);
+        let algo = ForgyKMeans { threads: 1, ..Default::default() };
+        let a = algo.run(&data, 3, 5).unwrap();
+        let b = algo.run(&data, 3, 5).unwrap();
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

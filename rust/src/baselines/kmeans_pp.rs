@@ -1,0 +1,167 @@
+//! K-means++ baseline (paper tables' "K-Means++" column): D² seeding over
+//! the full dataset followed by full-dataset Lloyd. Accurate but the
+//! O(m·k·n) seeding pass is expensive on big data — exactly the cost
+//! profile the paper reports (large `cpu_init`).
+//!
+//! Also provides [`MultiStartKMeansPP`], the classic multi-restart variant
+//! (§1.2, "multi-start K-means").
+
+use crate::baselines::common::{AlgoFailure, AlgoResult, MsscAlgorithm};
+use crate::data::dataset::Dataset;
+use crate::kernels::{self, LloydParams};
+use crate::metrics::{Counters, PhaseTimer};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// Single-start K-means++ → Lloyd.
+pub struct KMeansPP {
+    pub lloyd: LloydParams,
+    /// Candidates per D² draw (paper §5.7: 3).
+    pub candidates: usize,
+    pub threads: usize,
+}
+
+impl Default for KMeansPP {
+    fn default() -> Self {
+        KMeansPP { lloyd: LloydParams::default(), candidates: 3, threads: 0 }
+    }
+}
+
+impl MsscAlgorithm for KMeansPP {
+    fn name(&self) -> &'static str {
+        "K-Means++"
+    }
+
+    fn run(&self, data: &Dataset, k: usize, seed: u64) -> Result<AlgoResult, AlgoFailure> {
+        let (m, n) = (data.m(), data.n());
+        if k == 0 || k > m {
+            return Err(AlgoFailure::Invalid(format!("k={k} out of range for m={m}")));
+        }
+        let mut rng = Rng::new(seed);
+        let mut counters = Counters::new();
+        let mut timer = PhaseTimer::new();
+        let centroids0 = timer.time_init(|| {
+            kernels::kmeanspp(data.points(), m, n, k, self.candidates, &mut rng, &mut counters)
+        });
+        let pool = match self.threads {
+            1 => None,
+            0 => Some(ThreadPool::with_default_size()),
+            t => Some(ThreadPool::new(t)),
+        };
+        let result = timer.time_full(|| {
+            kernels::lloyd(
+                data.points(),
+                &centroids0,
+                m,
+                n,
+                k,
+                self.lloyd,
+                pool.as_ref(),
+                &mut counters,
+            )
+        });
+        counters.full_iterations += result.iters as u64 + 1;
+        Ok(AlgoResult {
+            centroids: result.centroids,
+            objective: result.objective,
+            cpu_init_secs: timer.init_secs(),
+            cpu_full_secs: timer.full_secs(),
+            counters,
+        })
+    }
+}
+
+/// Multi-start K-means++ : `restarts` independent runs, keep the best.
+pub struct MultiStartKMeansPP {
+    pub inner: KMeansPP,
+    pub restarts: usize,
+}
+
+impl MsscAlgorithm for MultiStartKMeansPP {
+    fn name(&self) -> &'static str {
+        "Multi-start K-Means++"
+    }
+
+    fn run(&self, data: &Dataset, k: usize, seed: u64) -> Result<AlgoResult, AlgoFailure> {
+        let mut best: Option<AlgoResult> = None;
+        let mut total_init = 0.0;
+        let mut total_full = 0.0;
+        let mut counters = Counters::new();
+        for r in 0..self.restarts.max(1) {
+            let run = self.inner.run(data, k, seed.wrapping_add(r as u64 * 0x9E37))?;
+            total_init += run.cpu_init_secs;
+            total_full += run.cpu_full_secs;
+            counters.merge(&run.counters);
+            if best.as_ref().map(|b| run.objective < b.objective).unwrap_or(true) {
+                best = Some(run);
+            }
+        }
+        let mut best = best.expect("restarts >= 1");
+        best.cpu_init_secs = total_init;
+        best.cpu_full_secs = total_full;
+        best.counters = counters;
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Synth;
+
+    fn blobs(seed: u64) -> Dataset {
+        Synth::GaussianMixture {
+            m: 800,
+            n: 3,
+            k_true: 4,
+            spread: 0.15,
+            box_half_width: 15.0,
+        }
+        .generate("t", seed)
+    }
+
+    #[test]
+    fn beats_or_matches_forgy_on_average() {
+        // K-means++ seeding should on average land at least as good a local
+        // minimum as a single uniform draw.
+        let data = blobs(1);
+        let pp = KMeansPP { threads: 1, ..Default::default() };
+        let forgy = crate::baselines::forgy::ForgyKMeans {
+            threads: 1,
+            ..Default::default()
+        };
+        let mut pp_sum = 0.0;
+        let mut forgy_sum = 0.0;
+        for s in 0..8 {
+            pp_sum += pp.run(&data, 4, s).unwrap().objective;
+            forgy_sum += forgy.run(&data, 4, s).unwrap().objective;
+        }
+        assert!(
+            pp_sum <= forgy_sum * 1.05,
+            "kmeans++ mean {pp_sum} should be ≤ forgy mean {forgy_sum}"
+        );
+    }
+
+    #[test]
+    fn init_phase_counted_separately() {
+        let data = blobs(2);
+        let pp = KMeansPP { threads: 1, ..Default::default() };
+        let r = pp.run(&data, 4, 3).unwrap();
+        assert!(r.cpu_init_secs > 0.0);
+        assert!(r.cpu_full_secs > 0.0);
+    }
+
+    #[test]
+    fn multistart_never_worse_than_single() {
+        let data = blobs(3);
+        let single = KMeansPP { threads: 1, ..Default::default() };
+        let multi = MultiStartKMeansPP {
+            inner: KMeansPP { threads: 1, ..Default::default() },
+            restarts: 4,
+        };
+        let s = single.run(&data, 4, 9).unwrap();
+        let m = multi.run(&data, 4, 9).unwrap();
+        assert!(m.objective <= s.objective + 1e-9);
+        assert!(m.counters.distance_evals > s.counters.distance_evals);
+    }
+}

@@ -1,0 +1,23 @@
+//! Baseline MSSC algorithms from the paper's §5 (competitive algorithms):
+//! Forgy K-means, K-means++ (single + multi-start), K-means‖, Ward's,
+//! LMBM-Clust, DA-MSSC, and lightweight coresets — all implemented from
+//! scratch on the shared kernel substrate so their distance-eval counters
+//! (`n_d`) and phase timings are directly comparable with Big-means.
+
+pub mod common;
+pub mod coreset;
+pub mod da_mssc;
+pub mod forgy;
+pub mod kmeans_parallel;
+pub mod kmeans_pp;
+pub mod lmbm;
+pub mod ward;
+
+pub use common::{AlgoFailure, AlgoResult, MsscAlgorithm};
+pub use coreset::LightweightCoreset;
+pub use da_mssc::DaMssc;
+pub use forgy::ForgyKMeans;
+pub use kmeans_parallel::KMeansParallel;
+pub use kmeans_pp::{KMeansPP, MultiStartKMeansPP};
+pub use lmbm::LmbmClust;
+pub use ward::Wards;

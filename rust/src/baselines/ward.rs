@@ -1,0 +1,239 @@
+//! Ward's agglomerative hierarchical clustering (paper §5.5).
+//!
+//! Exact Lance–Williams implementation with the Ward minimum-variance
+//! linkage: start from singletons, repeatedly merge the pair with minimal
+//!
+//! `d(A,B) = |A||B| / (|A|+|B|) · ‖c_A − c_B‖²`
+//!
+//! O(m²) memory and O(m³)-ish time via a nearest-neighbour array with lazy
+//! repair. Exactly like the paper's runs, datasets whose distance matrix
+//! exceeds the memory cap fail with `OutOfMemory` and score "—" in the
+//! tables.
+
+use crate::baselines::common::{AlgoFailure, AlgoResult, MsscAlgorithm};
+use crate::data::dataset::Dataset;
+use crate::kernels;
+use crate::metrics::{Counters, PhaseTimer};
+
+/// Ward's method with a memory cap mimicking the paper's 504 GB box scaled
+/// to this harness (default 512 MiB for the n² f32 matrix ≈ m ≤ ~11,500).
+pub struct Wards {
+    pub memory_cap_bytes: u64,
+}
+
+impl Default for Wards {
+    fn default() -> Self {
+        Wards { memory_cap_bytes: 512 << 20 }
+    }
+}
+
+impl MsscAlgorithm for Wards {
+    fn name(&self) -> &'static str {
+        "Ward's"
+    }
+
+    fn run(&self, data: &Dataset, k: usize, _seed: u64) -> Result<AlgoResult, AlgoFailure> {
+        let (m, n) = (data.m(), data.n());
+        if k == 0 || k > m {
+            return Err(AlgoFailure::Invalid(format!("k={k} out of range for m={m}")));
+        }
+        let required = (m as u64) * (m as u64) * 4;
+        if required > self.memory_cap_bytes {
+            return Err(AlgoFailure::OutOfMemory {
+                required_bytes: required,
+                cap_bytes: self.memory_cap_bytes,
+            });
+        }
+        let mut counters = Counters::new();
+        let mut timer = PhaseTimer::new();
+        let points = data.points();
+
+        // Ward runs entirely in the "init" phase (deterministic,
+        // hierarchical); the "full" phase is just centroid extraction.
+        let (centroids, objective) = timer.time_init(|| {
+            // Active cluster state.
+            let mut size = vec![1f64; m];
+            let mut centroid: Vec<f64> = points.iter().map(|&x| x as f64).collect();
+            let mut alive = vec![true; m];
+
+            // Dense Ward-distance matrix (upper use only, kept square for
+            // simple indexing).
+            let mut dist = vec![0f32; m * m];
+            for i in 0..m {
+                for j in (i + 1)..m {
+                    let d = ward_dist(
+                        &centroid[i * n..(i + 1) * n],
+                        &centroid[j * n..(j + 1) * n],
+                        1.0,
+                        1.0,
+                    );
+                    dist[i * m + j] = d as f32;
+                    dist[j * m + i] = d as f32;
+                }
+            }
+            counters.add_distance_evals((m * (m - 1) / 2) as u64);
+
+            // Nearest-neighbour cache per cluster.
+            let mut nn = vec![usize::MAX; m];
+            for i in 0..m {
+                nn[i] = nearest_alive(&dist, &alive, m, i);
+            }
+
+            let mut remaining = m;
+            while remaining > k {
+                // Find the globally closest pair via the NN cache.
+                let mut bi = usize::MAX;
+                let mut bd = f32::INFINITY;
+                for i in 0..m {
+                    if alive[i] && nn[i] != usize::MAX {
+                        let d = dist[i * m + nn[i]];
+                        if d < bd {
+                            bd = d;
+                            bi = i;
+                        }
+                    }
+                }
+                let a = bi;
+                let b = nn[bi];
+                debug_assert!(alive[a] && alive[b]);
+
+                // Merge b into a: new centroid + Lance-Williams update.
+                let (sa, sb) = (size[a], size[b]);
+                let st = sa + sb;
+                for d in 0..n {
+                    let ca = centroid[a * n + d];
+                    let cb = centroid[b * n + d];
+                    centroid[a * n + d] = (sa * ca + sb * cb) / st;
+                }
+                size[a] = st;
+                alive[b] = false;
+                remaining -= 1;
+
+                // Recompute Ward distance from the merged cluster to all
+                // alive clusters (Lance–Williams for Ward reduces to the
+                // centroid formula since we track centroids directly).
+                for j in 0..m {
+                    if alive[j] && j != a {
+                        let d = ward_dist(
+                            &centroid[a * n..(a + 1) * n],
+                            &centroid[j * n..(j + 1) * n],
+                            size[a],
+                            size[j],
+                        ) as f32;
+                        dist[a * m + j] = d;
+                        dist[j * m + a] = d;
+                    }
+                }
+                counters.add_distance_evals(remaining as u64);
+
+                // Repair NN caches touching a or b.
+                for i in 0..m {
+                    if alive[i] && (nn[i] == a || nn[i] == b || i == a) {
+                        nn[i] = nearest_alive(&dist, &alive, m, i);
+                    }
+                }
+            }
+
+            let mut centroids = Vec::with_capacity(k * n);
+            for i in 0..m {
+                if alive[i] {
+                    centroids.extend(centroid[i * n..(i + 1) * n].iter().map(|&x| x as f32));
+                }
+            }
+            let obj = kernels::objective(points, &centroids, m, n, k, &mut counters);
+            (centroids, obj)
+        });
+
+        Ok(AlgoResult {
+            centroids,
+            objective,
+            cpu_init_secs: timer.init_secs(),
+            cpu_full_secs: timer.full_secs(),
+            counters,
+        })
+    }
+}
+
+/// Ward linkage distance between clusters with given centroids and sizes.
+fn ward_dist(ca: &[f64], cb: &[f64], sa: f64, sb: f64) -> f64 {
+    let mut d2 = 0f64;
+    for (a, b) in ca.iter().zip(cb) {
+        let d = a - b;
+        d2 += d * d;
+    }
+    sa * sb / (sa + sb) * d2
+}
+
+fn nearest_alive(dist: &[f32], alive: &[bool], m: usize, i: usize) -> usize {
+    let mut best = usize::MAX;
+    let mut bd = f32::INFINITY;
+    for j in 0..m {
+        if j != i && alive[j] {
+            let d = dist[i * m + j];
+            if d < bd {
+                bd = d;
+                best = j;
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Synth;
+
+    #[test]
+    fn merges_blobs_correctly() {
+        // 3 well-separated blobs of 20 points → Ward at k=3 must put each
+        // centroid inside a blob.
+        let data = Synth::GaussianMixture {
+            m: 60,
+            n: 2,
+            k_true: 3,
+            spread: 0.05,
+            box_half_width: 30.0,
+        }
+        .generate("t", 5);
+        let r = Wards::default().run(&data, 3, 0).unwrap();
+        // Every point should be within ~1.0 of its centroid.
+        let mut c = Counters::new();
+        let (_, mins) = kernels::assign_only(data.points(), &r.centroids, 60, 2, 3, &mut c);
+        assert!(mins.iter().all(|&d| d < 1.0), "loose centroid: {:?}", r.centroids);
+    }
+
+    #[test]
+    fn deterministic() {
+        let data = Synth::GaussianMixture {
+            m: 40,
+            n: 3,
+            k_true: 2,
+            spread: 0.3,
+            box_half_width: 10.0,
+        }
+        .generate("t", 6);
+        let a = Wards::default().run(&data, 2, 1).unwrap();
+        let b = Wards::default().run(&data, 2, 999).unwrap();
+        assert_eq!(a.centroids, b.centroids, "Ward must ignore the seed");
+    }
+
+    #[test]
+    fn memory_cap_enforced_like_paper_dashes() {
+        let data = Dataset::from_vec("big", vec![0.0; 4000 * 2], 4000, 2);
+        let w = Wards { memory_cap_bytes: 1 << 20 }; // 1 MiB cap
+        match w.run(&data, 2, 0) {
+            Err(AlgoFailure::OutOfMemory { required_bytes, .. }) => {
+                assert_eq!(required_bytes, 4000 * 4000 * 4);
+            }
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn k_equals_m_returns_points() {
+        let data = Dataset::from_vec("t", vec![0.0, 0.0, 5.0, 5.0], 2, 2);
+        let r = Wards::default().run(&data, 2, 0).unwrap();
+        assert_eq!(r.objective, 0.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Figure data matching the paper's Figures 1–4: per dataset, the number
+//! of distance-function evaluations (`n_d`) and the achieved objective vs
+//! the number of clusters k, one series per algorithm; plus the
+//! convergence traces (objective vs wall-clock) used in the analysis.
+
+use super::runner::ExperimentRuns;
+
+/// One figure series: y-values per k for one algorithm.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub algorithm: &'static str,
+    pub k_grid: Vec<usize>,
+    pub values: Vec<Option<f64>>,
+}
+
+/// Figures 1–4 (left panels): mean distance evaluations vs k.
+pub fn distance_evals_series(exp: &ExperimentRuns) -> Vec<Series> {
+    exp.cells
+        .iter()
+        .map(|per_algo| Series {
+            algorithm: per_algo[0].algorithm,
+            k_grid: exp.k_grid.clone(),
+            values: per_algo
+                .iter()
+                .map(|cell| {
+                    (!cell.all_failed()).then(|| cell.mean_counters().distance_evals as f64)
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// Figures 1–4 (right panels): mean objective vs k.
+pub fn objective_series(exp: &ExperimentRuns) -> Vec<Series> {
+    exp.cells
+        .iter()
+        .map(|per_algo| Series {
+            algorithm: per_algo[0].algorithm,
+            k_grid: exp.k_grid.clone(),
+            values: per_algo
+                .iter()
+                .map(|cell| {
+                    let objs = cell.objectives();
+                    (!objs.is_empty()).then(|| objs.iter().sum::<f64>() / objs.len() as f64)
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// Mean CPU seconds vs k (the paper reports these in the tables; plotted
+/// here as a figure series for the report).
+pub fn cpu_series(exp: &ExperimentRuns) -> Vec<Series> {
+    exp.cells
+        .iter()
+        .map(|per_algo| Series {
+            algorithm: per_algo[0].algorithm,
+            k_grid: exp.k_grid.clone(),
+            values: per_algo
+                .iter()
+                .map(|cell| {
+                    let cpus = cell.cpu_totals();
+                    (!cpus.is_empty()).then(|| cpus.iter().sum::<f64>() / cpus.len() as f64)
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// A convergence trace: (elapsed seconds, best chunk objective) samples
+/// from one Big-means run — the §4.1 "objective vs time" analysis.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceTrace {
+    pub samples: Vec<(f64, f64)>,
+}
+
+impl ConvergenceTrace {
+    pub fn record(&mut self, elapsed_secs: f64, objective: f64) {
+        self.samples.push((elapsed_secs, objective));
+    }
+
+    /// Objectives must be non-increasing over time (keep-the-best).
+    pub fn is_monotone(&self) -> bool {
+        self.samples.windows(2).all(|w| w[1].1 <= w[0].1 + 1e-12)
+    }
+}
+
+/// Render a series set as an ASCII sparkline table (for terminal output).
+pub fn render_ascii(series: &[Series], title: &str, log_scale: bool) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "### {title}");
+    for s in series {
+        let _ = write!(out, "{:<22}", s.algorithm);
+        let finite: Vec<f64> = s
+            .values
+            .iter()
+            .flatten()
+            .map(|&v| if log_scale { v.max(1.0).log10() } else { v })
+            .collect();
+        if finite.is_empty() {
+            let _ = writeln!(out, " (all failed)");
+            continue;
+        }
+        let lo = finite.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = finite.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ticks = ['\u{2581}', '\u{2582}', '\u{2583}', '\u{2584}', '\u{2585}', '\u{2586}', '\u{2587}', '\u{2588}'];
+        for v in &s.values {
+            match v {
+                None => out.push('·'),
+                Some(v) => {
+                    let v = if log_scale { v.max(1.0).log10() } else { *v };
+                    let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.5 };
+                    let idx = ((t * 7.0).round() as usize).min(7);
+                    out.push(ticks[idx]);
+                }
+            }
+        }
+        let _ = writeln!(out, "  [{:.3e} … {:.3e}]", lo, hi);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::AlgoResult;
+    use crate::bench_harness::runner::CellRuns;
+    use crate::metrics::Counters;
+
+    fn cell(name: &'static str, k: usize, objs: &[f64], nd: u64) -> CellRuns {
+        CellRuns {
+            algorithm: name,
+            k,
+            runs: objs
+                .iter()
+                .map(|&o| {
+                    let mut c = Counters::new();
+                    c.add_distance_evals(nd);
+                    Some(AlgoResult {
+                        centroids: vec![],
+                        objective: o,
+                        cpu_init_secs: 0.0,
+                        cpu_full_secs: 0.1,
+                        counters: c,
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    fn exp() -> ExperimentRuns {
+        ExperimentRuns {
+            dataset: "d".into(),
+            k_grid: vec![2, 5],
+            n_exec: 1,
+            cells: vec![
+                vec![cell("A", 2, &[10.0], 100), cell("A", 5, &[5.0], 250)],
+                vec![cell("B", 2, &[12.0], 1000), cell("B", 5, &[6.0], 2500)],
+            ],
+        }
+    }
+
+    #[test]
+    fn series_extraction() {
+        let e = exp();
+        let nd = distance_evals_series(&e);
+        assert_eq!(nd[0].values, vec![Some(100.0), Some(250.0)]);
+        assert_eq!(nd[1].values, vec![Some(1000.0), Some(2500.0)]);
+        let obj = objective_series(&e);
+        assert_eq!(obj[0].values, vec![Some(10.0), Some(5.0)]);
+        let cpu = cpu_series(&e);
+        assert_eq!(cpu[0].values, vec![Some(0.1), Some(0.1)]);
+    }
+
+    #[test]
+    fn trace_monotonicity() {
+        let mut t = ConvergenceTrace::default();
+        t.record(0.0, 10.0);
+        t.record(1.0, 8.0);
+        t.record(2.0, 8.0);
+        assert!(t.is_monotone());
+        t.record(3.0, 9.0);
+        assert!(!t.is_monotone());
+    }
+
+    #[test]
+    fn ascii_render_handles_gaps() {
+        let s = vec![Series {
+            algorithm: "A",
+            k_grid: vec![2, 3],
+            values: vec![Some(1.0), None],
+        }];
+        let text = render_ascii(&s, "t", false);
+        assert!(text.contains('·'));
+        assert!(text.contains("A"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Bench harness regenerating every table and figure of the paper's
+//! evaluation (see DESIGN.md experiment index):
+//!
+//! * [`runner`] — k-grid × n_exec experiment execution over the roster;
+//! * [`tables`] — Tables 3–4 (scores) and 5–50 (per-dataset summaries and
+//!   clustering details);
+//! * [`figures`] — Figures 1–4 series (distance evals / objective vs k)
+//!   and convergence traces;
+//! * [`report`] — markdown/CSV rendering into `target/reports/`.
+
+pub mod figures;
+pub mod report;
+pub mod runner;
+pub mod tables;
+
+pub use runner::{paper_roster, quick_roster, run_experiment, BigMeansAlgo, ExperimentRuns};
+pub use tables::{dataset_scores, details_table, summary_table, table4};

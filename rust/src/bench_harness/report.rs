@@ -1,0 +1,175 @@
+//! Report rendering: the tables/figures as markdown + CSV under
+//! `target/reports/`, in the same row format the paper prints.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::figures::Series;
+use super::tables::{DetailRow, SummaryTable, Table4Row};
+
+/// Reports directory (created on demand).
+pub fn reports_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("target/reports");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "—".to_string(),
+    }
+}
+
+/// Render a summary table as markdown (paper Tables 5, 7, …).
+pub fn render_summary_markdown(t: &SummaryTable) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## Summary — {}", t.dataset);
+    let _ = writeln!(
+        out,
+        "| algorithm | k | f_best* | E_A min | E_A mean | E_A max | cpu min | cpu mean | cpu max |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|---|");
+    for r in &t.rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {:.6e} | {} | {} | {} | {} | {} | {} |",
+            r.algorithm,
+            r.k,
+            r.f_best,
+            fmt_opt(r.ea.map(|s| s.min), 2),
+            fmt_opt(r.ea.map(|s| s.mean), 2),
+            fmt_opt(r.ea.map(|s| s.max), 2),
+            fmt_opt(r.cpu.map(|s| s.min), 3),
+            fmt_opt(r.cpu.map(|s| s.mean), 3),
+            fmt_opt(r.cpu.map(|s| s.max), 3),
+        );
+    }
+    let _ = writeln!(out, "\n**Mean over k:**\n");
+    let _ = writeln!(out, "| algorithm | E_A mean | cpu mean |");
+    let _ = writeln!(out, "|---|---|---|");
+    for (name, ea, cpu) in &t.algo_means {
+        let _ = writeln!(out, "| {} | {} | {} |", name, fmt_opt(*ea, 2), fmt_opt(*cpu, 3));
+    }
+    out
+}
+
+/// Render the details table as markdown (paper Tables 6, 8, …).
+pub fn render_details_markdown(dataset: &str, rows: &[DetailRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## Clustering details — {dataset}");
+    let _ = writeln!(
+        out,
+        "| algorithm | k | n_exec | n_s | n_full | n_d | cpu_init | cpu_full |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {:.2e} | {:.3} | {:.3} |",
+            r.algorithm, r.k, r.n_exec, r.n_s, r.n_full, r.n_d as f64, r.cpu_init_mean, r.cpu_full_mean,
+        );
+    }
+    out
+}
+
+/// Render Table 4 (the headline cross-dataset comparison).
+pub fn render_table4_markdown(rows: &[Table4Row], n_datasets: usize) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "## Table 4 — Summary of sum scores ({n_datasets} datasets)");
+    let _ = writeln!(
+        out,
+        "| Algorithm | Accuracy | CPU time | Accuracy (%) | CPU time (%) | Mean score (%) |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "| {} | {:.3} | {:.3} | {:.0} | {:.0} | {:.0} |",
+            r.algorithm, r.accuracy_sum, r.cpu_sum, r.accuracy_pct, r.cpu_pct, r.mean_pct,
+        );
+    }
+    out
+}
+
+/// CSV for a figure series set (one row per (algorithm, k)).
+pub fn series_csv(series: &[Series], value_name: &str) -> String {
+    let mut out = format!("algorithm,k,{value_name}\n");
+    for s in series {
+        for (i, &k) in s.k_grid.iter().enumerate() {
+            let v = s.values[i].map(|v| v.to_string()).unwrap_or_default();
+            let _ = writeln!(out, "{},{},{}", s.algorithm, k, v);
+        }
+    }
+    out
+}
+
+/// Write a report file; returns the path.
+pub fn write_report(name: &str, content: &str) -> PathBuf {
+    let path = reports_dir().join(name);
+    std::fs::write(&path, content).expect("write report");
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Summary;
+
+    #[test]
+    fn markdown_renders_dashes_for_failures() {
+        let t = SummaryTable {
+            dataset: "d".into(),
+            rows: vec![super::super::tables::SummaryRow {
+                algorithm: "Ward's",
+                k: 2,
+                f_best: 10.0,
+                ea: None,
+                cpu: None,
+            }],
+            algo_means: vec![("Ward's", None, None)],
+        };
+        let md = render_summary_markdown(&t);
+        assert!(md.contains("| Ward's | 2 |"));
+        assert!(md.contains("—"));
+    }
+
+    #[test]
+    fn summary_includes_values() {
+        let s = Summary { min: 0.1, mean: 0.2, max: 0.3 };
+        let t = SummaryTable {
+            dataset: "d".into(),
+            rows: vec![super::super::tables::SummaryRow {
+                algorithm: "Big-Means",
+                k: 5,
+                f_best: 123.0,
+                ea: Some(s),
+                cpu: Some(s),
+            }],
+            algo_means: vec![("Big-Means", Some(0.2), Some(0.2))],
+        };
+        let md = render_summary_markdown(&t);
+        assert!(md.contains("0.20"));
+        assert!(md.contains("1.230000e2") || md.contains("1.23e2") || md.contains("123"));
+    }
+
+    #[test]
+    fn csv_format() {
+        let s = vec![Series {
+            algorithm: "A",
+            k_grid: vec![2, 3],
+            values: vec![Some(7.0), None],
+        }];
+        let csv = series_csv(&s, "nd");
+        assert!(csv.starts_with("algorithm,k,nd\n"));
+        assert!(csv.contains("A,2,7"));
+        assert!(csv.contains("A,3,\n"));
+    }
+
+    #[test]
+    fn report_written_to_disk() {
+        let p = write_report("test_report.md", "# hello");
+        assert!(p.exists());
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -1,0 +1,250 @@
+//! Table generation matching the paper's formats:
+//!
+//! * per-dataset **summary tables** (Tables 5, 7, 9, …): per k, the
+//!   relative error `E_A` (min/mean/max) and CPU seconds (min/mean/max)
+//!   per algorithm, with the per-algorithm grand means at the bottom;
+//! * per-dataset **clustering-details tables** (Tables 6, 8, 10, …):
+//!   `s`, `n_s`, `cpu_max`, `n_full`, `n_d` per k;
+//! * the cross-dataset **score summaries** (Tables 3 and 4).
+
+use crate::metrics::{mean_score, relative_error, scores, Summary};
+
+use super::runner::{f_best, ExperimentRuns};
+
+/// One summary-table row: algorithm × k.
+#[derive(Clone, Debug)]
+pub struct SummaryRow {
+    pub algorithm: &'static str,
+    pub k: usize,
+    pub f_best: f64,
+    /// None when every repetition failed ("—").
+    pub ea: Option<Summary>,
+    pub cpu: Option<Summary>,
+}
+
+/// Per-dataset summary table (the paper's Tables 5, 7, …).
+#[derive(Debug)]
+pub struct SummaryTable {
+    pub dataset: String,
+    pub rows: Vec<SummaryRow>,
+    /// Grand mean E_A and cpu per algorithm (the "Mean:" row).
+    pub algo_means: Vec<(&'static str, Option<f64>, Option<f64>)>,
+}
+
+/// Build the summary table from raw runs.
+pub fn summary_table(exp: &ExperimentRuns) -> SummaryTable {
+    let mut rows = Vec::new();
+    for (ki, &k) in exp.k_grid.iter().enumerate() {
+        let Some(fb) = f_best(exp, ki) else { continue };
+        for per_algo in &exp.cells {
+            let cell = &per_algo[ki];
+            let objectives = cell.objectives();
+            let (ea, cpu) = if objectives.is_empty() {
+                (None, None)
+            } else {
+                let errs: Vec<f64> =
+                    objectives.iter().map(|&f| relative_error(f, fb)).collect();
+                (Some(Summary::of(&errs)), Some(Summary::of(&cell.cpu_totals())))
+            };
+            rows.push(SummaryRow { algorithm: cell.algorithm, k, f_best: fb, ea, cpu });
+        }
+    }
+    // Grand means per algorithm across k (paper's bottom "Mean:" row).
+    let mut algo_means = Vec::new();
+    for per_algo in &exp.cells {
+        let name = per_algo[0].algorithm;
+        let mut eas = Vec::new();
+        let mut cpus = Vec::new();
+        for row in rows.iter().filter(|r| r.algorithm == name) {
+            if let (Some(ea), Some(cpu)) = (row.ea, row.cpu) {
+                eas.push(ea.mean);
+                cpus.push(cpu.mean);
+            }
+        }
+        let mean = |v: &[f64]| {
+            (!v.is_empty()).then(|| v.iter().sum::<f64>() / v.len() as f64)
+        };
+        algo_means.push((name, mean(&eas), mean(&cpus)));
+    }
+    SummaryTable { dataset: exp.dataset.clone(), rows, algo_means }
+}
+
+/// One clustering-details row (paper's Tables 6, 8, …).
+#[derive(Clone, Debug)]
+pub struct DetailRow {
+    pub algorithm: &'static str,
+    pub k: usize,
+    pub n_exec: usize,
+    /// Chunks processed (Big-means / DA-MSSC only).
+    pub n_s: u64,
+    /// Full-dataset iterations.
+    pub n_full: u64,
+    /// Mean distance evaluations.
+    pub n_d: u64,
+    pub cpu_init_mean: f64,
+    pub cpu_full_mean: f64,
+}
+
+/// Build the details table.
+pub fn details_table(exp: &ExperimentRuns) -> Vec<DetailRow> {
+    let mut rows = Vec::new();
+    for (ki, &k) in exp.k_grid.iter().enumerate() {
+        for per_algo in &exp.cells {
+            let cell = &per_algo[ki];
+            let succeeded: Vec<_> = cell.runs.iter().flatten().collect();
+            if succeeded.is_empty() {
+                continue;
+            }
+            let counters = cell.mean_counters();
+            let mean = |f: &dyn Fn(&&crate::baselines::AlgoResult) -> f64| {
+                succeeded.iter().map(f).sum::<f64>() / succeeded.len() as f64
+            };
+            rows.push(DetailRow {
+                algorithm: cell.algorithm,
+                k,
+                n_exec: exp.n_exec,
+                n_s: counters.chunks,
+                n_full: counters.full_iterations,
+                n_d: counters.distance_evals,
+                cpu_init_mean: mean(&|r| r.cpu_init_secs),
+                cpu_full_mean: mean(&|r| r.cpu_full_secs),
+            });
+        }
+    }
+    rows
+}
+
+/// Per-dataset scores for Table 3/4: `(algorithm, S_accuracy, S_cpu)`.
+pub fn dataset_scores(exp: &ExperimentRuns) -> Vec<(&'static str, f64, f64)> {
+    let table = summary_table(exp);
+    // Metric per algorithm = grand mean E_A / cpu (the paper scores the
+    // final mean values at the bottom of each summary table).
+    let names: Vec<&'static str> = table.algo_means.iter().map(|m| m.0).collect();
+    let ea_vals: Vec<Option<f64>> = table.algo_means.iter().map(|m| m.1).collect();
+    let cpu_vals: Vec<Option<f64>> = table.algo_means.iter().map(|m| m.2).collect();
+    let s_ea = scores(&ea_vals);
+    let s_cpu = scores(&cpu_vals);
+    names
+        .into_iter()
+        .zip(s_ea.into_iter().zip(s_cpu))
+        .map(|(n, (a, c))| (n, a, c))
+        .collect()
+}
+
+/// Table 4: sum scores across datasets. Input: per-dataset score triples.
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    pub algorithm: &'static str,
+    pub accuracy_sum: f64,
+    pub cpu_sum: f64,
+    pub accuracy_pct: f64,
+    pub cpu_pct: f64,
+    pub mean_pct: f64,
+}
+
+pub fn table4(all: &[Vec<(&'static str, f64, f64)>]) -> Vec<Table4Row> {
+    if all.is_empty() {
+        return Vec::new();
+    }
+    let names: Vec<&'static str> = all[0].iter().map(|t| t.0).collect();
+    let n_datasets = all.len() as f64;
+    names
+        .iter()
+        .enumerate()
+        .map(|(i, &name)| {
+            let acc: f64 = all.iter().map(|d| d[i].1).sum();
+            let cpu: f64 = all.iter().map(|d| d[i].2).sum();
+            let mean: f64 = all
+                .iter()
+                .map(|d| mean_score(d[i].1, d[i].2))
+                .sum::<f64>();
+            Table4Row {
+                algorithm: name,
+                accuracy_sum: acc,
+                cpu_sum: cpu,
+                accuracy_pct: acc / n_datasets * 100.0,
+                cpu_pct: cpu / n_datasets * 100.0,
+                mean_pct: mean / n_datasets * 100.0,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::AlgoResult;
+    use crate::bench_harness::runner::CellRuns;
+    use crate::metrics::Counters;
+
+    fn result(obj: f64, cpu: f64) -> Option<AlgoResult> {
+        Some(AlgoResult {
+            centroids: vec![],
+            objective: obj,
+            cpu_init_secs: cpu,
+            cpu_full_secs: 0.0,
+            counters: Counters::new(),
+        })
+    }
+
+    fn fake_exp() -> ExperimentRuns {
+        ExperimentRuns {
+            dataset: "fake".into(),
+            k_grid: vec![2],
+            n_exec: 2,
+            cells: vec![
+                vec![CellRuns {
+                    algorithm: "Big-Means",
+                    k: 2,
+                    runs: vec![result(100.0, 0.1), result(102.0, 0.12)],
+                }],
+                vec![CellRuns {
+                    algorithm: "Slowpoke",
+                    k: 2,
+                    runs: vec![result(110.0, 3.0), result(120.0, 3.5)],
+                }],
+                vec![CellRuns { algorithm: "Broken", k: 2, runs: vec![None, None] }],
+            ],
+        }
+    }
+
+    #[test]
+    fn summary_relative_errors_vs_fbest() {
+        let t = summary_table(&fake_exp());
+        let bm = t.rows.iter().find(|r| r.algorithm == "Big-Means").unwrap();
+        assert_eq!(bm.f_best, 100.0);
+        let ea = bm.ea.unwrap();
+        assert!((ea.min - 0.0).abs() < 1e-9);
+        assert!((ea.max - 2.0).abs() < 1e-9);
+        let broken = t.rows.iter().find(|r| r.algorithm == "Broken").unwrap();
+        assert!(broken.ea.is_none(), "all-failed must render as —");
+    }
+
+    #[test]
+    fn scores_best_one_worst_zero_failed_zero() {
+        let s = dataset_scores(&fake_exp());
+        let find = |n: &str| s.iter().find(|t| t.0 == n).unwrap();
+        assert_eq!(find("Big-Means").1, 1.0); // best accuracy
+        assert_eq!(find("Big-Means").2, 1.0); // best cpu
+        assert_eq!(find("Slowpoke").1, 0.0);
+        assert_eq!(find("Broken").1, 0.0);
+        assert_eq!(find("Broken").2, 0.0);
+    }
+
+    #[test]
+    fn table4_aggregates_percentages() {
+        let d1 = dataset_scores(&fake_exp());
+        let d2 = dataset_scores(&fake_exp());
+        let t4 = table4(&[d1, d2]);
+        let bm = t4.iter().find(|r| r.algorithm == "Big-Means").unwrap();
+        assert!((bm.accuracy_sum - 2.0).abs() < 1e-9);
+        assert!((bm.accuracy_pct - 100.0).abs() < 1e-9);
+        assert!((bm.mean_pct - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn details_rows_for_successes_only() {
+        let rows = details_table(&fake_exp());
+        assert_eq!(rows.len(), 2, "Broken must not appear");
+    }
+}

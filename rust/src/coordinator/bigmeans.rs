@@ -1,0 +1,357 @@
+//! Big-means (Algorithm 3 of the paper): the sequential chunk pipeline.
+//!
+//! ```text
+//! C ← all-degenerate; f_opt ← ∞
+//! while stop condition not met:
+//!     P  ← uniform random sample of s vectors from X
+//!     C' ← C with degenerate centroids reinitialised (K-means++ on P)
+//!     C''← KMeans(P, C')                     // chunk-local search
+//!     if f(C'', P) < f_opt: C ← C''; f_opt ← f(C'', P)   // keep the best
+//! A ← assign each x ∈ X to its closest centroid in C     // final pass
+//! ```
+//!
+//! The chunk loop is the *global* search: resampling chunks is the natural
+//! shaking step, and "keep the best" fixes the incumbent. Only chunk
+//! objectives are ever compared — the full objective is computed once, in
+//! the final pass.
+
+use crate::coordinator::config::{BigMeansConfig, ParallelMode, ReinitStrategy};
+use crate::coordinator::incumbent::Solution;
+use crate::coordinator::sampler::ChunkSampler;
+use crate::coordinator::solver::{ChunkSolver, NativeSolver};
+use crate::coordinator::stop::StopState;
+use crate::data::dataset::Dataset;
+use crate::kernels::{self, update::degenerate_indices};
+use crate::metrics::{Counters, PhaseTimer};
+use crate::util::rng::Rng;
+
+/// Result of a Big-means run.
+#[derive(Clone, Debug)]
+pub struct BigMeansResult {
+    /// Final centroids, row-major `(k, n)`.
+    pub centroids: Vec<f32>,
+    /// Full-dataset objective `f(C, X)` (NaN if the final pass was skipped).
+    pub objective: f64,
+    /// Point-to-cluster assignment (empty if the final pass was skipped).
+    pub assignment: Vec<u32>,
+    /// Best chunk objective found during the search.
+    pub best_chunk_objective: f64,
+    /// Work counters (`n_d`, `n_s`, iteration counts).
+    pub counters: Counters,
+    /// Phase timing (`cpu_init` = search, `cpu_full` = final pass).
+    pub cpu_init_secs: f64,
+    pub cpu_full_secs: f64,
+    /// Number of chunks whose result was accepted as incumbent.
+    pub improvements: u64,
+}
+
+/// The Big-means clustering engine.
+pub struct BigMeans {
+    config: BigMeansConfig,
+    solver: Box<dyn ChunkSolver>,
+}
+
+impl BigMeans {
+    /// Build with the configured native engine. (PJRT engine: construct via
+    /// `runtime::pjrt_bigmeans`, which injects a `PjrtSolver`.)
+    pub fn new(config: BigMeansConfig) -> Self {
+        let threads = match config.parallel {
+            ParallelMode::Sequential => 1,
+            _ => config.threads,
+        };
+        let solver = Box::new(NativeSolver::new(config.lloyd, threads));
+        BigMeans { config, solver }
+    }
+
+    /// Build with a custom chunk solver (PJRT or test doubles).
+    pub fn with_solver(config: BigMeansConfig, solver: Box<dyn ChunkSolver>) -> Self {
+        BigMeans { config, solver }
+    }
+
+    pub fn config(&self) -> &BigMeansConfig {
+        &self.config
+    }
+
+    /// Run on a dataset.
+    pub fn run(&self, data: &Dataset) -> Result<BigMeansResult, String> {
+        let (m, n) = (data.m(), data.n());
+        self.config.validate(m, n)?;
+        match self.config.parallel {
+            // Strategy 2 builds per-worker native solvers (PJRT is
+            // single-threaded; see ChunkSolver docs).
+            ParallelMode::ChunkParallel => {
+                crate::coordinator::parallel::run_chunk_parallel(&self.config, data)
+            }
+            _ => Ok(self.run_sequential(data)),
+        }
+    }
+
+    fn run_sequential(&self, data: &Dataset) -> BigMeansResult {
+        let cfg = &self.config;
+        let (m, n, k) = (data.m(), data.n(), cfg.k);
+        let s = cfg.chunk_size.min(m);
+        let mut rng = Rng::new(cfg.seed);
+        let mut counters = Counters::new();
+        let mut timer = PhaseTimer::new();
+        let mut sampler = ChunkSampler::new(s, n);
+        let mut incumbent = Solution::all_degenerate(k, n);
+        let mut improvements = 0u64;
+        let mut stop = StopState::new(cfg.stop);
+
+        timer.time_init(|| {
+            while !stop.should_stop() {
+                let (chunk, rows) = sampler.sample(data, &mut rng);
+                // C' ← incumbent with degenerates reseeded on this chunk.
+                let mut seed = incumbent.centroids.clone();
+                reseed(
+                    cfg,
+                    chunk,
+                    rows,
+                    n,
+                    k,
+                    &mut seed,
+                    &incumbent.degenerate,
+                    &mut rng,
+                    &mut counters,
+                );
+                // C'' ← local search.
+                let result = self.solver.lloyd(chunk, rows, n, k, &seed, &mut counters);
+                counters.chunk_iterations += result.iters as u64;
+                counters.chunks += 1;
+                stop.record_chunk();
+                // Keep the best (chunk objectives only).
+                if result.objective < incumbent.objective {
+                    incumbent = Solution {
+                        degenerate: degenerate_indices(&result.counts),
+                        centroids: result.centroids,
+                        objective: result.objective,
+                    };
+                    improvements += 1;
+                }
+            }
+        });
+
+        finish(cfg, self.solver.as_ref(), data, incumbent, improvements, counters, timer)
+    }
+}
+
+/// Final full-dataset pass + result assembly (shared between the
+/// sequential and chunk-parallel pipelines).
+pub(crate) fn finish(
+    cfg: &BigMeansConfig,
+    solver: &dyn ChunkSolver,
+    data: &Dataset,
+    incumbent: Solution,
+    improvements: u64,
+    mut counters: Counters,
+    mut timer: PhaseTimer,
+) -> BigMeansResult {
+    let (m, n, k) = (data.m(), data.n(), cfg.k);
+    let mut centroids = incumbent.centroids.clone();
+    // Degenerate slots never earned points; park them far away so the
+    // final assignment ignores them (mirrors the L2 PAD contract).
+    for &j in &incumbent.degenerate {
+        for v in &mut centroids[j * n..(j + 1) * n] {
+            *v = 1.0e15;
+        }
+    }
+    let (assignment, objective) = if cfg.skip_final_assignment {
+        (Vec::new(), f64::NAN)
+    } else {
+        timer.time_full(|| {
+            let (labels, mins) =
+                solver.assign(data.points(), m, n, k, &centroids, &mut counters);
+            counters.full_iterations += 1;
+            let obj = mins.iter().map(|&d| d as f64).sum::<f64>();
+            (labels, obj)
+        })
+    };
+    BigMeansResult {
+        centroids,
+        objective,
+        assignment,
+        best_chunk_objective: incumbent.objective,
+        counters,
+        cpu_init_secs: timer.init_secs(),
+        cpu_full_secs: timer.full_secs(),
+        improvements,
+    }
+}
+
+/// Reinitialise degenerate centroid slots on the current chunk.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reseed(
+    cfg: &BigMeansConfig,
+    chunk: &[f32],
+    rows: usize,
+    n: usize,
+    k: usize,
+    seed: &mut [f32],
+    degenerate: &[usize],
+    rng: &mut Rng,
+    counters: &mut Counters,
+) {
+    if degenerate.is_empty() {
+        return;
+    }
+    if degenerate.len() == k {
+        // First chunk (all degenerate): full init.
+        let init = match cfg.reinit {
+            ReinitStrategy::KmeansPP => {
+                kernels::kmeanspp(chunk, rows, n, k, cfg.candidates, rng, counters)
+            }
+            ReinitStrategy::Random => {
+                let idx = rng.sample_indices(rows, k);
+                let mut c = vec![0f32; k * n];
+                for (slot, &i) in idx.iter().enumerate() {
+                    c[slot * n..(slot + 1) * n]
+                        .copy_from_slice(&chunk[i * n..(i + 1) * n]);
+                }
+                c
+            }
+        };
+        seed.copy_from_slice(&init);
+        return;
+    }
+    match cfg.reinit {
+        ReinitStrategy::KmeansPP => kernels::reseed_degenerate(
+            chunk,
+            rows,
+            n,
+            k,
+            seed,
+            degenerate,
+            cfg.candidates,
+            rng,
+            counters,
+        ),
+        ReinitStrategy::Random => {
+            kernels::reseed_degenerate_random(chunk, rows, n, seed, degenerate, rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::StopCondition;
+    use crate::data::synth::Synth;
+
+    fn blobs(m: usize, k_true: usize, seed: u64) -> Dataset {
+        Synth::GaussianMixture {
+            m,
+            n: 4,
+            k_true,
+            spread: 0.2,
+            box_half_width: 25.0,
+        }
+        .generate("blobs", seed)
+    }
+
+    fn quick_config(k: usize, s: usize, chunks: u64) -> BigMeansConfig {
+        BigMeansConfig::new(k, s)
+            .with_stop(StopCondition::MaxChunks(chunks))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(7)
+    }
+
+    #[test]
+    fn clusters_blobs_close_to_reference_kmeans() {
+        let data = blobs(4000, 5, 1);
+        let bm = BigMeans::new(quick_config(5, 512, 30));
+        let r = bm.run(&data).unwrap();
+        assert_eq!(r.centroids.len(), 5 * 4);
+        assert_eq!(r.assignment.len(), 4000);
+        assert!(r.objective.is_finite());
+        // Multi-start reference: full-data Lloyd from k-means++ seeds.
+        let mut counters = Counters::new();
+        let mut rng = Rng::new(3);
+        let seed =
+            kernels::kmeanspp(data.points(), 4000, 4, 5, 3, &mut rng, &mut counters);
+        let reference = kernels::lloyd(
+            data.points(),
+            &seed,
+            4000,
+            4,
+            5,
+            Default::default(),
+            None,
+            &mut counters,
+        );
+        // Big-means should land within 25% of a full-data K-means run.
+        assert!(
+            r.objective <= reference.objective * 1.25,
+            "bigmeans {} vs reference {}",
+            r.objective,
+            reference.objective
+        );
+    }
+
+    #[test]
+    fn improvements_monotone_and_counted() {
+        let data = blobs(2000, 3, 2);
+        let bm = BigMeans::new(quick_config(3, 256, 20));
+        let r = bm.run(&data).unwrap();
+        assert!(r.improvements >= 1);
+        assert!(r.counters.chunks == 20);
+        assert!(r.counters.distance_evals > 0);
+        assert!(r.best_chunk_objective.is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed_sequential() {
+        let data = blobs(1500, 3, 3);
+        let a = BigMeans::new(quick_config(3, 200, 10)).run(&data).unwrap();
+        let b = BigMeans::new(quick_config(3, 200, 10)).run(&data).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.objective, b.objective);
+        assert_eq!(a.counters, b.counters);
+    }
+
+    #[test]
+    fn skip_final_assignment() {
+        let data = blobs(1000, 2, 4);
+        let mut cfg = quick_config(2, 128, 5);
+        cfg.skip_final_assignment = true;
+        let r = BigMeans::new(cfg).run(&data).unwrap();
+        assert!(r.objective.is_nan());
+        assert!(r.assignment.is_empty());
+        assert!(r.best_chunk_objective.is_finite());
+    }
+
+    #[test]
+    fn chunk_bigger_than_dataset_clamps() {
+        let data = blobs(300, 2, 5);
+        let r = BigMeans::new(quick_config(2, 10_000, 3)).run(&data).unwrap();
+        assert!(r.objective.is_finite());
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let data = blobs(100, 2, 6);
+        let bad = BigMeans::new(quick_config(0, 128, 3));
+        assert!(bad.run(&data).is_err());
+    }
+
+    #[test]
+    fn random_reinit_ablation_runs() {
+        let data = blobs(1000, 3, 7);
+        let mut cfg = quick_config(3, 200, 10);
+        cfg.reinit = ReinitStrategy::Random;
+        let r = BigMeans::new(cfg).run(&data).unwrap();
+        assert!(r.objective.is_finite());
+    }
+
+    #[test]
+    fn time_budget_stops() {
+        use std::time::Duration;
+        let data = blobs(2000, 3, 8);
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxTime(Duration::from_millis(50)))
+            .with_parallel(ParallelMode::Sequential);
+        let t = std::time::Instant::now();
+        let r = BigMeans::new(cfg).run(&data).unwrap();
+        assert!(t.elapsed() < Duration::from_secs(5));
+        assert!(r.counters.chunks >= 1);
+    }
+}

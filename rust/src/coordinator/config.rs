@@ -1,0 +1,159 @@
+//! Big-means configuration (Algorithm 3's knobs plus engine selection).
+
+use std::time::Duration;
+
+use crate::kernels::lloyd::LloydParams;
+
+/// How degenerate (empty) centroids are reinitialised between chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReinitStrategy {
+    /// K-means++ D² seeding on the current chunk (the paper's choice).
+    KmeansPP,
+    /// Uniform random points from the chunk (ablation comparator).
+    Random,
+}
+
+/// Which compute engine runs the chunk-local search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Native rust kernels (any shape).
+    Native,
+    /// AOT-compiled HLO via PJRT (pads to the nearest artifact variant);
+    /// falls back to native when no variant fits.
+    Pjrt,
+}
+
+/// Stop condition for the global search phase.
+#[derive(Clone, Copy, Debug)]
+pub enum StopCondition {
+    /// Wall-clock budget (paper's `cpu_max`).
+    MaxTime(Duration),
+    /// Maximum number of chunks (paper's alternative stop rule).
+    MaxChunks(u64),
+    /// Whichever of the two trips first.
+    TimeOrChunks(Duration, u64),
+}
+
+/// Parallelisation mode (paper §3, two strategies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Sequential chunk loop; K-means/K-means++ internally parallel
+    /// (strategy 1 — what the paper's experiments used).
+    InnerParallel,
+    /// Chunks processed concurrently by workers sharing the incumbent
+    /// (strategy 2).
+    ChunkParallel,
+    /// Fully sequential (for deterministic tests and ablations).
+    Sequential,
+}
+
+/// Full Big-means configuration.
+#[derive(Clone, Debug)]
+pub struct BigMeansConfig {
+    /// Number of clusters `k`.
+    pub k: usize,
+    /// Chunk size `s` (must be ≤ m; clamped at runtime).
+    pub chunk_size: usize,
+    /// Stop condition for the search phase.
+    pub stop: StopCondition,
+    /// Lloyd convergence parameters for chunk-local search.
+    pub lloyd: LloydParams,
+    /// Degenerate-centroid reinitialisation strategy.
+    pub reinit: ReinitStrategy,
+    /// K-means++ candidate count per draw (paper uses 3).
+    pub candidates: usize,
+    /// Engine for the chunk-local search.
+    pub engine: Engine,
+    /// Parallelisation mode.
+    pub parallel: ParallelMode,
+    /// Worker threads (`InnerParallel`: kernel threads; `ChunkParallel`:
+    /// concurrent chunks). 0 = machine default.
+    pub threads: usize,
+    /// RNG seed (chunks, seeding draws).
+    pub seed: u64,
+    /// Skip the final full-dataset assignment (paper §4.1 notes it is
+    /// optional for some applications).
+    pub skip_final_assignment: bool,
+}
+
+impl BigMeansConfig {
+    /// Paper-default configuration for a given `k` and chunk size.
+    pub fn new(k: usize, chunk_size: usize) -> Self {
+        BigMeansConfig {
+            k,
+            chunk_size,
+            stop: StopCondition::TimeOrChunks(Duration::from_secs(10), 10_000),
+            lloyd: LloydParams::default(),
+            reinit: ReinitStrategy::KmeansPP,
+            candidates: 3,
+            engine: Engine::Native,
+            parallel: ParallelMode::InnerParallel,
+            threads: 0,
+            seed: 0xB16_3EA5,
+            skip_final_assignment: false,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_stop(mut self, stop: StopCondition) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    pub fn with_engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_parallel(mut self, mode: ParallelMode) -> Self {
+        self.parallel = mode;
+        self
+    }
+
+    /// Validate against a dataset shape.
+    pub fn validate(&self, m: usize, _n: usize) -> Result<(), String> {
+        if self.k == 0 {
+            return Err("k must be ≥ 1".into());
+        }
+        if self.chunk_size == 0 {
+            return Err("chunk_size must be ≥ 1".into());
+        }
+        if self.k > self.chunk_size.min(m) {
+            return Err(format!(
+                "k={} exceeds min(chunk_size, m)={}",
+                self.k,
+                self.chunk_size.min(m)
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = BigMeansConfig::new(5, 4096);
+        assert_eq!(c.candidates, 3);
+        assert_eq!(c.reinit, ReinitStrategy::KmeansPP);
+        assert!((c.lloyd.tol - 1e-4).abs() < 1e-12);
+        assert_eq!(c.lloyd.max_iters, 300);
+    }
+
+    #[test]
+    fn validation() {
+        let c = BigMeansConfig::new(5, 4096);
+        assert!(c.validate(10_000, 8).is_ok());
+        assert!(c.validate(3, 8).is_err()); // k > m
+        let bad = BigMeansConfig::new(0, 4096);
+        assert!(bad.validate(100, 8).is_err());
+        let bad2 = BigMeansConfig::new(10, 4);
+        assert!(bad2.validate(100, 8).is_err()); // k > s
+    }
+}

@@ -1,0 +1,123 @@
+//! Incumbent solution management: the "keep the best" state of Algorithm 3.
+//!
+//! The incumbent is the best set of centroids found so far, judged by the
+//! *chunk* objective (the paper's point: no global objective is ever
+//! computed during the search). [`SharedIncumbent`] wraps it for the
+//! chunk-parallel pipeline: lock-free reads of a versioned snapshot via
+//! `arc-swap`-style atomic pointer replacement built on `Mutex` +
+//! generation counter (reads clone an `Arc`, never blocking writers long).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A candidate / incumbent solution.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Row-major `(k, n)` centroids. Degenerate slots hold the position
+    /// they had when they last emptied (or the PAD sentinel on the very
+    /// first chunk).
+    pub centroids: Vec<f32>,
+    /// Chunk objective that earned incumbency.
+    pub objective: f64,
+    /// Which centroids are currently degenerate.
+    pub degenerate: Vec<usize>,
+}
+
+impl Solution {
+    /// The "all degenerate" initial incumbent of Algorithm 3 (line 2).
+    pub fn all_degenerate(k: usize, n: usize) -> Self {
+        Solution {
+            centroids: vec![0.0; k * n],
+            objective: f64::INFINITY,
+            degenerate: (0..k).collect(),
+        }
+    }
+
+    pub fn is_initial(&self) -> bool {
+        self.objective.is_infinite()
+    }
+}
+
+/// Thread-shared incumbent with versioning.
+pub struct SharedIncumbent {
+    inner: Mutex<Arc<Solution>>,
+    version: AtomicU64,
+}
+
+impl SharedIncumbent {
+    pub fn new(initial: Solution) -> Self {
+        SharedIncumbent {
+            inner: Mutex::new(Arc::new(initial)),
+            version: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot the current incumbent (cheap Arc clone).
+    pub fn snapshot(&self) -> Arc<Solution> {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Monotone version counter — bumps on every accepted improvement.
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Offer a candidate; accepted iff strictly better than the incumbent
+    /// at comparison time ("keep the best"). Returns true if accepted.
+    pub fn offer(&self, candidate: Solution) -> bool {
+        let mut guard = self.inner.lock().unwrap();
+        if candidate.objective < guard.objective {
+            *guard = Arc::new(candidate);
+            self.version.fetch_add(1, Ordering::Release);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sol(obj: f64) -> Solution {
+        Solution { centroids: vec![0.0; 4], objective: obj, degenerate: vec![] }
+    }
+
+    #[test]
+    fn initial_is_all_degenerate_and_infinite() {
+        let s = Solution::all_degenerate(3, 2);
+        assert!(s.is_initial());
+        assert_eq!(s.degenerate, vec![0, 1, 2]);
+        assert_eq!(s.centroids.len(), 6);
+    }
+
+    #[test]
+    fn keep_the_best_only_improvements() {
+        let inc = SharedIncumbent::new(sol(10.0));
+        assert!(!inc.offer(sol(10.0))); // ties rejected
+        assert!(!inc.offer(sol(12.0)));
+        assert_eq!(inc.version(), 0);
+        assert!(inc.offer(sol(9.0)));
+        assert_eq!(inc.version(), 1);
+        assert_eq!(inc.snapshot().objective, 9.0);
+    }
+
+    #[test]
+    fn concurrent_offers_keep_minimum() {
+        let inc = Arc::new(SharedIncumbent::new(Solution::all_degenerate(2, 2)));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let inc = Arc::clone(&inc);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    inc.offer(sol((t * 100 + i) as f64 + 1.0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(inc.snapshot().objective, 1.0);
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer 3: the Big-means coordinator — the paper's system contribution.
+//!
+//! * [`bigmeans`] — Algorithm 3, sequential chunk pipeline;
+//! * [`parallel`] — chunk-parallel pipeline (paper's strategy 2);
+//! * [`stream`] — unbounded-stream variant with a backpressured queue;
+//! * [`incumbent`] — "keep the best" state, shared-memory safe;
+//! * [`sampler`] — uniform chunk sampling;
+//! * [`solver`] — the engine abstraction (native kernels / PJRT);
+//! * [`stop`] / [`config`] — stop rules and configuration.
+
+pub mod bigmeans;
+pub mod config;
+pub mod incumbent;
+pub mod parallel;
+pub mod sampler;
+pub mod solver;
+pub mod stop;
+pub mod stream;
+pub mod vns;
+
+pub use bigmeans::{BigMeans, BigMeansResult};
+pub use config::{BigMeansConfig, Engine, ParallelMode, ReinitStrategy, StopCondition};
+pub use solver::{ChunkSolver, NativeSolver};
+pub use stream::{ChunkQueue, StreamChunk, StreamingBigMeans};
+pub use vns::{run_vns, VnsConfig, VnsResult};

@@ -1,0 +1,86 @@
+//! Chunk sampling: uniform random samples from the dataset (the paper's
+//! sampling method — O(s) per chunk, no pass over the full data, and the
+//! reason Big-means is order-independent, §3).
+
+use crate::data::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Draws uniform chunks from a dataset. Reusable buffer to keep the chunk
+/// loop allocation-free after warmup.
+pub struct ChunkSampler {
+    chunk_size: usize,
+    buf: Vec<f32>,
+    indices: Vec<usize>,
+}
+
+impl ChunkSampler {
+    pub fn new(chunk_size: usize, n: usize) -> Self {
+        ChunkSampler {
+            chunk_size,
+            buf: Vec::with_capacity(chunk_size * n),
+            indices: Vec::new(),
+        }
+    }
+
+    /// Sample a chunk of `min(chunk_size, m)` distinct rows into the
+    /// internal buffer; returns `(points, rows)`.
+    pub fn sample<'a>(&'a mut self, data: &Dataset, rng: &mut Rng) -> (&'a [f32], usize) {
+        let m = data.m();
+        let n = data.n();
+        let s = self.chunk_size.min(m);
+        self.indices = rng.sample_indices(m, s);
+        self.buf.clear();
+        for &i in &self.indices {
+            self.buf.extend_from_slice(&data.points()[i * n..(i + 1) * n]);
+        }
+        (&self.buf, s)
+    }
+
+    /// Row indices of the most recent chunk.
+    pub fn last_indices(&self) -> &[usize] {
+        &self.indices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_rows_come_from_dataset() {
+        let d = Dataset::from_vec("t", (0..40).map(|x| x as f32).collect(), 10, 4);
+        let mut s = ChunkSampler::new(4, 4);
+        let mut rng = Rng::new(1);
+        let (chunk, rows) = s.sample(&d, &mut rng);
+        assert_eq!(rows, 4);
+        let chunk = chunk.to_vec();
+        for (slot, &i) in s.last_indices().iter().enumerate() {
+            assert_eq!(
+                &chunk[slot * 4..slot * 4 + 4],
+                &d.points()[i * 4..i * 4 + 4]
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_clamped_to_m() {
+        let d = Dataset::from_vec("t", vec![1.0; 12], 3, 4);
+        let mut s = ChunkSampler::new(100, 4);
+        let mut rng = Rng::new(2);
+        let (_, rows) = s.sample(&d, &mut rng);
+        assert_eq!(rows, 3);
+    }
+
+    #[test]
+    fn chunks_vary_between_draws() {
+        let d = Dataset::from_vec("t", (0..2000).map(|x| x as f32).collect(), 500, 4);
+        let mut s = ChunkSampler::new(10, 4);
+        let mut rng = Rng::new(3);
+        let first: Vec<usize> = {
+            s.sample(&d, &mut rng);
+            s.last_indices().to_vec()
+        };
+        s.sample(&d, &mut rng);
+        assert_ne!(first, s.last_indices());
+    }
+}

@@ -1,0 +1,145 @@
+//! Chunk-solver abstraction: the engine that runs the MSSC local search on
+//! one chunk. Two implementations share exact semantics:
+//!
+//! * [`NativeSolver`] — rust kernels (any shape, optional inner parallelism);
+//! * `runtime::PjrtSolver` — the AOT HLO executables via the PJRT C API.
+
+use crate::kernels::{self, LloydParams, LloydResult};
+use crate::metrics::Counters;
+use crate::util::threadpool::ThreadPool;
+
+/// Engine interface for chunk-local search and assignment passes.
+///
+/// Not `Send`/`Sync`: the PJRT client is single-threaded (`Rc` inside the
+/// `xla` crate). The chunk-parallel pipeline (strategy 2) therefore builds
+/// its own per-worker [`NativeSolver`]s instead of sharing a trait object.
+pub trait ChunkSolver {
+    /// Lloyd local search on `points` (`rows×n`) seeded by `seed_centroids`
+    /// (`k×n`). Returns converged centroids + stats.
+    fn lloyd(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        seed_centroids: &[f32],
+        counters: &mut Counters,
+    ) -> LloydResult;
+
+    /// Nearest-centroid assignment: `(labels, min_sq_dists)`.
+    fn assign(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        centroids: &[f32],
+        counters: &mut Counters,
+    ) -> (Vec<u32>, Vec<f32>);
+
+    /// Human-readable engine name (for reports).
+    fn name(&self) -> &'static str;
+}
+
+/// Native rust engine.
+pub struct NativeSolver {
+    pub params: LloydParams,
+    pub pool: Option<ThreadPool>,
+}
+
+impl NativeSolver {
+    pub fn new(params: LloydParams, threads: usize) -> Self {
+        let pool = match threads {
+            1 => None,
+            0 => Some(ThreadPool::with_default_size()),
+            t => Some(ThreadPool::new(t)),
+        };
+        NativeSolver { params, pool }
+    }
+
+    /// Fully sequential solver (deterministic tests).
+    pub fn sequential(params: LloydParams) -> Self {
+        NativeSolver { params, pool: None }
+    }
+}
+
+impl ChunkSolver for NativeSolver {
+    fn lloyd(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        seed_centroids: &[f32],
+        counters: &mut Counters,
+    ) -> LloydResult {
+        kernels::lloyd(
+            points,
+            seed_centroids,
+            rows,
+            n,
+            k,
+            self.params,
+            self.pool.as_ref(),
+            counters,
+        )
+    }
+
+    fn assign(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        centroids: &[f32],
+        counters: &mut Counters,
+    ) -> (Vec<u32>, Vec<f32>) {
+        match &self.pool {
+            Some(pool) if rows >= 4096 => {
+                let out = kernels::assign_accumulate_parallel(
+                    pool, points, centroids, rows, n, k, counters,
+                );
+                (out.labels, out.mins)
+            }
+            _ => kernels::assign_only(points, centroids, rows, n, k, counters),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_lloyd_improves_seed() {
+        let solver = NativeSolver::sequential(LloydParams::default());
+        let pts: Vec<f32> = (0..100)
+            .flat_map(|i| {
+                let b = if i < 50 { 0.0 } else { 10.0 };
+                [b + (i % 5) as f32 * 0.01, b]
+            })
+            .collect();
+        let seed = vec![1.0f32, 1.0, 9.0, 9.0];
+        let mut c = Counters::new();
+        let r = solver.lloyd(&pts, 100, 2, 2, &seed, &mut c);
+        let mut c2 = Counters::new();
+        let before = kernels::objective(&pts, &seed, 100, 2, 2, &mut c2);
+        assert!(r.objective <= before);
+        assert_eq!(solver.name(), "native");
+    }
+
+    #[test]
+    fn native_assign_matches_kernels() {
+        let solver = NativeSolver::sequential(LloydParams::default());
+        let pts = vec![0.0f32, 0.0, 10.0, 10.0];
+        let cs = vec![0.0f32, 0.0, 9.0, 9.0];
+        let mut c = Counters::new();
+        let (labels, mins) = solver.assign(&pts, 2, 2, 2, &cs, &mut c);
+        assert_eq!(labels, vec![0, 1]);
+        assert_eq!(mins, vec![0.0, 2.0]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Stop-condition evaluation for the Big-means search phase.
+
+use std::time::Instant;
+
+use crate::coordinator::config::StopCondition;
+
+/// Tracks elapsed time and chunk count against a [`StopCondition`].
+#[derive(Debug)]
+pub struct StopState {
+    start: Instant,
+    chunks: u64,
+    condition: StopCondition,
+}
+
+impl StopState {
+    pub fn new(condition: StopCondition) -> Self {
+        StopState { start: Instant::now(), chunks: 0, condition }
+    }
+
+    /// Record one processed chunk.
+    pub fn record_chunk(&mut self) {
+        self.chunks += 1;
+    }
+
+    pub fn chunks(&self) -> u64 {
+        self.chunks
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Should the search stop now?
+    pub fn should_stop(&self) -> bool {
+        match self.condition {
+            StopCondition::MaxTime(t) => self.start.elapsed() >= t,
+            StopCondition::MaxChunks(c) => self.chunks >= c,
+            StopCondition::TimeOrChunks(t, c) => {
+                self.start.elapsed() >= t || self.chunks >= c
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn chunk_limit() {
+        let mut s = StopState::new(StopCondition::MaxChunks(3));
+        assert!(!s.should_stop());
+        for _ in 0..3 {
+            s.record_chunk();
+        }
+        assert!(s.should_stop());
+        assert_eq!(s.chunks(), 3);
+    }
+
+    #[test]
+    fn time_limit() {
+        let s = StopState::new(StopCondition::MaxTime(Duration::from_millis(1)));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(s.should_stop());
+    }
+
+    #[test]
+    fn combined_trips_on_either() {
+        let mut s = StopState::new(StopCondition::TimeOrChunks(
+            Duration::from_secs(3600),
+            2,
+        ));
+        assert!(!s.should_stop());
+        s.record_chunk();
+        s.record_chunk();
+        assert!(s.should_stop());
+    }
+}

@@ -1,0 +1,266 @@
+//! Streaming Big-means: clustering an unbounded data stream (paper §4.1:
+//! "the analyzed dataset can be continuously replenished by new data
+//! portions … the principle of decomposition and the iterative improvement
+//! nature of our algorithm allows one to obtain accurate clustering results
+//! within a predefined time frame even for an infinitely large dataset").
+//!
+//! A bounded chunk queue connects a producer (the stream source) to the
+//! Big-means consumer loop. Backpressure: when the queue is full the
+//! producer blocks — the paper's "process as many portions as the time
+//! budget allows" semantics fall out naturally.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::bigmeans::reseed;
+use crate::coordinator::config::BigMeansConfig;
+use crate::coordinator::incumbent::Solution;
+use crate::coordinator::solver::{ChunkSolver, NativeSolver};
+use crate::coordinator::stop::StopState;
+use crate::kernels::update::degenerate_indices;
+use crate::metrics::Counters;
+use crate::util::rng::Rng;
+
+/// A chunk of streamed points (row-major `rows × n`).
+#[derive(Clone, Debug)]
+pub struct StreamChunk {
+    pub points: Vec<f32>,
+    pub rows: usize,
+}
+
+/// Bounded blocking queue of chunks.
+pub struct ChunkQueue {
+    inner: Mutex<QueueState>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct QueueState {
+    items: VecDeque<StreamChunk>,
+    closed: bool,
+}
+
+impl ChunkQueue {
+    pub fn new(capacity: usize) -> Arc<Self> {
+        Arc::new(ChunkQueue {
+            inner: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            capacity: capacity.max(1),
+        })
+    }
+
+    /// Blocking push; returns false if the queue is closed.
+    pub fn push(&self, chunk: StreamChunk) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        while st.items.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(chunk);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; None when closed and drained.
+    pub fn pop(&self) -> Option<StreamChunk> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(c) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(c);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers stop, consumers drain.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of a streaming run.
+#[derive(Clone, Debug)]
+pub struct StreamResult {
+    pub centroids: Vec<f32>,
+    pub best_chunk_objective: f64,
+    pub chunks_processed: u64,
+    pub improvements: u64,
+    pub counters: Counters,
+}
+
+/// Streaming Big-means consumer: pulls chunks from the queue, improves the
+/// incumbent, stops on the configured condition or when the stream closes.
+pub struct StreamingBigMeans {
+    config: BigMeansConfig,
+    solver: Box<dyn ChunkSolver>,
+    n: usize,
+}
+
+impl StreamingBigMeans {
+    pub fn new(config: BigMeansConfig, n: usize) -> Self {
+        let solver = Box::new(NativeSolver::new(config.lloyd, config.threads));
+        StreamingBigMeans { config, solver, n }
+    }
+
+    /// Consume the queue until it closes or the stop condition trips.
+    pub fn run(&self, queue: &ChunkQueue) -> StreamResult {
+        let cfg = &self.config;
+        let (n, k) = (self.n, cfg.k);
+        let mut rng = Rng::new(cfg.seed);
+        let mut counters = Counters::new();
+        let mut incumbent = Solution::all_degenerate(k, n);
+        let mut improvements = 0u64;
+        let mut stop = StopState::new(cfg.stop);
+
+        while !stop.should_stop() {
+            let Some(chunk) = queue.pop() else { break };
+            if chunk.rows < k {
+                continue; // too small to carry k clusters — skip, keep draining
+            }
+            debug_assert_eq!(chunk.points.len(), chunk.rows * n);
+            let mut seed = incumbent.centroids.clone();
+            reseed(
+                cfg,
+                &chunk.points,
+                chunk.rows,
+                n,
+                k,
+                &mut seed,
+                &incumbent.degenerate,
+                &mut rng,
+                &mut counters,
+            );
+            let result =
+                self.solver
+                    .lloyd(&chunk.points, chunk.rows, n, k, &seed, &mut counters);
+            counters.chunk_iterations += result.iters as u64;
+            counters.chunks += 1;
+            stop.record_chunk();
+            if result.objective < incumbent.objective {
+                incumbent = Solution {
+                    degenerate: degenerate_indices(&result.counts),
+                    centroids: result.centroids,
+                    objective: result.objective,
+                };
+                improvements += 1;
+            }
+        }
+        StreamResult {
+            centroids: incumbent.centroids,
+            best_chunk_objective: incumbent.objective,
+            chunks_processed: counters.chunks,
+            improvements,
+            counters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{ParallelMode, StopCondition};
+    use crate::util::rng::Rng;
+
+    fn blob_chunk(rng: &mut Rng, rows: usize) -> StreamChunk {
+        let centers = [(0.0f32, 0.0f32), (30.0, 30.0), (0.0, 30.0)];
+        let mut points = Vec::with_capacity(rows * 2);
+        for _ in 0..rows {
+            let (cx, cy) = centers[rng.usize(3)];
+            points.push(cx + 0.3 * rng.gaussian() as f32);
+            points.push(cy + 0.3 * rng.gaussian() as f32);
+        }
+        StreamChunk { points, rows }
+    }
+
+    #[test]
+    fn queue_backpressure_and_close() {
+        let q = ChunkQueue::new(2);
+        assert!(q.push(StreamChunk { points: vec![0.0; 2], rows: 1 }));
+        assert!(q.push(StreamChunk { points: vec![0.0; 2], rows: 1 }));
+        assert_eq!(q.len(), 2);
+        // Producer would block now; close from another thread unblocks.
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(StreamChunk { points: vec![0.0; 2], rows: 1 }));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(!h.join().unwrap(), "push into closed queue must return false");
+        // Drain the two queued chunks, then None.
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_some());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn streaming_improves_over_chunks() {
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(50))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(1);
+        let engine = StreamingBigMeans::new(cfg, 2);
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            let mut rng = Rng::new(42);
+            for _ in 0..30 {
+                if !qp.push(blob_chunk(&mut rng, 256)) {
+                    break;
+                }
+            }
+            qp.close();
+        });
+        let r = engine.run(&q);
+        producer.join().unwrap();
+        assert_eq!(r.chunks_processed, 30);
+        assert!(r.improvements >= 1);
+        assert!(r.best_chunk_objective.is_finite());
+        // Centroids should sit near the three stream blobs.
+        let mut found = 0;
+        for &(cx, cy) in &[(0.0f32, 0.0f32), (30.0, 30.0), (0.0, 30.0)] {
+            for j in 0..3 {
+                let c = &r.centroids[j * 2..j * 2 + 2];
+                if (c[0] - cx).abs() < 2.0 && (c[1] - cy).abs() < 2.0 {
+                    found += 1;
+                    break;
+                }
+            }
+        }
+        assert_eq!(found, 3, "centroids {:?}", r.centroids);
+    }
+
+    #[test]
+    fn undersized_chunks_skipped() {
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(10))
+            .with_parallel(ParallelMode::Sequential);
+        let engine = StreamingBigMeans::new(cfg, 2);
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(9);
+            qp.push(StreamChunk { points: vec![1.0; 4], rows: 2 }); // < k
+            qp.push(blob_chunk(&mut rng, 64));
+            qp.close();
+        });
+        let r = engine.run(&q);
+        assert_eq!(r.chunks_processed, 1);
+    }
+}

@@ -1,0 +1,76 @@
+//! In-memory dataset: a named `(m, n)` matrix of f32 features.
+
+use crate::util::matrix::Matrix;
+
+/// A dataset to cluster: `m` points in `n` dimensions, row-major.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    data: Matrix,
+}
+
+impl Dataset {
+    pub fn new(name: impl Into<String>, data: Matrix) -> Self {
+        Dataset { name: name.into(), data }
+    }
+
+    pub fn from_vec(name: impl Into<String>, data: Vec<f32>, m: usize, n: usize) -> Self {
+        Dataset::new(name, Matrix::from_vec(data, m, n))
+    }
+
+    /// Number of points (paper's `m`).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.data.rows()
+    }
+
+    /// Feature dimension (paper's `n`).
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.data.cols()
+    }
+
+    /// Flat row-major feature buffer.
+    #[inline]
+    pub fn points(&self) -> &[f32] {
+        self.data.as_slice()
+    }
+
+    #[inline]
+    pub fn matrix(&self) -> &Matrix {
+        &self.data
+    }
+
+    pub fn matrix_mut(&mut self) -> &mut Matrix {
+        &mut self.data
+    }
+
+    /// Gather a sample of rows into a new flat buffer.
+    pub fn gather(&self, indices: &[usize]) -> Vec<f32> {
+        let n = self.n();
+        let mut out = Vec::with_capacity(indices.len() * n);
+        for &i in indices {
+            out.extend_from_slice(self.data.row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let d = Dataset::from_vec("t", vec![1., 2., 3., 4., 5., 6.], 3, 2);
+        assert_eq!(d.m(), 3);
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.points().len(), 6);
+    }
+
+    #[test]
+    fn gather_flattens_rows() {
+        let d = Dataset::from_vec("t", vec![1., 2., 3., 4., 5., 6.], 3, 2);
+        assert_eq!(d.gather(&[2, 0]), vec![5., 6., 1., 2.]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Dataset IO: CSV (headerless or headered numeric) and a fast flat binary
+//! format (`.fbin`: u32 m, u32 n, then m·n little-endian f32).
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::Dataset;
+
+/// Load a numeric CSV. Skips a header row if the first field of the first
+/// line doesn't parse as a number. `limit` optionally caps rows read.
+pub fn load_csv(path: &Path, limit: Option<usize>) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut data: Vec<f32> = Vec::new();
+    let mut n = 0usize;
+    let mut m = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(',').map(|f| f.trim()).collect();
+        if m == 0 && n == 0 {
+            // Header detection: first field not numeric → skip.
+            if fields[0].parse::<f32>().is_err() {
+                continue;
+            }
+            n = fields.len();
+        }
+        if fields.len() != n {
+            bail!(
+                "{}:{}: expected {} fields, got {}",
+                path.display(),
+                lineno + 1,
+                n,
+                fields.len()
+            );
+        }
+        for f in &fields {
+            data.push(
+                f.parse::<f32>()
+                    .with_context(|| format!("{}:{}: bad number '{f}'", path.display(), lineno + 1))?,
+            );
+        }
+        m += 1;
+        if let Some(cap) = limit {
+            if m >= cap {
+                break;
+            }
+        }
+    }
+    if m == 0 {
+        bail!("{}: no data rows", path.display());
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    Ok(Dataset::from_vec(name, data, m, n))
+}
+
+/// Write the flat binary format.
+pub fn save_fbin(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(&(ds.m() as u32).to_le_bytes())?;
+    w.write_all(&(ds.n() as u32).to_le_bytes())?;
+    for &v in ds.points() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the flat binary format.
+pub fn load_fbin(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut hdr = [0u8; 8];
+    r.read_exact(&mut hdr).context("fbin header")?;
+    let m = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let n = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let mut buf = vec![0u8; m * n * 4];
+    r.read_exact(&mut buf).context("fbin body truncated")?;
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "fbin".into());
+    Ok(Dataset::from_vec(name, data, m, n))
+}
+
+/// Load by extension: `.csv` or `.fbin`.
+pub fn load(path: &Path) -> Result<Dataset> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("csv") => load_csv(path, None),
+        Some("fbin") => load_fbin(path),
+        other => bail!("unsupported dataset extension {:?}", other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bigmeans_loader_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip_with_header() {
+        let p = tmp("a.csv");
+        std::fs::write(&p, "x,y\n1.5,2\n3,4.25\n").unwrap();
+        let d = load_csv(&p, None).unwrap();
+        assert_eq!(d.m(), 2);
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.points(), &[1.5, 2.0, 3.0, 4.25]);
+    }
+
+    #[test]
+    fn csv_headerless_and_limit() {
+        let p = tmp("b.csv");
+        std::fs::write(&p, "1,2\n3,4\n5,6\n").unwrap();
+        let d = load_csv(&p, Some(2)).unwrap();
+        assert_eq!(d.m(), 2);
+    }
+
+    #[test]
+    fn csv_ragged_rejected() {
+        let p = tmp("c.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(load_csv(&p, None).is_err());
+    }
+
+    #[test]
+    fn fbin_roundtrip() {
+        let p = tmp("d.fbin");
+        let d = Dataset::from_vec("d", vec![1.0, -2.5, 3.25, 4.0], 2, 2);
+        save_fbin(&d, &p).unwrap();
+        let back = load_fbin(&p).unwrap();
+        assert_eq!(back.m(), 2);
+        assert_eq!(back.n(), 2);
+        assert_eq!(back.points(), d.points());
+    }
+
+    #[test]
+    fn fbin_truncated_rejected() {
+        let p = tmp("e.fbin");
+        std::fs::write(&p, [2u8, 0, 0, 0, 2, 0, 0, 0, 1, 2, 3]).unwrap();
+        assert!(load_fbin(&p).is_err());
+    }
+}

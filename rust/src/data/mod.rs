@@ -1,0 +1,12 @@
+//! Data subsystem: datasets, synthetic generators mirroring the paper's
+//! evaluation suite, normalization, and file IO.
+
+pub mod catalog;
+pub mod dataset;
+pub mod loader;
+pub mod normalize;
+pub mod synth;
+
+pub use catalog::{catalog, find, CatalogEntry, PAPER_K_GRID};
+pub use dataset::Dataset;
+pub use synth::Synth;

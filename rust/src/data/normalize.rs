@@ -1,0 +1,97 @@
+//! Feature normalization. The paper evaluates min–max normalized variants
+//! of several datasets ("Min-max scaling was used for normalization of
+//! data set values for better clusterization").
+
+use crate::util::matrix::Matrix;
+
+/// In-place min–max scaling per feature column to [0, 1]. Constant columns
+/// map to 0. Returns the per-column (min, max) pairs for inverse mapping.
+pub fn min_max_normalize(data: &mut Matrix) -> Vec<(f32, f32)> {
+    let (m, n) = (data.rows(), data.cols());
+    let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); n];
+    for i in 0..m {
+        let row = data.row(i);
+        for j in 0..n {
+            let v = row[j];
+            if v < ranges[j].0 {
+                ranges[j].0 = v;
+            }
+            if v > ranges[j].1 {
+                ranges[j].1 = v;
+            }
+        }
+    }
+    for i in 0..m {
+        let row = data.row_mut(i);
+        for j in 0..n {
+            let (lo, hi) = ranges[j];
+            let span = hi - lo;
+            row[j] = if span > 0.0 { (row[j] - lo) / span } else { 0.0 };
+        }
+    }
+    ranges
+}
+
+/// Z-score standardization per column (mean 0, std 1). Constant columns
+/// map to 0. Provided for API completeness; the paper uses min–max.
+pub fn standardize(data: &mut Matrix) -> Vec<(f32, f32)> {
+    let (m, n) = (data.rows(), data.cols());
+    let mut stats = vec![(0f32, 0f32); n];
+    for j in 0..n {
+        let mut sum = 0f64;
+        for i in 0..m {
+            sum += data.get(i, j) as f64;
+        }
+        let mean = sum / m as f64;
+        let mut var = 0f64;
+        for i in 0..m {
+            let d = data.get(i, j) as f64 - mean;
+            var += d * d;
+        }
+        let std = (var / m as f64).sqrt();
+        stats[j] = (mean as f32, std as f32);
+    }
+    for i in 0..m {
+        for j in 0..n {
+            let (mean, std) = stats[j];
+            let v = data.get(i, j);
+            data.set(i, j, if std > 0.0 { (v - mean) / std } else { 0.0 });
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_max_maps_to_unit_interval() {
+        let mut m = Matrix::from_vec(vec![0.0, 10.0, 5.0, 20.0, 10.0, 30.0], 3, 2);
+        let ranges = min_max_normalize(&mut m);
+        assert_eq!(ranges, vec![(0.0, 10.0), (10.0, 30.0)]);
+        assert_eq!(m.row(0), &[0.0, 0.0]);
+        assert_eq!(m.row(1), &[0.5, 0.5]);
+        assert_eq!(m.row(2), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn constant_column_maps_to_zero() {
+        let mut m = Matrix::from_vec(vec![7.0, 1.0, 7.0, 2.0], 2, 2);
+        min_max_normalize(&mut m);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2);
+        standardize(&mut m);
+        for j in 0..2 {
+            let mean: f32 = (0..3).map(|i| m.get(i, j)).sum::<f32>() / 3.0;
+            let var: f32 = (0..3).map(|i| m.get(i, j).powi(2)).sum::<f32>() / 3.0;
+            assert!(mean.abs() < 1e-6);
+            assert!((var - 1.0).abs() < 1e-5);
+        }
+    }
+}

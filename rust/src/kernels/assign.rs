@@ -1,0 +1,257 @@
+//! Assignment step: nearest-centroid labels + per-cluster reduction.
+//!
+//! Two code paths with identical semantics (cross-checked in tests):
+//!
+//! * [`assign_accumulate`] — single-threaded blocked panel evaluation using
+//!   the same `‖x‖² − 2x·c + ‖c‖²` decomposition as the Pallas kernel;
+//! * [`assign_accumulate_parallel`] — row-blocked across a [`ThreadPool`],
+//!   each worker reducing a private `(k, n)` partial that is merged at the
+//!   end (the paper's parallelisation strategy 1).
+
+use crate::metrics::Counters;
+use crate::util::threadpool::ThreadPool;
+
+use super::distance::{nearest, sq_dist_panel, sq_norm};
+
+/// Rows per panel block — sized so a `(BLOCK, k)` distance panel stays in L2.
+pub const BLOCK_ROWS: usize = 256;
+
+/// Output of the fused assignment step.
+#[derive(Clone, Debug)]
+pub struct AssignOut {
+    /// Nearest-centroid index per point.
+    pub labels: Vec<u32>,
+    /// Squared distance to the chosen centroid per point.
+    pub mins: Vec<f32>,
+    /// Per-cluster coordinate sums, row-major `(k, n)`.
+    pub sums: Vec<f64>,
+    /// Per-cluster sizes.
+    pub counts: Vec<u64>,
+    /// Chunk SSE = Σ mins (f64 accumulation).
+    pub objective: f64,
+}
+
+/// Fused assignment + reduction over `points` (`m×n`) against `centroids`
+/// (`k×n`). Counts `m·k` distance evaluations.
+pub fn assign_accumulate(
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    counters: &mut Counters,
+) -> AssignOut {
+    assert_eq!(points.len(), m * n, "points shape");
+    assert_eq!(centroids.len(), k * n, "centroids shape");
+    assert!(k > 0, "k must be positive");
+    let mut labels = vec![0u32; m];
+    let mut mins = vec![0f32; m];
+    let mut sums = vec![0f64; k * n];
+    let mut counts = vec![0u64; k];
+    let mut objective = 0f64;
+
+    let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+    let mut panel = vec![0f32; BLOCK_ROWS * k];
+    let mut x_sq = vec![0f32; BLOCK_ROWS];
+
+    let mut row = 0;
+    while row < m {
+        let rows = BLOCK_ROWS.min(m - row);
+        let block = &points[row * n..(row + rows) * n];
+        for (i, xs) in x_sq.iter_mut().take(rows).enumerate() {
+            *xs = sq_norm(&block[i * n..(i + 1) * n]);
+        }
+        sq_dist_panel(block, &x_sq[..rows], centroids, &c_sq, rows, k, n, &mut panel[..rows * k]);
+        for i in 0..rows {
+            let drow = &panel[i * k..(i + 1) * k];
+            let mut best = 0usize;
+            let mut best_d = drow[0];
+            for (j, &d) in drow.iter().enumerate().skip(1) {
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            let g = row + i;
+            labels[g] = best as u32;
+            mins[g] = best_d;
+            objective += best_d as f64;
+            counts[best] += 1;
+            let srow = &mut sums[best * n..(best + 1) * n];
+            let x = &block[i * n..(i + 1) * n];
+            for (sv, xv) in srow.iter_mut().zip(x) {
+                *sv += *xv as f64;
+            }
+        }
+        row += rows;
+    }
+    counters.add_distance_evals((m * k) as u64);
+    AssignOut { labels, mins, sums, counts, objective }
+}
+
+/// Labels + min-distances only (no reduction) — the final full-dataset
+/// assignment pass and the D² weights for K-means++ use this.
+pub fn assign_only(
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    counters: &mut Counters,
+) -> (Vec<u32>, Vec<f32>) {
+    assert_eq!(points.len(), m * n);
+    assert_eq!(centroids.len(), k * n);
+    let mut labels = vec![0u32; m];
+    let mut mins = vec![0f32; m];
+    for i in 0..m {
+        let (j, d) = nearest(&points[i * n..(i + 1) * n], centroids, k, n);
+        labels[i] = j as u32;
+        mins[i] = d;
+    }
+    counters.add_distance_evals((m * k) as u64);
+    (labels, mins)
+}
+
+/// Parallel fused assignment: row blocks on the pool, partials merged.
+/// Semantically identical to [`assign_accumulate`].
+pub fn assign_accumulate_parallel(
+    pool: &ThreadPool,
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    counters: &mut Counters,
+) -> AssignOut {
+    assert_eq!(points.len(), m * n);
+    assert_eq!(centroids.len(), k * n);
+    let nworkers = pool.size().min(m.max(1));
+    if nworkers <= 1 || m < 2 * BLOCK_ROWS {
+        return assign_accumulate(points, centroids, m, n, k, counters);
+    }
+    let block = m.div_ceil(nworkers);
+    // Each worker gets an owned slice copy-free via raw pointers wrapped in
+    // Arc'd Vec? Simplest safe route: split via chunks and collect partial
+    // outputs with the pool's ordered map.
+    let jobs: Vec<(usize, usize)> = (0..nworkers)
+        .map(|w| (w * block, ((w + 1) * block).min(m)))
+        .filter(|(s, e)| s < e)
+        .collect();
+    // Share inputs across workers without cloning the data.
+    let points_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(points.to_vec());
+    let centroids_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(centroids.to_vec());
+    let partials = pool.map(jobs, move |(start, end)| {
+        let mut local = Counters::new();
+        let rows = end - start;
+        let out = assign_accumulate(
+            &points_arc[start * n..end * n],
+            &centroids_arc,
+            rows,
+            n,
+            k,
+            &mut local,
+        );
+        Some((start, out))
+    });
+    let mut labels = vec![0u32; m];
+    let mut mins = vec![0f32; m];
+    let mut sums = vec![0f64; k * n];
+    let mut counts = vec![0u64; k];
+    let mut objective = 0f64;
+    for part in partials.into_iter().flatten() {
+        let (start, out) = part;
+        let rows = out.labels.len();
+        labels[start..start + rows].copy_from_slice(&out.labels);
+        mins[start..start + rows].copy_from_slice(&out.mins);
+        for (acc, v) in sums.iter_mut().zip(&out.sums) {
+            *acc += *v;
+        }
+        for (acc, v) in counts.iter_mut().zip(&out.counts) {
+            *acc += *v;
+        }
+        objective += out.objective;
+    }
+    counters.add_distance_evals((m * k) as u64);
+    AssignOut { labels, mins, sums, counts, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Vec<f32>, Vec<f32>) {
+        // Two tight blobs around (0,0) and (10,10).
+        let mut pts = Vec::new();
+        for i in 0..8 {
+            let o = (i % 4) as f32 * 0.01;
+            if i < 4 {
+                pts.extend_from_slice(&[o, o]);
+            } else {
+                pts.extend_from_slice(&[10.0 + o, 10.0 + o]);
+            }
+        }
+        let cs = vec![0.0, 0.0, 10.0, 10.0];
+        (pts, cs)
+    }
+
+    #[test]
+    fn fused_assignment_blobs() {
+        let (pts, cs) = toy();
+        let mut c = Counters::new();
+        let out = assign_accumulate(&pts, &cs, 8, 2, 2, &mut c);
+        assert_eq!(&out.labels[..4], &[0, 0, 0, 0]);
+        assert_eq!(&out.labels[4..], &[1, 1, 1, 1]);
+        assert_eq!(out.counts, vec![4, 4]);
+        assert_eq!(c.distance_evals, 16);
+        // Sums reconstruct means near the blob centers.
+        let mean0 = out.sums[0] / 4.0;
+        assert!((mean0 - 0.015).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fused_matches_assign_only() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let (m, n, k) = (517, 7, 5); // deliberately not block-aligned
+        let pts: Vec<f32> = (0..m * n).map(|_| rng.f32() * 10.0).collect();
+        let cs: Vec<f32> = (0..k * n).map(|_| rng.f32() * 10.0).collect();
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let fused = assign_accumulate(&pts, &cs, m, n, k, &mut c1);
+        let (labels, mins) = assign_only(&pts, &cs, m, n, k, &mut c2);
+        assert_eq!(fused.labels, labels);
+        for (a, b) in fused.mins.iter().zip(&mins) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        assert_eq!(c1.distance_evals, c2.distance_evals);
+    }
+
+    #[test]
+    fn counts_total_m_and_objective_matches_mins() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let (m, n, k) = (300, 4, 3);
+        let pts: Vec<f32> = (0..m * n).map(|_| rng.f32()).collect();
+        let cs: Vec<f32> = (0..k * n).map(|_| rng.f32()).collect();
+        let mut c = Counters::new();
+        let out = assign_accumulate(&pts, &cs, m, n, k, &mut c);
+        assert_eq!(out.counts.iter().sum::<u64>(), m as u64);
+        let sum_mins: f64 = out.mins.iter().map(|&x| x as f64).sum();
+        assert!((out.objective - sum_mins).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (m, n, k) = (2048, 6, 4);
+        let pts: Vec<f32> = (0..m * n).map(|_| rng.f32() * 5.0).collect();
+        let cs: Vec<f32> = (0..k * n).map(|_| rng.f32() * 5.0).collect();
+        let pool = ThreadPool::new(4);
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let serial = assign_accumulate(&pts, &cs, m, n, k, &mut c1);
+        let par = assign_accumulate_parallel(&pool, &pts, &cs, m, n, k, &mut c2);
+        assert_eq!(serial.labels, par.labels);
+        assert_eq!(serial.counts, par.counts);
+        assert!((serial.objective - par.objective).abs() < 1e-6 * serial.objective.abs());
+        assert_eq!(c1.distance_evals, c2.distance_evals);
+    }
+}

@@ -1,0 +1,237 @@
+//! Squared Euclidean distance primitives.
+//!
+//! These mirror the L1 Pallas kernel's `‖x‖² − 2·x·c + ‖c‖²` decomposition
+//! where it pays off (blocked assignment over many centroids) and use the
+//! direct subtract-square form for single pairs. Every public function
+//! reports how many *distance-function evaluations* it performed through
+//! [`crate::metrics::counters::DistanceCounter`]-compatible return values —
+//! the paper's `n_d` metric counts point↔centroid distance evaluations.
+
+/// SIMD lane width for the accumulator arrays: 16 f32 = one AVX-512
+/// register (still fine on AVX2 — LLVM splits into two 8-lane registers).
+const LANES: usize = 16;
+
+/// Direct squared Euclidean distance between two vectors.
+///
+/// A `[f32; LANES]` accumulator array lets LLVM keep the whole reduction in
+/// vector registers without violating strict-FP ordering per lane.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        let av = &a[j..j + LANES];
+        let bv = &b[j..j + LANES];
+        for l in 0..LANES {
+            let d = av[l] - bv[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * LANES..a.len() {
+        let d = a[j] - b[j];
+        tail += d * d;
+    }
+    // Pairwise tree reduction keeps the combine order deterministic.
+    let mut width = LANES / 2;
+    while width > 0 {
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+        width /= 2;
+    }
+    acc[0] + tail
+}
+
+/// Dot product (used by the decomposition path).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let chunks = a.len() / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        let av = &a[j..j + LANES];
+        let bv = &b[j..j + LANES];
+        for l in 0..LANES {
+            acc[l] += av[l] * bv[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * LANES..a.len() {
+        tail += a[j] * b[j];
+    }
+    let mut width = LANES / 2;
+    while width > 0 {
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+        width /= 2;
+    }
+    acc[0] + tail
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f32 {
+    dot(a, a)
+}
+
+/// Find the nearest centroid to `point`; returns `(index, sq_dist)`.
+/// Performs `centroids_rows` distance evaluations.
+#[inline]
+pub fn nearest(point: &[f32], centroids: &[f32], k: usize, n: usize) -> (usize, f32) {
+    debug_assert_eq!(centroids.len(), k * n);
+    debug_assert!(k > 0);
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for j in 0..k {
+        let d = sq_dist(point, &centroids[j * n..(j + 1) * n]);
+        if d < best_d {
+            best_d = d;
+            best = j;
+        }
+    }
+    (best, best_d)
+}
+
+/// Dense `(rows, k)` squared-distance panel via the decomposition form:
+/// `d[i][j] = ‖x_i‖² − 2·x_i·c_j + ‖c_j‖²`, writing into `out` (row-major,
+/// `rows*k`). `x_sq`/`c_sq` are precomputed squared norms. This is the
+/// rust analogue of the Pallas tile body and is what the blocked assignment
+/// uses for large `k·n`.
+pub fn sq_dist_panel(
+    points: &[f32],
+    x_sq: &[f32],
+    centroids: &[f32],
+    c_sq: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(points.len(), rows * n);
+    debug_assert_eq!(centroids.len(), k * n);
+    debug_assert_eq!(out.len(), rows * k);
+    // 4-wide centroid micro-kernel: each point row is loaded once per 4
+    // centroids instead of once per centroid (≈1.5× on the assignment
+    // panel — EXPERIMENTS.md §Perf).
+    let k4 = k / 4 * 4;
+    for i in 0..rows {
+        let x = &points[i * n..(i + 1) * n];
+        let row = &mut out[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j < k4 {
+            let c0 = &centroids[j * n..(j + 1) * n];
+            let c1 = &centroids[(j + 1) * n..(j + 2) * n];
+            let c2 = &centroids[(j + 2) * n..(j + 3) * n];
+            let c3 = &centroids[(j + 3) * n..(j + 4) * n];
+            let (d0, d1, d2, d3) = dot4(x, c0, c1, c2, c3);
+            row[j] = (x_sq[i] + c_sq[j] - 2.0 * d0).max(0.0);
+            row[j + 1] = (x_sq[i] + c_sq[j + 1] - 2.0 * d1).max(0.0);
+            row[j + 2] = (x_sq[i] + c_sq[j + 2] - 2.0 * d2).max(0.0);
+            row[j + 3] = (x_sq[i] + c_sq[j + 3] - 2.0 * d3).max(0.0);
+            j += 4;
+        }
+        while j < k {
+            let c = &centroids[j * n..(j + 1) * n];
+            let d = x_sq[i] + c_sq[j] - 2.0 * dot(x, c);
+            row[j] = d.max(0.0);
+            j += 1;
+        }
+    }
+}
+
+/// Four simultaneous dot products against a shared left vector.
+#[inline]
+fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> (f32, f32, f32, f32) {
+    let n = x.len();
+    let mut a0 = [0.0f32; LANES];
+    let mut a1 = [0.0f32; LANES];
+    let mut a2 = [0.0f32; LANES];
+    let mut a3 = [0.0f32; LANES];
+    let chunks = n / LANES;
+    for i in 0..chunks {
+        let j = i * LANES;
+        let xv = &x[j..j + LANES];
+        let c0v = &c0[j..j + LANES];
+        let c1v = &c1[j..j + LANES];
+        let c2v = &c2[j..j + LANES];
+        let c3v = &c3[j..j + LANES];
+        for l in 0..LANES {
+            a0[l] += xv[l] * c0v[l];
+            a1[l] += xv[l] * c1v[l];
+            a2[l] += xv[l] * c2v[l];
+            a3[l] += xv[l] * c3v[l];
+        }
+    }
+    let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0, 0.0, 0.0);
+    for j in chunks * LANES..n {
+        t0 += x[j] * c0[j];
+        t1 += x[j] * c1[j];
+        t2 += x[j] * c2[j];
+        t3 += x[j] * c3[j];
+    }
+    let mut width = LANES / 2;
+    while width > 0 {
+        for l in 0..width {
+            a0[l] += a0[l + width];
+            a1[l] += a1[l + width];
+            a2[l] += a2[l + width];
+            a3[l] += a3[l + width];
+        }
+        width /= 2;
+    }
+    (a0[0] + t0, a1[0] + t1, a2[0] + t2, a3[0] + t3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_dist_basic() {
+        assert_eq!(sq_dist(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sq_dist(&[1.0; 7], &[1.0; 7]), 0.0);
+    }
+
+    #[test]
+    fn sq_dist_matches_naive_for_odd_lengths() {
+        for len in 1..20 {
+            let a: Vec<f32> = (0..len).map(|i| i as f32 * 0.5).collect();
+            let b: Vec<f32> = (0..len).map(|i| (len - i) as f32 * 0.25).collect();
+            let naive: f32 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum();
+            assert!((sq_dist(&a, &b) - naive).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn nearest_picks_min_and_breaks_ties_low() {
+        let centroids = [0.0f32, 0.0, 5.0, 5.0, 0.0, 0.0]; // c0 == c2
+        let (idx, d) = nearest(&[1.0, 0.0], &centroids, 3, 2);
+        assert_eq!(idx, 0);
+        assert_eq!(d, 1.0);
+    }
+
+    #[test]
+    fn panel_matches_direct() {
+        let pts: Vec<f32> = (0..12).map(|i| i as f32).collect(); // 4×3
+        let cs: Vec<f32> = (0..6).map(|i| (i * 2) as f32).collect(); // 2×3
+        let x_sq: Vec<f32> = (0..4).map(|i| sq_norm(&pts[i * 3..i * 3 + 3])).collect();
+        let c_sq: Vec<f32> = (0..2).map(|j| sq_norm(&cs[j * 3..j * 3 + 3])).collect();
+        let mut out = vec![0.0; 8];
+        sq_dist_panel(&pts, &x_sq, &cs, &c_sq, 4, 2, 3, &mut out);
+        for i in 0..4 {
+            for j in 0..2 {
+                let direct = sq_dist(&pts[i * 3..i * 3 + 3], &cs[j * 3..j * 3 + 3]);
+                assert!((out[i * 2 + j] - direct).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! K-means++ seeding (Algorithm 2 of the paper) and partial reseeding of
+//! degenerate centroids — the `Init` ingredient of Big-means.
+//!
+//! Uses the incremental D² update: after each selection only the distances
+//! to the *new* centroid are computed (`O(m·n)` per draw), so a full seeding
+//! costs `m·k` distance evaluations, matching the paper's complexity claim.
+//! The paper evaluates 3 candidate points per draw and keeps the best
+//! (§5.7, "three candidate points are considered"); `candidates` exposes
+//! that knob.
+
+use crate::metrics::Counters;
+use crate::util::rng::Rng;
+
+use super::distance::sq_dist;
+
+/// Number of candidate points per D² draw (paper §5.7 uses 3).
+pub const DEFAULT_CANDIDATES: usize = 3;
+
+/// Full K-means++ seeding: choose `k` centroids from `points`.
+pub fn kmeanspp(
+    points: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    candidates: usize,
+    rng: &mut Rng,
+    counters: &mut Counters,
+) -> Vec<f32> {
+    assert!(m > 0 && k > 0 && k <= m, "kmeanspp: need 0 < k <= m");
+    let mut centroids = vec![0f32; k * n];
+    // First centroid: uniform.
+    let first = rng.usize(m);
+    centroids[..n].copy_from_slice(&points[first * n..(first + 1) * n]);
+    if k == 1 {
+        return centroids;
+    }
+    // d2[i] = min squared distance to chosen centroids.
+    let mut d2 = vec![0f64; m];
+    for i in 0..m {
+        d2[i] = sq_dist(&points[i * n..(i + 1) * n], &centroids[..n]) as f64;
+    }
+    counters.add_distance_evals(m as u64);
+
+    for j in 1..k {
+        let idx = pick_candidate(points, m, n, &d2, candidates, rng, counters);
+        let cj = &points[idx * n..(idx + 1) * n];
+        centroids[j * n..(j + 1) * n].copy_from_slice(cj);
+        // Incremental D² update against the new centroid only.
+        for i in 0..m {
+            let d = sq_dist(&points[i * n..(i + 1) * n], cj) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+        counters.add_distance_evals(m as u64);
+    }
+    centroids
+}
+
+/// Reseed `slots` (degenerate centroid indices) inside an existing centroid
+/// set using D² weighting against the *non-degenerate* centroids — the
+/// Big-means degenerate-reinit step.
+pub fn reseed_degenerate(
+    points: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    centroids: &mut [f32],
+    slots: &[usize],
+    candidates: usize,
+    rng: &mut Rng,
+    counters: &mut Counters,
+) {
+    assert_eq!(centroids.len(), k * n);
+    if slots.is_empty() {
+        return;
+    }
+    let alive: Vec<usize> = (0..k).filter(|j| !slots.contains(j)).collect();
+    // D² to the alive set (all-degenerate → uniform weights).
+    let mut d2 = vec![1f64; m];
+    if !alive.is_empty() {
+        for i in 0..m {
+            let x = &points[i * n..(i + 1) * n];
+            let mut best = f64::INFINITY;
+            for &j in &alive {
+                let d = sq_dist(x, &centroids[j * n..(j + 1) * n]) as f64;
+                if d < best {
+                    best = d;
+                }
+            }
+            d2[i] = best;
+        }
+        counters.add_distance_evals((m * alive.len()) as u64);
+    }
+    for &slot in slots {
+        let idx = pick_candidate(points, m, n, &d2, candidates, rng, counters);
+        let cj = &points[idx * n..(idx + 1) * n];
+        centroids[slot * n..(slot + 1) * n].copy_from_slice(cj);
+        for i in 0..m {
+            let d = sq_dist(&points[i * n..(i + 1) * n], cj) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+        counters.add_distance_evals(m as u64);
+    }
+}
+
+/// Uniform (Forgy-style) reseeding of degenerate slots — the ablation
+/// comparator for `reinit: Random` in the config.
+pub fn reseed_degenerate_random(
+    points: &[f32],
+    m: usize,
+    n: usize,
+    centroids: &mut [f32],
+    slots: &[usize],
+    rng: &mut Rng,
+) {
+    for &slot in slots {
+        let idx = rng.usize(m);
+        centroids[slot * n..(slot + 1) * n]
+            .copy_from_slice(&points[idx * n..(idx + 1) * n]);
+    }
+}
+
+/// Draw `candidates` D²-weighted indices and keep the one that most reduces
+/// the potential (greedy candidate selection, paper §5.7). With
+/// `candidates == 1` this is the classic K-means++ draw.
+fn pick_candidate(
+    points: &[f32],
+    m: usize,
+    n: usize,
+    d2: &[f64],
+    candidates: usize,
+    rng: &mut Rng,
+    counters: &mut Counters,
+) -> usize {
+    let total: f64 = d2.iter().sum();
+    if total <= 0.0 {
+        // All points coincide with existing centroids: any point works.
+        return rng.usize(m);
+    }
+    let draw = |rng: &mut Rng| -> usize {
+        let mut cursor = rng.f64() * total;
+        for (i, &w) in d2.iter().enumerate() {
+            if w > 0.0 {
+                if cursor < w {
+                    return i;
+                }
+                cursor -= w;
+            }
+        }
+        // fp slack: last positive-weight index
+        d2.iter().rposition(|&w| w > 0.0).unwrap_or(m - 1)
+    };
+    if candidates <= 1 {
+        return draw(rng);
+    }
+    let mut best_idx = 0usize;
+    let mut best_pot = f64::INFINITY;
+    for _ in 0..candidates {
+        let idx = draw(rng);
+        let cand = &points[idx * n..(idx + 1) * n];
+        // Potential if we were to add this candidate.
+        let mut pot = 0f64;
+        for i in 0..m {
+            let d = sq_dist(&points[i * n..(i + 1) * n], cand) as f64;
+            pot += d.min(d2[i]);
+        }
+        counters.add_distance_evals(m as u64);
+        if pot < best_pot {
+            best_pot = pot;
+            best_idx = idx;
+        }
+    }
+    best_idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_data() -> (Vec<f32>, usize) {
+        // 4 tight blobs on a square, 25 pts each.
+        let mut rng = Rng::new(7);
+        let centers = [(0.0f32, 0.0f32), (50.0, 0.0), (0.0, 50.0), (50.0, 50.0)];
+        let mut pts = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..25 {
+                pts.push(cx + 0.1 * rng.gaussian() as f32);
+                pts.push(cy + 0.1 * rng.gaussian() as f32);
+            }
+        }
+        (pts, 100)
+    }
+
+    #[test]
+    fn selects_actual_points() {
+        let (pts, m) = blob_data();
+        let mut rng = Rng::new(1);
+        let mut c = Counters::new();
+        let cs = kmeanspp(&pts, m, 2, 4, 1, &mut rng, &mut c);
+        for j in 0..4 {
+            let cj = &cs[j * 2..j * 2 + 2];
+            let found = (0..m).any(|i| sq_dist(&pts[i * 2..i * 2 + 2], cj) < 1e-12);
+            assert!(found, "centroid {j} is not a data point");
+        }
+    }
+
+    #[test]
+    fn hits_all_separated_blobs_whp() {
+        let (pts, m) = blob_data();
+        let mut hits = 0;
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let mut c = Counters::new();
+            let cs = kmeanspp(&pts, m, 2, 4, 3, &mut rng, &mut c);
+            let mut blobs_hit = std::collections::HashSet::new();
+            for j in 0..4 {
+                let cj = &cs[j * 2..j * 2 + 2];
+                let bx = (cj[0] > 25.0) as u8;
+                let by = (cj[1] > 25.0) as u8;
+                blobs_hit.insert((bx, by));
+            }
+            if blobs_hit.len() == 4 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 18, "k-means++ hit all 4 blobs only {hits}/20 times");
+    }
+
+    #[test]
+    fn k_equals_one_and_k_equals_m() {
+        let pts = vec![0.0f32, 0.0, 1.0, 1.0, 2.0, 2.0];
+        let mut rng = Rng::new(2);
+        let mut c = Counters::new();
+        let c1 = kmeanspp(&pts, 3, 2, 1, 1, &mut rng, &mut c);
+        assert_eq!(c1.len(), 2);
+        let c3 = kmeanspp(&pts, 3, 2, 3, 1, &mut rng, &mut c);
+        // With k == m and distinct points, all points selected.
+        let mut sel: Vec<_> = (0..3)
+            .map(|j| (c3[j * 2] as i32, c3[j * 2 + 1] as i32))
+            .collect();
+        sel.sort_unstable();
+        assert_eq!(sel, vec![(0, 0), (1, 1), (2, 2)]);
+    }
+
+    #[test]
+    fn duplicate_points_dont_crash() {
+        let pts = vec![1.0f32; 20]; // 10 identical 2-d points
+        let mut rng = Rng::new(3);
+        let mut c = Counters::new();
+        let cs = kmeanspp(&pts, 10, 2, 3, 3, &mut rng, &mut c);
+        assert_eq!(cs.len(), 6);
+        assert!(cs.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn reseed_fills_only_requested_slots() {
+        let (pts, m) = blob_data();
+        let mut rng = Rng::new(4);
+        let mut c = Counters::new();
+        let mut cs = vec![0.0f32; 8];
+        cs[0..2].copy_from_slice(&[0.0, 0.0]);
+        cs[2..4].copy_from_slice(&[50.0, 50.0]);
+        cs[4..6].copy_from_slice(&[123.0, 456.0]); // degenerate slot 2
+        cs[6..8].copy_from_slice(&[50.0, 0.0]);
+        let before: Vec<f32> = cs.clone();
+        reseed_degenerate(&pts, m, 2, 4, &mut cs, &[2], 3, &mut rng, &mut c);
+        assert_eq!(&cs[0..2], &before[0..2]);
+        assert_eq!(&cs[2..4], &before[2..4]);
+        assert_eq!(&cs[6..8], &before[6..8]);
+        // Slot 2 now holds a real point, most likely from the uncovered blob
+        // (0, 50) — D² mass concentrates there.
+        let c2 = &cs[4..6];
+        assert!(c2[0] < 25.0 && c2[1] > 25.0, "reseeded to {c2:?}, expected blob (0,50)");
+    }
+
+    #[test]
+    fn reseed_all_degenerate_uses_uniform() {
+        let (pts, m) = blob_data();
+        let mut rng = Rng::new(5);
+        let mut c = Counters::new();
+        let mut cs = vec![f32::MAX; 4];
+        reseed_degenerate(&pts, m, 2, 2, &mut cs, &[0, 1], 1, &mut rng, &mut c);
+        assert!(cs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn distance_eval_budget_matches_complexity() {
+        let (pts, m) = blob_data();
+        let mut rng = Rng::new(6);
+        let mut c = Counters::new();
+        let k = 4;
+        kmeanspp(&pts, m, 2, k, 1, &mut rng, &mut c);
+        // first pass m + (k-1) incremental passes of m each
+        assert_eq!(c.distance_evals, (m * k) as u64);
+    }
+}

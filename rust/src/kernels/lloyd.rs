@@ -1,0 +1,168 @@
+//! Lloyd's K-means local search (Algorithm 1 of the paper), native rust
+//! path. Matches the semantics of the AOT'd L2 `lloyd_chunk`: relative
+//! objective tolerance + iteration cap, degenerate clusters left in place.
+
+use crate::metrics::Counters;
+use crate::util::threadpool::ThreadPool;
+
+use super::assign::{assign_accumulate, assign_accumulate_parallel, AssignOut};
+use super::update::update_centroids;
+
+/// Convergence parameters (paper §5.7: rel-tol 1e-4, cap 300 on the full
+/// dataset; chunks use the same rule).
+#[derive(Clone, Copy, Debug)]
+pub struct LloydParams {
+    pub tol: f64,
+    pub max_iters: u32,
+}
+
+impl Default for LloydParams {
+    fn default() -> Self {
+        LloydParams { tol: 1e-4, max_iters: 300 }
+    }
+}
+
+/// Result of a Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    /// Final centroids, row-major `(k, n)`.
+    pub centroids: Vec<f32>,
+    /// SSE of the final centroids on this data.
+    pub objective: f64,
+    /// Cluster sizes from the final assignment.
+    pub counts: Vec<u64>,
+    /// Iterations executed (assignment+update pairs).
+    pub iters: u32,
+}
+
+/// Run Lloyd to convergence, seeded by `centroids`. `pool: Some(_)` uses
+/// the parallel assignment (paper's parallelisation strategy 1).
+pub fn lloyd(
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: LloydParams,
+    pool: Option<&ThreadPool>,
+    counters: &mut Counters,
+) -> LloydResult {
+    assert!(m > 0, "lloyd on empty data");
+    let mut c = centroids.to_vec();
+    let mut prev_obj = f64::INFINITY;
+    let mut iters = 0u32;
+    let mut last: Option<AssignOut> = None;
+
+    while iters < params.max_iters {
+        let out = match pool {
+            Some(p) => assign_accumulate_parallel(p, points, &c, m, n, k, counters),
+            None => assign_accumulate(points, &c, m, n, k, counters),
+        };
+        iters += 1;
+        let obj = out.objective;
+        update_centroids(&out.sums, &out.counts, &mut c, k, n);
+        let rel = (prev_obj - obj).abs() / obj.max(1e-300);
+        let converged = rel <= params.tol;
+        prev_obj = obj;
+        last = Some(out);
+        if converged {
+            break;
+        }
+    }
+
+    // Final assignment so the reported objective/counts describe the
+    // *returned* centroids (same contract as the AOT'd lloyd_chunk).
+    let fin = match pool {
+        Some(p) => assign_accumulate_parallel(p, points, &c, m, n, k, counters),
+        None => assign_accumulate(points, &c, m, n, k, counters),
+    };
+    drop(last);
+    LloydResult { centroids: c, objective: fin.objective, counts: fin.counts, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blobs(rng: &mut Rng, per: usize, centers: &[(f32, f32)], spread: f32) -> Vec<f32> {
+        let mut pts = Vec::with_capacity(per * centers.len() * 2);
+        for &(cx, cy) in centers {
+            for _ in 0..per {
+                pts.push(cx + spread * rng.gaussian() as f32);
+                pts.push(cy + spread * rng.gaussian() as f32);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn converges_on_separated_blobs() {
+        let mut rng = Rng::new(1);
+        let pts = blobs(&mut rng, 100, &[(0.0, 0.0), (20.0, 20.0)], 0.1);
+        let seed = vec![1.0f32, 1.0, 19.0, 19.0];
+        let mut c = Counters::new();
+        let r = lloyd(&pts, &seed, 200, 2, 2, LloydParams::default(), None, &mut c);
+        assert!(r.iters < 20, "should converge fast, took {}", r.iters);
+        assert_eq!(r.counts, vec![100, 100]);
+        // Final centroids near blob centers.
+        let near = |c: &[f32], t: (f32, f32)| (c[0] - t.0).abs() < 0.2 && (c[1] - t.1).abs() < 0.2;
+        assert!(near(&r.centroids[..2], (0.0, 0.0)) || near(&r.centroids[..2], (20.0, 20.0)));
+    }
+
+    #[test]
+    fn objective_never_increases_across_reseeds() {
+        // Lloyd from the converged solution must not worsen it.
+        let mut rng = Rng::new(2);
+        let pts = blobs(&mut rng, 50, &[(0.0, 0.0), (5.0, 5.0), (10.0, 0.0)], 0.5);
+        let seed: Vec<f32> = pts[..6].to_vec();
+        let mut c = Counters::new();
+        let r1 = lloyd(&pts, &seed, 150, 2, 3, LloydParams::default(), None, &mut c);
+        let r2 = lloyd(&pts, &r1.centroids, 150, 2, 3, LloydParams::default(), None, &mut c);
+        assert!(r2.objective <= r1.objective + 1e-6 * r1.objective);
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let mut rng = Rng::new(3);
+        let pts: Vec<f32> = (0..2000).map(|_| rng.f32()).collect();
+        let seed: Vec<f32> = pts[..10].to_vec();
+        let mut c = Counters::new();
+        let r = lloyd(
+            &pts,
+            &seed,
+            1000,
+            2,
+            5,
+            LloydParams { tol: 0.0, max_iters: 4 },
+            None,
+            &mut c,
+        );
+        assert_eq!(r.iters, 4);
+    }
+
+    #[test]
+    fn parallel_and_serial_agree() {
+        let mut rng = Rng::new(4);
+        let pts = blobs(&mut rng, 600, &[(0.0, 0.0), (8.0, 8.0), (16.0, 0.0)], 0.3);
+        let seed: Vec<f32> = pts[..6].to_vec();
+        let pool = ThreadPool::new(4);
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let a = lloyd(&pts, &seed, 1800, 2, 3, LloydParams::default(), None, &mut c1);
+        let b = lloyd(&pts, &seed, 1800, 2, 3, LloydParams::default(), Some(&pool), &mut c2);
+        assert_eq!(a.counts, b.counts);
+        assert!((a.objective - b.objective).abs() < 1e-6 * a.objective);
+    }
+
+    #[test]
+    fn distance_evals_accounted() {
+        let mut rng = Rng::new(5);
+        let pts: Vec<f32> = (0..100 * 3).map(|_| rng.f32()).collect();
+        let seed: Vec<f32> = pts[..6].to_vec();
+        let mut c = Counters::new();
+        let r = lloyd(&pts, &seed, 100, 3, 2, LloydParams::default(), None, &mut c);
+        // iters + 1 final assignment, each m*k evals.
+        assert_eq!(c.distance_evals, (r.iters as u64 + 1) * 100 * 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Native rust kernel substrate: the same primitives the L1/L2 AOT
+//! artifacts implement (assignment, reduction, Lloyd, K-means++,
+//! objective), for arbitrary shapes and for the baseline algorithms.
+//! Cross-checked against the HLO path in `tests/integration_runtime.rs`.
+
+pub mod assign;
+pub mod distance;
+pub mod kmeanspp;
+pub mod lloyd;
+pub mod objective;
+pub mod update;
+
+pub use assign::{assign_accumulate, assign_accumulate_parallel, assign_only, AssignOut};
+pub use kmeanspp::{kmeanspp, reseed_degenerate, reseed_degenerate_random};
+pub use lloyd::{lloyd, LloydParams, LloydResult};
+pub use objective::{objective, objective_parallel};
+pub use update::{degenerate_indices, update_centroids};

@@ -1,0 +1,99 @@
+//! MSSC objective evaluation: `f(C, X) = Σᵢ minⱼ ‖xᵢ − cⱼ‖²` (eq. 1).
+
+use crate::metrics::Counters;
+use crate::util::threadpool::ThreadPool;
+
+use super::distance::nearest;
+
+/// Full objective over `points` for the given centroids. Counts `m·k`
+/// distance evaluations.
+pub fn objective(
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    counters: &mut Counters,
+) -> f64 {
+    assert_eq!(points.len(), m * n);
+    assert_eq!(centroids.len(), k * n);
+    let mut total = 0f64;
+    for i in 0..m {
+        let (_, d) = nearest(&points[i * n..(i + 1) * n], centroids, k, n);
+        total += d as f64;
+    }
+    counters.add_distance_evals((m * k) as u64);
+    total
+}
+
+/// Parallel objective (row-blocked).
+pub fn objective_parallel(
+    pool: &ThreadPool,
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    counters: &mut Counters,
+) -> f64 {
+    if m < 4096 {
+        return objective(points, centroids, m, n, k, counters);
+    }
+    let nworkers = pool.size();
+    let block = m.div_ceil(nworkers);
+    let pts = std::sync::Arc::new(points.to_vec());
+    let cs = std::sync::Arc::new(centroids.to_vec());
+    let jobs: Vec<(usize, usize)> = (0..nworkers)
+        .map(|w| (w * block, ((w + 1) * block).min(m)))
+        .filter(|(s, e)| s < e)
+        .collect();
+    let parts = pool.map(jobs, move |(s, e)| {
+        let mut local = 0f64;
+        for i in s..e {
+            let (_, d) = nearest(&pts[i * n..(i + 1) * n], &cs, k, n);
+            local += d as f64;
+        }
+        local
+    });
+    counters.add_distance_evals((m * k) as u64);
+    parts.into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn objective_of_exact_centroids_is_zero() {
+        let pts = vec![1.0f32, 2.0, 5.0, 6.0];
+        let cs = pts.clone();
+        let mut c = Counters::new();
+        assert_eq!(objective(&pts, &cs, 2, 2, 2, &mut c), 0.0);
+    }
+
+    #[test]
+    fn objective_known_value() {
+        // points (0,0), (2,0); centroid (1,0) → 1 + 1 = 2
+        let pts = vec![0.0f32, 0.0, 2.0, 0.0];
+        let cs = vec![1.0f32, 0.0];
+        let mut c = Counters::new();
+        assert_eq!(objective(&pts, &cs, 2, 2, 1, &mut c), 2.0);
+        assert_eq!(c.distance_evals, 2);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Rng::new(1);
+        let (m, n, k) = (10_000, 5, 4);
+        let pts: Vec<f32> = (0..m * n).map(|_| rng.f32()).collect();
+        let cs: Vec<f32> = (0..k * n).map(|_| rng.f32()).collect();
+        let pool = ThreadPool::new(4);
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let a = objective(&pts, &cs, m, n, k, &mut c1);
+        let b = objective_parallel(&pool, &pts, &cs, m, n, k, &mut c2);
+        assert!((a - b).abs() < 1e-6 * a);
+        assert_eq!(c1.distance_evals, c2.distance_evals);
+    }
+}

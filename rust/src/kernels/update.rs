@@ -1,0 +1,63 @@
+//! Centroid update step: means from per-cluster sums, preserving the
+//! positions of degenerate (empty) clusters — the contract the coordinator
+//! and the L2 model share.
+
+/// Compute new centroids from reduction output. Degenerate clusters (count
+/// 0) keep their previous position and are reported back. Returns the list
+/// of degenerate cluster indices.
+pub fn update_centroids(
+    sums: &[f64],
+    counts: &[u64],
+    centroids: &mut [f32],
+    k: usize,
+    n: usize,
+) -> Vec<usize> {
+    assert_eq!(sums.len(), k * n);
+    assert_eq!(counts.len(), k);
+    assert_eq!(centroids.len(), k * n);
+    let mut degenerate = Vec::new();
+    for j in 0..k {
+        if counts[j] == 0 {
+            degenerate.push(j);
+            continue;
+        }
+        let inv = 1.0 / counts[j] as f64;
+        let dst = &mut centroids[j * n..(j + 1) * n];
+        let src = &sums[j * n..(j + 1) * n];
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = (s * inv) as f32;
+        }
+    }
+    degenerate
+}
+
+/// Indices of degenerate clusters given counts.
+pub fn degenerate_indices(counts: &[u64]) -> Vec<usize> {
+    counts
+        .iter()
+        .enumerate()
+        .filter_map(|(j, &c)| (c == 0).then_some(j))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn means_computed_and_degenerates_kept() {
+        let sums = vec![4.0, 8.0, 0.0, 0.0]; // k=2, n=2
+        let counts = vec![2u64, 0];
+        let mut cs = vec![9.0f32, 9.0, 7.0, 7.0];
+        let deg = update_centroids(&sums, &counts, &mut cs, 2, 2);
+        assert_eq!(deg, vec![1]);
+        assert_eq!(&cs[..2], &[2.0, 4.0]); // mean
+        assert_eq!(&cs[2..], &[7.0, 7.0]); // untouched
+    }
+
+    #[test]
+    fn degenerate_indices_finds_all() {
+        assert_eq!(degenerate_indices(&[1, 0, 3, 0]), vec![1, 3]);
+        assert!(degenerate_indices(&[1, 1]).is_empty());
+    }
+}

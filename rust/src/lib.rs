@@ -1,0 +1,46 @@
+//! # Big-means: scalable K-means clustering for big data
+//!
+//! Production-grade reproduction of
+//! *"Big-means: Less is More for K-means Clustering"* /
+//! *"How to use K-means for big data clustering?"* (Mussabayev, Mladenovic,
+//! Jarboui, Mussabayev; Pattern Recognition 2022, DOI 10.1016/j.patcog.2022.109269),
+//! built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: chunk sampling, incumbent
+//!   management, degenerate-centroid reinitialisation, sequential and
+//!   parallel chunk pipelines, streaming ingestion, metrics, CLI.
+//! * **Layer 2 (python/compile/model.py)** — the MSSC local search (Lloyd
+//!   iterations + K-means++ seeding) as a JAX computation, AOT-lowered to
+//!   HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — the assignment-step hot spot
+//!   (pairwise squared distances + argmin + per-cluster reduction) as a
+//!   Pallas kernel, validated against a pure-jnp oracle.
+//!
+//! The runtime loads the AOT artifacts via the PJRT C API (`xla` crate) —
+//! python never runs on the clustering path. A native Rust kernel substrate
+//! ([`kernels`]) provides the same primitives for arbitrary shapes and for
+//! the baseline algorithms ([`baselines`]) the paper compares against.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use bigmeans::{BigMeans, BigMeansConfig, Dataset};
+//!
+//! let data = Dataset::from_vec("demo", vec![0.0; 1000 * 4], 1000, 4);
+//! let config = BigMeansConfig::new(/*k=*/ 8, /*chunk_size=*/ 256);
+//! let result = BigMeans::new(config).run(&data).unwrap();
+//! println!("SSE = {}", result.objective);
+//! ```
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod data;
+pub mod kernels;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+pub use coordinator::bigmeans::{BigMeans, BigMeansResult};
+pub use coordinator::config::BigMeansConfig;
+pub use data::dataset::Dataset;

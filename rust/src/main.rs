@@ -1,0 +1,270 @@
+//! `bigmeans` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `cluster`  — run Big-means on a dataset (catalog name or csv/fbin file)
+//! * `table`    — regenerate a paper table for one dataset
+//! * `summary`  — regenerate Tables 3–4 across the catalog
+//! * `generate` — write a synthetic catalog dataset to .fbin
+//! * `catalog`  — list the dataset catalog
+//! * `artifacts`— inspect the AOT artifact manifest
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use bigmeans::bench_harness::{self, report, tables};
+use bigmeans::coordinator::config::{
+    BigMeansConfig, Engine, ParallelMode, ReinitStrategy, StopCondition,
+};
+use bigmeans::data::{catalog, loader, Dataset, PAPER_K_GRID};
+use bigmeans::runtime;
+use bigmeans::util::cli::Args;
+use bigmeans::BigMeans;
+
+const USAGE: &str = "\
+bigmeans — scalable K-means clustering for big data (Big-means, PatRec 2022)
+
+USAGE: bigmeans <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+  cluster <dataset>   Run Big-means. <dataset> = catalog name or .csv/.fbin
+      --k N             clusters (default 10)
+      --s N             chunk size (default 4096)
+      --time SECS       cpu_max budget (default 3)
+      --chunks N        max chunks (default unlimited)
+      --engine E        native | pjrt          (default native)
+      --mode M          inner | chunks | seq   (default inner)
+      --reinit R        kmeanspp | random      (default kmeanspp)
+      --threads N       worker threads (default: machine)
+      --seed N          RNG seed
+      --skip-final      skip the full-dataset assignment pass
+  table <dataset>     Regenerate the paper's per-dataset tables
+      --k LIST          k grid (default 2,3,5,10,15,20,25)
+      --n-exec N        repetitions (default 3)
+      --full            use the full §5 roster (default: quick roster)
+  summary             Regenerate Tables 3–4 over the whole catalog
+      --n-exec N        repetitions per cell (default 2)
+      --quick           four-dataset subset
+  generate <name> <out.fbin>   Write a catalog dataset to disk
+  catalog             List catalog datasets
+  artifacts           Show the AOT manifest
+";
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let sub = argv.remove(0);
+    let args = match Args::parse_with_flags(argv, &["full", "quick", "skip-final", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match sub.as_str() {
+        "cluster" => cmd_cluster(&args),
+        "table" => cmd_table(&args),
+        "summary" => cmd_summary(&args),
+        "generate" => cmd_generate(&args),
+        "catalog" => cmd_catalog(),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n\n{USAGE}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn load_dataset(args: &Args) -> Result<Dataset, String> {
+    let Some(name) = args.positional().first() else {
+        return Err("missing <dataset> argument".into());
+    };
+    if name.ends_with(".csv") || name.ends_with(".fbin") {
+        loader::load(&PathBuf::from(name)).map_err(|e| e.to_string())
+    } else {
+        let entry = catalog::find(name)
+            .ok_or_else(|| format!("no catalog dataset matching '{name}'"))?;
+        let seed = args.u64("data-seed", 20220418)?;
+        Ok(entry.generate(seed))
+    }
+}
+
+fn cmd_cluster(args: &Args) -> Result<(), String> {
+    let data = load_dataset(args)?;
+    let k = args.usize("k", 10)?;
+    let s = args.usize("s", 4096)?;
+    let time = args.f64("time", 3.0)?;
+    let chunks = args.u64("chunks", 0)?;
+    let stop = if chunks > 0 {
+        StopCondition::TimeOrChunks(Duration::from_secs_f64(time), chunks)
+    } else {
+        StopCondition::MaxTime(Duration::from_secs_f64(time))
+    };
+    let mode = match args.get_or("mode", "inner") {
+        "inner" => ParallelMode::InnerParallel,
+        "chunks" => ParallelMode::ChunkParallel,
+        "seq" => ParallelMode::Sequential,
+        other => return Err(format!("bad --mode '{other}'")),
+    };
+    let reinit = match args.get_or("reinit", "kmeanspp") {
+        "kmeanspp" => ReinitStrategy::KmeansPP,
+        "random" => ReinitStrategy::Random,
+        other => return Err(format!("bad --reinit '{other}'")),
+    };
+    let engine = match args.get_or("engine", "native") {
+        "native" => Engine::Native,
+        "pjrt" => Engine::Pjrt,
+        other => return Err(format!("bad --engine '{other}'")),
+    };
+    let mut cfg = BigMeansConfig::new(k, s)
+        .with_stop(stop)
+        .with_parallel(mode)
+        .with_seed(args.u64("seed", 0xB16_3EA5)?);
+    cfg.reinit = reinit;
+    cfg.threads = args.usize("threads", 0)?;
+    cfg.skip_final_assignment = args.flag("skip-final");
+    cfg.engine = engine;
+
+    eprintln!(
+        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}, mode={mode:?}",
+        data.name,
+        data.m(),
+        data.n(),
+    );
+    let bm = match engine {
+        Engine::Native => BigMeans::new(cfg),
+        Engine::Pjrt => runtime::pjrt_bigmeans(cfg, &runtime::default_artifacts_dir())
+            .map_err(|e| format!("pjrt engine: {e}"))?,
+    };
+    let t0 = std::time::Instant::now();
+    let r = bm.run(&data)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("objective (full SSE)     : {:.6e}", r.objective);
+    println!("best chunk objective     : {:.6e}", r.best_chunk_objective);
+    println!("chunks processed (n_s)   : {}", r.counters.chunks);
+    println!("incumbent improvements   : {}", r.improvements);
+    println!("distance evals (n_d)     : {:.3e}", r.counters.distance_evals as f64);
+    println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
+    println!("wall time                : {wall:.3}s");
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> Result<(), String> {
+    let Some(name) = args.positional().first() else {
+        return Err("missing <dataset> argument".into());
+    };
+    let entry = catalog::find(name)
+        .ok_or_else(|| format!("no catalog dataset matching '{name}'"))?;
+    let data = entry.generate(args.u64("data-seed", 20220418)?);
+    let k_grid = args.usize_list("k", &PAPER_K_GRID)?;
+    let n_exec = args.usize("n-exec", 3)?;
+    let roster = if args.flag("full") {
+        bench_harness::paper_roster(&entry)
+    } else {
+        bench_harness::quick_roster(&entry)
+    };
+    eprintln!(
+        "running {} algorithms × {} k-values × {} reps on '{}' (m={}, n={})",
+        roster.len(),
+        k_grid.len(),
+        n_exec,
+        entry.name,
+        data.m(),
+        data.n()
+    );
+    let exp = bench_harness::run_experiment(&data, &roster, &k_grid, n_exec, 42);
+    let summary = tables::summary_table(&exp);
+    let details = tables::details_table(&exp);
+    let md = format!(
+        "{}\n{}",
+        report::render_summary_markdown(&summary),
+        report::render_details_markdown(&exp.dataset, &details)
+    );
+    println!("{md}");
+    let path = report::write_report(&format!("table_{}.md", entry.table), &md);
+    eprintln!("written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_summary(args: &Args) -> Result<(), String> {
+    let n_exec = args.usize("n-exec", 2)?;
+    let entries = if args.flag("quick") {
+        catalog::quick_subset()
+    } else {
+        catalog::catalog()
+    };
+    let mut all_scores = Vec::new();
+    for entry in &entries {
+        let data = entry.generate(20220418);
+        let roster = bench_harness::paper_roster(entry);
+        eprintln!("[table {}] {} …", entry.table, entry.name);
+        let exp = bench_harness::run_experiment(&data, &roster, &PAPER_K_GRID, n_exec, 42);
+        all_scores.push(tables::dataset_scores(&exp));
+    }
+    let t4 = tables::table4(&all_scores);
+    let md = report::render_table4_markdown(&t4, entries.len());
+    println!("{md}");
+    let path = report::write_report("table_3_4_summary.md", &md);
+    eprintln!("written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    let pos = args.positional();
+    if pos.len() != 2 {
+        return Err("usage: generate <catalog-name> <out.fbin>".into());
+    }
+    let entry =
+        catalog::find(&pos[0]).ok_or_else(|| format!("no catalog dataset '{}'", pos[0]))?;
+    let data = entry.generate(args.u64("data-seed", 20220418)?);
+    let out = PathBuf::from(&pos[1]);
+    if pos[1].ends_with(".fbin") {
+        loader::save_fbin(&data, &out).map_err(|e| e.to_string())?;
+    } else {
+        return Err("only .fbin output supported".into());
+    }
+    eprintln!("wrote {} ({} × {})", out.display(), data.m(), data.n());
+    Ok(())
+}
+
+fn cmd_catalog() -> Result<(), String> {
+    println!(
+        "{:<50} {:>9} {:>5} {:>9} {:>5} {:>8} {:>8}",
+        "name", "paper_m", "p_n", "m", "n", "s", "cpu_max"
+    );
+    for e in catalog::catalog() {
+        println!(
+            "{:<50} {:>9} {:>5} {:>9} {:>5} {:>8} {:>8.2}",
+            e.name, e.paper_m, e.paper_n, e.m, e.n, e.chunk_size, e.cpu_max_secs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let dir = runtime::default_artifacts_dir();
+    let manifest = runtime::Manifest::load(&dir)
+        .map_err(|e| format!("{e} (run `make artifacts` first)"))?;
+    println!("{} variants in {}", manifest.variants.len(), dir.display());
+    for v in &manifest.variants {
+        println!(
+            "  {:<28} kind={:<9} s={:<6} n={:<4} k={:<3} block_s={}",
+            v.name,
+            format!("{:?}", v.kind),
+            v.s,
+            v.n,
+            v.k,
+            v.block_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Work counters matching the paper's reported quantities.
+//!
+//! The evaluation tables report, per run: `n_d` (number of distance
+//! function evaluations), `n_full` (assignment+update iterations over the
+//! full dataset), `n_s` (number of chunks processed), and the split CPU
+//! times `cpu_init` / `cpu_full`. Every kernel and algorithm in this crate
+//! threads a [`Counters`] through so the bench harness can print the same
+//! columns.
+
+/// Mutable work counters threaded through kernels and algorithms.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// Distance-function evaluations (point↔centroid), the paper's `n_d`.
+    pub distance_evals: u64,
+    /// Lloyd iterations executed against the *full* dataset (`n_full`).
+    pub full_iterations: u64,
+    /// Lloyd iterations executed against chunks (not part of `n_full`).
+    pub chunk_iterations: u64,
+    /// Chunks processed (`n_s`).
+    pub chunks: u64,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add_distance_evals(&mut self, n: u64) {
+        self.distance_evals += n;
+    }
+
+    /// Merge another counter set (e.g. from a parallel worker).
+    pub fn merge(&mut self, other: &Counters) {
+        self.distance_evals += other.distance_evals;
+        self.full_iterations += other.full_iterations;
+        self.chunk_iterations += other.chunk_iterations;
+        self.chunks += other.chunks;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Counters::new();
+        a.add_distance_evals(10);
+        a.chunks = 2;
+        let mut b = Counters::new();
+        b.add_distance_evals(5);
+        b.full_iterations = 3;
+        a.merge(&b);
+        assert_eq!(a.distance_evals, 15);
+        assert_eq!(a.full_iterations, 3);
+        assert_eq!(a.chunks, 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation metrics matching the paper's protocol: work counters
+//! (`n_d`, `n_full`, `n_s`), phase timers (`cpu_init`/`cpu_full`),
+//! relative error `E_A` and the normalized score system of Tables 3–4.
+
+pub mod counters;
+pub mod score;
+pub mod timer;
+
+pub use counters::Counters;
+pub use score::{mean_score, relative_error, scores, sum_scores, Summary};
+pub use timer::{Deadline, PhaseTimer};

@@ -1,0 +1,148 @@
+//! The paper's evaluation metrics: relative error `E_A`, the normalized
+//! score `S(A, X, q)` (Tables 3–4), and min/mean/max summaries.
+
+/// Relative error of an achieved objective vs the best-known value:
+/// `E_A = (f̄ − f_best) / f_best × 100%` (paper §5.7). Can be negative when
+/// a run beats the recorded best — the paper reports such entries too.
+pub fn relative_error(f_achieved: f64, f_best: f64) -> f64 {
+    debug_assert!(f_best > 0.0, "f_best must be positive");
+    (f_achieved - f_best) / f_best * 100.0
+}
+
+/// Min/mean/max summary over a series of runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub mean: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "Summary::of on empty slice");
+        let mut min = f64::INFINITY;
+        let mut max = f64::NEG_INFINITY;
+        let mut sum = 0.0;
+        for &v in values {
+            min = min.min(v);
+            max = max.max(v);
+            sum += v;
+        }
+        Summary { min, mean: sum / values.len() as f64, max }
+    }
+}
+
+/// The paper's normalized efficiency score:
+///
+/// `S(A, X, q) = 1 − (q_X(A) − min_A' q_X(A')) / (max_A' q_X(A') − min_A' q_X(A'))`
+///
+/// `q_values[i]` is metric `q` for algorithm `i` on dataset `X`; `None`
+/// marks an algorithm that failed (out of memory / time) — it scores 0 and
+/// does not participate in the min/max, matching the paper's protocol.
+/// If all participating values are equal, everyone scores 1.
+pub fn scores(q_values: &[Option<f64>]) -> Vec<f64> {
+    let present: Vec<f64> = q_values.iter().filter_map(|v| *v).collect();
+    if present.is_empty() {
+        return vec![0.0; q_values.len()];
+    }
+    let lo = present.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = present.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = hi - lo;
+    q_values
+        .iter()
+        .map(|v| match v {
+            None => 0.0,
+            Some(x) if span == 0.0 => {
+                let _ = x;
+                1.0
+            }
+            Some(x) => 1.0 - (x - lo) / span,
+        })
+        .collect()
+}
+
+/// Sum scores across datasets: `S(A, q) = Σ_X S(A, X, q)`.
+/// `per_dataset[d][a]` = score of algorithm `a` on dataset `d`.
+pub fn sum_scores(per_dataset: &[Vec<f64>]) -> Vec<f64> {
+    if per_dataset.is_empty() {
+        return Vec::new();
+    }
+    let n_alg = per_dataset[0].len();
+    let mut out = vec![0.0; n_alg];
+    for row in per_dataset {
+        assert_eq!(row.len(), n_alg);
+        for (acc, v) in out.iter_mut().zip(row) {
+            *acc += v;
+        }
+    }
+    out
+}
+
+/// Mean score across the two metrics (accuracy, cpu): `M(A, X)` in the paper.
+pub fn mean_score(acc: f64, cpu: f64) -> f64 {
+    0.5 * (acc + cpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_error_sign() {
+        assert!((relative_error(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert!((relative_error(95.0, 100.0) + 5.0).abs() < 1e-12);
+        assert_eq!(relative_error(100.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 6.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 6.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scores_best_gets_one_worst_gets_zero() {
+        let s = scores(&[Some(1.0), Some(3.0), Some(2.0)]);
+        assert_eq!(s[0], 1.0);
+        assert_eq!(s[1], 0.0);
+        assert!((s[2] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scores_failure_scores_zero_and_excluded_from_range() {
+        let s = scores(&[Some(1.0), None, Some(2.0)]);
+        assert_eq!(s[0], 1.0);
+        assert_eq!(s[1], 0.0);
+        assert_eq!(s[2], 0.0);
+    }
+
+    #[test]
+    fn scores_all_equal_all_one() {
+        let s = scores(&[Some(5.0), Some(5.0)]);
+        assert_eq!(s, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn sum_scores_adds_datasets() {
+        let total = sum_scores(&[vec![1.0, 0.0], vec![0.5, 1.0]]);
+        assert_eq!(total, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn paper_table4_shape_sanity() {
+        // Big-means should out-sum a slow accurate method + a fast sloppy
+        // method across two synthetic "datasets": this encodes the score
+        // arithmetic the summary tables rely on.
+        // dataset 1: [bigmeans, slow-accurate, fast-sloppy] accuracy q=E_A
+        let acc1 = scores(&[Some(0.3), Some(0.1), Some(20.0)]);
+        let cpu1 = scores(&[Some(1.0), Some(300.0), Some(0.9)]);
+        let m: Vec<f64> = acc1
+            .iter()
+            .zip(&cpu1)
+            .map(|(a, c)| mean_score(*a, *c))
+            .collect();
+        assert!(m[0] > m[1] && m[0] > m[2]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Wall-clock timing split into the paper's `cpu_init` / `cpu_full` phases.
+
+use std::time::{Duration, Instant};
+
+/// A stopwatch accumulating named phases.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    /// Time spent in the initialization / search phase (`cpu_init`).
+    pub init: Duration,
+    /// Time spent in the final full-dataset phase (`cpu_full`).
+    pub full: Duration,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure into the `init` phase.
+    pub fn time_init<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.init += t.elapsed();
+        r
+    }
+
+    /// Time a closure into the `full` phase.
+    pub fn time_full<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.full += t.elapsed();
+        r
+    }
+
+    /// Total `cpu = cpu_init + cpu_full` in seconds.
+    pub fn total_secs(&self) -> f64 {
+        (self.init + self.full).as_secs_f64()
+    }
+
+    pub fn init_secs(&self) -> f64 {
+        self.init.as_secs_f64()
+    }
+
+    pub fn full_secs(&self) -> f64 {
+        self.full.as_secs_f64()
+    }
+}
+
+/// Simple deadline helper for the paper's `cpu_max` stop condition.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    start: Instant,
+    budget: Duration,
+}
+
+impl Deadline {
+    pub fn new(budget: Duration) -> Self {
+        Deadline { start: Instant::now(), budget }
+    }
+
+    pub fn unlimited() -> Self {
+        Deadline { start: Instant::now(), budget: Duration::MAX }
+    }
+
+    #[inline]
+    pub fn expired(&self) -> bool {
+        self.start.elapsed() >= self.budget
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        let x = t.time_init(|| 21 * 2);
+        assert_eq!(x, 42);
+        t.time_full(|| std::thread::sleep(Duration::from_millis(5)));
+        assert!(t.full_secs() >= 0.004);
+        assert!(t.total_secs() >= t.full_secs());
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let d = Deadline::new(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(d.expired());
+        assert!(!Deadline::unlimited().expired());
+    }
+}

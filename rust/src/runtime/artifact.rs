@@ -1,0 +1,204 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. `artifacts/manifest.json` lists every emitted HLO variant
+//! with its static shape `(s, n, k)` and padding constants.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Kind of computation an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    /// Lloyd local search: (points, centroids, mask) → (centroids', obj, counts, iters).
+    Lloyd,
+    /// One assignment pass: (points, centroids, mask) → (labels, mins).
+    Assign,
+    /// K-means++ seeding: (points, mask, uniforms) → centroids.
+    KmeansPP,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Result<Kind> {
+        match s {
+            "lloyd" => Ok(Kind::Lloyd),
+            "assign" => Ok(Kind::Assign),
+            "kmeanspp" => Ok(Kind::KmeansPP),
+            other => bail!("unknown artifact kind '{other}'"),
+        }
+    }
+}
+
+/// One artifact variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub kind: Kind,
+    pub s: usize,
+    pub n: usize,
+    pub k: usize,
+    pub block_s: usize,
+    pub tol: f64,
+    pub max_iters: u32,
+    pub pad_centroid: f32,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let mut variants = Vec::with_capacity(entries.len());
+        for e in entries {
+            let get_num = |key: &str| -> Result<f64> {
+                e.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("entry missing numeric '{key}'"))
+            };
+            let get_str = |key: &str| -> Result<&str> {
+                e.get(key)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing string '{key}'"))
+            };
+            let file = get_str("file")?;
+            variants.push(Variant {
+                name: get_str("name")?.to_string(),
+                kind: Kind::parse(get_str("kind")?)?,
+                s: get_num("s")? as usize,
+                n: get_num("n")? as usize,
+                k: get_num("k")? as usize,
+                block_s: get_num("block_s")? as usize,
+                tol: get_num("tol")?,
+                max_iters: get_num("max_iters")? as u32,
+                pad_centroid: get_num("pad_centroid")? as f32,
+                path: dir.join(file),
+            });
+        }
+        Ok(Manifest { variants })
+    }
+
+    /// Smallest variant of `kind` that fits `(s, n, k)` by padding
+    /// (`s_v ≥ s`, `n_v ≥ n`, `k_v ≥ k`), minimising padded work
+    /// `s_v · n_v · k_v`. None if nothing fits.
+    pub fn select(&self, kind: Kind, s: usize, n: usize, k: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.kind == kind && v.s >= s && v.n >= n && v.k >= k)
+            .min_by_key(|v| v.s * v.n * v.k)
+    }
+
+    /// Largest chunk capacity available for a kind/n/k (used to block the
+    /// final full-dataset pass).
+    pub fn max_s(&self, kind: Kind, n: usize, k: usize) -> Option<usize> {
+        self.variants
+            .iter()
+            .filter(|v| v.kind == kind && v.n >= n && v.k >= k)
+            .map(|v| v.s)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries_json: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = format!(r#"{{"version": 1, "entries": {entries_json}}}"#);
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn entry(kind: &str, s: usize, n: usize, k: usize) -> String {
+        format!(
+            r#"{{"name": "{kind}_s{s}_n{n}_k{k}", "kind": "{kind}", "s": {s}, "n": {n},
+                 "k": {k}, "block_s": 256, "tol": 0.0001, "max_iters": 100,
+                 "file": "{kind}_s{s}_n{n}_k{k}.hlo.txt", "pad_centroid": 1e15}}"#
+        )
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("bigmeans_manifest_tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn load_and_select_smallest_fit() {
+        let dir = tmpdir("a");
+        write_manifest(
+            &dir,
+            &format!(
+                "[{},{},{}]",
+                entry("lloyd", 1024, 16, 8),
+                entry("lloyd", 4096, 16, 8),
+                entry("lloyd", 1024, 64, 32)
+            ),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        let v = m.select(Kind::Lloyd, 1000, 10, 5).unwrap();
+        assert_eq!((v.s, v.n, v.k), (1024, 16, 8));
+        let v2 = m.select(Kind::Lloyd, 2000, 10, 5).unwrap();
+        assert_eq!(v2.s, 4096);
+        let v3 = m.select(Kind::Lloyd, 100, 50, 20).unwrap();
+        assert_eq!((v3.n, v3.k), (64, 32));
+        assert!(m.select(Kind::Lloyd, 100, 300, 5).is_none()); // n too big
+        assert!(m.select(Kind::Assign, 100, 10, 5).is_none()); // kind absent
+    }
+
+    #[test]
+    fn max_s_picks_largest() {
+        let dir = tmpdir("b");
+        write_manifest(
+            &dir,
+            &format!("[{},{}]", entry("assign", 1024, 16, 8), entry("assign", 16384, 16, 8)),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.max_s(Kind::Assign, 10, 8), Some(16384));
+        assert_eq!(m.max_s(Kind::Assign, 32, 8), None);
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        let dir = tmpdir("c");
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 9, "entries": []}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_loads() {
+        // When `make artifacts` has run, validate the real manifest.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.variants.is_empty());
+            for v in &m.variants {
+                assert!(v.path.exists(), "missing artifact {}", v.path.display());
+            }
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime: load + execute the AOT HLO artifacts via the PJRT C API.
+//!
+//! * [`artifact`] — manifest parsing + variant selection;
+//! * [`pjrt`] — client, executable cache, padded execution;
+//! * [`solver`] — the [`crate::coordinator::ChunkSolver`] implementation
+//!   with native fallback, and `pjrt_bigmeans` to assemble an engine.
+
+pub mod artifact;
+pub mod pjrt;
+pub mod solver;
+
+pub use artifact::{Kind, Manifest, Variant};
+pub use pjrt::PjrtRuntime;
+pub use solver::{pjrt_bigmeans, PjrtSolver};
+
+/// Default artifacts directory relative to the crate root.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

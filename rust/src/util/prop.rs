@@ -1,0 +1,157 @@
+//! Lightweight property-based testing driver (no `proptest` offline).
+//!
+//! `check` runs a property over `cases` randomly generated inputs and, on
+//! failure, performs greedy shrinking via the generator's `shrink` hook so
+//! the panic message carries a near-minimal counterexample.
+
+use crate::util::rng::Rng;
+
+/// A generator of random values with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` random inputs from `gen`, seeded deterministically.
+/// Panics with the (shrunk) counterexample on the first failure.
+pub fn check<G, P>(seed: u64, cases: usize, gen: &G, prop: P)
+where
+    G: Gen,
+    P: Fn(&G::Value) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_loop(gen, v, &prop);
+            panic!("property failed (case {case}, seed {seed}): counterexample = {minimal:?}");
+        }
+    }
+}
+
+fn shrink_loop<G, P>(gen: &G, mut v: G::Value, prop: &P) -> G::Value
+where
+    G: Gen,
+    P: Fn(&G::Value) -> bool,
+{
+    // Greedy descent: keep taking the first failing shrink candidate.
+    'outer: for _ in 0..1000 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+/// Generator for a random clustering problem: `(points, k)` with points a
+/// flat row-major buffer of `m×n` f32 in a bounded box. Shrinks by halving
+/// the number of points.
+pub struct ClusterProblemGen {
+    pub m_range: (usize, usize),
+    pub n_range: (usize, usize),
+    pub k_max: usize,
+    pub coord_range: (f32, f32),
+}
+
+/// A generated problem instance.
+#[derive(Clone, Debug)]
+pub struct ClusterProblem {
+    pub points: Vec<f32>,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl Default for ClusterProblemGen {
+    fn default() -> Self {
+        ClusterProblemGen {
+            m_range: (1, 200),
+            n_range: (1, 16),
+            k_max: 8,
+            coord_range: (-100.0, 100.0),
+        }
+    }
+}
+
+impl Gen for ClusterProblemGen {
+    type Value = ClusterProblem;
+
+    fn generate(&self, rng: &mut Rng) -> ClusterProblem {
+        let m = self.m_range.0 + rng.usize(self.m_range.1 - self.m_range.0 + 1);
+        let n = self.n_range.0 + rng.usize(self.n_range.1 - self.n_range.0 + 1);
+        let k = 1 + rng.usize(self.k_max.min(m));
+        let (lo, hi) = self.coord_range;
+        let points = (0..m * n)
+            .map(|_| lo + (hi - lo) * rng.f32())
+            .collect();
+        ClusterProblem { points, m, n, k }
+    }
+
+    fn shrink(&self, v: &ClusterProblem) -> Vec<ClusterProblem> {
+        let mut out = Vec::new();
+        if v.m > self.m_range.0.max(v.k) {
+            let m2 = (v.m / 2).max(self.m_range.0).max(v.k);
+            out.push(ClusterProblem {
+                points: v.points[..m2 * v.n].to_vec(),
+                m: m2,
+                n: v.n,
+                k: v.k,
+            });
+        }
+        if v.k > 1 {
+            out.push(ClusterProblem {
+                points: v.points.clone(),
+                m: v.m,
+                n: v.n,
+                k: v.k / 2,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_valid_problems() {
+        let gen = ClusterProblemGen::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let p = gen.generate(&mut rng);
+            assert_eq!(p.points.len(), p.m * p.n);
+            assert!(p.k >= 1 && p.k <= p.m);
+        }
+    }
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 50, &ClusterProblemGen::default(), |p| p.k <= p.m);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        check(1, 50, &ClusterProblemGen::default(), |p| p.m > 100);
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        let gen = ClusterProblemGen::default();
+        let mut rng = Rng::new(5);
+        let p = gen.generate(&mut rng);
+        for sp in gen.shrink(&p) {
+            assert!(sp.m < p.m || sp.k < p.k);
+            assert_eq!(sp.points.len(), sp.m * sp.n);
+        }
+    }
+}

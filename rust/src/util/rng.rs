@@ -1,0 +1,289 @@
+//! Deterministic pseudo-random number generation and sampling.
+//!
+//! The offline build has no `rand` crate, so this module provides the RNG
+//! substrate the whole system uses: a SplitMix64-seeded xoshiro256++
+//! generator plus the samplers the clustering algorithms need (uniform
+//! integers without replacement, weighted discrete sampling for K-means++,
+//! Gaussians via Box–Muller for the synthetic data generators).
+//!
+//! Everything is reproducible from a single `u64` seed; independent streams
+//! are derived with [`Rng::split`] so parallel workers never share state.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// SplitMix64 — used to expand a 64-bit seed into xoshiro state and to
+/// derive independent child streams.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create an RNG from a 64-bit seed. Any seed (including 0) is valid.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent child stream (for parallel workers).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_A5A5_DEAD_BEEF)
+    }
+
+    /// Next raw 64 random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound). Uses Lemire's multiply-shift with
+    /// rejection to avoid modulo bias.
+    #[inline]
+    pub fn usize(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "usize(bound): bound must be positive");
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound {
+                return (m >> 64) as usize;
+            }
+            // rejection zone: lo < bound && lo < (2^64 mod bound)
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal via Box–Muller (one value per call; caches the pair).
+    pub fn gaussian(&mut self) -> f64 {
+        // Polar Box–Muller without caching keeps the struct Copy-free simple;
+        // throughput is fine for data generation.
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Sample `count` distinct indices uniformly from [0, n) without
+    /// replacement. O(count) expected when count ≪ n (hash-set rejection),
+    /// O(n) partial Fisher–Yates otherwise.
+    pub fn sample_indices(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n, "cannot sample {count} distinct from {n}");
+        if count * 3 >= n {
+            // Partial Fisher–Yates over a full index vector.
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..count {
+                let j = i + self.usize(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(count);
+            idx
+        } else {
+            // Floyd's algorithm: count iterations, no O(n) allocation.
+            let mut chosen = std::collections::HashSet::with_capacity(count * 2);
+            let mut out = Vec::with_capacity(count);
+            for j in (n - count)..n {
+                let t = self.usize(j + 1);
+                let pick = if chosen.contains(&t) { j } else { t };
+                chosen.insert(pick);
+                out.push(pick);
+            }
+            out
+        }
+    }
+
+    /// Weighted discrete sampling: draw one index with P(i) ∝ weights[i].
+    /// Weights must be non-negative with a positive sum; returns the last
+    /// strictly-positive index if floating-point slack leaves the cursor
+    /// past the end.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        debug_assert!(total > 0.0, "weighted(): total weight must be > 0");
+        let mut cursor = self.f64() * total;
+        let mut last_pos = 0;
+        for (i, &w) in weights.iter().enumerate() {
+            if w > 0.0 {
+                last_pos = i;
+                if cursor < w {
+                    return i;
+                }
+                cursor -= w;
+            }
+        }
+        last_pos
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn usize_bounds_and_coverage() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1_000 {
+            let x = r.usize(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should be hit");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(9);
+        for &(n, c) in &[(100usize, 5usize), (100, 90), (10, 10), (1, 1)] {
+            let s = r.sample_indices(n, c);
+            assert_eq!(s.len(), c);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), c, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean} too far from 0");
+        assert!((var - 1.0).abs() < 0.05, "var {var} too far from 1");
+    }
+
+    #[test]
+    fn weighted_respects_zero_weights() {
+        let mut r = Rng::new(13);
+        let w = [0.0, 1.0, 0.0, 3.0, 0.0];
+        let mut counts = [0usize; 5];
+        for _ in 0..4_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0] + counts[2] + counts[4], 0);
+        let ratio = counts[3] as f64 / counts[1] as f64;
+        assert!((2.0..4.5).contains(&ratio), "ratio {ratio} should be ~3");
+    }
+
+    #[test]
+    fn weighted_concentrated_mass() {
+        let mut r = Rng::new(17);
+        let w = [0.0, 0.0, 5.0];
+        for _ in 0..100 {
+            assert_eq!(r.weighted(&w), 2);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut parent = Rng::new(42);
+        let mut c1 = parent.split();
+        let mut c2 = parent.split();
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,276 @@
+//! Minimal work-stealing-free scoped thread pool.
+//!
+//! The offline build has no `rayon`, so this is the parallelism substrate:
+//! a fixed set of worker threads fed from a shared injector queue, plus a
+//! `scope`-style API (`run_all`, `parallel_for`) that blocks until every
+//! submitted job finishes and propagates panics.
+//!
+//! Design notes: the pool is intentionally simple — one `Mutex<VecDeque>`
+//! injector with a condvar. The clustering workloads submit coarse-grained
+//! jobs (a whole chunk, a row-block of the distance matrix), so injector
+//! contention is negligible; see `benches/hot_path.rs` for the measurement.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    panicked: AtomicBool,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("bigmeans-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size }
+    }
+
+    /// Pool sized to the machine (logical cores).
+    pub fn with_default_size() -> Self {
+        Self::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        )
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    fn submit(&self, job: Job) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(job);
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Run every closure on the pool and block until all complete.
+    /// Panics (after draining) if any job panicked.
+    pub fn run_all<F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'static,
+    {
+        let pending = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
+        for job in jobs {
+            let pending = Arc::clone(&pending);
+            let sh = Arc::clone(&self.shared);
+            self.submit(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(job));
+                if result.is_err() {
+                    sh.panicked.store(true, Ordering::SeqCst);
+                }
+                let (lock, cv) = &*pending;
+                let mut n = lock.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    cv.notify_all();
+                }
+            }));
+        }
+        let (lock, cv) = &*pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+        if self.shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("a pooled job panicked");
+        }
+    }
+
+    /// Parallel-for over `0..n` in contiguous blocks: calls
+    /// `body(start, end)` for each block. `body` must be `Sync` — it is
+    /// shared by reference across workers via scoped threads semantics
+    /// (we clone an `Arc`).
+    pub fn parallel_for_blocks<F>(&self, n: usize, body: F)
+    where
+        F: Fn(usize, usize) + Send + Sync + 'static,
+    {
+        if n == 0 {
+            return;
+        }
+        let nblocks = self.size.min(n);
+        let body = Arc::new(body);
+        let block = n.div_ceil(nblocks);
+        let jobs: Vec<_> = (0..nblocks)
+            .map(|b| {
+                let body = Arc::clone(&body);
+                move || {
+                    let start = b * block;
+                    let end = ((b + 1) * block).min(n);
+                    if start < end {
+                        body(start, end);
+                    }
+                }
+            })
+            .collect();
+        self.run_all(jobs);
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + Default + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let results: Arc<Mutex<Vec<R>>> =
+            Arc::new(Mutex::new((0..n).map(|_| R::default()).collect()));
+        let f = Arc::new(f);
+        let jobs: Vec<_> = items
+            .into_iter()
+            .enumerate()
+            .map(|(i, item)| {
+                let results = Arc::clone(&results);
+                let f = Arc::clone(&f);
+                move || {
+                    let r = f(item);
+                    results.lock().unwrap()[i] = r;
+                }
+            })
+            .collect();
+        self.run_all(jobs);
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("map results still shared"))
+            .into_inner()
+            .unwrap()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break Some(job);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(job) => job(),
+            None => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A cheap atomic counter handle used by jobs to publish progress.
+#[derive(Clone, Default)]
+pub struct SharedCounter(Arc<AtomicUsize>);
+
+impl SharedCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    #[inline]
+    pub fn add(&self, v: usize) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+    #[inline]
+    pub fn get(&self) -> usize {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_all_executes_everything() {
+        let pool = ThreadPool::new(4);
+        let counter = SharedCounter::new();
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = counter.clone();
+                move || c.add(1)
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(counter.get(), 100);
+    }
+
+    #[test]
+    fn parallel_for_blocks_covers_range() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new(Mutex::new(vec![0u8; 1000]));
+        let h = Arc::clone(&hits);
+        pool.parallel_for_blocks(1000, move |s, e| {
+            let mut v = h.lock().unwrap();
+            for i in s..e {
+                v[i] += 1;
+            }
+        });
+        assert!(hits.lock().unwrap().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "a pooled job panicked")]
+    fn panics_propagate() {
+        let pool = ThreadPool::new(2);
+        pool.run_all(vec![|| panic!("boom")]);
+    }
+
+    #[test]
+    fn pool_survives_many_batches() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..20 {
+            let c = SharedCounter::new();
+            let cc = c.clone();
+            pool.run_all(vec![move || cc.add(5)]);
+            assert_eq!(c.get(), 5);
+        }
+    }
+}

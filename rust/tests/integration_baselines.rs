@@ -1,0 +1,166 @@
+//! Integration tests across the §5 baseline roster: cross-algorithm
+//! quality ordering on reference data, failure modes, and the bench
+//! harness end-to-end.
+
+use bigmeans::baselines::{
+    AlgoFailure, DaMssc, ForgyKMeans, KMeansPP, KMeansParallel, LightweightCoreset,
+    LmbmClust, MsscAlgorithm, Wards,
+};
+use bigmeans::bench_harness::{self, tables};
+use bigmeans::data::{catalog, Synth};
+
+fn blobs(m: usize, k_true: usize, seed: u64) -> bigmeans::Dataset {
+    Synth::GaussianMixture {
+        m,
+        n: 4,
+        k_true,
+        spread: 0.25,
+        box_half_width: 20.0,
+    }
+    .generate("blobs", seed)
+}
+
+#[test]
+fn every_baseline_solves_small_blobs() {
+    let data = blobs(2_000, 4, 1);
+    let algos: Vec<Box<dyn MsscAlgorithm>> = vec![
+        Box::new(ForgyKMeans { threads: 1, ..Default::default() }),
+        Box::new(KMeansPP { threads: 1, ..Default::default() }),
+        Box::new(KMeansParallel { threads: 1, ..Default::default() }),
+        Box::new(Wards::default()),
+        Box::new(LmbmClust::default()),
+        Box::new(DaMssc::new(256, 6)),
+        Box::new(LightweightCoreset::new(256)),
+    ];
+    let mut objectives = Vec::new();
+    for algo in &algos {
+        let r = algo
+            .run(&data, 4, 7)
+            .unwrap_or_else(|e| panic!("{} failed: {e}", algo.name()));
+        assert!(r.objective.is_finite(), "{}", algo.name());
+        assert_eq!(r.centroids.len(), 16, "{}", algo.name());
+        objectives.push((algo.name(), r.objective));
+    }
+    // On separable blobs every algorithm should land within 3× of the best.
+    let best = objectives.iter().map(|(_, o)| *o).fold(f64::INFINITY, f64::min);
+    for (name, obj) in &objectives {
+        assert!(
+            *obj <= best * 3.0,
+            "{name} objective {obj:.4e} is an outlier (best {best:.4e})"
+        );
+    }
+}
+
+#[test]
+fn accurate_methods_beat_forgy_on_hard_data() {
+    // The paper's quality ordering: Ward's / LMBM / K-means++ are the
+    // accurate end, Forgy the noisy end. Use a many-cluster problem where
+    // uniform seeding collapses clusters.
+    let data = Synth::RandomClusters {
+        m: 3_000,
+        n: 3,
+        k_true: 10,
+        max_spread: 1.0,
+    }
+    .generate("hard", 3);
+    let k = 10;
+    let mut forgy_mean = 0.0;
+    let mut pp_mean = 0.0;
+    let runs = 5;
+    for seed in 0..runs {
+        forgy_mean += ForgyKMeans { threads: 1, ..Default::default() }
+            .run(&data, k, seed)
+            .unwrap()
+            .objective;
+        pp_mean += KMeansPP { threads: 1, ..Default::default() }
+            .run(&data, k, seed)
+            .unwrap()
+            .objective;
+    }
+    forgy_mean /= runs as f64;
+    pp_mean /= runs as f64;
+    let ward = Wards::default().run(&data, k, 0).unwrap().objective;
+    assert!(
+        pp_mean <= forgy_mean * 1.02,
+        "kmeans++ mean {pp_mean:.4e} vs forgy {forgy_mean:.4e}"
+    );
+    assert!(
+        ward <= forgy_mean * 1.10,
+        "ward {ward:.4e} vs forgy mean {forgy_mean:.4e}"
+    );
+}
+
+#[test]
+fn wards_oom_matches_paper_dash_semantics() {
+    // Default Ward's cap is 512 MiB for the m² matrix → the large catalog
+    // sets must fail exactly like the paper's "—" entries.
+    let entry = catalog::find("HEPMASS").unwrap();
+    let data = entry.generate(1);
+    match Wards::default().run(&data, 5, 0) {
+        Err(AlgoFailure::OutOfMemory { .. }) => {}
+        other => panic!("expected Ward's OOM on m={}, got {other:?}", data.m()),
+    }
+}
+
+#[test]
+fn paper_cost_ordering_on_large_data() {
+    // On a "large" set: Big-means and Forgy are the cheap end; K-means||
+    // pays the multi-pass init tax; LMBM is the expensive end.
+    let data = blobs(40_000, 6, 5);
+    let k = 6;
+    let forgy = ForgyKMeans { threads: 1, ..Default::default() }
+        .run(&data, k, 1)
+        .unwrap();
+    let par = KMeansParallel { threads: 1, ..Default::default() }
+        .run(&data, k, 1)
+        .unwrap();
+    let lmbm = LmbmClust { time_budget_secs: 120.0, ..Default::default() }
+        .run(&data, k, 1)
+        .unwrap();
+    assert!(
+        par.counters.distance_evals > forgy.counters.distance_evals,
+        "k-means|| init should cost more evals than forgy ({} vs {})",
+        par.counters.distance_evals,
+        forgy.counters.distance_evals
+    );
+    assert!(
+        lmbm.cpu_total_secs() > forgy.cpu_total_secs(),
+        "lmbm {}s should out-cost forgy {}s",
+        lmbm.cpu_total_secs(),
+        forgy.cpu_total_secs()
+    );
+}
+
+#[test]
+fn harness_generates_complete_paper_tables() {
+    // End-to-end through the bench harness on the smallest catalog entry
+    // with the full roster — every table artifact must materialise.
+    let entry = catalog::find("D15112").unwrap();
+    let data = entry.generate(9);
+    let roster = bench_harness::paper_roster(&entry);
+    let exp = bench_harness::run_experiment(&data, &roster, &[2, 5], 2, 11);
+    let summary = tables::summary_table(&exp);
+    assert_eq!(summary.rows.len(), roster.len() * 2);
+    // Big-Means must have succeeded everywhere.
+    for row in summary.rows.iter().filter(|r| r.algorithm == "Big-Means") {
+        assert!(row.ea.is_some(), "Big-Means failed at k={}", row.k);
+    }
+    let details = tables::details_table(&exp);
+    assert!(!details.is_empty());
+    let scores = tables::dataset_scores(&exp);
+    assert_eq!(scores.len(), roster.len());
+    let t4 = tables::table4(&[scores]);
+    let bm = t4.iter().find(|r| r.algorithm == "Big-Means").unwrap();
+    assert!(bm.mean_pct >= 0.0 && bm.mean_pct <= 100.0);
+}
+
+#[test]
+fn coreset_cheaper_than_full_but_close() {
+    let data = blobs(20_000, 5, 7);
+    let coreset = LightweightCoreset::new(1024).run(&data, 5, 3).unwrap();
+    let pp = KMeansPP { threads: 1, ..Default::default() }
+        .run(&data, 5, 3)
+        .unwrap();
+    assert!(coreset.objective <= pp.objective * 1.25);
+    assert!(coreset.counters.distance_evals < pp.counters.distance_evals);
+}

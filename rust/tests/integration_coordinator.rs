@@ -1,0 +1,188 @@
+//! Integration tests for the L3 coordinator across engines, modes and
+//! datasets: quality vs references, failure injection, and the paper's
+//! qualitative claims at module boundaries.
+
+use std::time::Duration;
+
+use bigmeans::baselines::{ForgyKMeans, KMeansPP, MsscAlgorithm};
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::data::{catalog, Synth};
+use bigmeans::kernels;
+use bigmeans::metrics::Counters;
+use bigmeans::BigMeans;
+
+fn mixture(m: usize, n: usize, k_true: usize, seed: u64) -> bigmeans::Dataset {
+    Synth::GaussianMixture {
+        m,
+        n,
+        k_true,
+        spread: 0.3,
+        box_half_width: 25.0,
+    }
+    .generate("mix", seed)
+}
+
+#[test]
+fn bigmeans_matches_full_kmeanspp_quality_on_blobs() {
+    // On separable data with a fair budget, Big-means should land within a
+    // few percent of full-data K-means++ (the paper's accuracy claim).
+    let data = mixture(30_000, 6, 8, 1);
+    let cfg = BigMeansConfig::new(8, 2048)
+        .with_stop(StopCondition::MaxChunks(60))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(3);
+    let bm = BigMeans::new(cfg).run(&data).unwrap();
+    let pp = KMeansPP { threads: 1, ..Default::default() }
+        .run(&data, 8, 3)
+        .unwrap();
+    let ratio = bm.objective / pp.objective;
+    assert!(
+        ratio < 1.10,
+        "big-means {:.4e} vs kmeans++ {:.4e} (ratio {ratio:.3})",
+        bm.objective,
+        pp.objective
+    );
+}
+
+#[test]
+fn bigmeans_uses_fraction_of_distance_evals_vs_forgy() {
+    // The headline scalability claim: far fewer distance evaluations than
+    // full-dataset iterating algorithms on big data.
+    let data = mixture(120_000, 8, 10, 2);
+    let mut cfg = BigMeansConfig::new(10, 1024)
+        .with_stop(StopCondition::MaxChunks(25))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(5);
+    // Search phase only — the paper notes the final assignment pass is
+    // optional (§4.1) and it's the only full-m work Big-means ever does.
+    cfg.skip_final_assignment = true;
+    let bm = BigMeans::new(cfg.clone()).run(&data).unwrap();
+    let forgy = ForgyKMeans { threads: 1, ..Default::default() }
+        .run(&data, 10, 5)
+        .unwrap();
+    assert!(
+        bm.counters.distance_evals * 2 < forgy.counters.distance_evals,
+        "bigmeans n_d {} should be ≪ forgy n_d {}",
+        bm.counters.distance_evals,
+        forgy.counters.distance_evals
+    );
+    // …at comparable quality (within 15% on blobs), judged on the full SSE.
+    cfg.skip_final_assignment = false;
+    let bm_full = BigMeans::new(cfg).run(&data).unwrap();
+    assert!(bm_full.objective < forgy.objective * 1.15);
+}
+
+#[test]
+fn incumbent_chunk_objective_is_monotone_over_budget() {
+    // Keep-the-best ⇒ larger chunk budgets never worsen the incumbent.
+    let data = mixture(20_000, 5, 6, 3);
+    let mut prev = f64::INFINITY;
+    for &chunks in &[1u64, 4, 16, 64] {
+        let mut cfg = BigMeansConfig::new(6, 1024)
+            .with_stop(StopCondition::MaxChunks(chunks))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(9);
+        cfg.skip_final_assignment = true;
+        let r = BigMeans::new(cfg).run(&data).unwrap();
+        assert!(
+            r.best_chunk_objective <= prev * 1.000001,
+            "chunk budget {chunks}: {} > prev {prev}",
+            r.best_chunk_objective
+        );
+        prev = r.best_chunk_objective;
+    }
+}
+
+#[test]
+fn degenerate_centroids_reseeded_not_leaked() {
+    // k far above k_true forces degeneracy every chunk; the final
+    // assignment must still produce a finite objective and valid labels.
+    let data = mixture(5_000, 4, 2, 4);
+    let cfg = BigMeansConfig::new(16, 512)
+        .with_stop(StopCondition::MaxChunks(12))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(1);
+    let r = BigMeans::new(cfg).run(&data).unwrap();
+    assert!(r.objective.is_finite());
+    assert!(r.assignment.iter().all(|&a| (a as usize) < 16));
+    let forgy = ForgyKMeans { threads: 1, ..Default::default() }
+        .run(&data, 16, 1)
+        .unwrap();
+    assert!(r.objective < forgy.objective * 1.5);
+}
+
+#[test]
+fn all_parallel_modes_agree_in_quality() {
+    let data = mixture(30_000, 6, 6, 5);
+    let mk = |mode| {
+        BigMeansConfig::new(6, 2048)
+            .with_stop(StopCondition::MaxTime(Duration::from_millis(400)))
+            .with_parallel(mode)
+            .with_seed(11)
+    };
+    let seq = BigMeans::new(mk(ParallelMode::Sequential)).run(&data).unwrap();
+    let inner = BigMeans::new(mk(ParallelMode::InnerParallel)).run(&data).unwrap();
+    let chunks = BigMeans::new(mk(ParallelMode::ChunkParallel)).run(&data).unwrap();
+    for (label, r) in [("seq", &seq), ("inner", &inner), ("chunks", &chunks)] {
+        assert!(
+            r.objective <= seq.objective * 1.25,
+            "{label} objective {:.4e} off vs seq {:.4e}",
+            r.objective,
+            seq.objective
+        );
+    }
+}
+
+#[test]
+fn order_independence_of_dataset_rows() {
+    // Requirement 8 (§2.2): results must not depend on row order. Uniform
+    // sampling guarantees distributional equality; with a fixed seed the
+    // chunks differ, so we compare *quality*, not bit-equality.
+    let data = mixture(10_000, 4, 5, 6);
+    let n = data.n();
+    let mut rev = Vec::with_capacity(data.points().len());
+    for i in (0..data.m()).rev() {
+        rev.extend_from_slice(&data.points()[i * n..(i + 1) * n]);
+    }
+    let data_rev = bigmeans::Dataset::from_vec("rev", rev, data.m(), n);
+    let mk = || {
+        BigMeansConfig::new(5, 1024)
+            .with_stop(StopCondition::MaxChunks(30))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(13)
+    };
+    let a = BigMeans::new(mk()).run(&data).unwrap();
+    let b = BigMeans::new(mk()).run(&data_rev).unwrap();
+    let rel = (a.objective - b.objective).abs() / a.objective;
+    assert!(rel < 0.10, "order dependence: {} vs {}", a.objective, b.objective);
+}
+
+#[test]
+fn full_objective_consistent_with_manual_evaluation() {
+    let data = mixture(8_000, 5, 4, 7);
+    let cfg = BigMeansConfig::new(4, 1024)
+        .with_stop(StopCondition::MaxChunks(10))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(17);
+    let r = BigMeans::new(cfg).run(&data).unwrap();
+    let mut c = Counters::new();
+    let manual =
+        kernels::objective(data.points(), &r.centroids, data.m(), data.n(), 4, &mut c);
+    let rel = (manual - r.objective).abs() / manual;
+    assert!(rel < 1e-6, "reported {} vs manual {}", r.objective, manual);
+}
+
+#[test]
+fn catalog_entry_runs_end_to_end() {
+    let entry = catalog::find("D15112").unwrap();
+    let data = entry.generate(1);
+    let cfg = BigMeansConfig::new(5, entry.chunk_size)
+        .with_stop(StopCondition::TimeOrChunks(
+            Duration::from_secs_f64(entry.cpu_max_secs),
+            50,
+        ))
+        .with_seed(23);
+    let r = BigMeans::new(cfg).run(&data).unwrap();
+    assert!(r.objective.is_finite());
+    assert_eq!(r.assignment.len(), entry.m);
+}

@@ -1,0 +1,191 @@
+//! Integration: the AOT HLO artifacts executed from rust via PJRT must
+//! agree with the native kernel substrate — the cross-layer correctness
+//! signal (L1/L2 numerics == L3 numerics).
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so plain
+//! `cargo test` works on a fresh checkout).
+
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::coordinator::solver::{ChunkSolver, NativeSolver};
+use bigmeans::data::synth::Synth;
+use bigmeans::kernels;
+use bigmeans::metrics::Counters;
+use bigmeans::runtime::{default_artifacts_dir, pjrt_bigmeans, Kind, Manifest, PjrtSolver};
+use bigmeans::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+fn test_problem(rows: usize, n: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let data = Synth::GaussianMixture {
+        m: rows,
+        n,
+        k_true: k,
+        spread: 0.4,
+        box_half_width: 15.0,
+    }
+    .generate("t", seed);
+    let mut rng = Rng::new(seed);
+    let mut c = Counters::new();
+    let seed_c = kernels::kmeanspp(data.points(), rows, n, k, 1, &mut rng, &mut c);
+    (data.points().to_vec(), seed_c)
+}
+
+#[test]
+fn manifest_covers_expected_family() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let m = Manifest::load(&default_artifacts_dir()).unwrap();
+    for kind in [Kind::Lloyd, Kind::Assign, Kind::KmeansPP] {
+        assert!(
+            m.select(kind, 1000, 16, 8).is_some(),
+            "missing {kind:?} variant for (1000, 16, 8)"
+        );
+    }
+    // Largest default variant: s=16384, n=128, k=32.
+    assert!(m.select(Kind::Lloyd, 16384, 128, 32).is_some());
+    assert!(m.select(Kind::Lloyd, 16385, 128, 32).is_none());
+}
+
+#[test]
+fn pjrt_lloyd_matches_native_exact_shape() {
+    if !artifacts_ready() {
+        return;
+    }
+    // Shape matches an artifact exactly (1024, 16, 8): no padding involved.
+    let (pts, seed_c) = test_problem(1024, 16, 8, 1);
+    let solver = PjrtSolver::open(&default_artifacts_dir(), Default::default()).unwrap();
+    let native = NativeSolver::sequential(Default::default());
+    let mut c1 = Counters::new();
+    let mut c2 = Counters::new();
+    let a = solver.lloyd(&pts, 1024, 16, 8, &seed_c, &mut c1);
+    let b = native.lloyd(&pts, 1024, 16, 8, &seed_c, &mut c2);
+    assert_eq!(solver.solve_counts().0, 1, "must run on PJRT, not fallback");
+    // Same seed, same algorithm → same local minimum (fp tolerance).
+    let rel = (a.objective - b.objective).abs() / b.objective;
+    assert!(rel < 1e-3, "objectives diverge: pjrt={} native={}", a.objective, b.objective);
+    assert_eq!(a.counts, b.counts, "cluster sizes must match");
+    for (x, y) in a.centroids.iter().zip(&b.centroids) {
+        assert!((x - y).abs() < 1e-2, "centroid drift {x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_lloyd_padded_rows_features_clusters() {
+    if !artifacts_ready() {
+        return;
+    }
+    // (700, 10, 5) forces padding in all three dims → (1024, 16, 8).
+    let (pts, seed_c) = test_problem(700, 10, 5, 2);
+    let solver = PjrtSolver::open(&default_artifacts_dir(), Default::default()).unwrap();
+    let native = NativeSolver::sequential(Default::default());
+    let mut c1 = Counters::new();
+    let mut c2 = Counters::new();
+    let a = solver.lloyd(&pts, 700, 10, 5, &seed_c, &mut c1);
+    let b = native.lloyd(&pts, 700, 10, 5, &seed_c, &mut c2);
+    assert_eq!(solver.solve_counts().0, 1);
+    let rel = (a.objective - b.objective).abs() / b.objective;
+    assert!(rel < 1e-3, "padded objectives diverge: {} vs {}", a.objective, b.objective);
+    assert_eq!(a.counts.len(), 5);
+    assert_eq!(a.counts.iter().sum::<u64>(), 700);
+}
+
+#[test]
+fn pjrt_assign_matches_native_blocked() {
+    if !artifacts_ready() {
+        return;
+    }
+    // rows > largest variant (16384) exercises the blocking path.
+    let (pts, seed_c) = test_problem(20_000, 8, 6, 3);
+    let solver = PjrtSolver::open(&default_artifacts_dir(), Default::default()).unwrap();
+    let native = NativeSolver::sequential(Default::default());
+    let mut c1 = Counters::new();
+    let mut c2 = Counters::new();
+    let (la, ma) = solver.assign(&pts, 20_000, 8, 6, &seed_c, &mut c1);
+    let (lb, mb) = native.assign(&pts, 20_000, 8, 6, &seed_c, &mut c2);
+    assert_eq!(la, lb, "labels must match exactly");
+    let mut worst = 0f32;
+    for (x, y) in ma.iter().zip(&mb) {
+        worst = worst.max((x - y).abs());
+    }
+    assert!(worst < 1e-2, "min-distance drift {worst}");
+    assert_eq!(c1.distance_evals, c2.distance_evals);
+}
+
+#[test]
+fn pjrt_kmeanspp_selects_data_points() {
+    if !artifacts_ready() {
+        return;
+    }
+    let (pts, _) = test_problem(1024, 16, 8, 4);
+    let solver = PjrtSolver::open(&default_artifacts_dir(), Default::default()).unwrap();
+    let mut rng = Rng::new(9);
+    let mut c = Counters::new();
+    let cs = solver.kmeanspp(&pts, 1024, 16, 8, &mut rng, &mut c);
+    assert_eq!(cs.len(), 8 * 16);
+    for j in 0..8 {
+        let cj = &cs[j * 16..(j + 1) * 16];
+        let mut best = f32::INFINITY;
+        for i in 0..1024 {
+            let d: f32 = pts[i * 16..(i + 1) * 16]
+                .iter()
+                .zip(cj)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            best = best.min(d);
+        }
+        assert!(best < 1e-6, "centroid {j} not a data point (d²={best})");
+    }
+}
+
+#[test]
+fn pjrt_fallback_on_oversized_shape() {
+    if !artifacts_ready() {
+        return;
+    }
+    // n=200 exceeds every artifact (max 128) → native fallback must kick in.
+    let (pts, seed_c) = test_problem(256, 200, 4, 5);
+    let solver = PjrtSolver::open(&default_artifacts_dir(), Default::default()).unwrap();
+    let mut c = Counters::new();
+    let r = solver.lloyd(&pts, 256, 200, 4, &seed_c, &mut c);
+    assert!(r.objective.is_finite());
+    assert_eq!(solver.solve_counts(), (0, 1), "must have fallen back to native");
+}
+
+#[test]
+fn bigmeans_end_to_end_on_pjrt_engine() {
+    if !artifacts_ready() {
+        return;
+    }
+    let data = Synth::GaussianMixture {
+        m: 8000,
+        n: 12,
+        k_true: 6,
+        spread: 0.3,
+        box_half_width: 20.0,
+    }
+    .generate("e2e", 7);
+    let cfg = BigMeansConfig::new(6, 1024)
+        .with_stop(StopCondition::MaxChunks(15))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(11);
+    let pjrt = pjrt_bigmeans(cfg.clone(), &default_artifacts_dir())
+        .unwrap()
+        .run(&data)
+        .unwrap();
+    let native = bigmeans::BigMeans::new(cfg).run(&data).unwrap();
+    assert!(pjrt.objective.is_finite());
+    // Same seeds → same chunk draws; engines differ only in fp details, so
+    // the final objectives should be very close.
+    let rel = (pjrt.objective - native.objective).abs() / native.objective;
+    assert!(
+        rel < 0.05,
+        "pjrt {} vs native {} (rel {rel})",
+        pjrt.objective,
+        native.objective
+    );
+    assert_eq!(pjrt.assignment.len(), 8000);
+}

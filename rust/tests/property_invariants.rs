@@ -1,0 +1,188 @@
+//! Property-based tests over the kernel and coordinator invariants, driven
+//! by the in-crate `util::prop` shrinking harness (no proptest offline).
+
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::kernels;
+use bigmeans::metrics::Counters;
+use bigmeans::util::prop::{check, ClusterProblem, ClusterProblemGen};
+use bigmeans::util::rng::Rng;
+use bigmeans::BigMeans;
+
+fn seed_centroids(p: &ClusterProblem, rng: &mut Rng) -> Vec<f32> {
+    let idx = rng.sample_indices(p.m, p.k);
+    let mut c = Vec::with_capacity(p.k * p.n);
+    for &i in &idx {
+        c.extend_from_slice(&p.points[i * p.n..(i + 1) * p.n]);
+    }
+    c
+}
+
+#[test]
+fn prop_assignment_partitions_points() {
+    // Assignment invariants for arbitrary shapes/values: every point gets a
+    // valid label, counts partition m, objective equals Σ mins.
+    check(1, 120, &ClusterProblemGen::default(), |p| {
+        let mut rng = Rng::new(7);
+        let c = seed_centroids(p, &mut rng);
+        let mut counters = Counters::new();
+        let out = kernels::assign_accumulate(&p.points, &c, p.m, p.n, p.k, &mut counters);
+        let labels_ok = out.labels.iter().all(|&l| (l as usize) < p.k);
+        let counts_ok = out.counts.iter().sum::<u64>() == p.m as u64;
+        let sum_mins: f64 = out.mins.iter().map(|&x| x as f64).sum();
+        let obj_ok = (out.objective - sum_mins).abs() <= 1e-3 * sum_mins.max(1.0);
+        let evals_ok = counters.distance_evals == (p.m * p.k) as u64;
+        labels_ok && counts_ok && obj_ok && evals_ok
+    });
+}
+
+#[test]
+fn prop_assignment_chooses_true_nearest() {
+    // Cross-check blocked panel argmin against the direct per-point path.
+    check(2, 80, &ClusterProblemGen::default(), |p| {
+        let mut rng = Rng::new(11);
+        let c = seed_centroids(p, &mut rng);
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let fused = kernels::assign_accumulate(&p.points, &c, p.m, p.n, p.k, &mut c1);
+        let (direct, _) = kernels::assign_only(&p.points, &c, p.m, p.n, p.k, &mut c2);
+        fused.labels == direct
+    });
+}
+
+#[test]
+fn prop_lloyd_never_increases_objective() {
+    // Lloyd monotonicity: the converged objective never exceeds the seed's.
+    check(3, 60, &ClusterProblemGen::default(), |p| {
+        let mut rng = Rng::new(13);
+        let c = seed_centroids(p, &mut rng);
+        let mut counters = Counters::new();
+        let before = kernels::objective(&p.points, &c, p.m, p.n, p.k, &mut counters);
+        let r = kernels::lloyd(
+            &p.points,
+            &c,
+            p.m,
+            p.n,
+            p.k,
+            Default::default(),
+            None,
+            &mut counters,
+        );
+        r.objective <= before * (1.0 + 1e-5) + 1e-4
+    });
+}
+
+#[test]
+fn prop_update_centroids_are_means() {
+    // After one assignment+update, each non-degenerate centroid is the mean
+    // of its assigned points.
+    check(4, 60, &ClusterProblemGen::default(), |p| {
+        let mut rng = Rng::new(17);
+        let c0 = seed_centroids(p, &mut rng);
+        let mut counters = Counters::new();
+        let out = kernels::assign_accumulate(&p.points, &c0, p.m, p.n, p.k, &mut counters);
+        let mut c = c0.clone();
+        kernels::update_centroids(&out.sums, &out.counts, &mut c, p.k, p.n);
+        for j in 0..p.k {
+            if out.counts[j] == 0 {
+                // degenerate: untouched
+                if c[j * p.n..(j + 1) * p.n] != c0[j * p.n..(j + 1) * p.n] {
+                    return false;
+                }
+                continue;
+            }
+            // recompute mean directly
+            let mut mean = vec![0f64; p.n];
+            let mut cnt = 0u64;
+            for (i, &l) in out.labels.iter().enumerate() {
+                if l as usize == j {
+                    cnt += 1;
+                    for t in 0..p.n {
+                        mean[t] += p.points[i * p.n + t] as f64;
+                    }
+                }
+            }
+            if cnt != out.counts[j] {
+                return false;
+            }
+            for t in 0..p.n {
+                let want = (mean[t] / cnt as f64) as f32;
+                let got = c[j * p.n + t];
+                if (want - got).abs() > 1e-2 * want.abs().max(1.0) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_kmeanspp_selects_distinct_data_points_when_possible() {
+    check(5, 60, &ClusterProblemGen::default(), |p| {
+        let mut rng = Rng::new(19);
+        let mut counters = Counters::new();
+        let c = kernels::kmeanspp(&p.points, p.m, p.n, p.k, 1, &mut rng, &mut counters);
+        // every centroid is a data point
+        for j in 0..p.k {
+            let cj = &c[j * p.n..(j + 1) * p.n];
+            let found = (0..p.m).any(|i| {
+                p.points[i * p.n..(i + 1) * p.n]
+                    .iter()
+                    .zip(cj)
+                    .all(|(a, b)| a == b)
+            });
+            if !found {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_bigmeans_total_counts_and_finite_objective() {
+    // Coordinator-level invariants on random problems: runs complete, the
+    // assignment covers all m points, counters are consistent.
+    let gen = ClusterProblemGen {
+        m_range: (50, 400),
+        n_range: (1, 8),
+        k_max: 6,
+        coord_range: (-50.0, 50.0),
+    };
+    check(6, 25, &gen, |p| {
+        let data = bigmeans::Dataset::from_vec("prop", p.points.clone(), p.m, p.n);
+        let cfg = BigMeansConfig::new(p.k, (p.m / 2).max(p.k))
+            .with_stop(StopCondition::MaxChunks(5))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(23);
+        let Ok(r) = BigMeans::new(cfg).run(&data) else {
+            return false;
+        };
+        r.objective.is_finite()
+            && r.assignment.len() == p.m
+            && r.assignment.iter().all(|&a| (a as usize) < p.k)
+            && r.counters.chunks == 5
+    });
+}
+
+#[test]
+fn prop_objective_zero_iff_centroids_cover_points() {
+    // Degenerate geometry: if every point IS a centroid, objective is 0.
+    let gen = ClusterProblemGen {
+        m_range: (1, 8),
+        n_range: (1, 4),
+        k_max: 8,
+        coord_range: (-10.0, 10.0),
+    };
+    check(7, 60, &gen, |p| {
+        if p.k < p.m {
+            return true; // only check the covering case
+        }
+        let mut counters = Counters::new();
+        let mut c = p.points.clone();
+        c.resize(p.k * p.n, f32::MAX); // pad extra slots far away
+        c[..p.m * p.n].copy_from_slice(&p.points);
+        let obj = kernels::objective(&p.points, &c, p.m, p.n, p.k, &mut counters);
+        obj == 0.0
+    });
+}
