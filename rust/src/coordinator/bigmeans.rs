@@ -20,7 +20,7 @@ use crate::coordinator::incumbent::Solution;
 use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::dataset::Dataset;
+use crate::data::source::DataSource;
 use crate::kernels::{self, update::degenerate_indices};
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
@@ -72,8 +72,11 @@ impl BigMeans {
         &self.config
     }
 
-    /// Run on a dataset.
-    pub fn run(&self, data: &Dataset) -> Result<BigMeansResult, String> {
+    /// Run on any [`DataSource`] — an in-memory [`crate::data::Dataset`],
+    /// an mmap'd [`crate::data::BmxSource`], or an indexed
+    /// [`crate::data::CsvSource`]. `&Dataset` coerces, so existing
+    /// `run(&dataset)` call sites keep working.
+    pub fn run(&self, data: &dyn DataSource) -> Result<BigMeansResult, String> {
         let (m, n) = (data.m(), data.n());
         self.config.validate(m, n)?;
         match self.config.parallel {
@@ -86,7 +89,7 @@ impl BigMeans {
         }
     }
 
-    fn run_sequential(&self, data: &Dataset) -> BigMeansResult {
+    fn run_sequential(&self, data: &dyn DataSource) -> BigMeansResult {
         let cfg = &self.config;
         let (m, n, k) = (data.m(), data.n(), cfg.k);
         let s = cfg.chunk_size.min(m);
@@ -135,12 +138,21 @@ impl BigMeans {
     }
 }
 
+/// Rows per block of the final full-dataset pass. Fixed (rather than "all
+/// of m") so the pass streams out-of-core sources in bounded memory — and
+/// so every backend runs the exact same arithmetic: identical block
+/// boundaries plus row-ordered f64 accumulation make the reported objective
+/// bit-for-bit independent of where the bytes live.
+pub(crate) const FINAL_PASS_BLOCK_ROWS: usize = 8192;
+
 /// Final full-dataset pass + result assembly (shared between the
-/// sequential and chunk-parallel pipelines).
+/// sequential and chunk-parallel pipelines). Streams the source in
+/// [`FINAL_PASS_BLOCK_ROWS`]-row blocks; resident sources (in-memory,
+/// mmap) are sliced in place, others are copied block-by-block.
 pub(crate) fn finish(
     cfg: &BigMeansConfig,
     solver: &dyn ChunkSolver,
-    data: &Dataset,
+    data: &dyn DataSource,
     incumbent: Solution,
     improvements: u64,
     mut counters: Counters,
@@ -159,10 +171,30 @@ pub(crate) fn finish(
         (Vec::new(), f64::NAN)
     } else {
         timer.time_full(|| {
-            let (labels, mins) =
-                solver.assign(data.points(), m, n, k, &centroids, &mut counters);
+            let resident = data.contiguous();
+            let mut labels = Vec::with_capacity(m);
+            let mut obj = 0f64;
+            let mut scratch = Vec::new();
+            let mut start = 0usize;
+            while start < m {
+                let rows = FINAL_PASS_BLOCK_ROWS.min(m - start);
+                let block: &[f32] = match resident {
+                    Some(all) => &all[start * n..(start + rows) * n],
+                    None => {
+                        scratch.resize(rows * n, 0.0);
+                        data.read_rows(start, &mut scratch[..rows * n]);
+                        &scratch[..rows * n]
+                    }
+                };
+                let (l, mins) =
+                    solver.assign(block, rows, n, k, &centroids, &mut counters);
+                labels.extend_from_slice(&l);
+                for &d in &mins {
+                    obj += d as f64;
+                }
+                start += rows;
+            }
             counters.full_iterations += 1;
-            let obj = mins.iter().map(|&d| d as f64).sum::<f64>();
             (labels, obj)
         })
     };
@@ -235,6 +267,7 @@ pub(crate) fn reseed(
 mod tests {
     use super::*;
     use crate::coordinator::config::StopCondition;
+    use crate::data::dataset::Dataset;
     use crate::data::synth::Synth;
 
     fn blobs(m: usize, k_true: usize, seed: u64) -> Dataset {

@@ -34,6 +34,8 @@ pub enum StopCondition {
     TimeOrChunks(Duration, u64),
 }
 
+pub use crate::data::source::DataBackend;
+
 /// Parallelisation mode (paper §3, two strategies).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ParallelMode {
@@ -66,6 +68,10 @@ pub struct BigMeansConfig {
     pub engine: Engine,
     /// Parallelisation mode.
     pub parallel: ParallelMode,
+    /// How dataset *files* are opened — consumed by
+    /// [`crate::data::loader::open_source`] (the CLI passes
+    /// `cfg.backend` there before running).
+    pub backend: DataBackend,
     /// Worker threads (`InnerParallel`: kernel threads; `ChunkParallel`:
     /// concurrent chunks). 0 = machine default.
     pub threads: usize,
@@ -88,6 +94,7 @@ impl BigMeansConfig {
             candidates: 3,
             engine: Engine::Native,
             parallel: ParallelMode::InnerParallel,
+            backend: DataBackend::InMemory,
             threads: 0,
             seed: 0xB16_3EA5,
             skip_final_assignment: false,
@@ -111,6 +118,11 @@ impl BigMeansConfig {
 
     pub fn with_parallel(mut self, mode: ParallelMode) -> Self {
         self.parallel = mode;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: DataBackend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -142,6 +154,7 @@ mod tests {
         let c = BigMeansConfig::new(5, 4096);
         assert_eq!(c.candidates, 3);
         assert_eq!(c.reinit, ReinitStrategy::KmeansPP);
+        assert_eq!(c.backend, DataBackend::InMemory);
         assert!((c.lloyd.tol - 1e-4).abs() < 1e-12);
         assert_eq!(c.lloyd.max_iters, 300);
     }

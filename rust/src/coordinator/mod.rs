@@ -19,7 +19,9 @@ pub mod stream;
 pub mod vns;
 
 pub use bigmeans::{BigMeans, BigMeansResult};
-pub use config::{BigMeansConfig, Engine, ParallelMode, ReinitStrategy, StopCondition};
+pub use config::{
+    BigMeansConfig, DataBackend, Engine, ParallelMode, ReinitStrategy, StopCondition,
+};
 pub use solver::{ChunkSolver, NativeSolver};
-pub use stream::{ChunkQueue, StreamChunk, StreamingBigMeans};
+pub use stream::{produce_from_source, ChunkQueue, StreamChunk, StreamingBigMeans};
 pub use vns::{run_vns, VnsConfig, VnsResult};

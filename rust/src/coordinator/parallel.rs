@@ -5,17 +5,28 @@
 //! its own chunk, reseed degenerates, run the local search, and *offer* the
 //! result — accepted only if it still beats the incumbent at offer time.
 //! Workers race, but the incumbent objective is monotone by construction.
+//!
+//! Chunk budgets are enforced with an atomic ticket counter: a worker takes
+//! a ticket *before* sampling and exits once the budget is spent, so a
+//! `MaxChunks` run processes exactly that many chunks. With one worker this
+//! makes the pipeline fully deterministic — the out-of-core tests use that
+//! to assert bit-identical results across data backends. Time budgets are
+//! still signalled by the coordinator thread through the `done` flag.
+//!
+//! The dataset is shared as `&dyn DataSource`, so workers gather their
+//! chunks straight from an mmap'd or indexed on-disk source — chunk-level
+//! parallelism composes with out-of-core data for free.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::bigmeans::{reseed, BigMeansResult};
-use crate::coordinator::config::BigMeansConfig;
+use crate::coordinator::config::{BigMeansConfig, StopCondition};
 use crate::coordinator::incumbent::{SharedIncumbent, Solution};
 use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::dataset::Dataset;
+use crate::data::source::DataSource;
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
@@ -27,7 +38,7 @@ use crate::util::rng::Rng;
 /// alternatives, not composed).
 pub fn run_chunk_parallel(
     cfg: &BigMeansConfig,
-    data: &Dataset,
+    data: &dyn DataSource,
 ) -> Result<BigMeansResult, String> {
     let (m, n, k) = (data.m(), data.n(), cfg.k);
     cfg.validate(m, n)?;
@@ -37,9 +48,16 @@ pub fn run_chunk_parallel(
     } else {
         cfg.threads
     };
+    // Chunk budget as a ticket pool (u64::MAX = time-bounded only).
+    let max_chunks = match cfg.stop {
+        StopCondition::MaxChunks(c) => c,
+        StopCondition::TimeOrChunks(_, c) => c,
+        StopCondition::MaxTime(_) => u64::MAX,
+    };
 
     let incumbent = Arc::new(SharedIncumbent::new(Solution::all_degenerate(k, n)));
     let done = Arc::new(AtomicBool::new(false));
+    let tickets = Arc::new(AtomicU64::new(0));
     let chunk_count = Arc::new(AtomicU64::new(0));
     let mut timer = PhaseTimer::new();
     let mut root_rng = Rng::new(cfg.seed);
@@ -51,6 +69,7 @@ pub fn run_chunk_parallel(
                 let mut rng = root_rng.split();
                 let incumbent = Arc::clone(&incumbent);
                 let done = Arc::clone(&done);
+                let tickets = Arc::clone(&tickets);
                 let chunk_count = Arc::clone(&chunk_count);
                 let cfg = cfg.clone();
                 let data_ref = data;
@@ -59,7 +78,13 @@ pub fn run_chunk_parallel(
                     let mut counters = Counters::new();
                     let mut sampler = ChunkSampler::new(s, n);
                     let mut improvements = 0u64;
-                    while !done.load(Ordering::Relaxed) {
+                    loop {
+                        if done.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        if tickets.fetch_add(1, Ordering::Relaxed) >= max_chunks {
+                            break;
+                        }
                         let snap = incumbent.snapshot();
                         let (chunk, rows) = sampler.sample(data_ref, &mut rng);
                         let mut seed_c = snap.centroids.clone();
@@ -92,11 +117,12 @@ pub fn run_chunk_parallel(
                 }));
             }
             // Coordinator: poll the stop condition against wall clock and
-            // the workers' published chunk totals. MaxChunks is a "stop
-            // soon after" bound under concurrency: in-flight chunks finish.
+            // the workers' published chunk totals. The ticket pool already
+            // caps chunk counts exactly; this loop exists to trip time
+            // budgets and to notice completion.
             let mut stop = StopState::new(cfg.stop);
             loop {
-                std::thread::sleep(std::time::Duration::from_millis(2));
+                std::thread::sleep(std::time::Duration::from_millis(1));
                 let total = chunk_count.load(Ordering::Relaxed);
                 while stop.chunks() < total {
                     stop.record_chunk();
@@ -195,5 +221,53 @@ mod tests {
         assert!(r.counters.chunks > 0);
         assert!(r.counters.distance_evals > 0);
         assert!(r.improvements >= 1);
+    }
+
+    #[test]
+    fn chunk_budget_is_exact() {
+        // The ticket pool guarantees exactly `MaxChunks` chunks regardless
+        // of worker count.
+        let data = Synth::GaussianMixture {
+            m: 4000,
+            n: 3,
+            k_true: 3,
+            spread: 0.3,
+            box_half_width: 20.0,
+        }
+        .generate("t", 3);
+        for threads in [1usize, 4] {
+            let mut cfg = BigMeansConfig::new(3, 256)
+                .with_stop(StopCondition::MaxChunks(12))
+                .with_parallel(ParallelMode::ChunkParallel)
+                .with_seed(5);
+            cfg.threads = threads;
+            let r = BigMeans::new(cfg).run(&data).unwrap();
+            assert_eq!(r.counters.chunks, 12, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn single_worker_runs_are_reproducible() {
+        let data = Synth::GaussianMixture {
+            m: 5000,
+            n: 4,
+            k_true: 4,
+            spread: 0.25,
+            box_half_width: 20.0,
+        }
+        .generate("t", 4);
+        let mk = || {
+            let mut cfg = BigMeansConfig::new(4, 512)
+                .with_stop(StopCondition::MaxChunks(10))
+                .with_parallel(ParallelMode::ChunkParallel)
+                .with_seed(9);
+            cfg.threads = 1;
+            cfg
+        };
+        let a = BigMeans::new(mk()).run(&data).unwrap();
+        let b = BigMeans::new(mk()).run(&data).unwrap();
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.counters, b.counters);
     }
 }

@@ -1,12 +1,18 @@
 //! Chunk sampling: uniform random samples from the dataset (the paper's
 //! sampling method — O(s) per chunk, no pass over the full data, and the
 //! reason Big-means is order-independent, §3).
+//!
+//! Sampling goes through [`DataSource`], so chunks can be gathered from an
+//! in-memory matrix, an mmap'd `.bmx` file, or an indexed CSV without the
+//! coordinator knowing the difference. The index sequence depends only on
+//! the RNG, never on the backend — the out-of-core integration tests rely
+//! on that to get bit-identical runs across backends.
 
-use crate::data::dataset::Dataset;
+use crate::data::source::DataSource;
 use crate::util::rng::Rng;
 
-/// Draws uniform chunks from a dataset. Reusable buffer to keep the chunk
-/// loop allocation-free after warmup.
+/// Draws uniform chunks from a data source. Reusable buffer to keep the
+/// chunk loop allocation-free after warmup.
 pub struct ChunkSampler {
     chunk_size: usize,
     buf: Vec<f32>,
@@ -24,16 +30,14 @@ impl ChunkSampler {
 
     /// Sample a chunk of `min(chunk_size, m)` distinct rows into the
     /// internal buffer; returns `(points, rows)`.
-    pub fn sample<'a>(&'a mut self, data: &Dataset, rng: &mut Rng) -> (&'a [f32], usize) {
+    pub fn sample<'a>(&'a mut self, data: &dyn DataSource, rng: &mut Rng) -> (&'a [f32], usize) {
         let m = data.m();
         let n = data.n();
         let s = self.chunk_size.min(m);
         self.indices = rng.sample_indices(m, s);
-        self.buf.clear();
-        for &i in &self.indices {
-            self.buf.extend_from_slice(&data.points()[i * n..(i + 1) * n]);
-        }
-        (&self.buf, s)
+        self.buf.resize(s * n, 0.0);
+        data.sample_rows(&self.indices, &mut self.buf[..s * n]);
+        (&self.buf[..s * n], s)
     }
 
     /// Row indices of the most recent chunk.
@@ -45,6 +49,7 @@ impl ChunkSampler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::dataset::Dataset;
 
     #[test]
     fn chunk_rows_come_from_dataset() {
@@ -82,5 +87,21 @@ mod tests {
         };
         s.sample(&d, &mut rng);
         assert_ne!(first, s.last_indices());
+    }
+
+    #[test]
+    fn index_sequence_is_backend_independent() {
+        // Two sources with the same shape but different contents must draw
+        // the same index sequence under the same seed: indices depend only
+        // on the RNG.
+        let a = Dataset::from_vec("a", vec![0.0; 2000], 500, 4);
+        let b = Dataset::from_vec("b", vec![1.0; 2000], 500, 4);
+        let mut sa = ChunkSampler::new(16, 4);
+        let mut sb = ChunkSampler::new(16, 4);
+        let mut ra = Rng::new(77);
+        let mut rb = Rng::new(77);
+        sa.sample(&a, &mut ra);
+        sb.sample(&b, &mut rb);
+        assert_eq!(sa.last_indices(), sb.last_indices());
     }
 }

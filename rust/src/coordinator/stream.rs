@@ -17,6 +17,7 @@ use crate::coordinator::config::BigMeansConfig;
 use crate::coordinator::incumbent::Solution;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
+use crate::data::source::DataSource;
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::Counters;
 use crate::util::rng::Rng;
@@ -95,6 +96,34 @@ impl ChunkQueue {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+}
+
+/// Feed a [`DataSource`] into the queue as sequential `rows_per_chunk`-row
+/// chunks — the producer half of the paper's "continuously replenished"
+/// scenario for data that lives on disk. Memory is bounded: exactly one
+/// chunk buffer is in flight per push (ownership moves into the queue, and
+/// backpressure blocks here when consumers lag). Returns the number of
+/// chunks pushed; stops early if the queue is closed.
+pub fn produce_from_source(
+    source: &dyn DataSource,
+    queue: &ChunkQueue,
+    rows_per_chunk: usize,
+) -> u64 {
+    assert!(rows_per_chunk > 0, "rows_per_chunk must be positive");
+    let (m, n) = (source.m(), source.n());
+    let mut start = 0usize;
+    let mut pushed = 0u64;
+    while start < m {
+        let rows = rows_per_chunk.min(m - start);
+        let mut points = vec![0f32; rows * n];
+        source.read_rows(start, &mut points);
+        if !queue.push(StreamChunk { points, rows }) {
+            break;
+        }
+        pushed += 1;
+        start += rows;
+    }
+    pushed
 }
 
 /// Result of a streaming run.
@@ -244,6 +273,71 @@ mod tests {
             }
         }
         assert_eq!(found, 3, "centroids {:?}", r.centroids);
+    }
+
+    #[test]
+    fn produce_from_source_covers_dataset_in_order() {
+        use crate::data::dataset::Dataset;
+        let d = Dataset::from_vec("t", (0..20).map(|x| x as f32).collect(), 10, 2);
+        let q = ChunkQueue::new(16);
+        let pushed = produce_from_source(&d, &q, 4);
+        q.close();
+        assert_eq!(pushed, 3); // 4 + 4 + 2 rows
+        let mut rows_seen = 0usize;
+        let mut flat = Vec::new();
+        while let Some(c) = q.pop() {
+            rows_seen += c.rows;
+            flat.extend_from_slice(&c.points);
+        }
+        assert_eq!(rows_seen, 10);
+        assert_eq!(flat, d.points());
+    }
+
+    #[test]
+    fn streaming_from_disk_source_clusters() {
+        use crate::data::bmx::{save_bmx, BmxSource};
+        use crate::data::dataset::Dataset;
+        // Three tight blobs written to a temp .bmx, streamed chunk-by-chunk.
+        let mut rng = Rng::new(5);
+        let mut pts = Vec::new();
+        let centers = [(0.0f32, 0.0f32), (30.0, 30.0), (0.0, 30.0)];
+        for i in 0..1500 {
+            let (cx, cy) = centers[i % 3];
+            pts.push(cx + 0.3 * rng.gaussian() as f32);
+            pts.push(cy + 0.3 * rng.gaussian() as f32);
+        }
+        let d = Dataset::from_vec("blobs", pts, 1500, 2);
+        let path = std::env::temp_dir()
+            .join(format!("bigmeans_stream_{}.bmx", std::process::id()));
+        save_bmx(&d, &path).unwrap();
+        let src = BmxSource::open(&path).unwrap();
+
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(50))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(1);
+        let engine = StreamingBigMeans::new(cfg, 2);
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            let pushed = produce_from_source(&src, &qp, 256);
+            qp.close();
+            pushed
+        });
+        let r = engine.run(&q);
+        let pushed = producer.join().unwrap();
+        assert_eq!(pushed, 6); // ceil(1500 / 256): five full chunks + a 220-row tail
+        assert_eq!(r.chunks_processed, 6);
+        assert!(r.best_chunk_objective.is_finite());
+        // Centroids should sit near the three blobs.
+        for &(cx, cy) in &centers {
+            let hit = (0..3).any(|j| {
+                let c = &r.centroids[j * 2..j * 2 + 2];
+                (c[0] - cx).abs() < 2.0 && (c[1] - cy).abs() < 2.0
+            });
+            assert!(hit, "no centroid near ({cx},{cy}): {:?}", r.centroids);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

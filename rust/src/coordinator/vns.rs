@@ -16,7 +16,7 @@ use crate::coordinator::incumbent::Solution;
 use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::dataset::Dataset;
+use crate::data::source::DataSource;
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
@@ -73,8 +73,9 @@ pub struct VnsResult {
     pub rung_improvements: Vec<u64>,
 }
 
-/// Run VNS-Big-means (sequential pipeline).
-pub fn run_vns(cfg: &VnsConfig, data: &Dataset) -> Result<VnsResult, String> {
+/// Run VNS-Big-means (sequential pipeline). Accepts any [`DataSource`]
+/// (`&Dataset` coerces).
+pub fn run_vns(cfg: &VnsConfig, data: &dyn DataSource) -> Result<VnsResult, String> {
     let (m, n, k) = (data.m(), data.n(), cfg.base.k);
     cfg.validate(m)?;
     let solver = NativeSolver::new(cfg.base.lloyd, cfg.base.threads);
@@ -160,6 +161,7 @@ pub fn run_vns(cfg: &VnsConfig, data: &Dataset) -> Result<VnsResult, String> {
 mod tests {
     use super::*;
     use crate::coordinator::config::{ParallelMode, StopCondition};
+    use crate::data::dataset::Dataset;
     use crate::data::synth::Synth;
 
     fn blobs(seed: u64) -> Dataset {

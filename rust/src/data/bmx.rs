@@ -1,0 +1,470 @@
+//! `.bmx` — the Big-means matrix format, built for out-of-core clustering.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"BMX1"
+//! 4       8     m      u64   number of rows
+//! 12      4     n      u32   features per row
+//! 16      m·n·4 data   f32   row-major feature matrix
+//! ```
+//!
+//! The 16-byte header keeps the payload 4-byte aligned, so on little-endian
+//! unix targets the file can be memory-mapped and reinterpreted as `&[f32]`
+//! directly — chunk sampling then touches only the pages it draws, and the
+//! OS page cache does the working-set management. Everywhere else (or when
+//! `mmap` fails) a buffered positioned-read backend decodes the same bytes
+//! explicitly, so results are identical across backends.
+//!
+//! [`BmxWriter`] streams rows out with O(1) memory (the row count is
+//! patched into the header on [`BmxWriter::finish`]), which is how datasets
+//! that never fit in RAM get produced in the first place.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::data::dataset::Dataset;
+use crate::data::source::DataSource;
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+
+/// File magic: "BMX" + format version 1.
+pub const BMX_MAGIC: [u8; 4] = *b"BMX1";
+
+/// Header bytes before the payload (magic + u64 m + u32 n).
+pub const BMX_HEADER_LEN: usize = 16;
+
+/// Streaming `.bmx` writer: create, push row blocks, finish.
+pub struct BmxWriter {
+    w: BufWriter<File>,
+    n: usize,
+    rows: u64,
+}
+
+impl BmxWriter {
+    /// Create `path`, writing a header with a zero row count (patched on
+    /// [`BmxWriter::finish`]).
+    pub fn create(path: &Path, n: usize) -> Result<Self> {
+        if n == 0 || n > u32::MAX as usize {
+            bail!("bmx: invalid feature count {n}");
+        }
+        let file = File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&BMX_MAGIC)?;
+        w.write_all(&0u64.to_le_bytes())?;
+        w.write_all(&(n as u32).to_le_bytes())?;
+        Ok(BmxWriter { w, n, rows: 0 })
+    }
+
+    /// Append one or more rows (`values.len()` must be a multiple of `n`).
+    pub fn write_rows(&mut self, values: &[f32]) -> Result<()> {
+        if values.len() % self.n != 0 {
+            bail!(
+                "bmx: write of {} values is not a whole number of {}-wide rows",
+                values.len(),
+                self.n
+            );
+        }
+        let mut buf = [0u8; 4096];
+        let mut filled = 0usize;
+        for &v in values {
+            buf[filled..filled + 4].copy_from_slice(&v.to_le_bytes());
+            filled += 4;
+            if filled == buf.len() {
+                self.w.write_all(&buf)?;
+                filled = 0;
+            }
+        }
+        if filled > 0 {
+            self.w.write_all(&buf[..filled])?;
+        }
+        self.rows += (values.len() / self.n) as u64;
+        Ok(())
+    }
+
+    /// Flush, patch the row count into the header, and return it.
+    pub fn finish(mut self) -> Result<u64> {
+        self.w.flush()?;
+        self.w.seek(SeekFrom::Start(4))?;
+        self.w.write_all(&self.rows.to_le_bytes())?;
+        self.w.flush()?;
+        Ok(self.rows)
+    }
+}
+
+/// Write an in-memory dataset out as `.bmx`.
+pub fn save_bmx(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BmxWriter::create(path, ds.n())?;
+    w.write_rows(ds.points())?;
+    let rows = w.finish()?;
+    debug_assert_eq!(rows as usize, ds.m());
+    Ok(())
+}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod sys {
+    //! Raw `mmap` FFI — the process links libc anyway, so no crate needed.
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+}
+
+/// An owned read-only memory mapping of a whole file.
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+struct MmapRegion {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+// Safety: the region is read-only for its whole lifetime and unmapped only
+// on drop, so shared references from any thread are fine.
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+unsafe impl Send for MmapRegion {}
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+impl MmapRegion {
+    fn map(file: &File, len: usize) -> Option<MmapRegion> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return None;
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            None
+        } else {
+            Some(MmapRegion { ptr, len })
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+enum Backing {
+    /// Memory-mapped file; the payload is reinterpreted as `&[f32]` in
+    /// place (little-endian 64-bit unix only).
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    Mmap(MmapRegion),
+    /// Portable fallback: positioned buffered reads decoding explicit
+    /// little-endian bytes.
+    Pread(Mutex<File>),
+}
+
+/// Out-of-core `.bmx` dataset: implements [`DataSource`] without loading
+/// the payload.
+pub struct BmxSource {
+    name: String,
+    m: usize,
+    n: usize,
+    backing: Backing,
+}
+
+/// Parse + validate the header; returns `(m, n, total_file_bytes)` with
+/// every size arithmetic checked, so a corrupt or hostile header fails
+/// here with a clean error instead of wrapping and panicking later.
+fn read_header(file: &mut File, path: &Path) -> Result<(usize, usize, u64)> {
+    let mut hdr = [0u8; BMX_HEADER_LEN];
+    file.read_exact(&mut hdr)
+        .with_context(|| format!("read bmx header of {}", path.display()))?;
+    if hdr[0..4] != BMX_MAGIC {
+        bail!("{}: not a .bmx file (bad magic)", path.display());
+    }
+    let m64 = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+    let n = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+    if n == 0 {
+        bail!("{}: bmx header has n = 0", path.display());
+    }
+    let need = m64
+        .checked_mul(n as u64)
+        .and_then(|c| c.checked_mul(4))
+        .and_then(|c| c.checked_add(BMX_HEADER_LEN as u64))
+        .ok_or_else(|| {
+            anyhow!("{}: bmx header shape {m64}×{n} overflows", path.display())
+        })?;
+    if m64 > usize::MAX as u64 / 2 {
+        bail!("{}: bmx row count {m64} not addressable", path.display());
+    }
+    let actual = file.metadata()?.len();
+    if actual < need {
+        bail!(
+            "{}: truncated bmx payload ({} bytes, header promises {})",
+            path.display(),
+            actual,
+            need
+        );
+    }
+    Ok((m64 as usize, n, need))
+}
+
+impl BmxSource {
+    /// Open `path`, preferring a memory mapping (falls back to buffered
+    /// positioned reads when mapping is unavailable).
+    pub fn open(path: &Path) -> Result<BmxSource> {
+        let mut file = File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let (m, n, total) = read_header(&mut file, path)?;
+        let name = stem(path);
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        {
+            if let Some(region) = MmapRegion::map(&file, total as usize) {
+                return Ok(BmxSource { name, m, n, backing: Backing::Mmap(region) });
+            }
+        }
+        let _ = total;
+        Ok(BmxSource { name, m, n, backing: Backing::Pread(Mutex::new(file)) })
+    }
+
+    /// Open `path` with the buffered-pread backend unconditionally (tests,
+    /// and platforms where mapping misbehaves).
+    pub fn open_buffered(path: &Path) -> Result<BmxSource> {
+        let mut file = File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let (m, n, _total) = read_header(&mut file, path)?;
+        Ok(BmxSource {
+            name: stem(path),
+            m,
+            n,
+            backing: Backing::Pread(Mutex::new(file)),
+        })
+    }
+
+    /// True when the payload is memory-mapped (vs buffered reads).
+    pub fn is_mmap(&self) -> bool {
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        {
+            matches!(self.backing, Backing::Mmap(_))
+        }
+        #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+        {
+            false
+        }
+    }
+
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    fn mapped_data(region: &MmapRegion, m: usize, n: usize) -> &[f32] {
+        let payload = &region.bytes()[BMX_HEADER_LEN..BMX_HEADER_LEN + m * n * 4];
+        debug_assert_eq!(payload.as_ptr() as usize % std::mem::align_of::<f32>(), 0);
+        // Safety: the slice is in-bounds, 4-byte aligned (page base + 16),
+        // lives as long as `region`, and every bit pattern is a valid f32.
+        unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const f32, m * n) }
+    }
+
+    /// Positioned read of rows starting at `start` into `out`, under an
+    /// already-held file lock, reusing `scratch` for the byte staging —
+    /// callers doing many reads (chunk gathers) lock and allocate once.
+    fn pread_into(&self, f: &mut File, scratch: &mut Vec<u8>, start: usize, out: &mut [f32]) {
+        let byte_off = BMX_HEADER_LEN as u64 + (start as u64) * (self.n as u64) * 4;
+        f.seek(SeekFrom::Start(byte_off))
+            .unwrap_or_else(|e| panic!("bmx '{}': seek failed: {e}", self.name));
+        scratch.resize(out.len() * 4, 0);
+        f.read_exact(&mut scratch[..])
+            .unwrap_or_else(|e| panic!("bmx '{}': read failed: {e}", self.name));
+        for (dst, src) in out.iter_mut().zip(scratch.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().unwrap());
+        }
+    }
+}
+
+impl DataSource for BmxSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn read_rows(&self, start: usize, out: &mut [f32]) {
+        assert_eq!(out.len() % self.n, 0, "read_rows: out shape");
+        let rows = out.len() / self.n;
+        assert!(start + rows <= self.m, "read_rows: range out of bounds");
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mmap(region) => {
+                let data = Self::mapped_data(region, self.m, self.n);
+                out.copy_from_slice(&data[start * self.n..(start + rows) * self.n]);
+            }
+            Backing::Pread(file) => {
+                let mut f = file.lock().unwrap();
+                let mut scratch = Vec::new();
+                self.pread_into(&mut f, &mut scratch, start, out);
+            }
+        }
+    }
+
+    fn sample_rows(&self, indices: &[usize], out: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(out.len(), indices.len() * n, "sample_rows: out shape");
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mmap(region) => {
+                let data = Self::mapped_data(region, self.m, self.n);
+                for (slot, &i) in indices.iter().enumerate() {
+                    out[slot * n..(slot + 1) * n]
+                        .copy_from_slice(&data[i * n..(i + 1) * n]);
+                }
+            }
+            Backing::Pread(file) => {
+                // One lock + one scratch buffer for the whole gather.
+                let mut f = file.lock().unwrap();
+                let mut scratch = Vec::new();
+                for (slot, &i) in indices.iter().enumerate() {
+                    self.pread_into(&mut f, &mut scratch, i, &mut out[slot * n..(slot + 1) * n]);
+                }
+            }
+        }
+    }
+
+    fn contiguous(&self) -> Option<&[f32]> {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mmap(region) => Some(Self::mapped_data(region, self.m, self.n)),
+            Backing::Pread(_) => None,
+        }
+    }
+}
+
+fn stem(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "bmx".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bigmeans_bmx_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    fn toy() -> Dataset {
+        Dataset::from_vec(
+            "toy",
+            (0..40).map(|x| x as f32 * 0.5 - 7.25).collect(),
+            10,
+            4,
+        )
+    }
+
+    #[test]
+    fn roundtrip_via_writer() {
+        let p = tmp("roundtrip.bmx");
+        let d = toy();
+        save_bmx(&d, &p).unwrap();
+        let src = BmxSource::open(&p).unwrap();
+        assert_eq!(src.m(), 10);
+        assert_eq!(src.n(), 4);
+        let mut all = vec![0f32; 40];
+        src.read_rows(0, &mut all);
+        assert_eq!(all, d.points());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn streamed_writer_patches_row_count() {
+        let p = tmp("streamed.bmx");
+        let mut w = BmxWriter::create(&p, 3).unwrap();
+        w.write_rows(&[1.0, 2.0, 3.0]).unwrap();
+        w.write_rows(&[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]).unwrap();
+        assert_eq!(w.finish().unwrap(), 3);
+        let src = BmxSource::open(&p).unwrap();
+        assert_eq!((src.m(), src.n()), (3, 3));
+        let mut row = vec![0f32; 3];
+        src.read_rows(2, &mut row);
+        assert_eq!(row, vec![7.0, 8.0, 9.0]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn mmap_and_buffered_agree() {
+        let p = tmp("agree.bmx");
+        let d = toy();
+        save_bmx(&d, &p).unwrap();
+        let fast = BmxSource::open(&p).unwrap();
+        let slow = BmxSource::open_buffered(&p).unwrap();
+        assert!(!slow.is_mmap());
+        let idx = [9usize, 0, 4, 4, 7];
+        let mut a = vec![0f32; idx.len() * 4];
+        let mut b = vec![0f32; idx.len() * 4];
+        fast.sample_rows(&idx, &mut a);
+        slow.sample_rows(&idx, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(a, d.gather(&idx));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn contiguous_only_for_mmap() {
+        let p = tmp("contig.bmx");
+        save_bmx(&toy(), &p).unwrap();
+        let fast = BmxSource::open(&p).unwrap();
+        let slow = BmxSource::open_buffered(&p).unwrap();
+        assert!(slow.contiguous().is_none());
+        if fast.is_mmap() {
+            assert_eq!(fast.contiguous().unwrap(), toy().points());
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_rejected() {
+        let p = tmp("bad.bmx");
+        std::fs::write(&p, b"NOPE............").unwrap();
+        assert!(BmxSource::open(&p).is_err());
+        // Valid header promising more rows than the payload holds.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&BMX_MAGIC);
+        bytes.extend_from_slice(&5u64.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(BmxSource::open(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,99 @@
+//! Dataset conversion: stream CSV into the out-of-core `.bmx` format.
+//!
+//! The conversion is O(block) in memory and reuses [`CsvSource`] as its
+//! reader, so the values written to `.bmx` are — by construction — exactly
+//! the values the buffered CSV backend would serve. Convert once, then
+//! cluster the `.bmx` file through the mmap backend any number of times.
+
+use std::path::Path;
+
+use crate::data::bmx::BmxWriter;
+use crate::data::csv_source::CsvSource;
+use crate::data::source::DataSource;
+use crate::util::error::Result;
+
+/// Rows converted per block (bounds memory at `block × n` floats).
+const CONVERT_BLOCK_ROWS: usize = 8192;
+
+/// Convert a numeric CSV (optional header, blank lines tolerated) into
+/// `.bmx`. Returns `(m, n)` of the written matrix. Malformed input
+/// (ragged rows, non-numeric fields, no data) is rejected up front by the
+/// indexing pass.
+pub fn csv_to_bmx(csv: &Path, bmx: &Path) -> Result<(usize, usize)> {
+    let src = CsvSource::open(csv)?;
+    let (m, n) = (src.m(), src.n());
+    let mut writer = BmxWriter::create(bmx, n)?;
+    let mut block = vec![0f32; CONVERT_BLOCK_ROWS.min(m) * n];
+    let mut start = 0usize;
+    while start < m {
+        let rows = CONVERT_BLOCK_ROWS.min(m - start);
+        src.read_rows(start, &mut block[..rows * n]);
+        writer.write_rows(&block[..rows * n])?;
+        start += rows;
+    }
+    let rows = writer.finish()?;
+    debug_assert_eq!(rows as usize, m);
+    Ok((m, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::bmx::BmxSource;
+    use crate::data::loader;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bigmeans_convert_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn converted_bmx_matches_materialized_csv() {
+        let csv = tmp("a.csv");
+        let bmx = tmp("a.bmx");
+        std::fs::write(&csv, "x,y,z\n1,2,3\n4.5,5,6\n-7,8.25,9\n").unwrap();
+        let (m, n) = csv_to_bmx(&csv, &bmx).unwrap();
+        assert_eq!((m, n), (3, 3));
+        let full = loader::load_csv(&csv, None).unwrap();
+        let src = BmxSource::open(&bmx).unwrap();
+        assert_eq!((src.m(), src.n()), (3, 3));
+        let mut out = vec![0f32; 9];
+        src.read_rows(0, &mut out);
+        assert_eq!(out, full.points());
+        let _ = std::fs::remove_file(&csv);
+        let _ = std::fs::remove_file(&bmx);
+    }
+
+    #[test]
+    fn bad_csv_rejected() {
+        let csv = tmp("b.csv");
+        let bmx = tmp("b.bmx");
+        std::fs::write(&csv, "1,2\n3,oops\n").unwrap();
+        assert!(csv_to_bmx(&csv, &bmx).is_err());
+        std::fs::write(&csv, "header,only\n").unwrap();
+        assert!(csv_to_bmx(&csv, &bmx).is_err());
+        let _ = std::fs::remove_file(&csv);
+        let _ = std::fs::remove_file(&bmx);
+    }
+
+    #[test]
+    fn many_rows_cross_block_boundary() {
+        let csv = tmp("c.csv");
+        let bmx = tmp("c.bmx");
+        let mut text = String::new();
+        let m = CONVERT_BLOCK_ROWS + 37;
+        for i in 0..m {
+            text.push_str(&format!("{},{}\n", i, m - i));
+        }
+        std::fs::write(&csv, text).unwrap();
+        assert_eq!(csv_to_bmx(&csv, &bmx).unwrap(), (m, 2));
+        let src = BmxSource::open(&bmx).unwrap();
+        assert_eq!(src.m(), m);
+        let mut last = vec![0f32; 2];
+        src.read_rows(m - 1, &mut last);
+        assert_eq!(last, vec![(m - 1) as f32, 1.0]);
+        let _ = std::fs::remove_file(&csv);
+        let _ = std::fs::remove_file(&bmx);
+    }
+}

@@ -1,0 +1,238 @@
+//! Out-of-core CSV access: a row-indexed, buffered reader implementing
+//! [`DataSource`] without ever materializing the feature matrix.
+//!
+//! [`CsvSource::open`] makes one streaming pass to detect the header,
+//! validate field counts, and record each data row's byte span. After that
+//! the source holds only the index (16 bytes per row — orders of magnitude
+//! smaller than the parsed data) plus one shared file handle; chunk gathers
+//! seek to the recorded spans and parse straight into the caller's buffer,
+//! so at no point does more than one chunk of parsed values exist.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::bail;
+use crate::data::source::DataSource;
+use crate::util::error::{Context, Result};
+
+/// Byte span of one data row inside the file.
+#[derive(Clone, Copy, Debug)]
+struct RowSpan {
+    offset: u64,
+    len: u32,
+}
+
+/// A numeric CSV file exposed as an out-of-core [`DataSource`].
+pub struct CsvSource {
+    name: String,
+    n: usize,
+    spans: Vec<RowSpan>,
+    file: Mutex<File>,
+}
+
+impl CsvSource {
+    /// Index `path`: one streaming pass recording row spans. Skips a header
+    /// row (first line whose first field is not numeric) and blank lines;
+    /// rejects ragged rows and non-numeric fields — after `open` succeeds,
+    /// every indexed row is known to parse, so reads cannot fail on
+    /// content (only on the file mutating underneath, which panics).
+    pub fn open(path: &Path) -> Result<CsvSource> {
+        let file = File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+        let mut spans: Vec<RowSpan> = Vec::new();
+        let mut n = 0usize;
+        let mut offset = 0u64;
+        let mut line = String::new();
+        let mut lineno = 0usize;
+        loop {
+            line.clear();
+            let read = reader.read_line(&mut line)?;
+            if read == 0 {
+                break;
+            }
+            lineno += 1;
+            let trimmed = line.trim();
+            if !trimmed.is_empty() {
+                let fields = trimmed.split(',').count();
+                let first = trimmed.split(',').next().unwrap_or("").trim();
+                if n == 0 && spans.is_empty() && first.parse::<f32>().is_err() {
+                    // Header row: skip.
+                } else {
+                    if n == 0 {
+                        n = fields;
+                    }
+                    if fields != n {
+                        bail!(
+                            "{}:{}: expected {} fields, got {}",
+                            path.display(),
+                            lineno,
+                            n,
+                            fields
+                        );
+                    }
+                    for f in trimmed.split(',') {
+                        let f = f.trim();
+                        if f.parse::<f32>().is_err() {
+                            bail!("{}:{}: bad number '{f}'", path.display(), lineno);
+                        }
+                    }
+                    if read > u32::MAX as usize {
+                        bail!("{}:{}: row too long", path.display(), lineno);
+                    }
+                    spans.push(RowSpan { offset, len: read as u32 });
+                }
+            }
+            offset += read as u64;
+        }
+        if spans.is_empty() {
+            bail!("{}: no data rows", path.display());
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "csv".into());
+        let file = reader.into_inner();
+        Ok(CsvSource { name, n, spans, file: Mutex::new(file) })
+    }
+
+    fn parse_row(&self, bytes: &[u8], row: usize, out: &mut [f32]) {
+        let text = std::str::from_utf8(bytes)
+            .unwrap_or_else(|_| panic!("csv '{}': row {row} is not utf-8", self.name));
+        let mut fields = text.trim().split(',');
+        for (j, slot) in out.iter_mut().enumerate() {
+            let field = fields
+                .next()
+                .unwrap_or_else(|| panic!("csv '{}': row {row} too short", self.name))
+                .trim();
+            *slot = field.parse::<f32>().unwrap_or_else(|_| {
+                panic!("csv '{}': row {row} field {j}: bad number '{field}'", self.name)
+            });
+        }
+    }
+}
+
+impl DataSource for CsvSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn m(&self) -> usize {
+        self.spans.len()
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn read_rows(&self, start: usize, out: &mut [f32]) {
+        assert_eq!(out.len() % self.n, 0, "read_rows: out shape");
+        let rows = out.len() / self.n;
+        assert!(start + rows <= self.spans.len(), "read_rows: out of bounds");
+        if rows == 0 {
+            return;
+        }
+        // Row spans are ascending in the file, so a contiguous row range is
+        // one byte range (possibly including skipped blank lines): fetch it
+        // with a single seek + read, then parse each row from the buffer.
+        let first = self.spans[start];
+        let last = self.spans[start + rows - 1];
+        let total = (last.offset + last.len as u64 - first.offset) as usize;
+        let mut buf = vec![0u8; total];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(first.offset))
+                .unwrap_or_else(|e| panic!("csv '{}': seek failed: {e}", self.name));
+            f.read_exact(&mut buf)
+                .unwrap_or_else(|e| panic!("csv '{}': read failed: {e}", self.name));
+        }
+        for (slot, row) in (start..start + rows).enumerate() {
+            let span = self.spans[row];
+            let lo = (span.offset - first.offset) as usize;
+            let bytes = &buf[lo..lo + span.len as usize];
+            self.parse_row(bytes, row, &mut out[slot * self.n..(slot + 1) * self.n]);
+        }
+    }
+
+    fn sample_rows(&self, indices: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), indices.len() * self.n, "sample_rows: out shape");
+        // One lock + one reused buffer for the whole gather.
+        let mut f = self.file.lock().unwrap();
+        let mut buf = Vec::new();
+        for (slot, &row) in indices.iter().enumerate() {
+            let span = self.spans[row];
+            buf.resize(span.len as usize, 0);
+            f.seek(SeekFrom::Start(span.offset))
+                .unwrap_or_else(|e| panic!("csv '{}': seek failed: {e}", self.name));
+            f.read_exact(&mut buf[..])
+                .unwrap_or_else(|e| panic!("csv '{}': read failed: {e}", self.name));
+            self.parse_row(&buf, row, &mut out[slot * self.n..(slot + 1) * self.n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::loader;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bigmeans_csv_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn indexes_with_header_and_blank_lines() {
+        let p = tmp("hdr.csv");
+        std::fs::write(&p, "x,y\n1.5,2\n\n3,4.25\n-1,0\n").unwrap();
+        let src = CsvSource::open(&p).unwrap();
+        assert_eq!(src.m(), 3);
+        assert_eq!(src.n(), 2);
+        let mut out = vec![0f32; 6];
+        src.read_rows(0, &mut out);
+        assert_eq!(out, vec![1.5, 2.0, 3.0, 4.25, -1.0, 0.0]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn random_gather_matches_materialized_load() {
+        let p = tmp("gather.csv");
+        let mut text = String::new();
+        for i in 0..50 {
+            text.push_str(&format!("{},{},{}\n", i, i * 2, 0.25 * i as f32));
+        }
+        std::fs::write(&p, text).unwrap();
+        let src = CsvSource::open(&p).unwrap();
+        let full = loader::load_csv(&p, None).unwrap();
+        let idx = [49usize, 0, 17, 17, 3];
+        let mut out = vec![0f32; idx.len() * 3];
+        src.sample_rows(&idx, &mut out);
+        assert_eq!(out, full.gather(&idx));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn ragged_rejected_and_no_rows_rejected() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(CsvSource::open(&p).is_err());
+        std::fs::write(&p, "only,header\n").unwrap();
+        assert!(CsvSource::open(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn crlf_lines_parse() {
+        let p = tmp("crlf.csv");
+        std::fs::write(&p, "1,2\r\n3,4\r\n").unwrap();
+        let src = CsvSource::open(&p).unwrap();
+        assert_eq!(src.m(), 2);
+        let mut out = vec![0f32; 4];
+        src.read_rows(0, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,10 +1,14 @@
-//! Dataset IO: CSV (headerless or headered numeric) and a fast flat binary
-//! format (`.fbin`: u32 m, u32 n, then m·n little-endian f32).
+//! Dataset IO: CSV (headerless or headered numeric), the legacy flat
+//! binary format (`.fbin`: u32 m, u32 n, then m·n little-endian f32), and
+//! materialized loads of the out-of-core `.bmx` format (see
+//! [`crate::data::bmx`] for the header spec and the non-materializing
+//! [`crate::data::BmxSource`]).
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::data::dataset::Dataset;
 
@@ -98,12 +102,54 @@ pub fn load_fbin(path: &Path) -> Result<Dataset> {
     Ok(Dataset::from_vec(name, data, m, n))
 }
 
-/// Load by extension: `.csv` or `.fbin`.
+/// Materialize a `.bmx` file into an in-memory [`Dataset`].
+pub fn load_bmx(path: &Path) -> Result<Dataset> {
+    use crate::data::bmx::BmxSource;
+    use crate::data::source::DataSource;
+    let src = BmxSource::open(path)?;
+    let (m, n) = (src.m(), src.n());
+    let mut data = vec![0f32; m * n];
+    if m > 0 {
+        src.read_rows(0, &mut data);
+    }
+    Ok(Dataset::from_vec(DataSource::name(&src).to_string(), data, m, n))
+}
+
+/// Load by extension: `.csv`, `.fbin` or `.bmx`.
 pub fn load(path: &Path) -> Result<Dataset> {
     match path.extension().and_then(|e| e.to_str()) {
         Some("csv") => load_csv(path, None),
         Some("fbin") => load_fbin(path),
+        Some("bmx") => load_bmx(path),
         other => bail!("unsupported dataset extension {:?}", other),
+    }
+}
+
+/// Open a dataset file through the chosen [`DataBackend`] — the single
+/// place where `BigMeansConfig::backend` is turned into a live
+/// [`DataSource`].
+pub fn open_source(
+    path: &Path,
+    backend: crate::data::source::DataBackend,
+) -> Result<Box<dyn crate::data::source::DataSource>> {
+    use crate::data::bmx::BmxSource;
+    use crate::data::csv_source::CsvSource;
+    use crate::data::source::DataBackend;
+    let ext = path.extension().and_then(|e| e.to_str());
+    match backend {
+        DataBackend::InMemory => Ok(Box::new(load(path)?)),
+        DataBackend::Mmap => match ext {
+            Some("bmx") => Ok(Box::new(BmxSource::open(path)?)),
+            other => bail!(
+                "mmap backend needs a .bmx file, got {:?} (run `bigmeans convert` first)",
+                other
+            ),
+        },
+        DataBackend::Buffered => match ext {
+            Some("bmx") => Ok(Box::new(BmxSource::open_buffered(path)?)),
+            Some("csv") => Ok(Box::new(CsvSource::open(path)?)),
+            other => bail!("buffered backend supports .bmx and .csv, got {:?}", other),
+        },
     }
 }
 
@@ -151,6 +197,25 @@ mod tests {
         assert_eq!(back.m(), 2);
         assert_eq!(back.n(), 2);
         assert_eq!(back.points(), d.points());
+    }
+
+    #[test]
+    fn open_source_respects_backend_and_extension() {
+        use crate::data::source::{DataBackend, DataSource};
+        let csv = tmp("os.csv");
+        std::fs::write(&csv, "1,2\n3,4\n").unwrap();
+        let mem = open_source(&csv, DataBackend::InMemory).unwrap();
+        let buffered = open_source(&csv, DataBackend::Buffered).unwrap();
+        assert_eq!(mem.m(), 2);
+        assert_eq!(buffered.m(), 2);
+        // CSV cannot be mmap'd — needs conversion first.
+        assert!(open_source(&csv, DataBackend::Mmap).is_err());
+        let bmx = tmp("os.bmx");
+        crate::data::bmx::save_bmx(&load_csv(&csv, None).unwrap(), &bmx).unwrap();
+        let mapped = open_source(&bmx, DataBackend::Mmap).unwrap();
+        assert_eq!((mapped.m(), mapped.n()), (2, 2));
+        let _ = std::fs::remove_file(&csv);
+        let _ = std::fs::remove_file(&bmx);
     }
 
     #[test]

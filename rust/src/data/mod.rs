@@ -1,12 +1,61 @@
-//! Data subsystem: datasets, synthetic generators mirroring the paper's
-//! evaluation suite, normalization, and file IO.
+//! Data subsystem: datasets, out-of-core sources, synthetic generators
+//! mirroring the paper's evaluation suite, normalization, and file IO.
+//!
+//! # The `DataSource` abstraction
+//!
+//! Every clustering pipeline in this crate consumes a [`DataSource`] — a
+//! read-only view of an `(m, n)` row-major f32 matrix that may be larger
+//! than memory. The coordinator needs only three operations: the shape,
+//! contiguous block reads (`read_rows`, used by the final full-dataset
+//! pass and the streaming producer), and random-index gathers
+//! (`sample_rows`, used by chunk sampling). Backends:
+//!
+//! | backend                | module         | residency                    |
+//! |------------------------|----------------|------------------------------|
+//! | [`Dataset`]            | [`dataset`]    | fully in RAM                 |
+//! | [`BmxSource`]          | [`bmx`]        | mmap / buffered pread        |
+//! | [`CsvSource`]          | [`csv_source`] | row index only, parse-on-read|
+//!
+//! All backends are deterministic and value-identical for the same
+//! underlying data: a seeded Big-means run produces bit-for-bit the same
+//! objective whichever backend serves the bytes (asserted in
+//! `tests/integration_out_of_core.rs`).
+//!
+//! # The `.bmx` on-disk format
+//!
+//! `.bmx` is the crate's out-of-core native format — a flat little-endian
+//! f32 matrix with a 16-byte header:
+//!
+//! ```text
+//! offset  size   field
+//! 0       4      magic b"BMX1"
+//! 4       8      m (u64, number of rows)
+//! 12      4      n (u32, features per row)
+//! 16      m·n·4  row-major f32 payload
+//! ```
+//!
+//! The header size keeps the payload 4-byte aligned so the whole file can
+//! be memory-mapped and read in place. Produce `.bmx` files with
+//! [`convert::csv_to_bmx`] (blockwise through [`CsvSource`], O(block)
+//! memory plus the 16-byte/row index), [`bmx::save_bmx`], or incrementally
+//! with [`bmx::BmxWriter`]; the CLI exposes
+//! `bigmeans convert <in.csv> <out.bmx>`.
 
+pub mod bmx;
 pub mod catalog;
+pub mod convert;
+pub mod csv_source;
 pub mod dataset;
 pub mod loader;
 pub mod normalize;
+pub mod source;
 pub mod synth;
 
+pub use bmx::{save_bmx, BmxSource, BmxWriter};
 pub use catalog::{catalog, find, CatalogEntry, PAPER_K_GRID};
+pub use convert::csv_to_bmx;
+pub use csv_source::CsvSource;
 pub use dataset::Dataset;
+pub use loader::open_source;
+pub use source::{DataBackend, DataSource};
 pub use synth::Synth;

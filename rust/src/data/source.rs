@@ -1,0 +1,172 @@
+//! The out-of-core dataset abstraction.
+//!
+//! Big-means only ever touches bounded chunks (the paper's decomposition
+//! principle), so nothing in the algorithm requires the dataset to be
+//! resident in RAM. [`DataSource`] captures exactly the access pattern the
+//! coordinator needs — row count, dimensionality, contiguous block reads
+//! for the final full pass, and random-index gathers for chunk sampling —
+//! and every pipeline (sequential, chunk-parallel, streaming) works against
+//! it. Three backends implement it:
+//!
+//! * [`crate::data::Dataset`] — the classic fully-resident matrix;
+//! * [`crate::data::BmxSource`] — a memory-mapped (or buffered-pread)
+//!   `.bmx` flat binary file: clusters data larger than RAM;
+//! * [`crate::data::CsvSource`] — a row-indexed CSV reader that never holds
+//!   more than one chunk of parsed values.
+//!
+//! Determinism contract: for a fixed RNG seed, every backend must hand the
+//! coordinator byte-identical chunk buffers for the same underlying data —
+//! the integration suite asserts bit-for-bit equal objectives across
+//! backends.
+
+use crate::data::dataset::Dataset;
+
+/// How dataset *files* are accessed (see [`crate::data::loader::open_source`],
+/// which the CLI threads `BigMeansConfig::backend` through).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataBackend {
+    /// Materialize the file fully in RAM (the classic path).
+    InMemory,
+    /// Out-of-core: memory-map a `.bmx` file and gather chunks on demand.
+    Mmap,
+    /// Out-of-core: buffered positioned reads (`.bmx`) or a row-indexed
+    /// parse-on-read view (`.csv`) — no mmap, bounded memory.
+    Buffered,
+}
+
+/// Read-only access to an `(m, n)` row-major f32 dataset, possibly larger
+/// than memory.
+///
+/// Implementations must be cheap to share across threads (`Send + Sync`):
+/// the chunk-parallel pipeline hands one `&dyn DataSource` to every worker.
+///
+/// I/O errors inside `read_rows` / `sample_rows` panic with a descriptive
+/// message: the kernels treat shape violations the same way, and threading
+/// `Result` through the assignment hot loop would cost more than it buys —
+/// sources validate their backing store up front in their constructors.
+pub trait DataSource: Send + Sync {
+    /// Dataset display name (reports, logs).
+    fn name(&self) -> &str;
+
+    /// Number of points (the paper's `m`).
+    fn m(&self) -> usize;
+
+    /// Feature dimension (the paper's `n`).
+    fn n(&self) -> usize;
+
+    /// Copy the contiguous row range `[start, start + out.len() / n)` into
+    /// `out` (row-major). `out.len()` must be a multiple of `n` and the
+    /// range must lie inside the dataset.
+    fn read_rows(&self, start: usize, out: &mut [f32]);
+
+    /// Gather arbitrary rows by index into `out` (`indices.len() × n`).
+    /// The default loops [`DataSource::read_rows`]; backends with cheap
+    /// random access override it.
+    fn sample_rows(&self, indices: &[usize], out: &mut [f32]) {
+        let n = self.n();
+        assert_eq!(out.len(), indices.len() * n, "sample_rows: out shape");
+        for (slot, &i) in indices.iter().enumerate() {
+            self.read_rows(i, &mut out[slot * n..(slot + 1) * n]);
+        }
+    }
+
+    /// The whole dataset as one resident slice, when available (in-memory
+    /// and mmap backends). Lets full-dataset passes skip the block copy.
+    fn contiguous(&self) -> Option<&[f32]> {
+        None
+    }
+}
+
+impl DataSource for Dataset {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn m(&self) -> usize {
+        Dataset::m(self)
+    }
+
+    fn n(&self) -> usize {
+        Dataset::n(self)
+    }
+
+    fn read_rows(&self, start: usize, out: &mut [f32]) {
+        let n = Dataset::n(self);
+        assert_eq!(out.len() % n, 0, "read_rows: out shape");
+        let rows = out.len() / n;
+        out.copy_from_slice(&self.points()[start * n..(start + rows) * n]);
+    }
+
+    fn sample_rows(&self, indices: &[usize], out: &mut [f32]) {
+        let n = Dataset::n(self);
+        assert_eq!(out.len(), indices.len() * n, "sample_rows: out shape");
+        let all = self.points();
+        for (slot, &i) in indices.iter().enumerate() {
+            out[slot * n..(slot + 1) * n].copy_from_slice(&all[i * n..(i + 1) * n]);
+        }
+    }
+
+    fn contiguous(&self) -> Option<&[f32]> {
+        Some(self.points())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::from_vec("t", (0..24).map(|x| x as f32).collect(), 6, 4)
+    }
+
+    #[test]
+    fn dataset_read_rows_block() {
+        let d = toy();
+        let src: &dyn DataSource = &d;
+        assert_eq!(src.m(), 6);
+        assert_eq!(src.n(), 4);
+        assert_eq!(src.name(), "t");
+        let mut out = vec![0f32; 8];
+        src.read_rows(2, &mut out);
+        assert_eq!(out, &d.points()[8..16]);
+    }
+
+    #[test]
+    fn dataset_sample_rows_matches_gather() {
+        let d = toy();
+        let src: &dyn DataSource = &d;
+        let idx = [5usize, 0, 3];
+        let mut out = vec![0f32; 12];
+        src.sample_rows(&idx, &mut out);
+        assert_eq!(out, d.gather(&idx));
+    }
+
+    #[test]
+    fn default_sample_rows_agrees_with_override() {
+        // A wrapper that forces the default (read_rows-based) gather.
+        struct Plain<'a>(&'a Dataset);
+        impl DataSource for Plain<'_> {
+            fn name(&self) -> &str {
+                DataSource::name(self.0)
+            }
+            fn m(&self) -> usize {
+                self.0.m()
+            }
+            fn n(&self) -> usize {
+                self.0.n()
+            }
+            fn read_rows(&self, start: usize, out: &mut [f32]) {
+                self.0.read_rows(start, out);
+            }
+        }
+        let d = toy();
+        let idx = [1usize, 1, 4, 2];
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        Plain(&d).sample_rows(&idx, &mut a);
+        d.sample_rows(&idx, &mut b);
+        assert_eq!(a, b);
+        assert!(Plain(&d).contiguous().is_none());
+        assert!(d.contiguous().is_some());
+    }
+}

@@ -114,6 +114,11 @@ pub fn assign_only(
 
 /// Parallel fused assignment: row blocks on the pool, partials merged.
 /// Semantically identical to [`assign_accumulate`].
+///
+/// Workers borrow `points` and `centroids` directly through the pool's
+/// scoped API — no `O(m·n)` buffer cloning per call (the assignment step
+/// runs every Lloyd iteration, so a copy here used to dominate allocation
+/// on the hot path).
 pub fn assign_accumulate_parallel(
     pool: &ThreadPool,
     points: &[f32],
@@ -130,29 +135,33 @@ pub fn assign_accumulate_parallel(
         return assign_accumulate(points, centroids, m, n, k, counters);
     }
     let block = m.div_ceil(nworkers);
-    // Each worker gets an owned slice copy-free via raw pointers wrapped in
-    // Arc'd Vec? Simplest safe route: split via chunks and collect partial
-    // outputs with the pool's ordered map.
     let jobs: Vec<(usize, usize)> = (0..nworkers)
         .map(|w| (w * block, ((w + 1) * block).min(m)))
         .filter(|(s, e)| s < e)
         .collect();
-    // Share inputs across workers without cloning the data.
-    let points_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(points.to_vec());
-    let centroids_arc: std::sync::Arc<Vec<f32>> = std::sync::Arc::new(centroids.to_vec());
-    let partials = pool.map(jobs, move |(start, end)| {
-        let mut local = Counters::new();
-        let rows = end - start;
-        let out = assign_accumulate(
-            &points_arc[start * n..end * n],
-            &centroids_arc,
-            rows,
-            n,
-            k,
-            &mut local,
-        );
-        Some((start, out))
-    });
+    // One output slot per worker, written in place by the scoped jobs.
+    let mut partials: Vec<Option<(usize, AssignOut)>> =
+        (0..jobs.len()).map(|_| None).collect();
+    let closures: Vec<_> = jobs
+        .into_iter()
+        .zip(partials.iter_mut())
+        .map(|((start, end), slot)| {
+            move || {
+                let mut local = Counters::new();
+                let rows = end - start;
+                let out = assign_accumulate(
+                    &points[start * n..end * n],
+                    centroids,
+                    rows,
+                    n,
+                    k,
+                    &mut local,
+                );
+                *slot = Some((start, out));
+            }
+        })
+        .collect();
+    pool.scope_run_all(closures);
     let mut labels = vec![0u32; m];
     let mut mins = vec![0f32; m];
     let mut sums = vec![0f64; k * n];

@@ -26,7 +26,8 @@ pub fn objective(
     total
 }
 
-/// Parallel objective (row-blocked).
+/// Parallel objective (row-blocked). Workers borrow the inputs through the
+/// pool's scoped API — no buffer cloning.
 pub fn objective_parallel(
     pool: &ThreadPool,
     points: &[f32],
@@ -41,20 +42,26 @@ pub fn objective_parallel(
     }
     let nworkers = pool.size();
     let block = m.div_ceil(nworkers);
-    let pts = std::sync::Arc::new(points.to_vec());
-    let cs = std::sync::Arc::new(centroids.to_vec());
     let jobs: Vec<(usize, usize)> = (0..nworkers)
         .map(|w| (w * block, ((w + 1) * block).min(m)))
         .filter(|(s, e)| s < e)
         .collect();
-    let parts = pool.map(jobs, move |(s, e)| {
-        let mut local = 0f64;
-        for i in s..e {
-            let (_, d) = nearest(&pts[i * n..(i + 1) * n], &cs, k, n);
-            local += d as f64;
-        }
-        local
-    });
+    let mut parts = vec![0f64; jobs.len()];
+    let closures: Vec<_> = jobs
+        .into_iter()
+        .zip(parts.iter_mut())
+        .map(|((s, e), slot)| {
+            move || {
+                let mut local = 0f64;
+                for i in s..e {
+                    let (_, d) = nearest(&points[i * n..(i + 1) * n], centroids, k, n);
+                    local += d as f64;
+                }
+                *slot = local;
+            }
+        })
+        .collect();
+    pool.scope_run_all(closures);
     counters.add_distance_evals((m * k) as u64);
     parts.into_iter().sum()
 }

@@ -16,10 +16,11 @@
 //!   (pairwise squared distances + argmin + per-cluster reduction) as a
 //!   Pallas kernel, validated against a pure-jnp oracle.
 //!
-//! The runtime loads the AOT artifacts via the PJRT C API (`xla` crate) —
-//! python never runs on the clustering path. A native Rust kernel substrate
-//! ([`kernels`]) provides the same primitives for arbitrary shapes and for
-//! the baseline algorithms ([`baselines`]) the paper compares against.
+//! The runtime loads the AOT artifacts via the PJRT C API (behind the
+//! `pjrt` cargo feature) — python never runs on the clustering path. A
+//! native Rust kernel substrate ([`kernels`]) provides the same primitives
+//! for arbitrary shapes and for the baseline algorithms ([`baselines`])
+//! the paper compares against.
 //!
 //! ## Quickstart
 //!
@@ -31,6 +32,26 @@
 //! let result = BigMeans::new(config).run(&data).unwrap();
 //! println!("SSE = {}", result.objective);
 //! ```
+//!
+//! ## Out-of-core clustering
+//!
+//! Every pipeline consumes a [`DataSource`] — the paper's decomposition
+//! principle means Big-means only ever touches bounded chunks, so the
+//! dataset never has to fit in RAM. Convert once to the `.bmx` flat binary
+//! format (documented in [`data`]), then cluster through the mmap backend:
+//!
+//! ```no_run
+//! use bigmeans::{BigMeans, BigMeansConfig, BmxSource};
+//!
+//! bigmeans::data::csv_to_bmx("huge.csv".as_ref(), "huge.bmx".as_ref()).unwrap();
+//! let source = BmxSource::open("huge.bmx".as_ref()).unwrap();
+//! let result = BigMeans::new(BigMeansConfig::new(25, 4096)).run(&source).unwrap();
+//! println!("SSE = {}", result.objective);
+//! ```
+//!
+//! Backends are value-identical: a seeded run yields bit-for-bit the same
+//! objective whether the bytes come from RAM, an mmap, or buffered reads
+//! (see `tests/integration_out_of_core.rs` and `examples/out_of_core.rs`).
 
 pub mod baselines;
 pub mod bench_harness;
@@ -42,5 +63,8 @@ pub mod runtime;
 pub mod util;
 
 pub use coordinator::bigmeans::{BigMeans, BigMeansResult};
-pub use coordinator::config::BigMeansConfig;
+pub use coordinator::config::{BigMeansConfig, DataBackend};
+pub use data::bmx::BmxSource;
+pub use data::csv_source::CsvSource;
 pub use data::dataset::Dataset;
+pub use data::source::DataSource;

@@ -1,10 +1,12 @@
 //! `bigmeans` CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//! * `cluster`  — run Big-means on a dataset (catalog name or csv/fbin file)
+//! * `cluster`  — run Big-means on a dataset (catalog name or csv/fbin/bmx
+//!   file; `--backend mmap|buffered` clusters files out-of-core)
+//! * `convert`  — stream a CSV into the out-of-core `.bmx` format
 //! * `table`    — regenerate a paper table for one dataset
 //! * `summary`  — regenerate Tables 3–4 across the catalog
-//! * `generate` — write a synthetic catalog dataset to .fbin
+//! * `generate` — write a synthetic catalog dataset to .fbin/.bmx
 //! * `catalog`  — list the dataset catalog
 //! * `artifacts`— inspect the AOT artifact manifest
 
@@ -13,12 +15,12 @@ use std::time::Duration;
 
 use bigmeans::bench_harness::{self, report, tables};
 use bigmeans::coordinator::config::{
-    BigMeansConfig, Engine, ParallelMode, ReinitStrategy, StopCondition,
+    BigMeansConfig, DataBackend, Engine, ParallelMode, ReinitStrategy, StopCondition,
 };
-use bigmeans::data::{catalog, loader, Dataset, PAPER_K_GRID};
+use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
 use bigmeans::runtime;
 use bigmeans::util::cli::Args;
-use bigmeans::BigMeans;
+use bigmeans::{BigMeans, DataSource};
 
 const USAGE: &str = "\
 bigmeans — scalable K-means clustering for big data (Big-means, PatRec 2022)
@@ -26,17 +28,24 @@ bigmeans — scalable K-means clustering for big data (Big-means, PatRec 2022)
 USAGE: bigmeans <SUBCOMMAND> [OPTIONS]
 
 SUBCOMMANDS:
-  cluster <dataset>   Run Big-means. <dataset> = catalog name or .csv/.fbin
+  cluster <dataset>   Run Big-means. <dataset> = catalog name or a
+                      .csv/.fbin/.bmx file path
       --k N             clusters (default 10)
       --s N             chunk size (default 4096)
       --time SECS       cpu_max budget (default 3)
       --chunks N        max chunks (default unlimited)
       --engine E        native | pjrt          (default native)
       --mode M          inner | chunks | seq   (default inner)
+      --backend B       mem | mmap | buffered  (default mem)
+                        mmap/buffered cluster files out-of-core:
+                        mmap = memory-mapped .bmx; buffered = positioned
+                        reads (.bmx) or row-indexed parse-on-read (.csv)
       --reinit R        kmeanspp | random      (default kmeanspp)
       --threads N       worker threads (default: machine)
       --seed N          RNG seed
       --skip-final      skip the full-dataset assignment pass
+  convert <in.csv> <out.bmx>   Convert a CSV into the .bmx format
+                      (blockwise, memory bounded by the row index)
   table <dataset>     Regenerate the paper's per-dataset tables
       --k LIST          k grid (default 2,3,5,10,15,20,25)
       --n-exec N        repetitions (default 3)
@@ -44,7 +53,7 @@ SUBCOMMANDS:
   summary             Regenerate Tables 3–4 over the whole catalog
       --n-exec N        repetitions per cell (default 2)
       --quick           four-dataset subset
-  generate <name> <out.fbin>   Write a catalog dataset to disk
+  generate <name> <out.fbin|out.bmx>   Write a catalog dataset to disk
   catalog             List catalog datasets
   artifacts           Show the AOT manifest
 ";
@@ -65,6 +74,7 @@ fn main() {
     };
     let code = match sub.as_str() {
         "cluster" => cmd_cluster(&args),
+        "convert" => cmd_convert(&args),
         "table" => cmd_table(&args),
         "summary" => cmd_summary(&args),
         "generate" => cmd_generate(&args),
@@ -84,22 +94,35 @@ fn main() {
     std::process::exit(code);
 }
 
-fn load_dataset(args: &Args) -> Result<Dataset, String> {
+/// Open the `cluster` dataset argument through the configured backend.
+fn load_source(args: &Args, backend: DataBackend) -> Result<Box<dyn DataSource>, String> {
     let Some(name) = args.positional().first() else {
         return Err("missing <dataset> argument".into());
     };
-    if name.ends_with(".csv") || name.ends_with(".fbin") {
-        loader::load(&PathBuf::from(name)).map_err(|e| e.to_string())
-    } else {
+    let is_file =
+        name.ends_with(".csv") || name.ends_with(".fbin") || name.ends_with(".bmx");
+    if !is_file {
+        if backend != DataBackend::InMemory {
+            return Err(format!(
+                "--backend {backend:?} needs a dataset file; '{name}' is a catalog \
+                 name, which is always generated in RAM (use `bigmeans generate \
+                 {name} out.bmx` first)"
+            ));
+        }
         let entry = catalog::find(name)
             .ok_or_else(|| format!("no catalog dataset matching '{name}'"))?;
         let seed = args.u64("data-seed", 20220418)?;
-        Ok(entry.generate(seed))
+        return Ok(Box::new(entry.generate(seed)));
     }
+    loader::open_source(&PathBuf::from(name), backend).map_err(|e| e.to_string())
 }
 
 fn cmd_cluster(args: &Args) -> Result<(), String> {
-    let data = load_dataset(args)?;
+    let backend = match args.choice("backend", &["mem", "mmap", "buffered"])? {
+        "mmap" => DataBackend::Mmap,
+        "buffered" => DataBackend::Buffered,
+        _ => DataBackend::InMemory,
+    };
     let k = args.usize("k", 10)?;
     let s = args.usize("s", 4096)?;
     let time = args.f64("time", 3.0)?;
@@ -128,15 +151,19 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     let mut cfg = BigMeansConfig::new(k, s)
         .with_stop(stop)
         .with_parallel(mode)
+        .with_backend(backend)
         .with_seed(args.u64("seed", 0xB16_3EA5)?);
     cfg.reinit = reinit;
     cfg.threads = args.usize("threads", 0)?;
     cfg.skip_final_assignment = args.flag("skip-final");
     cfg.engine = engine;
 
+    // The config's backend choice decides how the dataset file is opened.
+    let data = load_source(args, cfg.backend)?;
+
     eprintln!(
-        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}, mode={mode:?}",
-        data.name,
+        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}, mode={mode:?}, backend={backend:?}",
+        data.name(),
         data.m(),
         data.n(),
     );
@@ -146,7 +173,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("pjrt engine: {e}"))?,
     };
     let t0 = std::time::Instant::now();
-    let r = bm.run(&data)?;
+    let r = bm.run(data.as_ref())?;
     let wall = t0.elapsed().as_secs_f64();
     println!("objective (full SSE)     : {:.6e}", r.objective);
     println!("best chunk objective     : {:.6e}", r.best_chunk_objective);
@@ -155,6 +182,26 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     println!("distance evals (n_d)     : {:.3e}", r.counters.distance_evals as f64);
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
+    Ok(())
+}
+
+fn cmd_convert(args: &Args) -> Result<(), String> {
+    let pos = args.positional();
+    if pos.len() != 2 {
+        return Err("usage: convert <in.csv> <out.bmx>".into());
+    }
+    if !pos[1].ends_with(".bmx") {
+        return Err(format!("output must be a .bmx path, got '{}'", pos[1]));
+    }
+    let t0 = std::time::Instant::now();
+    let (m, n) = convert::csv_to_bmx(&PathBuf::from(&pos[0]), &PathBuf::from(&pos[1]))
+        .map_err(|e| e.to_string())?;
+    eprintln!(
+        "wrote {} ({m} × {n}, {:.1} MiB) in {:.2}s",
+        pos[1],
+        (m * n * 4) as f64 / (1 << 20) as f64,
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
@@ -221,7 +268,7 @@ fn cmd_summary(args: &Args) -> Result<(), String> {
 fn cmd_generate(args: &Args) -> Result<(), String> {
     let pos = args.positional();
     if pos.len() != 2 {
-        return Err("usage: generate <catalog-name> <out.fbin>".into());
+        return Err("usage: generate <catalog-name> <out.fbin|out.bmx>".into());
     }
     let entry =
         catalog::find(&pos[0]).ok_or_else(|| format!("no catalog dataset '{}'", pos[0]))?;
@@ -229,8 +276,10 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let out = PathBuf::from(&pos[1]);
     if pos[1].ends_with(".fbin") {
         loader::save_fbin(&data, &out).map_err(|e| e.to_string())?;
+    } else if pos[1].ends_with(".bmx") {
+        bigmeans::data::save_bmx(&data, &out).map_err(|e| e.to_string())?;
     } else {
-        return Err("only .fbin output supported".into());
+        return Err("only .fbin / .bmx output supported".into());
     }
     eprintln!("wrote {} ({} × {})", out.display(), data.m(), data.n());
     Ok(())

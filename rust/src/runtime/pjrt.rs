@@ -12,43 +12,72 @@
 //!   distance-preserving;
 //! * clusters `k → k_v`: padded centroid slots parked at `pad_centroid`
 //!   (+1e15) — never nearest, stay degenerate, objective unaffected.
+//!
+//! The `xla` dependency is only available behind the `pjrt` cargo feature
+//! (the offline build has no registry). Without it this module still
+//! compiles: every execution entry point returns an error, so callers
+//! ([`super::solver::PjrtSolver`]) transparently fall back to the native
+//! kernels while manifest inspection keeps working.
 
-use std::collections::HashMap;
 use std::path::Path;
-
-use anyhow::{anyhow, Context, Result};
 
 use crate::kernels::LloydResult;
 use crate::metrics::Counters;
+use crate::anyhow;
+#[cfg(feature = "pjrt")]
+use crate::util::error::Context;
+use crate::util::error::Result;
 
-use super::artifact::{Kind, Manifest, Variant};
+use super::artifact::Manifest;
+#[cfg(feature = "pjrt")]
+use super::artifact::{Kind, Variant};
 
 /// A compiled-artifact runtime bound to one PJRT CPU client.
 ///
 /// Not `Send`/`Sync` — the xla crate's client is `Rc`-based. Use one
 /// runtime per thread.
 pub struct PjrtRuntime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
+    cache: std::cell::RefCell<
+        std::collections::HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    >,
 }
 
 impl PjrtRuntime {
     /// Open the artifacts directory (must contain `manifest.json`).
+    #[cfg(feature = "pjrt")]
     pub fn open(artifacts_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(PjrtRuntime { client, manifest, cache: Default::default() })
+        Ok(PjrtRuntime { manifest, client, cache: Default::default() })
+    }
+
+    /// Open the artifacts directory (must contain `manifest.json`).
+    /// Stub build: manifest inspection works, execution always errors.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn open(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(PjrtRuntime { manifest })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "disabled (built without the `pjrt` feature)".to_string()
+    }
+
+    #[cfg(feature = "pjrt")]
     fn executable(&self, v: &Variant) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.borrow().get(&v.name) {
             return Ok(exe.clone());
@@ -67,7 +96,13 @@ impl PjrtRuntime {
 
     /// Pad a `(rows × n)` point block into a `(s_v × n_v)` literal plus its
     /// mask literal.
-    fn pad_points(v: &Variant, points: &[f32], rows: usize, n: usize) -> Result<(xla::Literal, xla::Literal)> {
+    #[cfg(feature = "pjrt")]
+    fn pad_points(
+        v: &Variant,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+    ) -> Result<(xla::Literal, xla::Literal)> {
         let mut buf = vec![0f32; v.s * v.n];
         for i in 0..rows {
             buf[i * v.n..i * v.n + n].copy_from_slice(&points[i * n..(i + 1) * n]);
@@ -81,6 +116,7 @@ impl PjrtRuntime {
 
     /// Pad `(k × n)` centroids into `(k_v × n_v)`: features zero-padded,
     /// extra cluster slots parked at `pad_centroid`.
+    #[cfg(feature = "pjrt")]
     fn pad_centroids(v: &Variant, centroids: &[f32], k: usize, n: usize) -> Result<xla::Literal> {
         let mut buf = vec![0f32; v.k * v.n];
         for j in 0..v.k {
@@ -96,6 +132,7 @@ impl PjrtRuntime {
 
     /// Lloyd local search on a chunk via the AOT executable.
     /// Errors if no variant fits `(rows, n, k)`.
+    #[cfg(feature = "pjrt")]
     pub fn lloyd(
         &self,
         points: &[f32],
@@ -134,8 +171,24 @@ impl PjrtRuntime {
         Ok(LloydResult { centroids, objective, counts, iters })
     }
 
+    /// Stub: built without the `pjrt` feature — always errors so callers
+    /// fall back to the native kernels.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn lloyd(
+        &self,
+        _points: &[f32],
+        _rows: usize,
+        _n: usize,
+        _k: usize,
+        _seed_centroids: &[f32],
+        _counters: &mut Counters,
+    ) -> Result<LloydResult> {
+        Err(anyhow!("pjrt lloyd unavailable: built without the `pjrt` feature"))
+    }
+
     /// One assignment pass via the AOT executable, blocked over the largest
     /// fitting variant so arbitrarily large `rows` work.
+    #[cfg(feature = "pjrt")]
     pub fn assign(
         &self,
         points: &[f32],
@@ -176,8 +229,24 @@ impl PjrtRuntime {
         Ok((labels, mins))
     }
 
+    /// Stub: built without the `pjrt` feature — always errors so callers
+    /// fall back to the native kernels.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn assign(
+        &self,
+        _points: &[f32],
+        _rows: usize,
+        _n: usize,
+        _k: usize,
+        _centroids: &[f32],
+        _counters: &mut Counters,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        Err(anyhow!("pjrt assign unavailable: built without the `pjrt` feature"))
+    }
+
     /// K-means++ seeding via the AOT executable (randomness injected as
     /// uniforms). Errors if no variant fits — callers fall back to native.
+    #[cfg(feature = "pjrt")]
     pub fn kmeanspp(
         &self,
         points: &[f32],
@@ -209,5 +278,20 @@ impl PjrtRuntime {
         }
         counters.add_distance_evals(rows as u64 * k as u64);
         Ok(centroids)
+    }
+
+    /// Stub: built without the `pjrt` feature — always errors so callers
+    /// fall back to the native kernels.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn kmeanspp(
+        &self,
+        _points: &[f32],
+        _rows: usize,
+        _n: usize,
+        _k: usize,
+        _uniforms: &[f32],
+        _counters: &mut Counters,
+    ) -> Result<Vec<f32>> {
+        Err(anyhow!("pjrt kmeanspp unavailable: built without the `pjrt` feature"))
     }
 }

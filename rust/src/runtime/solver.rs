@@ -4,7 +4,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::kernels::{LloydParams, LloydResult};

@@ -81,6 +81,20 @@ impl Args {
         }
     }
 
+    /// Enumerated option: the value of `--name` validated against
+    /// `allowed` (first entry is the default when the flag is absent).
+    /// Errors list the accepted values, e.g.
+    /// `--backend expects one of ["mem", "mmap", "buffered"]`.
+    pub fn choice<'a>(&'a self, name: &str, allowed: &[&'a str]) -> Result<&'a str, String> {
+        assert!(!allowed.is_empty(), "choice(): allowed set must be non-empty");
+        let v = self.get(name).unwrap_or(allowed[0]);
+        if allowed.contains(&v) {
+            Ok(v)
+        } else {
+            Err(format!("--{name} expects one of {allowed:?}, got '{v}'"))
+        }
+    }
+
     /// Comma-separated list of integers, e.g. `--k 2,3,5,10`.
     pub fn usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
         match self.get(name) {
@@ -132,6 +146,16 @@ mod tests {
         let a = parse(&["--ks", "2,3,5, 10"]);
         assert_eq!(a.usize_list("ks", &[]).unwrap(), vec![2, 3, 5, 10]);
         assert_eq!(a.usize_list("missing", &[1]).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn choice_validates_and_defaults() {
+        let a = parse(&["--backend", "mmap"]);
+        assert_eq!(a.choice("backend", &["mem", "mmap"]).unwrap(), "mmap");
+        assert_eq!(a.choice("mode", &["inner", "seq"]).unwrap(), "inner");
+        let bad = parse(&["--backend", "warp-drive"]);
+        let err = bad.choice("backend", &["mem", "mmap"]).unwrap_err();
+        assert!(err.contains("warp-drive") && err.contains("mem"));
     }
 
     #[test]

@@ -1,0 +1,133 @@
+//! Minimal error handling (no `anyhow` offline): a message-chain error
+//! type with the small API surface the crate uses — `Result`, `Error`,
+//! the [`Context`] extension trait, and the `anyhow!` / `bail!` macros.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does *not* implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion coherent, so `?` works on `io::Error` and friends.
+
+use std::fmt;
+
+/// A human-readable error message, possibly wrapping a cause.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(context: impl fmt::Display, cause: impl fmt::Display) -> Self {
+        Error { msg: format!("{context}: {cause}") }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result type (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::wrap(context, e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+///
+/// Exported at the crate root (`use crate::anyhow;`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+///
+/// Exported at the crate root (`use crate::bail;`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/3141592")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        let e2 = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e2.to_string(), "missing 7");
+    }
+
+    #[test]
+    fn bail_and_anyhow_format() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed (got 0)");
+        assert_eq!(anyhow!("n={}", 2).to_string(), "n=2");
+    }
+}

@@ -1,8 +1,9 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! deterministic RNG, scoped thread pool, JSON, CLI parsing, property-test
-//! driver, and a dense row-major matrix.
+//! driver, error handling, and a dense row-major matrix.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod matrix;
 pub mod prop;

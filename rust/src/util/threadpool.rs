@@ -81,6 +81,41 @@ impl ThreadPool {
     where
         F: FnOnce() + Send + 'static,
     {
+        self.run_all_boxed(jobs.into_iter().map(|j| Box::new(j) as Job).collect());
+    }
+
+    /// Run borrowed closures on the pool, blocking until every one has
+    /// finished — a scoped execution in the spirit of `std::thread::scope`,
+    /// but on the long-lived pool (no per-call thread spawns).
+    ///
+    /// The jobs may capture non-`'static` references: this function does
+    /// not return until all of them have run to completion (or panicked and
+    /// been drained), so nothing they borrow can dangle.
+    pub fn scope_run_all<'scope, F>(&self, jobs: Vec<F>)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        let boxed: Vec<Job> = jobs
+            .into_iter()
+            .map(|j| {
+                let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(j);
+                // Safety: the job only needs to live until it has executed,
+                // and `run_all_boxed` blocks this call until every job has
+                // finished (the completion latch is decremented after the
+                // job returns or panics). The 'scope borrows therefore
+                // outlive all uses; erasing the lifetime is sound.
+                unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'scope>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(job)
+                }
+            })
+            .collect();
+        self.run_all_boxed(boxed);
+    }
+
+    fn run_all_boxed(&self, jobs: Vec<Job>) {
         let pending = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
         for job in jobs {
             let pending = Arc::clone(&pending);
@@ -247,6 +282,42 @@ mod tests {
             }
         });
         assert!(hits.lock().unwrap().iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn scope_run_all_borrows_stack_data() {
+        let pool = ThreadPool::new(4);
+        let input: Vec<u64> = (0..64).collect();
+        let mut out = vec![0u64; 64];
+        {
+            let jobs: Vec<_> = input
+                .chunks(16)
+                .zip(out.chunks_mut(16))
+                .map(|(src, dst)| {
+                    move || {
+                        for (d, s) in dst.iter_mut().zip(src) {
+                            *d = s * 3;
+                        }
+                    }
+                })
+                .collect();
+            pool.scope_run_all(jobs);
+        }
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64 * 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "a pooled job panicked")]
+    fn scoped_panics_propagate_after_drain() {
+        let pool = ThreadPool::new(2);
+        let data = vec![1u8; 4];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {
+                let _ = &data;
+            }),
+            Box::new(|| panic!("boom")),
+        ];
+        pool.scope_run_all(jobs);
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Integration: the out-of-core DataSource engine must be *value
+//! transparent* — a seeded Big-means run over a temp `.bmx` file (mmap or
+//! buffered) or an indexed CSV reproduces the in-memory run bit-for-bit:
+//! same incumbent, same final objective, same assignment. This is the
+//! contract that lets the reproduction claim "clusters data it cannot
+//! load" without changing a single reported number.
+
+use std::path::PathBuf;
+
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::data::bmx::{save_bmx, BmxSource};
+use bigmeans::data::convert::csv_to_bmx;
+use bigmeans::data::csv_source::CsvSource;
+use bigmeans::data::loader;
+use bigmeans::data::synth::Synth;
+use bigmeans::{BigMeans, BigMeansResult, DataSource, Dataset};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("bigmeans_ooc_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+fn blobs(m: usize, n: usize, k_true: usize, seed: u64) -> Dataset {
+    Synth::GaussianMixture {
+        m,
+        n,
+        k_true,
+        spread: 0.3,
+        box_half_width: 25.0,
+    }
+    .generate("ooc", seed)
+}
+
+fn sequential_cfg(k: usize, s: usize, chunks: u64) -> BigMeansConfig {
+    BigMeansConfig::new(k, s)
+        .with_stop(StopCondition::MaxChunks(chunks))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(42)
+}
+
+fn assert_bit_identical(a: &BigMeansResult, b: &BigMeansResult, label: &str) {
+    assert_eq!(
+        a.objective.to_bits(),
+        b.objective.to_bits(),
+        "{label}: objectives differ: {} vs {}",
+        a.objective,
+        b.objective
+    );
+    assert_eq!(
+        a.best_chunk_objective.to_bits(),
+        b.best_chunk_objective.to_bits(),
+        "{label}: incumbent objectives differ"
+    );
+    assert_eq!(a.centroids, b.centroids, "{label}: centroids differ");
+    assert_eq!(a.assignment, b.assignment, "{label}: assignments differ");
+    assert_eq!(a.counters, b.counters, "{label}: counters differ");
+    assert_eq!(a.improvements, b.improvements, "{label}: improvements differ");
+}
+
+#[test]
+fn sequential_pipeline_bit_identical_across_backends() {
+    let data = blobs(30_000, 6, 5, 1);
+    let path = tmp("seq.bmx");
+    save_bmx(&data, &path).unwrap();
+    let mapped = BmxSource::open(&path).unwrap();
+    let buffered = BmxSource::open_buffered(&path).unwrap();
+
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(5, 2048, 20)).run(src).unwrap()
+    };
+    let mem = run(&data);
+    let via_mmap = run(&mapped);
+    let via_pread = run(&buffered);
+    assert!(mem.objective.is_finite());
+    assert_eq!(mem.assignment.len(), 30_000);
+    assert_bit_identical(&mem, &via_mmap, "mem vs mmap");
+    assert_bit_identical(&mem, &via_pread, "mem vs buffered");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn chunk_parallel_pipeline_bit_identical_across_backends() {
+    // One worker makes the chunk-parallel pipeline deterministic (ticketed
+    // chunk budget + a single RNG stream), so the backend comparison can be
+    // exact for strategy 2 as well.
+    let data = blobs(20_000, 4, 4, 2);
+    let path = tmp("par.bmx");
+    save_bmx(&data, &path).unwrap();
+    let mapped = BmxSource::open(&path).unwrap();
+
+    let run = |src: &dyn DataSource| {
+        let mut cfg = BigMeansConfig::new(4, 1024)
+            .with_stop(StopCondition::MaxChunks(12))
+            .with_parallel(ParallelMode::ChunkParallel)
+            .with_seed(7);
+        cfg.threads = 1;
+        BigMeans::new(cfg).run(src).unwrap()
+    };
+    let mem = run(&data);
+    let ooc = run(&mapped);
+    assert_eq!(mem.counters.chunks, 12);
+    assert_bit_identical(&mem, &ooc, "chunk-parallel mem vs mmap");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn multithreaded_chunk_parallel_runs_out_of_core() {
+    // With several workers the interleaving is racy, so only quality and
+    // accounting are asserted — but the data never leaves the mmap.
+    let data = blobs(25_000, 4, 4, 3);
+    let path = tmp("par_mt.bmx");
+    save_bmx(&data, &path).unwrap();
+    let mapped = BmxSource::open(&path).unwrap();
+
+    let mut cfg = BigMeansConfig::new(4, 1024)
+        .with_stop(StopCondition::MaxChunks(16))
+        .with_parallel(ParallelMode::ChunkParallel)
+        .with_seed(11);
+    cfg.threads = 4;
+    let r = BigMeans::new(cfg).run(&mapped).unwrap();
+    assert_eq!(r.counters.chunks, 16);
+    assert_eq!(r.assignment.len(), 25_000);
+    assert!(r.objective.is_finite());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn csv_source_bit_identical_to_materialized_csv() {
+    // Round a dataset through CSV text so both sides parse identical
+    // decimal strings, then compare indexed-CSV vs in-memory clustering.
+    let data = blobs(4_000, 3, 3, 4);
+    let path = tmp("src.csv");
+    let mut text = String::with_capacity(data.m() * 24);
+    for i in 0..data.m() {
+        let row = &data.points()[i * 3..(i + 1) * 3];
+        text.push_str(&format!("{},{},{}\n", row[0], row[1], row[2]));
+    }
+    std::fs::write(&path, text).unwrap();
+
+    let materialized = loader::load_csv(&path, None).unwrap();
+    let indexed = CsvSource::open(&path).unwrap();
+    assert_eq!(indexed.m(), materialized.m());
+
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(3, 512, 10)).run(src).unwrap()
+    };
+    let mem = run(&materialized);
+    let ooc = run(&indexed);
+    assert_bit_identical(&mem, &ooc, "materialized csv vs indexed csv");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn convert_then_cluster_matches_csv_pipeline() {
+    // csv → bmx conversion preserves values exactly: clustering the .bmx
+    // through mmap equals clustering the materialized CSV.
+    let data = blobs(3_000, 2, 3, 5);
+    let csv = tmp("conv.csv");
+    let bmx = tmp("conv.bmx");
+    let mut text = String::new();
+    for i in 0..data.m() {
+        let row = &data.points()[i * 2..(i + 1) * 2];
+        text.push_str(&format!("{},{}\n", row[0], row[1]));
+    }
+    std::fs::write(&csv, text).unwrap();
+    let (m, n) = csv_to_bmx(&csv, &bmx).unwrap();
+    assert_eq!((m, n), (3_000, 2));
+
+    let materialized = loader::load_csv(&csv, None).unwrap();
+    let mapped = BmxSource::open(&bmx).unwrap();
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(3, 512, 8)).run(src).unwrap()
+    };
+    assert_bit_identical(
+        &run(&materialized),
+        &run(&mapped),
+        "csv materialized vs converted bmx",
+    );
+    let _ = std::fs::remove_file(&csv);
+    let _ = std::fs::remove_file(&bmx);
+}
+
+#[test]
+fn inner_parallel_final_pass_identical_across_backends() {
+    // The blocked final pass must stay backend-independent when the solver
+    // parallelises rows internally (strategy 1).
+    let data = blobs(40_000, 5, 4, 6);
+    let path = tmp("inner.bmx");
+    save_bmx(&data, &path).unwrap();
+    let mapped = BmxSource::open(&path).unwrap();
+
+    let run = |src: &dyn DataSource| {
+        let mut cfg = BigMeansConfig::new(4, 2048)
+            .with_stop(StopCondition::MaxChunks(10))
+            .with_parallel(ParallelMode::InnerParallel)
+            .with_seed(13);
+        cfg.threads = 4;
+        BigMeans::new(cfg).run(src).unwrap()
+    };
+    let mem = run(&data);
+    let ooc = run(&mapped);
+    assert_bit_identical(&mem, &ooc, "inner-parallel mem vs mmap");
+    let _ = std::fs::remove_file(&path);
+}

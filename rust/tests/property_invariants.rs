@@ -2,11 +2,14 @@
 //! by the in-crate `util::prop` shrinking harness (no proptest offline).
 
 use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::coordinator::sampler::ChunkSampler;
+use bigmeans::data::bmx::{save_bmx, BmxSource};
 use bigmeans::kernels;
 use bigmeans::metrics::Counters;
 use bigmeans::util::prop::{check, ClusterProblem, ClusterProblemGen};
 use bigmeans::util::rng::Rng;
-use bigmeans::BigMeans;
+use bigmeans::util::threadpool::ThreadPool;
+use bigmeans::{BigMeans, Dataset};
 
 fn seed_centroids(p: &ClusterProblem, rng: &mut Rng) -> Vec<f32> {
     let idx = rng.sample_indices(p.m, p.k);
@@ -163,6 +166,98 @@ fn prop_bigmeans_total_counts_and_finite_objective() {
             && r.assignment.iter().all(|&a| (a as usize) < p.k)
             && r.counters.chunks == 5
     });
+}
+
+#[test]
+fn prop_lloyd_objective_non_increasing_per_iteration() {
+    // Stronger than end-to-end monotonicity: *every* assignment+update
+    // iteration must not increase the objective (Lloyd's classic descent
+    // property), checked on random problems with a small fp tolerance.
+    check(8, 50, &ClusterProblemGen::default(), |p| {
+        let mut rng = Rng::new(29);
+        let mut c = seed_centroids(p, &mut rng);
+        let mut counters = Counters::new();
+        let mut prev = f64::INFINITY;
+        for _ in 0..6 {
+            let out = kernels::assign_accumulate(&p.points, &c, p.m, p.n, p.k, &mut counters);
+            if out.objective > prev * (1.0 + 1e-5) + 1e-4 {
+                return false;
+            }
+            prev = out.objective;
+            kernels::update_centroids(&out.sums, &out.counts, &mut c, p.k, p.n);
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_parallel_assignment_matches_serial_any_shape() {
+    // The pool-parallel fused assignment must agree with the serial path on
+    // random, deliberately non-block-aligned shapes: labels, counts and
+    // per-point mins exactly; f64 accumulations up to merge-order slack.
+    let gen = ClusterProblemGen {
+        m_range: (1, 3000), // crosses the 2·BLOCK_ROWS parallel threshold
+        n_range: (1, 12),
+        k_max: 7,
+        coord_range: (-50.0, 50.0),
+    };
+    let pool = ThreadPool::new(3);
+    check(9, 40, &gen, |p| {
+        let mut rng = Rng::new(31);
+        let c = seed_centroids(p, &mut rng);
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let serial = kernels::assign_accumulate(&p.points, &c, p.m, p.n, p.k, &mut c1);
+        let par = kernels::assign_accumulate_parallel(
+            &pool, &p.points, &c, p.m, p.n, p.k, &mut c2,
+        );
+        let slack = 1e-6 * serial.objective.abs() + 1e-9;
+        serial.labels == par.labels
+            && serial.counts == par.counts
+            && serial.mins == par.mins
+            && (serial.objective - par.objective).abs() <= slack
+            && c1.distance_evals == c2.distance_evals
+    });
+}
+
+#[test]
+fn prop_sampler_draws_identical_chunks_across_backends() {
+    // The chunk sampler must hand the coordinator byte-identical chunks
+    // whether the source is the in-memory dataset, the mmap'd .bmx file, or
+    // the buffered .bmx reader — same seed, same indices, same floats.
+    let gen = ClusterProblemGen {
+        m_range: (2, 300),
+        n_range: (1, 8),
+        k_max: 4,
+        coord_range: (-100.0, 100.0),
+    };
+    let dir = std::env::temp_dir().join("bigmeans_prop_sampler");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}.bmx", std::process::id()));
+    check(10, 25, &gen, |p| {
+        let data = Dataset::from_vec("prop", p.points.clone(), p.m, p.n);
+        save_bmx(&data, &path).unwrap();
+        let mapped = BmxSource::open(&path).unwrap();
+        let buffered = BmxSource::open_buffered(&path).unwrap();
+        let s = (p.m / 2).max(1);
+        let mut ok = true;
+        for (seed, src) in [(1u64, &mapped as &dyn bigmeans::DataSource), (1, &buffered)] {
+            let mut mem_sampler = ChunkSampler::new(s, p.n);
+            let mut disk_sampler = ChunkSampler::new(s, p.n);
+            let mut rng_a = Rng::new(seed ^ 0xC0FFEE);
+            let mut rng_b = Rng::new(seed ^ 0xC0FFEE);
+            for _ in 0..3 {
+                let (mem_chunk, mem_rows) = mem_sampler.sample(&data, &mut rng_a);
+                let mem_chunk = mem_chunk.to_vec();
+                let (disk_chunk, disk_rows) = disk_sampler.sample(src, &mut rng_b);
+                ok &= mem_rows == disk_rows
+                    && mem_chunk == disk_chunk
+                    && mem_sampler.last_indices() == disk_sampler.last_indices();
+            }
+        }
+        ok
+    });
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
