@@ -11,6 +11,7 @@
 
 use crate::baselines::common::{AlgoFailure, AlgoResult, MsscAlgorithm};
 use crate::data::dataset::Dataset;
+use crate::kernels::engine::{KernelEngine, KernelEngineKind, LloydState};
 use crate::kernels::{self, distance::sq_dist, LloydParams};
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
@@ -21,6 +22,8 @@ pub struct LightweightCoreset {
     pub coreset_size: usize,
     pub lloyd: LloydParams,
     pub candidates: usize,
+    /// Kernel engine for the weighted Lloyd on the coreset.
+    pub kernel: KernelEngineKind,
 }
 
 impl LightweightCoreset {
@@ -29,6 +32,7 @@ impl LightweightCoreset {
             coreset_size,
             lloyd: LloydParams::default(),
             candidates: 3,
+            kernel: KernelEngineKind::Panel,
         }
     }
 
@@ -95,12 +99,23 @@ impl MsscAlgorithm for LightweightCoreset {
         let mut counters = Counters::new();
         let mut timer = PhaseTimer::new();
 
+        let engine = self.kernel.build();
         let centroids = timer.time_init(|| {
             let (coreset, weights) = self.sample(data, &mut rng, &mut counters);
             // Weighted Lloyd on the coreset.
             let seed_c =
                 kernels::kmeanspp(&coreset, size, n, k, self.candidates, &mut rng, &mut counters);
-            weighted_lloyd(&coreset, &weights, size, n, k, seed_c, self.lloyd, &mut counters)
+            weighted_lloyd(
+                &coreset,
+                &weights,
+                size,
+                n,
+                k,
+                seed_c,
+                self.lloyd,
+                engine.as_ref(),
+                &mut counters,
+            )
         });
 
         let objective = timer.time_full(|| {
@@ -117,7 +132,11 @@ impl MsscAlgorithm for LightweightCoreset {
     }
 }
 
-/// Lloyd over weighted points.
+/// Lloyd over weighted points, assignment routed through a
+/// [`KernelEngine`] with persistent bounds — the bounded engine prunes the
+/// coreset iterations exactly like an unweighted chunk (the weights only
+/// enter the reduction, not the nearest-centroid search).
+#[allow(clippy::too_many_arguments)]
 fn weighted_lloyd(
     points: &[f32],
     weights: &[f64],
@@ -126,23 +145,30 @@ fn weighted_lloyd(
     k: usize,
     mut centroids: Vec<f32>,
     params: LloydParams,
+    engine: &dyn KernelEngine,
     counters: &mut Counters,
 ) -> Vec<f32> {
     let mut prev = f64::INFINITY;
+    let mut state = LloydState::new(m);
+    let mut old = vec![0f32; k * n];
     for _ in 0..params.max_iters {
+        // The engine's unweighted sums/counts are discarded — the weighted
+        // reduction below needs its own pass anyway, and coresets are small
+        // by construction (O(size·n), not O(dataset)), so sharing the
+        // engine's pruned search is the win worth taking.
+        let out = engine.assign_step(points, &centroids, m, n, k, &mut state, counters);
         let mut sums = vec![0f64; k * n];
         let mut wsum = vec![0f64; k];
         let mut obj = 0f64;
         for i in 0..m {
-            let x = &points[i * n..(i + 1) * n];
-            let (j, d) = kernels::distance::nearest(x, &centroids, k, n);
-            obj += weights[i] * d as f64;
+            let j = out.labels[i] as usize;
+            obj += weights[i] * out.mins[i] as f64;
             wsum[j] += weights[i];
             for t in 0..n {
-                sums[j * n + t] += weights[i] * x[t] as f64;
+                sums[j * n + t] += weights[i] * points[i * n + t] as f64;
             }
         }
-        counters.add_distance_evals((m * k) as u64);
+        old.copy_from_slice(&centroids);
         for j in 0..k {
             if wsum[j] > 0.0 {
                 for t in 0..n {
@@ -150,6 +176,7 @@ fn weighted_lloyd(
                 }
             }
         }
+        state.apply_update(&old, &centroids, k, n);
         if (prev - obj).abs() <= params.tol * obj.max(1e-300) {
             break;
         }
@@ -205,6 +232,16 @@ mod tests {
         let total: f64 = weights.iter().sum();
         let m = data.m() as f64;
         assert!((total - m).abs() / m < 0.35, "Σw = {total}, m = {m}");
+    }
+
+    #[test]
+    fn bounded_kernel_runs_and_prunes() {
+        let data = blobs(4);
+        let mut algo = LightweightCoreset::new(512);
+        algo.kernel = KernelEngineKind::Bounded;
+        let r = algo.run(&data, 4, 2).unwrap();
+        assert!(r.objective.is_finite());
+        assert!(r.counters.pruned_evals > 0, "weighted lloyd on blobs should prune");
     }
 
     #[test]

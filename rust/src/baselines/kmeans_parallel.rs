@@ -13,7 +13,7 @@
 
 use crate::baselines::common::{AlgoFailure, AlgoResult, MsscAlgorithm};
 use crate::data::dataset::Dataset;
-use crate::kernels::{self, distance::sq_dist, LloydParams};
+use crate::kernels::{self, distance::sq_dist, KernelEngineKind, LloydParams};
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -26,6 +26,8 @@ pub struct KMeansParallel {
     /// Rounds `r`; None = `ceil(log ψ)` like the original paper.
     pub rounds: Option<usize>,
     pub threads: usize,
+    /// Kernel engine for the finishing full-dataset Lloyd.
+    pub kernel: KernelEngineKind,
 }
 
 impl Default for KMeansParallel {
@@ -35,6 +37,7 @@ impl Default for KMeansParallel {
             oversample_factor: 2.0,
             rounds: Some(5),
             threads: 0,
+            kernel: KernelEngineKind::Panel,
         }
     }
 }
@@ -156,8 +159,19 @@ impl MsscAlgorithm for KMeansParallel {
             0 => Some(ThreadPool::with_default_size()),
             t => Some(ThreadPool::new(t)),
         };
+        let engine = self.kernel.build();
         let result = timer.time_full(|| {
-            kernels::lloyd(points, &centroids0, m, n, k, self.lloyd, pool.as_ref(), &mut counters)
+            kernels::lloyd_with_engine(
+                points,
+                &centroids0,
+                m,
+                n,
+                k,
+                self.lloyd,
+                pool.as_ref(),
+                engine.as_ref(),
+                &mut counters,
+            )
         });
         counters.full_iterations += result.iters as u64 + 1;
         Ok(AlgoResult {
@@ -250,6 +264,19 @@ mod tests {
         // Compare *init-phase* work via total evals minus lloyd's share —
         // simplest proxy: k-means|| total ≥ k-means++ total.
         assert!(a.counters.distance_evals > b.counters.distance_evals / 2);
+    }
+
+    #[test]
+    fn bounded_kernel_finishing_lloyd_runs_and_prunes() {
+        let data = blobs(2000, 4);
+        let algo = KMeansParallel {
+            threads: 1,
+            kernel: KernelEngineKind::Bounded,
+            ..Default::default()
+        };
+        let r = algo.run(&data, 5, 3).unwrap();
+        assert!(r.objective.is_finite());
+        assert!(r.counters.pruned_evals > 0, "full-dataset lloyd on blobs should prune");
     }
 
     #[test]

@@ -132,6 +132,7 @@ impl CellRuns {
         }
         if count > 0 {
             total.distance_evals /= count;
+            total.pruned_evals /= count;
             total.full_iterations /= count;
             total.chunk_iterations /= count;
             total.chunks /= count;

@@ -1,0 +1,238 @@
+//! `bench` — assignment-engine micro-benchmark, no external deps.
+//!
+//! Times the fused panel engine, the bounded (Hamerly-pruned) engine, and
+//! the pre-fusion two-pass reference kernel on a synthetic workload
+//! (default 1M×16, k=64) — once on uniform data (worst case for pruning)
+//! and once on separated Gaussian blobs (best case) — then emits
+//! `BENCH_assign.json` with wall times and distance-eval counts. CI runs a
+//! scaled-down version as a non-gating smoke step.
+//!
+//! ```text
+//! cargo run --release --bin bench -- [--m N] [--n N] [--k N] [--iters N] [--out PATH]
+//! ```
+
+use std::time::Instant;
+
+use bigmeans::kernels::assign::{AssignOut, BLOCK_ROWS};
+use bigmeans::kernels::distance::{sq_dist_panel, sq_norm};
+use bigmeans::kernels::engine::{BoundedEngine, KernelEngine, LloydState, PanelEngine};
+use bigmeans::kernels::update_centroids;
+use bigmeans::metrics::Counters;
+use bigmeans::util::cli::Args;
+use bigmeans::util::json::{arr, num, obj, s, Json};
+use bigmeans::util::rng::Rng;
+
+/// The seed (pre-fusion) assignment kernel: dense distance panel into a
+/// `rows×k` buffer, argmin in a second pass. Kept verbatim as the baseline
+/// the fused path is measured against.
+fn reference_assign(
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    counters: &mut Counters,
+) -> AssignOut {
+    let mut labels = vec![0u32; m];
+    let mut mins = vec![0f32; m];
+    let mut sums = vec![0f64; k * n];
+    let mut counts = vec![0u64; k];
+    let mut objective = 0f64;
+    let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+    let mut panel = vec![0f32; BLOCK_ROWS * k];
+    let mut x_sq = vec![0f32; BLOCK_ROWS];
+    let mut row = 0;
+    while row < m {
+        let rows = BLOCK_ROWS.min(m - row);
+        let block = &points[row * n..(row + rows) * n];
+        for (i, xs) in x_sq.iter_mut().take(rows).enumerate() {
+            *xs = sq_norm(&block[i * n..(i + 1) * n]);
+        }
+        sq_dist_panel(block, &x_sq[..rows], centroids, &c_sq, rows, k, n, &mut panel[..rows * k]);
+        for i in 0..rows {
+            let drow = &panel[i * k..(i + 1) * k];
+            let mut best = 0usize;
+            let mut best_d = drow[0];
+            for (j, &d) in drow.iter().enumerate().skip(1) {
+                if d < best_d {
+                    best_d = d;
+                    best = j;
+                }
+            }
+            let g = row + i;
+            labels[g] = best as u32;
+            mins[g] = best_d;
+            objective += best_d as f64;
+            counts[best] += 1;
+            let srow = &mut sums[best * n..(best + 1) * n];
+            for (sv, xv) in srow.iter_mut().zip(&block[i * n..(i + 1) * n]) {
+                *sv += *xv as f64;
+            }
+        }
+        row += rows;
+    }
+    counters.add_distance_evals((m * k) as u64);
+    AssignOut { labels, mins, sums, counts, objective }
+}
+
+struct Case {
+    name: String,
+    secs: f64,
+    counters: Counters,
+    objective: f64,
+}
+
+/// Fixed-iteration Lloyd loop through a [`KernelEngine`].
+fn time_engine(
+    name: &str,
+    engine: &dyn KernelEngine,
+    pts: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    iters: usize,
+) -> Case {
+    let mut c = pts[..k * n].to_vec();
+    let mut old = vec![0f32; k * n];
+    let mut state = LloydState::new(m);
+    let mut counters = Counters::new();
+    let mut objective = 0f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let out = engine.assign_step(pts, &c, m, n, k, &mut state, &mut counters);
+        objective = out.objective;
+        old.copy_from_slice(&c);
+        update_centroids(&out.sums, &out.counts, &mut c, k, n);
+        state.apply_update(&old, &c, k, n);
+    }
+    Case { name: name.to_string(), secs: t0.elapsed().as_secs_f64(), counters, objective }
+}
+
+/// The same loop over the reference two-pass kernel.
+fn time_reference(name: &str, pts: &[f32], m: usize, n: usize, k: usize, iters: usize) -> Case {
+    let mut c = pts[..k * n].to_vec();
+    let mut counters = Counters::new();
+    let mut objective = 0f64;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let out = reference_assign(pts, &c, m, n, k, &mut counters);
+        objective = out.objective;
+        update_centroids(&out.sums, &out.counts, &mut c, k, n);
+    }
+    Case { name: name.to_string(), secs: t0.elapsed().as_secs_f64(), counters, objective }
+}
+
+fn uniform_data(rng: &mut Rng, m: usize, n: usize) -> Vec<f32> {
+    (0..m * n).map(|_| rng.f32() * 100.0).collect()
+}
+
+/// `k` well-separated Gaussian blobs — the regime the paper targets and
+/// where triangle-inequality pruning pays off.
+fn blob_data(rng: &mut Rng, m: usize, n: usize, k: usize) -> Vec<f32> {
+    let centers: Vec<f32> = (0..k * n).map(|_| rng.f32() * 100.0 - 50.0).collect();
+    let mut pts = Vec::with_capacity(m * n);
+    for i in 0..m {
+        let c = &centers[(i % k) * n..(i % k + 1) * n];
+        for &cv in c {
+            pts.push(cv + 0.5 * rng.gaussian() as f32);
+        }
+    }
+    pts
+}
+
+fn case_json(c: &Case) -> Json {
+    obj(vec![
+        ("name", s(&c.name)),
+        ("secs", num(c.secs)),
+        ("distance_evals", num(c.counters.distance_evals as f64)),
+        ("pruned_evals", num(c.counters.pruned_evals as f64)),
+        ("objective", num(c.objective)),
+    ])
+}
+
+fn main() {
+    let args = match Args::parse_with_flags(std::env::args().skip(1), &["help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") {
+        eprintln!(
+            "bench — assignment-engine micro-benchmark\n\
+             usage: bench [--m N] [--n N] [--k N] [--iters N] [--out PATH]"
+        );
+        return;
+    }
+    let run = || -> Result<(), String> {
+        let m = args.usize("m", 1_000_000)?;
+        let n = args.usize("n", 16)?;
+        let k = args.usize("k", 64)?;
+        let iters = args.usize("iters", 5)?;
+        let out_path = args.get_or("out", "BENCH_assign.json").to_string();
+        if k == 0 || k > m {
+            return Err(format!("k={k} out of range for m={m}"));
+        }
+        let full_evals = (m * k * iters) as f64;
+        let mut rng = Rng::new(0xBE7C);
+        eprintln!("generating {m}×{n} uniform + blob datasets (k={k}, iters={iters}) …");
+        let uniform = uniform_data(&mut rng, m, n);
+        let blobs = blob_data(&mut rng, m, n, k);
+
+        let panel = PanelEngine;
+        let bounded = BoundedEngine::default();
+        let mut cases = Vec::new();
+        for (data_name, data) in [("uniform", &uniform), ("blobs", &blobs)] {
+            for (engine_name, engine) in
+                [("panel", &panel as &dyn KernelEngine), ("bounded", &bounded)]
+            {
+                let name = format!("{engine_name}_{data_name}");
+                eprint!("{name:<20} ");
+                let c = time_engine(&name, engine, data, m, n, k, iters);
+                eprintln!(
+                    "{:>8.3}s  n_d {:.3e}  pruned {:.3e}",
+                    c.secs, c.counters.distance_evals as f64, c.counters.pruned_evals as f64
+                );
+                cases.push(c);
+            }
+            let name = format!("reference_{data_name}");
+            eprint!("{name:<20} ");
+            let c = time_reference(&name, data, m, n, k, iters);
+            eprintln!(
+                "{:>8.3}s  n_d {:.3e}  (two-pass seed kernel)",
+                c.secs,
+                c.counters.distance_evals as f64
+            );
+            cases.push(c);
+        }
+
+        let find = |name: &str| cases.iter().find(|c| c.name == name).unwrap();
+        let bounded_blobs = find("bounded_blobs");
+        let eval_ratio = full_evals / (bounded_blobs.counters.distance_evals as f64).max(1.0);
+        let fused_speedup = find("reference_uniform").secs / find("panel_uniform").secs.max(1e-12);
+        eprintln!(
+            "bounded/blobs eval reduction: {eval_ratio:.2}× \
+             | fused panel vs seed kernel (uniform): {fused_speedup:.2}×"
+        );
+
+        let doc = obj(vec![
+            ("m", num(m as f64)),
+            ("n", num(n as f64)),
+            ("k", num(k as f64)),
+            ("iters", num(iters as f64)),
+            ("full_evals", num(full_evals)),
+            ("cases", arr(cases.iter().map(case_json).collect())),
+            ("bounded_blobs_eval_reduction", num(eval_ratio)),
+            ("fused_vs_reference_uniform_speedup", num(fused_speedup)),
+        ]);
+        std::fs::write(&out_path, doc.to_string() + "\n")
+            .map_err(|e| format!("write {out_path}: {e}"))?;
+        eprintln!("wrote {out_path}");
+        Ok(())
+    };
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

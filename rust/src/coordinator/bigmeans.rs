@@ -20,7 +20,7 @@ use crate::coordinator::incumbent::Solution;
 use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::source::DataSource;
+use crate::data::source::{AccessPattern, DataSource};
 use crate::kernels::{self, update::degenerate_indices};
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
@@ -59,7 +59,8 @@ impl BigMeans {
             ParallelMode::Sequential => 1,
             _ => config.threads,
         };
-        let solver = Box::new(NativeSolver::new(config.lloyd, threads));
+        let solver =
+            Box::new(NativeSolver::with_kernel(config.lloyd, threads, config.kernel));
         BigMeans { config, solver }
     }
 
@@ -101,6 +102,8 @@ impl BigMeans {
         let mut improvements = 0u64;
         let mut stop = StopState::new(cfg.stop);
 
+        // Chunk sampling gathers scattered rows — turn readahead off.
+        data.advise(AccessPattern::Random);
         timer.time_init(|| {
             while !stop.should_stop() {
                 let (chunk, rows) = sampler.sample(data, &mut rng);
@@ -170,6 +173,9 @@ pub(crate) fn finish(
     let (assignment, objective) = if cfg.skip_final_assignment {
         (Vec::new(), f64::NAN)
     } else {
+        // The final pass streams the source front to back — let the OS
+        // read ahead of the block loop.
+        data.advise(AccessPattern::Sequential);
         timer.time_full(|| {
             let resident = data.contiguous();
             let mut labels = Vec::with_capacity(m);

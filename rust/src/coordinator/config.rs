@@ -4,6 +4,8 @@ use std::time::Duration;
 
 use crate::kernels::lloyd::LloydParams;
 
+pub use crate::kernels::engine::KernelEngineKind;
+
 /// How degenerate (empty) centroids are reinitialised between chunks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReinitStrategy {
@@ -66,6 +68,9 @@ pub struct BigMeansConfig {
     pub candidates: usize,
     /// Engine for the chunk-local search.
     pub engine: Engine,
+    /// Kernel engine for native assignment steps (`panel` = exact blocked
+    /// panel, `bounded` = Hamerly-pruned exact; label-identical results).
+    pub kernel: KernelEngineKind,
     /// Parallelisation mode.
     pub parallel: ParallelMode,
     /// How dataset *files* are opened — consumed by
@@ -93,6 +98,7 @@ impl BigMeansConfig {
             reinit: ReinitStrategy::KmeansPP,
             candidates: 3,
             engine: Engine::Native,
+            kernel: KernelEngineKind::Panel,
             parallel: ParallelMode::InnerParallel,
             backend: DataBackend::InMemory,
             threads: 0,
@@ -113,6 +119,11 @@ impl BigMeansConfig {
 
     pub fn with_engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    pub fn with_kernel(mut self, kernel: KernelEngineKind) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -155,6 +166,7 @@ mod tests {
         assert_eq!(c.candidates, 3);
         assert_eq!(c.reinit, ReinitStrategy::KmeansPP);
         assert_eq!(c.backend, DataBackend::InMemory);
+        assert_eq!(c.kernel, KernelEngineKind::Panel);
         assert!((c.lloyd.tol - 1e-4).abs() < 1e-12);
         assert_eq!(c.lloyd.max_iters, 300);
     }

@@ -13,12 +13,18 @@
 //! to assert bit-identical results across data backends. Time budgets are
 //! still signalled by the coordinator thread through the `done` flag.
 //!
+//! The coordinator sleeps on a condvar that workers signal after every
+//! chunk (and on exit), waking either on progress or at the wall-clock
+//! deadline — no polling loop, so short budgets stop with microsecond
+//! rather than millisecond tail latency.
+//!
 //! The dataset is shared as `&dyn DataSource`, so workers gather their
 //! chunks straight from an mmap'd or indexed on-disk source — chunk-level
 //! parallelism composes with out-of-core data for free.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::coordinator::bigmeans::{reseed, BigMeansResult};
 use crate::coordinator::config::{BigMeansConfig, StopCondition};
@@ -26,10 +32,48 @@ use crate::coordinator::incumbent::{SharedIncumbent, Solution};
 use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::source::DataSource;
+use crate::data::source::{AccessPattern, DataSource};
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
+
+/// Worker-progress monitor: chunk totals plus worker liveness under one
+/// mutex, with a condvar the coordinator blocks on. Workers notify after
+/// each processed chunk and once on exit, so the coordinator wakes exactly
+/// when the stop condition can have changed (or at its time deadline).
+struct Progress {
+    state: Mutex<ProgressState>,
+    changed: Condvar,
+}
+
+#[derive(Clone, Copy)]
+struct ProgressState {
+    chunks: u64,
+    finished_workers: usize,
+}
+
+impl Progress {
+    fn new() -> Self {
+        Progress {
+            state: Mutex::new(ProgressState { chunks: 0, finished_workers: 0 }),
+            changed: Condvar::new(),
+        }
+    }
+
+    fn record_chunk(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.chunks += 1;
+        drop(st);
+        self.changed.notify_all();
+    }
+
+    fn record_exit(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.finished_workers += 1;
+        drop(st);
+        self.changed.notify_all();
+    }
+}
 
 /// Run the chunk-parallel pipeline. Called from `BigMeans::run`.
 ///
@@ -58,10 +102,12 @@ pub fn run_chunk_parallel(
     let incumbent = Arc::new(SharedIncumbent::new(Solution::all_degenerate(k, n)));
     let done = Arc::new(AtomicBool::new(false));
     let tickets = Arc::new(AtomicU64::new(0));
-    let chunk_count = Arc::new(AtomicU64::new(0));
+    let progress = Arc::new(Progress::new());
     let mut timer = PhaseTimer::new();
     let mut root_rng = Rng::new(cfg.seed);
 
+    // Every worker samples scattered chunk rows — readahead off.
+    data.advise(AccessPattern::Random);
     let (improvements, counters) = timer.time_init(|| {
         std::thread::scope(|scope| {
             let mut handles = Vec::new();
@@ -70,11 +116,12 @@ pub fn run_chunk_parallel(
                 let incumbent = Arc::clone(&incumbent);
                 let done = Arc::clone(&done);
                 let tickets = Arc::clone(&tickets);
-                let chunk_count = Arc::clone(&chunk_count);
+                let progress = Arc::clone(&progress);
                 let cfg = cfg.clone();
                 let data_ref = data;
                 handles.push(scope.spawn(move || {
-                    let solver_ref = NativeSolver::sequential(cfg.lloyd);
+                    let solver_ref =
+                        NativeSolver::sequential_with_kernel(cfg.lloyd, cfg.kernel);
                     let mut counters = Counters::new();
                     let mut sampler = ChunkSampler::new(s, n);
                     let mut improvements = 0u64;
@@ -103,7 +150,6 @@ pub fn run_chunk_parallel(
                             solver_ref.lloyd(chunk, rows, n, k, &seed_c, &mut counters);
                         counters.chunk_iterations += result.iters as u64;
                         counters.chunks += 1;
-                        chunk_count.fetch_add(1, Ordering::Relaxed);
                         let accepted = incumbent.offer(Solution {
                             degenerate: degenerate_indices(&result.counts),
                             centroids: result.centroids,
@@ -112,23 +158,42 @@ pub fn run_chunk_parallel(
                         if accepted {
                             improvements += 1;
                         }
+                        progress.record_chunk();
                     }
+                    progress.record_exit();
                     (improvements, counters)
                 }));
             }
-            // Coordinator: poll the stop condition against wall clock and
-            // the workers' published chunk totals. The ticket pool already
-            // caps chunk counts exactly; this loop exists to trip time
-            // budgets and to notice completion.
+            // Coordinator: block on the progress condvar until the stop
+            // condition trips or every worker has retired (ticket pool
+            // exhausted). Chunk budgets are exact via the tickets; time
+            // budgets wake at the deadline through `wait_timeout`.
             let mut stop = StopState::new(cfg.stop);
-            loop {
-                std::thread::sleep(std::time::Duration::from_millis(1));
-                let total = chunk_count.load(Ordering::Relaxed);
-                while stop.chunks() < total {
-                    stop.record_chunk();
+            let deadline = match cfg.stop {
+                StopCondition::MaxTime(t) | StopCondition::TimeOrChunks(t, _) => {
+                    Some(Instant::now() + t)
                 }
-                if stop.should_stop() {
-                    break;
+                StopCondition::MaxChunks(_) => None,
+            };
+            {
+                let mut st = progress.state.lock().unwrap();
+                loop {
+                    while stop.chunks() < st.chunks {
+                        stop.record_chunk();
+                    }
+                    if stop.should_stop() || st.finished_workers == workers {
+                        break;
+                    }
+                    st = match deadline {
+                        Some(dl) => {
+                            let now = Instant::now();
+                            if now >= dl {
+                                break;
+                            }
+                            progress.changed.wait_timeout(st, dl - now).unwrap().0
+                        }
+                        None => progress.changed.wait(st).unwrap(),
+                    };
                 }
             }
             done.store(true, Ordering::Relaxed);
@@ -153,7 +218,7 @@ pub fn run_chunk_parallel(
         }
     };
     // Final full-dataset pass uses an inner-parallel native solver.
-    let final_solver = NativeSolver::new(cfg.lloyd, cfg.threads);
+    let final_solver = NativeSolver::with_kernel(cfg.lloyd, cfg.threads, cfg.kernel);
     Ok(crate::coordinator::bigmeans::finish(
         cfg,
         &final_solver,
@@ -243,6 +308,41 @@ mod tests {
             cfg.threads = threads;
             let r = BigMeans::new(cfg).run(&data).unwrap();
             assert_eq!(r.counters.chunks, 12, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn condvar_coordinator_handles_every_stop_condition() {
+        // The wakeup-driven coordinator must terminate promptly for chunk
+        // budgets (worker notifications), time budgets (deadline wait), and
+        // the combined rule — with no polling to keep it alive.
+        let data = Synth::GaussianMixture {
+            m: 2000,
+            n: 3,
+            k_true: 3,
+            spread: 0.3,
+            box_half_width: 20.0,
+        }
+        .generate("t", 5);
+        let conditions = [
+            StopCondition::MaxChunks(3),
+            StopCondition::MaxTime(Duration::from_millis(40)),
+            StopCondition::TimeOrChunks(Duration::from_millis(500), 4),
+        ];
+        for stop in conditions {
+            let mut cfg = BigMeansConfig::new(3, 128)
+                .with_stop(stop)
+                .with_parallel(ParallelMode::ChunkParallel)
+                .with_seed(3);
+            cfg.threads = 2;
+            let t0 = std::time::Instant::now();
+            let r = BigMeans::new(cfg).run(&data).unwrap();
+            assert!(r.counters.chunks >= 1, "{stop:?}");
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{stop:?} took {:?}",
+                t0.elapsed()
+            );
         }
     }
 

@@ -4,7 +4,7 @@
 //! * [`NativeSolver`] — rust kernels (any shape, optional inner parallelism);
 //! * `runtime::PjrtSolver` — the AOT HLO executables via the PJRT C API.
 
-use crate::kernels::{self, LloydParams, LloydResult};
+use crate::kernels::{self, KernelEngine, KernelEngineKind, LloydParams, LloydResult};
 use crate::metrics::Counters;
 use crate::util::threadpool::ThreadPool;
 
@@ -45,21 +45,39 @@ pub trait ChunkSolver {
 pub struct NativeSolver {
     pub params: LloydParams,
     pub pool: Option<ThreadPool>,
+    /// Assignment-step strategy (panel / bounded), shared by the Lloyd
+    /// loop and the stateless assignment passes.
+    engine: Box<dyn KernelEngine>,
 }
 
 impl NativeSolver {
     pub fn new(params: LloydParams, threads: usize) -> Self {
+        Self::with_kernel(params, threads, KernelEngineKind::Panel)
+    }
+
+    /// Build with an explicit kernel engine selection.
+    pub fn with_kernel(params: LloydParams, threads: usize, kernel: KernelEngineKind) -> Self {
         let pool = match threads {
             1 => None,
             0 => Some(ThreadPool::with_default_size()),
             t => Some(ThreadPool::new(t)),
         };
-        NativeSolver { params, pool }
+        NativeSolver { params, pool, engine: kernel.build() }
     }
 
     /// Fully sequential solver (deterministic tests).
     pub fn sequential(params: LloydParams) -> Self {
-        NativeSolver { params, pool: None }
+        Self::sequential_with_kernel(params, KernelEngineKind::Panel)
+    }
+
+    /// Fully sequential solver with an explicit kernel engine.
+    pub fn sequential_with_kernel(params: LloydParams, kernel: KernelEngineKind) -> Self {
+        NativeSolver { params, pool: None, engine: kernel.build() }
+    }
+
+    /// Name of the configured kernel engine.
+    pub fn kernel_name(&self) -> &'static str {
+        self.engine.name()
     }
 }
 
@@ -73,7 +91,7 @@ impl ChunkSolver for NativeSolver {
         seed_centroids: &[f32],
         counters: &mut Counters,
     ) -> LloydResult {
-        kernels::lloyd(
+        kernels::lloyd_with_engine(
             points,
             seed_centroids,
             rows,
@@ -81,6 +99,7 @@ impl ChunkSolver for NativeSolver {
             k,
             self.params,
             self.pool.as_ref(),
+            self.engine.as_ref(),
             counters,
         )
     }
@@ -101,7 +120,7 @@ impl ChunkSolver for NativeSolver {
                 );
                 (out.labels, out.mins)
             }
-            _ => kernels::assign_only(points, centroids, rows, n, k, counters),
+            _ => self.engine.assign_once(points, centroids, rows, n, k, counters),
         }
     }
 

@@ -17,7 +17,7 @@ use crate::coordinator::config::BigMeansConfig;
 use crate::coordinator::incumbent::Solution;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::source::DataSource;
+use crate::data::source::{AccessPattern, DataSource};
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::Counters;
 use crate::util::rng::Rng;
@@ -111,6 +111,8 @@ pub fn produce_from_source(
 ) -> u64 {
     assert!(rows_per_chunk > 0, "rows_per_chunk must be positive");
     let (m, n) = (source.m(), source.n());
+    // The producer walks the source front to back — enable readahead.
+    source.advise(AccessPattern::Sequential);
     let mut start = 0usize;
     let mut pushed = 0u64;
     while start < m {
@@ -146,7 +148,11 @@ pub struct StreamingBigMeans {
 
 impl StreamingBigMeans {
     pub fn new(config: BigMeansConfig, n: usize) -> Self {
-        let solver = Box::new(NativeSolver::new(config.lloyd, config.threads));
+        let solver = Box::new(NativeSolver::with_kernel(
+            config.lloyd,
+            config.threads,
+            config.kernel,
+        ));
         StreamingBigMeans { config, solver, n }
     }
 

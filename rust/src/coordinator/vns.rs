@@ -16,7 +16,7 @@ use crate::coordinator::incumbent::Solution;
 use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, NativeSolver};
 use crate::coordinator::stop::StopState;
-use crate::data::source::DataSource;
+use crate::data::source::{AccessPattern, DataSource};
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::{Counters, PhaseTimer};
 use crate::util::rng::Rng;
@@ -78,7 +78,8 @@ pub struct VnsResult {
 pub fn run_vns(cfg: &VnsConfig, data: &dyn DataSource) -> Result<VnsResult, String> {
     let (m, n, k) = (data.m(), data.n(), cfg.base.k);
     cfg.validate(m)?;
-    let solver = NativeSolver::new(cfg.base.lloyd, cfg.base.threads);
+    let solver =
+        NativeSolver::with_kernel(cfg.base.lloyd, cfg.base.threads, cfg.base.kernel);
     let mut rng = Rng::new(cfg.base.seed);
     let mut counters = Counters::new();
     let mut timer = PhaseTimer::new();
@@ -95,6 +96,7 @@ pub fn run_vns(cfg: &VnsConfig, data: &dyn DataSource) -> Result<VnsResult, Stri
         .collect();
     let mut rung = 0usize;
 
+    data.advise(AccessPattern::Random);
     timer.time_init(|| {
         while !stop.should_stop() {
             let (chunk, rows) = samplers[rung].sample(data, &mut rng);

@@ -1,25 +1,39 @@
 //! `.bmx` — the Big-means matrix format, built for out-of-core clustering.
 //!
-//! Layout (all little-endian):
+//! Current (version 2) layout, all little-endian:
 //!
 //! ```text
 //! offset  size  field
-//! 0       4     magic  b"BMX1"
-//! 4       8     m      u64   number of rows
-//! 12      4     n      u32   features per row
-//! 16      m·n·4 data   f32   row-major feature matrix
+//! 0       4     magic     b"BMX2"  ("BMX" + ASCII version byte)
+//! 4       8     m         u64   number of rows
+//! 12      4     n         u32   features per row
+//! 16      4     checksum  u32   CRC-32 (IEEE) of the payload bytes
+//! 20      12    reserved  zeroed (future: dtype tag, flags)
+//! 32      m·n·4 data      f32   row-major feature matrix
 //! ```
 //!
-//! The 16-byte header keeps the payload 4-byte aligned, so on little-endian
+//! The 32-byte header keeps the payload 4-byte aligned, so on little-endian
 //! unix targets the file can be memory-mapped and reinterpreted as `&[f32]`
 //! directly — chunk sampling then touches only the pages it draws, and the
 //! OS page cache does the working-set management. Everywhere else (or when
 //! `mmap` fails) a buffered positioned-read backend decodes the same bytes
 //! explicitly, so results are identical across backends.
 //!
-//! [`BmxWriter`] streams rows out with O(1) memory (the row count is
-//! patched into the header on [`BmxWriter::finish`]), which is how datasets
-//! that never fit in RAM get produced in the first place.
+//! The checksum is validated once on open (a clear error beats silently
+//! clustering corrupt floats) for payloads up to
+//! [`BMX_VERIFY_EAGER_LIMIT`]; beyond that the scan would defeat the
+//! out-of-core design, so it is skipped with a note. Legacy version-1
+//! files (16-byte header, no checksum) still load, with a warning
+//! suggesting reconversion.
+//!
+//! Mapped sources forward [`AccessPattern`] hints to `madvise` —
+//! `MADV_RANDOM` while chunks are sampled, `MADV_SEQUENTIAL` for the
+//! blocked final pass — through the dependency-free
+//! [`crate::util::mem`] shim.
+//!
+//! [`BmxWriter`] streams rows out with O(1) memory (the row count and
+//! checksum are patched into the header on [`BmxWriter::finish`]), which is
+//! how datasets that never fit in RAM get produced in the first place.
 
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
@@ -27,26 +41,35 @@ use std::path::Path;
 use std::sync::Mutex;
 
 use crate::data::dataset::Dataset;
-use crate::data::source::DataSource;
+use crate::data::source::{AccessPattern, DataSource};
 use crate::util::error::{Context, Result};
+use crate::util::hash::{crc32, Crc32};
 use crate::{anyhow, bail};
 
-/// File magic: "BMX" + format version 1.
+/// Legacy file magic: "BMX" + format version 1 (no checksum).
 pub const BMX_MAGIC: [u8; 4] = *b"BMX1";
 
-/// Header bytes before the payload (magic + u64 m + u32 n).
+/// Current file magic: "BMX" + format version 2 (CRC-32 in the header).
+pub const BMX_MAGIC_V2: [u8; 4] = *b"BMX2";
+
+/// Header bytes before the payload in a version-1 file.
 pub const BMX_HEADER_LEN: usize = 16;
 
-/// Streaming `.bmx` writer: create, push row blocks, finish.
+/// Header bytes before the payload in a version-2 file.
+pub const BMX_HEADER_LEN_V2: usize = 32;
+
+/// Streaming `.bmx` writer: create, push row blocks, finish. Writes the
+/// current (version 2) format, folding the payload into a running CRC-32.
 pub struct BmxWriter {
     w: BufWriter<File>,
     n: usize,
     rows: u64,
+    crc: Crc32,
 }
 
 impl BmxWriter {
-    /// Create `path`, writing a header with a zero row count (patched on
-    /// [`BmxWriter::finish`]).
+    /// Create `path`, writing a header with a zero row count and checksum
+    /// (both patched on [`BmxWriter::finish`]).
     pub fn create(path: &Path, n: usize) -> Result<Self> {
         if n == 0 || n > u32::MAX as usize {
             bail!("bmx: invalid feature count {n}");
@@ -54,10 +77,12 @@ impl BmxWriter {
         let file = File::create(path)
             .with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(file);
-        w.write_all(&BMX_MAGIC)?;
+        w.write_all(&BMX_MAGIC_V2)?;
         w.write_all(&0u64.to_le_bytes())?;
         w.write_all(&(n as u32).to_le_bytes())?;
-        Ok(BmxWriter { w, n, rows: 0 })
+        w.write_all(&0u32.to_le_bytes())?; // checksum placeholder
+        w.write_all(&[0u8; BMX_HEADER_LEN_V2 - 20])?; // reserved
+        Ok(BmxWriter { w, n, rows: 0, crc: Crc32::new() })
     }
 
     /// Append one or more rows (`values.len()` must be a multiple of `n`).
@@ -75,22 +100,27 @@ impl BmxWriter {
             buf[filled..filled + 4].copy_from_slice(&v.to_le_bytes());
             filled += 4;
             if filled == buf.len() {
+                self.crc.update(&buf);
                 self.w.write_all(&buf)?;
                 filled = 0;
             }
         }
         if filled > 0 {
+            self.crc.update(&buf[..filled]);
             self.w.write_all(&buf[..filled])?;
         }
         self.rows += (values.len() / self.n) as u64;
         Ok(())
     }
 
-    /// Flush, patch the row count into the header, and return it.
+    /// Flush, patch the row count and payload checksum into the header,
+    /// and return the row count.
     pub fn finish(mut self) -> Result<u64> {
         self.w.flush()?;
         self.w.seek(SeekFrom::Start(4))?;
         self.w.write_all(&self.rows.to_le_bytes())?;
+        self.w.seek(SeekFrom::Start(16))?;
+        self.w.write_all(&self.crc.finalize().to_le_bytes())?;
         self.w.flush()?;
         Ok(self.rows)
     }
@@ -168,6 +198,17 @@ impl MmapRegion {
     fn bytes(&self) -> &[u8] {
         unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
     }
+
+    /// Forward an access-pattern hint to `madvise` for the whole mapping.
+    fn advise(&self, pattern: AccessPattern) {
+        use crate::util::mem::{madvise, Advice};
+        let advice = match pattern {
+            AccessPattern::Random => Advice::Random,
+            AccessPattern::Sequential => Advice::Sequential,
+            AccessPattern::Normal => Advice::Normal,
+        };
+        madvise(self.ptr as *mut u8, self.len, advice);
+    }
 }
 
 #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
@@ -195,28 +236,54 @@ pub struct BmxSource {
     name: String,
     m: usize,
     n: usize,
+    header_len: usize,
     backing: Backing,
 }
 
-/// Parse + validate the header; returns `(m, n, total_file_bytes)` with
-/// every size arithmetic checked, so a corrupt or hostile header fails
-/// here with a clean error instead of wrapping and panicking later.
-fn read_header(file: &mut File, path: &Path) -> Result<(usize, usize, u64)> {
+/// Parsed `.bmx` header.
+struct BmxHeader {
+    m: usize,
+    n: usize,
+    /// Payload offset (16 for v1, 32 for v2).
+    header_len: usize,
+    /// Expected CRC-32 of the payload (v2 files only).
+    checksum: Option<u32>,
+    /// Header + payload bytes the file must hold.
+    need: u64,
+}
+
+/// Parse + validate the header, with every size arithmetic checked, so a
+/// corrupt or hostile header fails here with a clean error instead of
+/// wrapping and panicking later. Accepts both the current v2 layout and
+/// legacy v1 (the caller warns about the missing checksum).
+fn read_header(file: &mut File, path: &Path) -> Result<BmxHeader> {
     let mut hdr = [0u8; BMX_HEADER_LEN];
     file.read_exact(&mut hdr)
         .with_context(|| format!("read bmx header of {}", path.display()))?;
-    if hdr[0..4] != BMX_MAGIC {
+    let (header_len, versioned) = if hdr[0..4] == BMX_MAGIC_V2 {
+        (BMX_HEADER_LEN_V2, true)
+    } else if hdr[0..4] == BMX_MAGIC {
+        (BMX_HEADER_LEN, false)
+    } else {
         bail!("{}: not a .bmx file (bad magic)", path.display());
-    }
+    };
     let m64 = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
     let n = u32::from_le_bytes(hdr[12..16].try_into().unwrap()) as usize;
+    let checksum = if versioned {
+        let mut ext = [0u8; BMX_HEADER_LEN_V2 - BMX_HEADER_LEN];
+        file.read_exact(&mut ext)
+            .with_context(|| format!("read bmx v2 header of {}", path.display()))?;
+        Some(u32::from_le_bytes(ext[0..4].try_into().unwrap()))
+    } else {
+        None
+    };
     if n == 0 {
         bail!("{}: bmx header has n = 0", path.display());
     }
     let need = m64
         .checked_mul(n as u64)
         .and_then(|c| c.checked_mul(4))
-        .and_then(|c| c.checked_add(BMX_HEADER_LEN as u64))
+        .and_then(|c| c.checked_add(header_len as u64))
         .ok_or_else(|| {
             anyhow!("{}: bmx header shape {m64}×{n} overflows", path.display())
         })?;
@@ -232,25 +299,124 @@ fn read_header(file: &mut File, path: &Path) -> Result<(usize, usize, u64)> {
             need
         );
     }
-    Ok((m64 as usize, n, need))
+    Ok(BmxHeader { m: m64 as usize, n, header_len, checksum, need })
+}
+
+/// Largest payload validated eagerly on open. Above this, the full-file
+/// CRC scan would defeat the out-of-core point of the format (an O(1)
+/// open turning into minutes of cold I/O that also evicts the page
+/// cache), so validation is skipped with a stderr note instead — the
+/// checksum stays in the header for explicit offline verification.
+pub const BMX_VERIFY_EAGER_LIMIT: u64 = 4 << 30;
+
+/// Whether to validate `hdr`'s checksum at open time; warns when the
+/// payload is too large to scan eagerly.
+fn should_verify(hdr: &BmxHeader, path: &Path) -> bool {
+    if hdr.checksum.is_none() {
+        return false;
+    }
+    let payload = hdr.need - hdr.header_len as u64;
+    if payload > BMX_VERIFY_EAGER_LIMIT {
+        eprintln!(
+            "note: skipping checksum validation of {} ({payload} payload bytes \
+             exceeds the {BMX_VERIFY_EAGER_LIMIT}-byte eager-verify limit)",
+            path.display()
+        );
+        return false;
+    }
+    true
+}
+
+/// Compare an expected vs computed payload CRC, failing with the (single,
+/// shared) corruption diagnostic.
+fn check_crc(expected: u32, computed: u32, path: &Path) -> Result<()> {
+    if computed != expected {
+        bail!(
+            "{}: bmx payload checksum mismatch (file corrupt or truncated mid-write); \
+             expected {expected:#010x}, computed {computed:#010x}",
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+/// Validate the payload checksum through buffered reads (the non-mmap
+/// path), leaving the file position unspecified.
+fn verify_crc_pread(file: &mut File, hdr: &BmxHeader, path: &Path) -> Result<()> {
+    if !should_verify(hdr, path) {
+        return Ok(());
+    }
+    let expected = hdr.checksum.expect("should_verify requires a checksum");
+    file.seek(SeekFrom::Start(hdr.header_len as u64))?;
+    let payload = hdr.need - hdr.header_len as u64;
+    let mut crc = Crc32::new();
+    let mut buf = vec![0u8; (1usize << 20).min(payload.max(1) as usize)];
+    let mut left = payload;
+    while left > 0 {
+        let take = buf.len().min(left as usize);
+        file.read_exact(&mut buf[..take])
+            .with_context(|| format!("read bmx payload of {}", path.display()))?;
+        crc.update(&buf[..take]);
+        left -= take as u64;
+    }
+    check_crc(expected, crc.finalize(), path)
+}
+
+/// Warn (once per open) when a legacy v1 file without a checksum loads.
+fn warn_v1(hdr: &BmxHeader, path: &Path) {
+    if hdr.checksum.is_none() {
+        eprintln!(
+            "warning: {} is a v1 .bmx without a payload checksum; rewrite it \
+             (`bigmeans convert` / `generate`) to add integrity checking",
+            path.display()
+        );
+    }
 }
 
 impl BmxSource {
     /// Open `path`, preferring a memory mapping (falls back to buffered
-    /// positioned reads when mapping is unavailable).
+    /// positioned reads when mapping is unavailable). Version-2 files have
+    /// their payload CRC validated here — a corrupt file fails to open
+    /// instead of clustering garbage; v1 files load with a warning.
     pub fn open(path: &Path) -> Result<BmxSource> {
         let mut file = File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
-        let (m, n, total) = read_header(&mut file, path)?;
+        let hdr = read_header(&mut file, path)?;
+        warn_v1(&hdr, path);
         let name = stem(path);
         #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
         {
-            if let Some(region) = MmapRegion::map(&file, total as usize) {
-                return Ok(BmxSource { name, m, n, backing: Backing::Mmap(region) });
+            if let Some(region) = MmapRegion::map(&file, hdr.need as usize) {
+                if should_verify(&hdr, path) {
+                    let expected = hdr.checksum.expect("should_verify requires a checksum");
+                    // One sequential pass over the mapping, then drop back
+                    // to the random-access default for chunk sampling.
+                    region.advise(AccessPattern::Sequential);
+                    let payload =
+                        &region.bytes()[hdr.header_len..hdr.need as usize];
+                    let computed = crc32(payload);
+                    region.advise(AccessPattern::Random);
+                    check_crc(expected, computed, path)?;
+                } else {
+                    region.advise(AccessPattern::Random);
+                }
+                return Ok(BmxSource {
+                    name,
+                    m: hdr.m,
+                    n: hdr.n,
+                    header_len: hdr.header_len,
+                    backing: Backing::Mmap(region),
+                });
             }
         }
-        let _ = total;
-        Ok(BmxSource { name, m, n, backing: Backing::Pread(Mutex::new(file)) })
+        verify_crc_pread(&mut file, &hdr, path)?;
+        Ok(BmxSource {
+            name,
+            m: hdr.m,
+            n: hdr.n,
+            header_len: hdr.header_len,
+            backing: Backing::Pread(Mutex::new(file)),
+        })
     }
 
     /// Open `path` with the buffered-pread backend unconditionally (tests,
@@ -258,11 +424,14 @@ impl BmxSource {
     pub fn open_buffered(path: &Path) -> Result<BmxSource> {
         let mut file = File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
-        let (m, n, _total) = read_header(&mut file, path)?;
+        let hdr = read_header(&mut file, path)?;
+        warn_v1(&hdr, path);
+        verify_crc_pread(&mut file, &hdr, path)?;
         Ok(BmxSource {
             name: stem(path),
-            m,
-            n,
+            m: hdr.m,
+            n: hdr.n,
+            header_len: hdr.header_len,
             backing: Backing::Pread(Mutex::new(file)),
         })
     }
@@ -280,11 +449,12 @@ impl BmxSource {
     }
 
     #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-    fn mapped_data(region: &MmapRegion, m: usize, n: usize) -> &[f32] {
-        let payload = &region.bytes()[BMX_HEADER_LEN..BMX_HEADER_LEN + m * n * 4];
+    fn mapped_data(region: &MmapRegion, header_len: usize, m: usize, n: usize) -> &[f32] {
+        let payload = &region.bytes()[header_len..header_len + m * n * 4];
         debug_assert_eq!(payload.as_ptr() as usize % std::mem::align_of::<f32>(), 0);
-        // Safety: the slice is in-bounds, 4-byte aligned (page base + 16),
-        // lives as long as `region`, and every bit pattern is a valid f32.
+        // Safety: the slice is in-bounds, 4-byte aligned (page base + a
+        // 4-byte-multiple header), lives as long as `region`, and every
+        // bit pattern is a valid f32.
         unsafe { std::slice::from_raw_parts(payload.as_ptr() as *const f32, m * n) }
     }
 
@@ -292,7 +462,7 @@ impl BmxSource {
     /// already-held file lock, reusing `scratch` for the byte staging —
     /// callers doing many reads (chunk gathers) lock and allocate once.
     fn pread_into(&self, f: &mut File, scratch: &mut Vec<u8>, start: usize, out: &mut [f32]) {
-        let byte_off = BMX_HEADER_LEN as u64 + (start as u64) * (self.n as u64) * 4;
+        let byte_off = self.header_len as u64 + (start as u64) * (self.n as u64) * 4;
         f.seek(SeekFrom::Start(byte_off))
             .unwrap_or_else(|e| panic!("bmx '{}': seek failed: {e}", self.name));
         scratch.resize(out.len() * 4, 0);
@@ -324,7 +494,7 @@ impl DataSource for BmxSource {
         match &self.backing {
             #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
             Backing::Mmap(region) => {
-                let data = Self::mapped_data(region, self.m, self.n);
+                let data = Self::mapped_data(region, self.header_len, self.m, self.n);
                 out.copy_from_slice(&data[start * self.n..(start + rows) * self.n]);
             }
             Backing::Pread(file) => {
@@ -341,7 +511,7 @@ impl DataSource for BmxSource {
         match &self.backing {
             #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
             Backing::Mmap(region) => {
-                let data = Self::mapped_data(region, self.m, self.n);
+                let data = Self::mapped_data(region, self.header_len, self.m, self.n);
                 for (slot, &i) in indices.iter().enumerate() {
                     out[slot * n..(slot + 1) * n]
                         .copy_from_slice(&data[i * n..(i + 1) * n]);
@@ -361,8 +531,18 @@ impl DataSource for BmxSource {
     fn contiguous(&self) -> Option<&[f32]> {
         match &self.backing {
             #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-            Backing::Mmap(region) => Some(Self::mapped_data(region, self.m, self.n)),
+            Backing::Mmap(region) => {
+                Some(Self::mapped_data(region, self.header_len, self.m, self.n))
+            }
             Backing::Pread(_) => None,
+        }
+    }
+
+    fn advise(&self, pattern: AccessPattern) {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mmap(region) => region.advise(pattern),
+            Backing::Pread(_) => {}
         }
     }
 }
@@ -448,6 +628,60 @@ mod tests {
         assert!(slow.contiguous().is_none());
         if fast.is_mmap() {
             assert_eq!(fast.contiguous().unwrap(), toy().points());
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_payload_rejected_by_checksum() {
+        let p = tmp("corrupt.bmx");
+        save_bmx(&toy(), &p).unwrap();
+        // Flip one payload byte; both open paths must refuse the file.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let idx = BMX_HEADER_LEN_V2 + 17;
+        bytes[idx] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = BmxSource::open(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+        let err = BmxSource::open_buffered(&p).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn legacy_v1_files_still_load() {
+        // Hand-build a v1 file (16-byte header, no checksum): it must load
+        // (with a warning on stderr) and serve identical values.
+        let p = tmp("legacy.bmx");
+        let d = toy();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&BMX_MAGIC);
+        bytes.extend_from_slice(&(d.m() as u64).to_le_bytes());
+        bytes.extend_from_slice(&(d.n() as u32).to_le_bytes());
+        for &v in d.points() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        for src in [BmxSource::open(&p).unwrap(), BmxSource::open_buffered(&p).unwrap()] {
+            assert_eq!((src.m(), src.n()), (d.m(), d.n()));
+            let mut all = vec![0f32; d.m() * d.n()];
+            src.read_rows(0, &mut all);
+            assert_eq!(all, d.points());
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn advise_is_safe_on_both_backends() {
+        let p = tmp("advise.bmx");
+        save_bmx(&toy(), &p).unwrap();
+        for src in [BmxSource::open(&p).unwrap(), BmxSource::open_buffered(&p).unwrap()] {
+            src.advise(AccessPattern::Random);
+            src.advise(AccessPattern::Sequential);
+            src.advise(AccessPattern::Normal);
+            let mut row = vec![0f32; 4];
+            src.read_rows(3, &mut row);
+            assert_eq!(row, &toy().points()[12..16]);
         }
         let _ = std::fs::remove_file(&p);
     }

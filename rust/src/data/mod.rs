@@ -24,19 +24,22 @@
 //! # The `.bmx` on-disk format
 //!
 //! `.bmx` is the crate's out-of-core native format — a flat little-endian
-//! f32 matrix with a 16-byte header:
+//! f32 matrix behind a small header (version 2, 32 bytes):
 //!
 //! ```text
 //! offset  size   field
-//! 0       4      magic b"BMX1"
+//! 0       4      magic b"BMX2" ("BMX" + ASCII version byte)
 //! 4       8      m (u64, number of rows)
 //! 12      4      n (u32, features per row)
-//! 16      m·n·4  row-major f32 payload
+//! 16      4      CRC-32 of the payload (validated on open)
+//! 20      12     reserved
+//! 32      m·n·4  row-major f32 payload
 //! ```
 //!
 //! The header size keeps the payload 4-byte aligned so the whole file can
-//! be memory-mapped and read in place. Produce `.bmx` files with
-//! [`convert::csv_to_bmx`] (blockwise through [`CsvSource`], O(block)
+//! be memory-mapped and read in place; legacy `BMX1` files (16-byte
+//! header, no checksum) still load with a warning. Produce `.bmx` files
+//! with [`convert::csv_to_bmx`] (blockwise through [`CsvSource`], O(block)
 //! memory plus the 16-byte/row index), [`bmx::save_bmx`], or incrementally
 //! with [`bmx::BmxWriter`]; the CLI exposes
 //! `bigmeans convert <in.csv> <out.bmx>`.
@@ -57,5 +60,5 @@ pub use convert::csv_to_bmx;
 pub use csv_source::CsvSource;
 pub use dataset::Dataset;
 pub use loader::open_source;
-pub use source::{DataBackend, DataSource};
+pub use source::{AccessPattern, DataBackend, DataSource};
 pub use synth::Synth;

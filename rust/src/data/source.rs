@@ -21,6 +21,20 @@
 
 use crate::data::dataset::Dataset;
 
+/// How a pipeline is about to touch a source — forwarded by backends that
+/// can act on it (the mmap'd `.bmx` source turns these into `madvise`
+/// calls; everything else ignores them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Scattered row gathers (chunk sampling): readahead off.
+    Random,
+    /// Front-to-back block reads (the final full pass, streaming
+    /// production): aggressive readahead.
+    Sequential,
+    /// No particular pattern.
+    Normal,
+}
+
 /// How dataset *files* are accessed (see [`crate::data::loader::open_source`],
 /// which the CLI threads `BigMeansConfig::backend` through).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,6 +89,11 @@ pub trait DataSource: Send + Sync {
     fn contiguous(&self) -> Option<&[f32]> {
         None
     }
+
+    /// Hint the upcoming access pattern. Backends that can exploit it
+    /// (mmap → `madvise`) override this; the default is a no-op, and the
+    /// hint never changes observable values — only paging behaviour.
+    fn advise(&self, _pattern: AccessPattern) {}
 }
 
 impl DataSource for Dataset {

@@ -11,7 +11,7 @@
 use crate::metrics::Counters;
 use crate::util::threadpool::ThreadPool;
 
-use super::distance::{nearest, sq_dist_panel, sq_norm};
+use super::distance::{nearest, sq_dist_panel_argmin, sq_norm};
 
 /// Rows per panel block — sized so a `(BLOCK, k)` distance panel stays in L2.
 pub const BLOCK_ROWS: usize = 256;
@@ -51,7 +51,6 @@ pub fn assign_accumulate(
     let mut objective = 0f64;
 
     let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
-    let mut panel = vec![0f32; BLOCK_ROWS * k];
     let mut x_sq = vec![0f32; BLOCK_ROWS];
 
     let mut row = 0;
@@ -61,20 +60,23 @@ pub fn assign_accumulate(
         for (i, xs) in x_sq.iter_mut().take(rows).enumerate() {
             *xs = sq_norm(&block[i * n..(i + 1) * n]);
         }
-        sq_dist_panel(block, &x_sq[..rows], centroids, &c_sq, rows, k, n, &mut panel[..rows * k]);
+        // Fused panel + argmin: the per-row best is reduced inside the panel
+        // loop, so no `rows×k` distance buffer is materialised.
+        sq_dist_panel_argmin(
+            block,
+            &x_sq[..rows],
+            centroids,
+            &c_sq,
+            rows,
+            k,
+            n,
+            &mut labels[row..row + rows],
+            &mut mins[row..row + rows],
+        );
         for i in 0..rows {
-            let drow = &panel[i * k..(i + 1) * k];
-            let mut best = 0usize;
-            let mut best_d = drow[0];
-            for (j, &d) in drow.iter().enumerate().skip(1) {
-                if d < best_d {
-                    best_d = d;
-                    best = j;
-                }
-            }
             let g = row + i;
-            labels[g] = best as u32;
-            mins[g] = best_d;
+            let best = labels[g] as usize;
+            let best_d = mins[g];
             objective += best_d as f64;
             counts[best] += 1;
             let srow = &mut sums[best * n..(best + 1) * n];
@@ -119,6 +121,24 @@ pub fn assign_only(
 /// scoped API — no `O(m·n)` buffer cloning per call (the assignment step
 /// runs every Lloyd iteration, so a copy here used to dominate allocation
 /// on the hot path).
+/// Contiguous per-worker row blocks shared by every pool-parallel
+/// assignment path (panel and bounded engines alike); `None` when the
+/// problem is too small to parallelise. Keeping the rule in one place is
+/// what guarantees engine-independent thresholds and merge order.
+pub(crate) fn partition_rows(pool: &ThreadPool, m: usize) -> Option<Vec<(usize, usize)>> {
+    let nworkers = pool.size().min(m.max(1));
+    if nworkers <= 1 || m < 2 * BLOCK_ROWS {
+        return None;
+    }
+    let block = m.div_ceil(nworkers);
+    Some(
+        (0..nworkers)
+            .map(|w| (w * block, ((w + 1) * block).min(m)))
+            .filter(|(s, e)| s < e)
+            .collect(),
+    )
+}
+
 pub fn assign_accumulate_parallel(
     pool: &ThreadPool,
     points: &[f32],
@@ -130,15 +150,9 @@ pub fn assign_accumulate_parallel(
 ) -> AssignOut {
     assert_eq!(points.len(), m * n);
     assert_eq!(centroids.len(), k * n);
-    let nworkers = pool.size().min(m.max(1));
-    if nworkers <= 1 || m < 2 * BLOCK_ROWS {
+    let Some(jobs) = partition_rows(pool, m) else {
         return assign_accumulate(points, centroids, m, n, k, counters);
-    }
-    let block = m.div_ceil(nworkers);
-    let jobs: Vec<(usize, usize)> = (0..nworkers)
-        .map(|w| (w * block, ((w + 1) * block).min(m)))
-        .filter(|(s, e)| s < e)
-        .collect();
+    };
     // One output slot per worker, written in place by the scoped jobs.
     let mut partials: Vec<Option<(usize, AssignOut)>> =
         (0..jobs.len()).map(|_| None).collect();

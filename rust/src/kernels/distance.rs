@@ -144,6 +144,137 @@ pub fn sq_dist_panel(
     }
 }
 
+/// Fused distance panel + per-row argmin: evaluates the same decomposition
+/// `d[i][j] = ‖x_i‖² − 2·x_i·c_j + ‖c_j‖²` as [`sq_dist_panel`] but reduces
+/// each row to `(argmin, min)` inside the panel loop — the per-row best
+/// stays in registers instead of round-tripping through a `rows×k` buffer
+/// and a second scan. Distance values and tie-breaking (lowest index wins)
+/// are bit-identical to [`sq_dist_panel`] followed by a forward argmin.
+#[allow(clippy::too_many_arguments)]
+pub fn sq_dist_panel_argmin(
+    points: &[f32],
+    x_sq: &[f32],
+    centroids: &[f32],
+    c_sq: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    labels: &mut [u32],
+    mins: &mut [f32],
+) {
+    debug_assert_eq!(points.len(), rows * n);
+    debug_assert_eq!(centroids.len(), k * n);
+    debug_assert_eq!(labels.len(), rows);
+    debug_assert_eq!(mins.len(), rows);
+    debug_assert!(k > 0);
+    let k4 = k / 4 * 4;
+    for i in 0..rows {
+        let x = &points[i * n..(i + 1) * n];
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        let mut j = 0;
+        while j < k4 {
+            let c0 = &centroids[j * n..(j + 1) * n];
+            let c1 = &centroids[(j + 1) * n..(j + 2) * n];
+            let c2 = &centroids[(j + 2) * n..(j + 3) * n];
+            let c3 = &centroids[(j + 3) * n..(j + 4) * n];
+            let (p0, p1, p2, p3) = dot4(x, c0, c1, c2, c3);
+            let d0 = (x_sq[i] + c_sq[j] - 2.0 * p0).max(0.0);
+            let d1 = (x_sq[i] + c_sq[j + 1] - 2.0 * p1).max(0.0);
+            let d2 = (x_sq[i] + c_sq[j + 2] - 2.0 * p2).max(0.0);
+            let d3 = (x_sq[i] + c_sq[j + 3] - 2.0 * p3).max(0.0);
+            if d0 < best_d {
+                best_d = d0;
+                best = j as u32;
+            }
+            if d1 < best_d {
+                best_d = d1;
+                best = (j + 1) as u32;
+            }
+            if d2 < best_d {
+                best_d = d2;
+                best = (j + 2) as u32;
+            }
+            if d3 < best_d {
+                best_d = d3;
+                best = (j + 3) as u32;
+            }
+            j += 4;
+        }
+        while j < k {
+            let c = &centroids[j * n..(j + 1) * n];
+            let d = (x_sq[i] + c_sq[j] - 2.0 * dot(x, c)).max(0.0);
+            if d < best_d {
+                best_d = d;
+                best = j as u32;
+            }
+            j += 1;
+        }
+        labels[i] = best;
+        mins[i] = best_d;
+    }
+}
+
+/// Squared distance of one point to one centroid via the *same*
+/// decomposition arithmetic as the panel kernels (`x_sq + c_sq − 2·x·c`,
+/// clamped at 0). Engines that mix per-point and panel evaluation use this
+/// so their values are bit-identical to the panel's for the same pair.
+#[inline]
+pub fn sq_dist_decomp(x: &[f32], x_sq: f32, c: &[f32], c_sq: f32) -> f32 {
+    (x_sq + c_sq - 2.0 * dot(x, c)).max(0.0)
+}
+
+/// Best and second-best squared distances of one point against all `k`
+/// centroids, decomposition form with the 4-wide centroid micro-kernel —
+/// per-value bit-identical to a [`sq_dist_panel`] row; ties break to the
+/// lowest index. `d2` is `INFINITY` when `k == 1`. The bounded engine's
+/// init pass and rescans use this.
+pub fn nearest2_decomp(
+    x: &[f32],
+    x_sq: f32,
+    centroids: &[f32],
+    c_sq: &[f32],
+    k: usize,
+    n: usize,
+) -> (usize, f32, f32) {
+    debug_assert_eq!(centroids.len(), k * n);
+    debug_assert_eq!(c_sq.len(), k);
+    debug_assert!(k > 0);
+    let mut j1 = 0usize;
+    let mut d1 = f32::INFINITY;
+    let mut d2 = f32::INFINITY;
+    let mut consider = |j: usize, d: f32| {
+        if d < d1 {
+            d2 = d1;
+            d1 = d;
+            j1 = j;
+        } else if d < d2 {
+            d2 = d;
+        }
+    };
+    let k4 = k / 4 * 4;
+    let mut j = 0;
+    while j < k4 {
+        let c0 = &centroids[j * n..(j + 1) * n];
+        let c1 = &centroids[(j + 1) * n..(j + 2) * n];
+        let c2 = &centroids[(j + 2) * n..(j + 3) * n];
+        let c3 = &centroids[(j + 3) * n..(j + 4) * n];
+        let (p0, p1, p2, p3) = dot4(x, c0, c1, c2, c3);
+        consider(j, (x_sq + c_sq[j] - 2.0 * p0).max(0.0));
+        consider(j + 1, (x_sq + c_sq[j + 1] - 2.0 * p1).max(0.0));
+        consider(j + 2, (x_sq + c_sq[j + 2] - 2.0 * p2).max(0.0));
+        consider(j + 3, (x_sq + c_sq[j + 3] - 2.0 * p3).max(0.0));
+        j += 4;
+    }
+    while j < k {
+        let c = &centroids[j * n..(j + 1) * n];
+        consider(j, (x_sq + c_sq[j] - 2.0 * dot(x, c)).max(0.0));
+        j += 1;
+    }
+    drop(consider);
+    (j1, d1, d2)
+}
+
 /// Four simultaneous dot products against a shared left vector.
 #[inline]
 fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> (f32, f32, f32, f32) {
@@ -217,6 +348,93 @@ mod tests {
         let (idx, d) = nearest(&[1.0, 0.0], &centroids, 3, 2);
         assert_eq!(idx, 0);
         assert_eq!(d, 1.0);
+    }
+
+    #[test]
+    fn fused_argmin_matches_panel_plus_scan() {
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) * 20.0 - 10.0
+        };
+        for &(rows, k, n) in &[(7usize, 1usize, 3usize), (5, 4, 1), (9, 6, 5), (3, 9, 16), (8, 5, 17)] {
+            let pts: Vec<f32> = (0..rows * n).map(|_| next()).collect();
+            let cs: Vec<f32> = (0..k * n).map(|_| next()).collect();
+            let x_sq: Vec<f32> = (0..rows).map(|i| sq_norm(&pts[i * n..(i + 1) * n])).collect();
+            let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&cs[j * n..(j + 1) * n])).collect();
+            let mut panel = vec![0f32; rows * k];
+            sq_dist_panel(&pts, &x_sq, &cs, &c_sq, rows, k, n, &mut panel);
+            let mut labels = vec![0u32; rows];
+            let mut mins = vec![0f32; rows];
+            sq_dist_panel_argmin(&pts, &x_sq, &cs, &c_sq, rows, k, n, &mut labels, &mut mins);
+            for i in 0..rows {
+                let row = &panel[i * k..(i + 1) * k];
+                let mut best = 0usize;
+                let mut best_d = row[0];
+                for (j, &d) in row.iter().enumerate().skip(1) {
+                    if d < best_d {
+                        best_d = d;
+                        best = j;
+                    }
+                }
+                assert_eq!(labels[i] as usize, best, "rows={rows} k={k} n={n} i={i}");
+                assert_eq!(mins[i].to_bits(), best_d.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn decomp_single_matches_panel_column() {
+        // k = 5 exercises both the 4-wide micro-kernel (dot4) and the
+        // remainder column; n = 19 exercises lane chunks + tail. The single
+        // decomposition must match the panel *bit for bit* — the bounded
+        // engine's exactness contract rests on this.
+        let (rows, k, n) = (6usize, 5usize, 19usize);
+        let pts: Vec<f32> = (0..rows * n).map(|i| (i as f32 * 0.37 - 20.0).sin() * 8.0).collect();
+        let cs: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.71 + 3.0).cos() * 8.0).collect();
+        let x_sq: Vec<f32> = (0..rows).map(|i| sq_norm(&pts[i * n..(i + 1) * n])).collect();
+        let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&cs[j * n..(j + 1) * n])).collect();
+        let mut panel = vec![0f32; rows * k];
+        sq_dist_panel(&pts, &x_sq, &cs, &c_sq, rows, k, n, &mut panel);
+        for i in 0..rows {
+            for j in 0..k {
+                let d = sq_dist_decomp(&pts[i * n..(i + 1) * n], x_sq[i], &cs[j * n..(j + 1) * n], c_sq[j]);
+                assert_eq!(d.to_bits(), panel[i * k + j].to_bits(), "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn nearest2_matches_panel_row_scan() {
+        let (rows, k, n) = (5usize, 7usize, 9usize);
+        let pts: Vec<f32> = (0..rows * n).map(|i| (i as f32 * 0.53 - 4.0).sin() * 12.0).collect();
+        let cs: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.29 + 1.0).cos() * 12.0).collect();
+        let x_sq: Vec<f32> = (0..rows).map(|i| sq_norm(&pts[i * n..(i + 1) * n])).collect();
+        let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&cs[j * n..(j + 1) * n])).collect();
+        let mut panel = vec![0f32; rows * k];
+        sq_dist_panel(&pts, &x_sq, &cs, &c_sq, rows, k, n, &mut panel);
+        for i in 0..rows {
+            let row = &panel[i * k..(i + 1) * k];
+            // Reference best/second-best over the panel row.
+            let (mut j1, mut d1, mut d2) = (0usize, f32::INFINITY, f32::INFINITY);
+            for (j, &d) in row.iter().enumerate() {
+                if d < d1 {
+                    d2 = d1;
+                    d1 = d;
+                    j1 = j;
+                } else if d < d2 {
+                    d2 = d;
+                }
+            }
+            let got = nearest2_decomp(&pts[i * n..(i + 1) * n], x_sq[i], &cs, &c_sq, k, n);
+            assert_eq!(got.0, j1, "i={i}");
+            assert_eq!(got.1.to_bits(), d1.to_bits());
+            assert_eq!(got.2.to_bits(), d2.to_bits());
+        }
+        // k == 1: no second-best.
+        let one = nearest2_decomp(&pts[..n], x_sq[0], &cs[..n], &c_sq[..1], 1, n);
+        assert_eq!(one.0, 0);
+        assert_eq!(one.2, f32::INFINITY);
     }
 
     #[test]

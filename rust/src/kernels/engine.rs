@@ -1,0 +1,683 @@
+//! Pluggable kernel engines for the assignment hot path.
+//!
+//! Every pipeline (sequential, chunk-parallel, streaming, VNS, baselines)
+//! runs its Lloyd iterations through a [`KernelEngine`], selected by
+//! [`KernelEngineKind`] in the configuration / CLI (`--engine`):
+//!
+//! * [`PanelEngine`] — the exact blocked-panel path: fused
+//!   `‖x‖² − 2x·c + ‖c‖²` panel + in-register argmin
+//!   ([`super::distance::sq_dist_panel_argmin`]), every point evaluated
+//!   against every centroid each iteration.
+//! * [`BoundedEngine`] — Hamerly-style triangle-inequality pruning: one
+//!   upper and one lower bound per point, relaxed by per-centroid drift
+//!   after each centroid update ([`LloydState::apply_update`]). A point
+//!   whose (tightened) upper bound sits below its lower bound keeps its
+//!   label with **one** distance evaluation instead of `k` — on separated
+//!   clusters most of the chunk converges and the assignment cost drops
+//!   toward `O(m)` per iteration. Pruning is *exact*: both engines use the
+//!   identical decomposition arithmetic, so labels, counts, and objectives
+//!   agree (cross-checked by `tests/property_engines.rs`). Evaluations
+//!   avoided by pruning are reported in
+//!   [`crate::metrics::Counters::pruned_evals`] so the paper's `n_d` tables
+//!   can show the saving.
+//!
+//! The bounds live in a [`LloydState`] owned by the Lloyd loop and persist
+//! across iterations; the parallel path hands each worker a disjoint slice
+//! of the state (`split_at_mut`), so pruning composes with the row-blocked
+//! `ThreadPool` assignment without locks.
+
+use crate::metrics::Counters;
+use crate::util::threadpool::ThreadPool;
+
+use super::assign::{self, AssignOut};
+use super::distance::{nearest2_decomp, sq_dist, sq_dist_decomp, sq_norm};
+
+/// Which kernel engine runs the assignment step (config / CLI level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelEngineKind {
+    /// Exact blocked panel with fused argmin (the default).
+    Panel,
+    /// Hamerly-bound pruned exact assignment.
+    Bounded,
+}
+
+impl KernelEngineKind {
+    /// Instantiate the engine.
+    pub fn build(self) -> Box<dyn KernelEngine> {
+        match self {
+            KernelEngineKind::Panel => Box::new(PanelEngine),
+            KernelEngineKind::Bounded => Box::new(BoundedEngine::default()),
+        }
+    }
+
+    /// Parse a CLI token (`panel` / `bounded`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "panel" => Some(KernelEngineKind::Panel),
+            "bounded" => Some(KernelEngineKind::Bounded),
+            _ => None,
+        }
+    }
+}
+
+/// Per-point assignment state that persists across Lloyd iterations.
+///
+/// For the bounded engine this holds the current label plus Hamerly
+/// upper/lower bounds (in *distance*, not squared-distance, domain — the
+/// triangle inequality is linear). The panel engine never activates it,
+/// and the vectors allocate lazily, so carrying a `LloydState` through a
+/// panel run costs nothing.
+#[derive(Clone, Debug)]
+pub struct LloydState {
+    m: usize,
+    labels: Vec<u32>,
+    /// Upper bound on the distance to the assigned centroid.
+    upper: Vec<f64>,
+    /// Lower bound on the distance to every *other* centroid.
+    lower: Vec<f64>,
+    /// Cached `‖x‖²` per point — invariant across iterations (the points
+    /// of one Lloyd run never change), filled by the init pass.
+    x_sq: Vec<f32>,
+    /// Set by the first bounded assignment; `apply_update` is a no-op (and
+    /// drift tracking is skipped entirely) while inactive.
+    active: bool,
+}
+
+impl LloydState {
+    /// Fresh state for `m` points. The bound vectors are allocated lazily
+    /// by the first bounded assignment, so panel runs that thread a state
+    /// through the Lloyd loop pay nothing for it.
+    pub fn new(m: usize) -> Self {
+        LloydState {
+            m,
+            labels: Vec::new(),
+            upper: Vec::new(),
+            lower: Vec::new(),
+            x_sq: Vec::new(),
+            active: false,
+        }
+    }
+
+    /// Number of points the state tracks.
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// Materialise the per-point vectors (first bounded use).
+    fn ensure_allocated(&mut self) {
+        if self.labels.len() != self.m {
+            self.labels = vec![0u32; self.m];
+            self.upper = vec![0f64; self.m];
+            self.lower = vec![0f64; self.m];
+            self.x_sq = vec![0f32; self.m];
+        }
+    }
+
+    /// Whether a bounded assignment has initialised the bounds.
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Labels from the most recent bounded assignment (meaningless while
+    /// inactive).
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Relax the bounds for a centroid update `old → new` (Hamerly): each
+    /// centroid's drift widens the upper bound of the points assigned to it,
+    /// and the largest drift among the *other* centroids shrinks every lower
+    /// bound. Call after every `update_centroids`; no-op while inactive.
+    pub fn apply_update(
+        &mut self,
+        old_centroids: &[f32],
+        new_centroids: &[f32],
+        k: usize,
+        n: usize,
+    ) {
+        if !self.active {
+            return;
+        }
+        debug_assert_eq!(old_centroids.len(), k * n);
+        debug_assert_eq!(new_centroids.len(), k * n);
+        let mut drift = vec![0f64; k];
+        // Largest and second-largest drift, so points assigned to the
+        // fastest-moving centroid get the tighter (second-largest) bound.
+        let mut max1 = 0f64;
+        let mut max1_j = 0usize;
+        let mut max2 = 0f64;
+        for (j, d) in drift.iter_mut().enumerate() {
+            let dj = (sq_dist(
+                &old_centroids[j * n..(j + 1) * n],
+                &new_centroids[j * n..(j + 1) * n],
+            ) as f64)
+                .sqrt();
+            *d = dj;
+            if dj > max1 {
+                max2 = max1;
+                max1 = dj;
+                max1_j = j;
+            } else if dj > max2 {
+                max2 = dj;
+            }
+        }
+        if max1 == 0.0 {
+            return; // nothing moved — bounds stay exact
+        }
+        for i in 0..self.labels.len() {
+            let l = self.labels[i] as usize;
+            self.upper[i] += drift[l];
+            self.lower[i] -= if l == max1_j { max2 } else { max1 };
+        }
+    }
+}
+
+/// A disjoint per-worker window into a [`LloydState`] (plus the rows of the
+/// point block it covers) — the unit the parallel bounded path hands to
+/// each `ThreadPool` worker.
+struct StateSlice<'a> {
+    labels: &'a mut [u32],
+    upper: &'a mut [f64],
+    lower: &'a mut [f64],
+    x_sq: &'a mut [f32],
+}
+
+/// Strategy interface for the fused assignment step.
+///
+/// `assign_step` is the stateful per-iteration entry point Lloyd loops use;
+/// `assign_once` is the stateless labels+mins pass (final full-dataset
+/// assignment, D² weights). Engines are `Send + Sync` so one instance can
+/// serve the pool-parallel path.
+pub trait KernelEngine: Send + Sync {
+    /// Engine kind (for reports and config round-trips).
+    fn kind(&self) -> KernelEngineKind;
+
+    /// Human-readable engine name.
+    fn name(&self) -> &'static str;
+
+    /// Fused assignment + per-cluster reduction for one Lloyd iteration,
+    /// reading and updating the persistent `state`. `state.len()` must
+    /// equal `m`.
+    fn assign_step(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut;
+
+    /// Row-blocked parallel variant of [`KernelEngine::assign_step`]
+    /// (per-worker state slices). Semantically identical to the serial
+    /// path: labels, mins, and counts match exactly; f64 accumulations up
+    /// to merge order.
+    fn assign_step_parallel(
+        &self,
+        pool: &ThreadPool,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut;
+
+    /// Stateless nearest-centroid pass: `(labels, min_sq_dists)`.
+    fn assign_once(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        counters: &mut Counters,
+    ) -> (Vec<u32>, Vec<f32>) {
+        assign::assign_only(points, centroids, m, n, k, counters)
+    }
+}
+
+/// The exact blocked-panel engine (fused panel + argmin, no pruning).
+pub struct PanelEngine;
+
+impl KernelEngine for PanelEngine {
+    fn kind(&self) -> KernelEngineKind {
+        KernelEngineKind::Panel
+    }
+
+    fn name(&self) -> &'static str {
+        "panel"
+    }
+
+    fn assign_step(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        _state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        assign::assign_accumulate(points, centroids, m, n, k, counters)
+    }
+
+    fn assign_step_parallel(
+        &self,
+        pool: &ThreadPool,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        _state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        assign::assign_accumulate_parallel(pool, points, centroids, m, n, k, counters)
+    }
+}
+
+/// Hamerly-bound pruned exact assignment.
+///
+/// The prune test combines two safety slacks so a stale bound can never
+/// keep a label the panel engine would change:
+///
+/// * a *relative* margin (`upper·(1+margin) ≤ lower`) covering the drift
+///   accumulation across iterations, and
+/// * an *absolute* squared-domain slack scaled by `‖x‖² + max‖c‖²`,
+///   covering the cancellation error of the f32 `‖x‖² − 2x·c + ‖c‖²`
+///   decomposition — which is absolute in the norms, not relative to the
+///   distance, and dominates for tight clusters far from the origin.
+///
+/// Failing to prune only costs a rescan (still exact), so both slacks
+/// trade a little pruning for label identity with the panel engine.
+pub struct BoundedEngine {
+    /// Relative safety slack on the prune test.
+    pub margin: f64,
+}
+
+impl Default for BoundedEngine {
+    fn default() -> Self {
+        BoundedEngine { margin: 1e-2 }
+    }
+}
+
+/// Absolute error bound (squared-distance domain) of one decomposition
+/// evaluation: `(x_sq + c_sq_max) · eval_slack(n)`. The factor counts the
+/// rounding steps of the lane-tiled dot product (`n / LANES` adds per
+/// lane + reduction + the 3-term combination), padded generously — the
+/// cost of overestimating is a few extra rescans, never a wrong label.
+fn eval_slack(n: usize) -> f64 {
+    (n as f64 / 16.0 + 8.0) * (f32::EPSILON as f64)
+}
+
+impl BoundedEngine {
+    /// Serial bounded assignment over one contiguous row block. `slice`
+    /// windows the persistent state for exactly these rows; `active` is the
+    /// state flag captured before slicing (shared by all workers of one
+    /// step).
+    #[allow(clippy::too_many_arguments)]
+    fn bounded_block(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        n: usize,
+        k: usize,
+        c_sq: &[f32],
+        slice: StateSlice<'_>,
+        active: bool,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        let rows = slice.labels.len();
+        debug_assert_eq!(points.len(), rows * n);
+        debug_assert_eq!(centroids.len(), k * n);
+        debug_assert_eq!(c_sq.len(), k);
+        let StateSlice { labels, upper, lower, x_sq: x_sq_cache } = slice;
+        let c_sq_max = c_sq.iter().cloned().fold(0f32, f32::max) as f64;
+        let slack_factor = eval_slack(n);
+        let mut out_labels = vec![0u32; rows];
+        let mut mins = vec![0f32; rows];
+        let mut sums = vec![0f64; k * n];
+        let mut counts = vec![0u64; k];
+        let mut objective = 0f64;
+        let mut evals = 0u64;
+        let mut pruned = 0u64;
+
+        for i in 0..rows {
+            let x = &points[i * n..(i + 1) * n];
+            let (best, best_d) = if !active {
+                // Init pass: full best/second-best scan, caching the
+                // iteration-invariant point norm alongside the bounds.
+                let x_sq = sq_norm(x);
+                x_sq_cache[i] = x_sq;
+                evals += k as u64;
+                let (j1, d1, d2) = nearest2_decomp(x, x_sq, centroids, c_sq, k, n);
+                labels[i] = j1 as u32;
+                upper[i] = (d1 as f64).sqrt();
+                lower[i] = (d2 as f64).sqrt();
+                (j1, d1)
+            } else {
+                let x_sq = x_sq_cache[i];
+                let l = labels[i] as usize;
+                // Tighten: one exact evaluation against the assigned
+                // centroid. With the tightened upper bound below the lower
+                // bound on every other centroid, `l` is still the nearest
+                // and `d_l` is the exact min — no further evaluations.
+                let d_l = sq_dist_decomp(x, x_sq, &centroids[l * n..(l + 1) * n], c_sq[l]);
+                let ub = (d_l as f64).sqrt();
+                upper[i] = ub;
+                // Prune test in the squared domain (avoids a division when
+                // converting the absolute slack): lower² must clear the
+                // margined upper² plus the decomposition's cancellation
+                // error band.
+                let thr = ub * (1.0 + self.margin);
+                let slack = (x_sq as f64 + c_sq_max) * slack_factor;
+                let lb = lower[i];
+                if lb > 0.0 && thr * thr + slack <= lb * lb {
+                    evals += 1;
+                    pruned += (k - 1) as u64;
+                    (l, d_l)
+                } else {
+                    // Bounds inconclusive: full rescan (same arithmetic and
+                    // tie-breaking as the panel path), refreshing both
+                    // bounds from the exact best / second-best.
+                    evals += (k + 1) as u64;
+                    let (j1, d1, d2) = nearest2_decomp(x, x_sq, centroids, c_sq, k, n);
+                    labels[i] = j1 as u32;
+                    upper[i] = (d1 as f64).sqrt();
+                    lower[i] = (d2 as f64).sqrt();
+                    (j1, d1)
+                }
+            };
+            out_labels[i] = best as u32;
+            mins[i] = best_d;
+            objective += best_d as f64;
+            counts[best] += 1;
+            let srow = &mut sums[best * n..(best + 1) * n];
+            for (sv, xv) in srow.iter_mut().zip(x) {
+                *sv += *xv as f64;
+            }
+        }
+        counters.add_distance_evals(evals);
+        counters.add_pruned_evals(pruned);
+        AssignOut { labels: out_labels, mins, sums, counts, objective }
+    }
+}
+
+impl KernelEngine for BoundedEngine {
+    fn kind(&self) -> KernelEngineKind {
+        KernelEngineKind::Bounded
+    }
+
+    fn name(&self) -> &'static str {
+        "bounded"
+    }
+
+    fn assign_step(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        assert_eq!(points.len(), m * n, "points shape");
+        assert_eq!(centroids.len(), k * n, "centroids shape");
+        assert_eq!(state.len(), m, "state length");
+        assert!(k > 0, "k must be positive");
+        state.ensure_allocated();
+        let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+        let active = state.active;
+        let slice = StateSlice {
+            labels: &mut state.labels[..],
+            upper: &mut state.upper[..],
+            lower: &mut state.lower[..],
+            x_sq: &mut state.x_sq[..],
+        };
+        let out = self.bounded_block(points, centroids, n, k, &c_sq, slice, active, counters);
+        state.active = true;
+        out
+    }
+
+    fn assign_step_parallel(
+        &self,
+        pool: &ThreadPool,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        assert_eq!(points.len(), m * n, "points shape");
+        assert_eq!(centroids.len(), k * n, "centroids shape");
+        assert_eq!(state.len(), m, "state length");
+        // The shared partition rule keeps thresholds and merge order
+        // engine-independent.
+        let Some(jobs) = assign::partition_rows(pool, m) else {
+            return self.assign_step(points, centroids, m, n, k, state, counters);
+        };
+        state.ensure_allocated();
+        let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+        let active = state.active;
+        // Carve the state into disjoint per-worker windows (jobs tile
+        // `0..m` in order, so successive split_at_mut calls line up).
+        let mut views: Vec<(usize, StateSlice<'_>)> = Vec::with_capacity(jobs.len());
+        {
+            let mut lab_rest: &mut [u32] = &mut state.labels;
+            let mut up_rest: &mut [f64] = &mut state.upper;
+            let mut lo_rest: &mut [f64] = &mut state.lower;
+            let mut xs_rest: &mut [f32] = &mut state.x_sq;
+            for &(start, end) in &jobs {
+                let rows = end - start;
+                let (lab, lab_tail) = lab_rest.split_at_mut(rows);
+                let (up, up_tail) = up_rest.split_at_mut(rows);
+                let (lo, lo_tail) = lo_rest.split_at_mut(rows);
+                let (xs, xs_tail) = xs_rest.split_at_mut(rows);
+                lab_rest = lab_tail;
+                up_rest = up_tail;
+                lo_rest = lo_tail;
+                xs_rest = xs_tail;
+                views.push((start, StateSlice { labels: lab, upper: up, lower: lo, x_sq: xs }));
+            }
+        }
+        let mut partials: Vec<Option<(usize, AssignOut, Counters)>> =
+            (0..views.len()).map(|_| None).collect();
+        let c_sq_ref: &[f32] = &c_sq;
+        let closures: Vec<_> = views
+            .into_iter()
+            .zip(partials.iter_mut())
+            .map(|((start, slice), slot)| {
+                let rows = slice.labels.len();
+                let pts = &points[start * n..(start + rows) * n];
+                move || {
+                    let mut local = Counters::new();
+                    let out = self
+                        .bounded_block(pts, centroids, n, k, c_sq_ref, slice, active, &mut local);
+                    *slot = Some((start, out, local));
+                }
+            })
+            .collect();
+        pool.scope_run_all(closures);
+        state.active = true;
+
+        let mut labels = vec![0u32; m];
+        let mut mins = vec![0f32; m];
+        let mut sums = vec![0f64; k * n];
+        let mut counts = vec![0u64; k];
+        let mut objective = 0f64;
+        for part in partials.into_iter().flatten() {
+            let (start, out, local) = part;
+            let rows = out.labels.len();
+            labels[start..start + rows].copy_from_slice(&out.labels);
+            mins[start..start + rows].copy_from_slice(&out.mins);
+            for (acc, v) in sums.iter_mut().zip(&out.sums) {
+                *acc += *v;
+            }
+            for (acc, v) in counts.iter_mut().zip(&out.counts) {
+                *acc += *v;
+            }
+            objective += out.objective;
+            counters.merge(&local);
+        }
+        AssignOut { labels, mins, sums, counts, objective }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::update::update_centroids;
+    use crate::util::rng::Rng;
+
+    fn random_problem(seed: u64, m: usize, n: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let pts: Vec<f32> = (0..m * n).map(|_| rng.f32() * 10.0 - 5.0).collect();
+        let cs: Vec<f32> = pts[..k * n].to_vec();
+        (pts, cs)
+    }
+
+    /// Run `iters` full Lloyd iterations with the given engine, returning
+    /// the final step output plus the counters.
+    fn iterate(
+        engine: &dyn KernelEngine,
+        pts: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        iters: usize,
+        seed_c: &[f32],
+    ) -> (AssignOut, Counters, Vec<f32>) {
+        let mut c = seed_c.to_vec();
+        let mut old = vec![0f32; k * n];
+        let mut state = LloydState::new(m);
+        let mut counters = Counters::new();
+        let mut last = None;
+        for _ in 0..iters {
+            let out = engine.assign_step(pts, &c, m, n, k, &mut state, &mut counters);
+            old.copy_from_slice(&c);
+            update_centroids(&out.sums, &out.counts, &mut c, k, n);
+            state.apply_update(&old, &c, k, n);
+            last = Some(out);
+        }
+        (last.unwrap(), counters, c)
+    }
+
+    #[test]
+    fn bounded_matches_panel_over_iterations() {
+        for seed in 1..6u64 {
+            let (m, n, k) = (257, 5, 6);
+            let (pts, cs) = random_problem(seed, m, n, k);
+            let (pa, _, ca) = iterate(&PanelEngine, &pts, m, n, k, 5, &cs);
+            let (pb, cb, cbds) = iterate(&BoundedEngine::default(), &pts, m, n, k, 5, &cs);
+            assert_eq!(pa.labels, pb.labels, "seed {seed}");
+            assert_eq!(pa.counts, pb.counts, "seed {seed}");
+            assert_eq!(ca, cbds, "seed {seed}: centroid trajectories diverged");
+            assert!(
+                (pa.objective - pb.objective).abs() <= 1e-6 * pa.objective.abs() + 1e-12,
+                "seed {seed}: {} vs {}",
+                pa.objective,
+                pb.objective
+            );
+            assert!(cb.distance_evals > 0);
+        }
+    }
+
+    #[test]
+    fn bounded_prunes_on_separated_blobs() {
+        let mut rng = Rng::new(9);
+        let centers = [(-8.0f32, -8.0f32), (8.0, 8.0), (-8.0, 8.0)];
+        let m = 300;
+        let mut pts = Vec::with_capacity(m * 2);
+        for i in 0..m {
+            let (cx, cy) = centers[i % 3];
+            pts.push(cx + 0.2 * rng.gaussian() as f32);
+            pts.push(cy + 0.2 * rng.gaussian() as f32);
+        }
+        let cs: Vec<f32> = pts[..6].to_vec();
+        let iters = 6u64;
+        let full = iters * (m as u64) * 3;
+        let (_, counters, _) = iterate(&BoundedEngine::default(), &pts, m, 2, 3, iters as usize, &cs);
+        assert!(counters.pruned_evals > 0, "no pruning on separated blobs");
+        // Pruning must produce a real saving over the unpruned engine...
+        assert!(
+            counters.distance_evals < full,
+            "evals {} not below unpruned {full}",
+            counters.distance_evals
+        );
+        // ...and the accounting must close: every pruned point costs 1 eval
+        // and avoids k−1, every rescan costs k+1, the init pass costs k —
+        // so done + avoided covers at least every m·k slot.
+        assert!(counters.distance_evals + counters.pruned_evals >= full);
+    }
+
+    #[test]
+    fn parallel_bounded_matches_serial_bounded() {
+        // Both paths follow the SAME centroid trajectory (updated from the
+        // serial output), so every per-point quantity must match exactly —
+        // the parallel path only changes the f64 *merge* order of sums,
+        // which this test deliberately keeps out of the trajectory.
+        let (m, n, k) = (2048, 4, 5);
+        let (pts, cs) = random_problem(3, m, n, k);
+        let pool = ThreadPool::new(4);
+        let engine = BoundedEngine::default();
+        let mut c = cs.clone();
+        let mut st_s = LloydState::new(m);
+        let mut st_p = LloydState::new(m);
+        let mut cnt_s = Counters::new();
+        let mut cnt_p = Counters::new();
+        let mut old = vec![0f32; k * n];
+        for _ in 0..4 {
+            let a = engine.assign_step(&pts, &c, m, n, k, &mut st_s, &mut cnt_s);
+            let b = engine.assign_step_parallel(&pool, &pts, &c, m, n, k, &mut st_p, &mut cnt_p);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.mins, b.mins);
+            assert_eq!(a.counts, b.counts);
+            assert!((a.objective - b.objective).abs() <= 1e-6 * a.objective.abs() + 1e-12);
+            old.copy_from_slice(&c);
+            update_centroids(&a.sums, &a.counts, &mut c, k, n);
+            st_s.apply_update(&old, &c, k, n);
+            st_p.apply_update(&old, &c, k, n);
+        }
+        assert_eq!(cnt_s.distance_evals, cnt_p.distance_evals);
+        assert_eq!(cnt_s.pruned_evals, cnt_p.pruned_evals);
+    }
+
+    #[test]
+    fn k_equals_one_always_prunes_after_init() {
+        let (m, n, k) = (64, 3, 1);
+        let (pts, cs) = random_problem(5, m, n, k);
+        let engine = BoundedEngine::default();
+        let mut state = LloydState::new(m);
+        let mut counters = Counters::new();
+        let mut c = cs.clone();
+        let mut old = vec![0f32; n];
+        let first = engine.assign_step(&pts, &c, m, n, k, &mut state, &mut counters);
+        old.copy_from_slice(&c);
+        update_centroids(&first.sums, &first.counts, &mut c, k, n);
+        state.apply_update(&old, &c, k, n);
+        let before = counters.distance_evals;
+        engine.assign_step(&pts, &c, m, n, k, &mut state, &mut counters);
+        // With a single centroid the lower bound is infinite: every point
+        // prunes with exactly one evaluation.
+        assert_eq!(counters.distance_evals - before, m as u64);
+    }
+
+    #[test]
+    fn kind_roundtrip_and_names() {
+        assert_eq!(KernelEngineKind::parse("panel"), Some(KernelEngineKind::Panel));
+        assert_eq!(KernelEngineKind::parse("bounded"), Some(KernelEngineKind::Bounded));
+        assert_eq!(KernelEngineKind::parse("warp"), None);
+        assert_eq!(KernelEngineKind::Panel.build().name(), "panel");
+        assert_eq!(KernelEngineKind::Bounded.build().kind(), KernelEngineKind::Bounded);
+    }
+}

@@ -1,11 +1,18 @@
 //! Lloyd's K-means local search (Algorithm 1 of the paper), native rust
 //! path. Matches the semantics of the AOT'd L2 `lloyd_chunk`: relative
 //! objective tolerance + iteration cap, degenerate clusters left in place.
+//!
+//! The loop is engine-driven: a [`KernelEngine`] owns the assignment step
+//! and a [`LloydState`] persists per-point bounds across iterations, so the
+//! bounded engine skips most distance evaluations once a chunk settles.
+//! [`lloyd`] keeps the historical one-shot signature (panel engine);
+//! [`lloyd_with_engine`] is the strategy-selectable entry point every
+//! pipeline routes through.
 
 use crate::metrics::Counters;
 use crate::util::threadpool::ThreadPool;
 
-use super::assign::{assign_accumulate, assign_accumulate_parallel, AssignOut};
+use super::engine::{KernelEngine, LloydState, PanelEngine};
 use super::update::update_centroids;
 
 /// Convergence parameters (paper §5.7: rel-tol 1e-4, cap 300 on the full
@@ -35,8 +42,9 @@ pub struct LloydResult {
     pub iters: u32,
 }
 
-/// Run Lloyd to convergence, seeded by `centroids`. `pool: Some(_)` uses
-/// the parallel assignment (paper's parallelisation strategy 1).
+/// Run Lloyd to convergence with the default [`PanelEngine`], seeded by
+/// `centroids`. `pool: Some(_)` uses the parallel assignment (paper's
+/// parallelisation strategy 1).
 pub fn lloyd(
     points: &[f32],
     centroids: &[f32],
@@ -47,36 +55,59 @@ pub fn lloyd(
     pool: Option<&ThreadPool>,
     counters: &mut Counters,
 ) -> LloydResult {
+    lloyd_with_engine(points, centroids, m, n, k, params, pool, &PanelEngine, counters)
+}
+
+/// Run Lloyd to convergence through a selectable [`KernelEngine`]. The
+/// engine's [`LloydState`] lives for the whole run: each iteration is a
+/// stateful `assign_step` followed by `update_centroids` and a bound
+/// relaxation ([`LloydState::apply_update`]), so pruning engines carry
+/// their bounds from one iteration to the next — including into the final
+/// assignment that prices the returned centroids.
+#[allow(clippy::too_many_arguments)]
+pub fn lloyd_with_engine(
+    points: &[f32],
+    centroids: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: LloydParams,
+    pool: Option<&ThreadPool>,
+    engine: &dyn KernelEngine,
+    counters: &mut Counters,
+) -> LloydResult {
     assert!(m > 0, "lloyd on empty data");
     let mut c = centroids.to_vec();
+    let mut old = vec![0f32; k * n];
+    let mut state = LloydState::new(m);
     let mut prev_obj = f64::INFINITY;
     let mut iters = 0u32;
-    let mut last: Option<AssignOut> = None;
 
     while iters < params.max_iters {
         let out = match pool {
-            Some(p) => assign_accumulate_parallel(p, points, &c, m, n, k, counters),
-            None => assign_accumulate(points, &c, m, n, k, counters),
+            Some(p) => engine.assign_step_parallel(p, points, &c, m, n, k, &mut state, counters),
+            None => engine.assign_step(points, &c, m, n, k, &mut state, counters),
         };
         iters += 1;
         let obj = out.objective;
+        old.copy_from_slice(&c);
         update_centroids(&out.sums, &out.counts, &mut c, k, n);
+        state.apply_update(&old, &c, k, n);
         let rel = (prev_obj - obj).abs() / obj.max(1e-300);
-        let converged = rel <= params.tol;
         prev_obj = obj;
-        last = Some(out);
-        if converged {
+        if rel <= params.tol {
             break;
         }
     }
 
     // Final assignment so the reported objective/counts describe the
-    // *returned* centroids (same contract as the AOT'd lloyd_chunk).
+    // *returned* centroids (same contract as the AOT'd lloyd_chunk). The
+    // bounds are valid for `c` (relaxed after the last update), so a
+    // pruning engine prices the final centroids almost for free.
     let fin = match pool {
-        Some(p) => assign_accumulate_parallel(p, points, &c, m, n, k, counters),
-        None => assign_accumulate(points, &c, m, n, k, counters),
+        Some(p) => engine.assign_step_parallel(p, points, &c, m, n, k, &mut state, counters),
+        None => engine.assign_step(points, &c, m, n, k, &mut state, counters),
     };
-    drop(last);
     LloydResult { centroids: c, objective: fin.objective, counts: fin.counts, iters }
 }
 
@@ -153,6 +184,45 @@ mod tests {
         let b = lloyd(&pts, &seed, 1800, 2, 3, LloydParams::default(), Some(&pool), &mut c2);
         assert_eq!(a.counts, b.counts);
         assert!((a.objective - b.objective).abs() < 1e-6 * a.objective);
+    }
+
+    #[test]
+    fn bounded_engine_lloyd_matches_panel() {
+        use crate::kernels::engine::{BoundedEngine, PanelEngine};
+        let mut rng = Rng::new(6);
+        let pts = blobs(&mut rng, 150, &[(0.0, 0.0), (12.0, 12.0), (0.0, 12.0)], 0.4);
+        let seed: Vec<f32> = pts[..6].to_vec();
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let params = LloydParams::default();
+        let a =
+            lloyd_with_engine(&pts, &seed, 450, 2, 3, params, None, &PanelEngine, &mut c1);
+        let b = lloyd_with_engine(
+            &pts,
+            &seed,
+            450,
+            2,
+            3,
+            params,
+            None,
+            &BoundedEngine::default(),
+            &mut c2,
+        );
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.iters, b.iters);
+        assert!(
+            (a.objective - b.objective).abs() <= 1e-9 * a.objective.abs(),
+            "{} vs {}",
+            a.objective,
+            b.objective
+        );
+        assert!(c2.pruned_evals > 0, "no pruning on separated blobs");
+        assert!(
+            c2.distance_evals < c1.distance_evals,
+            "bounded ({}) did not beat panel ({})",
+            c2.distance_evals,
+            c1.distance_evals
+        );
     }
 
     #[test]

@@ -5,13 +5,15 @@
 
 pub mod assign;
 pub mod distance;
+pub mod engine;
 pub mod kmeanspp;
 pub mod lloyd;
 pub mod objective;
 pub mod update;
 
 pub use assign::{assign_accumulate, assign_accumulate_parallel, assign_only, AssignOut};
+pub use engine::{BoundedEngine, KernelEngine, KernelEngineKind, LloydState, PanelEngine};
 pub use kmeanspp::{kmeanspp, reseed_degenerate, reseed_degenerate_random};
-pub use lloyd::{lloyd, LloydParams, LloydResult};
+pub use lloyd::{lloyd, lloyd_with_engine, LloydParams, LloydResult};
 pub use objective::{objective, objective_parallel};
 pub use update::{degenerate_indices, update_centroids};

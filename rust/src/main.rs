@@ -15,7 +15,8 @@ use std::time::Duration;
 
 use bigmeans::bench_harness::{self, report, tables};
 use bigmeans::coordinator::config::{
-    BigMeansConfig, DataBackend, Engine, ParallelMode, ReinitStrategy, StopCondition,
+    BigMeansConfig, DataBackend, Engine, KernelEngineKind, ParallelMode, ReinitStrategy,
+    StopCondition,
 };
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
 use bigmeans::runtime;
@@ -34,7 +35,14 @@ SUBCOMMANDS:
       --s N             chunk size (default 4096)
       --time SECS       cpu_max budget (default 3)
       --chunks N        max chunks (default unlimited)
-      --engine E        native | pjrt          (default native)
+      --engine E        panel | bounded | pjrt (default panel)
+                        panel   = exact blocked-panel kernels (fused
+                                  distance panel + argmin)
+                        bounded = Hamerly triangle-inequality pruning:
+                                  label-identical to panel, skips most
+                                  distance evals on settled chunks (see
+                                  the `pruned evals` output line)
+                        'native' is accepted as an alias for panel
       --mode M          inner | chunks | seq   (default inner)
       --backend B       mem | mmap | buffered  (default mem)
                         mmap/buffered cluster files out-of-core:
@@ -143,15 +151,16 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         "random" => ReinitStrategy::Random,
         other => return Err(format!("bad --reinit '{other}'")),
     };
-    let engine = match args.get_or("engine", "native") {
-        "native" => Engine::Native,
-        "pjrt" => Engine::Pjrt,
-        other => return Err(format!("bad --engine '{other}'")),
-    };
+    let engine_arg = args.choice("engine", &["panel", "native", "bounded", "pjrt"])?;
+    let engine = if engine_arg == "pjrt" { Engine::Pjrt } else { Engine::Native };
+    // `KernelEngineKind::parse` is the source of truth for kernel tokens;
+    // "native" (compat alias) and "pjrt" fall back to the panel kernel.
+    let kernel = KernelEngineKind::parse(engine_arg).unwrap_or(KernelEngineKind::Panel);
     let mut cfg = BigMeansConfig::new(k, s)
         .with_stop(stop)
         .with_parallel(mode)
         .with_backend(backend)
+        .with_kernel(kernel)
         .with_seed(args.u64("seed", 0xB16_3EA5)?);
     cfg.reinit = reinit;
     cfg.threads = args.usize("threads", 0)?;
@@ -162,7 +171,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     let data = load_source(args, cfg.backend)?;
 
     eprintln!(
-        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}, mode={mode:?}, backend={backend:?}",
+        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}/{kernel:?}, mode={mode:?}, backend={backend:?}",
         data.name(),
         data.m(),
         data.n(),
@@ -180,6 +189,9 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     println!("chunks processed (n_s)   : {}", r.counters.chunks);
     println!("incumbent improvements   : {}", r.improvements);
     println!("distance evals (n_d)     : {:.3e}", r.counters.distance_evals as f64);
+    if r.counters.pruned_evals > 0 {
+        println!("pruned evals (avoided)   : {:.3e}", r.counters.pruned_evals as f64);
+    }
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
     Ok(())

@@ -12,6 +12,11 @@
 pub struct Counters {
     /// Distance-function evaluations (point↔centroid), the paper's `n_d`.
     pub distance_evals: u64,
+    /// Distance evaluations *avoided* by triangle-inequality pruning (the
+    /// bounded kernel engine). Not included in `distance_evals`; an
+    /// unpruned run would have performed `distance_evals + pruned_evals`
+    /// (minus the rescans' bound-tightening evaluations).
+    pub pruned_evals: u64,
     /// Lloyd iterations executed against the *full* dataset (`n_full`).
     pub full_iterations: u64,
     /// Lloyd iterations executed against chunks (not part of `n_full`).
@@ -30,9 +35,15 @@ impl Counters {
         self.distance_evals += n;
     }
 
+    #[inline]
+    pub fn add_pruned_evals(&mut self, n: u64) {
+        self.pruned_evals += n;
+    }
+
     /// Merge another counter set (e.g. from a parallel worker).
     pub fn merge(&mut self, other: &Counters) {
         self.distance_evals += other.distance_evals;
+        self.pruned_evals += other.pruned_evals;
         self.full_iterations += other.full_iterations;
         self.chunk_iterations += other.chunk_iterations;
         self.chunks += other.chunks;

@@ -1,0 +1,55 @@
+//! Raw memory-management hints — a thin `madvise` shim over libc FFI so
+//! the crate stays dependency-free. Purely advisory: failures are ignored
+//! (the kernel may reject unaligned or unsupported requests) and non-unix
+//! builds compile to a no-op.
+
+/// Expected access pattern for a mapped region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// No special pattern (`MADV_NORMAL`): default readahead.
+    Normal,
+    /// Random access (`MADV_RANDOM`): disable readahead — right for chunk
+    /// sampling, which touches scattered pages.
+    Random,
+    /// Sequential access (`MADV_SEQUENTIAL`): aggressive readahead and
+    /// early page reclaim — right for the blocked final pass.
+    Sequential,
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    extern "C" {
+        pub fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+
+    // POSIX values, identical on Linux and macOS.
+    pub const MADV_NORMAL: c_int = 0;
+    pub const MADV_RANDOM: c_int = 1;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+}
+
+/// Advise the kernel about the expected access pattern of `[ptr, ptr+len)`.
+/// `ptr` should be the page-aligned base of an mmap'd region (mappings
+/// returned by `mmap` always are).
+pub fn madvise(ptr: *mut u8, len: usize, advice: Advice) {
+    #[cfg(unix)]
+    {
+        if ptr.is_null() || len == 0 {
+            return;
+        }
+        let adv = match advice {
+            Advice::Normal => sys::MADV_NORMAL,
+            Advice::Random => sys::MADV_RANDOM,
+            Advice::Sequential => sys::MADV_SEQUENTIAL,
+        };
+        // Hint only — the return value is deliberately discarded.
+        let _ = unsafe { sys::madvise(ptr as *mut std::ffi::c_void, len, adv) };
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = (ptr, len, advice);
+    }
+}
