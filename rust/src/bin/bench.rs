@@ -1,26 +1,40 @@
-//! `bench` — assignment-engine micro-benchmark, no external deps.
+//! `bench` — engine and tuner benchmarks, no external deps.
 //!
-//! Times the fused panel engine, the bounded (Hamerly-pruned) engine, and
-//! the pre-fusion two-pass reference kernel on a synthetic workload
-//! (default 1M×16, k=64) — once on uniform data (worst case for pruning)
-//! and once on separated Gaussian blobs (best case) — then emits
-//! `BENCH_assign.json` with wall times and distance-eval counts. CI runs a
-//! scaled-down version as a non-gating smoke step.
+//! Two suites (`--suite assign|tuner|all`, default `assign`):
+//!
+//! * **assign** — times the fused panel engine, the bounded
+//!   (Hamerly-pruned) engine, and the pre-fusion two-pass reference kernel
+//!   on a synthetic workload (default 1M×16, k=64) — once on uniform data
+//!   (worst case for pruning) and once on separated Gaussian blobs (best
+//!   case) — then emits `BENCH_assign.json` with wall times and
+//!   distance-eval counts.
+//! * **tuner** — races the competitive portfolio tuner against every
+//!   fixed-sample-size baseline from the same grid at an equal shot
+//!   budget (default 1M×16 uniform + blob workloads) and emits
+//!   `BENCH_tuner.json`: tuned vs best-fixed vs worst-fixed final
+//!   objective.
+//!
+//! CI runs scaled-down versions of both as non-gating smoke steps.
 //!
 //! ```text
-//! cargo run --release --bin bench -- [--m N] [--n N] [--k N] [--iters N] [--out PATH]
+//! cargo run --release --bin bench -- [--suite assign|tuner|all] [--m N] [--n N]
+//!     [--k N] [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH]
 //! ```
 
 use std::time::Instant;
 
+use bigmeans::coordinator::config::{ParallelMode, StopCondition};
+use bigmeans::data::dataset::Dataset;
 use bigmeans::kernels::assign::{AssignOut, BLOCK_ROWS};
 use bigmeans::kernels::distance::{sq_dist_panel, sq_norm};
 use bigmeans::kernels::engine::{BoundedEngine, KernelEngine, LloydState, PanelEngine};
 use bigmeans::kernels::update_centroids;
 use bigmeans::metrics::Counters;
+use bigmeans::tuner::{self, ArmSpec, TunerConfig};
 use bigmeans::util::cli::Args;
 use bigmeans::util::json::{arr, num, obj, s, Json};
 use bigmeans::util::rng::Rng;
+use bigmeans::{BigMeans, BigMeansConfig};
 
 /// The seed (pre-fusion) assignment kernel: dense distance panel into a
 /// `rows×k` buffer, argmin in a second pass. Kept verbatim as the baseline
@@ -150,6 +164,97 @@ fn case_json(c: &Case) -> Json {
     ])
 }
 
+/// The tuner-vs-fixed-baselines suite: every fixed sample size from the
+/// grid gets the same shot budget the tuned run gets, on the same data and
+/// seed — so "tuned ≤ best fixed" is an apples-to-apples comparison.
+fn tuner_suite(args: &Args) -> Result<(), String> {
+    let m = args.usize("m", 1_000_000)?;
+    let n = args.usize("n", 16)?;
+    let k = args.usize("k", 25)?;
+    let base_s = args.usize("s", 4096)?;
+    let shots = args.u64("shots", 40)?;
+    let out_path = args.get_or("tuner-out", "BENCH_tuner.json").to_string();
+    if k == 0 || k > m {
+        return Err(format!("k={k} out of range for m={m}"));
+    }
+    let multipliers = [0.25f64, 0.5, 1.0, 2.0, 4.0];
+    let mut rng = Rng::new(0x7E57);
+    eprintln!("generating {m}×{n} uniform + blob datasets (k={k}, shots={shots}) …");
+    let workloads = [
+        ("uniform", Dataset::from_vec("uniform", uniform_data(&mut rng, m, n), m, n)),
+        ("blobs", Dataset::from_vec("blobs", blob_data(&mut rng, m, n, k), m, n)),
+    ];
+    let base_cfg = |chunk: usize| {
+        BigMeansConfig::new(k, chunk)
+            .with_stop(StopCondition::MaxChunks(shots))
+            .with_parallel(ParallelMode::ChunkParallel)
+            .with_seed(42)
+    };
+    let mut workload_docs = Vec::new();
+    for (wname, data) in &workloads {
+        let mut fixed_docs = Vec::new();
+        let mut best_fixed = f64::INFINITY;
+        let mut worst_fixed = f64::NEG_INFINITY;
+        for &mult in &multipliers {
+            let chunk = ((base_s as f64 * mult).round() as usize).clamp(k, m);
+            let t0 = Instant::now();
+            let r = BigMeans::new(base_cfg(chunk)).run(data)?;
+            let secs = t0.elapsed().as_secs_f64();
+            eprintln!(
+                "{wname:<8} fixed {mult:>5}x (s={chunk:<8}) {secs:>8.3}s  objective {:.6e}",
+                r.objective
+            );
+            best_fixed = best_fixed.min(r.objective);
+            worst_fixed = worst_fixed.max(r.objective);
+            fixed_docs.push(obj(vec![
+                ("multiplier", num(mult)),
+                ("chunk_rows", num(chunk as f64)),
+                ("objective", num(r.objective)),
+                ("secs", num(secs)),
+            ]));
+        }
+        let tcfg = TunerConfig::default()
+            .with_arms(multipliers.iter().map(|&x| ArmSpec::new(x)).collect());
+        let t0 = Instant::now();
+        let race = tuner::run_race(&base_cfg(base_s), &tcfg, data)?;
+        let secs = t0.elapsed().as_secs_f64();
+        eprintln!(
+            "{wname:<8} tuned ({})        {secs:>8.3}s  objective {:.6e}  (chose s={})",
+            race.trace.controller, race.result.objective, race.chosen_chunk_rows
+        );
+        workload_docs.push(obj(vec![
+            ("workload", s(wname)),
+            ("tuned_objective", num(race.result.objective)),
+            ("tuned_secs", num(secs)),
+            ("tuned_validation_objective", num(race.validation_objective)),
+            ("chosen_chunk_rows", num(race.chosen_chunk_rows as f64)),
+            ("tuner", race.trace.to_json()),
+            ("fixed", arr(fixed_docs)),
+            ("best_fixed_objective", num(best_fixed)),
+            ("worst_fixed_objective", num(worst_fixed)),
+            // Same 1e-6 relative slack as the gating integration test:
+            // runs converging to the same partition differ in the last
+            // bits of the f32-accumulated means.
+            (
+                "tuned_beats_best_fixed",
+                Json::Bool(race.result.objective <= best_fixed * (1.0 + 1e-6)),
+            ),
+        ]));
+    }
+    let doc = obj(vec![
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("base_chunk", num(base_s as f64)),
+        ("shots", num(shots as f64)),
+        ("workloads", arr(workload_docs)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n")
+        .map_err(|e| format!("write {out_path}: {e}"))?;
+    eprintln!("wrote {out_path}");
+    Ok(())
+}
+
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), &["help"]) {
         Ok(a) => a,
@@ -160,12 +265,13 @@ fn main() {
     };
     if args.flag("help") {
         eprintln!(
-            "bench — assignment-engine micro-benchmark\n\
-             usage: bench [--m N] [--n N] [--k N] [--iters N] [--out PATH]"
+            "bench — engine and tuner benchmarks\n\
+             usage: bench [--suite assign|tuner|all] [--m N] [--n N] [--k N] \
+             [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH]"
         );
         return;
     }
-    let run = || -> Result<(), String> {
+    let assign_suite = || -> Result<(), String> {
         let m = args.usize("m", 1_000_000)?;
         let n = args.usize("n", 16)?;
         let k = args.usize("k", 64)?;
@@ -231,7 +337,13 @@ fn main() {
         eprintln!("wrote {out_path}");
         Ok(())
     };
-    if let Err(e) = run() {
+    let result = match args.choice("suite", &["assign", "tuner", "all"]) {
+        Ok("tuner") => tuner_suite(&args),
+        Ok("all") => assign_suite().and_then(|()| tuner_suite(&args)),
+        Ok(_) => assign_suite(),
+        Err(e) => Err(e),
+    };
+    if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);
     }

@@ -77,6 +77,12 @@ pub struct BigMeansConfig {
     /// [`crate::data::loader::open_source`] (the CLI passes
     /// `cfg.backend` there before running).
     pub backend: DataBackend,
+    /// CSV offset-index stride for the buffered backend (1 = index every
+    /// row). Larger strides shrink the in-RAM index by the same factor at
+    /// the cost of scanning at most `index_stride − 1` rows past a seek;
+    /// served values are identical. Consumed by
+    /// [`crate::data::loader::open_source_with`].
+    pub index_stride: usize,
     /// Worker threads (`InnerParallel`: kernel threads; `ChunkParallel`:
     /// concurrent chunks). 0 = machine default.
     pub threads: usize,
@@ -101,6 +107,7 @@ impl BigMeansConfig {
             kernel: KernelEngineKind::Panel,
             parallel: ParallelMode::InnerParallel,
             backend: DataBackend::InMemory,
+            index_stride: 1,
             threads: 0,
             seed: 0xB16_3EA5,
             skip_final_assignment: false,
@@ -137,6 +144,18 @@ impl BigMeansConfig {
         self
     }
 
+    /// Concurrent workers this config asks for: `threads`, with 0 meaning
+    /// the machine's logical-core count (shared by the chunk-parallel
+    /// pipeline and the tuner race so both modes resolve `--threads`
+    /// identically).
+    pub fn worker_count(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4)
+        } else {
+            self.threads
+        }
+    }
+
     /// Validate against a dataset shape.
     pub fn validate(&self, m: usize, _n: usize) -> Result<(), String> {
         if self.k == 0 {
@@ -166,6 +185,7 @@ mod tests {
         assert_eq!(c.candidates, 3);
         assert_eq!(c.reinit, ReinitStrategy::KmeansPP);
         assert_eq!(c.backend, DataBackend::InMemory);
+        assert_eq!(c.index_stride, 1);
         assert_eq!(c.kernel, KernelEngineKind::Panel);
         assert!((c.lloyd.tol - 1e-4).abs() < 1e-12);
         assert_eq!(c.lloyd.max_iters, 300);

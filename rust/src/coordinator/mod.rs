@@ -1,7 +1,8 @@
 //! Layer 3: the Big-means coordinator — the paper's system contribution.
 //!
 //! * [`bigmeans`] — Algorithm 3, sequential chunk pipeline;
-//! * [`parallel`] — chunk-parallel pipeline (paper's strategy 2);
+//! * [`parallel`] — chunk-parallel pipeline (paper's strategy 2), plus the
+//!   reusable [`parallel::ShotExecutor`] the tuner races drive;
 //! * [`stream`] — unbounded-stream variant with a backpressured queue;
 //! * [`incumbent`] — "keep the best" state, shared-memory safe;
 //! * [`sampler`] — uniform chunk sampling;
@@ -22,6 +23,10 @@ pub use bigmeans::{BigMeans, BigMeansResult};
 pub use config::{
     BigMeansConfig, DataBackend, Engine, ParallelMode, ReinitStrategy, StopCondition,
 };
+pub use parallel::{ShotExecutor, ShotReport};
 pub use solver::{ChunkSolver, NativeSolver};
-pub use stream::{produce_from_source, ChunkQueue, StreamChunk, StreamingBigMeans};
+pub use stream::{
+    produce_from_source, ChunkQueue, StreamChunk, StreamResult, StreamingBigMeans,
+    ValidationPoint,
+};
 pub use vns::{run_vns, VnsConfig, VnsResult};

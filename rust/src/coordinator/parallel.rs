@@ -1,10 +1,15 @@
 //! Chunk-parallel Big-means (the paper's parallelisation strategy 2):
 //! several workers process chunks concurrently against a shared incumbent.
 //!
-//! Each worker loops: snapshot the incumbent (lock-free Arc clone), sample
-//! its own chunk, reseed degenerates, run the local search, and *offer* the
-//! result — accepted only if it still beats the incumbent at offer time.
-//! Workers race, but the incumbent objective is monotone by construction.
+//! The unit of work is a *shot* ([`ShotExecutor::run_shot`]): snapshot the
+//! incumbent (lock-free Arc clone), sample a chunk, reseed degenerates, run
+//! the local search, and *offer* the result — accepted only if it still
+//! beats the incumbent at offer time. Workers race, but the incumbent
+//! objective is monotone by construction. The shot is exposed as a reusable
+//! service (rather than being inlined in the worker loop) so other
+//! schedulers — notably the competitive portfolio tuner in
+//! [`crate::tuner`] — can drive the same search step with their own arm
+//! selection and scoring policies.
 //!
 //! Chunk budgets are enforced with an atomic ticket counter: a worker takes
 //! a ticket *before* sampling and exits once the budget is spent, so a
@@ -75,23 +80,127 @@ impl Progress {
     }
 }
 
+/// Scores a shot's converged centroids for incumbent comparison. Receives
+/// the centroids, the degenerate slot indices, and the worker's counters;
+/// returns the objective stored in the offered [`Solution`]. Passing no
+/// scorer keeps the paper's chunk objective — the tuner installs a
+/// validation-objective scorer so arms with different chunk sizes compete
+/// on a common scale.
+pub type ShotScorer<'a> = dyn Fn(&[f32], &[usize], &mut Counters) -> f64 + Sync + 'a;
+
+/// Outcome of one shot.
+#[derive(Clone, Debug)]
+pub struct ShotReport {
+    /// Chunk-local SSE of the converged centroids.
+    pub chunk_objective: f64,
+    /// Objective offered to the incumbent (the chunk objective, or the
+    /// scorer's output when one is installed).
+    pub offered_objective: f64,
+    /// Whether the incumbent accepted the offer.
+    pub accepted: bool,
+    /// Lloyd iterations the local search took.
+    pub iters: u32,
+}
+
+/// One worker's reusable shot state: a sequential solver plus a chunk
+/// sampler whose buffers persist across shots (the chunk loop stays
+/// allocation-free after warmup). Chunk-level parallelism replaces
+/// kernel-level parallelism (the two strategies of paper §3 are
+/// alternatives, not composed), so the solver is always sequential here.
+pub struct ShotExecutor<'a> {
+    cfg: &'a BigMeansConfig,
+    data: &'a dyn DataSource,
+    chunk_rows: usize,
+    solver: NativeSolver,
+    sampler: ChunkSampler,
+}
+
+impl<'a> ShotExecutor<'a> {
+    /// Executor with the configured chunk size and kernel engine.
+    pub fn new(cfg: &'a BigMeansConfig, data: &'a dyn DataSource) -> Self {
+        Self::with_chunk_size(cfg, data, cfg.chunk_size, cfg.kernel)
+    }
+
+    /// Executor with an explicit chunk size / kernel engine (one tuner arm).
+    pub fn with_chunk_size(
+        cfg: &'a BigMeansConfig,
+        data: &'a dyn DataSource,
+        chunk_size: usize,
+        kernel: crate::kernels::KernelEngineKind,
+    ) -> Self {
+        let rows = chunk_size.min(data.m()).max(1);
+        ShotExecutor {
+            cfg,
+            data,
+            chunk_rows: rows,
+            solver: NativeSolver::sequential_with_kernel(cfg.lloyd, kernel),
+            sampler: ChunkSampler::new(rows, data.n()),
+        }
+    }
+
+    /// Rows per sampled chunk (after clamping to the dataset).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Execute one shot against `incumbent`: snapshot, sample, reseed, run
+    /// the local search, then offer the result. The offered objective is
+    /// the chunk objective unless a `scorer` re-prices the centroids.
+    pub fn run_shot(
+        &mut self,
+        incumbent: &SharedIncumbent,
+        rng: &mut Rng,
+        counters: &mut Counters,
+        scorer: Option<&ShotScorer>,
+    ) -> ShotReport {
+        let (n, k) = (self.data.n(), self.cfg.k);
+        let snap = incumbent.snapshot();
+        let (chunk, rows) = self.sampler.sample(self.data, rng);
+        let mut seed_c = snap.centroids.clone();
+        reseed(
+            self.cfg,
+            chunk,
+            rows,
+            n,
+            k,
+            &mut seed_c,
+            &snap.degenerate,
+            rng,
+            counters,
+        );
+        let result = self.solver.lloyd(chunk, rows, n, k, &seed_c, counters);
+        counters.chunk_iterations += result.iters as u64;
+        counters.chunks += 1;
+        let degenerate = degenerate_indices(&result.counts);
+        let offered = match scorer {
+            Some(score) => score(&result.centroids, &degenerate, counters),
+            None => result.objective,
+        };
+        let accepted = incumbent.offer(Solution {
+            degenerate,
+            centroids: result.centroids,
+            objective: offered,
+        });
+        ShotReport {
+            chunk_objective: result.objective,
+            offered_objective: offered,
+            accepted,
+            iters: result.iters,
+        }
+    }
+}
+
 /// Run the chunk-parallel pipeline. Called from `BigMeans::run`.
 ///
-/// Each worker owns a sequential [`NativeSolver`] — chunk-level parallelism
-/// replaces kernel-level parallelism (the two strategies of paper §3 are
-/// alternatives, not composed).
+/// Each worker owns a [`ShotExecutor`] (sequential solver + sampler) and
+/// races the others through the shared ticket pool.
 pub fn run_chunk_parallel(
     cfg: &BigMeansConfig,
     data: &dyn DataSource,
 ) -> Result<BigMeansResult, String> {
     let (m, n, k) = (data.m(), data.n(), cfg.k);
     cfg.validate(m, n)?;
-    let s = cfg.chunk_size.min(m);
-    let workers = if cfg.threads == 0 {
-        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4)
-    } else {
-        cfg.threads
-    };
+    let workers = cfg.worker_count();
     // Chunk budget as a ticket pool (u64::MAX = time-bounded only).
     let max_chunks = match cfg.stop {
         StopCondition::MaxChunks(c) => c,
@@ -120,10 +229,8 @@ pub fn run_chunk_parallel(
                 let cfg = cfg.clone();
                 let data_ref = data;
                 handles.push(scope.spawn(move || {
-                    let solver_ref =
-                        NativeSolver::sequential_with_kernel(cfg.lloyd, cfg.kernel);
+                    let mut shot = ShotExecutor::new(&cfg, data_ref);
                     let mut counters = Counters::new();
-                    let mut sampler = ChunkSampler::new(s, n);
                     let mut improvements = 0u64;
                     loop {
                         if done.load(Ordering::Relaxed) {
@@ -132,30 +239,9 @@ pub fn run_chunk_parallel(
                         if tickets.fetch_add(1, Ordering::Relaxed) >= max_chunks {
                             break;
                         }
-                        let snap = incumbent.snapshot();
-                        let (chunk, rows) = sampler.sample(data_ref, &mut rng);
-                        let mut seed_c = snap.centroids.clone();
-                        reseed(
-                            &cfg,
-                            chunk,
-                            rows,
-                            n,
-                            k,
-                            &mut seed_c,
-                            &snap.degenerate,
-                            &mut rng,
-                            &mut counters,
-                        );
-                        let result =
-                            solver_ref.lloyd(chunk, rows, n, k, &seed_c, &mut counters);
-                        counters.chunk_iterations += result.iters as u64;
-                        counters.chunks += 1;
-                        let accepted = incumbent.offer(Solution {
-                            degenerate: degenerate_indices(&result.counts),
-                            centroids: result.centroids,
-                            objective: result.objective,
-                        });
-                        if accepted {
+                        let report =
+                            shot.run_shot(&incumbent, &mut rng, &mut counters, None);
+                        if report.accepted {
                             improvements += 1;
                         }
                         progress.record_chunk();

@@ -8,6 +8,16 @@
 //! Big-means consumer loop. Backpressure: when the queue is full the
 //! producer blocks — the paper's "process as many portions as the time
 //! budget allows" semantics fall out naturally.
+//!
+//! Streaming computes no full-dataset objective (by design — there is no
+//! full dataset), but an optional **drift check** keeps a reservoir sample
+//! of everything that flowed past and periodically prices the incumbent on
+//! it ([`StreamingBigMeans::with_validation`], CLI `--validate-every N`).
+//! A validation objective that *rises* between checks means the stream has
+//! drifted away from the centroids — the trigger the drift-aware scoring
+//! of the streaming follow-up paper (arXiv 2410.14548) is built on. Off by
+//! default: the reservoir and the periodic scoring cost nothing unless
+//! enabled.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -20,6 +30,8 @@ use crate::coordinator::stop::StopState;
 use crate::data::source::{AccessPattern, DataSource};
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::Counters;
+use crate::tuner::config::validation_rng;
+use crate::tuner::validation::Reservoir;
 use crate::util::rng::Rng;
 
 /// A chunk of streamed points (row-major `rows × n`).
@@ -128,6 +140,24 @@ pub fn produce_from_source(
     pushed
 }
 
+/// One periodic drift-check measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct ValidationPoint {
+    /// Chunks consumed when the measurement was taken.
+    pub chunk: u64,
+    /// Incumbent **mean per-point** SSE on the reservoir at that moment.
+    /// (The mean, not the sum: the reservoir may still be filling, and a
+    /// growing sample must not read as drift.)
+    pub objective: f64,
+}
+
+/// Relative rise between consecutive validation objectives that counts as
+/// a drift event (the stream moved away from the centroids).
+pub const DRIFT_TOLERANCE: f64 = 0.05;
+
+/// Default reservoir rows for the drift check.
+pub const DEFAULT_VALIDATION_ROWS: usize = 2048;
+
 /// Result of a streaming run.
 #[derive(Clone, Debug)]
 pub struct StreamResult {
@@ -136,6 +166,11 @@ pub struct StreamResult {
     pub chunks_processed: u64,
     pub improvements: u64,
     pub counters: Counters,
+    /// Periodic incumbent-on-reservoir objectives (empty when the drift
+    /// check is disabled).
+    pub validation_trace: Vec<ValidationPoint>,
+    /// Consecutive-check rises beyond [`DRIFT_TOLERANCE`].
+    pub drift_events: u64,
 }
 
 /// Streaming Big-means consumer: pulls chunks from the queue, improves the
@@ -144,6 +179,10 @@ pub struct StreamingBigMeans {
     config: BigMeansConfig,
     solver: Box<dyn ChunkSolver>,
     n: usize,
+    /// Drift check cadence in chunks (0 = off).
+    validate_every: u64,
+    /// Reservoir capacity for the drift check.
+    validation_rows: usize,
 }
 
 impl StreamingBigMeans {
@@ -153,7 +192,22 @@ impl StreamingBigMeans {
             config.threads,
             config.kernel,
         ));
-        StreamingBigMeans { config, solver, n }
+        StreamingBigMeans {
+            config,
+            solver,
+            n,
+            validate_every: 0,
+            validation_rows: DEFAULT_VALIDATION_ROWS,
+        }
+    }
+
+    /// Enable the periodic drift check: every `every` chunks, price the
+    /// incumbent on a `rows`-capacity reservoir of the stream so far.
+    /// `every = 0` disables it (the default).
+    pub fn with_validation(mut self, every: u64, rows: usize) -> Self {
+        self.validate_every = every;
+        self.validation_rows = rows.max(1);
+        self
     }
 
     /// Consume the queue until it closes or the stop condition trips.
@@ -165,6 +219,10 @@ impl StreamingBigMeans {
         let mut incumbent = Solution::all_degenerate(k, n);
         let mut improvements = 0u64;
         let mut stop = StopState::new(cfg.stop);
+        let mut reservoir = (self.validate_every > 0)
+            .then(|| Reservoir::new(self.validation_rows, n, validation_rng(cfg.seed)));
+        let mut validation_trace: Vec<ValidationPoint> = Vec::new();
+        let mut drift_events = 0u64;
 
         while !stop.should_stop() {
             let Some(chunk) = queue.pop() else { break };
@@ -198,6 +256,26 @@ impl StreamingBigMeans {
                 };
                 improvements += 1;
             }
+            if let Some(res) = reservoir.as_mut() {
+                res.observe_rows(&chunk.points, chunk.rows);
+                if counters.chunks % self.validate_every == 0 && !incumbent.is_initial() {
+                    let sum = res.objective(
+                        &incumbent.centroids,
+                        &incumbent.degenerate,
+                        k,
+                        cfg.kernel,
+                        &mut counters,
+                    );
+                    let obj = sum / res.len() as f64;
+                    if let Some(last) = validation_trace.last() {
+                        if obj > last.objective * (1.0 + DRIFT_TOLERANCE) {
+                            drift_events += 1;
+                        }
+                    }
+                    validation_trace
+                        .push(ValidationPoint { chunk: counters.chunks, objective: obj });
+                }
+            }
         }
         StreamResult {
             centroids: incumbent.centroids,
@@ -205,6 +283,8 @@ impl StreamingBigMeans {
             chunks_processed: counters.chunks,
             improvements,
             counters,
+            validation_trace,
+            drift_events,
         }
     }
 }
@@ -344,6 +424,99 @@ mod tests {
             assert!(hit, "no centroid near ({cx},{cy}): {:?}", r.centroids);
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validation_disabled_by_default() {
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(10))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(1);
+        let engine = StreamingBigMeans::new(cfg, 2);
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(3);
+            for _ in 0..10 {
+                if !qp.push(blob_chunk(&mut rng, 128)) {
+                    break;
+                }
+            }
+            qp.close();
+        });
+        let r = engine.run(&q);
+        assert!(r.validation_trace.is_empty());
+        assert_eq!(r.drift_events, 0);
+    }
+
+    #[test]
+    fn drift_check_traces_stationary_stream() {
+        // A stationary stream: the periodic reservoir objective exists and
+        // never rises past the drift tolerance.
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(40))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(5);
+        // A reservoir big enough to keep every streamed row: consecutive
+        // checks then share their whole prefix, so the mean objective is
+        // extremely stable on a stationary stream.
+        let engine = StreamingBigMeans::new(cfg, 2).with_validation(8, 1 << 17);
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(17);
+            for _ in 0..40 {
+                if !qp.push(blob_chunk(&mut rng, 1024)) {
+                    break;
+                }
+            }
+            qp.close();
+        });
+        let r = engine.run(&q);
+        assert_eq!(r.chunks_processed, 40);
+        assert_eq!(r.validation_trace.len(), 5); // every 8 chunks
+        assert!(r.validation_trace.iter().all(|p| p.objective.is_finite()));
+        assert!(
+            r.validation_trace.windows(2).all(|w| w[1].chunk > w[0].chunk),
+            "trace chunks must be increasing"
+        );
+        assert_eq!(r.drift_events, 0, "trace: {:?}", r.validation_trace);
+    }
+
+    #[test]
+    fn drift_check_flags_a_moved_stream() {
+        // Halfway through, the blobs jump to new locations: the reservoir
+        // mixes old and new data while the incumbent still sits on the old
+        // centers, so the periodic objective must rise — a drift event.
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(60))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(9);
+        let engine = StreamingBigMeans::new(cfg, 2).with_validation(5, 512);
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(23);
+            for i in 0..60 {
+                let shift = if i < 30 { 0.0f32 } else { 200.0 };
+                let mut chunk = blob_chunk(&mut rng, 256);
+                for v in &mut chunk.points {
+                    *v += shift;
+                }
+                if !qp.push(chunk) {
+                    break;
+                }
+            }
+            qp.close();
+        });
+        let r = engine.run(&q);
+        assert_eq!(r.chunks_processed, 60);
+        assert!(!r.validation_trace.is_empty());
+        assert!(
+            r.drift_events >= 1,
+            "expected a drift event after the stream moved: {:?}",
+            r.validation_trace
+        );
     }
 
     #[test]

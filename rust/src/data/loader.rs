@@ -127,10 +127,24 @@ pub fn load(path: &Path) -> Result<Dataset> {
 
 /// Open a dataset file through the chosen [`DataBackend`] — the single
 /// place where `BigMeansConfig::backend` is turned into a live
-/// [`DataSource`].
+/// [`DataSource`]. Uses a dense (stride-1) CSV offset index; see
+/// [`open_source_with`] for the stride knob.
 pub fn open_source(
     path: &Path,
     backend: crate::data::source::DataBackend,
+) -> Result<Box<dyn crate::data::source::DataSource>> {
+    open_source_with(path, backend, 1)
+}
+
+/// [`open_source`] with an explicit CSV index stride
+/// (`BigMeansConfig::index_stride` / CLI `--index-stride`): the buffered
+/// CSV backend records only every `index_stride`-th row offset, shrinking
+/// the in-RAM index by that factor at the cost of scanning at most
+/// `index_stride − 1` rows past a seek. Other backends ignore the stride.
+pub fn open_source_with(
+    path: &Path,
+    backend: crate::data::source::DataBackend,
+    index_stride: usize,
 ) -> Result<Box<dyn crate::data::source::DataSource>> {
     use crate::data::bmx::BmxSource;
     use crate::data::csv_source::CsvSource;
@@ -147,7 +161,7 @@ pub fn open_source(
         },
         DataBackend::Buffered => match ext {
             Some("bmx") => Ok(Box::new(BmxSource::open_buffered(path)?)),
-            Some("csv") => Ok(Box::new(CsvSource::open(path)?)),
+            Some("csv") => Ok(Box::new(CsvSource::open_with_stride(path, index_stride.max(1))?)),
             other => bail!("buffered backend supports .bmx and .csv, got {:?}", other),
         },
     }

@@ -40,7 +40,8 @@
 //! be memory-mapped and read in place; legacy `BMX1` files (16-byte
 //! header, no checksum) still load with a warning. Produce `.bmx` files
 //! with [`convert::csv_to_bmx`] (blockwise through [`CsvSource`], O(block)
-//! memory plus the 16-byte/row index), [`bmx::save_bmx`], or incrementally
+//! memory plus the 8-byte/row offset index — shrinkable by
+//! [`CsvSource::open_with_stride`]), [`bmx::save_bmx`], or incrementally
 //! with [`bmx::BmxWriter`]; the CLI exposes
 //! `bigmeans convert <in.csv> <out.bmx>`.
 
@@ -59,6 +60,6 @@ pub use catalog::{catalog, find, CatalogEntry, PAPER_K_GRID};
 pub use convert::csv_to_bmx;
 pub use csv_source::CsvSource;
 pub use dataset::Dataset;
-pub use loader::open_source;
+pub use loader::{open_source, open_source_with};
 pub use source::{AccessPattern, DataBackend, DataSource};
 pub use synth::Synth;

@@ -60,10 +60,12 @@ pub mod data;
 pub mod kernels;
 pub mod metrics;
 pub mod runtime;
+pub mod tuner;
 pub mod util;
 
 pub use coordinator::bigmeans::{BigMeans, BigMeansResult};
 pub use coordinator::config::{BigMeansConfig, DataBackend};
+pub use tuner::{RaceResult, TunerConfig};
 pub use data::bmx::BmxSource;
 pub use data::csv_source::CsvSource;
 pub use data::dataset::Dataset;

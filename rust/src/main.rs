@@ -11,6 +11,7 @@
 //! * `artifacts`— inspect the AOT artifact manifest
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use bigmeans::bench_harness::{self, report, tables};
@@ -18,10 +19,13 @@ use bigmeans::coordinator::config::{
     BigMeansConfig, DataBackend, Engine, KernelEngineKind, ParallelMode, ReinitStrategy,
     StopCondition,
 };
+use bigmeans::coordinator::{produce_from_source, ChunkQueue, StreamingBigMeans};
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
 use bigmeans::runtime;
+use bigmeans::tuner::{self, ControllerKind, TunerConfig};
 use bigmeans::util::cli::Args;
-use bigmeans::{BigMeans, DataSource};
+use bigmeans::util::json::{num, obj, s as jstr, Json};
+use bigmeans::{BigMeans, BigMeansResult, DataSource};
 
 const USAGE: &str = "\
 bigmeans — scalable K-means clustering for big data (Big-means, PatRec 2022)
@@ -43,15 +47,34 @@ SUBCOMMANDS:
                                   distance evals on settled chunks (see
                                   the `pruned evals` output line)
                         'native' is accepted as an alias for panel
-      --mode M          inner | chunks | seq   (default inner)
+      --mode M          inner | chunks | seq | tune | stream (default inner)
+                        tune   = competitive portfolio tuner: bandit-
+                                 scheduled arms race over sample sizes
+                        stream = sequential pass through the file as an
+                                 unbounded stream (drift check optional)
       --backend B       mem | mmap | buffered  (default mem)
                         mmap/buffered cluster files out-of-core:
                         mmap = memory-mapped .bmx; buffered = positioned
                         reads (.bmx) or row-indexed parse-on-read (.csv)
+      --index-stride N  buffered CSV: keep every Nth row offset in RAM
+                        (index shrinks N×, seeks scan ≤ N−1 rows; default 1)
       --reinit R        kmeanspp | random      (default kmeanspp)
       --threads N       worker threads (default: machine)
       --seed N          RNG seed
       --skip-final      skip the full-dataset assignment pass
+      --json            print a machine-readable run summary (objective,
+                        counters incl. pruned evals, per-phase timings)
+    tune mode only:
+      --tuner T         ucb | softmax          (default ucb)
+      --arms SPEC       grid of sample-size multipliers, each optionally
+                        `:kernel` (default 0.25,0.5,1,2,4), e.g.
+                        `0.5,1:panel,1:bounded,4`
+      --exploration C   UCB exploration constant (default 1.0)
+      --temperature T   softmax temperature (default 0.1)
+      --validation-rows N  reservoir validation sample size (default 4096)
+    stream mode only:
+      --validate-every N   drift check cadence in chunks (default 0 = off)
+      --validation-rows N  drift reservoir capacity (default 2048)
   convert <in.csv> <out.bmx>   Convert a CSV into the .bmx format
                       (blockwise, memory bounded by the row index)
   table <dataset>     Regenerate the paper's per-dataset tables
@@ -73,7 +96,8 @@ fn main() {
         std::process::exit(2);
     }
     let sub = argv.remove(0);
-    let args = match Args::parse_with_flags(argv, &["full", "quick", "skip-final", "help"]) {
+    let flags = ["full", "quick", "skip-final", "json", "help"];
+    let args = match Args::parse_with_flags(argv, &flags) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -103,7 +127,11 @@ fn main() {
 }
 
 /// Open the `cluster` dataset argument through the configured backend.
-fn load_source(args: &Args, backend: DataBackend) -> Result<Box<dyn DataSource>, String> {
+fn load_source(
+    args: &Args,
+    backend: DataBackend,
+    index_stride: usize,
+) -> Result<Box<dyn DataSource>, String> {
     let Some(name) = args.positional().first() else {
         return Err("missing <dataset> argument".into());
     };
@@ -122,7 +150,54 @@ fn load_source(args: &Args, backend: DataBackend) -> Result<Box<dyn DataSource>,
         let seed = args.u64("data-seed", 20220418)?;
         return Ok(Box::new(entry.generate(seed)));
     }
-    loader::open_source(&PathBuf::from(name), backend).map_err(|e| e.to_string())
+    loader::open_source_with(&PathBuf::from(name), backend, index_stride)
+        .map_err(|e| e.to_string())
+}
+
+/// `num` that degrades NaN/∞ to JSON null (NaN is not valid JSON).
+fn fnum(x: f64) -> Json {
+    if x.is_finite() {
+        num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// The machine-readable run summary (`--json`). Always includes the
+/// pruned-eval counter and the per-phase timings — the human output only
+/// mentions pruning when the bounded engine actually avoided work.
+#[allow(clippy::too_many_arguments)]
+fn run_summary_json(
+    dataset: &str,
+    m: usize,
+    n: usize,
+    k: usize,
+    chunk_size: usize,
+    engine: &str,
+    mode: &str,
+    r: &BigMeansResult,
+    wall: f64,
+) -> Json {
+    obj(vec![
+        ("dataset", jstr(dataset)),
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("chunk_size", num(chunk_size as f64)),
+        ("engine", jstr(engine)),
+        ("mode", jstr(mode)),
+        ("objective", fnum(r.objective)),
+        ("best_chunk_objective", fnum(r.best_chunk_objective)),
+        ("chunks", num(r.counters.chunks as f64)),
+        ("improvements", num(r.improvements as f64)),
+        ("distance_evals", num(r.counters.distance_evals as f64)),
+        ("pruned_evals", num(r.counters.pruned_evals as f64)),
+        ("chunk_iterations", num(r.counters.chunk_iterations as f64)),
+        ("full_iterations", num(r.counters.full_iterations as f64)),
+        ("cpu_init_secs", num(r.cpu_init_secs)),
+        ("cpu_full_secs", num(r.cpu_full_secs)),
+        ("wall_secs", num(wall)),
+    ])
 }
 
 fn cmd_cluster(args: &Args) -> Result<(), String> {
@@ -140,11 +215,12 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     } else {
         StopCondition::MaxTime(Duration::from_secs_f64(time))
     };
-    let mode = match args.get_or("mode", "inner") {
-        "inner" => ParallelMode::InnerParallel,
-        "chunks" => ParallelMode::ChunkParallel,
-        "seq" => ParallelMode::Sequential,
-        other => return Err(format!("bad --mode '{other}'")),
+    let mode_arg =
+        args.choice("mode", &["inner", "chunks", "seq", "tune", "stream"])?;
+    let mode = match mode_arg {
+        "chunks" | "tune" => ParallelMode::ChunkParallel,
+        "seq" | "stream" => ParallelMode::Sequential,
+        _ => ParallelMode::InnerParallel,
     };
     let reinit = match args.get_or("reinit", "kmeanspp") {
         "kmeanspp" => ReinitStrategy::KmeansPP,
@@ -163,19 +239,33 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         .with_kernel(kernel)
         .with_seed(args.u64("seed", 0xB16_3EA5)?);
     cfg.reinit = reinit;
+    cfg.index_stride = args.usize("index-stride", 1)?;
     cfg.threads = args.usize("threads", 0)?;
     cfg.skip_final_assignment = args.flag("skip-final");
     cfg.engine = engine;
 
     // The config's backend choice decides how the dataset file is opened.
-    let data = load_source(args, cfg.backend)?;
+    let data = load_source(args, cfg.backend, cfg.index_stride)?;
 
     eprintln!(
-        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}/{kernel:?}, mode={mode:?}, backend={backend:?}",
+        "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}/{kernel:?}, mode={mode_arg}, backend={backend:?}",
         data.name(),
         data.m(),
         data.n(),
     );
+    match mode_arg {
+        // The tune/stream paths drive native solvers directly; erroring
+        // beats silently relabelling a PJRT request as native numbers.
+        "tune" | "stream" if engine == Engine::Pjrt => {
+            return Err(format!(
+                "--engine pjrt is not supported with --mode {mode_arg}; use \
+                 --engine panel or --engine bounded"
+            ));
+        }
+        "tune" => return run_tune(args, cfg, data),
+        "stream" => return run_stream(args, cfg, data),
+        _ => {}
+    }
     let bm = match engine {
         Engine::Native => BigMeans::new(cfg),
         Engine::Pjrt => runtime::pjrt_bigmeans(cfg, &runtime::default_artifacts_dir())
@@ -194,6 +284,150 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     }
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
+    if args.flag("json") {
+        let doc = run_summary_json(
+            data.name(),
+            data.m(),
+            data.n(),
+            k,
+            s,
+            engine_arg,
+            mode_arg,
+            &r,
+            wall,
+        );
+        println!("{}", doc.to_string());
+    }
+    Ok(())
+}
+
+/// `--mode tune`: race the arm portfolio under a bandit controller.
+fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Result<(), String> {
+    let controller = ControllerKind::parse(args.choice("tuner", &["ucb", "softmax"])?)
+        .expect("choice() already validated the token");
+    let mut tcfg = TunerConfig::default().with_controller(controller);
+    if let Some(spec) = args.get("arms") {
+        tcfg.arms = TunerConfig::parse_arms(spec)?;
+    }
+    tcfg.exploration = args.f64("exploration", tcfg.exploration)?;
+    tcfg.temperature = args.f64("temperature", tcfg.temperature)?;
+    tcfg.validation_rows = args.usize("validation-rows", tcfg.validation_rows)?;
+
+    let t0 = std::time::Instant::now();
+    let race = tuner::run_race(&cfg, &tcfg, data.as_ref())?;
+    let wall = t0.elapsed().as_secs_f64();
+    let r = &race.result;
+    println!("objective (full SSE)     : {:.6e}", r.objective);
+    println!("validation objective     : {:.6e}", race.validation_objective);
+    println!("shots (n_s)              : {}", r.counters.chunks);
+    println!("incumbent improvements   : {}", r.improvements);
+    println!("chosen sample size       : {}", race.chosen_chunk_rows);
+    println!("controller               : {}", race.trace.controller);
+    for arm in &race.trace.arms {
+        println!(
+            "  arm {:<16} rows {:>8}  pulls {:>5}  accepted {:>4}  mean reward {:.4}",
+            arm.label, arm.chunk_rows, arm.pulls, arm.accepted, arm.mean_reward()
+        );
+    }
+    println!("distance evals (n_d)     : {:.3e}", r.counters.distance_evals as f64);
+    if r.counters.pruned_evals > 0 {
+        println!("pruned evals (avoided)   : {:.3e}", r.counters.pruned_evals as f64);
+    }
+    println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
+    println!("wall time                : {wall:.3}s");
+    if args.flag("json") {
+        let kernel_name = match cfg.kernel {
+            KernelEngineKind::Panel => "panel",
+            KernelEngineKind::Bounded => "bounded",
+        };
+        let summary = run_summary_json(
+            data.name(),
+            data.m(),
+            data.n(),
+            cfg.k,
+            cfg.chunk_size,
+            kernel_name,
+            "tune",
+            r,
+            wall,
+        );
+        let doc = obj(vec![
+            ("run", summary),
+            ("tuner", race.trace.to_json()),
+            ("validation_objective", fnum(race.validation_objective)),
+            ("chosen_chunk_rows", num(race.chosen_chunk_rows as f64)),
+        ]);
+        println!("{}", doc.to_string());
+    }
+    Ok(())
+}
+
+/// `--mode stream`: feed the source through the backpressured queue into
+/// the streaming consumer, with the optional reservoir drift check.
+fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Result<(), String> {
+    cfg.validate(data.m(), data.n())?;
+    let validate_every = args.u64("validate-every", 0)?;
+    let validation_rows =
+        args.usize("validation-rows", bigmeans::coordinator::stream::DEFAULT_VALIDATION_ROWS)?;
+    let rows_per_chunk = cfg.chunk_size.max(1);
+    let n = data.n();
+    let engine = StreamingBigMeans::new(cfg, n).with_validation(validate_every, validation_rows);
+    let queue = ChunkQueue::new(8);
+    let t0 = std::time::Instant::now();
+    let r = std::thread::scope(|scope| {
+        let producer_q = Arc::clone(&queue);
+        let src: &dyn DataSource = data.as_ref();
+        scope.spawn(move || {
+            produce_from_source(src, &producer_q, rows_per_chunk);
+            producer_q.close();
+        });
+        let r = engine.run(&queue);
+        // The consumer may stop on its budget while the producer is blocked
+        // on a full queue — close it so the producer unblocks and the scope
+        // can join.
+        queue.close();
+        r
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    println!("best chunk objective     : {:.6e}", r.best_chunk_objective);
+    println!("chunks processed (n_s)   : {}", r.chunks_processed);
+    println!("incumbent improvements   : {}", r.improvements);
+    if validate_every > 0 {
+        println!("drift events             : {}", r.drift_events);
+        for p in &r.validation_trace {
+            println!("  chunk {:>6}  validation mean SSE {:.6e}", p.chunk, p.objective);
+        }
+    }
+    println!("distance evals (n_d)     : {:.3e}", r.counters.distance_evals as f64);
+    println!("wall time                : {wall:.3}s");
+    if args.flag("json") {
+        let doc = obj(vec![
+            ("dataset", jstr(data.name())),
+            ("mode", jstr("stream")),
+            ("best_chunk_objective", fnum(r.best_chunk_objective)),
+            ("chunks", num(r.chunks_processed as f64)),
+            ("improvements", num(r.improvements as f64)),
+            ("distance_evals", num(r.counters.distance_evals as f64)),
+            ("pruned_evals", num(r.counters.pruned_evals as f64)),
+            ("drift_events", num(r.drift_events as f64)),
+            (
+                "validation_trace",
+                bigmeans::util::json::arr(
+                    r.validation_trace
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("chunk", num(p.chunk as f64)),
+                                ("objective", fnum(p.objective)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("wall_secs", num(wall)),
+        ]);
+        println!("{}", doc.to_string());
+    }
     Ok(())
 }
 

@@ -1,0 +1,207 @@
+//! Bandit telemetry for the competitive portfolio tuner: per-arm pull
+//! counts, reward traces, and work counters, in the same spirit as the
+//! paper-protocol counters in [`super::counters`] — every number the tuner
+//! acts on is also a number a report can print.
+//!
+//! The trace is deliberately dumb storage: the controllers in
+//! [`crate::tuner::bandit`] keep their own sufficient statistics, and the
+//! race records every pull here so runs can be audited (and asserted
+//! bit-identical in the determinism tests) after the fact.
+
+use crate::metrics::Counters;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Aggregate statistics for one portfolio arm.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArmTrace {
+    /// Display label, e.g. `"0.5x/panel"`.
+    pub label: String,
+    /// Chunk rows this arm samples per shot.
+    pub chunk_rows: usize,
+    /// Kernel engine name (`panel` / `bounded`).
+    pub kernel: String,
+    /// Times the controller pulled this arm.
+    pub pulls: u64,
+    /// Pulls whose shot was accepted as the new incumbent.
+    pub accepted: u64,
+    /// Sum of observed rewards.
+    pub total_reward: f64,
+    /// Distance evaluations this arm spent (local search + scoring).
+    pub distance_evals: u64,
+    /// Distance evaluations the arm's bounded engine avoided.
+    pub pruned_evals: u64,
+}
+
+impl ArmTrace {
+    /// Mean observed reward (0 when never pulled).
+    pub fn mean_reward(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.total_reward / self.pulls as f64
+        }
+    }
+
+    /// Fold an arm's work counters into the trace.
+    pub fn absorb_counters(&mut self, counters: &Counters) {
+        self.distance_evals += counters.distance_evals;
+        self.pruned_evals += counters.pruned_evals;
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("label", s(&self.label)),
+            ("chunk_rows", num(self.chunk_rows as f64)),
+            ("kernel", s(&self.kernel)),
+            ("pulls", num(self.pulls as f64)),
+            ("accepted", num(self.accepted as f64)),
+            ("mean_reward", num(self.mean_reward())),
+            ("total_reward", num(self.total_reward)),
+            ("distance_evals", num(self.distance_evals as f64)),
+            ("pruned_evals", num(self.pruned_evals as f64)),
+        ])
+    }
+}
+
+/// Whole-race telemetry: the pull order, the reward sequence, and per-arm
+/// aggregates.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TunerTrace {
+    /// Controller name (`ucb` / `softmax`).
+    pub controller: String,
+    /// Arm id of every pull, in scheduling order.
+    pub pull_sequence: Vec<u32>,
+    /// Reward of every pull, aligned with `pull_sequence`.
+    pub rewards: Vec<f64>,
+    /// Per-arm aggregates, indexed by arm id.
+    pub arms: Vec<ArmTrace>,
+}
+
+impl TunerTrace {
+    /// Empty trace over `arms` (labels pre-filled by the race).
+    pub fn new(controller: &str, arms: Vec<ArmTrace>) -> Self {
+        TunerTrace {
+            controller: controller.to_string(),
+            pull_sequence: Vec::new(),
+            rewards: Vec::new(),
+            arms,
+        }
+    }
+
+    /// Record one pull of `arm` with its observed reward.
+    pub fn record_pull(&mut self, arm: usize, reward: f64, accepted: bool) {
+        self.pull_sequence.push(arm as u32);
+        self.rewards.push(reward);
+        let a = &mut self.arms[arm];
+        a.pulls += 1;
+        a.total_reward += reward;
+        if accepted {
+            a.accepted += 1;
+        }
+    }
+
+    /// Total pulls recorded.
+    pub fn total_pulls(&self) -> u64 {
+        self.pull_sequence.len() as u64
+    }
+
+    /// Shots accepted as incumbent across all arms.
+    pub fn total_accepted(&self) -> u64 {
+        self.arms.iter().map(|a| a.accepted).sum()
+    }
+
+    /// The most-pulled arm (ties break to the lowest id); `None` before the
+    /// first pull or on an empty portfolio.
+    pub fn best_arm(&self) -> Option<usize> {
+        self.arms
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.pulls > 0)
+            .max_by(|(ia, a), (ib, b)| {
+                a.pulls.cmp(&b.pulls).then(ib.cmp(ia))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// JSON document for reports (`BENCH_tuner.json`, `--json` summaries).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("controller", s(&self.controller)),
+            (
+                "pull_sequence",
+                arr(self.pull_sequence.iter().map(|&a| num(a as f64)).collect()),
+            ),
+            ("rewards", arr(self.rewards.iter().map(|&r| num(r)).collect())),
+            ("arms", arr(self.arms.iter().map(|a| a.to_json()).collect())),
+            (
+                "best_arm",
+                self.best_arm().map(|i| num(i as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(n: usize) -> TunerTrace {
+        let arms = (0..n)
+            .map(|i| ArmTrace {
+                label: format!("arm{i}"),
+                chunk_rows: 100 * (i + 1),
+                kernel: "panel".into(),
+                ..Default::default()
+            })
+            .collect();
+        TunerTrace::new("ucb", arms)
+    }
+
+    #[test]
+    fn pulls_accumulate_per_arm() {
+        let mut t = trace(3);
+        t.record_pull(1, 0.5, true);
+        t.record_pull(1, 0.25, false);
+        t.record_pull(2, 1.0, true);
+        assert_eq!(t.pull_sequence, vec![1, 1, 2]);
+        assert_eq!(t.arms[1].pulls, 2);
+        assert_eq!(t.arms[1].accepted, 1);
+        assert!((t.arms[1].mean_reward() - 0.375).abs() < 1e-12);
+        assert_eq!(t.total_pulls(), 3);
+        assert_eq!(t.total_accepted(), 2);
+        assert_eq!(t.best_arm(), Some(1));
+    }
+
+    #[test]
+    fn best_arm_ties_break_low_and_empty_is_none() {
+        let mut t = trace(2);
+        assert_eq!(t.best_arm(), None);
+        t.record_pull(0, 0.0, false);
+        t.record_pull(1, 0.0, false);
+        assert_eq!(t.best_arm(), Some(0));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut t = trace(2);
+        t.record_pull(0, 0.75, true);
+        let doc = t.to_json();
+        let text = doc.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("controller").unwrap().as_str(), Some("ucb"));
+        assert_eq!(back.get("best_arm").unwrap().as_f64(), Some(0.0));
+        assert_eq!(back.get("arms").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn counters_absorbed() {
+        let mut a = ArmTrace::default();
+        let mut c = Counters::new();
+        c.add_distance_evals(10);
+        c.add_pruned_evals(4);
+        a.absorb_counters(&c);
+        a.absorb_counters(&c);
+        assert_eq!(a.distance_evals, 20);
+        assert_eq!(a.pruned_evals, 8);
+    }
+}

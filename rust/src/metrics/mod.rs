@@ -1,11 +1,14 @@
 //! Evaluation metrics matching the paper's protocol: work counters
 //! (`n_d`, `n_full`, `n_s`), phase timers (`cpu_init`/`cpu_full`),
-//! relative error `E_A` and the normalized score system of Tables 3–4.
+//! relative error `E_A`, the normalized score system of Tables 3–4, and
+//! the tuner's bandit telemetry (per-arm pulls and reward traces).
 
+pub mod bandit;
 pub mod counters;
 pub mod score;
 pub mod timer;
 
+pub use bandit::{ArmTrace, TunerTrace};
 pub use counters::Counters;
 pub use score::{mean_score, relative_error, scores, sum_scores, Summary};
 pub use timer::{Deadline, PhaseTimer};

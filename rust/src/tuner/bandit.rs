@@ -1,0 +1,205 @@
+//! Bandit controllers: the policies that decide which arm fires the next
+//! shot.
+//!
+//! Both controllers share the same contract:
+//!
+//! * every arm is pulled at least once before any exploitation (unpulled
+//!   arms are selected first, in id order — deterministic, and it seeds
+//!   the statistics the policies need);
+//! * rewards are the objective-improvement signal of
+//!   [`improvement_reward`] — monotone in how much a shot lowered the
+//!   validation objective, clamped to `[0, 1]`;
+//! * a single-arm portfolio degenerates gracefully (the only arm is
+//!   selected forever, no division by zero, no panic).
+//!
+//! `tests/property_tuner.rs` pins all three properties down.
+
+use crate::util::rng::Rng;
+
+/// Reward for moving the incumbent (validation) objective from `before`
+/// to `after`: the relative improvement, clamped to `[0, 1]`.
+///
+/// * the first finite objective (from the all-degenerate start,
+///   `before = ∞`) earns the full reward of 1;
+/// * no improvement (or a non-finite result) earns 0;
+/// * for a fixed `before`, the reward is monotone: a lower `after` never
+///   earns less.
+pub fn improvement_reward(before: f64, after: f64) -> f64 {
+    if !after.is_finite() {
+        return 0.0;
+    }
+    if !before.is_finite() {
+        return 1.0;
+    }
+    if before <= 0.0 || after >= before {
+        return 0.0;
+    }
+    ((before - after) / before).clamp(0.0, 1.0)
+}
+
+/// An online arm-selection policy. Implementations own their sufficient
+/// statistics; the race records the full trace separately
+/// ([`crate::metrics::bandit::TunerTrace`]).
+pub trait BanditController: Send {
+    /// Pick the arm for the next pull. `rng` is the controller's dedicated
+    /// stream (UCB ignores it; softmax samples from it).
+    fn select(&mut self, rng: &mut Rng) -> usize;
+
+    /// Record the reward observed for `arm`.
+    fn update(&mut self, arm: usize, reward: f64);
+
+    /// Policy name (`ucb` / `softmax`).
+    fn name(&self) -> &'static str;
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct ArmStats {
+    pulls: u64,
+    total_reward: f64,
+}
+
+impl ArmStats {
+    fn mean(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.total_reward / self.pulls as f64
+        }
+    }
+}
+
+/// UCB1 (Auer et al.): pull the arm maximising
+/// `mean + c·√(ln t / pulls)`. Deterministic — ties break to the lowest
+/// arm id, so a single-worker race is bit-reproducible.
+pub struct UcbController {
+    exploration: f64,
+    arms: Vec<ArmStats>,
+    total_pulls: u64,
+}
+
+impl UcbController {
+    /// `exploration` is the constant `c` (√2 is the textbook value; the
+    /// default config uses 1.0, biasing slightly toward exploitation).
+    pub fn new(num_arms: usize, exploration: f64) -> Self {
+        assert!(num_arms >= 1, "UcbController needs at least one arm");
+        UcbController {
+            exploration: exploration.max(0.0),
+            arms: vec![ArmStats::default(); num_arms],
+            total_pulls: 0,
+        }
+    }
+}
+
+impl BanditController for UcbController {
+    fn select(&mut self, _rng: &mut Rng) -> usize {
+        if let Some(i) = self.arms.iter().position(|a| a.pulls == 0) {
+            return i;
+        }
+        let t = self.total_pulls.max(1) as f64;
+        let mut best = 0usize;
+        let mut best_value = f64::NEG_INFINITY;
+        for (i, a) in self.arms.iter().enumerate() {
+            let bonus = self.exploration * (t.ln() / a.pulls as f64).sqrt();
+            let value = a.mean() + bonus;
+            if value > best_value {
+                best_value = value;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64) {
+        self.arms[arm].pulls += 1;
+        self.arms[arm].total_reward += reward.max(0.0);
+        self.total_pulls += 1;
+    }
+
+    fn name(&self) -> &'static str {
+        "ucb"
+    }
+}
+
+/// Boltzmann (softmax) selection: `P(i) ∝ exp(mean_i / τ)`. Low
+/// temperatures exploit, high temperatures explore; the exponentials are
+/// shifted by the max mean for numerical stability, so every weight is in
+/// `(0, 1]` and the distribution is always proper.
+pub struct SoftmaxController {
+    temperature: f64,
+    arms: Vec<ArmStats>,
+}
+
+impl SoftmaxController {
+    pub fn new(num_arms: usize, temperature: f64) -> Self {
+        assert!(num_arms >= 1, "SoftmaxController needs at least one arm");
+        SoftmaxController {
+            temperature: temperature.max(1e-6),
+            arms: vec![ArmStats::default(); num_arms],
+        }
+    }
+}
+
+impl BanditController for SoftmaxController {
+    fn select(&mut self, rng: &mut Rng) -> usize {
+        if let Some(i) = self.arms.iter().position(|a| a.pulls == 0) {
+            return i;
+        }
+        if self.arms.len() == 1 {
+            return 0;
+        }
+        let hi = self.arms.iter().map(|a| a.mean()).fold(f64::NEG_INFINITY, f64::max);
+        let weights: Vec<f64> =
+            self.arms.iter().map(|a| ((a.mean() - hi) / self.temperature).exp()).collect();
+        rng.weighted(&weights)
+    }
+
+    fn update(&mut self, arm: usize, reward: f64) {
+        self.arms[arm].pulls += 1;
+        self.arms[arm].total_reward += reward.max(0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "softmax"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reward_shape() {
+        assert_eq!(improvement_reward(f64::INFINITY, 10.0), 1.0);
+        assert_eq!(improvement_reward(10.0, 10.0), 0.0);
+        assert_eq!(improvement_reward(10.0, 12.0), 0.0);
+        assert_eq!(improvement_reward(10.0, f64::NAN), 0.0);
+        assert!((improvement_reward(10.0, 5.0) - 0.5).abs() < 1e-12);
+        assert!((improvement_reward(10.0, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ucb_prefers_the_better_arm() {
+        let mut c = UcbController::new(2, 0.5);
+        let mut rng = Rng::new(1);
+        let mut pulls = [0u64; 2];
+        for _ in 0..200 {
+            let arm = c.select(&mut rng);
+            pulls[arm] += 1;
+            c.update(arm, if arm == 1 { 0.8 } else { 0.1 });
+        }
+        assert!(pulls[1] > pulls[0] * 2, "pulls: {pulls:?}");
+    }
+
+    #[test]
+    fn softmax_prefers_the_better_arm() {
+        let mut c = SoftmaxController::new(2, 0.05);
+        let mut rng = Rng::new(2);
+        let mut pulls = [0u64; 2];
+        for _ in 0..200 {
+            let arm = c.select(&mut rng);
+            pulls[arm] += 1;
+            c.update(arm, if arm == 0 { 0.9 } else { 0.2 });
+        }
+        assert!(pulls[0] > pulls[1] * 2, "pulls: {pulls:?}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Tuner configuration: the arm grid, the controller choice, and the
+//! deterministic RNG stream layout.
+//!
+//! ## RNG stream layout
+//!
+//! A race draws randomness in three places — the validation reservoir, the
+//! controller (softmax sampling), and each arm's chunk sampling / reseeding
+//! — and every consumer gets its **own** stream derived from
+//! `(BigMeansConfig::seed, salt, index)`:
+//!
+//! ```text
+//! validation  ← stream(seed, SALT_VALIDATION, 0)
+//! controller  ← stream(seed, SALT_CONTROLLER, 0)
+//! arm i       ← stream(seed, SALT_ARM,        i)
+//! ```
+//!
+//! Because an arm's draws never depend on when the controller pulls it,
+//! a single-worker race is bit-reproducible, and adding an arm to the grid
+//! leaves every other arm's chunk sequence untouched — the property the
+//! determinism tests in `tests/integration_tuner.rs` pin down.
+
+use crate::kernels::engine::KernelEngineKind;
+use crate::util::rng::Rng;
+
+/// Which bandit policy schedules the arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ControllerKind {
+    /// UCB1 with a tunable exploration constant.
+    Ucb,
+    /// Boltzmann (softmax) selection over mean rewards.
+    Softmax,
+}
+
+impl ControllerKind {
+    /// Parse a CLI token (`ucb` / `softmax`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ucb" => Some(ControllerKind::Ucb),
+            "softmax" => Some(ControllerKind::Softmax),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ControllerKind::Ucb => "ucb",
+            ControllerKind::Softmax => "softmax",
+        }
+    }
+}
+
+/// One entry of the arm grid: a sample-size multiplier applied to the base
+/// chunk size, plus an optional kernel-engine override.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArmSpec {
+    /// Chunk rows = `round(multiplier × BigMeansConfig::chunk_size)`,
+    /// clamped to `[k, m]`.
+    pub multiplier: f64,
+    /// Kernel engine for this arm (`None` = the run's configured engine).
+    pub kernel: Option<KernelEngineKind>,
+}
+
+impl ArmSpec {
+    pub fn new(multiplier: f64) -> Self {
+        ArmSpec { multiplier, kernel: None }
+    }
+}
+
+/// Configuration of the competition layer.
+#[derive(Clone, Debug)]
+pub struct TunerConfig {
+    /// Arm-selection policy.
+    pub controller: ControllerKind,
+    /// The competitor grid.
+    pub arms: Vec<ArmSpec>,
+    /// UCB exploration constant `c` (ignored by softmax).
+    pub exploration: f64,
+    /// Softmax temperature `τ` (ignored by UCB).
+    pub temperature: f64,
+    /// Rows in the reservoir-sampled validation set all arms are scored
+    /// against (clamped to the dataset size).
+    pub validation_rows: usize,
+}
+
+impl Default for TunerConfig {
+    fn default() -> Self {
+        TunerConfig {
+            controller: ControllerKind::Ucb,
+            arms: [0.25, 0.5, 1.0, 2.0, 4.0].iter().map(|&m| ArmSpec::new(m)).collect(),
+            exploration: 1.0,
+            temperature: 0.1,
+            validation_rows: 4096,
+        }
+    }
+}
+
+impl TunerConfig {
+    pub fn with_controller(mut self, controller: ControllerKind) -> Self {
+        self.controller = controller;
+        self
+    }
+
+    pub fn with_arms(mut self, arms: Vec<ArmSpec>) -> Self {
+        self.arms = arms;
+        self
+    }
+
+    /// Parse a CLI grid spec: comma-separated entries of `MULT` or
+    /// `MULT:KERNEL`, e.g. `0.25,0.5,1,2` or `1:panel,1:bounded,4`.
+    pub fn parse_arms(spec: &str) -> Result<Vec<ArmSpec>, String> {
+        let mut arms = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (mult_text, kernel) = match entry.split_once(':') {
+                None => (entry, None),
+                Some((m, k)) => {
+                    let kind = KernelEngineKind::parse(k.trim()).ok_or_else(|| {
+                        format!("--arms: unknown kernel '{}' in '{entry}'", k.trim())
+                    })?;
+                    (m.trim(), Some(kind))
+                }
+            };
+            let mult_text = mult_text.strip_suffix('x').unwrap_or(mult_text);
+            let multiplier: f64 = mult_text
+                .parse()
+                .map_err(|_| format!("--arms: bad multiplier '{entry}'"))?;
+            if !multiplier.is_finite() || multiplier <= 0.0 {
+                return Err(format!("--arms: multiplier must be > 0, got '{entry}'"));
+            }
+            arms.push(ArmSpec { multiplier, kernel });
+        }
+        if arms.is_empty() {
+            return Err("--arms: empty grid".into());
+        }
+        Ok(arms)
+    }
+}
+
+const SALT_VALIDATION: u64 = 0x7475_6E65_5641_4C30; // "tuneVAL0"
+const SALT_CONTROLLER: u64 = 0x7475_6E65_4354_524C; // "tuneCTRL"
+const SALT_ARM: u64 = 0x7475_6E65_4152_4D30; // "tuneARM0"
+
+/// Derive the stream for `(seed, salt, index)`. `Rng::new` splitmixes the
+/// input, so a simple odd-multiplier mix is enough to separate streams.
+fn stream(seed: u64, salt: u64, index: u64) -> Rng {
+    Rng::new(
+        seed ^ salt.rotate_left(17)
+            ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(31),
+    )
+}
+
+/// Stream that samples the validation reservoir.
+pub fn validation_rng(seed: u64) -> Rng {
+    stream(seed, SALT_VALIDATION, 0)
+}
+
+/// Stream the controller uses for stochastic selection (softmax).
+pub fn controller_rng(seed: u64) -> Rng {
+    stream(seed, SALT_CONTROLLER, 0)
+}
+
+/// Stream arm `arm` uses for chunk sampling and reseeding.
+pub fn arm_rng(seed: u64, arm: usize) -> Rng {
+    stream(seed, SALT_ARM, arm as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_arms_grid() {
+        let arms = TunerConfig::parse_arms("0.25, 0.5x ,1:bounded,2:panel").unwrap();
+        assert_eq!(arms.len(), 4);
+        assert_eq!(arms[0], ArmSpec::new(0.25));
+        assert_eq!(arms[1], ArmSpec::new(0.5));
+        assert_eq!(arms[2].kernel, Some(KernelEngineKind::Bounded));
+        assert_eq!(arms[3].kernel, Some(KernelEngineKind::Panel));
+    }
+
+    #[test]
+    fn parse_arms_rejects_garbage() {
+        assert!(TunerConfig::parse_arms("").is_err());
+        assert!(TunerConfig::parse_arms("abc").is_err());
+        assert!(TunerConfig::parse_arms("-1").is_err());
+        assert!(TunerConfig::parse_arms("0").is_err());
+        assert!(TunerConfig::parse_arms("1:warp").is_err());
+    }
+
+    #[test]
+    fn controller_kind_parses() {
+        assert_eq!(ControllerKind::parse("ucb"), Some(ControllerKind::Ucb));
+        assert_eq!(ControllerKind::parse("softmax"), Some(ControllerKind::Softmax));
+        assert!(ControllerKind::parse("greedy").is_none());
+        assert_eq!(ControllerKind::Ucb.name(), "ucb");
+    }
+
+    #[test]
+    fn streams_are_distinct_and_reproducible() {
+        let mut a0 = arm_rng(42, 0);
+        let mut a0b = arm_rng(42, 0);
+        let mut a1 = arm_rng(42, 1);
+        let mut v = validation_rng(42);
+        let mut c = controller_rng(42);
+        for _ in 0..16 {
+            assert_eq!(a0.next_u64(), a0b.next_u64());
+        }
+        let mut a0 = arm_rng(42, 0);
+        let same_arm = (0..64).filter(|_| a0.next_u64() == a1.next_u64()).count();
+        assert_eq!(same_arm, 0);
+        let same_vc = (0..64).filter(|_| v.next_u64() == c.next_u64()).count();
+        assert_eq!(same_vc, 0);
+    }
+}

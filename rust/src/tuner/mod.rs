@@ -1,0 +1,42 @@
+//! The competitive portfolio tuner: online sample-size optimisation across
+//! racing Big-means workers.
+//!
+//! The paper leaves the sample size `s` as a hand-tuned hyperparameter;
+//! its follow-up (*Superior Parallel Big Data Clustering through
+//! Competitive Stochastic Sample Size Optimization in Big-means*, arXiv
+//! 2403.18766) shows that letting parallel workers **compete** over
+//! stochastically varied sample sizes dominates any fixed choice. This
+//! subsystem is that competition layer — it sits above the coordinators
+//! and below the CLI:
+//!
+//! ```text
+//! CLI --mode tune (--tuner ucb|softmax, --arms grid)
+//!         │
+//! tuner::race::run_race            — the competition loop
+//!         │        ├─ tuner::portfolio::Portfolio   (arms: s-multiplier × engine)
+//!         │        ├─ tuner::bandit::BanditController (ucb / softmax)
+//!         │        └─ tuner::validation::ValidationSet (common reservoir objective)
+//!         ▼
+//! coordinator::parallel::ShotExecutor — one Big-means shot per pull
+//!         ▼
+//! kernels (panel | bounded engines)  +  DataSource backends
+//! ```
+//!
+//! Every shot is scored on one shared reservoir-sampled validation set
+//! (chunk objectives are incomparable across sample sizes) and winning
+//! centroids feed a [`SharedIncumbent`](crate::coordinator::incumbent) —
+//! so arms cooperate on the solution while competing for the budget.
+//! Determinism: single-worker races are bit-reproducible thanks to the
+//! per-arm RNG stream layout in [`config`].
+
+pub mod bandit;
+pub mod config;
+pub mod portfolio;
+pub mod race;
+pub mod validation;
+
+pub use bandit::{improvement_reward, BanditController, SoftmaxController, UcbController};
+pub use config::{ArmSpec, ControllerKind, TunerConfig};
+pub use portfolio::{Arm, Portfolio};
+pub use race::{run_race, RaceResult};
+pub use validation::{Reservoir, ValidationSet};

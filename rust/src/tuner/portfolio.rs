@@ -1,0 +1,162 @@
+//! The competitor portfolio: the concrete arms a race schedules.
+//!
+//! An arm is a *resolved* grid entry — multiplier applied to the base
+//! chunk size, clamped to the dataset, kernel override resolved against
+//! the run's configured engine. Resolution happens once, up front, so the
+//! race and the telemetry agree on arm ids for the whole run.
+
+use crate::coordinator::config::BigMeansConfig;
+use crate::kernels::engine::KernelEngineKind;
+use crate::metrics::bandit::ArmTrace;
+
+use super::config::TunerConfig;
+
+/// One competitor: a chunk size and a kernel engine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arm {
+    /// Index into the portfolio (stable for the whole race).
+    pub id: usize,
+    /// The grid multiplier that produced this arm.
+    pub multiplier: f64,
+    /// Rows per sampled chunk.
+    pub chunk_rows: usize,
+    /// Kernel engine running this arm's local search.
+    pub kernel: KernelEngineKind,
+}
+
+/// Kernel name for labels/JSON (avoids building an engine just to ask).
+pub(crate) fn kernel_name(kind: KernelEngineKind) -> &'static str {
+    match kind {
+        KernelEngineKind::Panel => "panel",
+        KernelEngineKind::Bounded => "bounded",
+    }
+}
+
+impl Arm {
+    /// Display label, e.g. `"0.5x/panel"`.
+    pub fn label(&self) -> String {
+        format!("{}x/{}", self.multiplier, kernel_name(self.kernel))
+    }
+
+    /// Fresh telemetry slot for this arm.
+    pub fn trace(&self) -> ArmTrace {
+        ArmTrace {
+            label: self.label(),
+            chunk_rows: self.chunk_rows,
+            kernel: kernel_name(self.kernel).to_string(),
+            ..Default::default()
+        }
+    }
+}
+
+/// The resolved competitor set.
+#[derive(Clone, Debug)]
+pub struct Portfolio {
+    pub arms: Vec<Arm>,
+}
+
+impl Portfolio {
+    /// Resolve the grid against a dataset of `m` rows: scale, clamp to
+    /// `[k, m]`, resolve kernel overrides, and collapse duplicates (two
+    /// specs that clamp to the same `(rows, kernel)` pair would race
+    /// identical competitors and only dilute the budget).
+    pub fn build(
+        cfg: &BigMeansConfig,
+        tuner: &TunerConfig,
+        m: usize,
+    ) -> Result<Portfolio, String> {
+        if tuner.arms.is_empty() {
+            return Err("tuner: the arm grid is empty".into());
+        }
+        let m = m.max(1);
+        let lo = cfg.k.max(1).min(m);
+        let mut arms: Vec<Arm> = Vec::new();
+        for spec in &tuner.arms {
+            if !spec.multiplier.is_finite() || spec.multiplier <= 0.0 {
+                return Err(format!(
+                    "tuner: arm multiplier must be > 0, got {}",
+                    spec.multiplier
+                ));
+            }
+            let raw = (cfg.chunk_size as f64 * spec.multiplier).round() as usize;
+            let rows = raw.clamp(lo, m);
+            let kernel = spec.kernel.unwrap_or(cfg.kernel);
+            if arms.iter().any(|a| a.chunk_rows == rows && a.kernel == kernel) {
+                continue;
+            }
+            arms.push(Arm {
+                id: arms.len(),
+                multiplier: spec.multiplier,
+                chunk_rows: rows,
+                kernel,
+            });
+        }
+        Ok(Portfolio { arms })
+    }
+
+    pub fn len(&self) -> usize {
+        self.arms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arms.is_empty()
+    }
+
+    /// Telemetry slots for every arm, in id order.
+    pub fn traces(&self) -> Vec<ArmTrace> {
+        self.arms.iter().map(|a| a.trace()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::config::ArmSpec;
+
+    fn cfg(k: usize, s: usize) -> BigMeansConfig {
+        BigMeansConfig::new(k, s)
+    }
+
+    #[test]
+    fn arms_scale_and_clamp() {
+        let tuner = TunerConfig::default().with_arms(vec![
+            ArmSpec::new(0.001), // clamps up to k
+            ArmSpec::new(0.5),
+            ArmSpec::new(1.0),
+            ArmSpec::new(1_000.0), // clamps down to m
+        ]);
+        let p = Portfolio::build(&cfg(5, 1000), &tuner, 10_000).unwrap();
+        let rows: Vec<usize> = p.arms.iter().map(|a| a.chunk_rows).collect();
+        assert_eq!(rows, vec![5, 500, 1000, 10_000]);
+        assert_eq!(p.arms[1].label(), "0.5x/panel");
+        assert!(p.arms.iter().enumerate().all(|(i, a)| a.id == i));
+    }
+
+    #[test]
+    fn duplicate_arms_collapse() {
+        // Everything clamps to m → one arm survives.
+        let tuner = TunerConfig::default()
+            .with_arms(vec![ArmSpec::new(10.0), ArmSpec::new(20.0), ArmSpec::new(30.0)]);
+        let p = Portfolio::build(&cfg(3, 1000), &tuner, 2000).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.arms[0].chunk_rows, 2000);
+    }
+
+    #[test]
+    fn kernel_override_separates_otherwise_equal_arms() {
+        let tuner = TunerConfig::default().with_arms(vec![
+            ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Panel) },
+            ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Bounded) },
+        ]);
+        let p = Portfolio::build(&cfg(3, 256), &tuner, 5000).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.arms[0].kernel, KernelEngineKind::Panel);
+        assert_eq!(p.arms[1].kernel, KernelEngineKind::Bounded);
+    }
+
+    #[test]
+    fn empty_grid_rejected() {
+        let tuner = TunerConfig::default().with_arms(vec![]);
+        assert!(Portfolio::build(&cfg(3, 256), &tuner, 1000).is_err());
+    }
+}

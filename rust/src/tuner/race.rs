@@ -1,0 +1,312 @@
+//! The race executor: competitor arms fire Big-means shots against one
+//! shared incumbent, scheduled by a bandit controller.
+//!
+//! ```text
+//! workers (shared ThreadPool)
+//!    │  select arm (controller, under one lock — selection order is the
+//!    │  recorded pull order)
+//!    ▼
+//! arm state (per-arm lock: RNG stream + ShotExecutor + counters)
+//!    │  ShotExecutor::run_shot — snapshot → sample → reseed → local
+//!    ▼  search → score on the common validation set → offer
+//! SharedIncumbent (winning centroids propagate to *every* arm's next
+//!    │  shot, exactly as the paper's parallel scheme propagates across
+//!    ▼  workers)
+//! controller.update(reward) + trace.record_pull
+//! ```
+//!
+//! Shots are offered to the incumbent under their **validation** objective
+//! (chunk objectives are incomparable across sample sizes), so "keep the
+//! best" stays monotone on one common scale. With one worker the whole
+//! race is deterministic: the controller lock serialises pulls, every arm
+//! owns its dedicated RNG stream, and the ticket pool makes the shot
+//! budget exact.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::bigmeans::{finish, BigMeansResult};
+use crate::coordinator::config::{BigMeansConfig, StopCondition};
+use crate::coordinator::incumbent::{SharedIncumbent, Solution};
+use crate::coordinator::parallel::{ShotExecutor, ShotScorer};
+use crate::coordinator::solver::NativeSolver;
+use crate::data::source::{AccessPattern, DataSource};
+use crate::metrics::bandit::TunerTrace;
+use crate::metrics::{Counters, PhaseTimer};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+use super::bandit::{improvement_reward, BanditController, SoftmaxController, UcbController};
+use super::config::{arm_rng, controller_rng, validation_rng, ControllerKind, TunerConfig};
+use super::portfolio::Portfolio;
+use super::validation::ValidationSet;
+
+/// Result of a tuned run.
+#[derive(Clone, Debug)]
+pub struct RaceResult {
+    /// The usual Big-means result (final full-dataset pass included).
+    /// `best_chunk_objective` holds the winning **validation** objective —
+    /// the quantity the incumbent was selected by.
+    pub result: BigMeansResult,
+    /// Bandit telemetry: pull order, rewards, per-arm aggregates.
+    pub trace: TunerTrace,
+    /// Validation objective of the winning incumbent.
+    pub validation_objective: f64,
+    /// Chunk rows of the most-pulled arm (the tuner's answer to "what
+    /// sample size should I have configured?").
+    pub chosen_chunk_rows: usize,
+}
+
+/// Per-arm mutable state: the dedicated RNG stream, the shot executor
+/// (sampler buffers + solver), and the arm's work counters.
+struct ArmState<'a> {
+    rng: Rng,
+    exec: ShotExecutor<'a>,
+    counters: Counters,
+}
+
+/// Controller + trace under one lock: the selection order *is* the
+/// recorded pull order.
+struct Scheduler {
+    controller: Box<dyn BanditController>,
+    rng: Rng,
+    trace: TunerTrace,
+}
+
+/// Run a competitive race over the portfolio. Shot budget / time budget
+/// come from `cfg.stop` exactly as in the chunk-parallel pipeline.
+pub fn run_race(
+    cfg: &BigMeansConfig,
+    tuner: &TunerConfig,
+    data: &dyn DataSource,
+) -> Result<RaceResult, String> {
+    let (m, n, k) = (data.m(), data.n(), cfg.k);
+    cfg.validate(m, n)?;
+    let portfolio = Portfolio::build(cfg, tuner, m)?;
+    let workers = cfg.worker_count();
+    let max_shots = match cfg.stop {
+        StopCondition::MaxChunks(c) => c,
+        StopCondition::TimeOrChunks(_, c) => c,
+        StopCondition::MaxTime(_) => u64::MAX,
+    };
+    let deadline = match cfg.stop {
+        StopCondition::MaxTime(t) | StopCondition::TimeOrChunks(t, _) => {
+            Some(Instant::now() + t)
+        }
+        StopCondition::MaxChunks(_) => None,
+    };
+
+    let mut timer = PhaseTimer::new();
+    // Chunk sampling and the validation gather are scattered reads.
+    data.advise(AccessPattern::Random);
+    let validation = ValidationSet::sample(
+        data,
+        tuner.validation_rows,
+        &mut validation_rng(cfg.seed),
+        cfg.kernel,
+    );
+
+    let incumbent = SharedIncumbent::new(Solution::all_degenerate(k, n));
+    let done = AtomicBool::new(false);
+    let tickets = AtomicU64::new(0);
+    let controller: Box<dyn BanditController> = match tuner.controller {
+        ControllerKind::Ucb => {
+            Box::new(UcbController::new(portfolio.len(), tuner.exploration))
+        }
+        ControllerKind::Softmax => {
+            Box::new(SoftmaxController::new(portfolio.len(), tuner.temperature))
+        }
+    };
+    let sched = Mutex::new(Scheduler {
+        controller,
+        rng: controller_rng(cfg.seed),
+        trace: TunerTrace::new(tuner.controller.name(), portfolio.traces()),
+    });
+    let arm_states: Vec<Mutex<ArmState>> = portfolio
+        .arms
+        .iter()
+        .map(|arm| {
+            Mutex::new(ArmState {
+                rng: arm_rng(cfg.seed, arm.id),
+                exec: ShotExecutor::with_chunk_size(cfg, data, arm.chunk_rows, arm.kernel),
+                counters: Counters::new(),
+            })
+        })
+        .collect();
+    let scorer = |centroids: &[f32], degenerate: &[usize], counters: &mut Counters| {
+        validation.objective(centroids, degenerate, k, counters)
+    };
+    let scorer_ref: &ShotScorer = &scorer;
+
+    // The shots of every arm run as rounds on one shared pool: each worker
+    // loops select → shoot → update until the ticket pool (or the clock)
+    // runs out. Panics propagate through `scope_run_all`.
+    let pool = ThreadPool::new(workers);
+    timer.time_init(|| {
+        let jobs: Vec<_> = (0..workers)
+            .map(|_| {
+                || loop {
+                    if done.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Some(dl) = deadline {
+                        if Instant::now() >= dl {
+                            done.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                    if tickets.fetch_add(1, Ordering::Relaxed) >= max_shots {
+                        break;
+                    }
+                    let arm_id = {
+                        let mut s = sched.lock().unwrap();
+                        let Scheduler { controller, rng, .. } = &mut *s;
+                        controller.select(rng)
+                    };
+                    let (report, before) = {
+                        let mut st = arm_states[arm_id].lock().unwrap();
+                        let before = incumbent.snapshot().objective;
+                        let ArmState { rng, exec, counters } = &mut *st;
+                        (exec.run_shot(&incumbent, rng, counters, Some(scorer_ref)), before)
+                    };
+                    // Reward only *accepted* offers: with several workers the
+                    // `before` snapshot can go stale while a shot runs, and a
+                    // rejected offer must not earn credit against it. At one
+                    // worker this is identical to the unconditional reward
+                    // (accepted ⟺ offered < before), keeping races
+                    // bit-reproducible.
+                    let reward = if report.accepted {
+                        improvement_reward(before, report.offered_objective)
+                    } else {
+                        0.0
+                    };
+                    let mut s = sched.lock().unwrap();
+                    s.controller.update(arm_id, reward);
+                    s.trace.record_pull(arm_id, reward, report.accepted);
+                }
+            })
+            .collect();
+        pool.scope_run_all(jobs);
+    });
+
+    // Fold per-arm counters into the run totals and the telemetry.
+    let mut counters = Counters::new();
+    let mut sched = sched.into_inner().unwrap();
+    for (i, st) in arm_states.into_iter().enumerate() {
+        let st = st.into_inner().unwrap();
+        sched.trace.arms[i].absorb_counters(&st.counters);
+        counters.merge(&st.counters);
+    }
+    let trace = sched.trace;
+    let improvements = trace.total_accepted();
+    let chosen_chunk_rows = trace
+        .best_arm()
+        .map(|i| portfolio.arms[i].chunk_rows)
+        .unwrap_or(cfg.chunk_size.min(m));
+
+    let snap = incumbent.snapshot();
+    let validation_objective = snap.objective;
+    let final_solution = Solution {
+        centroids: snap.centroids.clone(),
+        objective: snap.objective,
+        degenerate: snap.degenerate.clone(),
+    };
+    let final_solver = NativeSolver::with_kernel(cfg.lloyd, cfg.threads, cfg.kernel);
+    let result = finish(
+        cfg,
+        &final_solver,
+        data,
+        final_solution,
+        improvements,
+        counters,
+        timer,
+    );
+    Ok(RaceResult { result, trace, validation_objective, chosen_chunk_rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::ParallelMode;
+    use crate::data::synth::Synth;
+    use crate::tuner::config::ArmSpec;
+
+    fn blobs(m: usize, seed: u64) -> crate::data::dataset::Dataset {
+        Synth::GaussianMixture {
+            m,
+            n: 4,
+            k_true: 4,
+            spread: 0.2,
+            box_half_width: 25.0,
+        }
+        .generate("race", seed)
+    }
+
+    fn base_cfg(shots: u64) -> BigMeansConfig {
+        let mut cfg = BigMeansConfig::new(4, 256)
+            .with_stop(StopCondition::MaxChunks(shots))
+            .with_parallel(ParallelMode::ChunkParallel)
+            .with_seed(11);
+        cfg.threads = 1;
+        cfg
+    }
+
+    #[test]
+    fn race_runs_and_accounts_every_shot() {
+        let data = blobs(6000, 1);
+        let tuner = TunerConfig::default()
+            .with_arms(vec![ArmSpec::new(0.5), ArmSpec::new(1.0), ArmSpec::new(2.0)]);
+        let r = run_race(&base_cfg(12), &tuner, &data).unwrap();
+        assert_eq!(r.trace.total_pulls(), 12);
+        assert_eq!(r.result.counters.chunks, 12);
+        assert_eq!(r.trace.pull_sequence.len(), 12);
+        assert!(r.result.objective.is_finite());
+        assert!(r.validation_objective.is_finite());
+        assert!(r.chosen_chunk_rows >= 4);
+        // Every arm explored at least once before the budget ran out.
+        assert!(r.trace.arms.iter().all(|a| a.pulls >= 1));
+        // Per-arm pulls sum to the budget.
+        let total: u64 = r.trace.arms.iter().map(|a| a.pulls).sum();
+        assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn single_arm_portfolio_degenerates_gracefully() {
+        let data = blobs(3000, 2);
+        for controller in [ControllerKind::Ucb, ControllerKind::Softmax] {
+            let tuner = TunerConfig::default()
+                .with_controller(controller)
+                .with_arms(vec![ArmSpec::new(1.0)]);
+            let r = run_race(&base_cfg(6), &tuner, &data).unwrap();
+            assert_eq!(r.trace.arms.len(), 1);
+            assert_eq!(r.trace.arms[0].pulls, 6);
+            assert!(r.result.objective.is_finite());
+        }
+    }
+
+    #[test]
+    fn multi_worker_race_exhausts_ticket_pool() {
+        let data = blobs(8000, 3);
+        let mut cfg = base_cfg(16);
+        cfg.threads = 4;
+        let tuner = TunerConfig::default();
+        let r = run_race(&cfg, &tuner, &data).unwrap();
+        assert_eq!(r.result.counters.chunks, 16);
+        assert_eq!(r.trace.total_pulls(), 16);
+        assert!(r.result.objective.is_finite());
+    }
+
+    #[test]
+    fn time_budget_stops_the_race() {
+        use std::time::Duration;
+        let data = blobs(4000, 4);
+        let mut cfg = base_cfg(0);
+        cfg.stop = StopCondition::MaxTime(Duration::from_millis(80));
+        cfg.threads = 2;
+        let t0 = Instant::now();
+        let r = run_race(&cfg, &TunerConfig::default(), &data).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        assert!(r.trace.total_pulls() >= 1);
+    }
+}

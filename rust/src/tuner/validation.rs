@@ -1,0 +1,263 @@
+//! The common validation objective arms are scored against.
+//!
+//! Chunk objectives are not comparable across sample sizes (a bigger chunk
+//! means a bigger SSE), so the race prices every shot on one shared,
+//! reservoir-sampled validation set instead — the drift-aware scoring idea
+//! of the Big-means streaming follow-up (arXiv 2410.14548). Two entry
+//! points share the scoring kernel:
+//!
+//! * [`ValidationSet`] — a fixed sample drawn once from a [`DataSource`]
+//!   (the tuner race: the dataset size is known, so a uniform
+//!   without-replacement draw *is* the reservoir);
+//! * [`Reservoir`] — Algorithm R over rows whose total count is unknown
+//!   (the streaming drift check in [`crate::coordinator::stream`]).
+//!
+//! Scoring accumulates squared distances in f64, in row order, through a
+//! [`KernelEngine`](crate::kernels::KernelEngine) — so a fixed seed gives
+//! a bit-reproducible score regardless of data backend, matching the
+//! determinism contract of the rest of the system.
+
+use crate::data::source::DataSource;
+use crate::kernels::engine::KernelEngineKind;
+use crate::metrics::Counters;
+use crate::util::rng::Rng;
+
+/// Where degenerate centroid slots are parked before scoring (mirrors the
+/// final-pass parking in the coordinator's `finish`): far enough that no
+/// real point ever picks them.
+const DEGENERATE_PAD: f32 = 1.0e15;
+
+/// SSE of `centroids` on `points`, with degenerate slots parked out of the
+/// way first. The shared scoring kernel of both validation flavours.
+#[allow(clippy::too_many_arguments)]
+fn score_points(
+    points: &[f32],
+    rows: usize,
+    n: usize,
+    k: usize,
+    centroids: &[f32],
+    degenerate: &[usize],
+    kernel: KernelEngineKind,
+    counters: &mut Counters,
+) -> f64 {
+    debug_assert_eq!(centroids.len(), k * n);
+    let mut parked = centroids.to_vec();
+    for &j in degenerate {
+        for v in &mut parked[j * n..(j + 1) * n] {
+            *v = DEGENERATE_PAD;
+        }
+    }
+    let engine = kernel.build();
+    let (_labels, mins) = engine.assign_once(points, &parked, rows, n, k, counters);
+    mins.iter().map(|&d| d as f64).sum()
+}
+
+/// A fixed validation sample with a common scoring objective.
+pub struct ValidationSet {
+    points: Vec<f32>,
+    rows: usize,
+    n: usize,
+    kernel: KernelEngineKind,
+}
+
+impl ValidationSet {
+    /// Draw `rows` distinct rows uniformly from `data` (clamped to the
+    /// dataset). Indices are sorted before the gather for locality on
+    /// out-of-core sources; the drawn *set* depends only on the RNG, so a
+    /// fixed seed yields the same sample on every backend.
+    pub fn sample(
+        data: &dyn DataSource,
+        rows: usize,
+        rng: &mut Rng,
+        kernel: KernelEngineKind,
+    ) -> ValidationSet {
+        let (m, n) = (data.m(), data.n());
+        let take = rows.min(m).max(1);
+        let mut idx = rng.sample_indices(m, take);
+        idx.sort_unstable();
+        let mut points = vec![0f32; take * n];
+        data.sample_rows(&idx, &mut points);
+        ValidationSet { points, rows: take, n, kernel }
+    }
+
+    /// Wrap an already-materialised sample (tests, streaming snapshots).
+    pub fn from_rows(points: Vec<f32>, rows: usize, n: usize, kernel: KernelEngineKind) -> Self {
+        assert_eq!(points.len(), rows * n, "validation: points shape");
+        assert!(rows > 0, "validation: empty sample");
+        ValidationSet { points, rows, n, kernel }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Validation SSE of `centroids` (`k × n`, `degenerate` slots parked).
+    pub fn objective(
+        &self,
+        centroids: &[f32],
+        degenerate: &[usize],
+        k: usize,
+        counters: &mut Counters,
+    ) -> f64 {
+        score_points(
+            &self.points,
+            self.rows,
+            self.n,
+            k,
+            centroids,
+            degenerate,
+            self.kernel,
+            counters,
+        )
+    }
+}
+
+/// Fixed-capacity uniform sample over a row stream of unknown length
+/// (Vitter's Algorithm R): after `seen` rows, every row is resident with
+/// probability `cap / seen`.
+pub struct Reservoir {
+    n: usize,
+    cap: usize,
+    seen: u64,
+    points: Vec<f32>,
+    rng: Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, n: usize, rng: Rng) -> Self {
+        let cap = cap.max(1);
+        Reservoir { n, cap, seen: 0, points: Vec::with_capacity(cap * n), rng }
+    }
+
+    /// Offer `rows` row-major rows to the reservoir.
+    pub fn observe_rows(&mut self, points: &[f32], rows: usize) {
+        debug_assert_eq!(points.len(), rows * self.n);
+        for r in 0..rows {
+            let row = &points[r * self.n..(r + 1) * self.n];
+            self.seen += 1;
+            if self.points.len() < self.cap * self.n {
+                self.points.extend_from_slice(row);
+            } else {
+                let j = self.rng.usize(self.seen as usize);
+                if j < self.cap {
+                    self.points[j * self.n..(j + 1) * self.n].copy_from_slice(row);
+                }
+            }
+        }
+    }
+
+    /// Rows currently resident.
+    pub fn len(&self) -> usize {
+        self.points.len() / self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Total rows offered so far.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Validation SSE of `centroids` on the current reservoir contents.
+    pub fn objective(
+        &self,
+        centroids: &[f32],
+        degenerate: &[usize],
+        k: usize,
+        kernel: KernelEngineKind,
+        counters: &mut Counters,
+    ) -> f64 {
+        assert!(!self.is_empty(), "reservoir: objective of an empty sample");
+        score_points(
+            &self.points,
+            self.len(),
+            self.n,
+            k,
+            centroids,
+            degenerate,
+            kernel,
+            counters,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+
+    fn toy(m: usize, n: usize) -> Dataset {
+        Dataset::from_vec("t", (0..m * n).map(|x| x as f32).collect(), m, n)
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_clamped() {
+        let d = toy(100, 3);
+        let a = ValidationSet::sample(&d, 16, &mut Rng::new(7), KernelEngineKind::Panel);
+        let b = ValidationSet::sample(&d, 16, &mut Rng::new(7), KernelEngineKind::Panel);
+        assert_eq!(a.rows(), 16);
+        assert_eq!(a.points, b.points);
+        let big = ValidationSet::sample(&d, 10_000, &mut Rng::new(7), KernelEngineKind::Panel);
+        assert_eq!(big.rows(), 100);
+    }
+
+    #[test]
+    fn objective_prices_centroids_and_parks_degenerates() {
+        // Two clusters at 0 and 10 in 1-D; centroid 1 degenerate.
+        let v = ValidationSet::from_rows(
+            vec![0.0, 0.0, 10.0, 10.0],
+            4,
+            1,
+            KernelEngineKind::Panel,
+        );
+        let mut c = Counters::new();
+        // Both centroids live: perfect fit.
+        let exact = v.objective(&[0.0, 10.0], &[], 2, &mut c);
+        assert_eq!(exact, 0.0);
+        // Second slot degenerate (parked): everything maps to centroid 0.
+        let parked = v.objective(&[0.0, 10.0], &[1], 2, &mut c);
+        assert_eq!(parked, 200.0);
+        assert!(c.distance_evals > 0);
+    }
+
+    #[test]
+    fn engines_score_identically() {
+        let d = toy(256, 4);
+        let mut counters = Counters::new();
+        let pan = ValidationSet::sample(&d, 64, &mut Rng::new(3), KernelEngineKind::Panel);
+        let bnd = ValidationSet::sample(&d, 64, &mut Rng::new(3), KernelEngineKind::Bounded);
+        let cents: Vec<f32> = (0..12).map(|x| x as f32 * 10.0).collect();
+        let a = pan.objective(&cents, &[], 3, &mut counters);
+        let b = bnd.objective(&cents, &[], 3, &mut counters);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn reservoir_fills_then_keeps_uniform_size() {
+        let mut r = Reservoir::new(8, 2, Rng::new(9));
+        assert!(r.is_empty());
+        let chunk: Vec<f32> = (0..40).map(|x| x as f32).collect();
+        r.observe_rows(&chunk, 20);
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.seen(), 20);
+        r.observe_rows(&chunk, 20);
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.seen(), 40);
+        let mut c = Counters::new();
+        let obj = r.objective(&[0.0, 0.0], &[], 1, KernelEngineKind::Panel, &mut c);
+        assert!(obj.is_finite() && obj > 0.0);
+    }
+
+    #[test]
+    fn reservoir_is_seed_deterministic() {
+        let chunk: Vec<f32> = (0..300).map(|x| (x % 17) as f32).collect();
+        let run = || {
+            let mut r = Reservoir::new(10, 3, Rng::new(4));
+            r.observe_rows(&chunk, 100);
+            r.points.clone()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,147 @@
+//! Integration: `.bmx` v2 error paths.
+//!
+//! The format's safety story has three legs, each exercised here end to
+//! end through both open paths (mmap and buffered pread):
+//!
+//! 1. a corrupted payload is rejected at open with the documented
+//!    checksum diagnostic — clustering garbage floats is never an option;
+//! 2. legacy v1 files (16-byte header, no checksum) still load — with a
+//!    stderr warning — and serve identical values;
+//! 3. payloads beyond [`BMX_VERIFY_EAGER_LIMIT`] skip the eager CRC scan
+//!    (an O(file) scan would defeat the out-of-core design), exercised via
+//!    a header-forged sparse file so the test costs kilobytes of disk, not
+//!    4 GiB.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::PathBuf;
+
+use bigmeans::data::bmx::{
+    save_bmx, BmxSource, BMX_HEADER_LEN_V2, BMX_MAGIC, BMX_MAGIC_V2, BMX_VERIFY_EAGER_LIMIT,
+};
+use bigmeans::data::Dataset;
+use bigmeans::DataSource;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("bigmeans_bmx_v2_errors");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+fn toy() -> Dataset {
+    Dataset::from_vec("toy", (0..60).map(|x| x as f32 * 0.25 - 3.0).collect(), 15, 4)
+}
+
+#[test]
+fn corrupted_crc_rejected_with_documented_error() {
+    let p = tmp("corrupt.bmx");
+    save_bmx(&toy(), &p).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    // Flip a payload bit well past the header.
+    bytes[BMX_HEADER_LEN_V2 + 23] ^= 0x10;
+    std::fs::write(&p, &bytes).unwrap();
+    let errors = [
+        BmxSource::open(&p).unwrap_err().to_string(),
+        BmxSource::open_buffered(&p).unwrap_err().to_string(),
+    ];
+    for err in errors {
+        assert!(
+            err.contains("checksum mismatch") && err.contains("corrupt"),
+            "documented diagnostic expected, got: {err}"
+        );
+    }
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn header_crc_field_corruption_also_rejected() {
+    // Corruption in the *stored* checksum (not the payload) must be caught
+    // by the same comparison.
+    let p = tmp("hdrfield.bmx");
+    save_bmx(&toy(), &p).unwrap();
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[16] ^= 0xFF; // first byte of the stored CRC-32
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(BmxSource::open(&p).unwrap_err().to_string().contains("checksum"));
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn legacy_v1_accepted_and_value_identical() {
+    // Hand-build a v1 file: 16-byte header, no checksum. It must load
+    // through both paths (with a stderr warning) and serve the exact
+    // payload bytes.
+    let p = tmp("legacy.bmx");
+    let d = toy();
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&BMX_MAGIC);
+    bytes.extend_from_slice(&(d.m() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(d.n() as u32).to_le_bytes());
+    for &v in d.points() {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(&p, &bytes).unwrap();
+    for src in [BmxSource::open(&p).unwrap(), BmxSource::open_buffered(&p).unwrap()] {
+        assert_eq!((src.m(), src.n()), (d.m(), d.n()));
+        let mut all = vec![0f32; d.m() * d.n()];
+        src.read_rows(0, &mut all);
+        assert_eq!(all, d.points());
+        // Even a corrupted v1 payload loads: there is no checksum to
+        // catch it — which is exactly why v1 warns.
+    }
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn oversized_payload_skips_eager_crc_validation() {
+    // Forge a v2 header promising a payload just past the eager-verify
+    // limit, with a garbage checksum, backed by a sparse file (set_len
+    // allocates holes, not blocks). If the skip path were broken in either
+    // direction this test catches it:
+    //  * scan attempted → the garbage checksum would fail the open;
+    //  * size accounting off → the truncation check would fail the open.
+    let n: u32 = 2;
+    let m: u64 = BMX_VERIFY_EAGER_LIMIT / (4 * n as u64) + 16;
+    let payload = m * n as u64 * 4;
+    assert!(payload > BMX_VERIFY_EAGER_LIMIT);
+    let p = tmp("huge.bmx");
+    {
+        let mut f = File::create(&p).unwrap();
+        f.write_all(&BMX_MAGIC_V2).unwrap();
+        f.write_all(&m.to_le_bytes()).unwrap();
+        f.write_all(&n.to_le_bytes()).unwrap();
+        f.write_all(&0xDEAD_BEEFu32.to_le_bytes()).unwrap(); // garbage CRC
+        f.write_all(&[0u8; 12]).unwrap(); // reserved
+        f.set_len(BMX_HEADER_LEN_V2 as u64 + payload).unwrap();
+    }
+    for src in [BmxSource::open(&p).unwrap(), BmxSource::open_buffered(&p).unwrap()] {
+        assert_eq!(src.m() as u64, m);
+        assert_eq!(src.n() as u32, n);
+        // Rows in file holes read as zeros — including the very last row.
+        let mut row = vec![1.0f32; n as usize];
+        src.read_rows((m - 1) as usize, &mut row);
+        assert_eq!(row, vec![0.0; n as usize]);
+        let mut gather = vec![1.0f32; 2 * n as usize];
+        src.sample_rows(&[0, (m / 2) as usize], &mut gather);
+        assert!(gather.iter().all(|&v| v == 0.0));
+    }
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn truncated_v2_payload_rejected() {
+    // A v2 header promising more rows than the file holds must fail the
+    // size check up front (not at first read).
+    let p = tmp("trunc.bmx");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&BMX_MAGIC_V2);
+    bytes.extend_from_slice(&100u64.to_le_bytes());
+    bytes.extend_from_slice(&4u32.to_le_bytes());
+    bytes.extend_from_slice(&0u32.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 12]);
+    bytes.extend_from_slice(&[0u8; 64]); // far short of 100×4×4 bytes
+    std::fs::write(&p, &bytes).unwrap();
+    let err = BmxSource::open(&p).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "got: {err}");
+    let _ = std::fs::remove_file(&p);
+}

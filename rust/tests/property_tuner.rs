@@ -1,0 +1,140 @@
+//! Property tests for the bandit controllers and the reward signal.
+//!
+//! Pinned properties (the acceptance contract of the tuner subsystem):
+//!
+//! * rewards are monotone in objective improvement;
+//! * both controllers pull every arm at least once before exploiting;
+//! * degenerate single-arm portfolios never panic;
+//! * controllers concentrate pulls on the better arm once statistics
+//!   exist.
+
+use bigmeans::tuner::{
+    improvement_reward, BanditController, SoftmaxController, UcbController,
+};
+use bigmeans::util::rng::Rng;
+
+#[test]
+fn reward_is_monotone_in_improvement() {
+    // For any fixed `before`, a lower `after` never earns a lower reward.
+    for case in 0..200u64 {
+        let mut rng = Rng::new(0xF00D + case);
+        let before = rng.range_f64(1e-6, 1e9);
+        // A descending grid of `after` values from 2×before down to 0.
+        let mut afters: Vec<f64> =
+            (0..=20).map(|i| before * 2.0 * (1.0 - i as f64 / 20.0)).collect();
+        afters.push(0.0);
+        let rewards: Vec<f64> = afters.iter().map(|&a| improvement_reward(before, a)).collect();
+        for w in rewards.windows(2) {
+            assert!(
+                w[1] >= w[0],
+                "reward must not decrease as the objective improves: {rewards:?}"
+            );
+        }
+        for &r in &rewards {
+            assert!((0.0..=1.0).contains(&r), "reward out of range: {r}");
+        }
+    }
+}
+
+#[test]
+fn reward_edge_cases() {
+    // First finite solution from the all-degenerate start: full reward.
+    assert_eq!(improvement_reward(f64::INFINITY, 123.0), 1.0);
+    // Worsening, ties, and non-finite results earn nothing.
+    assert_eq!(improvement_reward(5.0, 5.0), 0.0);
+    assert_eq!(improvement_reward(5.0, 50.0), 0.0);
+    assert_eq!(improvement_reward(5.0, f64::INFINITY), 0.0);
+    assert_eq!(improvement_reward(5.0, f64::NAN), 0.0);
+    assert_eq!(improvement_reward(f64::INFINITY, f64::INFINITY), 0.0);
+}
+
+/// Drive a controller for `pulls` rounds with per-arm mean rewards.
+fn drive(
+    controller: &mut dyn BanditController,
+    arm_rewards: &[f64],
+    pulls: usize,
+    seed: u64,
+) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let mut counts = vec![0u64; arm_rewards.len()];
+    for _ in 0..pulls {
+        let arm = controller.select(&mut rng);
+        assert!(arm < arm_rewards.len(), "selected arm out of range");
+        counts[arm] += 1;
+        controller.update(arm, arm_rewards[arm]);
+    }
+    counts
+}
+
+#[test]
+fn all_arms_pulled_before_exploitation() {
+    // Whatever the rewards, the first `n` selections must cover all `n`
+    // arms exactly once — forced exploration precedes exploitation.
+    for case in 0..50usize {
+        let n = 1 + case % 7;
+        let rewards: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).fract()).collect();
+        let controllers: Vec<Box<dyn BanditController>> = vec![
+            Box::new(UcbController::new(n, 1.0)),
+            Box::new(SoftmaxController::new(n, 0.1)),
+        ];
+        for mut c in controllers {
+            let mut rng = Rng::new(case as u64);
+            let mut seen = vec![false; n];
+            for round in 0..n {
+                let arm = c.select(&mut rng);
+                assert!(
+                    !seen[arm],
+                    "{}: arm {arm} selected twice in the first {n} rounds (round {round})",
+                    c.name()
+                );
+                seen[arm] = true;
+                c.update(arm, rewards[arm]);
+            }
+            assert!(seen.iter().all(|&s| s), "{}: arms missed in sweep", c.name());
+        }
+    }
+}
+
+#[test]
+fn single_arm_portfolio_never_panics() {
+    let mut ucb = UcbController::new(1, 2.0);
+    let mut soft = SoftmaxController::new(1, 0.01);
+    let mut rng = Rng::new(3);
+    for i in 0..200 {
+        assert_eq!(ucb.select(&mut rng), 0);
+        assert_eq!(soft.select(&mut rng), 0);
+        // Extreme rewards, including repeated zeros.
+        let r = if i % 3 == 0 { 0.0 } else { 1.0 };
+        ucb.update(0, r);
+        soft.update(0, r);
+    }
+}
+
+#[test]
+fn controllers_exploit_the_better_arm() {
+    // Two arms, one clearly better: after a warmup both policies must
+    // concentrate a solid majority of pulls on it.
+    let counts = drive(&mut UcbController::new(2, 0.5), &[0.1, 0.9], 300, 11);
+    assert!(counts[1] > counts[0] * 2, "ucb counts: {counts:?}");
+    let counts = drive(&mut SoftmaxController::new(2, 0.05), &[0.85, 0.05], 300, 13);
+    assert!(counts[0] > counts[1] * 2, "softmax counts: {counts:?}");
+}
+
+#[test]
+fn ucb_keeps_exploring_with_large_constant() {
+    // A huge exploration constant must keep both arms alive even when one
+    // dominates — no starvation.
+    let counts = drive(&mut UcbController::new(2, 50.0), &[0.0, 1.0], 400, 17);
+    assert!(counts[0] >= 50, "high-c ucb should keep exploring: {counts:?}");
+    assert!(counts[1] >= 50, "high-c ucb should keep exploring: {counts:?}");
+}
+
+#[test]
+fn zero_rewards_degrade_to_round_robin_ish_ucb() {
+    // All rewards identical → UCB's bonus term dominates and pulls stay
+    // balanced within a factor of two.
+    let counts = drive(&mut UcbController::new(4, 1.0), &[0.5; 4], 400, 19);
+    let max = *counts.iter().max().unwrap();
+    let min = *counts.iter().min().unwrap();
+    assert!(max <= min * 2, "balanced rewards should balance pulls: {counts:?}");
+}
