@@ -1,6 +1,6 @@
-//! `bench` — engine and tuner benchmarks, no external deps.
+//! `bench` — engine, tuner, and storage benchmarks, no external deps.
 //!
-//! Two suites (`--suite assign|tuner|all`, default `assign`):
+//! Three suites (`--suite assign|tuner|io|all`, default `assign`):
 //!
 //! * **assign** — times the fused panel engine, the bounded
 //!   (Hamerly-pruned) engine, and the pre-fusion two-pass reference kernel
@@ -13,12 +13,17 @@
 //!   budget (default 1M×16 uniform + blob workloads) and emits
 //!   `BENCH_tuner.json`: tuned vs best-fixed vs worst-fixed final
 //!   objective.
+//! * **io** — the `.bmx` v3 block store: ingest MB/s and on-disk ratio
+//!   for every dtype × codec combination, plus cold vs cached
+//!   random-chunk sampling latency per codec (f32), emitting
+//!   `BENCH_io.json`.
 //!
-//! CI runs scaled-down versions of both as non-gating smoke steps.
+//! CI runs scaled-down versions of all three as non-gating smoke steps.
 //!
 //! ```text
-//! cargo run --release --bin bench -- [--suite assign|tuner|all] [--m N] [--n N]
+//! cargo run --release --bin bench -- [--suite assign|tuner|io|all] [--m N] [--n N]
 //!     [--k N] [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH]
+//!     [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH]
 //! ```
 
 use std::time::Instant;
@@ -30,6 +35,8 @@ use bigmeans::kernels::distance::{sq_dist_panel, sq_norm};
 use bigmeans::kernels::engine::{BoundedEngine, KernelEngine, LloydState, PanelEngine};
 use bigmeans::kernels::update_centroids;
 use bigmeans::metrics::Counters;
+use bigmeans::data::source::DataSource;
+use bigmeans::store::{copy_to_store, BlockStore, Codec, Dtype, StoreOptions};
 use bigmeans::tuner::{self, ArmSpec, TunerConfig};
 use bigmeans::util::cli::Args;
 use bigmeans::util::json::{arr, num, obj, s, Json};
@@ -255,6 +262,119 @@ fn tuner_suite(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The block-store IO suite: ingest throughput per dtype × codec, then
+/// cold-vs-cached random-chunk sampling latency per codec (f32 stores,
+/// identical chunk draws for every codec so latencies are comparable).
+fn io_suite(args: &Args) -> Result<(), String> {
+    let m = args.usize("io-m", 200_000)?;
+    let n = args.usize("n", 16)?;
+    let chunk_rows = args.usize("io-s", 4096)?.min(m);
+    let samples = args.usize("io-samples", 32)?;
+    let block_rows = args.usize("block-rows", 4096)?;
+    let out_path = args.get_or("io-out", "BENCH_io.json").to_string();
+    let mut rng = Rng::new(0x10_BE);
+    eprintln!("generating {m}×{n} uniform dataset …");
+    let data = Dataset::from_vec("io", uniform_data(&mut rng, m, n), m, n);
+    let raw_bytes = (m * n * 4) as f64;
+    let raw_mib = raw_bytes / (1 << 20) as f64;
+    let dir = std::env::temp_dir().join(format!("bigmeans_bench_io_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+
+    let combos = [
+        (Dtype::F32, Codec::None),
+        (Dtype::F32, Codec::Shuffle),
+        (Dtype::F32, Codec::Lz),
+        (Dtype::F64, Codec::None),
+        (Dtype::F64, Codec::Lz),
+        (Dtype::F16, Codec::None),
+        (Dtype::F16, Codec::Lz),
+    ];
+    let mut ingest_docs = Vec::new();
+    for (dtype, codec) in combos {
+        let path = dir.join(format!("io_{}_{}.bmx", dtype.name(), codec.name()));
+        let opts = StoreOptions { block_rows, dtype, codec, threads: 0 };
+        let t0 = Instant::now();
+        copy_to_store(&data, &path, opts).map_err(|e| e.to_string())?;
+        let secs = t0.elapsed().as_secs_f64();
+        let file_bytes = std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0);
+        let mb_per_s = raw_mib / secs.max(1e-9);
+        eprintln!(
+            "ingest {:>4}/{:<7} {secs:>7.3}s  {mb_per_s:>8.1} MiB/s  \
+             on-disk ratio {:.3}",
+            dtype.name(),
+            codec.name(),
+            file_bytes as f64 / raw_bytes
+        );
+        ingest_docs.push(obj(vec![
+            ("dtype", s(dtype.name())),
+            ("codec", s(codec.name())),
+            ("secs", num(secs)),
+            ("mb_per_s", num(mb_per_s)),
+            ("file_bytes", num(file_bytes as f64)),
+            ("ratio_vs_raw_f32", num(file_bytes as f64 / raw_bytes)),
+        ]));
+    }
+
+    // Identical chunk draws for every codec: cold = fresh open (every
+    // touched block pays read + CRC + decode), warm = same draws again
+    // (decoded-block LRU hits).
+    let mut draw_rng = Rng::new(0x5A17);
+    let chunks: Vec<Vec<usize>> = (0..samples)
+        .map(|_| {
+            let mut idx = draw_rng.sample_indices(m, chunk_rows);
+            idx.sort_unstable();
+            idx
+        })
+        .collect();
+    let mut sample_docs = Vec::new();
+    for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+        let path = dir.join(format!("io_f32_{}.bmx", codec.name()));
+        let store = BlockStore::open(&path).map_err(|e| e.to_string())?;
+        let mut out = vec![0f32; chunk_rows * n];
+        let t0 = Instant::now();
+        for idx in &chunks {
+            store.sample_rows(idx, &mut out);
+        }
+        let cold = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        for idx in &chunks {
+            store.sample_rows(idx, &mut out);
+        }
+        let warm = t1.elapsed().as_secs_f64();
+        let (hits, misses) = store.cache_stats();
+        eprintln!(
+            "sample f32/{:<7} cold {cold:>7.4}s  warm {warm:>7.4}s  ({:.2}× speedup, \
+             {hits} hits / {misses} misses)",
+            codec.name(),
+            cold / warm.max(1e-9)
+        );
+        sample_docs.push(obj(vec![
+            ("codec", s(codec.name())),
+            ("chunks", num(samples as f64)),
+            ("chunk_rows", num(chunk_rows as f64)),
+            ("cold_secs", num(cold)),
+            ("warm_secs", num(warm)),
+            ("warm_speedup", num(cold / warm.max(1e-9))),
+            ("cache_hits", num(hits as f64)),
+            ("cache_misses", num(misses as f64)),
+        ]));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let doc = obj(vec![
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("block_rows", num(block_rows as f64)),
+        ("raw_mib", num(raw_mib)),
+        ("ingest", arr(ingest_docs)),
+        ("sampling", arr(sample_docs)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n")
+        .map_err(|e| format!("write {out_path}: {e}"))?;
+    eprintln!("wrote {out_path}");
+    Ok(())
+}
+
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), &["help"]) {
         Ok(a) => a,
@@ -265,9 +385,10 @@ fn main() {
     };
     if args.flag("help") {
         eprintln!(
-            "bench — engine and tuner benchmarks\n\
-             usage: bench [--suite assign|tuner|all] [--m N] [--n N] [--k N] \
-             [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH]"
+            "bench — engine, tuner, and storage benchmarks\n\
+             usage: bench [--suite assign|tuner|io|all] [--m N] [--n N] [--k N] \
+             [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH] \
+             [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH]"
         );
         return;
     }
@@ -337,9 +458,12 @@ fn main() {
         eprintln!("wrote {out_path}");
         Ok(())
     };
-    let result = match args.choice("suite", &["assign", "tuner", "all"]) {
+    let result = match args.choice("suite", &["assign", "tuner", "io", "all"]) {
         Ok("tuner") => tuner_suite(&args),
-        Ok("all") => assign_suite().and_then(|()| tuner_suite(&args)),
+        Ok("io") => io_suite(&args),
+        Ok("all") => assign_suite()
+            .and_then(|()| tuner_suite(&args))
+            .and_then(|()| io_suite(&args)),
         Ok(_) => assign_suite(),
         Err(e) => Err(e),
     };

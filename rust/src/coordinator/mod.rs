@@ -26,7 +26,7 @@ pub use config::{
 pub use parallel::{ShotExecutor, ShotReport};
 pub use solver::{ChunkSolver, NativeSolver};
 pub use stream::{
-    produce_from_source, ChunkQueue, StreamChunk, StreamResult, StreamingBigMeans,
-    ValidationPoint,
+    produce_from_source, ChunkQueue, DriftAction, StreamChunk, StreamResult,
+    StreamingBigMeans, ValidationPoint,
 };
 pub use vns::{run_vns, VnsConfig, VnsResult};

@@ -18,6 +18,15 @@
 //! of the streaming follow-up paper (arXiv 2410.14548) is built on. Off by
 //! default: the reservoir and the periodic scoring cost nothing unless
 //! enabled.
+//!
+//! Detection can optionally *remediate* ([`DriftAction::Reseed`], CLI
+//! `--drift-action reseed`): when a drift event fires, the centroid
+//! contributing the most SSE on the reservoir — the one the stream moved
+//! away from hardest — is re-seeded by a K-means++ D² draw **from the
+//! validation reservoir** (which, unlike any single chunk, remembers the
+//! whole stream so far), and the incumbent's chunk objective is reset so
+//! the next chunk re-earns incumbency under the new centroid set.
+//! Remediations are counted in [`StreamResult::remediations`].
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -158,6 +167,16 @@ pub const DRIFT_TOLERANCE: f64 = 0.05;
 /// Default reservoir rows for the drift check.
 pub const DEFAULT_VALIDATION_ROWS: usize = 2048;
 
+/// What a drift event does beyond being counted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DriftAction {
+    /// Count and trace only (the default).
+    None,
+    /// Re-seed the worst-contributing centroid via a K-means++ draw from
+    /// the validation reservoir.
+    Reseed,
+}
+
 /// Result of a streaming run.
 #[derive(Clone, Debug)]
 pub struct StreamResult {
@@ -171,6 +190,9 @@ pub struct StreamResult {
     pub validation_trace: Vec<ValidationPoint>,
     /// Consecutive-check rises beyond [`DRIFT_TOLERANCE`].
     pub drift_events: u64,
+    /// Drift events answered with a reservoir re-seed
+    /// ([`DriftAction::Reseed`]).
+    pub remediations: u64,
 }
 
 /// Streaming Big-means consumer: pulls chunks from the queue, improves the
@@ -183,6 +205,8 @@ pub struct StreamingBigMeans {
     validate_every: u64,
     /// Reservoir capacity for the drift check.
     validation_rows: usize,
+    /// What a drift event triggers.
+    drift_action: DriftAction,
 }
 
 impl StreamingBigMeans {
@@ -198,6 +222,7 @@ impl StreamingBigMeans {
             n,
             validate_every: 0,
             validation_rows: DEFAULT_VALIDATION_ROWS,
+            drift_action: DriftAction::None,
         }
     }
 
@@ -207,6 +232,13 @@ impl StreamingBigMeans {
     pub fn with_validation(mut self, every: u64, rows: usize) -> Self {
         self.validate_every = every;
         self.validation_rows = rows.max(1);
+        self
+    }
+
+    /// What to do when a drift event fires (requires the drift check to
+    /// be enabled to ever trigger).
+    pub fn with_drift_action(mut self, action: DriftAction) -> Self {
+        self.drift_action = action;
         self
     }
 
@@ -223,6 +255,7 @@ impl StreamingBigMeans {
             .then(|| Reservoir::new(self.validation_rows, n, validation_rng(cfg.seed)));
         let mut validation_trace: Vec<ValidationPoint> = Vec::new();
         let mut drift_events = 0u64;
+        let mut remediations = 0u64;
 
         while !stop.should_stop() {
             let Some(chunk) = queue.pop() else { break };
@@ -267,9 +300,14 @@ impl StreamingBigMeans {
                         &mut counters,
                     );
                     let obj = sum / res.len() as f64;
-                    if let Some(last) = validation_trace.last() {
-                        if obj > last.objective * (1.0 + DRIFT_TOLERANCE) {
-                            drift_events += 1;
+                    let drifted = validation_trace
+                        .last()
+                        .is_some_and(|last| obj > last.objective * (1.0 + DRIFT_TOLERANCE));
+                    if drifted {
+                        drift_events += 1;
+                        if self.drift_action == DriftAction::Reseed {
+                            remediate(cfg, res, n, k, &mut incumbent, &mut rng, &mut counters);
+                            remediations += 1;
                         }
                     }
                     validation_trace
@@ -285,8 +323,66 @@ impl StreamingBigMeans {
             counters,
             validation_trace,
             drift_events,
+            remediations,
         }
     }
+}
+
+/// Answer a drift event: rank centroids by their SSE contribution on the
+/// reservoir, re-seed the worst one with a K-means++ D² draw from the
+/// reservoir rows, and reset the incumbent's chunk objective so the next
+/// chunk re-earns incumbency under the remediated centroid set.
+fn remediate(
+    cfg: &BigMeansConfig,
+    reservoir: &Reservoir,
+    n: usize,
+    k: usize,
+    incumbent: &mut Solution,
+    rng: &mut Rng,
+    counters: &mut Counters,
+) {
+    let points = reservoir.points();
+    let rows = reservoir.len();
+    if rows == 0 {
+        return;
+    }
+    // Park degenerate slots (as validation scoring does), then rank the
+    // live centroids by reservoir SSE.
+    let mut parked = incumbent.centroids.clone();
+    for &j in &incumbent.degenerate {
+        for v in &mut parked[j * n..(j + 1) * n] {
+            *v = crate::tuner::validation::DEGENERATE_PAD;
+        }
+    }
+    let engine = cfg.kernel.build();
+    let (labels, mins) = engine.assign_once(points, &parked, rows, n, k, counters);
+    let mut sse = vec![0f64; k];
+    for (label, d) in labels.iter().zip(&mins) {
+        sse[*label as usize] += *d as f64;
+    }
+    let worst = (0..k)
+        .filter(|j| !incumbent.degenerate.contains(j))
+        .max_by(|&a, &b| sse[a].total_cmp(&sse[b]));
+    let Some(worst) = worst else { return };
+    // Draw against the *parked* copy: degenerate slots must not count as
+    // alive at their stale positions, or the D² weights would steer the
+    // replacement away from exactly the regions they once covered. Only
+    // the worst slot's new position is copied back — degenerate slots
+    // keep their stored positions (the incumbent's usual semantics).
+    crate::kernels::reseed_degenerate(
+        points,
+        rows,
+        n,
+        k,
+        &mut parked,
+        &[worst],
+        cfg.candidates,
+        rng,
+        counters,
+    );
+    incumbent.centroids[worst * n..(worst + 1) * n]
+        .copy_from_slice(&parked[worst * n..(worst + 1) * n]);
+    incumbent.objective = f64::INFINITY;
 }
 
 #[cfg(test)]
@@ -517,6 +613,96 @@ mod tests {
             "expected a drift event after the stream moved: {:?}",
             r.validation_trace
         );
+    }
+
+    /// A stream whose blobs jump halfway through: shared by the
+    /// remediation tests so the action comparison is apples-to-apples.
+    fn moved_stream(q: Arc<ChunkQueue>, producer_seed: u64) {
+        std::thread::spawn(move || {
+            let mut rng = Rng::new(producer_seed);
+            for i in 0..60 {
+                let shift = if i < 30 { 0.0f32 } else { 200.0 };
+                let mut chunk = blob_chunk(&mut rng, 256);
+                for v in &mut chunk.points {
+                    *v += shift;
+                }
+                if !q.push(chunk) {
+                    break;
+                }
+            }
+            q.close();
+        });
+    }
+
+    #[test]
+    fn drift_reseed_remediates_a_moved_stream() {
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(60))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(9);
+        let engine = StreamingBigMeans::new(cfg, 2)
+            .with_validation(5, 512)
+            .with_drift_action(DriftAction::Reseed);
+        let q = ChunkQueue::new(4);
+        moved_stream(Arc::clone(&q), 23);
+        let r = engine.run(&q);
+        assert_eq!(r.chunks_processed, 60);
+        assert!(r.drift_events >= 1, "trace: {:?}", r.validation_trace);
+        assert_eq!(
+            r.remediations, r.drift_events,
+            "reseed action must answer every drift event"
+        );
+        assert!(r.centroids.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn remediate_replaces_the_worst_contributor() {
+        use crate::metrics::Counters;
+        use crate::tuner::validation::Reservoir;
+        // Reservoir: two tight groups at 0 and 100 (1-D). Incumbent:
+        // centroid 0 covers the origin group, centroid 1 sits at 50 —
+        // every 100-group point maps to it with huge error, so it is the
+        // worst contributor and must be re-seeded onto a reservoir point.
+        let cfg = BigMeansConfig::new(2, 16).with_parallel(ParallelMode::Sequential);
+        let mut res = Reservoir::new(64, 1, Rng::new(3));
+        let pts: Vec<f32> = (0..32)
+            .map(|i| if i % 2 == 0 { (i % 4) as f32 * 0.01 } else { 100.0 })
+            .collect();
+        res.observe_rows(&pts, 32);
+        let mut incumbent = Solution {
+            centroids: vec![0.0, 50.0],
+            objective: 123.0,
+            degenerate: vec![],
+        };
+        let mut rng = Rng::new(7);
+        let mut counters = Counters::new();
+        super::remediate(&cfg, &res, 1, 2, &mut incumbent, &mut rng, &mut counters);
+        assert!(incumbent.objective.is_infinite(), "incumbency must be reset");
+        assert!(
+            (incumbent.centroids[1] - 50.0).abs() > 1.0,
+            "worst centroid must move off 50: {:?}",
+            incumbent.centroids
+        );
+        assert!(
+            pts.iter().any(|&p| (p - incumbent.centroids[1]).abs() < 1e-6),
+            "replacement must be a reservoir point: {:?}",
+            incumbent.centroids
+        );
+        assert!((incumbent.centroids[0]).abs() < 1.0, "healthy centroid untouched");
+    }
+
+    #[test]
+    fn drift_action_none_never_remediates() {
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(60))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(9);
+        let engine = StreamingBigMeans::new(cfg, 2).with_validation(5, 512);
+        let q = ChunkQueue::new(4);
+        moved_stream(Arc::clone(&q), 23);
+        let r = engine.run(&q);
+        assert!(r.drift_events >= 1);
+        assert_eq!(r.remediations, 0);
     }
 
     #[test]

@@ -136,89 +136,7 @@ pub fn save_bmx(ds: &Dataset, path: &Path) -> Result<()> {
 }
 
 #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-mod sys {
-    //! Raw `mmap` FFI — the process links libc anyway, so no crate needed.
-    use std::ffi::c_void;
-    use std::os::raw::c_int;
-
-    extern "C" {
-        pub fn mmap(
-            addr: *mut c_void,
-            len: usize,
-            prot: c_int,
-            flags: c_int,
-            fd: c_int,
-            offset: i64,
-        ) -> *mut c_void;
-        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
-    }
-
-    pub const PROT_READ: c_int = 1;
-    pub const MAP_PRIVATE: c_int = 2;
-}
-
-/// An owned read-only memory mapping of a whole file.
-#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-struct MmapRegion {
-    ptr: *mut std::ffi::c_void,
-    len: usize,
-}
-
-// Safety: the region is read-only for its whole lifetime and unmapped only
-// on drop, so shared references from any thread are fine.
-#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-unsafe impl Send for MmapRegion {}
-#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-unsafe impl Sync for MmapRegion {}
-
-#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-impl MmapRegion {
-    fn map(file: &File, len: usize) -> Option<MmapRegion> {
-        use std::os::unix::io::AsRawFd;
-        if len == 0 {
-            return None;
-        }
-        let ptr = unsafe {
-            sys::mmap(
-                std::ptr::null_mut(),
-                len,
-                sys::PROT_READ,
-                sys::MAP_PRIVATE,
-                file.as_raw_fd(),
-                0,
-            )
-        };
-        if ptr as isize == -1 || ptr.is_null() {
-            None
-        } else {
-            Some(MmapRegion { ptr, len })
-        }
-    }
-
-    fn bytes(&self) -> &[u8] {
-        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
-    }
-
-    /// Forward an access-pattern hint to `madvise` for the whole mapping.
-    fn advise(&self, pattern: AccessPattern) {
-        use crate::util::mem::{madvise, Advice};
-        let advice = match pattern {
-            AccessPattern::Random => Advice::Random,
-            AccessPattern::Sequential => Advice::Sequential,
-            AccessPattern::Normal => Advice::Normal,
-        };
-        madvise(self.ptr as *mut u8, self.len, advice);
-    }
-}
-
-#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-impl Drop for MmapRegion {
-    fn drop(&mut self) {
-        unsafe {
-            sys::munmap(self.ptr, self.len);
-        }
-    }
-}
+use crate::util::mem::MmapRegion;
 
 enum Backing {
     /// Memory-mapped file; the payload is reinterpreted as `&[f32]` in
@@ -264,6 +182,12 @@ fn read_header(file: &mut File, path: &Path) -> Result<BmxHeader> {
         (BMX_HEADER_LEN_V2, true)
     } else if hdr[0..4] == BMX_MAGIC {
         (BMX_HEADER_LEN, false)
+    } else if hdr[0..4] == crate::store::format::BMX3_MAGIC {
+        bail!(
+            "{}: .bmx v3 block-store file — open it through the block backend \
+             (`--backend block`) / `crate::store::BlockStore`, not the legacy reader",
+            path.display()
+        );
     } else {
         bail!("{}: not a .bmx file (bad magic)", path.display());
     };
@@ -362,6 +286,37 @@ fn verify_crc_pread(file: &mut File, hdr: &BmxHeader, path: &Path) -> Result<()>
     check_crc(expected, crc.finalize(), path)
 }
 
+/// Explicit offline integrity check of a v2 file: CRC the whole payload
+/// through buffered reads **regardless** of [`BMX_VERIFY_EAGER_LIMIT`]
+/// (this is the scan the open-time note defers to). Returns the payload
+/// byte count. v1 files fail (nothing to verify against); v3 files are
+/// verified per block by the store instead.
+pub fn verify_bmx(path: &Path) -> Result<u64> {
+    let mut file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let hdr = read_header(&mut file, path)?;
+    let Some(expected) = hdr.checksum else {
+        bail!(
+            "{}: legacy v1 .bmx carries no checksum — reconvert (`bigmeans convert`) \
+             to get integrity checking",
+            path.display()
+        );
+    };
+    let payload = hdr.need - hdr.header_len as u64;
+    file.seek(SeekFrom::Start(hdr.header_len as u64))?;
+    let mut crc = Crc32::new();
+    let mut buf = vec![0u8; (1usize << 20).min(payload.max(1) as usize)];
+    let mut left = payload;
+    while left > 0 {
+        let take = buf.len().min(left as usize);
+        file.read_exact(&mut buf[..take])
+            .with_context(|| format!("read bmx payload of {}", path.display()))?;
+        crc.update(&buf[..take]);
+        left -= take as u64;
+    }
+    check_crc(expected, crc.finalize(), path)?;
+    Ok(payload)
+}
+
 /// Warn (once per open) when a legacy v1 file without a checksum loads.
 fn warn_v1(hdr: &BmxHeader, path: &Path) {
     if hdr.checksum.is_none() {
@@ -391,14 +346,14 @@ impl BmxSource {
                     let expected = hdr.checksum.expect("should_verify requires a checksum");
                     // One sequential pass over the mapping, then drop back
                     // to the random-access default for chunk sampling.
-                    region.advise(AccessPattern::Sequential);
+                    region.advise(AccessPattern::Sequential.advice());
                     let payload =
                         &region.bytes()[hdr.header_len..hdr.need as usize];
                     let computed = crc32(payload);
-                    region.advise(AccessPattern::Random);
+                    region.advise(AccessPattern::Random.advice());
                     check_crc(expected, computed, path)?;
                 } else {
-                    region.advise(AccessPattern::Random);
+                    region.advise(AccessPattern::Random.advice());
                 }
                 return Ok(BmxSource {
                     name,
@@ -541,7 +496,7 @@ impl DataSource for BmxSource {
     fn advise(&self, pattern: AccessPattern) {
         match &self.backing {
             #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
-            Backing::Mmap(region) => region.advise(pattern),
+            Backing::Mmap(region) => region.advise(pattern.advice()),
             Backing::Pread(_) => {}
         }
     }

@@ -1,15 +1,19 @@
-//! Dataset conversion: stream CSV into the out-of-core `.bmx` format.
+//! Dataset conversion: stream CSV into the out-of-core `.bmx` formats.
 //!
 //! The conversion is O(block) in memory and reuses [`CsvSource`] as its
 //! reader, so the values written to `.bmx` are — by construction — exactly
 //! the values the buffered CSV backend would serve. Convert once, then
-//! cluster the `.bmx` file through the mmap backend any number of times.
+//! cluster the `.bmx` file through the mmap/block backend any number of
+//! times. [`csv_to_block_store`] writes the current chunked v3 format
+//! (per-block CRC, dtype, codec — see [`crate::store`]); [`csv_to_bmx`]
+//! keeps producing legacy v2 flat files.
 
 use std::path::Path;
 
 use crate::data::bmx::BmxWriter;
 use crate::data::csv_source::CsvSource;
 use crate::data::source::DataSource;
+use crate::store::{copy_to_store, StoreOptions};
 use crate::util::error::Result;
 
 /// Rows converted per block (bounds memory at `block × n` floats).
@@ -34,6 +38,14 @@ pub fn csv_to_bmx(csv: &Path, bmx: &Path) -> Result<(usize, usize)> {
     let rows = writer.finish()?;
     debug_assert_eq!(rows as usize, m);
     Ok((m, n))
+}
+
+/// Convert a numeric CSV into the chunked `.bmx` v3 block store. Returns
+/// `(m, n)`. Same validation and memory profile as [`csv_to_bmx`]; the
+/// block geometry, dtype, and codec come from `opts`.
+pub fn csv_to_block_store(csv: &Path, bmx: &Path, opts: StoreOptions) -> Result<(usize, usize)> {
+    let src = CsvSource::open(csv)?;
+    copy_to_store(&src, bmx, opts)
 }
 
 #[cfg(test)]
@@ -75,6 +87,33 @@ mod tests {
         assert!(csv_to_bmx(&csv, &bmx).is_err());
         let _ = std::fs::remove_file(&csv);
         let _ = std::fs::remove_file(&bmx);
+    }
+
+    #[test]
+    fn csv_to_block_store_matches_v2_values() {
+        use crate::data::loader::open_source;
+        use crate::data::source::DataBackend;
+        let csv = tmp("v3.csv");
+        let v2 = tmp("v2.bmx");
+        let v3 = tmp("v3.bmx");
+        let mut text = String::new();
+        for i in 0..300 {
+            text.push_str(&format!("{},{},{}\n", i, i * 2, 300 - i));
+        }
+        std::fs::write(&csv, text).unwrap();
+        assert_eq!(csv_to_bmx(&csv, &v2).unwrap(), (300, 3));
+        let opts = StoreOptions { block_rows: 64, ..StoreOptions::default() };
+        assert_eq!(csv_to_block_store(&csv, &v3, opts).unwrap(), (300, 3));
+        let a = open_source(&v2, DataBackend::Buffered).unwrap();
+        let b = open_source(&v3, DataBackend::Block).unwrap();
+        let mut va = vec![0f32; 300 * 3];
+        let mut vb = vec![0f32; 300 * 3];
+        a.read_rows(0, &mut va);
+        b.read_rows(0, &mut vb);
+        assert_eq!(va, vb);
+        let _ = std::fs::remove_file(&csv);
+        let _ = std::fs::remove_file(&v2);
+        let _ = std::fs::remove_file(&v3);
     }
 
     #[test]

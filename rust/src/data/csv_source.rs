@@ -11,21 +11,99 @@
 //!
 //! By default every data row's byte offset is recorded (8 bytes per row).
 //! [`CsvSource::open_with_stride`] records only every `stride`-th offset —
-//! an *anchor* — shrinking the in-RAM index by the stride factor: a
-//! billion-row CSV indexes in 8 GB at stride 1 but 256 MB at stride 32.
-//! The trade is seek granularity: accessing row `i` seeks to anchor
-//! `⌊i/stride⌋` and scans forward at most `stride − 1` rows inside the
-//! window. Values served are identical for every stride (asserted by the
-//! unit tests below); only the I/O pattern changes.
+//! an *anchor* — shrinking the index by the stride factor: a billion-row
+//! CSV indexes in 8 GB at stride 1 but 256 MB at stride 32. The trade is
+//! seek granularity: accessing row `i` seeks to anchor `⌊i/stride⌋` and
+//! scans forward at most `stride − 1` rows inside the window. Values
+//! served are identical for every stride (asserted by the unit tests
+//! below); only the I/O pattern changes.
+//!
+//! ## The `.idx` sidecar (fully on-disk index)
+//!
+//! The indexing pass is O(file) — wasteful to repeat on every open, and
+//! the in-RAM anchors are the residual memory footprint of this backend.
+//! Both are closed by a persistent sidecar: the first open writes the
+//! anchor table to `<file>.csv.idx` (atomically, best-effort — a
+//! read-only directory just skips persistence), and later opens validate
+//! the sidecar against the CSV's byte length + mtime + requested stride
+//! and, on match, **memory-map it** instead of rescanning — an O(index)
+//! reopen with zero resident anchor memory. Any mismatch (CSV rewritten,
+//! different stride, corrupt sidecar) silently falls back to a fresh scan
+//! that rewrites the sidecar. Caveat shared with every stamp-validated
+//! cache: an edit that preserves both byte length and mtime is
+//! undetectable.
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, Seek, SeekFrom};
-use std::path::Path;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 use crate::bail;
 use crate::data::source::DataSource;
 use crate::util::error::{Context, Result};
+use crate::util::hash::crc32;
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+use crate::util::mem::MmapRegion;
+
+/// Sidecar magic: "BM" + CSV-index + format version 1.
+const IDX_MAGIC: [u8; 8] = *b"BMCSIDX1";
+
+/// Sidecar header bytes before the anchor table (keeps anchors 8-aligned).
+const IDX_HEADER_LEN: usize = 64;
+
+/// Identity stamp of a CSV file: the sidecar is valid only while both the
+/// byte length and the mtime it recorded still match.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct CsvStamp {
+    len: u64,
+    mtime_secs: u64,
+    mtime_nanos: u32,
+}
+
+impl CsvStamp {
+    fn of(path: &Path) -> Result<CsvStamp> {
+        let meta = std::fs::metadata(path)
+            .with_context(|| format!("stat {}", path.display()))?;
+        let (mtime_secs, mtime_nanos) = meta
+            .modified()
+            .ok()
+            .and_then(|t| t.duration_since(std::time::UNIX_EPOCH).ok())
+            .map(|d| (d.as_secs(), d.subsec_nanos()))
+            .unwrap_or((0, 0));
+        Ok(CsvStamp { len: meta.len(), mtime_secs, mtime_nanos })
+    }
+}
+
+/// Where the anchor table lives: scanned into RAM, or served from the
+/// mmap'd sidecar (zero resident anchor memory).
+enum AnchorStore {
+    Ram(Vec<u64>),
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    Mapped { region: MmapRegion, count: usize },
+}
+
+impl AnchorStore {
+    fn count(&self) -> usize {
+        match self {
+            AnchorStore::Ram(v) => v.len(),
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            AnchorStore::Mapped { count, .. } => *count,
+        }
+    }
+
+    fn get(&self, i: usize) -> u64 {
+        match self {
+            AnchorStore::Ram(v) => v[i],
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            AnchorStore::Mapped { region, .. } => {
+                let at = IDX_HEADER_LEN + i * 8;
+                let bytes = &region.bytes()[at..at + 8];
+                u64::from_le_bytes(bytes.try_into().unwrap())
+            }
+        }
+    }
+}
 
 /// A numeric CSV file exposed as an out-of-core [`DataSource`].
 pub struct CsvSource {
@@ -33,11 +111,137 @@ pub struct CsvSource {
     n: usize,
     /// Total data rows.
     m: usize,
-    /// Index stride: `anchors[a]` is the byte offset of data row
+    /// Index stride: anchor `a` is the byte offset of data row
     /// `a * stride`.
     stride: usize,
-    anchors: Vec<u64>,
+    anchors: AnchorStore,
+    /// Whether the index came from a valid `.idx` sidecar (vs a scan).
+    from_sidecar: bool,
     file: Mutex<File>,
+}
+
+/// The sidecar path for a CSV: `data.csv` → `data.csv.idx`.
+pub fn sidecar_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".idx");
+    PathBuf::from(os)
+}
+
+fn encode_sidecar_header(
+    stamp: &CsvStamp,
+    n: usize,
+    m: usize,
+    stride: usize,
+    count: usize,
+    anchors_crc: u32,
+) -> [u8; IDX_HEADER_LEN] {
+    let mut hdr = [0u8; IDX_HEADER_LEN];
+    hdr[0..8].copy_from_slice(&IDX_MAGIC);
+    hdr[8..16].copy_from_slice(&stamp.len.to_le_bytes());
+    hdr[16..24].copy_from_slice(&stamp.mtime_secs.to_le_bytes());
+    hdr[24..28].copy_from_slice(&stamp.mtime_nanos.to_le_bytes());
+    hdr[28..32].copy_from_slice(&(n as u32).to_le_bytes());
+    hdr[32..40].copy_from_slice(&(m as u64).to_le_bytes());
+    hdr[40..48].copy_from_slice(&(stride as u64).to_le_bytes());
+    hdr[48..56].copy_from_slice(&(count as u64).to_le_bytes());
+    hdr[56..60].copy_from_slice(&anchors_crc.to_le_bytes());
+    hdr
+}
+
+/// Best-effort persist of a freshly scanned index (atomic via tmp +
+/// rename). Failure (read-only directory, quota) is silently ignored —
+/// the in-RAM anchors stay authoritative for this open.
+fn store_sidecar(
+    idx_path: &Path,
+    stamp: &CsvStamp,
+    n: usize,
+    m: usize,
+    stride: usize,
+    anchors: &[u64],
+) {
+    let mut payload = Vec::with_capacity(anchors.len() * 8);
+    for &a in anchors {
+        payload.extend_from_slice(&a.to_le_bytes());
+    }
+    let hdr = encode_sidecar_header(stamp, n, m, stride, anchors.len(), crc32(&payload));
+    let tmp = {
+        let mut os = idx_path.as_os_str().to_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    };
+    let write = || -> std::io::Result<()> {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&hdr)?;
+        f.write_all(&payload)?;
+        f.flush()?;
+        std::fs::rename(&tmp, idx_path)
+    };
+    if write().is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+/// Try to satisfy an open from the sidecar. `None` on any mismatch —
+/// missing file, stale stamp, different stride, bad checksum — in which
+/// case the caller rescans.
+fn load_sidecar(
+    idx_path: &Path,
+    stamp: &CsvStamp,
+    stride: usize,
+) -> Option<(usize, usize, AnchorStore)> {
+    let mut f = File::open(idx_path).ok()?;
+    let mut hdr = [0u8; IDX_HEADER_LEN];
+    f.read_exact(&mut hdr).ok()?;
+    if hdr[0..8] != IDX_MAGIC {
+        return None;
+    }
+    let csv_len = u64::from_le_bytes(hdr[8..16].try_into().unwrap());
+    let mtime_secs = u64::from_le_bytes(hdr[16..24].try_into().unwrap());
+    let mtime_nanos = u32::from_le_bytes(hdr[24..28].try_into().unwrap());
+    let n = u32::from_le_bytes(hdr[28..32].try_into().unwrap()) as usize;
+    let m = u64::from_le_bytes(hdr[32..40].try_into().unwrap());
+    let idx_stride = u64::from_le_bytes(hdr[40..48].try_into().unwrap());
+    let count = u64::from_le_bytes(hdr[48..56].try_into().unwrap());
+    let anchors_crc = u32::from_le_bytes(hdr[56..60].try_into().unwrap());
+    let fresh = csv_len == stamp.len
+        && mtime_secs == stamp.mtime_secs
+        && mtime_nanos == stamp.mtime_nanos;
+    if !fresh || idx_stride != stride as u64 || n == 0 || m == 0 {
+        return None;
+    }
+    if m > usize::MAX as u64 / 2 || count != m.div_ceil(idx_stride.max(1)) {
+        return None;
+    }
+    let payload_len = count.checked_mul(8)?;
+    let expect_len = (IDX_HEADER_LEN as u64).checked_add(payload_len)?;
+    if f.metadata().ok()?.len() != expect_len {
+        return None;
+    }
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    {
+        if let Some(region) = MmapRegion::map(&f, expect_len as usize) {
+            if crc32(&region.bytes()[IDX_HEADER_LEN..]) != anchors_crc {
+                return None;
+            }
+            return Some((
+                m as usize,
+                n,
+                AnchorStore::Mapped { region, count: count as usize },
+            ));
+        }
+    }
+    // Portable fallback: read the anchors into RAM (still skips the
+    // O(file) CSV scan).
+    let mut payload = vec![0u8; payload_len as usize];
+    f.read_exact(&mut payload).ok()?;
+    if crc32(&payload) != anchors_crc {
+        return None;
+    }
+    let anchors: Vec<u64> = payload
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    Some((m as usize, n, AnchorStore::Ram(anchors)))
 }
 
 impl CsvSource {
@@ -46,15 +250,36 @@ impl CsvSource {
         Self::open_with_stride(path, 1)
     }
 
-    /// Index `path`, recording one offset per `stride` data rows. One
-    /// streaming pass validates every row (skipping a header line whose
-    /// first field is not numeric, and blank lines; rejecting ragged rows
-    /// and non-numeric fields) — after `open` succeeds, every indexed row
+    /// Index `path`, recording one offset per `stride` data rows. A valid
+    /// `.idx` sidecar (see the module docs) satisfies the open in
+    /// O(index); otherwise one streaming pass validates every row
+    /// (skipping a header line whose first field is not numeric, and
+    /// blank lines; rejecting ragged rows and non-numeric fields) and the
+    /// sidecar is (re)written. After `open` succeeds, every indexed row
     /// is known to parse, so reads cannot fail on content (only on the
     /// file mutating underneath, which panics).
     pub fn open_with_stride(path: &Path, stride: usize) -> Result<CsvSource> {
         if stride == 0 {
             bail!("csv index stride must be ≥ 1");
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "csv".into());
+        let stamp = CsvStamp::of(path)?;
+        let idx_path = sidecar_path(path);
+        if let Some((m, n, anchors)) = load_sidecar(&idx_path, &stamp, stride) {
+            let file = File::open(path)
+                .with_context(|| format!("open {}", path.display()))?;
+            return Ok(CsvSource {
+                name,
+                n,
+                m,
+                stride,
+                anchors,
+                from_sidecar: true,
+                file: Mutex::new(file),
+            });
         }
         let file = File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
@@ -108,12 +333,17 @@ impl CsvSource {
         if m == 0 {
             bail!("{}: no data rows", path.display());
         }
-        let name = path
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "csv".into());
+        store_sidecar(&idx_path, &stamp, n, m, stride, &anchors);
         let file = reader.into_inner();
-        Ok(CsvSource { name, n, m, stride, anchors, file: Mutex::new(file) })
+        Ok(CsvSource {
+            name,
+            n,
+            m,
+            stride,
+            anchors: AnchorStore::Ram(anchors),
+            from_sidecar: false,
+            file: Mutex::new(file),
+        })
     }
 
     /// Configured index stride.
@@ -121,9 +351,15 @@ impl CsvSource {
         self.stride
     }
 
-    /// Offsets held in RAM (≈ `m / stride`; what the stride shrinks).
+    /// Offsets the index holds (≈ `m / stride`; what the stride shrinks).
     pub fn indexed_offsets(&self) -> usize {
-        self.anchors.len()
+        self.anchors.count()
+    }
+
+    /// Whether this open was satisfied from the `.idx` sidecar (vs a full
+    /// scan).
+    pub fn index_from_sidecar(&self) -> bool {
+        self.from_sidecar
     }
 
     fn parse_row(&self, text: &str, row: usize, out: &mut [f32]) {
@@ -161,7 +397,7 @@ impl CsvSource {
         let anchor = row / self.stride;
         let mut skip = row - anchor * self.stride;
         reader
-            .seek(SeekFrom::Start(self.anchors[anchor]))
+            .seek(SeekFrom::Start(self.anchors.get(anchor)))
             .unwrap_or_else(|e| panic!("csv '{}': seek failed: {e}", self.name));
         let mut filled = 0usize;
         while filled < count {
@@ -245,6 +481,11 @@ mod tests {
         dir.join(format!("{}_{name}", std::process::id()))
     }
 
+    fn cleanup(p: &Path) {
+        let _ = std::fs::remove_file(sidecar_path(p));
+        let _ = std::fs::remove_file(p);
+    }
+
     #[test]
     fn indexes_with_header_and_blank_lines() {
         let p = tmp("hdr.csv");
@@ -256,7 +497,7 @@ mod tests {
         let mut out = vec![0f32; 6];
         src.read_rows(0, &mut out);
         assert_eq!(out, vec![1.5, 2.0, 3.0, 4.25, -1.0, 0.0]);
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
     }
 
     #[test]
@@ -273,7 +514,7 @@ mod tests {
         let mut out = vec![0f32; idx.len() * 3];
         src.sample_rows(&idx, &mut out);
         assert_eq!(out, full.gather(&idx));
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
     }
 
     #[test]
@@ -283,7 +524,7 @@ mod tests {
         assert!(CsvSource::open(&p).is_err());
         std::fs::write(&p, "only,header\n").unwrap();
         assert!(CsvSource::open(&p).is_err());
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
     }
 
     #[test]
@@ -295,7 +536,7 @@ mod tests {
         let mut out = vec![0f32; 4];
         src.read_rows(0, &mut out);
         assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]);
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
     }
 
     #[test]
@@ -303,7 +544,7 @@ mod tests {
         let p = tmp("zstride.csv");
         std::fs::write(&p, "1,2\n").unwrap();
         assert!(CsvSource::open_with_stride(&p, 0).is_err());
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
     }
 
     #[test]
@@ -350,6 +591,73 @@ mod tests {
             sparse.sample_rows(&idx, &mut b);
             assert_eq!(a, b, "stride {stride}: gather");
         }
-        let _ = std::fs::remove_file(&p);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn sidecar_written_once_and_reused_on_reopen() {
+        let p = tmp("sidecar.csv");
+        let mut text = String::new();
+        for i in 0..200 {
+            text.push_str(&format!("{},{}\n", i, 200 - i));
+        }
+        std::fs::write(&p, text).unwrap();
+        let first = CsvSource::open_with_stride(&p, 4).unwrap();
+        assert!(!first.index_from_sidecar(), "first open must scan");
+        assert!(sidecar_path(&p).exists(), "scan must persist the sidecar");
+        let second = CsvSource::open_with_stride(&p, 4).unwrap();
+        assert!(second.index_from_sidecar(), "reopen must use the sidecar");
+        assert_eq!(second.m(), 200);
+        assert_eq!(second.n(), 2);
+        assert_eq!(second.indexed_offsets(), 50);
+        // Identical values through both index paths.
+        let idx = [0usize, 3, 4, 7, 199, 100];
+        let mut a = vec![0f32; idx.len() * 2];
+        let mut b = vec![0f32; idx.len() * 2];
+        first.sample_rows(&idx, &mut a);
+        second.sample_rows(&idx, &mut b);
+        assert_eq!(a, b);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn sidecar_invalidated_by_csv_change_and_stride_mismatch() {
+        let p = tmp("stale.csv");
+        std::fs::write(&p, "1,2\n3,4\n5,6\n").unwrap();
+        let _ = CsvSource::open(&p).unwrap();
+        assert!(CsvSource::open(&p).unwrap().index_from_sidecar());
+        // A different stride cannot reuse the stride-1 sidecar …
+        let strided = CsvSource::open_with_stride(&p, 2).unwrap();
+        assert!(!strided.index_from_sidecar());
+        // … and rewriting the CSV (new length) invalidates it again.
+        std::fs::write(&p, "10,20\n30,40\n50,60\n70,80\n").unwrap();
+        let reopened = CsvSource::open_with_stride(&p, 2).unwrap();
+        assert!(!reopened.index_from_sidecar());
+        assert_eq!(reopened.m(), 4);
+        let mut out = vec![0f32; 2];
+        reopened.read_rows(3, &mut out);
+        assert_eq!(out, vec![70.0, 80.0]);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn corrupt_sidecar_falls_back_to_scan() {
+        let p = tmp("corruptidx.csv");
+        std::fs::write(&p, "1,2\n3,4\n5,6\n").unwrap();
+        let _ = CsvSource::open(&p).unwrap();
+        let idx = sidecar_path(&p);
+        // Flip a byte inside the anchor table: checksum mismatch → rescan.
+        let mut bytes = std::fs::read(&idx).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x55;
+        std::fs::write(&idx, &bytes).unwrap();
+        let src = CsvSource::open(&p).unwrap();
+        assert!(!src.index_from_sidecar());
+        let mut out = vec![0f32; 6];
+        src.read_rows(0, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // The rescan healed the sidecar.
+        assert!(CsvSource::open(&p).unwrap().index_from_sidecar());
+        cleanup(&p);
     }
 }

@@ -102,17 +102,37 @@ pub fn load_fbin(path: &Path) -> Result<Dataset> {
     Ok(Dataset::from_vec(name, data, m, n))
 }
 
-/// Materialize a `.bmx` file into an in-memory [`Dataset`].
+/// Format version of a `.bmx` file (1, 2, or 3), sniffed from the magic.
+pub fn bmx_version(path: &Path) -> Result<u8> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)
+        .with_context(|| format!("read bmx magic of {}", path.display()))?;
+    match &magic {
+        b"BMX1" => Ok(1),
+        b"BMX2" => Ok(2),
+        b"BMX3" => Ok(3),
+        _ => bail!("{}: not a .bmx file (bad magic)", path.display()),
+    }
+}
+
+/// Materialize a `.bmx` file (any version) into an in-memory [`Dataset`].
 pub fn load_bmx(path: &Path) -> Result<Dataset> {
     use crate::data::bmx::BmxSource;
     use crate::data::source::DataSource;
-    let src = BmxSource::open(path)?;
+    use crate::store::BlockStore;
+    let src: Box<dyn DataSource> = if bmx_version(path)? == 3 {
+        Box::new(BlockStore::open(path)?)
+    } else {
+        Box::new(BmxSource::open(path)?)
+    };
     let (m, n) = (src.m(), src.n());
     let mut data = vec![0f32; m * n];
     if m > 0 {
         src.read_rows(0, &mut data);
     }
-    Ok(Dataset::from_vec(DataSource::name(&src).to_string(), data, m, n))
+    Ok(Dataset::from_vec(src.name().to_string(), data, m, n))
 }
 
 /// Load by extension: `.csv`, `.fbin` or `.bmx`.
@@ -149,20 +169,43 @@ pub fn open_source_with(
     use crate::data::bmx::BmxSource;
     use crate::data::csv_source::CsvSource;
     use crate::data::source::DataBackend;
+    use crate::store::BlockStore;
     let ext = path.extension().and_then(|e| e.to_str());
     match backend {
         DataBackend::InMemory => Ok(Box::new(load(path)?)),
         DataBackend::Mmap => match ext {
-            Some("bmx") => Ok(Box::new(BmxSource::open(path)?)),
+            // The magic decides which reader serves the file: v3 block
+            // stores and legacy v1/v2 flat files share the extension.
+            Some("bmx") => match bmx_version(path)? {
+                3 => Ok(Box::new(BlockStore::open(path)?)),
+                _ => Ok(Box::new(BmxSource::open(path)?)),
+            },
             other => bail!(
                 "mmap backend needs a .bmx file, got {:?} (run `bigmeans convert` first)",
                 other
             ),
         },
         DataBackend::Buffered => match ext {
-            Some("bmx") => Ok(Box::new(BmxSource::open_buffered(path)?)),
+            Some("bmx") => match bmx_version(path)? {
+                3 => Ok(Box::new(BlockStore::open_buffered(path)?)),
+                _ => Ok(Box::new(BmxSource::open_buffered(path)?)),
+            },
             Some("csv") => Ok(Box::new(CsvSource::open_with_stride(path, index_stride.max(1))?)),
             other => bail!("buffered backend supports .bmx and .csv, got {:?}", other),
+        },
+        DataBackend::Block => match ext {
+            Some("bmx") => match bmx_version(path)? {
+                3 => Ok(Box::new(BlockStore::open(path)?)),
+                v => bail!(
+                    "{}: legacy v{v} .bmx — the block backend needs the chunked v3 \
+                     format (rewrite with `bigmeans convert` or `bigmeans generate`)",
+                    path.display()
+                ),
+            },
+            other => bail!(
+                "block backend needs a .bmx v3 file, got {:?} (run `bigmeans convert` first)",
+                other
+            ),
         },
     }
 }

@@ -10,40 +10,48 @@
 //! pass and the streaming producer), and random-index gathers
 //! (`sample_rows`, used by chunk sampling). Backends:
 //!
-//! | backend                | module         | residency                    |
-//! |------------------------|----------------|------------------------------|
-//! | [`Dataset`]            | [`dataset`]    | fully in RAM                 |
-//! | [`BmxSource`]          | [`bmx`]        | mmap / buffered pread        |
-//! | [`CsvSource`]          | [`csv_source`] | row index only, parse-on-read|
+//! | backend                        | module              | residency                    |
+//! |--------------------------------|---------------------|------------------------------|
+//! | [`Dataset`]                    | [`dataset`]         | fully in RAM                 |
+//! | [`BmxSource`]                  | [`bmx`]             | mmap / buffered pread        |
+//! | [`crate::store::BlockStore`]   | [`crate::store`]    | per-block decode + LRU cache |
+//! | [`CsvSource`]                  | [`csv_source`]      | row index only, parse-on-read|
 //!
 //! All backends are deterministic and value-identical for the same
 //! underlying data: a seeded Big-means run produces bit-for-bit the same
 //! objective whichever backend serves the bytes (asserted in
-//! `tests/integration_out_of_core.rs`).
+//! `tests/integration_out_of_core.rs` and `tests/store_v3.rs`).
 //!
-//! # The `.bmx` on-disk format
+//! # The `.bmx` on-disk formats
 //!
-//! `.bmx` is the crate's out-of-core native format — a flat little-endian
-//! f32 matrix behind a small header (version 2, 32 bytes):
+//! The **current** `.bmx` format is version 3 — a chunked block store with
+//! per-block CRC-32 integrity, dtype variants (f32/f64/f16), and optional
+//! dependency-free codecs; its layout and layering are documented in
+//! [`crate::store`]. [`loader::open_source`] sniffs the magic
+//! (`BMX1`/`BMX2`/`BMX3`) and routes each file to the right reader, so
+//! legacy files keep working.
+//!
+//! Versions 1/2 are flat little-endian f32 matrices behind a small header
+//! (v2, 32 bytes):
 //!
 //! ```text
 //! offset  size   field
 //! 0       4      magic b"BMX2" ("BMX" + ASCII version byte)
 //! 4       8      m (u64, number of rows)
 //! 12      4      n (u32, features per row)
-//! 16      4      CRC-32 of the payload (validated on open)
+//! 16      4      CRC-32 of the payload (validated on open, ≤ 4 GiB)
 //! 20      12     reserved
 //! 32      m·n·4  row-major f32 payload
 //! ```
 //!
-//! The header size keeps the payload 4-byte aligned so the whole file can
-//! be memory-mapped and read in place; legacy `BMX1` files (16-byte
-//! header, no checksum) still load with a warning. Produce `.bmx` files
-//! with [`convert::csv_to_bmx`] (blockwise through [`CsvSource`], O(block)
-//! memory plus the 8-byte/row offset index — shrinkable by
-//! [`CsvSource::open_with_stride`]), [`bmx::save_bmx`], or incrementally
-//! with [`bmx::BmxWriter`]; the CLI exposes
-//! `bigmeans convert <in.csv> <out.bmx>`.
+//! The v2 header size keeps the payload 4-byte aligned so the whole file
+//! can be memory-mapped and read in place; legacy `BMX1` files (16-byte
+//! header, no checksum) still load with a warning. Produce v3 files with
+//! [`convert::csv_to_block_store`] / [`crate::store::copy_to_store`] /
+//! [`crate::store::BlockWriter`], and legacy v2 with
+//! [`convert::csv_to_bmx`], [`bmx::save_bmx`], or [`bmx::BmxWriter`]; the
+//! CLI exposes `bigmeans convert <in.csv> <out.bmx>` (v3 by default,
+//! `--format v2` for the flat file) and `bigmeans verify <file.bmx>`.
 
 pub mod bmx;
 pub mod catalog;
@@ -57,9 +65,9 @@ pub mod synth;
 
 pub use bmx::{save_bmx, BmxSource, BmxWriter};
 pub use catalog::{catalog, find, CatalogEntry, PAPER_K_GRID};
-pub use convert::csv_to_bmx;
+pub use convert::{csv_to_block_store, csv_to_bmx};
 pub use csv_source::CsvSource;
 pub use dataset::Dataset;
-pub use loader::{open_source, open_source_with};
+pub use loader::{bmx_version, open_source, open_source_with};
 pub use source::{AccessPattern, DataBackend, DataSource};
 pub use synth::Synth;

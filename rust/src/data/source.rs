@@ -35,6 +35,19 @@ pub enum AccessPattern {
     Normal,
 }
 
+impl AccessPattern {
+    /// The `madvise` advice this pattern maps to (used by every mapped
+    /// backend — `.bmx` v1/v2 and the v3 block store).
+    pub fn advice(self) -> crate::util::mem::Advice {
+        use crate::util::mem::Advice;
+        match self {
+            AccessPattern::Random => Advice::Random,
+            AccessPattern::Sequential => Advice::Sequential,
+            AccessPattern::Normal => Advice::Normal,
+        }
+    }
+}
+
 /// How dataset *files* are accessed (see [`crate::data::loader::open_source`],
 /// which the CLI threads `BigMeansConfig::backend` through).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,6 +59,11 @@ pub enum DataBackend {
     /// Out-of-core: buffered positioned reads (`.bmx`) or a row-indexed
     /// parse-on-read view (`.csv`) — no mmap, bounded memory.
     Buffered,
+    /// Out-of-core: the chunked `.bmx` v3 block store
+    /// ([`crate::store::BlockStore`]) — per-block integrity, dtype/codec
+    /// decode on read, LRU block cache. Prefers mmap, falls back to
+    /// buffered positioned reads.
+    Block,
 }
 
 /// Read-only access to an `(m, n)` row-major f32 dataset, possibly larger

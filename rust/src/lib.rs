@@ -60,6 +60,7 @@ pub mod data;
 pub mod kernels;
 pub mod metrics;
 pub mod runtime;
+pub mod store;
 pub mod tuner;
 pub mod util;
 
@@ -70,3 +71,4 @@ pub use data::bmx::BmxSource;
 pub use data::csv_source::CsvSource;
 pub use data::dataset::Dataset;
 pub use data::source::DataSource;
+pub use store::{BlockStore, BlockWriter, Codec, Dtype, StoreOptions};

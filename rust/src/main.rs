@@ -2,8 +2,11 @@
 //!
 //! Subcommands:
 //! * `cluster`  — run Big-means on a dataset (catalog name or csv/fbin/bmx
-//!   file; `--backend mmap|buffered` clusters files out-of-core)
-//! * `convert`  — stream a CSV into the out-of-core `.bmx` format
+//!   file; `--backend mmap|buffered|block` clusters files out-of-core)
+//! * `convert`  — stream a CSV into the `.bmx` block store (v3; `--format
+//!   v2` writes the legacy flat file)
+//! * `verify`   — scan a `.bmx` file's checksums (v3: all blocks in
+//!   parallel, naming the first corrupt block)
 //! * `table`    — regenerate a paper table for one dataset
 //! * `summary`  — regenerate Tables 3–4 across the catalog
 //! * `generate` — write a synthetic catalog dataset to .fbin/.bmx
@@ -19,13 +22,14 @@ use bigmeans::coordinator::config::{
     BigMeansConfig, DataBackend, Engine, KernelEngineKind, ParallelMode, ReinitStrategy,
     StopCondition,
 };
-use bigmeans::coordinator::{produce_from_source, ChunkQueue, StreamingBigMeans};
+use bigmeans::coordinator::{produce_from_source, ChunkQueue, DriftAction, StreamingBigMeans};
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
 use bigmeans::runtime;
+use bigmeans::store::copy_to_store;
 use bigmeans::tuner::{self, ControllerKind, TunerConfig};
 use bigmeans::util::cli::Args;
 use bigmeans::util::json::{num, obj, s as jstr, Json};
-use bigmeans::{BigMeans, BigMeansResult, DataSource};
+use bigmeans::{BigMeans, BigMeansResult, BlockStore, Codec, DataSource, Dtype, StoreOptions};
 
 const USAGE: &str = "\
 bigmeans — scalable K-means clustering for big data (Big-means, PatRec 2022)
@@ -52,12 +56,15 @@ SUBCOMMANDS:
                                  scheduled arms race over sample sizes
                         stream = sequential pass through the file as an
                                  unbounded stream (drift check optional)
-      --backend B       mem | mmap | buffered  (default mem)
-                        mmap/buffered cluster files out-of-core:
+      --backend B       mem | mmap | buffered | block  (default mem)
+                        mmap/buffered/block cluster files out-of-core:
                         mmap = memory-mapped .bmx; buffered = positioned
-                        reads (.bmx) or row-indexed parse-on-read (.csv)
-      --index-stride N  buffered CSV: keep every Nth row offset in RAM
-                        (index shrinks N×, seeks scan ≤ N−1 rows; default 1)
+                        reads (.bmx) or row-indexed parse-on-read (.csv);
+                        block = chunked .bmx v3 store (per-block CRC,
+                        dtype/codec decode, LRU block cache)
+      --index-stride N  buffered CSV: keep every Nth row offset
+                        (index shrinks N×, seeks scan ≤ N−1 rows; default 1;
+                        the index persists as a mmap'd .idx sidecar)
       --reinit R        kmeanspp | random      (default kmeanspp)
       --threads N       worker threads (default: machine)
       --seed N          RNG seed
@@ -75,8 +82,19 @@ SUBCOMMANDS:
     stream mode only:
       --validate-every N   drift check cadence in chunks (default 0 = off)
       --validation-rows N  drift reservoir capacity (default 2048)
+      --drift-action A     none | reseed (default none): reseed = replace
+                           the worst-contributing centroid with a
+                           K-means++ draw from the validation reservoir
+                           whenever a drift event fires
   convert <in.csv> <out.bmx>   Convert a CSV into the .bmx format
                       (blockwise, memory bounded by the row index)
+      --format F        v3 (chunked block store, default) | v2 (legacy flat)
+      --block-rows N    v3: rows per block (default 4096)
+      --dtype D         v3: f32 | f64 | f16 payload (default f32)
+      --codec C         v3: none | shuffle | lz per-block codec (default none)
+      --threads N       v3: encode workers (default: machine)
+  verify <file.bmx>   Check every checksum in a .bmx file
+      --threads N       v3: parallel block scanners (default: machine)
   table <dataset>     Regenerate the paper's per-dataset tables
       --k LIST          k grid (default 2,3,5,10,15,20,25)
       --n-exec N        repetitions (default 3)
@@ -85,6 +103,8 @@ SUBCOMMANDS:
       --n-exec N        repetitions per cell (default 2)
       --quick           four-dataset subset
   generate <name> <out.fbin|out.bmx>   Write a catalog dataset to disk
+                      (.bmx output is v3; --format/--block-rows/--dtype/
+                      --codec as in convert)
   catalog             List catalog datasets
   artifacts           Show the AOT manifest
 ";
@@ -107,6 +127,7 @@ fn main() {
     let code = match sub.as_str() {
         "cluster" => cmd_cluster(&args),
         "convert" => cmd_convert(&args),
+        "verify" => cmd_verify(&args),
         "table" => cmd_table(&args),
         "summary" => cmd_summary(&args),
         "generate" => cmd_generate(&args),
@@ -201,9 +222,10 @@ fn run_summary_json(
 }
 
 fn cmd_cluster(args: &Args) -> Result<(), String> {
-    let backend = match args.choice("backend", &["mem", "mmap", "buffered"])? {
+    let backend = match args.choice("backend", &["mem", "mmap", "buffered", "block"])? {
         "mmap" => DataBackend::Mmap,
         "buffered" => DataBackend::Buffered,
+        "block" => DataBackend::Block,
         _ => DataBackend::InMemory,
     };
     let k = args.usize("k", 10)?;
@@ -369,9 +391,20 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
     let validate_every = args.u64("validate-every", 0)?;
     let validation_rows =
         args.usize("validation-rows", bigmeans::coordinator::stream::DEFAULT_VALIDATION_ROWS)?;
+    let drift_action = match args.choice("drift-action", &["none", "reseed"])? {
+        "reseed" => DriftAction::Reseed,
+        _ => DriftAction::None,
+    };
+    if drift_action == DriftAction::Reseed && validate_every == 0 {
+        return Err(
+            "--drift-action reseed needs the drift check: set --validate-every N".into()
+        );
+    }
     let rows_per_chunk = cfg.chunk_size.max(1);
     let n = data.n();
-    let engine = StreamingBigMeans::new(cfg, n).with_validation(validate_every, validation_rows);
+    let engine = StreamingBigMeans::new(cfg, n)
+        .with_validation(validate_every, validation_rows)
+        .with_drift_action(drift_action);
     let queue = ChunkQueue::new(8);
     let t0 = std::time::Instant::now();
     let r = std::thread::scope(|scope| {
@@ -394,6 +427,9 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
     println!("incumbent improvements   : {}", r.improvements);
     if validate_every > 0 {
         println!("drift events             : {}", r.drift_events);
+        if drift_action == DriftAction::Reseed {
+            println!("drift remediations       : {}", r.remediations);
+        }
         for p in &r.validation_trace {
             println!("  chunk {:>6}  validation mean SSE {:.6e}", p.chunk, p.objective);
         }
@@ -410,6 +446,7 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
             ("distance_evals", num(r.counters.distance_evals as f64)),
             ("pruned_evals", num(r.counters.pruned_evals as f64)),
             ("drift_events", num(r.drift_events as f64)),
+            ("remediations", num(r.remediations as f64)),
             (
                 "validation_trace",
                 bigmeans::util::json::arr(
@@ -431,6 +468,34 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
     Ok(())
 }
 
+/// Parse the shared v3 store knobs (`--block-rows`, `--dtype`, `--codec`,
+/// `--threads`) into [`StoreOptions`].
+fn store_options(args: &Args) -> Result<StoreOptions, String> {
+    let defaults = StoreOptions::default();
+    let dtype = Dtype::parse(args.choice("dtype", &["f32", "f64", "f16"])?)
+        .expect("choice() already validated the token");
+    let codec = Codec::parse(args.choice("codec", &["none", "shuffle", "lz"])?)
+        .expect("choice() already validated the token");
+    let block_rows = args.usize("block-rows", defaults.block_rows)?;
+    if block_rows == 0 {
+        return Err("--block-rows must be ≥ 1".into());
+    }
+    Ok(StoreOptions { block_rows, dtype, codec, threads: args.usize("threads", 0)? })
+}
+
+/// Reject v3-only knobs when the output is not a v3 block store (`target`
+/// names what was requested, e.g. "--format v2" or ".fbin output").
+fn reject_v3_knobs(args: &Args, target: &str) -> Result<(), String> {
+    for knob in ["block-rows", "dtype", "codec"] {
+        if args.get(knob).is_some() {
+            return Err(format!(
+                "--{knob} only applies to .bmx v3 output, not {target}"
+            ));
+        }
+    }
+    Ok(())
+}
+
 fn cmd_convert(args: &Args) -> Result<(), String> {
     let pos = args.positional();
     if pos.len() != 2 {
@@ -439,15 +504,64 @@ fn cmd_convert(args: &Args) -> Result<(), String> {
     if !pos[1].ends_with(".bmx") {
         return Err(format!("output must be a .bmx path, got '{}'", pos[1]));
     }
+    let (src, dst) = (PathBuf::from(&pos[0]), PathBuf::from(&pos[1]));
+    let format = args.choice("format", &["v3", "v2"])?;
     let t0 = std::time::Instant::now();
-    let (m, n) = convert::csv_to_bmx(&PathBuf::from(&pos[0]), &PathBuf::from(&pos[1]))
-        .map_err(|e| e.to_string())?;
+    let (m, n, label) = if format == "v2" {
+        reject_v3_knobs(args, "--format v2")?;
+        let (m, n) = convert::csv_to_bmx(&src, &dst).map_err(|e| e.to_string())?;
+        (m, n, "v2 flat".to_string())
+    } else {
+        let opts = store_options(args)?;
+        let (m, n) =
+            convert::csv_to_block_store(&src, &dst, opts).map_err(|e| e.to_string())?;
+        (m, n, format!("v3 {}/{}", opts.dtype.name(), opts.codec.name()))
+    };
+    let bytes = std::fs::metadata(&dst).map(|md| md.len()).unwrap_or(0);
     eprintln!(
-        "wrote {} ({m} × {n}, {:.1} MiB) in {:.2}s",
+        "wrote {} ({m} × {n}, {label}, {:.1} MiB on disk) in {:.2}s",
         pos[1],
-        (m * n * 4) as f64 / (1 << 20) as f64,
+        bytes as f64 / (1 << 20) as f64,
         t0.elapsed().as_secs_f64()
     );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<(), String> {
+    let Some(name) = args.positional().first() else {
+        return Err("usage: verify <file.bmx>".into());
+    };
+    let path = PathBuf::from(name);
+    let threads = args.usize("threads", 0)?;
+    let t0 = std::time::Instant::now();
+    match loader::bmx_version(&path).map_err(|e| e.to_string())? {
+        3 => {
+            let store = BlockStore::open(&path).map_err(|e| e.to_string())?;
+            let report = store.verify_all(threads).map_err(|e| e.to_string())?;
+            eprintln!(
+                "ok: {} — {} blocks ({} × {}, {}/{}), {:.1} MiB encoded payload \
+                 verified in {:.2}s",
+                name,
+                report.blocks,
+                store.m(),
+                store.n(),
+                store.dtype().name(),
+                store.codec().name(),
+                report.encoded_bytes as f64 / (1 << 20) as f64,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        _ => {
+            let payload = bigmeans::data::bmx::verify_bmx(&path).map_err(|e| e.to_string())?;
+            eprintln!(
+                "ok: {} — {:.1} MiB payload CRC verified in {:.2}s (flat v2; reconvert \
+                 to v3 for per-block integrity)",
+                name,
+                payload as f64 / (1 << 20) as f64,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
     Ok(())
 }
 
@@ -521,9 +635,19 @@ fn cmd_generate(args: &Args) -> Result<(), String> {
     let data = entry.generate(args.u64("data-seed", 20220418)?);
     let out = PathBuf::from(&pos[1]);
     if pos[1].ends_with(".fbin") {
+        reject_v3_knobs(args, ".fbin output")?;
+        if args.get("format").is_some() {
+            return Err("--format only applies to .bmx output".into());
+        }
         loader::save_fbin(&data, &out).map_err(|e| e.to_string())?;
     } else if pos[1].ends_with(".bmx") {
-        bigmeans::data::save_bmx(&data, &out).map_err(|e| e.to_string())?;
+        if args.choice("format", &["v3", "v2"])? == "v2" {
+            reject_v3_knobs(args, "--format v2")?;
+            bigmeans::data::save_bmx(&data, &out).map_err(|e| e.to_string())?;
+        } else {
+            let opts = store_options(args)?;
+            copy_to_store(&data, &out, opts).map_err(|e| e.to_string())?;
+        }
     } else {
         return Err("only .fbin / .bmx output supported".into());
     }

@@ -1,0 +1,175 @@
+//! LRU cache of decoded blocks.
+//!
+//! Chunk sampling draws scattered rows, and with blocks of a few thousand
+//! rows a sample of size `s` touches at most `s` blocks — usually far
+//! fewer once sampling revisits hot regions. Caching the *decoded* f32
+//! blocks means a warm block costs one `memcpy` per row instead of a
+//! read + CRC + codec + dtype pass.
+//!
+//! The cache is a plain `Mutex<HashMap>` with logical clock stamps and
+//! scan-for-oldest eviction: block counts are modest (a 4 GiB store at
+//! the default 4096×16 geometry has ~16k blocks, of which only the
+//! resident fraction is in the map), so O(resident) eviction is cheaper
+//! than maintaining an intrusive list — and the lock is held only for
+//! map bookkeeping, never for decoding.
+//!
+//! Caching never changes served values (decoded blocks are immutable
+//! `Arc`s), so the backend determinism contract is preserved by
+//! construction.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Default decoded-block budget (bytes).
+pub const DEFAULT_CACHE_BYTES: usize = 128 << 20;
+
+struct Slot {
+    data: Arc<Vec<f32>>,
+    stamp: u64,
+}
+
+struct CacheState {
+    map: HashMap<usize, Slot>,
+    clock: u64,
+    resident_bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// Thread-safe LRU over decoded blocks, keyed by block index.
+pub struct BlockCache {
+    inner: Mutex<CacheState>,
+    cap_bytes: usize,
+}
+
+impl BlockCache {
+    /// A cache holding up to `cap_bytes` of decoded f32 data. A single
+    /// block larger than the budget is still admitted (the budget then
+    /// holds exactly that block).
+    pub fn new(cap_bytes: usize) -> Self {
+        BlockCache {
+            inner: Mutex::new(CacheState {
+                map: HashMap::new(),
+                clock: 0,
+                resident_bytes: 0,
+                hits: 0,
+                misses: 0,
+            }),
+            cap_bytes,
+        }
+    }
+
+    /// Look up a decoded block, refreshing its recency on hit.
+    pub fn get(&self, block: usize) -> Option<Arc<Vec<f32>>> {
+        let mut st = self.inner.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        let hit = st.map.get_mut(&block).map(|slot| {
+            slot.stamp = stamp;
+            Arc::clone(&slot.data)
+        });
+        match &hit {
+            Some(_) => st.hits += 1,
+            None => st.misses += 1,
+        }
+        hit
+    }
+
+    /// Insert a freshly decoded block, evicting least-recently-used
+    /// entries until the budget holds. Inserting an already-present block
+    /// (two threads decoded it concurrently) just refreshes it.
+    pub fn insert(&self, block: usize, data: Arc<Vec<f32>>) {
+        let bytes = data.len() * std::mem::size_of::<f32>();
+        let mut st = self.inner.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        if let Some(slot) = st.map.get_mut(&block) {
+            slot.stamp = stamp;
+            return;
+        }
+        while !st.map.is_empty() && st.resident_bytes + bytes > self.cap_bytes {
+            let oldest = st
+                .map
+                .iter()
+                .min_by_key(|(_, slot)| slot.stamp)
+                .map(|(&k, _)| k)
+                .expect("non-empty map has a minimum");
+            if let Some(evicted) = st.map.remove(&oldest) {
+                st.resident_bytes -= evicted.data.len() * std::mem::size_of::<f32>();
+            }
+        }
+        st.resident_bytes += bytes;
+        st.map.insert(block, Slot { data, stamp });
+    }
+
+    /// `(hits, misses)` since creation.
+    pub fn stats(&self) -> (u64, u64) {
+        let st = self.inner.lock().unwrap();
+        (st.hits, st.misses)
+    }
+
+    /// Blocks currently resident.
+    pub fn resident(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Decoded bytes currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(v: f32, len: usize) -> Arc<Vec<f32>> {
+        Arc::new(vec![v; len])
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let c = BlockCache::new(1 << 20);
+        assert!(c.get(0).is_none());
+        c.insert(0, block(1.0, 8));
+        assert_eq!(c.get(0).unwrap()[0], 1.0);
+        assert_eq!(c.stats(), (1, 1));
+        assert_eq!(c.resident(), 1);
+        assert_eq!(c.resident_bytes(), 32);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // Budget fits two 100-element blocks (400 bytes each).
+        let c = BlockCache::new(800);
+        c.insert(0, block(0.0, 100));
+        c.insert(1, block(1.0, 100));
+        assert!(c.get(0).is_some()); // 0 is now the most recent
+        c.insert(2, block(2.0, 100)); // evicts 1 (oldest)
+        assert!(c.get(1).is_none());
+        assert!(c.get(0).is_some());
+        assert!(c.get(2).is_some());
+        assert_eq!(c.resident(), 2);
+    }
+
+    #[test]
+    fn oversized_block_still_admitted() {
+        let c = BlockCache::new(16);
+        c.insert(0, block(9.0, 1000));
+        assert!(c.get(0).is_some());
+        assert_eq!(c.resident(), 1);
+        // The next insert evicts it (budget can't hold both).
+        c.insert(1, block(1.0, 1000));
+        assert!(c.get(0).is_none());
+        assert!(c.get(1).is_some());
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes_without_double_counting() {
+        let c = BlockCache::new(1 << 10);
+        c.insert(0, block(1.0, 10));
+        c.insert(0, block(1.0, 10));
+        assert_eq!(c.resident(), 1);
+        assert_eq!(c.resident_bytes(), 40);
+    }
+}

@@ -1,0 +1,208 @@
+//! Block encode/decode: dtype conversion + optional codec.
+//!
+//! A block travels `&[f32]` → dtype bytes → codec bytes on write, and the
+//! exact inverse on read. The shuffle stage is a byte transpose: with
+//! element width `w`, byte lane `j` of every element is stored
+//! contiguously (`out[j·count + i] = in[i·w + j]`), which turns float
+//! payloads into long runs of slowly-varying bytes — the shape the LZ
+//! stage (and any downstream compressor) actually bites on.
+
+use crate::store::format::{Codec, Dtype};
+use crate::util::error::Result;
+use crate::util::half::{f16_from_f32, f32_from_f16};
+use crate::util::lz;
+use crate::{anyhow, bail};
+
+/// Byte-transpose `data` (length a multiple of `width`).
+pub fn shuffle(data: &[u8], width: usize) -> Vec<u8> {
+    debug_assert_eq!(data.len() % width, 0);
+    let count = data.len() / width;
+    let mut out = vec![0u8; data.len()];
+    for j in 0..width {
+        let lane = &mut out[j * count..(j + 1) * count];
+        for (i, slot) in lane.iter_mut().enumerate() {
+            *slot = data[i * width + j];
+        }
+    }
+    out
+}
+
+/// Inverse of [`shuffle`].
+pub fn unshuffle(data: &[u8], width: usize) -> Vec<u8> {
+    debug_assert_eq!(data.len() % width, 0);
+    let count = data.len() / width;
+    let mut out = vec![0u8; data.len()];
+    for j in 0..width {
+        let lane = &data[j * count..(j + 1) * count];
+        for (i, &b) in lane.iter().enumerate() {
+            out[i * width + j] = b;
+        }
+    }
+    out
+}
+
+fn dtype_encode(values: &[f32], dtype: Dtype) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * dtype.width());
+    match dtype {
+        Dtype::F32 => {
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::F64 => {
+            for &v in values {
+                out.extend_from_slice(&(v as f64).to_le_bytes());
+            }
+        }
+        Dtype::F16 => {
+            for &v in values {
+                out.extend_from_slice(&f16_from_f32(v).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn dtype_decode(bytes: &[u8], dtype: Dtype) -> Vec<f32> {
+    match dtype {
+        Dtype::F32 => bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect(),
+        Dtype::F64 => bytes
+            .chunks_exact(8)
+            .map(|b| f64::from_le_bytes(b.try_into().unwrap()) as f32)
+            .collect(),
+        Dtype::F16 => bytes
+            .chunks_exact(2)
+            .map(|b| f32_from_f16(u16::from_le_bytes(b.try_into().unwrap())))
+            .collect(),
+    }
+}
+
+/// Encode one block of `values` into its on-disk bytes.
+pub fn encode_block(values: &[f32], dtype: Dtype, codec: Codec) -> Vec<u8> {
+    let raw = dtype_encode(values, dtype);
+    match codec {
+        Codec::None => raw,
+        Codec::Shuffle => shuffle(&raw, dtype.width()),
+        Codec::Lz => lz::compress(&shuffle(&raw, dtype.width())),
+    }
+}
+
+/// Decode one on-disk block back to exactly `values_len` f32 values.
+/// Fails (rather than panicking) on any length mismatch or corrupt LZ
+/// stream, so callers can attach the block index to the diagnostic.
+pub fn decode_block(
+    bytes: &[u8],
+    values_len: usize,
+    dtype: Dtype,
+    codec: Codec,
+) -> Result<Vec<f32>> {
+    let raw_len = values_len
+        .checked_mul(dtype.width())
+        .ok_or_else(|| anyhow!("block of {values_len} values overflows"))?;
+    match codec {
+        Codec::None | Codec::Shuffle => {
+            if bytes.len() != raw_len {
+                bail!(
+                    "encoded length {} does not match the {raw_len}-byte geometry",
+                    bytes.len()
+                );
+            }
+            match codec {
+                // No intermediate copy: decode straight off the (possibly
+                // mmap'd) encoded bytes — this is the default f32/none
+                // read path.
+                Codec::None => Ok(dtype_decode(bytes, dtype)),
+                _ => Ok(dtype_decode(&unshuffle(bytes, dtype.width()), dtype)),
+            }
+        }
+        Codec::Lz => {
+            let shuffled = lz::decompress(bytes, raw_len)?;
+            Ok(dtype_decode(&unshuffle(&shuffled, dtype.width()), dtype))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_values(count: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|i| match i % 5 {
+                0 => 0.0,
+                1 => -1.5,
+                2 => rng.f32() * 1.0e4,
+                3 => -(rng.f32() + 1.0e-3),
+                _ => (i as f32).sqrt(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shuffle_is_a_bijection() {
+        let data: Vec<u8> = (0..64u8).collect();
+        for width in [1usize, 2, 4, 8] {
+            let sh = shuffle(&data, width);
+            assert_eq!(unshuffle(&sh, width), data, "width {width}");
+            if width > 1 {
+                assert_ne!(sh, data, "width {width} should permute");
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_width_one_is_identity() {
+        let data: Vec<u8> = (0..10u8).collect();
+        assert_eq!(shuffle(&data, 1), data);
+    }
+
+    #[test]
+    fn lossless_dtypes_roundtrip_bit_exact() {
+        let values = sample_values(1000, 7);
+        for dtype in [Dtype::F32, Dtype::F64] {
+            for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+                let enc = encode_block(&values, dtype, codec);
+                let dec = decode_block(&enc, values.len(), dtype, codec).unwrap();
+                let a: Vec<u32> = values.iter().map(|v| v.to_bits()).collect();
+                let b: Vec<u32> = dec.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(a, b, "{dtype:?}/{codec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_matches_quantiser() {
+        let values = sample_values(500, 11);
+        let expected: Vec<f32> =
+            values.iter().map(|&v| f32_from_f16(f16_from_f32(v))).collect();
+        for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+            let enc = encode_block(&values, Dtype::F16, codec);
+            let dec = decode_block(&enc, values.len(), Dtype::F16, codec).unwrap();
+            assert_eq!(dec, expected, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn length_mismatches_rejected() {
+        let values = sample_values(64, 3);
+        let enc = encode_block(&values, Dtype::F32, Codec::None);
+        assert!(decode_block(&enc, values.len() + 1, Dtype::F32, Codec::None).is_err());
+        assert!(decode_block(&enc[..enc.len() - 4], values.len(), Dtype::F32, Codec::None)
+            .is_err());
+        let lz = encode_block(&values, Dtype::F32, Codec::Lz);
+        assert!(decode_block(&lz[..lz.len() - 1], values.len(), Dtype::F32, Codec::Lz).is_err());
+    }
+
+    #[test]
+    fn empty_block_roundtrips() {
+        for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+            let enc = encode_block(&[], Dtype::F32, codec);
+            assert_eq!(decode_block(&enc, 0, Dtype::F32, codec).unwrap(), Vec::<f32>::new());
+        }
+    }
+}

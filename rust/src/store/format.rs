@@ -1,0 +1,342 @@
+//! The `.bmx` v3 on-disk geometry: header, dtype/codec tags, and the
+//! trailing block-index table. See [`crate::store`] for the full layout.
+//!
+//! Everything here is pure byte-level encode/decode with checked
+//! arithmetic — a corrupt or hostile header fails with a clean error at
+//! open time instead of wrapping or panicking later.
+
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
+/// v3 file magic: "BMX" + ASCII version byte.
+pub const BMX3_MAGIC: [u8; 4] = *b"BMX3";
+
+/// Header bytes before the first block.
+pub const BMX3_HEADER_LEN: usize = 64;
+
+/// Bytes per block-index entry (offset u64 | encoded length u64 | CRC-32
+/// u32 | reserved u32).
+pub const BLOCK_ENTRY_LEN: usize = 24;
+
+/// Default rows per block (≈ one chunk of the paper's default `s`).
+pub const DEFAULT_BLOCK_ROWS: usize = 4096;
+
+/// On-disk element type of the payload. Every dtype decodes to `f32` at
+/// the block boundary; `F32` and `F64` are lossless for f32 inputs, `F16`
+/// trades precision for half the footprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    F16,
+}
+
+impl Dtype {
+    /// Bytes per stored element.
+    pub fn width(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 => 8,
+            Dtype::F16 => 2,
+        }
+    }
+
+    /// Header tag byte.
+    pub fn tag(self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F64 => 1,
+            Dtype::F16 => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Dtype> {
+        match tag {
+            0 => Some(Dtype::F32),
+            1 => Some(Dtype::F64),
+            2 => Some(Dtype::F16),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI token (`f32` / `f64` / `f16`).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "f64" => Some(Dtype::F64),
+            "f16" => Some(Dtype::F16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+            Dtype::F16 => "f16",
+        }
+    }
+}
+
+/// Per-block codec applied to the dtype-encoded bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Raw dtype bytes.
+    None,
+    /// Byte-transpose shuffle: lane `j` of every element stored
+    /// contiguously. Same size, but groups the slowly-varying high bytes —
+    /// the enabling transform for `Lz` (and for downstream compression by
+    /// the filesystem or transport).
+    Shuffle,
+    /// Shuffle followed by the homegrown LZ77 codec
+    /// ([`crate::util::lz`]).
+    Lz,
+}
+
+impl Codec {
+    pub fn tag(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Shuffle => 1,
+            Codec::Lz => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Codec> {
+        match tag {
+            0 => Some(Codec::None),
+            1 => Some(Codec::Shuffle),
+            2 => Some(Codec::Lz),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI token (`none` / `shuffle` / `lz`).
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "none" => Some(Codec::None),
+            "shuffle" => Some(Codec::Shuffle),
+            "lz" => Some(Codec::Lz),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::Shuffle => "shuffle",
+            Codec::Lz => "lz",
+        }
+    }
+}
+
+/// Knobs for writing a v3 store.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreOptions {
+    /// Rows per block (the last block may be shorter).
+    pub block_rows: usize,
+    /// On-disk element type.
+    pub dtype: Dtype,
+    /// Per-block codec.
+    pub codec: Codec,
+    /// Encode worker threads (0 = machine default).
+    pub threads: usize,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        StoreOptions {
+            block_rows: DEFAULT_BLOCK_ROWS,
+            dtype: Dtype::F32,
+            codec: Codec::None,
+            threads: 0,
+        }
+    }
+}
+
+/// One row of the trailing block-index table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockEntry {
+    /// Absolute byte offset of the encoded block.
+    pub offset: u64,
+    /// Encoded (post-codec) byte length.
+    pub enc_len: u64,
+    /// CRC-32 of the encoded bytes.
+    pub crc: u32,
+}
+
+impl BlockEntry {
+    pub fn encode(&self) -> [u8; BLOCK_ENTRY_LEN] {
+        let mut out = [0u8; BLOCK_ENTRY_LEN];
+        out[0..8].copy_from_slice(&self.offset.to_le_bytes());
+        out[8..16].copy_from_slice(&self.enc_len.to_le_bytes());
+        out[16..20].copy_from_slice(&self.crc.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> BlockEntry {
+        debug_assert_eq!(bytes.len(), BLOCK_ENTRY_LEN);
+        BlockEntry {
+            offset: u64::from_le_bytes(bytes[0..8].try_into().unwrap()),
+            enc_len: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+            crc: u32::from_le_bytes(bytes[16..20].try_into().unwrap()),
+        }
+    }
+}
+
+/// Parsed (and size-validated) v3 header.
+#[derive(Clone, Copy, Debug)]
+pub struct V3Header {
+    pub m: u64,
+    pub n: u32,
+    pub block_rows: u32,
+    pub dtype: Dtype,
+    pub codec: Codec,
+    /// Absolute byte offset of the block-index table.
+    pub index_off: u64,
+    /// CRC-32 of the index-table bytes.
+    pub index_crc: u32,
+}
+
+impl V3Header {
+    /// Number of blocks the geometry implies.
+    pub fn blocks(&self) -> u64 {
+        if self.m == 0 {
+            0
+        } else {
+            self.m.div_ceil(self.block_rows as u64)
+        }
+    }
+
+    pub fn encode(&self) -> [u8; BMX3_HEADER_LEN] {
+        let mut out = [0u8; BMX3_HEADER_LEN];
+        out[0..4].copy_from_slice(&BMX3_MAGIC);
+        out[4..12].copy_from_slice(&self.m.to_le_bytes());
+        out[12..16].copy_from_slice(&self.n.to_le_bytes());
+        out[16..20].copy_from_slice(&self.block_rows.to_le_bytes());
+        out[20] = self.dtype.tag();
+        out[21] = self.codec.tag();
+        out[24..32].copy_from_slice(&self.index_off.to_le_bytes());
+        out[32..36].copy_from_slice(&self.index_crc.to_le_bytes());
+        out
+    }
+
+    /// Decode and sanity-check a header block (`label` names the file in
+    /// errors). Geometry limits are enforced here so downstream usize
+    /// arithmetic cannot overflow.
+    pub fn decode(bytes: &[u8], label: &str) -> Result<V3Header> {
+        if bytes.len() < BMX3_HEADER_LEN {
+            bail!("{label}: truncated .bmx v3 header ({} bytes)", bytes.len());
+        }
+        if bytes[0..4] != BMX3_MAGIC {
+            bail!("{label}: not a .bmx v3 file (bad magic)");
+        }
+        let m = u64::from_le_bytes(bytes[4..12].try_into().unwrap());
+        let n = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+        let block_rows = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let dtype = Dtype::from_tag(bytes[20])
+            .ok_or_else(|| anyhow!("{label}: unknown dtype tag {}", bytes[20]))?;
+        let codec = Codec::from_tag(bytes[21])
+            .ok_or_else(|| anyhow!("{label}: unknown codec tag {}", bytes[21]))?;
+        let index_off = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let index_crc = u32::from_le_bytes(bytes[32..36].try_into().unwrap());
+        if n == 0 {
+            bail!("{label}: bmx v3 header has n = 0");
+        }
+        if block_rows == 0 {
+            bail!("{label}: bmx v3 header has block_rows = 0");
+        }
+        if m > u64::MAX / 2 || m.checked_mul(n as u64).is_none() {
+            bail!("{label}: bmx v3 shape {m}×{n} not addressable");
+        }
+        // Largest decoded block must fit comfortably in usize arithmetic.
+        (block_rows as u64)
+            .checked_mul(n as u64)
+            .and_then(|c| c.checked_mul(8))
+            .filter(|&c| c <= usize::MAX as u64 / 4)
+            .ok_or_else(|| {
+                anyhow!("{label}: block geometry {block_rows}×{n} overflows")
+            })?;
+        Ok(V3Header { m, n, block_rows, dtype, codec, index_off, index_crc })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = V3Header {
+            m: 123_456,
+            n: 17,
+            block_rows: 4096,
+            dtype: Dtype::F16,
+            codec: Codec::Lz,
+            index_off: 0xDEAD_BEEF,
+            index_crc: 0x1234_5678,
+        };
+        let enc = h.encode();
+        let back = V3Header::decode(&enc, "t").unwrap();
+        assert_eq!(back.m, h.m);
+        assert_eq!(back.n, h.n);
+        assert_eq!(back.block_rows, h.block_rows);
+        assert_eq!(back.dtype, h.dtype);
+        assert_eq!(back.codec, h.codec);
+        assert_eq!(back.index_off, h.index_off);
+        assert_eq!(back.index_crc, h.index_crc);
+        assert_eq!(back.blocks(), 123_456u64.div_ceil(4096));
+    }
+
+    #[test]
+    fn entry_roundtrip() {
+        let e = BlockEntry { offset: 64, enc_len: 99_999, crc: 0xCAFE_F00D };
+        assert_eq!(BlockEntry::decode(&e.encode()), e);
+    }
+
+    #[test]
+    fn hostile_headers_rejected() {
+        let good = V3Header {
+            m: 10,
+            n: 2,
+            block_rows: 4,
+            dtype: Dtype::F32,
+            codec: Codec::None,
+            index_off: 64,
+            index_crc: 0,
+        };
+        let mut bad_magic = good.encode();
+        bad_magic[3] = b'9';
+        assert!(V3Header::decode(&bad_magic, "t").is_err());
+        let mut zero_n = good.encode();
+        zero_n[12..16].copy_from_slice(&0u32.to_le_bytes());
+        assert!(V3Header::decode(&zero_n, "t").is_err());
+        let mut zero_block = good.encode();
+        zero_block[16..20].copy_from_slice(&0u32.to_le_bytes());
+        assert!(V3Header::decode(&zero_block, "t").is_err());
+        let mut bad_dtype = good.encode();
+        bad_dtype[20] = 9;
+        assert!(V3Header::decode(&bad_dtype, "t").is_err());
+        let mut bad_codec = good.encode();
+        bad_codec[21] = 9;
+        assert!(V3Header::decode(&bad_codec, "t").is_err());
+        let mut huge = good.encode();
+        huge[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(V3Header::decode(&huge, "t").is_err());
+        assert!(V3Header::decode(&good.encode()[..32], "t").is_err());
+    }
+
+    #[test]
+    fn tags_and_tokens_roundtrip() {
+        for d in [Dtype::F32, Dtype::F64, Dtype::F16] {
+            assert_eq!(Dtype::from_tag(d.tag()), Some(d));
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+        }
+        for c in [Codec::None, Codec::Shuffle, Codec::Lz] {
+            assert_eq!(Codec::from_tag(c.tag()), Some(c));
+            assert_eq!(Codec::parse(c.name()), Some(c));
+        }
+        assert_eq!(Dtype::parse("f8"), None);
+        assert_eq!(Codec::parse("zstd"), None);
+    }
+}

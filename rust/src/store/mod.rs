@@ -1,0 +1,87 @@
+//! The block-store storage engine: chunked `.bmx` **version 3**.
+//!
+//! The paper's thesis is decomposition — Big-means never needs more than a
+//! bounded chunk of the dataset at once. v1/v2 `.bmx` decomposed the
+//! *compute* but kept the *storage* monolithic: one flat f32 payload with
+//! one whole-file CRC (O(file) to check, skipped above 4 GiB). v3
+//! decomposes the storage the same way the algorithm decomposes the
+//! problem: rows are grouped into fixed-size **blocks**, each independently
+//! encoded (dtype conversion + optional codec) and independently
+//! checksummed, with a trailing block-index table. Consequences:
+//!
+//! * **O(touched blocks) integrity** — opening validates header + index
+//!   only; each block's CRC-32 is checked the first time that block is
+//!   decoded. The v2 4 GiB eager-verify cap is retired: integrity cost now
+//!   scales with what a run actually reads, not with file size.
+//! * **Dtype variants** — payloads may be stored as `f32` (exact), `f64`
+//!   (exact for f32 inputs), or `f16` (half footprint, quantised), always
+//!   decoded to `f32` at the block boundary, using the v2 header's
+//!   reserved dtype-tag idea for real.
+//! * **Codecs** — per-block `none` | `shuffle` (byte transpose) | `lz`
+//!   (shuffle + the homegrown LZ77 in [`crate::util::lz`]), all
+//!   dependency-free.
+//! * **Append-friendly ingest** — [`BlockWriter`] streams blocks out as
+//!   rows arrive (per-block encode/CRC parallelised on the
+//!   [`crate::util::threadpool::ThreadPool`]) and writes the index last,
+//!   which is exactly the shape a streaming producer needs.
+//! * **Warm sampling** — [`BlockStore`] keeps an LRU cache of *decoded*
+//!   blocks ([`cache::BlockCache`]), so random chunk sampling pays
+//!   decode + CRC once per block, not once per row.
+//!
+//! # On-disk layout (all little-endian)
+//!
+//! ```text
+//! offset  size   field
+//! 0       4      magic        b"BMX3" ("BMX" + ASCII version byte)
+//! 4       8      m            u64  number of rows
+//! 12      4      n            u32  features per row
+//! 16      4      block_rows   u32  rows per block (last block may be short)
+//! 20      1      dtype        u8   0 = f32 | 1 = f64 | 2 = f16
+//! 21      1      codec        u8   0 = none | 1 = shuffle | 2 = lz
+//! 22      2      reserved     zeroed
+//! 24      8      index_off    u64  byte offset of the block-index table
+//! 32      4      index_crc    u32  CRC-32 of the index-table bytes
+//! 36      28     reserved     zeroed
+//! 64      …      blocks       encoded blocks, back to back
+//! index_off …    index        one 24-byte entry per block:
+//!                               offset u64 | enc_len u64 | crc u32 | pad u32
+//! ```
+//!
+//! Block `i` holds rows `[i·block_rows, min(m, (i+1)·block_rows))`; its
+//! encoded bytes are `codec(dtype(rows))` and `crc` covers the **encoded**
+//! bytes, so verification never pays a decode it can skip. The index is
+//! written last (patching `index_off`/`index_crc`/`m` into the header on
+//! finish), keeping the writer single-pass.
+//!
+//! # Layering
+//!
+//! ```text
+//! coordinators / tuner / streaming      (unchanged — they see DataSource)
+//!         │
+//! data::source::DataSource              read_rows / sample_rows / advise
+//!         │
+//! store::BlockStore                     block math + LRU BlockCache
+//!         │            └── cache::BlockCache   decoded-block LRU
+//! store::codec                          dtype ⇄ f32, shuffle, lz
+//!         │            └── util::lz, util::half
+//! store::format                         header / index encode-decode
+//!         │
+//! util::mem::MmapRegion | pread         raw bytes
+//! ```
+//!
+//! Legacy v1/v2 files keep loading through [`crate::data::bmx`]; the
+//! loader sniffs the magic and routes each file to the right reader. For
+//! f32 payloads every codec is bit-lossless, so a seeded run through a
+//! block store reproduces the in-memory run bit-for-bit (asserted in
+//! `tests/store_v3.rs`).
+
+pub mod cache;
+pub mod codec;
+pub mod format;
+pub mod source;
+pub mod writer;
+
+pub use cache::{BlockCache, DEFAULT_CACHE_BYTES};
+pub use format::{Codec, Dtype, StoreOptions, BMX3_MAGIC, DEFAULT_BLOCK_ROWS};
+pub use source::{BlockStore, VerifyReport};
+pub use writer::{copy_to_store, BlockWriter};

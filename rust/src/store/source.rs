@@ -1,0 +1,527 @@
+//! [`BlockStore`] — the `.bmx` v3 reader: a [`DataSource`] that decodes
+//! blocks on demand with per-block integrity checking and an LRU cache of
+//! decoded blocks.
+//!
+//! Open cost is O(header + index): the block-index table is read and its
+//! CRC validated, but **no payload byte is touched** — integrity is
+//! checked per block on first decode, so a read path costs O(touched
+//! blocks) however large the file is (this is what retires the v2
+//! whole-payload-CRC cap). [`BlockStore::verify_all`] is the explicit
+//! full scan: every block checked in parallel, the first corrupt block
+//! named by index.
+//!
+//! Per the [`DataSource`] contract, corruption discovered *during a read*
+//! panics with a diagnostic naming the block; constructors and
+//! `verify_all` return errors instead.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::data::source::{AccessPattern, DataSource};
+use crate::store::cache::{BlockCache, DEFAULT_CACHE_BYTES};
+use crate::store::codec::decode_block;
+use crate::store::format::{BlockEntry, Codec, Dtype, V3Header, BLOCK_ENTRY_LEN, BMX3_HEADER_LEN};
+use crate::util::error::{Context, Result};
+use crate::util::hash::crc32;
+use crate::util::threadpool::ThreadPool;
+use crate::{anyhow, bail};
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+use crate::util::mem::MmapRegion;
+
+enum Backing {
+    /// Whole-file mapping; encoded block bytes are sliced in place.
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    Mmap(MmapRegion),
+    /// Portable fallback: positioned buffered reads.
+    Pread(Mutex<File>),
+}
+
+/// Scan summary returned by [`BlockStore::verify_all`].
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// Blocks checked.
+    pub blocks: usize,
+    /// Encoded payload bytes scanned.
+    pub encoded_bytes: u64,
+}
+
+/// Out-of-core chunked `.bmx` v3 dataset.
+pub struct BlockStore {
+    name: String,
+    m: usize,
+    n: usize,
+    block_rows: usize,
+    dtype: Dtype,
+    codec: Codec,
+    entries: Vec<BlockEntry>,
+    backing: Backing,
+    cache: BlockCache,
+}
+
+impl BlockStore {
+    /// Open `path`, preferring a memory mapping (buffered positioned
+    /// reads when mapping is unavailable), with the default cache budget.
+    pub fn open(path: &Path) -> Result<BlockStore> {
+        Self::open_opts(path, true, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Open with the buffered-pread backing unconditionally.
+    pub fn open_buffered(path: &Path) -> Result<BlockStore> {
+        Self::open_opts(path, false, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Open with explicit backing preference and decoded-block cache
+    /// budget (bytes).
+    pub fn open_opts(path: &Path, prefer_mmap: bool, cache_bytes: usize) -> Result<BlockStore> {
+        let mut file =
+            File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let label = path.display().to_string();
+        let mut hdr_bytes = [0u8; BMX3_HEADER_LEN];
+        file.read_exact(&mut hdr_bytes)
+            .with_context(|| format!("read bmx v3 header of {label}"))?;
+        let hdr = V3Header::decode(&hdr_bytes, &label)?;
+        if hdr.m > usize::MAX as u64 / 2 {
+            bail!("{label}: bmx v3 row count {} not addressable on this target", hdr.m);
+        }
+        let file_len = file.metadata()?.len();
+        let blocks = hdr.blocks();
+        let index_len = blocks
+            .checked_mul(BLOCK_ENTRY_LEN as u64)
+            .ok_or_else(|| anyhow!("{label}: block count {blocks} overflows"))?;
+        let index_end = hdr
+            .index_off
+            .checked_add(index_len)
+            .ok_or_else(|| anyhow!("{label}: bmx v3 index offset overflows"))?;
+        if index_end > file_len {
+            bail!(
+                "{label}: truncated bmx v3 index (file holds {file_len} bytes, \
+                 index needs [{}, {index_end}))",
+                hdr.index_off
+            );
+        }
+        if hdr.index_off < BMX3_HEADER_LEN as u64 {
+            bail!("{label}: bmx v3 index offset {} inside the header", hdr.index_off);
+        }
+        // Read + validate the index table.
+        let mut index_bytes = vec![0u8; index_len as usize];
+        file.seek(SeekFrom::Start(hdr.index_off))?;
+        file.read_exact(&mut index_bytes)
+            .with_context(|| format!("read bmx v3 index of {label}"))?;
+        let computed = crc32(&index_bytes);
+        if computed != hdr.index_crc {
+            bail!(
+                "{label}: bmx v3 index checksum mismatch (expected {:#010x}, \
+                 computed {computed:#010x}) — file corrupt or truncated mid-write",
+                hdr.index_crc
+            );
+        }
+        let entries: Vec<BlockEntry> =
+            index_bytes.chunks_exact(BLOCK_ENTRY_LEN).map(BlockEntry::decode).collect();
+        for (i, e) in entries.iter().enumerate() {
+            let ok = e.offset >= BMX3_HEADER_LEN as u64
+                && e.offset.checked_add(e.enc_len).is_some_and(|end| end <= hdr.index_off);
+            if !ok {
+                bail!(
+                    "{label}: bmx v3 block {i} spans [{}, {}] outside the payload region",
+                    e.offset,
+                    e.offset as u128 + e.enc_len as u128
+                );
+            }
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "bmx".into());
+        let backing = 'backing: {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            {
+                if prefer_mmap {
+                    if let Some(region) = MmapRegion::map(&file, file_len as usize) {
+                        region.advise(AccessPattern::Random.advice());
+                        break 'backing Backing::Mmap(region);
+                    }
+                }
+            }
+            #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+            let _ = prefer_mmap;
+            Backing::Pread(Mutex::new(file))
+        };
+        Ok(BlockStore {
+            name,
+            m: hdr.m as usize,
+            n: hdr.n as usize,
+            block_rows: hdr.block_rows as usize,
+            dtype: hdr.dtype,
+            codec: hdr.codec,
+            entries,
+            backing,
+            cache: BlockCache::new(cache_bytes),
+        })
+    }
+
+    /// True when the payload is memory-mapped.
+    pub fn is_mmap(&self) -> bool {
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        {
+            matches!(self.backing, Backing::Mmap(_))
+        }
+        #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+        {
+            false
+        }
+    }
+
+    /// Number of blocks.
+    pub fn blocks(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Rows per block (the last block may be shorter).
+    pub fn block_rows(&self) -> usize {
+        self.block_rows
+    }
+
+    /// On-disk element type.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Per-block codec.
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Decoded-block cache `(hits, misses)`.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.cache.stats()
+    }
+
+    /// The encoded byte range `[start, end)` of block `idx` (tests and
+    /// diagnostics — this is where a corruption probe should flip bytes).
+    pub fn block_byte_range(&self, idx: usize) -> (u64, u64) {
+        let e = &self.entries[idx];
+        (e.offset, e.offset + e.enc_len)
+    }
+
+    /// Rows held by block `idx`.
+    fn rows_in_block(&self, idx: usize) -> usize {
+        let start = idx * self.block_rows;
+        self.block_rows.min(self.m - start)
+    }
+
+    /// Fetch the encoded bytes of `entry` and run `f` over them (zero-copy
+    /// on the mmap backing). I/O failures are errors here — the read path
+    /// turns them into panics, the verifier reports them cleanly.
+    fn with_encoded<R>(&self, entry: &BlockEntry, f: impl FnOnce(&[u8]) -> R) -> Result<R> {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mmap(region) => {
+                let lo = entry.offset as usize;
+                let hi = (entry.offset + entry.enc_len) as usize;
+                Ok(f(&region.bytes()[lo..hi]))
+            }
+            Backing::Pread(file) => {
+                let mut buf = vec![0u8; entry.enc_len as usize];
+                {
+                    let mut fh = file.lock().unwrap();
+                    fh.seek(SeekFrom::Start(entry.offset))
+                        .with_context(|| format!("seek to offset {}", entry.offset))?;
+                    fh.read_exact(&mut buf)
+                        .with_context(|| format!("read {} encoded bytes", entry.enc_len))?;
+                }
+                Ok(f(&buf))
+            }
+        }
+    }
+
+    /// CRC-check and decode block `idx` (shared by the read path and the
+    /// verifier).
+    fn checked_decode(&self, idx: usize) -> Result<Vec<f32>> {
+        let entry = self.entries[idx];
+        let values_len = self.rows_in_block(idx) * self.n;
+        let decoded = self.with_encoded(&entry, |bytes| {
+            let computed = crc32(bytes);
+            if computed != entry.crc {
+                bail!(
+                    "checksum mismatch (expected {:#010x}, computed {computed:#010x}) \
+                     — file corrupt or truncated mid-write",
+                    entry.crc
+                );
+            }
+            decode_block(bytes, values_len, self.dtype, self.codec)
+        });
+        let flat = match decoded {
+            Ok(inner) => inner,
+            Err(io) => Err(io),
+        };
+        flat.with_context(|| format!("block {idx} of {}", self.entries.len()))
+    }
+
+    /// Decoded block `idx` through the LRU cache. Corruption panics with
+    /// the block index (the [`DataSource`] read contract).
+    fn block(&self, idx: usize) -> Arc<Vec<f32>> {
+        if let Some(hit) = self.cache.get(idx) {
+            return hit;
+        }
+        let decoded = self.checked_decode(idx).unwrap_or_else(|e| {
+            panic!("block store '{}': {e}", self.name);
+        });
+        let arc = Arc::new(decoded);
+        self.cache.insert(idx, Arc::clone(&arc));
+        arc
+    }
+
+    /// Verify every block in parallel (CRC + full decode), returning the
+    /// **first** corrupt block's diagnostic. `threads = 0` uses the
+    /// machine default.
+    pub fn verify_all(&self, threads: usize) -> Result<VerifyReport> {
+        let nblocks = self.entries.len();
+        if nblocks == 0 {
+            return Ok(VerifyReport { blocks: 0, encoded_bytes: 0 });
+        }
+        let workers = if threads == 0 {
+            std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4)
+        } else {
+            threads
+        };
+        let pool = ThreadPool::new(workers.min(nblocks));
+        let mut failures: Vec<Option<String>> = vec![None; nblocks];
+        let jobs: Vec<_> = failures
+            .iter_mut()
+            .enumerate()
+            .map(|(idx, slot)| {
+                move || {
+                    if let Err(e) = self.checked_decode(idx) {
+                        *slot = Some(e.to_string());
+                    }
+                }
+            })
+            .collect();
+        pool.scope_run_all(jobs);
+        if let Some(failure) = failures.into_iter().flatten().next() {
+            bail!("block store '{}': {failure}", self.name);
+        }
+        Ok(VerifyReport {
+            blocks: nblocks,
+            encoded_bytes: self.entries.iter().map(|e| e.enc_len).sum(),
+        })
+    }
+}
+
+impl DataSource for BlockStore {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn read_rows(&self, start: usize, out: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(out.len() % n, 0, "read_rows: out shape");
+        let rows = out.len() / n;
+        assert!(start + rows <= self.m, "read_rows: range out of bounds");
+        let mut row = start;
+        let mut filled = 0usize;
+        while filled < rows {
+            let idx = row / self.block_rows;
+            let within = row - idx * self.block_rows;
+            let take = (self.block_rows - within).min(rows - filled);
+            let block = self.block(idx);
+            out[filled * n..(filled + take) * n]
+                .copy_from_slice(&block[within * n..(within + take) * n]);
+            row += take;
+            filled += take;
+        }
+    }
+
+    fn sample_rows(&self, indices: &[usize], out: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(out.len(), indices.len() * n, "sample_rows: out shape");
+        // Consecutive indices usually land in the same block (samplers
+        // sort their draws for locality) — hold the last block across
+        // iterations to skip even the cache lock.
+        let mut held: Option<(usize, Arc<Vec<f32>>)> = None;
+        for (slot, &i) in indices.iter().enumerate() {
+            assert!(i < self.m, "sample_rows: row {i} out of bounds");
+            let idx = i / self.block_rows;
+            let block = match &held {
+                Some((h, b)) if *h == idx => Arc::clone(b),
+                _ => {
+                    let b = self.block(idx);
+                    held = Some((idx, Arc::clone(&b)));
+                    b
+                }
+            };
+            let within = i - idx * self.block_rows;
+            out[slot * n..(slot + 1) * n]
+                .copy_from_slice(&block[within * n..(within + 1) * n]);
+        }
+    }
+
+    fn advise(&self, pattern: AccessPattern) {
+        match &self.backing {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Backing::Mmap(region) => region.advise(pattern.advice()),
+            Backing::Pread(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::store::format::StoreOptions;
+    use crate::store::writer::copy_to_store;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bigmeans_store_source_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    fn toy(m: usize, n: usize) -> Dataset {
+        Dataset::from_vec(
+            "toy",
+            (0..m * n).map(|x| (x as f32) * 0.5 - 11.0).collect(),
+            m,
+            n,
+        )
+    }
+
+    #[test]
+    fn open_reads_geometry_without_touching_payload() {
+        let d = toy(100, 4);
+        let p = tmp("geom.bmx");
+        let opts = StoreOptions { block_rows: 16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        assert_eq!((s.m(), s.n()), (100, 4));
+        assert_eq!(s.blocks(), 7);
+        assert_eq!(s.block_rows(), 16);
+        assert_eq!(s.cache_stats(), (0, 0));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn reads_cross_block_boundaries_and_hit_cache() {
+        let d = toy(100, 4);
+        let p = tmp("cross.bmx");
+        let opts = StoreOptions { block_rows: 16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        for s in [BlockStore::open(&p).unwrap(), BlockStore::open_buffered(&p).unwrap()] {
+            let mut out = vec![0f32; 40 * 4];
+            s.read_rows(10, &mut out); // spans blocks 0..=3
+            assert_eq!(out, &d.points()[10 * 4..50 * 4]);
+            let (h0, m0) = s.cache_stats();
+            assert_eq!(h0, 0);
+            assert_eq!(m0, 4);
+            s.read_rows(10, &mut out); // all warm now
+            assert_eq!(s.cache_stats(), (4, 4));
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn gather_matches_dataset_on_every_backing() {
+        let d = toy(333, 3);
+        let p = tmp("gather.bmx");
+        let opts = StoreOptions { block_rows: 32, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let idx = [0usize, 1, 31, 32, 33, 100, 100, 332, 5];
+        let mut want = vec![0f32; idx.len() * 3];
+        DataSource::sample_rows(&d, &idx, &mut want);
+        for s in [BlockStore::open(&p).unwrap(), BlockStore::open_buffered(&p).unwrap()] {
+            let mut got = vec![0f32; idx.len() * 3];
+            s.sample_rows(&idx, &mut got);
+            assert_eq!(got, want);
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn verify_all_passes_clean_and_names_corrupt_block() {
+        let d = toy(200, 2);
+        let p = tmp("verify.bmx");
+        let opts = StoreOptions { block_rows: 20, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        let report = s.verify_all(2).unwrap();
+        assert_eq!(report.blocks, 10);
+        let (lo, _hi) = s.block_byte_range(6);
+        drop(s);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[lo as usize + 3] ^= 0x20;
+        std::fs::write(&p, &bytes).unwrap();
+        let s = BlockStore::open(&p).unwrap(); // open is O(index): still fine
+        let err = s.verify_all(2).unwrap_err().to_string();
+        assert!(err.contains("block 6"), "diagnostic must name the block: {err}");
+        // A read that never touches block 6 stays clean.
+        let mut row = vec![0f32; 2];
+        s.read_rows(0, &mut row);
+        assert_eq!(row, &d.points()[..2]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_index_rejected_at_open() {
+        let d = toy(64, 2);
+        let p = tmp("index.bmx");
+        copy_to_store(&d, &p, StoreOptions { block_rows: 8, ..StoreOptions::default() })
+            .unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 2; // inside the trailing index table
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = BlockStore::open(&p).unwrap_err().to_string();
+        assert!(err.contains("index checksum"), "unexpected error: {err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncated_file_rejected_at_open() {
+        let d = toy(64, 2);
+        let p = tmp("trunc.bmx");
+        copy_to_store(&d, &p, StoreOptions { block_rows: 8, ..StoreOptions::default() })
+            .unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 40]).unwrap();
+        assert!(BlockStore::open(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn read_of_corrupt_block_panics_with_block_index() {
+        let d = toy(80, 2);
+        let p = tmp("panic.bmx");
+        let opts = StoreOptions { block_rows: 16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        let (lo, _) = s.block_byte_range(2);
+        drop(s);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[lo as usize] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = vec![0f32; 2];
+            s.read_rows(40, &mut out); // row 40 lives in block 2
+        }))
+        .unwrap_err();
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("block 2"), "panic must name the block: {msg}");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,315 @@
+//! Streaming `.bmx` v3 writer.
+//!
+//! [`BlockWriter`] buffers appended rows until whole blocks are available,
+//! encodes them (dtype conversion, codec, CRC-32) **in parallel** on an
+//! owned [`ThreadPool`] — encoding is the CPU cost of ingest, the write
+//! itself is sequential — and streams the encoded blocks out back to
+//! back. [`BlockWriter::finish`] flushes the final partial block, appends
+//! the block-index table, and patches the header (row count, index
+//! offset, index CRC), so memory stays O(pending rows) regardless of the
+//! dataset size.
+
+use std::fs::File;
+use std::io::{BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::bail;
+use crate::data::source::DataSource;
+use crate::store::codec::encode_block;
+use crate::store::format::{BlockEntry, StoreOptions, V3Header, BMX3_HEADER_LEN};
+use crate::util::error::{Context, Result};
+use crate::util::hash::{crc32, Crc32};
+use crate::util::threadpool::ThreadPool;
+
+/// Streaming writer for the chunked v3 format.
+pub struct BlockWriter {
+    w: BufWriter<File>,
+    n: usize,
+    opts: StoreOptions,
+    /// Rows awaiting encoding (row-major, `< block_rows` after each flush
+    /// unless the caller batched more than one block).
+    pending: Vec<f32>,
+    rows: u64,
+    entries: Vec<BlockEntry>,
+    cursor: u64,
+    pool: ThreadPool,
+}
+
+impl BlockWriter {
+    /// Create `path` and write a placeholder header (patched on
+    /// [`BlockWriter::finish`]).
+    pub fn create(path: &Path, n: usize, opts: StoreOptions) -> Result<Self> {
+        if n == 0 || n > u32::MAX as usize {
+            bail!("block store: invalid feature count {n}");
+        }
+        if opts.block_rows == 0 || opts.block_rows > u32::MAX as usize {
+            bail!("block store: invalid block_rows {}", opts.block_rows);
+        }
+        let file =
+            File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        let header = V3Header {
+            m: 0,
+            n: n as u32,
+            block_rows: opts.block_rows as u32,
+            dtype: opts.dtype,
+            codec: opts.codec,
+            index_off: 0,
+            index_crc: 0,
+        };
+        w.write_all(&header.encode())?;
+        let workers = if opts.threads == 0 {
+            std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4)
+        } else {
+            opts.threads
+        };
+        Ok(BlockWriter {
+            w,
+            n,
+            opts,
+            pending: Vec::new(),
+            rows: 0,
+            entries: Vec::new(),
+            cursor: BMX3_HEADER_LEN as u64,
+            pool: ThreadPool::new(workers),
+        })
+    }
+
+    /// Append one or more rows (`values.len()` must be a multiple of `n`).
+    /// Whole blocks are encoded and written eagerly; feeding several
+    /// blocks per call lets them encode in parallel.
+    pub fn write_rows(&mut self, values: &[f32]) -> Result<()> {
+        if values.len() % self.n != 0 {
+            bail!(
+                "block store: write of {} values is not a whole number of {}-wide rows",
+                values.len(),
+                self.n
+            );
+        }
+        self.pending.extend_from_slice(values);
+        self.rows += (values.len() / self.n) as u64;
+        self.flush_complete_blocks(false)
+    }
+
+    /// Encode and write every complete block in `pending` (plus the final
+    /// partial block when `all` is set).
+    fn flush_complete_blocks(&mut self, all: bool) -> Result<()> {
+        let block_values = self.opts.block_rows * self.n;
+        let complete = self.pending.len() / block_values;
+        let mut take = complete * block_values;
+        if all && take < self.pending.len() {
+            take = self.pending.len();
+        }
+        if take == 0 {
+            return Ok(());
+        }
+        let (dtype, codec) = (self.opts.dtype, self.opts.codec);
+        let chunks: Vec<&[f32]> = self.pending[..take].chunks(block_values).collect();
+        let mut encoded: Vec<(Vec<u8>, u32)> = Vec::new();
+        if chunks.len() > 1 && self.pool.size() > 1 {
+            encoded.resize_with(chunks.len(), Default::default);
+            let jobs: Vec<_> = chunks
+                .iter()
+                .zip(encoded.iter_mut())
+                .map(|(chunk, slot)| {
+                    let chunk: &[f32] = chunk;
+                    move || {
+                        let bytes = encode_block(chunk, dtype, codec);
+                        let crc = crc32(&bytes);
+                        *slot = (bytes, crc);
+                    }
+                })
+                .collect();
+            self.pool.scope_run_all(jobs);
+        } else {
+            for chunk in &chunks {
+                let bytes = encode_block(chunk, dtype, codec);
+                let crc = crc32(&bytes);
+                encoded.push((bytes, crc));
+            }
+        }
+        for (bytes, crc) in &encoded {
+            self.w.write_all(bytes)?;
+            self.entries.push(BlockEntry {
+                offset: self.cursor,
+                enc_len: bytes.len() as u64,
+                crc: *crc,
+            });
+            self.cursor += bytes.len() as u64;
+        }
+        self.pending.drain(..take);
+        Ok(())
+    }
+
+    /// Flush the tail block, append the index table, patch the header, and
+    /// return the row count.
+    pub fn finish(mut self) -> Result<u64> {
+        self.flush_complete_blocks(true)?;
+        debug_assert!(self.pending.is_empty());
+        let index_off = self.cursor;
+        let mut index_crc = Crc32::new();
+        for entry in &self.entries {
+            let bytes = entry.encode();
+            index_crc.update(&bytes);
+            self.w.write_all(&bytes)?;
+        }
+        let header = V3Header {
+            m: self.rows,
+            n: self.n as u32,
+            block_rows: self.opts.block_rows as u32,
+            dtype: self.opts.dtype,
+            codec: self.opts.codec,
+            index_off,
+            index_crc: index_crc.finalize(),
+        };
+        self.w.flush()?;
+        self.w.seek(SeekFrom::Start(0))?;
+        self.w.write_all(&header.encode())?;
+        self.w.flush()?;
+        Ok(self.rows)
+    }
+
+    /// Blocks written so far (complete blocks only until `finish`).
+    pub fn blocks_written(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Rows copied per slab when converting a whole [`DataSource`]: enough
+/// blocks to keep every encode worker busy, capped so the slab buffer
+/// stays modest.
+fn slab_rows(block_rows: usize, workers: usize) -> usize {
+    (block_rows * workers.max(4)).min(1 << 20).max(block_rows)
+}
+
+/// Stream an entire source into a v3 block store. Returns `(m, n)`.
+/// This is the engine behind `bigmeans convert` and `generate`: memory is
+/// bounded by one slab regardless of the dataset size.
+pub fn copy_to_store(
+    src: &dyn DataSource,
+    path: &Path,
+    opts: StoreOptions,
+) -> Result<(usize, usize)> {
+    let (m, n) = (src.m(), src.n());
+    if m == 0 || n == 0 {
+        bail!("block store: refusing to write an empty {m}×{n} store");
+    }
+    let mut writer = BlockWriter::create(path, n, opts)?;
+    let slab = slab_rows(opts.block_rows, writer.pool.size());
+    let mut buf = vec![0f32; slab.min(m) * n];
+    let mut start = 0usize;
+    while start < m {
+        let rows = slab.min(m - start);
+        src.read_rows(start, &mut buf[..rows * n]);
+        writer.write_rows(&buf[..rows * n])?;
+        start += rows;
+    }
+    let written = writer.finish()?;
+    debug_assert_eq!(written as usize, m);
+    Ok((m, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::store::format::{Codec, Dtype};
+    use crate::store::source::BlockStore;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bigmeans_store_writer_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{}_{name}", std::process::id()))
+    }
+
+    fn toy(m: usize, n: usize) -> Dataset {
+        Dataset::from_vec(
+            "toy",
+            (0..m * n).map(|x| (x as f32) * 0.25 - 3.0).collect(),
+            m,
+            n,
+        )
+    }
+
+    #[test]
+    fn incremental_writes_match_bulk_copy() {
+        let d = toy(100, 3);
+        let opts = StoreOptions { block_rows: 16, threads: 2, ..StoreOptions::default() };
+        let p1 = tmp("incr.bmx");
+        let p2 = tmp("bulk.bmx");
+        let mut w = BlockWriter::create(&p1, 3, opts).unwrap();
+        // Deliberately ragged pushes: 7 rows, 50 rows, the rest.
+        w.write_rows(&d.points()[..7 * 3]).unwrap();
+        w.write_rows(&d.points()[7 * 3..57 * 3]).unwrap();
+        w.write_rows(&d.points()[57 * 3..]).unwrap();
+        assert_eq!(w.finish().unwrap(), 100);
+        copy_to_store(&d, &p2, opts).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn parallel_and_serial_encoding_produce_identical_files() {
+        let d = toy(4096, 4);
+        for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+            let base = StoreOptions { block_rows: 128, codec, ..StoreOptions::default() };
+            let p1 = tmp(&format!("serial_{}.bmx", codec.name()));
+            let p2 = tmp(&format!("parallel_{}.bmx", codec.name()));
+            copy_to_store(&d, &p1, StoreOptions { threads: 1, ..base }).unwrap();
+            copy_to_store(&d, &p2, StoreOptions { threads: 4, ..base }).unwrap();
+            assert_eq!(
+                std::fs::read(&p1).unwrap(),
+                std::fs::read(&p2).unwrap(),
+                "{codec:?}"
+            );
+            let _ = std::fs::remove_file(&p1);
+            let _ = std::fs::remove_file(&p2);
+        }
+    }
+
+    #[test]
+    fn partial_tail_block_preserved() {
+        let d = toy(37, 2); // 4 full 8-row blocks + a 5-row tail
+        let p = tmp("tail.bmx");
+        let opts = StoreOptions { block_rows: 8, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let store = BlockStore::open(&p).unwrap();
+        assert_eq!((store.m(), store.n()), (37, 2));
+        assert_eq!(store.blocks(), 5);
+        let mut out = vec![0f32; 37 * 2];
+        store.read_rows(0, &mut out);
+        assert_eq!(out, d.points());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn f16_store_quantises_deterministically() {
+        let d = toy(64, 2);
+        let p = tmp("f16.bmx");
+        let opts =
+            StoreOptions { block_rows: 16, dtype: Dtype::F16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let store = BlockStore::open(&p).unwrap();
+        let mut out = vec![0f32; 64 * 2];
+        store.read_rows(0, &mut out);
+        let expected: Vec<f32> = d
+            .points()
+            .iter()
+            .map(|&v| crate::util::half::f32_from_f16(crate::util::half::f16_from_f32(v)))
+            .collect();
+        assert_eq!(out, expected);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn invalid_shapes_rejected() {
+        let p = tmp("bad.bmx");
+        assert!(BlockWriter::create(&p, 0, StoreOptions::default()).is_err());
+        let opts = StoreOptions { block_rows: 0, ..StoreOptions::default() };
+        assert!(BlockWriter::create(&p, 2, opts).is_err());
+        let mut w = BlockWriter::create(&p, 3, StoreOptions::default()).unwrap();
+        assert!(w.write_rows(&[1.0, 2.0]).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -24,8 +24,9 @@ use crate::util::rng::Rng;
 
 /// Where degenerate centroid slots are parked before scoring (mirrors the
 /// final-pass parking in the coordinator's `finish`): far enough that no
-/// real point ever picks them.
-const DEGENERATE_PAD: f32 = 1.0e15;
+/// real point ever picks them. Public so the streaming drift remediation
+/// can park the same way before ranking centroids on the reservoir.
+pub const DEGENERATE_PAD: f32 = 1.0e15;
 
 /// SSE of `centroids` on `points`, with degenerate slots parked out of the
 /// way first. The shared scoring kernel of both validation flavours.
@@ -158,6 +159,12 @@ impl Reservoir {
     /// Total rows offered so far.
     pub fn seen(&self) -> u64 {
         self.seen
+    }
+
+    /// The resident sample, row-major (`len() × n`). Streaming drift
+    /// remediation draws replacement centroids from exactly this sample.
+    pub fn points(&self) -> &[f32] {
+        &self.points
     }
 
     /// Validation SSE of `centroids` on the current reservoir contents.

@@ -1,0 +1,139 @@
+//! IEEE 754 binary16 ("half") conversions — the `f16` dtype of the `.bmx`
+//! v3 store. Stable Rust has no `f16` primitive, so the store keeps half
+//! floats as raw `u16` bit patterns and converts at the block boundary:
+//! encode with round-to-nearest-even on write, widen exactly on read.
+//!
+//! Properties the store relies on (asserted by the tests below):
+//! * `f32_from_f16(f16_from_f32(x))` is exact for every value binary16
+//!   represents (including subnormals and ±∞);
+//! * out-of-range magnitudes saturate to ±∞, sub-subnormal magnitudes
+//!   flush to ±0 — both deterministic;
+//! * NaN stays NaN.
+
+/// Round an `f32` to the nearest binary16 bit pattern (ties to even).
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // Infinity or NaN. Any NaN maps to a canonical quiet half NaN.
+        return if abs > 0x7F80_0000 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let e16 = (abs >> 23) as i32 - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7C00; // overflow → ±∞
+    }
+    if e16 <= 0 {
+        if e16 < -10 {
+            return sign; // underflow past the smallest subnormal → ±0
+        }
+        // Subnormal result: shift the (implicit-bit) mantissa into place,
+        // rounding to nearest even on the dropped bits.
+        let man = (abs & 0x007F_FFFF) | 0x0080_0000;
+        let shift = (14 - e16) as u32; // 14..=24
+        let kept = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && kept & 1 == 1) {
+            kept + 1
+        } else {
+            kept
+        };
+        return sign | rounded as u16;
+    }
+    // Normal result: keep the top 10 mantissa bits, round on the low 13.
+    let man = abs & 0x007F_FFFF;
+    let kept = ((e16 as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && kept & 1 == 1) {
+        kept + 1 // may carry into the exponent; 0x7C00 (±∞) is then correct
+    } else {
+        kept
+    };
+    sign | rounded as u16
+}
+
+/// Widen a binary16 bit pattern to `f32` (exact for every half value).
+pub fn f32_from_f16(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    if exp == 0 {
+        if man == 0 {
+            return f32::from_bits(sign); // ±0
+        }
+        // Subnormal: value = man · 2⁻²⁴ (exact in f32: man has ≤ 10 bits).
+        let v = man as f32 * (1.0 / 16_777_216.0);
+        return f32::from_bits(sign | v.to_bits());
+    }
+    if exp == 0x1F {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13)); // ±∞ / NaN
+    }
+    f32::from_bits(sign | ((exp + 112) << 23) | (man << 13))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &v in &[
+            0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, -2.25, 0.0999755859375, 65504.0, -65504.0,
+            6.103515625e-5,  // smallest normal half
+            5.9604645e-8,    // smallest subnormal half (2⁻²⁴)
+        ] {
+            let h = f16_from_f32(v);
+            let back = f32_from_f16(h);
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} → {h:#06x} → {back}");
+        }
+    }
+
+    #[test]
+    fn double_roundtrip_is_stable() {
+        // f32 → f16 → f32 → f16 must be a fixed point for every pattern.
+        let mut h = 0u16;
+        loop {
+            let v = f32_from_f16(h);
+            if !v.is_nan() {
+                assert_eq!(f16_from_f32(v), h, "pattern {h:#06x}");
+            }
+            if h == u16::MAX {
+                break;
+            }
+            h += 1;
+        }
+    }
+
+    #[test]
+    fn saturation_and_flush() {
+        assert_eq!(f16_from_f32(1.0e9), 0x7C00);
+        assert_eq!(f16_from_f32(-1.0e9), 0xFC00);
+        assert_eq!(f16_from_f32(f32::INFINITY), 0x7C00);
+        assert_eq!(f16_from_f32(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f16_from_f32(1.0e-10), 0x0000);
+        assert_eq!(f16_from_f32(-1.0e-10), 0x8000);
+        assert!(f32_from_f16(f16_from_f32(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2⁻¹¹ sits exactly between 1.0 and the next half (1 + 2⁻¹⁰):
+        // ties-to-even keeps 1.0. Just above the tie rounds up.
+        assert_eq!(f16_from_f32(1.0 + 0.00048828125), 0x3C00);
+        assert_eq!(f16_from_f32(1.0 + 0.000489), 0x3C01);
+        // 1 + 3·2⁻¹¹ ties between 0x3C01 and 0x3C02 → even (0x3C02).
+        assert_eq!(f16_from_f32(1.0 + 3.0 * 0.00048828125), 0x3C02);
+    }
+
+    #[test]
+    fn ordering_preserved_under_quantisation() {
+        let mut prev = f32::NEG_INFINITY;
+        for i in -100..=100 {
+            let v = i as f32 * 0.37;
+            let q = f32_from_f16(f16_from_f32(v));
+            assert!(q >= prev, "quantisation must be monotone: {q} < {prev}");
+            prev = q;
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! A homegrown byte-oriented LZ77/LZSS codec — the `lz` block codec of the
+//! `.bmx` v3 store, dependency-free by construction.
+//!
+//! Format: a sequence of groups, each a *flags* byte followed by eight
+//! items (fewer in the final group). Flag bit `b` (LSB first) describes
+//! item `b`:
+//!
+//! * `0` — a literal: one raw byte;
+//! * `1` — a match: three bytes — `u16` LE back-distance (1..=65535 into
+//!   the already-decoded output) and `u8` length-minus-4 (match lengths
+//!   4..=259). Matches may self-overlap (RLE falls out naturally).
+//!
+//! The stream carries no decoded-length field of its own: block stores
+//! know every block's decoded size from the header geometry, so
+//! [`decompress`] takes the expected output length and validates the
+//! stream against it — a corrupt or truncated stream fails with a clear
+//! error instead of producing a silently short block.
+//!
+//! The compressor is a greedy single-pass matcher with one candidate per
+//! 4-byte hash bucket. Worst case the output is `9/8 · len + 1` bytes
+//! (all literals); block stores record the encoded length per block, so
+//! incompressible data is handled, never rejected.
+
+use crate::bail;
+use crate::util::error::Result;
+
+/// Shortest encodable match.
+const MIN_MATCH: usize = 4;
+
+/// Longest encodable match (`u8` length field + [`MIN_MATCH`]).
+const MAX_MATCH: usize = 255 + MIN_MATCH;
+
+/// Largest encodable back-distance (`u16` field; 0 is invalid).
+const MAX_DISTANCE: usize = u16::MAX as usize;
+
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn hash4(bytes: &[u8]) -> usize {
+    let v = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Compress `input`. Deterministic: the same bytes always produce the same
+/// stream (the block CRC in the v3 index covers the *encoded* bytes).
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 16);
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut pos = 0usize;
+    let mut flag_pos = 0usize;
+    let mut item = 0u8;
+    while pos < input.len() {
+        if item == 0 {
+            flag_pos = out.len();
+            out.push(0);
+        }
+        // Find the best (single-candidate) match at `pos`.
+        let mut match_len = 0usize;
+        let mut match_dist = 0usize;
+        if pos + MIN_MATCH <= input.len() {
+            let h = hash4(&input[pos..]);
+            let cand = table[h];
+            table[h] = pos;
+            if cand != usize::MAX && pos - cand <= MAX_DISTANCE {
+                let limit = (input.len() - pos).min(MAX_MATCH);
+                let mut len = 0usize;
+                while len < limit && input[cand + len] == input[pos + len] {
+                    len += 1;
+                }
+                if len >= MIN_MATCH {
+                    match_len = len;
+                    match_dist = pos - cand;
+                }
+            }
+        }
+        if match_len > 0 {
+            out[flag_pos] |= 1 << item;
+            out.push(match_dist as u8);
+            out.push((match_dist >> 8) as u8);
+            out.push((match_len - MIN_MATCH) as u8);
+            // Seed the hash table through the matched region so the next
+            // positions can find overlapping repeats.
+            let end = pos + match_len;
+            let mut p = pos + 1;
+            while p < end && p + MIN_MATCH <= input.len() {
+                table[hash4(&input[p..])] = p;
+                p += 1;
+            }
+            pos = end;
+        } else {
+            out.push(input[pos]);
+            pos += 1;
+        }
+        item = (item + 1) % 8;
+    }
+    out
+}
+
+/// Decompress a [`compress`]-produced stream into exactly `output_len`
+/// bytes. Fails on truncation, trailing garbage, out-of-range match
+/// distances, or a stream that does not land exactly on `output_len`.
+pub fn decompress(input: &[u8], output_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(output_len);
+    let mut i = 0usize;
+    while out.len() < output_len {
+        if i >= input.len() {
+            bail!("lz: truncated stream ({} of {output_len} bytes decoded)", out.len());
+        }
+        let flags = input[i];
+        i += 1;
+        let mut bit = 0u8;
+        while bit < 8 && out.len() < output_len {
+            if flags & (1 << bit) != 0 {
+                if i + 3 > input.len() {
+                    bail!("lz: truncated match token at byte {i}");
+                }
+                let dist = input[i] as usize | ((input[i + 1] as usize) << 8);
+                let len = input[i + 2] as usize + MIN_MATCH;
+                i += 3;
+                if dist == 0 || dist > out.len() {
+                    bail!("lz: match distance {dist} out of range at {} decoded bytes", out.len());
+                }
+                if out.len() + len > output_len {
+                    bail!("lz: match overruns the {output_len}-byte output");
+                }
+                let start = out.len() - dist;
+                for j in 0..len {
+                    let b = out[start + j];
+                    out.push(b);
+                }
+            } else {
+                if i >= input.len() {
+                    bail!("lz: truncated literal at byte {i}");
+                }
+                out.push(input[i]);
+                i += 1;
+            }
+            bit += 1;
+        }
+    }
+    if i != input.len() {
+        bail!("lz: {} trailing bytes after the {output_len}-byte output", input.len() - i);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let enc = compress(data);
+        decompress(&enc, data.len()).unwrap()
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(compress(&[]), Vec::<u8>::new());
+        assert_eq!(decompress(&[], 0).unwrap(), Vec::<u8>::new());
+        for data in [&b"a"[..], b"ab", b"abc", b"abcd"] {
+            assert_eq!(roundtrip(data), data);
+        }
+    }
+
+    #[test]
+    fn repetitive_data_compresses_and_roundtrips() {
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 7) as u8).collect();
+        let enc = compress(&data);
+        assert!(enc.len() < data.len() / 4, "{} vs {}", enc.len(), data.len());
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn self_overlapping_match_rle() {
+        let data = vec![0x42u8; 5000];
+        let enc = compress(&data);
+        assert!(enc.len() < 100, "RLE run should collapse, got {}", enc.len());
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn random_data_roundtrips_with_bounded_expansion() {
+        let mut rng = Rng::new(0xC0DEC);
+        let data: Vec<u8> = (0..65_536).map(|_| rng.next_u64() as u8).collect();
+        let enc = compress(&data);
+        assert!(enc.len() <= data.len() * 9 / 8 + 2, "expansion {}", enc.len());
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn structured_float_like_data_roundtrips() {
+        // Byte-shuffled float payloads are long runs of near-constant
+        // bytes — the case the store's `lz` codec exists for.
+        let mut data = Vec::new();
+        for lane in 0..4u8 {
+            for i in 0..4096u32 {
+                data.push(lane.wrapping_mul(37).wrapping_add((i / 256) as u8));
+            }
+        }
+        let enc = compress(&data);
+        assert!(enc.len() < data.len() / 8);
+        assert_eq!(decompress(&enc, data.len()).unwrap(), data);
+    }
+
+    #[test]
+    fn long_matches_cross_group_boundaries() {
+        let mut data = b"the quick brown fox ".repeat(400);
+        data.extend_from_slice(b"tail");
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn corrupt_streams_rejected() {
+        let data: Vec<u8> = (0..1000).map(|i| (i % 11) as u8).collect();
+        let enc = compress(&data);
+        // Truncation.
+        assert!(decompress(&enc[..enc.len() - 1], data.len()).is_err());
+        // Wrong expected length (too short -> trailing bytes; too long ->
+        // truncated stream).
+        assert!(decompress(&enc, data.len() - 1).is_err());
+        assert!(decompress(&enc, data.len() + 1).is_err());
+        // A match token pointing before the start of the output.
+        let bogus = [0x01u8, 0xFF, 0xFF, 0x00];
+        assert!(decompress(&bogus, 300).is_err());
+    }
+}

@@ -1,7 +1,13 @@
-//! Raw memory-management hints — a thin `madvise` shim over libc FFI so
-//! the crate stays dependency-free. Purely advisory: failures are ignored
-//! (the kernel may reject unaligned or unsupported requests) and non-unix
-//! builds compile to a no-op.
+//! Raw memory management for the out-of-core backends, dependency-free:
+//! a thin `madvise` shim over libc FFI plus [`MmapRegion`], the owned
+//! read-only whole-file memory mapping shared by the `.bmx` v1/v2 reader,
+//! the `.bmx` v3 block store, and the CSV `.idx` sidecar index.
+//!
+//! The hints are purely advisory: failures are ignored (the kernel may
+//! reject unaligned or unsupported requests) and non-unix builds compile
+//! to a no-op. `MmapRegion` itself exists only on little-endian 64-bit
+//! unix targets — callers fall back to buffered positioned reads
+//! elsewhere.
 
 /// Expected access pattern for a mapped region.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -51,5 +57,88 @@ pub fn madvise(ptr: *mut u8, len: usize, advice: Advice) {
     #[cfg(not(unix))]
     {
         let _ = (ptr, len, advice);
+    }
+}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod map_sys {
+    //! Raw `mmap` FFI — the process links libc anyway, so no crate needed.
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+}
+
+/// An owned read-only memory mapping of a whole file.
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+pub struct MmapRegion {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+// Safety: the region is read-only for its whole lifetime and unmapped only
+// on drop, so shared references from any thread are fine.
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+unsafe impl Send for MmapRegion {}
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+unsafe impl Sync for MmapRegion {}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+impl MmapRegion {
+    /// Map the first `len` bytes of `file` read-only. Returns `None` for
+    /// empty files or when the kernel refuses the mapping — callers fall
+    /// back to buffered reads.
+    pub fn map(file: &std::fs::File, len: usize) -> Option<MmapRegion> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            return None;
+        }
+        let ptr = unsafe {
+            map_sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                map_sys::PROT_READ,
+                map_sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            None
+        } else {
+            Some(MmapRegion { ptr, len })
+        }
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    /// Forward an access-pattern hint to `madvise` for the whole mapping.
+    pub fn advise(&self, advice: Advice) {
+        madvise(self.ptr as *mut u8, self.len, advice);
+    }
+}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        unsafe {
+            map_sys::munmap(self.ptr, self.len);
+        }
     }
 }

@@ -1,12 +1,14 @@
 //! Substrate utilities built from scratch for the offline environment:
 //! deterministic RNG, scoped thread pool, JSON, CLI parsing, property-test
-//! driver, error handling, CRC-32, `madvise` hints, and a dense row-major
-//! matrix.
+//! driver, error handling, CRC-32, an LZ77 codec, binary16 conversions,
+//! `madvise`/mmap shims, and a dense row-major matrix.
 
 pub mod cli;
 pub mod error;
+pub mod half;
 pub mod hash;
 pub mod json;
+pub mod lz;
 pub mod matrix;
 pub mod mem;
 pub mod prop;

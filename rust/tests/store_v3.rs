@@ -1,0 +1,334 @@
+//! Integration: the `.bmx` v3 block-store storage engine.
+//!
+//! Contracts pinned down here:
+//!
+//! 1. **Value transparency** — for f32 payloads every codec is lossless,
+//!    so a seeded Big-means run (sequential, chunk-parallel, tuned) over a
+//!    block store reproduces the in-memory run bit-for-bit.
+//! 2. **Per-block integrity** — flipping one byte in block *i* leaves the
+//!    file openable (open is O(index)), `verify_all` names block *i*, a
+//!    read touching block *i* panics naming block *i*, and reads that
+//!    avoid it stay clean.
+//! 3. **Round trips** — every dtype × codec × backing combination decodes
+//!    back to the expected values (exact for f32/f64, quantised for f16).
+//! 4. **Legacy regression** — v1/v2 files keep loading through the
+//!    version-sniffing loader, and the block backend rejects them with a
+//!    reconversion hint.
+
+use std::path::PathBuf;
+
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::coordinator::{produce_from_source, ChunkQueue, StreamingBigMeans};
+use bigmeans::data::bmx::save_bmx;
+use bigmeans::data::synth::Synth;
+use bigmeans::data::{bmx_version, loader, DataBackend};
+use bigmeans::store::{copy_to_store, BlockStore, Codec, Dtype, StoreOptions};
+use bigmeans::tuner::{run_race, ArmSpec, TunerConfig};
+use bigmeans::util::half::{f16_from_f32, f32_from_f16};
+use bigmeans::{BigMeans, BigMeansResult, DataSource, Dataset};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("bigmeans_store_v3_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+fn blobs(m: usize, n: usize, k_true: usize, seed: u64) -> Dataset {
+    Synth::GaussianMixture {
+        m,
+        n,
+        k_true,
+        spread: 0.3,
+        box_half_width: 25.0,
+    }
+    .generate("store", seed)
+}
+
+fn sequential_cfg(k: usize, s: usize, chunks: u64) -> BigMeansConfig {
+    BigMeansConfig::new(k, s)
+        .with_stop(StopCondition::MaxChunks(chunks))
+        .with_parallel(ParallelMode::Sequential)
+        .with_seed(42)
+}
+
+fn assert_bit_identical(a: &BigMeansResult, b: &BigMeansResult, label: &str) {
+    assert_eq!(
+        a.objective.to_bits(),
+        b.objective.to_bits(),
+        "{label}: objectives differ: {} vs {}",
+        a.objective,
+        b.objective
+    );
+    assert_eq!(a.centroids, b.centroids, "{label}: centroids differ");
+    assert_eq!(a.assignment, b.assignment, "{label}: assignments differ");
+    assert_eq!(a.counters, b.counters, "{label}: counters differ");
+}
+
+#[test]
+fn roundtrip_matrix_dtype_codec_backing() {
+    let d = blobs(1_000, 5, 3, 1);
+    let f16_expected: Vec<f32> = d
+        .points()
+        .iter()
+        .map(|&v| f32_from_f16(f16_from_f32(v)))
+        .collect();
+    for dtype in [Dtype::F32, Dtype::F64, Dtype::F16] {
+        for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+            let p = tmp(&format!("rt_{}_{}.bmx", dtype.name(), codec.name()));
+            let opts = StoreOptions { block_rows: 128, dtype, codec, threads: 2 };
+            assert_eq!(copy_to_store(&d, &p, opts).unwrap(), (1_000, 5));
+            assert_eq!(bmx_version(&p).unwrap(), 3);
+            for (backing, store) in [
+                ("mmap", BlockStore::open(&p).unwrap()),
+                ("buffered", BlockStore::open_buffered(&p).unwrap()),
+            ] {
+                let label = format!("{}/{}/{backing}", dtype.name(), codec.name());
+                assert_eq!((store.m(), store.n()), (1_000, 5), "{label}");
+                assert_eq!(store.dtype(), dtype, "{label}");
+                assert_eq!(store.codec(), codec, "{label}");
+                let mut all = vec![0f32; 1_000 * 5];
+                store.read_rows(0, &mut all);
+                match dtype {
+                    Dtype::F16 => assert_eq!(all, f16_expected, "{label}"),
+                    _ => assert_eq!(all, d.points(), "{label}"),
+                }
+                // Scattered gather agrees with the block reads.
+                let idx = [999usize, 0, 127, 128, 129, 500, 500];
+                let mut got = vec![0f32; idx.len() * 5];
+                store.sample_rows(&idx, &mut got);
+                for (slot, &i) in idx.iter().enumerate() {
+                    assert_eq!(
+                        got[slot * 5..(slot + 1) * 5],
+                        all[i * 5..(i + 1) * 5],
+                        "{label}: row {i}"
+                    );
+                }
+            }
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}
+
+#[test]
+fn sequential_pipeline_bit_identical_mem_vs_block_all_codecs() {
+    let data = blobs(30_000, 6, 5, 2);
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(5, 2048, 20)).run(src).unwrap()
+    };
+    let mem = run(&data);
+    assert!(mem.objective.is_finite());
+    for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+        let p = tmp(&format!("seq_{}.bmx", codec.name()));
+        let opts = StoreOptions { block_rows: 4096, codec, ..StoreOptions::default() };
+        copy_to_store(&data, &p, opts).unwrap();
+        let mapped = BlockStore::open(&p).unwrap();
+        let buffered = BlockStore::open_buffered(&p).unwrap();
+        assert_bit_identical(&mem, &run(&mapped), &format!("mem vs block/{codec:?}/mmap"));
+        assert_bit_identical(
+            &mem,
+            &run(&buffered),
+            &format!("mem vs block/{codec:?}/buffered"),
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+#[test]
+fn chunk_parallel_and_tuner_run_unmodified_on_block_backend() {
+    // One worker keeps both pipelines deterministic, so the block store
+    // must reproduce the in-memory numbers bit-for-bit — the acceptance
+    // gate for "all coordinators and --mode tune run on --backend block".
+    let data = blobs(12_000, 4, 3, 3);
+    let p = tmp("coord.bmx");
+    copy_to_store(&data, &p, StoreOptions::default()).unwrap();
+    let store = BlockStore::open(&p).unwrap();
+
+    let par = |src: &dyn DataSource| {
+        let mut cfg = BigMeansConfig::new(3, 1024)
+            .with_stop(StopCondition::MaxChunks(12))
+            .with_parallel(ParallelMode::ChunkParallel)
+            .with_seed(7);
+        cfg.threads = 1;
+        BigMeans::new(cfg).run(src).unwrap()
+    };
+    assert_bit_identical(&par(&data), &par(&store), "chunk-parallel mem vs block");
+
+    let race = |src: &dyn DataSource| {
+        let mut cfg = BigMeansConfig::new(3, 512)
+            .with_stop(StopCondition::MaxChunks(10))
+            .with_parallel(ParallelMode::ChunkParallel)
+            .with_seed(11);
+        cfg.threads = 1;
+        let tuner = TunerConfig::default()
+            .with_arms(vec![ArmSpec::new(0.5), ArmSpec::new(1.0), ArmSpec::new(2.0)]);
+        run_race(&cfg, &tuner, src).unwrap()
+    };
+    let mem_race = race(&data);
+    let block_race = race(&store);
+    assert_eq!(
+        mem_race.result.objective.to_bits(),
+        block_race.result.objective.to_bits(),
+        "tuned objective must match across backends"
+    );
+    assert_eq!(
+        mem_race.validation_objective.to_bits(),
+        block_race.validation_objective.to_bits()
+    );
+    assert_eq!(mem_race.chosen_chunk_rows, block_race.chosen_chunk_rows);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn streaming_consumes_a_block_store() {
+    let data = blobs(6_000, 3, 3, 4);
+    let p = tmp("stream.bmx");
+    let opts = StoreOptions { block_rows: 512, codec: Codec::Lz, ..StoreOptions::default() };
+    copy_to_store(&data, &p, opts).unwrap();
+    let store = BlockStore::open(&p).unwrap();
+
+    let run = |src: &dyn DataSource| {
+        let cfg = BigMeansConfig::new(3, 500)
+            .with_stop(StopCondition::MaxChunks(50))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(5);
+        let engine = StreamingBigMeans::new(cfg, 3);
+        let queue = ChunkQueue::new(4);
+        std::thread::scope(|scope| {
+            let q = std::sync::Arc::clone(&queue);
+            scope.spawn(move || {
+                produce_from_source(src, &q, 500);
+                q.close();
+            });
+            engine.run(&queue)
+        })
+    };
+    let mem = run(&data);
+    let ooc = run(&store);
+    assert_eq!(mem.chunks_processed, 12); // ceil(6000 / 500)
+    assert_eq!(ooc.chunks_processed, 12);
+    assert_eq!(
+        mem.best_chunk_objective.to_bits(),
+        ooc.best_chunk_objective.to_bits(),
+        "streamed chunks must be value-identical"
+    );
+    assert_eq!(mem.centroids, ooc.centroids);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn corrupted_block_is_isolated_and_named() {
+    let data = blobs(4_000, 4, 3, 5);
+    let p = tmp("corrupt.bmx");
+    let opts = StoreOptions { block_rows: 256, codec: Codec::Shuffle, ..StoreOptions::default() };
+    copy_to_store(&data, &p, opts).unwrap();
+    let clean = BlockStore::open(&p).unwrap();
+    assert_eq!(clean.blocks(), 16);
+    assert_eq!(clean.verify_all(4).unwrap().blocks, 16);
+    let (lo, hi) = clean.block_byte_range(9);
+    drop(clean);
+
+    let mut bytes = std::fs::read(&p).unwrap();
+    let mid = ((lo + hi) / 2) as usize;
+    bytes[mid] ^= 0x80;
+    std::fs::write(&p, &bytes).unwrap();
+
+    // Open stays O(index) — the corruption is not in the index.
+    let store = BlockStore::open(&p).unwrap();
+    let err = store.verify_all(4).unwrap_err().to_string();
+    assert!(err.contains("block 9"), "verify must name block 9: {err}");
+    assert!(err.contains("checksum"), "diagnosis must say why: {err}");
+
+    // Rows in other blocks read fine (integrity is per touched block) …
+    let mut out = vec![0f32; 256 * 4];
+    store.read_rows(0, &mut out);
+    assert_eq!(out, &data.points()[..256 * 4]);
+    // … while touching block 9 (rows 2304..2560) panics, naming it.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut row = vec![0f32; 4];
+        store.read_rows(2_400, &mut row);
+    }))
+    .unwrap_err();
+    let msg = caught
+        .downcast_ref::<String>()
+        .cloned()
+        .unwrap_or_else(|| "non-string panic".into());
+    assert!(msg.contains("block 9"), "read panic must name block 9: {msg}");
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn legacy_v1_v2_open_paths_regression() {
+    let data = blobs(500, 3, 3, 6);
+
+    // v2: still written by save_bmx, still loads via mmap/buffered, and
+    // the block backend refuses it with a reconversion hint.
+    let v2 = tmp("legacy_v2.bmx");
+    save_bmx(&data, &v2).unwrap();
+    assert_eq!(bmx_version(&v2).unwrap(), 2);
+    for backend in [DataBackend::Mmap, DataBackend::Buffered, DataBackend::InMemory] {
+        let src = loader::open_source(&v2, backend).unwrap();
+        let mut all = vec![0f32; 500 * 3];
+        src.read_rows(0, &mut all);
+        assert_eq!(all, data.points(), "{backend:?}");
+    }
+    let err = loader::open_source(&v2, DataBackend::Block).unwrap_err().to_string();
+    assert!(err.contains("v2") && err.contains("convert"), "hint missing: {err}");
+
+    // v1: hand-built 16-byte header, still loads.
+    let v1 = tmp("legacy_v1.bmx");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"BMX1");
+    bytes.extend_from_slice(&(data.m() as u64).to_le_bytes());
+    bytes.extend_from_slice(&(data.n() as u32).to_le_bytes());
+    for &v in data.points() {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(&v1, &bytes).unwrap();
+    assert_eq!(bmx_version(&v1).unwrap(), 1);
+    let src = loader::open_source(&v1, DataBackend::Buffered).unwrap();
+    let mut all = vec![0f32; 500 * 3];
+    src.read_rows(0, &mut all);
+    assert_eq!(all, data.points());
+
+    // v3 through the generic mmap/buffered/mem backends (magic sniffing).
+    let v3 = tmp("legacy_v3.bmx");
+    copy_to_store(&data, &v3, StoreOptions::default()).unwrap();
+    for backend in [
+        DataBackend::Mmap,
+        DataBackend::Buffered,
+        DataBackend::Block,
+        DataBackend::InMemory,
+    ] {
+        let src = loader::open_source(&v3, backend).unwrap();
+        let mut all = vec![0f32; 500 * 3];
+        src.read_rows(0, &mut all);
+        assert_eq!(all, data.points(), "{backend:?}");
+    }
+
+    for p in [v1, v2, v3] {
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+#[test]
+fn f16_store_clusters_with_bounded_quantisation_error() {
+    // f16 is the lossy variant: the pipeline must still run end-to-end,
+    // and on well-separated blobs the objective must stay close to the
+    // exact run (quantisation noise ≪ cluster spread).
+    let data = blobs(10_000, 4, 3, 7);
+    let p = tmp("f16_cluster.bmx");
+    let opts = StoreOptions { dtype: Dtype::F16, codec: Codec::Lz, ..StoreOptions::default() };
+    copy_to_store(&data, &p, opts).unwrap();
+    let store = BlockStore::open(&p).unwrap();
+    let exact = BigMeans::new(sequential_cfg(3, 1024, 10)).run(&data).unwrap();
+    let quant = BigMeans::new(sequential_cfg(3, 1024, 10)).run(&store).unwrap();
+    assert!(quant.objective.is_finite());
+    let rel = (quant.objective - exact.objective).abs() / exact.objective.max(1e-12);
+    assert!(
+        rel < 0.05,
+        "f16 objective drifted {rel:.4} from exact ({} vs {})",
+        quant.objective,
+        exact.objective
+    );
+    let _ = std::fs::remove_file(&p);
+}
