@@ -1,13 +1,13 @@
 //! `bench` — engine, tuner, and storage benchmarks, no external deps.
 //!
-//! Three suites (`--suite assign|tuner|io|all`, default `assign`):
+//! Four suites (`--suite assign|tuner|io|final|all`, default `assign`):
 //!
 //! * **assign** — times the fused panel engine, the bounded
-//!   (Hamerly-pruned) engine, and the pre-fusion two-pass reference kernel
-//!   on a synthetic workload (default 1M×16, k=64) — once on uniform data
-//!   (worst case for pruning) and once on separated Gaussian blobs (best
-//!   case) — then emits `BENCH_assign.json` with wall times and
-//!   distance-eval counts.
+//!   (Hamerly-pruned) engine, the Elkan engine, and the pre-fusion
+//!   two-pass reference kernel on a synthetic workload (default 1M×16,
+//!   k=64) — once on uniform data (worst case for pruning) and once on
+//!   separated Gaussian blobs (best case) — then emits
+//!   `BENCH_assign.json` with wall times and distance-eval counts.
 //! * **tuner** — races the competitive portfolio tuner against every
 //!   fixed-sample-size baseline from the same grid at an equal shot
 //!   budget (default 1M×16 uniform + blob workloads) and emits
@@ -17,13 +17,20 @@
 //!   for every dtype × codec combination, plus cold vs cached
 //!   random-chunk sampling latency per codec (f32), emitting
 //!   `BENCH_io.json`.
+//! * **final** — the hierarchical-pruned final pass: the same blocked
+//!   blob workload clustered through a block store with min/max
+//!   summaries (pruned + double-buffered) vs. one without (unpruned
+//!   baseline) vs. in-memory, emitting `BENCH_final.json` (final-pass
+//!   wall times, blocks skipped, decode-only scan time, and a
+//!   bit-identical objective cross-check).
 //!
-//! CI runs scaled-down versions of all three as non-gating smoke steps.
+//! CI runs scaled-down versions of all four as non-gating smoke steps.
 //!
 //! ```text
-//! cargo run --release --bin bench -- [--suite assign|tuner|io|all] [--m N] [--n N]
-//!     [--k N] [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH]
-//!     [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH]
+//! cargo run --release --bin bench -- [--suite assign|tuner|io|final|all] [--m N]
+//!     [--n N] [--k N] [--iters N] [--shots N] [--s N] [--out PATH]
+//!     [--tuner-out PATH] [--io-m N] [--io-s N] [--io-samples N] [--block-rows N]
+//!     [--io-out PATH] [--final-m N] [--final-out PATH]
 //! ```
 
 use std::time::Instant;
@@ -32,7 +39,9 @@ use bigmeans::coordinator::config::{ParallelMode, StopCondition};
 use bigmeans::data::dataset::Dataset;
 use bigmeans::kernels::assign::{AssignOut, BLOCK_ROWS};
 use bigmeans::kernels::distance::{sq_dist_panel, sq_norm};
-use bigmeans::kernels::engine::{BoundedEngine, KernelEngine, LloydState, PanelEngine};
+use bigmeans::kernels::engine::{
+    BoundedEngine, ElkanEngine, KernelEngine, LloydState, PanelEngine,
+};
 use bigmeans::kernels::update_centroids;
 use bigmeans::metrics::Counters;
 use bigmeans::data::source::DataSource;
@@ -292,7 +301,7 @@ fn io_suite(args: &Args) -> Result<(), String> {
     let mut ingest_docs = Vec::new();
     for (dtype, codec) in combos {
         let path = dir.join(format!("io_{}_{}.bmx", dtype.name(), codec.name()));
-        let opts = StoreOptions { block_rows, dtype, codec, threads: 0 };
+        let opts = StoreOptions { block_rows, dtype, codec, ..StoreOptions::default() };
         let t0 = Instant::now();
         copy_to_store(&data, &path, opts).map_err(|e| e.to_string())?;
         let secs = t0.elapsed().as_secs_f64();
@@ -375,6 +384,119 @@ fn io_suite(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Grouped (block-aligned) separated blobs: cluster `i · k / m` owns row
+/// `i`, so fixed-size store blocks are pure single-cluster boxes — the
+/// workload where block-level pruning should fire on (nearly) every
+/// block.
+fn grouped_blob_data(rng: &mut Rng, m: usize, n: usize, k: usize) -> Vec<f32> {
+    let centers: Vec<f32> = (0..k * n).map(|_| rng.f32() * 200.0 - 100.0).collect();
+    let per = m.div_ceil(k);
+    let mut pts = Vec::with_capacity(m * n);
+    for i in 0..m {
+        let c = (i / per).min(k - 1);
+        for &cv in &centers[c * n..(c + 1) * n] {
+            pts.push(cv + 0.3 * rng.gaussian() as f32);
+        }
+    }
+    pts
+}
+
+/// The hierarchical-pruned final pass suite: same data, same seed, three
+/// storage configurations — block store with summaries (pruned +
+/// double-buffered), block store without (unpruned baseline), and
+/// in-memory — compared on final-pass wall time with a bit-identical
+/// objective cross-check, plus a decode-only full scan for context.
+fn final_suite(args: &Args) -> Result<(), String> {
+    let m = args.usize("final-m", 400_000)?;
+    let n = args.usize("n", 16)?;
+    let k = args.usize("k", 16)?.max(2);
+    let block_rows = args.usize("block-rows", 4096)?;
+    let shots = args.u64("shots", 10)?;
+    let out_path = args.get_or("final-out", "BENCH_final.json").to_string();
+    let mut rng = Rng::new(0xF17A);
+    eprintln!("generating {m}×{n} grouped blob dataset (k={k}) …");
+    let data = Dataset::from_vec("final", grouped_blob_data(&mut rng, m, n, k), m, n);
+    let dir = std::env::temp_dir().join(format!("bigmeans_bench_final_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    let codec = Codec::parse(args.get_or("codec", "lz")).ok_or("bad --codec")?;
+    let base = StoreOptions { block_rows, codec, ..StoreOptions::default() };
+    let pruned_path = dir.join("final_summaries.bmx");
+    let plain_path = dir.join("final_plain.bmx");
+    copy_to_store(&data, &pruned_path, base).map_err(|e| e.to_string())?;
+    copy_to_store(&data, &plain_path, StoreOptions { summaries: false, ..base })
+        .map_err(|e| e.to_string())?;
+
+    let cfg = BigMeansConfig::new(k, 4096.min(m))
+        .with_stop(StopCondition::MaxChunks(shots))
+        .with_seed(42);
+    let run = |src: &dyn DataSource| -> Result<(bigmeans::BigMeansResult, f64), String> {
+        let t0 = Instant::now();
+        let r = BigMeans::new(cfg.clone()).run(src)?;
+        Ok((r, t0.elapsed().as_secs_f64()))
+    };
+    let pruned_store = BlockStore::open(&pruned_path).map_err(|e| e.to_string())?;
+    let plain_store = BlockStore::open(&plain_path).map_err(|e| e.to_string())?;
+    let blocks = pruned_store.blocks();
+    let (r_pruned, _) = run(&pruned_store)?;
+    let (r_plain, _) = run(&plain_store)?;
+    let (r_mem, _) = run(&data)?;
+    // Decode-only full scan (fresh store so the cache is cold): the decode
+    // bandwidth the double buffer hides behind the assignment shards.
+    let scan_store = BlockStore::open(&plain_path).map_err(|e| e.to_string())?;
+    let mut slab = vec![0f32; 8192.min(m) * n];
+    let t0 = Instant::now();
+    let mut start = 0usize;
+    while start < m {
+        let rows = 8192.min(m - start);
+        scan_store.read_rows(start, &mut slab[..rows * n]);
+        start += rows;
+    }
+    let decode_secs = t0.elapsed().as_secs_f64();
+
+    let identical = r_pruned.objective.to_bits() == r_plain.objective.to_bits()
+        && r_pruned.objective.to_bits() == r_mem.objective.to_bits()
+        && r_pruned.assignment == r_plain.assignment
+        && r_pruned.assignment == r_mem.assignment;
+    let speedup = r_plain.cpu_full_secs / r_pruned.cpu_full_secs.max(1e-9);
+    eprintln!(
+        "final pass: pruned {:.3}s vs unpruned {:.3}s ({speedup:.2}×), mem {:.3}s | \
+         {} of {blocks} blocks skipped | decode-only scan {decode_secs:.3}s | \
+         bit-identical: {identical}",
+        r_pruned.cpu_full_secs,
+        r_plain.cpu_full_secs,
+        r_mem.cpu_full_secs,
+        r_pruned.counters.pruned_blocks,
+    );
+    if !identical {
+        return Err("final suite: pruned pass diverged from the unpruned baseline".into());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let doc = obj(vec![
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("block_rows", num(block_rows as f64)),
+        ("codec", s(codec.name())),
+        ("blocks", num(blocks as f64)),
+        ("pruned_blocks", num(r_pruned.counters.pruned_blocks as f64)),
+        ("pruned_final_secs", num(r_pruned.cpu_full_secs)),
+        ("unpruned_final_secs", num(r_plain.cpu_full_secs)),
+        ("mem_final_secs", num(r_mem.cpu_full_secs)),
+        ("final_speedup", num(speedup)),
+        ("decode_scan_secs", num(decode_secs)),
+        ("pruned_evals", num(r_pruned.counters.pruned_evals as f64)),
+        ("distance_evals_pruned", num(r_pruned.counters.distance_evals as f64)),
+        ("distance_evals_unpruned", num(r_plain.counters.distance_evals as f64)),
+        ("objective", num(r_pruned.objective)),
+        ("bit_identical", Json::Bool(identical)),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n")
+        .map_err(|e| format!("write {out_path}: {e}"))?;
+    eprintln!("wrote {out_path}");
+    Ok(())
+}
+
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), &["help"]) {
         Ok(a) => a,
@@ -386,9 +508,10 @@ fn main() {
     if args.flag("help") {
         eprintln!(
             "bench — engine, tuner, and storage benchmarks\n\
-             usage: bench [--suite assign|tuner|io|all] [--m N] [--n N] [--k N] \
+             usage: bench [--suite assign|tuner|io|final|all] [--m N] [--n N] [--k N] \
              [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH] \
-             [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH]"
+             [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH] \
+             [--final-m N] [--final-out PATH]"
         );
         return;
     }
@@ -409,11 +532,14 @@ fn main() {
 
         let panel = PanelEngine;
         let bounded = BoundedEngine::default();
+        let elkan = ElkanEngine::default();
         let mut cases = Vec::new();
         for (data_name, data) in [("uniform", &uniform), ("blobs", &blobs)] {
-            for (engine_name, engine) in
-                [("panel", &panel as &dyn KernelEngine), ("bounded", &bounded)]
-            {
+            for (engine_name, engine) in [
+                ("panel", &panel as &dyn KernelEngine),
+                ("bounded", &bounded),
+                ("elkan", &elkan),
+            ] {
                 let name = format!("{engine_name}_{data_name}");
                 eprint!("{name:<20} ");
                 let c = time_engine(&name, engine, data, m, n, k, iters);
@@ -437,9 +563,12 @@ fn main() {
         let find = |name: &str| cases.iter().find(|c| c.name == name).unwrap();
         let bounded_blobs = find("bounded_blobs");
         let eval_ratio = full_evals / (bounded_blobs.counters.distance_evals as f64).max(1.0);
+        let elkan_blobs = find("elkan_blobs");
+        let elkan_ratio = full_evals / (elkan_blobs.counters.distance_evals as f64).max(1.0);
         let fused_speedup = find("reference_uniform").secs / find("panel_uniform").secs.max(1e-12);
         eprintln!(
             "bounded/blobs eval reduction: {eval_ratio:.2}× \
+             | elkan/blobs: {elkan_ratio:.2}× \
              | fused panel vs seed kernel (uniform): {fused_speedup:.2}×"
         );
 
@@ -451,6 +580,7 @@ fn main() {
             ("full_evals", num(full_evals)),
             ("cases", arr(cases.iter().map(case_json).collect())),
             ("bounded_blobs_eval_reduction", num(eval_ratio)),
+            ("elkan_blobs_eval_reduction", num(elkan_ratio)),
             ("fused_vs_reference_uniform_speedup", num(fused_speedup)),
         ]);
         std::fs::write(&out_path, doc.to_string() + "\n")
@@ -458,12 +588,14 @@ fn main() {
         eprintln!("wrote {out_path}");
         Ok(())
     };
-    let result = match args.choice("suite", &["assign", "tuner", "io", "all"]) {
+    let result = match args.choice("suite", &["assign", "tuner", "io", "final", "all"]) {
         Ok("tuner") => tuner_suite(&args),
         Ok("io") => io_suite(&args),
+        Ok("final") => final_suite(&args),
         Ok("all") => assign_suite()
             .and_then(|()| tuner_suite(&args))
-            .and_then(|()| io_suite(&args)),
+            .and_then(|()| io_suite(&args))
+            .and_then(|()| final_suite(&args)),
         Ok(_) => assign_suite(),
         Err(e) => Err(e),
     };

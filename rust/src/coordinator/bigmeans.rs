@@ -18,12 +18,15 @@
 use crate::coordinator::config::{BigMeansConfig, ParallelMode, ReinitStrategy};
 use crate::coordinator::incumbent::Solution;
 use crate::coordinator::sampler::ChunkSampler;
-use crate::coordinator::solver::{ChunkSolver, NativeSolver};
+use crate::coordinator::solver::{ChunkSolver, FinalPassMode, NativeSolver};
 use crate::coordinator::stop::StopState;
 use crate::data::source::{AccessPattern, DataSource};
+use crate::kernels::distance::{sq_dist_decomp, sq_norm};
 use crate::kernels::{self, update::degenerate_indices};
 use crate::metrics::{Counters, PhaseTimer};
+use crate::store::prune::{self, PrunePlan};
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 
 /// Result of a Big-means run.
 #[derive(Clone, Debug)]
@@ -141,17 +144,22 @@ impl BigMeans {
     }
 }
 
-/// Rows per block of the final full-dataset pass. Fixed (rather than "all
-/// of m") so the pass streams out-of-core sources in bounded memory — and
-/// so every backend runs the exact same arithmetic: identical block
-/// boundaries plus row-ordered f64 accumulation make the reported objective
-/// bit-for-bit independent of where the bytes live.
+/// Rows per slab of the final full-dataset pass, bounding the resident
+/// memory of out-of-core streaming (two slabs live at once under the
+/// double buffer). The canonical pass is per-point deterministic — slab
+/// and shard boundaries never change labels or the objective; this
+/// constant only shapes memory and overlap granularity.
 pub(crate) const FINAL_PASS_BLOCK_ROWS: usize = 8192;
 
 /// Final full-dataset pass + result assembly (shared between the
-/// sequential and chunk-parallel pipelines). Streams the source in
-/// [`FINAL_PASS_BLOCK_ROWS`]-row blocks; resident sources (in-memory,
-/// mmap) are sliced in place, others are copied block-by-block.
+/// sequential and chunk-parallel pipelines).
+///
+/// Native solvers run the **canonical pruned pipeline**
+/// ([`canonical_final_pass`]): one per-point arithmetic (the fused
+/// `‖x‖² − 2x·c + ‖c‖²` panel) for every backend and thread count, block
+/// pruning from `.bmx` v3 summaries, and a double-buffered decode/assign
+/// overlap on the pool. Opaque solvers (PJRT) keep the historical
+/// slab-streaming path through [`ChunkSolver::assign`].
 pub(crate) fn finish(
     cfg: &BigMeansConfig,
     solver: &dyn ChunkSolver,
@@ -177,31 +185,16 @@ pub(crate) fn finish(
         // read ahead of the block loop.
         data.advise(AccessPattern::Sequential);
         timer.time_full(|| {
-            let resident = data.contiguous();
-            let mut labels = Vec::with_capacity(m);
-            let mut obj = 0f64;
-            let mut scratch = Vec::new();
-            let mut start = 0usize;
-            while start < m {
-                let rows = FINAL_PASS_BLOCK_ROWS.min(m - start);
-                let block: &[f32] = match resident {
-                    Some(all) => &all[start * n..(start + rows) * n],
-                    None => {
-                        scratch.resize(rows * n, 0.0);
-                        data.read_rows(start, &mut scratch[..rows * n]);
-                        &scratch[..rows * n]
-                    }
-                };
-                let (l, mins) =
-                    solver.assign(block, rows, n, k, &centroids, &mut counters);
-                labels.extend_from_slice(&l);
-                for &d in &mins {
-                    obj += d as f64;
+            let out = match solver.final_pass_mode() {
+                FinalPassMode::Canonical(pool) => {
+                    canonical_final_pass(pool, data, &centroids, k, &mut counters)
                 }
-                start += rows;
-            }
+                FinalPassMode::Solver => {
+                    solver_final_pass(solver, data, &centroids, k, &mut counters)
+                }
+            };
             counters.full_iterations += 1;
-            (labels, obj)
+            out
         })
     };
     BigMeansResult {
@@ -213,6 +206,338 @@ pub(crate) fn finish(
         cpu_init_secs: timer.init_secs(),
         cpu_full_secs: timer.full_secs(),
         improvements,
+    }
+}
+
+/// The historical final pass for opaque solvers: stream the source in
+/// [`FINAL_PASS_BLOCK_ROWS`]-row slabs through [`ChunkSolver::assign`].
+fn solver_final_pass(
+    solver: &dyn ChunkSolver,
+    data: &dyn DataSource,
+    centroids: &[f32],
+    k: usize,
+    counters: &mut Counters,
+) -> (Vec<u32>, f64) {
+    let (m, n) = (data.m(), data.n());
+    let resident = data.contiguous();
+    let mut labels = Vec::with_capacity(m);
+    let mut obj = 0f64;
+    let mut scratch = Vec::new();
+    let mut start = 0usize;
+    while start < m {
+        let rows = FINAL_PASS_BLOCK_ROWS.min(m - start);
+        let block: &[f32] = match resident {
+            Some(all) => &all[start * n..(start + rows) * n],
+            None => {
+                scratch.resize(rows * n, 0.0);
+                data.read_rows(start, &mut scratch[..rows * n]);
+                &scratch[..rows * n]
+            }
+        };
+        let (l, mins) = solver.assign(block, rows, n, k, centroids, counters);
+        labels.extend_from_slice(&l);
+        for &d in &mins {
+            obj += d as f64;
+        }
+        start += rows;
+    }
+    (labels, obj)
+}
+
+/// One maximal run of rows inside a slab that shares a pruning decision:
+/// `(offset-within-slab, rows, owner)`. `owner = Some(j)` means every row
+/// of the run lives in store blocks wholly owned by centroid `j`.
+type Segment = (usize, usize, Option<u32>);
+
+/// Split slab `[start, start + rows)` into ownership segments against the
+/// prune plan (one contested segment when there is no plan).
+fn slab_segments(plan: Option<&PrunePlan>, start: usize, rows: usize) -> Vec<Segment> {
+    let Some(plan) = plan else {
+        return vec![(0, rows, None)];
+    };
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut row = start;
+    let end = start + rows;
+    while row < end {
+        let block_end = ((row / plan.block_rows) + 1) * plan.block_rows;
+        let take = block_end.min(end) - row;
+        let owner = plan.owner_of_row(row);
+        match segs.last_mut() {
+            Some((_, seg_rows, seg_owner)) if *seg_owner == owner => *seg_rows += take,
+            _ => segs.push((row - start, take, owner)),
+        }
+        row += take;
+    }
+    segs
+}
+
+/// Label every row of an owned segment with its block's centroid and
+/// price it with a single decomposition evaluation — bit-identical to the
+/// panel's winning value for that pair, which is what makes whole-block
+/// pruning invisible in the output.
+fn assign_owned_rows(
+    points: &[f32],
+    centroid: &[f32],
+    c_sq_j: f32,
+    n: usize,
+    owner: u32,
+    labels: &mut [u32],
+    mins: &mut [f32],
+) {
+    for (i, x) in points.chunks_exact(n).enumerate() {
+        let x_sq = sq_norm(x);
+        labels[i] = owner;
+        mins[i] = sq_dist_decomp(x, x_sq, centroid, c_sq_j);
+    }
+}
+
+/// Carve the assignment work of one slab into boxed jobs writing disjoint
+/// `labels`/`mins` windows. Contested segments are sharded roughly evenly
+/// across `workers`; shard boundaries never change per-point results, only
+/// load balance.
+#[allow(clippy::too_many_arguments)]
+fn push_slab_jobs<'scope>(
+    jobs: &mut Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    points: &'scope [f32],
+    centroids: &'scope [f32],
+    c_sq: &'scope [f32],
+    n: usize,
+    k: usize,
+    segments: &[Segment],
+    mut labels: &'scope mut [u32],
+    mut mins: &'scope mut [f32],
+    workers: usize,
+) {
+    let mut consumed = 0usize;
+    for &(off, rows, owner) in segments {
+        debug_assert_eq!(off, consumed);
+        // `mem::take` moves the remainder out of the loop variable so the
+        // split-off head keeps the full `'scope` lifetime the boxed jobs
+        // need.
+        let (lab_seg, lab_rest) = std::mem::take(&mut labels).split_at_mut(rows);
+        let (min_seg, min_rest) = std::mem::take(&mut mins).split_at_mut(rows);
+        labels = lab_rest;
+        mins = min_rest;
+        let pts = &points[off * n..(off + rows) * n];
+        // Shard every segment (owned segments too — a fully-pruned pass
+        // would otherwise run one job per segment and idle the pool); keep
+        // shards at a panel block or more so tiny fragments don't swamp
+        // the queue. Shard boundaries never change per-point results.
+        let shard = rows.div_ceil(workers.max(1)).max(256);
+        let mut lab_left = lab_seg;
+        let mut min_left = min_seg;
+        let mut done = 0usize;
+        while done < rows {
+            let take = shard.min(rows - done);
+            let (lab_s, lab_r) = std::mem::take(&mut lab_left).split_at_mut(take);
+            let (min_s, min_r) = std::mem::take(&mut min_left).split_at_mut(take);
+            lab_left = lab_r;
+            min_left = min_r;
+            let shard_pts = &pts[done * n..(done + take) * n];
+            match owner {
+                Some(j) => {
+                    let c = &centroids[j as usize * n..(j as usize + 1) * n];
+                    let c_sq_j = c_sq[j as usize];
+                    jobs.push(Box::new(move || {
+                        assign_owned_rows(shard_pts, c, c_sq_j, n, j, lab_s, min_s);
+                    }));
+                }
+                None => {
+                    jobs.push(Box::new(move || {
+                        kernels::panel_assign_into(
+                            shard_pts, centroids, c_sq, take, n, k, lab_s, min_s,
+                        );
+                    }));
+                }
+            }
+            done += take;
+        }
+        consumed += rows;
+    }
+}
+
+/// The canonical native final pass.
+///
+/// * **One arithmetic everywhere** — every contested row goes through the
+///   fused panel kernel, every owned row through the bit-identical
+///   single-pair decomposition, and the objective is the row-ordered f64
+///   sum of the per-point minima. Labels and objective are therefore
+///   bit-identical across backends, thread counts, and pruned/unpruned
+///   paths (gated by `tests/store_v3.rs`).
+/// * **Block pruning** — when the source exposes `.bmx` v3 min/max
+///   summaries, blocks wholly owned by one centroid
+///   ([`crate::store::prune`]) skip the k-wide scan: `1` evaluation per
+///   row instead of `k`, counted in `Counters::pruned_evals` /
+///   `Counters::pruned_blocks`. (The single evaluation is still needed —
+///   the objective prices every point exactly.)
+/// * **Double buffering** — on the pool path, slab `i + 1` is decoded
+///   (read + CRC + codec) by one pool job while the assignment shards of
+///   slab `i` run on the remaining workers, so out-of-core decode
+///   overlaps compute instead of stalling between slabs.
+pub(crate) fn canonical_final_pass(
+    pool: Option<&ThreadPool>,
+    data: &dyn DataSource,
+    centroids: &[f32],
+    k: usize,
+    counters: &mut Counters,
+) -> (Vec<u32>, f64) {
+    let (m, n) = (data.m(), data.n());
+    if m == 0 {
+        return (Vec::new(), 0.0);
+    }
+    let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+    let plan = data
+        .block_summaries()
+        .map(|s| prune::plan(s.minmax, n, s.block_rows, centroids, k));
+    let mut labels = vec![0u32; m];
+
+    let mut contested_rows = 0u64;
+    let mut owned_rows = 0u64;
+    let workers = pool.map(|p| p.size()).unwrap_or(1);
+    // Row-ordered objective: a single f64 accumulator fed in global row
+    // order, so the value is independent of sharding, slab geometry, and
+    // worker count — the strongest determinism contract the final pass
+    // has carried so far.
+    let mut objective = 0f64;
+
+    match data.contiguous() {
+        Some(all) => {
+            // Resident source: no copies, no prefetch — one job list over
+            // the whole range.
+            let mut mins = vec![0f32; m];
+            let segments = slab_segments(plan.as_ref(), 0, m);
+            for &(_, rows, owner) in &segments {
+                match owner {
+                    Some(_) => owned_rows += rows as u64,
+                    None => contested_rows += rows as u64,
+                }
+            }
+            match pool {
+                Some(pool) => {
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                    push_slab_jobs(
+                        &mut jobs, all, centroids, &c_sq, n, k, &segments, &mut labels,
+                        &mut mins, workers,
+                    );
+                    pool.scope_run_all(jobs);
+                }
+                None => {
+                    run_segments_serial(
+                        all, centroids, &c_sq, n, k, &segments, &mut labels, &mut mins,
+                    );
+                }
+            }
+            for &d in &mins {
+                objective += d as f64;
+            }
+        }
+        None => {
+            // Out-of-core source: stream FINAL_PASS_BLOCK_ROWS-row slabs.
+            // The mins buffer is per-slab (folded into the objective after
+            // each slab), so the pass's extra resident memory stays O(slab)
+            // — only the labels, which are part of the result, scale with m.
+            let slab_rows = FINAL_PASS_BLOCK_ROWS;
+            let nslabs = m.div_ceil(slab_rows);
+            let buf_rows = slab_rows.min(m);
+            let mut cur = vec![0f32; buf_rows * n];
+            let mut nxt = vec![0f32; buf_rows * n];
+            let mut mins_slab = vec![0f32; buf_rows];
+            data.read_rows(0, &mut cur[..buf_rows * n]);
+            let mut labels_rest: &mut [u32] = &mut labels;
+            for s in 0..nslabs {
+                let start = s * slab_rows;
+                let rows = slab_rows.min(m - start);
+                let (lab_slab, lab_tail) = labels_rest.split_at_mut(rows);
+                labels_rest = lab_tail;
+                let segments = slab_segments(plan.as_ref(), start, rows);
+                for &(_, seg_rows, owner) in &segments {
+                    match owner {
+                        Some(_) => owned_rows += seg_rows as u64,
+                        None => contested_rows += seg_rows as u64,
+                    }
+                }
+                let next = (s + 1 < nslabs).then(|| {
+                    let nstart = (s + 1) * slab_rows;
+                    (nstart, slab_rows.min(m - nstart))
+                });
+                match pool {
+                    Some(pool) => {
+                        // Double buffer: the decode of slab s+1 rides in the
+                        // same scope as the assignment shards of slab s.
+                        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                        if let Some((nstart, nrows)) = next {
+                            let buf = &mut nxt[..nrows * n];
+                            jobs.push(Box::new(move || data.read_rows(nstart, buf)));
+                        }
+                        push_slab_jobs(
+                            &mut jobs,
+                            &cur[..rows * n],
+                            centroids,
+                            &c_sq,
+                            n,
+                            k,
+                            &segments,
+                            lab_slab,
+                            &mut mins_slab[..rows],
+                            workers,
+                        );
+                        pool.scope_run_all(jobs);
+                    }
+                    None => {
+                        run_segments_serial(
+                            &cur[..rows * n],
+                            centroids,
+                            &c_sq,
+                            n,
+                            k,
+                            &segments,
+                            lab_slab,
+                            &mut mins_slab[..rows],
+                        );
+                        if let Some((nstart, nrows)) = next {
+                            data.read_rows(nstart, &mut nxt[..nrows * n]);
+                        }
+                    }
+                }
+                for &d in &mins_slab[..rows] {
+                    objective += d as f64;
+                }
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+        }
+    }
+
+    counters.add_distance_evals(contested_rows * k as u64 + owned_rows);
+    counters.add_pruned_evals(owned_rows * (k as u64 - 1));
+    if let Some(plan) = &plan {
+        counters.pruned_blocks += plan.owned_blocks() as u64;
+    }
+    (labels, objective)
+}
+
+/// Serial twin of [`push_slab_jobs`] (pool-less runs).
+#[allow(clippy::too_many_arguments)]
+fn run_segments_serial(
+    points: &[f32],
+    centroids: &[f32],
+    c_sq: &[f32],
+    n: usize,
+    k: usize,
+    segments: &[Segment],
+    labels: &mut [u32],
+    mins: &mut [f32],
+) {
+    for &(off, rows, owner) in segments {
+        let pts = &points[off * n..(off + rows) * n];
+        let lab = &mut labels[off..off + rows];
+        let mn = &mut mins[off..off + rows];
+        match owner {
+            Some(j) => {
+                let c = &centroids[j as usize * n..(j as usize + 1) * n];
+                assign_owned_rows(pts, c, c_sq[j as usize], n, j, lab, mn);
+            }
+            None => kernels::panel_assign_into(pts, centroids, c_sq, rows, n, k, lab, mn),
+        }
     }
 }
 
@@ -379,6 +704,141 @@ mod tests {
         cfg.reinit = ReinitStrategy::Random;
         let r = BigMeans::new(cfg).run(&data).unwrap();
         assert!(r.objective.is_finite());
+    }
+
+    /// A resident dataset wearing block summaries — lets the canonical
+    /// final pass be driven with handcrafted geometry, independent of any
+    /// search convergence.
+    struct SummarySource {
+        inner: Dataset,
+        block_rows: usize,
+        minmax: Vec<f32>,
+        /// Pretend to be out-of-core to exercise the slab/double-buffer
+        /// path.
+        hide_contiguous: bool,
+    }
+
+    impl crate::data::source::DataSource for SummarySource {
+        fn name(&self) -> &str {
+            "summary-source"
+        }
+        fn m(&self) -> usize {
+            self.inner.m()
+        }
+        fn n(&self) -> usize {
+            self.inner.n()
+        }
+        fn read_rows(&self, start: usize, out: &mut [f32]) {
+            crate::data::source::DataSource::read_rows(&self.inner, start, out)
+        }
+        fn contiguous(&self) -> Option<&[f32]> {
+            if self.hide_contiguous {
+                None
+            } else {
+                Some(self.inner.points())
+            }
+        }
+        fn block_summaries(&self) -> Option<crate::data::source::BlockSummaries<'_>> {
+            Some(crate::data::source::BlockSummaries {
+                block_rows: self.block_rows,
+                minmax: &self.minmax,
+            })
+        }
+    }
+
+    /// Two tight, far-apart blobs grouped so 32-row blocks are pure.
+    fn grouped_two_blob_source(hide_contiguous: bool) -> SummarySource {
+        let mut rng = Rng::new(77);
+        let n = 3;
+        let block_rows = 32;
+        let mut pts = Vec::new();
+        for c in 0..2 {
+            let base = if c == 0 { 0.0f32 } else { 100.0 };
+            for _ in 0..64 {
+                for _ in 0..n {
+                    pts.push(base + 0.1 * rng.gaussian() as f32);
+                }
+            }
+        }
+        let inner = Dataset::from_vec("two-blobs", pts, 128, n);
+        let minmax: Vec<f32> = inner
+            .points()
+            .chunks(block_rows * n)
+            .flat_map(|block| {
+                crate::store::codec::block_minmax(block, crate::store::Dtype::F32, n)
+            })
+            .collect();
+        SummarySource { inner, block_rows, minmax, hide_contiguous }
+    }
+
+    #[test]
+    fn canonical_final_pass_pruned_matches_unpruned_bitwise() {
+        let centroids = vec![0.0f32, 0.0, 0.0, 100.0, 100.0, 100.0];
+        for hide in [false, true] {
+            let src = grouped_two_blob_source(hide);
+            let plain = src.inner.clone();
+            let mut c_pruned = Counters::new();
+            let mut c_plain = Counters::new();
+            let (lab_a, obj_a) =
+                canonical_final_pass(None, &src, &centroids, 2, &mut c_pruned);
+            let (lab_b, obj_b) =
+                canonical_final_pass(None, &plain, &centroids, 2, &mut c_plain);
+            assert_eq!(lab_a, lab_b, "hide={hide}");
+            assert_eq!(obj_a.to_bits(), obj_b.to_bits(), "hide={hide}");
+            assert_eq!(lab_a[..64], vec![0u32; 64][..], "hide={hide}");
+            assert_eq!(lab_a[64..], vec![1u32; 64][..], "hide={hide}");
+            // All 4 pure blocks owned: every row avoids k−1 = 1 eval.
+            assert_eq!(c_pruned.pruned_blocks, 4, "hide={hide}");
+            assert_eq!(c_pruned.pruned_evals, 128, "hide={hide}");
+            assert_eq!(c_pruned.distance_evals, 128, "hide={hide}");
+            assert_eq!(c_plain.pruned_blocks, 0, "hide={hide}");
+            assert_eq!(c_plain.distance_evals, 256, "hide={hide}");
+            // The pool path (shards + double buffer) must agree bit for
+            // bit with the serial path.
+            let pool = ThreadPool::new(3);
+            let mut c_pool = Counters::new();
+            let (lab_p, obj_p) =
+                canonical_final_pass(Some(&pool), &src, &centroids, 2, &mut c_pool);
+            assert_eq!(lab_p, lab_a, "hide={hide}");
+            assert_eq!(obj_p.to_bits(), obj_a.to_bits(), "hide={hide}");
+            assert_eq!(c_pool.pruned_blocks, 4, "hide={hide}");
+        }
+    }
+
+    #[test]
+    fn canonical_final_pass_contested_when_centroids_share_a_block() {
+        // Both centroids inside every block's box → nothing prunes, and
+        // the result still matches the plain panel pass.
+        let src = grouped_two_blob_source(true);
+        let centroids = vec![0.0f32, 0.0, 0.0, 0.2, 0.2, 0.2];
+        let mut c1 = Counters::new();
+        let mut c2 = Counters::new();
+        let (lab_a, obj_a) = canonical_final_pass(None, &src, &centroids, 2, &mut c1);
+        let (lab_b, obj_b) =
+            canonical_final_pass(None, &src.inner, &centroids, 2, &mut c2);
+        assert_eq!(lab_a, lab_b);
+        assert_eq!(obj_a.to_bits(), obj_b.to_bits());
+        assert_eq!(c1.pruned_blocks, 0);
+        assert_eq!(c1.distance_evals, 256);
+    }
+
+    #[test]
+    fn slab_segments_merge_runs_and_respect_boundaries() {
+        let plan = PrunePlan {
+            block_rows: 10,
+            owner: vec![Some(0), Some(0), None, Some(1), Some(1), Some(2)],
+        };
+        // Rows 5..55 span blocks 0..=5 partially.
+        let segs = slab_segments(Some(&plan), 5, 50);
+        assert_eq!(
+            segs,
+            vec![(0, 15, Some(0)), (15, 10, None), (25, 20, Some(1)), (45, 10, Some(2))]
+        );
+        // No plan → one contested segment.
+        assert_eq!(slab_segments(None, 5, 50), vec![(0, 50, None)]);
+        // Rows beyond the plan's blocks are contested.
+        let segs = slab_segments(Some(&plan), 55, 10);
+        assert_eq!(segs, vec![(0, 5, Some(2)), (5, 5, None)]);
     }
 
     #[test]

@@ -69,7 +69,8 @@ pub struct BigMeansConfig {
     /// Engine for the chunk-local search.
     pub engine: Engine,
     /// Kernel engine for native assignment steps (`panel` = exact blocked
-    /// panel, `bounded` = Hamerly-pruned exact; label-identical results).
+    /// panel, `bounded` = Hamerly-pruned exact, `elkan` = per-centroid
+    /// Elkan bounds + inter-centroid test; all label-identical results).
     pub kernel: KernelEngineKind,
     /// Parallelisation mode.
     pub parallel: ParallelMode,

@@ -24,7 +24,7 @@ pub use config::{
     BigMeansConfig, DataBackend, Engine, ParallelMode, ReinitStrategy, StopCondition,
 };
 pub use parallel::{ShotExecutor, ShotReport};
-pub use solver::{ChunkSolver, NativeSolver};
+pub use solver::{ChunkSolver, FinalPassMode, NativeSolver};
 pub use stream::{
     produce_from_source, ChunkQueue, DriftAction, StreamChunk, StreamResult,
     StreamingBigMeans, ValidationPoint,

@@ -8,6 +8,18 @@ use crate::kernels::{self, KernelEngine, KernelEngineKind, LloydParams, LloydRes
 use crate::metrics::Counters;
 use crate::util::threadpool::ThreadPool;
 
+/// How the coordinator's final full-dataset pass should run for a solver.
+pub enum FinalPassMode<'a> {
+    /// The canonical native pass: panel-decomposition arithmetic for every
+    /// point, block pruning from store summaries, and the double-buffered
+    /// decode/assign pipeline on the given pool (`None` = serial). See
+    /// `coordinator::bigmeans`.
+    Canonical(Option<&'a ThreadPool>),
+    /// Opaque engine (PJRT): the coordinator streams fixed-size slabs
+    /// through [`ChunkSolver::assign`] exactly as before.
+    Solver,
+}
+
 /// Engine interface for chunk-local search and assignment passes.
 ///
 /// Not `Send`/`Sync`: the PJRT client is single-threaded (`Rc` inside the
@@ -39,6 +51,13 @@ pub trait ChunkSolver {
 
     /// Human-readable engine name (for reports).
     fn name(&self) -> &'static str;
+
+    /// Which final-pass implementation this solver supports. Defaults to
+    /// the slab-streaming [`ChunkSolver::assign`] path; native solvers
+    /// opt into the canonical pruned + double-buffered pipeline.
+    fn final_pass_mode(&self) -> FinalPassMode<'_> {
+        FinalPassMode::Solver
+    }
 }
 
 /// Native rust engine.
@@ -126,6 +145,10 @@ impl ChunkSolver for NativeSolver {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn final_pass_mode(&self) -> FinalPassMode<'_> {
+        FinalPassMode::Canonical(self.pool.as_ref())
     }
 }
 

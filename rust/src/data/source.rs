@@ -66,6 +66,21 @@ pub enum DataBackend {
     Block,
 }
 
+/// Per-block bounding-box summaries exposed by block-structured sources
+/// (`store::BlockStore` when the file carries the summary section). Block
+/// `b` holds rows `[b·block_rows, min(m, (b+1)·block_rows))`; its entry in
+/// `minmax` is `n` per-dimension minima followed by `n` maxima, in the
+/// decoded value domain. The final full-dataset pass feeds these to
+/// `store::prune` to skip the k-wide assignment scan for blocks wholly
+/// owned by one centroid.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockSummaries<'a> {
+    /// Rows per block (the last block may be shorter).
+    pub block_rows: usize,
+    /// `2n` values per block: mins then maxs.
+    pub minmax: &'a [f32],
+}
+
 /// Read-only access to an `(m, n)` row-major f32 dataset, possibly larger
 /// than memory.
 ///
@@ -112,6 +127,14 @@ pub trait DataSource: Send + Sync {
     /// (mmap → `madvise`) override this; the default is a no-op, and the
     /// hint never changes observable values — only paging behaviour.
     fn advise(&self, _pattern: AccessPattern) {}
+
+    /// Per-block bounding-box summaries, when the backing store carries
+    /// them (the `.bmx` v3 summary section). Consumers must treat them as
+    /// an *optimisation hint only* — pruning decisions derived from them
+    /// are required to leave labels and objectives bit-identical.
+    fn block_summaries(&self) -> Option<BlockSummaries<'_>> {
+        None
+    }
 }
 
 impl DataSource for Dataset {

@@ -11,7 +11,7 @@
 use crate::metrics::Counters;
 use crate::util::threadpool::ThreadPool;
 
-use super::distance::{nearest, sq_dist_panel_argmin, sq_norm};
+use super::distance::{sq_dist_panel_argmin, sq_norm};
 
 /// Rows per panel block — sized so a `(BLOCK, k)` distance panel stays in L2.
 pub const BLOCK_ROWS: usize = 256;
@@ -93,6 +93,13 @@ pub fn assign_accumulate(
 
 /// Labels + min-distances only (no reduction) — the final full-dataset
 /// assignment pass and the D² weights for K-means++ use this.
+///
+/// Runs the same fused `‖x‖² − 2x·c + ‖c‖²` panel + in-register argmin as
+/// [`assign_accumulate`], so every stateless pass in the crate shares one
+/// canonical per-point arithmetic: a single-centroid decomposition
+/// evaluation ([`super::distance::sq_dist_decomp`]) of the winning pair is
+/// bit-identical to the value reported here — the exactness contract the
+/// block-pruned final pass rests on.
 pub fn assign_only(
     points: &[f32],
     centroids: &[f32],
@@ -105,13 +112,53 @@ pub fn assign_only(
     assert_eq!(centroids.len(), k * n);
     let mut labels = vec![0u32; m];
     let mut mins = vec![0f32; m];
-    for i in 0..m {
-        let (j, d) = nearest(&points[i * n..(i + 1) * n], centroids, k, n);
-        labels[i] = j as u32;
-        mins[i] = d;
-    }
+    let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+    panel_assign_into(points, centroids, &c_sq, m, n, k, &mut labels, &mut mins);
     counters.add_distance_evals((m * k) as u64);
     (labels, mins)
+}
+
+/// The shared stateless panel pass: fills `labels`/`mins` for `rows`
+/// points using [`sq_dist_panel_argmin`] over `BLOCK_ROWS`-row tiles with
+/// precomputed centroid norms. Per-point results are independent of the
+/// tiling, so callers may carve `rows` arbitrarily (worker shards, pruned
+/// final-pass segments) and still get bit-identical values.
+#[allow(clippy::too_many_arguments)]
+pub fn panel_assign_into(
+    points: &[f32],
+    centroids: &[f32],
+    c_sq: &[f32],
+    rows: usize,
+    n: usize,
+    k: usize,
+    labels: &mut [u32],
+    mins: &mut [f32],
+) {
+    debug_assert_eq!(points.len(), rows * n);
+    debug_assert_eq!(centroids.len(), k * n);
+    debug_assert_eq!(labels.len(), rows);
+    debug_assert_eq!(mins.len(), rows);
+    let mut x_sq = vec![0f32; BLOCK_ROWS.min(rows.max(1))];
+    let mut row = 0;
+    while row < rows {
+        let take = BLOCK_ROWS.min(rows - row);
+        let block = &points[row * n..(row + take) * n];
+        for (i, xs) in x_sq.iter_mut().take(take).enumerate() {
+            *xs = sq_norm(&block[i * n..(i + 1) * n]);
+        }
+        sq_dist_panel_argmin(
+            block,
+            &x_sq[..take],
+            centroids,
+            c_sq,
+            take,
+            k,
+            n,
+            &mut labels[row..row + take],
+            &mut mins[row..row + take],
+        );
+        row += take;
+    }
 }
 
 /// Parallel fused assignment: row blocks on the pool, partials merged.

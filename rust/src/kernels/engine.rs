@@ -14,12 +14,22 @@
 //!   whose (tightened) upper bound sits below its lower bound keeps its
 //!   label with **one** distance evaluation instead of `k` — on separated
 //!   clusters most of the chunk converges and the assignment cost drops
-//!   toward `O(m)` per iteration. Pruning is *exact*: both engines use the
-//!   identical decomposition arithmetic, so labels, counts, and objectives
-//!   agree (cross-checked by `tests/property_engines.rs`). Evaluations
-//!   avoided by pruning are reported in
-//!   [`crate::metrics::Counters::pruned_evals`] so the paper's `n_d` tables
-//!   can show the saving.
+//!   toward `O(m)` per iteration. The tighten pass is batched by shared
+//!   label, so each centroid row is loaded once per label group instead of
+//!   once per point.
+//! * [`ElkanEngine`] — Elkan-style pruning ("Using the Triangle Inequality
+//!   to Accelerate k-Means"): one upper bound plus `k` per-centroid lower
+//!   bounds per point, each relaxed by its own centroid's drift, composed
+//!   with the inter-centroid-distance test (`d(c_l, c_j) ≥ 2·upper` rules
+//!   centroid `j` out without touching the point). More memory
+//!   (`O(m·k)` bounds) but finer pruning than Hamerly: a point only
+//!   re-evaluates the centroids its bounds cannot exclude.
+//!
+//! Pruning in both engines is *exact*: every engine uses the identical
+//! decomposition arithmetic, so labels, counts, and objectives agree
+//! (cross-checked by `tests/property_engines.rs`). Evaluations avoided by
+//! pruning are reported in [`crate::metrics::Counters::pruned_evals`] so
+//! the paper's `n_d` tables can show the saving.
 //!
 //! The bounds live in a [`LloydState`] owned by the Lloyd loop and persist
 //! across iterations; the parallel path hands each worker a disjoint slice
@@ -37,8 +47,11 @@ use super::distance::{nearest2_decomp, sq_dist, sq_dist_decomp, sq_norm};
 pub enum KernelEngineKind {
     /// Exact blocked panel with fused argmin (the default).
     Panel,
-    /// Hamerly-bound pruned exact assignment.
+    /// Hamerly-bound pruned exact assignment (2 bounds per point).
     Bounded,
+    /// Elkan-bound pruned exact assignment (k+1 bounds per point plus the
+    /// inter-centroid-distance test).
+    Elkan,
 }
 
 impl KernelEngineKind {
@@ -47,15 +60,26 @@ impl KernelEngineKind {
         match self {
             KernelEngineKind::Panel => Box::new(PanelEngine),
             KernelEngineKind::Bounded => Box::new(BoundedEngine::default()),
+            KernelEngineKind::Elkan => Box::new(ElkanEngine::default()),
         }
     }
 
-    /// Parse a CLI token (`panel` / `bounded`).
+    /// Parse a CLI token (`panel` / `bounded` / `elkan`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "panel" => Some(KernelEngineKind::Panel),
             "bounded" => Some(KernelEngineKind::Bounded),
+            "elkan" => Some(KernelEngineKind::Elkan),
             _ => None,
+        }
+    }
+
+    /// Canonical token (CLI/JSON labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelEngineKind::Panel => "panel",
+            KernelEngineKind::Bounded => "bounded",
+            KernelEngineKind::Elkan => "elkan",
         }
     }
 }
@@ -63,18 +87,24 @@ impl KernelEngineKind {
 /// Per-point assignment state that persists across Lloyd iterations.
 ///
 /// For the bounded engine this holds the current label plus Hamerly
-/// upper/lower bounds (in *distance*, not squared-distance, domain — the
-/// triangle inequality is linear). The panel engine never activates it,
-/// and the vectors allocate lazily, so carrying a `LloydState` through a
-/// panel run costs nothing.
+/// upper/lower bounds; the Elkan engine swaps the single lower bound for
+/// `k` per-centroid lower bounds (all in *distance*, not squared-distance,
+/// domain — the triangle inequality is linear). The panel engine never
+/// activates it, and the vectors allocate lazily, so carrying a
+/// `LloydState` through a panel run costs nothing.
 #[derive(Clone, Debug)]
 pub struct LloydState {
     m: usize,
     labels: Vec<u32>,
     /// Upper bound on the distance to the assigned centroid.
     upper: Vec<f64>,
-    /// Lower bound on the distance to every *other* centroid.
+    /// Hamerly: lower bound on the distance to every *other* centroid.
     lower: Vec<f64>,
+    /// Elkan: per-centroid lower bounds, row-major `(m, k)`. Empty unless
+    /// the Elkan engine activated the state.
+    lower_k: Vec<f64>,
+    /// `k` the Elkan bounds were allocated for (0 = Hamerly/none).
+    bound_k: usize,
     /// Cached `‖x‖²` per point — invariant across iterations (the points
     /// of one Lloyd run never change), filled by the init pass.
     x_sq: Vec<f32>,
@@ -93,6 +123,8 @@ impl LloydState {
             labels: Vec::new(),
             upper: Vec::new(),
             lower: Vec::new(),
+            lower_k: Vec::new(),
+            bound_k: 0,
             x_sq: Vec::new(),
             active: false,
         }
@@ -114,6 +146,35 @@ impl LloydState {
             self.upper = vec![0f64; self.m];
             self.lower = vec![0f64; self.m];
             self.x_sq = vec![0f32; self.m];
+        } else if self.lower.len() != self.m {
+            // The state was last driven by the Elkan engine (which never
+            // allocates the single Hamerly bound): materialise it and force
+            // a re-initialising pass.
+            self.lower = vec![0f64; self.m];
+            self.active = false;
+        }
+        if self.bound_k != 0 {
+            // Elkan bounds from a previous engine are meaningless for the
+            // Hamerly test (and would mis-route `apply_update`): drop them
+            // and start the bounds over.
+            self.lower_k = Vec::new();
+            self.bound_k = 0;
+            self.active = false;
+        }
+    }
+
+    /// Materialise the per-point vectors plus the `(m, k)` Elkan lower
+    /// bounds (first Elkan use).
+    fn ensure_allocated_elkan(&mut self, k: usize) {
+        if self.labels.len() != self.m {
+            self.labels = vec![0u32; self.m];
+            self.upper = vec![0f64; self.m];
+            self.x_sq = vec![0f32; self.m];
+        }
+        if self.bound_k != k || self.lower_k.len() != self.m * k {
+            self.lower_k = vec![0f64; self.m * k];
+            self.bound_k = k;
+            self.active = false; // bounds for a different k are meaningless
         }
     }
 
@@ -128,10 +189,12 @@ impl LloydState {
         &self.labels
     }
 
-    /// Relax the bounds for a centroid update `old → new` (Hamerly): each
-    /// centroid's drift widens the upper bound of the points assigned to it,
-    /// and the largest drift among the *other* centroids shrinks every lower
-    /// bound. Call after every `update_centroids`; no-op while inactive.
+    /// Relax the bounds for a centroid update `old → new`: each centroid's
+    /// drift widens the upper bound of the points assigned to it. Hamerly
+    /// state shrinks the single lower bound by the largest drift among the
+    /// *other* centroids; Elkan state shrinks each per-centroid lower bound
+    /// by that centroid's own drift. Call after every `update_centroids`;
+    /// no-op while inactive.
     pub fn apply_update(
         &mut self,
         old_centroids: &[f32],
@@ -168,10 +231,22 @@ impl LloydState {
         if max1 == 0.0 {
             return; // nothing moved — bounds stay exact
         }
-        for i in 0..self.labels.len() {
-            let l = self.labels[i] as usize;
-            self.upper[i] += drift[l];
-            self.lower[i] -= if l == max1_j { max2 } else { max1 };
+        if self.bound_k == k && !self.lower_k.is_empty() {
+            // Elkan: every centroid relaxes its own lower-bound column.
+            for i in 0..self.labels.len() {
+                let l = self.labels[i] as usize;
+                self.upper[i] += drift[l];
+                let row = &mut self.lower_k[i * k..(i + 1) * k];
+                for (lb, dj) in row.iter_mut().zip(&drift) {
+                    *lb = (*lb - dj).max(0.0);
+                }
+            }
+        } else {
+            for i in 0..self.labels.len() {
+                let l = self.labels[i] as usize;
+                self.upper[i] += drift[l];
+                self.lower[i] -= if l == max1_j { max2 } else { max1 };
+            }
         }
     }
 }
@@ -183,6 +258,15 @@ struct StateSlice<'a> {
     labels: &'a mut [u32],
     upper: &'a mut [f64],
     lower: &'a mut [f64],
+    x_sq: &'a mut [f32],
+}
+
+/// The Elkan analogue of [`StateSlice`]: `lower_k` windows `rows·k`
+/// per-centroid lower bounds.
+struct ElkanSlice<'a> {
+    labels: &'a mut [u32],
+    upper: &'a mut [f64],
+    lower_k: &'a mut [f64],
     x_sq: &'a mut [f32],
 }
 
@@ -313,7 +397,10 @@ impl Default for BoundedEngine {
 /// rounding steps of the lane-tiled dot product (`n / LANES` adds per
 /// lane + reduction + the 3-term combination), padded generously — the
 /// cost of overestimating is a few extra rescans, never a wrong label.
-fn eval_slack(n: usize) -> f64 {
+/// Shared with the block-level bounding-box pruner (`store::prune`), which
+/// needs the same band to guarantee a skipped block could never flip a
+/// panel label.
+pub(crate) fn eval_slack(n: usize) -> f64 {
     (n as f64 / 16.0 + 8.0) * (f32::EPSILON as f64)
 }
 
@@ -349,11 +436,11 @@ impl BoundedEngine {
         let mut evals = 0u64;
         let mut pruned = 0u64;
 
-        for i in 0..rows {
-            let x = &points[i * n..(i + 1) * n];
-            let (best, best_d) = if !active {
-                // Init pass: full best/second-best scan, caching the
-                // iteration-invariant point norm alongside the bounds.
+        if !active {
+            // Init pass: full best/second-best scan, caching the
+            // iteration-invariant point norm alongside the bounds.
+            for i in 0..rows {
+                let x = &points[i * n..(i + 1) * n];
                 let x_sq = sq_norm(x);
                 x_sq_cache[i] = x_sq;
                 evals += k as u64;
@@ -361,44 +448,81 @@ impl BoundedEngine {
                 labels[i] = j1 as u32;
                 upper[i] = (d1 as f64).sqrt();
                 lower[i] = (d2 as f64).sqrt();
-                (j1, d1)
-            } else {
-                let x_sq = x_sq_cache[i];
-                let l = labels[i] as usize;
-                // Tighten: one exact evaluation against the assigned
-                // centroid. With the tightened upper bound below the lower
-                // bound on every other centroid, `l` is still the nearest
-                // and `d_l` is the exact min — no further evaluations.
-                let d_l = sq_dist_decomp(x, x_sq, &centroids[l * n..(l + 1) * n], c_sq[l]);
-                let ub = (d_l as f64).sqrt();
-                upper[i] = ub;
-                // Prune test in the squared domain (avoids a division when
-                // converting the absolute slack): lower² must clear the
-                // margined upper² plus the decomposition's cancellation
-                // error band.
-                let thr = ub * (1.0 + self.margin);
-                let slack = (x_sq as f64 + c_sq_max) * slack_factor;
-                let lb = lower[i];
-                if lb > 0.0 && thr * thr + slack <= lb * lb {
-                    evals += 1;
-                    pruned += (k - 1) as u64;
-                    (l, d_l)
-                } else {
-                    // Bounds inconclusive: full rescan (same arithmetic and
-                    // tie-breaking as the panel path), refreshing both
-                    // bounds from the exact best / second-best.
-                    evals += (k + 1) as u64;
-                    let (j1, d1, d2) = nearest2_decomp(x, x_sq, centroids, c_sq, k, n);
-                    labels[i] = j1 as u32;
-                    upper[i] = (d1 as f64).sqrt();
-                    lower[i] = (d2 as f64).sqrt();
-                    (j1, d1)
+                out_labels[i] = j1 as u32;
+                mins[i] = d1;
+            }
+        } else {
+            // Tighten pass, batched by shared label: counting-sort the rows
+            // by their current label so each centroid row is loaded once per
+            // label *group* instead of once per point. Per-point values are
+            // identical to the point-ordered pass — only the visit order of
+            // the (independent) tighten evaluations changes; the objective
+            // and sums are accumulated in row order below.
+            let mut group_off = vec![0usize; k + 1];
+            for &l in labels.iter() {
+                group_off[l as usize + 1] += 1;
+            }
+            for j in 0..k {
+                group_off[j + 1] += group_off[j];
+            }
+            let mut order = vec![0u32; rows];
+            {
+                let mut cursor = group_off.clone();
+                for (i, &l) in labels.iter().enumerate() {
+                    order[cursor[l as usize]] = i as u32;
+                    cursor[l as usize] += 1;
                 }
-            };
-            out_labels[i] = best as u32;
-            mins[i] = best_d;
+            }
+            for l in 0..k {
+                let c_l = &centroids[l * n..(l + 1) * n];
+                let c_sq_l = c_sq[l];
+                for &iu in &order[group_off[l]..group_off[l + 1]] {
+                    let i = iu as usize;
+                    let x = &points[i * n..(i + 1) * n];
+                    let x_sq = x_sq_cache[i];
+                    // Tighten: one exact evaluation against the assigned
+                    // centroid. With the tightened upper bound below the
+                    // lower bound on every other centroid, `l` is still the
+                    // nearest and `d_l` is the exact min — no further
+                    // evaluations.
+                    let d_l = sq_dist_decomp(x, x_sq, c_l, c_sq_l);
+                    let ub = (d_l as f64).sqrt();
+                    upper[i] = ub;
+                    // Prune test in the squared domain (avoids a division
+                    // when converting the absolute slack): lower² must clear
+                    // the margined upper² plus the decomposition's
+                    // cancellation error band.
+                    let thr = ub * (1.0 + self.margin);
+                    let slack = (x_sq as f64 + c_sq_max) * slack_factor;
+                    let lb = lower[i];
+                    if lb > 0.0 && thr * thr + slack <= lb * lb {
+                        evals += 1;
+                        pruned += (k - 1) as u64;
+                        out_labels[i] = l as u32;
+                        mins[i] = d_l;
+                    } else {
+                        // Bounds inconclusive: full rescan (same arithmetic
+                        // and tie-breaking as the panel path), refreshing
+                        // both bounds from the exact best / second-best.
+                        evals += (k + 1) as u64;
+                        let (j1, d1, d2) = nearest2_decomp(x, x_sq, centroids, c_sq, k, n);
+                        labels[i] = j1 as u32;
+                        upper[i] = (d1 as f64).sqrt();
+                        lower[i] = (d2 as f64).sqrt();
+                        out_labels[i] = j1 as u32;
+                        mins[i] = d1;
+                    }
+                }
+            }
+        }
+        // Row-ordered reduction — bit-identical accumulation regardless of
+        // the tighten pass's group order.
+        for i in 0..rows {
+            let best = out_labels[i] as usize;
+            let best_d = mins[i];
             objective += best_d as f64;
             counts[best] += 1;
+            let x = &points[i * n..(i + 1) * n];
             let srow = &mut sums[best * n..(best + 1) * n];
             for (sv, xv) in srow.iter_mut().zip(x) {
                 *sv += *xv as f64;
@@ -503,6 +627,329 @@ impl KernelEngine for BoundedEngine {
                     let mut local = Counters::new();
                     let out = self
                         .bounded_block(pts, centroids, n, k, c_sq_ref, slice, active, &mut local);
+                    *slot = Some((start, out, local));
+                }
+            })
+            .collect();
+        pool.scope_run_all(closures);
+        state.active = true;
+
+        let mut labels = vec![0u32; m];
+        let mut mins = vec![0f32; m];
+        let mut sums = vec![0f64; k * n];
+        let mut counts = vec![0u64; k];
+        let mut objective = 0f64;
+        for part in partials.into_iter().flatten() {
+            let (start, out, local) = part;
+            let rows = out.labels.len();
+            labels[start..start + rows].copy_from_slice(&out.labels);
+            mins[start..start + rows].copy_from_slice(&out.mins);
+            for (acc, v) in sums.iter_mut().zip(&out.sums) {
+                *acc += *v;
+            }
+            for (acc, v) in counts.iter_mut().zip(&out.counts) {
+                *acc += *v;
+            }
+            objective += out.objective;
+            counters.merge(&local);
+        }
+        AssignOut { labels, mins, sums, counts, objective }
+    }
+}
+
+/// Elkan-bound pruned exact assignment.
+///
+/// Per point: one upper bound on the distance to the assigned centroid
+/// plus `k` per-centroid lower bounds, persisted in [`LloydState`] and
+/// relaxed per-centroid by [`LloydState::apply_update`]. Each iteration
+/// tightens the upper bound with one exact evaluation, then rules out
+/// centroid `j` when either
+///
+/// * the stored lower bound `lb_j` clears the margined upper bound, or
+/// * the inter-centroid distance does: `d(c_l, c_j) ≥ 2·upper` implies by
+///   the triangle inequality that `j` cannot beat the assigned centroid.
+///
+/// Only the surviving centroids are evaluated, in index order with strict
+/// `<` — the same scan order and tie-breaking as the panel engine, so a
+/// skipped centroid (guaranteed *strictly* worse by the margin + absolute
+/// slack, exactly the [`BoundedEngine`] trust model) can never flip a
+/// label. Inter-centroid distances are deflated by the margin before use
+/// so their own rounding cannot over-prune.
+pub struct ElkanEngine {
+    /// Relative safety slack on the prune tests.
+    pub margin: f64,
+}
+
+impl Default for ElkanEngine {
+    fn default() -> Self {
+        ElkanEngine { margin: 1e-2 }
+    }
+}
+
+/// Per-step centroid geometry shared by every worker of one Elkan
+/// assignment: deflated pairwise centroid distances and the deflated
+/// half-distance to each centroid's nearest neighbour.
+struct ElkanGeometry {
+    /// `cc_lo[l*k + j]` ≤ true `d(c_l, c_j)` (distance domain).
+    cc_lo: Vec<f64>,
+    /// `s_lo[l]` ≤ `0.5 · min_{j≠l} d(c_l, c_j)`.
+    s_lo: Vec<f64>,
+}
+
+impl ElkanEngine {
+    fn geometry(&self, centroids: &[f32], k: usize, n: usize) -> ElkanGeometry {
+        let deflate = 1.0 - self.margin;
+        let mut cc_lo = vec![0f64; k * k];
+        let mut s_lo = vec![f64::INFINITY; k];
+        for l in 0..k {
+            for j in (l + 1)..k {
+                let d2 = sq_dist(&centroids[l * n..(l + 1) * n], &centroids[j * n..(j + 1) * n]);
+                let d_lo = ((d2 as f64) * deflate).max(0.0).sqrt();
+                cc_lo[l * k + j] = d_lo;
+                cc_lo[j * k + l] = d_lo;
+                s_lo[l] = s_lo[l].min(0.5 * d_lo);
+                s_lo[j] = s_lo[j].min(0.5 * d_lo);
+            }
+        }
+        if k == 1 {
+            s_lo[0] = f64::INFINITY;
+        }
+        ElkanGeometry { cc_lo, s_lo }
+    }
+
+    /// Serial Elkan assignment over one contiguous row block (the parallel
+    /// path calls this per worker window).
+    #[allow(clippy::too_many_arguments)]
+    fn elkan_block(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        n: usize,
+        k: usize,
+        c_sq: &[f32],
+        geo: &ElkanGeometry,
+        slice: ElkanSlice<'_>,
+        active: bool,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        let rows = slice.labels.len();
+        debug_assert_eq!(points.len(), rows * n);
+        debug_assert_eq!(centroids.len(), k * n);
+        debug_assert_eq!(slice.lower_k.len(), rows * k);
+        let ElkanSlice { labels, upper, lower_k, x_sq: x_sq_cache } = slice;
+        let c_sq_max = c_sq.iter().cloned().fold(0f32, f32::max) as f64;
+        let slack_factor = eval_slack(n);
+        let mut out_labels = vec![0u32; rows];
+        let mut mins = vec![0f32; rows];
+        let mut sums = vec![0f64; k * n];
+        let mut counts = vec![0u64; k];
+        let mut objective = 0f64;
+        let mut evals = 0u64;
+        let mut pruned = 0u64;
+
+        for i in 0..rows {
+            let x = &points[i * n..(i + 1) * n];
+            let lb_row = &mut lower_k[i * k..(i + 1) * k];
+            let (best, best_d) = if !active {
+                // Init pass: evaluate every centroid in index order (panel
+                // arithmetic + tie-breaking), seeding all k lower bounds
+                // with the exact distances.
+                let x_sq = sq_norm(x);
+                x_sq_cache[i] = x_sq;
+                evals += k as u64;
+                let mut bj = 0usize;
+                let mut bd = f32::INFINITY;
+                for (j, lb) in lb_row.iter_mut().enumerate() {
+                    let d = sq_dist_decomp(x, x_sq, &centroids[j * n..(j + 1) * n], c_sq[j]);
+                    *lb = (d as f64).sqrt();
+                    if d < bd {
+                        bd = d;
+                        bj = j;
+                    }
+                }
+                labels[i] = bj as u32;
+                upper[i] = (bd as f64).sqrt();
+                (bj, bd)
+            } else {
+                let x_sq = x_sq_cache[i];
+                let l = labels[i] as usize;
+                // Tighten: one exact evaluation against the assigned
+                // centroid.
+                let d_l = sq_dist_decomp(x, x_sq, &centroids[l * n..(l + 1) * n], c_sq[l]);
+                let u = (d_l as f64).sqrt();
+                upper[i] = u;
+                lb_row[l] = u;
+                let thr = u * (1.0 + self.margin);
+                let slack = (x_sq as f64 + c_sq_max) * slack_factor;
+                let thr2s = thr * thr + slack;
+                let slack_d = slack.sqrt();
+                let s_l = geo.s_lo[l];
+                // Global test: every j ≠ l sits at least `2·s_l` from the
+                // assigned centroid, so `d(x, c_j) ≥ 2·s_l − upper`; when
+                // that clears the margined upper bound, all k−1 others are
+                // ruled out at once.
+                let lb_g = 2.0 * s_l - thr - slack_d;
+                if s_l.is_finite() && lb_g > 0.0 && thr2s <= lb_g * lb_g {
+                    evals += 1;
+                    pruned += (k - 1) as u64;
+                    (l, d_l)
+                } else if s_l.is_infinite() {
+                    // k == 1: nothing to compare against.
+                    evals += 1;
+                    (l, d_l)
+                } else {
+                    // Per-centroid scan in index order; skipped centroids
+                    // are strictly worse, evaluated ones compete with the
+                    // panel's strict-< tie-breaking. `bj` starts at the
+                    // current label with an infinite distance, so the first
+                    // strict improvement in index order wins exactly as in
+                    // the panel scan (and a pathological all-∞ row keeps a
+                    // valid label).
+                    let cc_row = &geo.cc_lo[l * k..(l + 1) * k];
+                    let mut bj = l;
+                    let mut bd = f32::INFINITY;
+                    evals += 1; // the tighten evaluation
+                    for j in 0..k {
+                        if j == l {
+                            if d_l < bd {
+                                bd = d_l;
+                                bj = l;
+                            }
+                            continue;
+                        }
+                        let lb = lb_row[j];
+                        if lb > 0.0 && thr2s <= lb * lb {
+                            pruned += 1;
+                            continue;
+                        }
+                        let lb_cc = cc_row[j] - thr - slack_d;
+                        if lb_cc > 0.0 && thr2s <= lb_cc * lb_cc {
+                            pruned += 1;
+                            continue;
+                        }
+                        let d = sq_dist_decomp(x, x_sq, &centroids[j * n..(j + 1) * n], c_sq[j]);
+                        evals += 1;
+                        lb_row[j] = (d as f64).sqrt();
+                        if d < bd {
+                            bd = d;
+                            bj = j;
+                        }
+                    }
+                    labels[i] = bj as u32;
+                    upper[i] = (bd as f64).sqrt();
+                    (bj, bd)
+                }
+            };
+            out_labels[i] = best as u32;
+            mins[i] = best_d;
+            objective += best_d as f64;
+            counts[best] += 1;
+            let srow = &mut sums[best * n..(best + 1) * n];
+            for (sv, xv) in srow.iter_mut().zip(x) {
+                *sv += *xv as f64;
+            }
+        }
+        counters.add_distance_evals(evals);
+        counters.add_pruned_evals(pruned);
+        AssignOut { labels: out_labels, mins, sums, counts, objective }
+    }
+}
+
+impl KernelEngine for ElkanEngine {
+    fn kind(&self) -> KernelEngineKind {
+        KernelEngineKind::Elkan
+    }
+
+    fn name(&self) -> &'static str {
+        "elkan"
+    }
+
+    fn assign_step(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        assert_eq!(points.len(), m * n, "points shape");
+        assert_eq!(centroids.len(), k * n, "centroids shape");
+        assert_eq!(state.len(), m, "state length");
+        assert!(k > 0, "k must be positive");
+        state.ensure_allocated_elkan(k);
+        let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+        let geo = self.geometry(centroids, k, n);
+        let active = state.active;
+        let slice = ElkanSlice {
+            labels: &mut state.labels[..],
+            upper: &mut state.upper[..],
+            lower_k: &mut state.lower_k[..],
+            x_sq: &mut state.x_sq[..],
+        };
+        let out = self.elkan_block(points, centroids, n, k, &c_sq, &geo, slice, active, counters);
+        state.active = true;
+        out
+    }
+
+    fn assign_step_parallel(
+        &self,
+        pool: &ThreadPool,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        assert_eq!(points.len(), m * n, "points shape");
+        assert_eq!(centroids.len(), k * n, "centroids shape");
+        assert_eq!(state.len(), m, "state length");
+        // The shared partition rule keeps thresholds and merge order
+        // engine-independent.
+        let Some(jobs) = assign::partition_rows(pool, m) else {
+            return self.assign_step(points, centroids, m, n, k, state, counters);
+        };
+        state.ensure_allocated_elkan(k);
+        let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
+        let geo = self.geometry(centroids, k, n);
+        let active = state.active;
+        let mut views: Vec<(usize, ElkanSlice<'_>)> = Vec::with_capacity(jobs.len());
+        {
+            let mut lab_rest: &mut [u32] = &mut state.labels;
+            let mut up_rest: &mut [f64] = &mut state.upper;
+            let mut lo_rest: &mut [f64] = &mut state.lower_k;
+            let mut xs_rest: &mut [f32] = &mut state.x_sq;
+            for &(start, end) in &jobs {
+                let rows = end - start;
+                let (lab, lab_tail) = lab_rest.split_at_mut(rows);
+                let (up, up_tail) = up_rest.split_at_mut(rows);
+                let (lo, lo_tail) = lo_rest.split_at_mut(rows * k);
+                let (xs, xs_tail) = xs_rest.split_at_mut(rows);
+                lab_rest = lab_tail;
+                up_rest = up_tail;
+                lo_rest = lo_tail;
+                xs_rest = xs_tail;
+                views.push((start, ElkanSlice { labels: lab, upper: up, lower_k: lo, x_sq: xs }));
+            }
+        }
+        let mut partials: Vec<Option<(usize, AssignOut, Counters)>> =
+            (0..views.len()).map(|_| None).collect();
+        let c_sq_ref: &[f32] = &c_sq;
+        let geo_ref: &ElkanGeometry = &geo;
+        let closures: Vec<_> = views
+            .into_iter()
+            .zip(partials.iter_mut())
+            .map(|((start, slice), slot)| {
+                let rows = slice.labels.len();
+                let pts = &points[start * n..(start + rows) * n];
+                move || {
+                    let mut local = Counters::new();
+                    let out = self.elkan_block(
+                        pts, centroids, n, k, c_sq_ref, geo_ref, slice, active, &mut local,
+                    );
                     *slot = Some((start, out, local));
                 }
             })
@@ -676,8 +1123,134 @@ mod tests {
     fn kind_roundtrip_and_names() {
         assert_eq!(KernelEngineKind::parse("panel"), Some(KernelEngineKind::Panel));
         assert_eq!(KernelEngineKind::parse("bounded"), Some(KernelEngineKind::Bounded));
+        assert_eq!(KernelEngineKind::parse("elkan"), Some(KernelEngineKind::Elkan));
         assert_eq!(KernelEngineKind::parse("warp"), None);
         assert_eq!(KernelEngineKind::Panel.build().name(), "panel");
         assert_eq!(KernelEngineKind::Bounded.build().kind(), KernelEngineKind::Bounded);
+        assert_eq!(KernelEngineKind::Elkan.build().name(), "elkan");
+        for kind in [KernelEngineKind::Panel, KernelEngineKind::Bounded, KernelEngineKind::Elkan]
+        {
+            assert_eq!(KernelEngineKind::parse(kind.name()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn elkan_matches_panel_over_iterations() {
+        for seed in 1..6u64 {
+            let (m, n, k) = (257, 5, 6);
+            let (pts, cs) = random_problem(seed, m, n, k);
+            let (pa, _, ca) = iterate(&PanelEngine, &pts, m, n, k, 5, &cs);
+            let (pe, ce, ceds) = iterate(&ElkanEngine::default(), &pts, m, n, k, 5, &cs);
+            assert_eq!(pa.labels, pe.labels, "seed {seed}");
+            assert_eq!(pa.counts, pe.counts, "seed {seed}");
+            assert_eq!(ca, ceds, "seed {seed}: centroid trajectories diverged");
+            assert!(
+                (pa.objective - pe.objective).abs() <= 1e-6 * pa.objective.abs() + 1e-12,
+                "seed {seed}: {} vs {}",
+                pa.objective,
+                pe.objective
+            );
+            assert!(ce.distance_evals > 0);
+        }
+    }
+
+    #[test]
+    fn elkan_prunes_harder_than_bounded_on_separated_blobs() {
+        let mut rng = Rng::new(9);
+        let centers = [(-8.0f32, -8.0f32), (8.0, 8.0), (-8.0, 8.0)];
+        let m = 300;
+        let mut pts = Vec::with_capacity(m * 2);
+        for i in 0..m {
+            let (cx, cy) = centers[i % 3];
+            pts.push(cx + 0.2 * rng.gaussian() as f32);
+            pts.push(cy + 0.2 * rng.gaussian() as f32);
+        }
+        let cs: Vec<f32> = pts[..6].to_vec();
+        let iters = 6usize;
+        let (_, cb, _) = iterate(&BoundedEngine::default(), &pts, m, 2, 3, iters, &cs);
+        let (_, ce, _) = iterate(&ElkanEngine::default(), &pts, m, 2, 3, iters, &cs);
+        assert!(ce.pruned_evals > 0, "no Elkan pruning on separated blobs");
+        assert!(
+            ce.distance_evals <= cb.distance_evals,
+            "elkan ({}) should prune at least as hard as bounded ({}) here",
+            ce.distance_evals,
+            cb.distance_evals
+        );
+    }
+
+    #[test]
+    fn parallel_elkan_matches_serial_elkan() {
+        let (m, n, k) = (2048, 4, 5);
+        let (pts, cs) = random_problem(3, m, n, k);
+        let pool = ThreadPool::new(4);
+        let engine = ElkanEngine::default();
+        let mut c = cs.clone();
+        let mut st_s = LloydState::new(m);
+        let mut st_p = LloydState::new(m);
+        let mut cnt_s = Counters::new();
+        let mut cnt_p = Counters::new();
+        let mut old = vec![0f32; k * n];
+        for _ in 0..4 {
+            let a = engine.assign_step(&pts, &c, m, n, k, &mut st_s, &mut cnt_s);
+            let b = engine.assign_step_parallel(&pool, &pts, &c, m, n, k, &mut st_p, &mut cnt_p);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.mins, b.mins);
+            assert_eq!(a.counts, b.counts);
+            assert!((a.objective - b.objective).abs() <= 1e-6 * a.objective.abs() + 1e-12);
+            old.copy_from_slice(&c);
+            update_centroids(&a.sums, &a.counts, &mut c, k, n);
+            st_s.apply_update(&old, &c, k, n);
+            st_p.apply_update(&old, &c, k, n);
+        }
+        assert_eq!(cnt_s.distance_evals, cnt_p.distance_evals);
+        assert_eq!(cnt_s.pruned_evals, cnt_p.pruned_evals);
+    }
+
+    #[test]
+    fn switching_engine_families_on_one_state_stays_exact() {
+        // One LloydState driven alternately by Elkan and Bounded (a misuse
+        // no pipeline performs, but the API allows): each switch must
+        // re-initialise the bounds instead of trusting the other family's
+        // state — labels stay panel-identical throughout.
+        let (m, n, k) = (300, 4, 5);
+        let (pts, cs) = random_problem(11, m, n, k);
+        let bounded = BoundedEngine::default();
+        let elkan = ElkanEngine::default();
+        let panel = PanelEngine;
+        let mut c = cs.clone();
+        let mut shared = LloydState::new(m);
+        let mut panel_state = LloydState::new(m);
+        let mut cnt = Counters::new();
+        let mut cnt_p = Counters::new();
+        let mut old = vec![0f32; k * n];
+        for step in 0..6 {
+            let engine: &dyn KernelEngine =
+                if step % 2 == 0 { &elkan } else { &bounded };
+            let a = engine.assign_step(&pts, &c, m, n, k, &mut shared, &mut cnt);
+            let b = panel.assign_step(&pts, &c, m, n, k, &mut panel_state, &mut cnt_p);
+            assert_eq!(a.labels, b.labels, "step {step}");
+            assert_eq!(a.mins, b.mins, "step {step}");
+            old.copy_from_slice(&c);
+            update_centroids(&a.sums, &a.counts, &mut c, k, n);
+            shared.apply_update(&old, &c, k, n);
+        }
+    }
+
+    #[test]
+    fn elkan_k_equals_one_always_prunes_after_init() {
+        let (m, n, k) = (64, 3, 1);
+        let (pts, cs) = random_problem(5, m, n, k);
+        let engine = ElkanEngine::default();
+        let mut state = LloydState::new(m);
+        let mut counters = Counters::new();
+        let mut c = cs.clone();
+        let mut old = vec![0f32; n];
+        let first = engine.assign_step(&pts, &c, m, n, k, &mut state, &mut counters);
+        old.copy_from_slice(&c);
+        update_centroids(&first.sums, &first.counts, &mut c, k, n);
+        state.apply_update(&old, &c, k, n);
+        let before = counters.distance_evals;
+        engine.assign_step(&pts, &c, m, n, k, &mut state, &mut counters);
+        assert_eq!(counters.distance_evals - before, m as u64);
     }
 }

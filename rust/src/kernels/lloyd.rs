@@ -4,7 +4,8 @@
 //!
 //! The loop is engine-driven: a [`KernelEngine`] owns the assignment step
 //! and a [`LloydState`] persists per-point bounds across iterations, so the
-//! bounded engine skips most distance evaluations once a chunk settles.
+//! pruning engines (Hamerly-bounded, Elkan) skip most distance evaluations
+//! once a chunk settles.
 //! [`lloyd`] keeps the historical one-shot signature (panel engine);
 //! [`lloyd_with_engine`] is the strategy-selectable entry point every
 //! pipeline routes through.

@@ -11,8 +11,12 @@ pub mod lloyd;
 pub mod objective;
 pub mod update;
 
-pub use assign::{assign_accumulate, assign_accumulate_parallel, assign_only, AssignOut};
-pub use engine::{BoundedEngine, KernelEngine, KernelEngineKind, LloydState, PanelEngine};
+pub use assign::{
+    assign_accumulate, assign_accumulate_parallel, assign_only, panel_assign_into, AssignOut,
+};
+pub use engine::{
+    BoundedEngine, ElkanEngine, KernelEngine, KernelEngineKind, LloydState, PanelEngine,
+};
 pub use kmeanspp::{kmeanspp, reseed_degenerate, reseed_degenerate_random};
 pub use lloyd::{lloyd, lloyd_with_engine, LloydParams, LloydResult};
 pub use objective::{objective, objective_parallel};

@@ -43,13 +43,17 @@ SUBCOMMANDS:
       --s N             chunk size (default 4096)
       --time SECS       cpu_max budget (default 3)
       --chunks N        max chunks (default unlimited)
-      --engine E        panel | bounded | pjrt (default panel)
+      --engine E        panel | bounded | elkan | pjrt (default panel)
                         panel   = exact blocked-panel kernels (fused
                                   distance panel + argmin)
                         bounded = Hamerly triangle-inequality pruning:
                                   label-identical to panel, skips most
                                   distance evals on settled chunks (see
                                   the `pruned evals` output line)
+                        elkan   = Elkan pruning: k per-centroid lower
+                                  bounds + the inter-centroid-distance
+                                  test; label-identical, prunes harder
+                                  than bounded at O(m·k) bound memory
                         'native' is accepted as an alias for panel
       --mode M          inner | chunks | seq | tune | stream (default inner)
                         tune   = competitive portfolio tuner: bandit-
@@ -92,8 +96,14 @@ SUBCOMMANDS:
       --block-rows N    v3: rows per block (default 4096)
       --dtype D         v3: f32 | f64 | f16 payload (default f32)
       --codec C         v3: none | shuffle | lz per-block codec (default none)
+      --no-summaries    v3: skip the per-block min/max summary section
+                        (disables the block-pruned final pass on this file)
       --threads N       v3: encode workers (default: machine)
-  verify <file.bmx>   Check every checksum in a .bmx file
+  convert <file.bmx> --add-summaries   Retrofit the per-block min/max
+                      summary section onto an existing v3 file in place
+                      (decode-only — blocks are never re-encoded)
+  verify <file.bmx>   Check every checksum in a .bmx file (v3: per-block
+                      CRCs + min/max summary consistency when present)
       --threads N       v3: parallel block scanners (default: machine)
   table <dataset>     Regenerate the paper's per-dataset tables
       --k LIST          k grid (default 2,3,5,10,15,20,25)
@@ -116,7 +126,7 @@ fn main() {
         std::process::exit(2);
     }
     let sub = argv.remove(0);
-    let flags = ["full", "quick", "skip-final", "json", "help"];
+    let flags = ["full", "quick", "skip-final", "json", "help", "no-summaries", "add-summaries"];
     let args = match Args::parse_with_flags(argv, &flags) {
         Ok(a) => a,
         Err(e) => {
@@ -213,6 +223,7 @@ fn run_summary_json(
         ("improvements", num(r.improvements as f64)),
         ("distance_evals", num(r.counters.distance_evals as f64)),
         ("pruned_evals", num(r.counters.pruned_evals as f64)),
+        ("pruned_blocks", num(r.counters.pruned_blocks as f64)),
         ("chunk_iterations", num(r.counters.chunk_iterations as f64)),
         ("full_iterations", num(r.counters.full_iterations as f64)),
         ("cpu_init_secs", num(r.cpu_init_secs)),
@@ -249,7 +260,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         "random" => ReinitStrategy::Random,
         other => return Err(format!("bad --reinit '{other}'")),
     };
-    let engine_arg = args.choice("engine", &["panel", "native", "bounded", "pjrt"])?;
+    let engine_arg = args.choice("engine", &["panel", "native", "bounded", "elkan", "pjrt"])?;
     let engine = if engine_arg == "pjrt" { Engine::Pjrt } else { Engine::Native };
     // `KernelEngineKind::parse` is the source of truth for kernel tokens;
     // "native" (compat alias) and "pjrt" fall back to the panel kernel.
@@ -303,6 +314,9 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     println!("distance evals (n_d)     : {:.3e}", r.counters.distance_evals as f64);
     if r.counters.pruned_evals > 0 {
         println!("pruned evals (avoided)   : {:.3e}", r.counters.pruned_evals as f64);
+    }
+    if r.counters.pruned_blocks > 0 {
+        println!("pruned blocks (final)    : {}", r.counters.pruned_blocks);
     }
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
@@ -358,10 +372,7 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
     if args.flag("json") {
-        let kernel_name = match cfg.kernel {
-            KernelEngineKind::Panel => "panel",
-            KernelEngineKind::Bounded => "bounded",
-        };
+        let kernel_name = cfg.kernel.name();
         let summary = run_summary_json(
             data.name(),
             data.m(),
@@ -469,7 +480,7 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
 }
 
 /// Parse the shared v3 store knobs (`--block-rows`, `--dtype`, `--codec`,
-/// `--threads`) into [`StoreOptions`].
+/// `--no-summaries`, `--threads`) into [`StoreOptions`].
 fn store_options(args: &Args) -> Result<StoreOptions, String> {
     let defaults = StoreOptions::default();
     let dtype = Dtype::parse(args.choice("dtype", &["f32", "f64", "f16"])?)
@@ -480,7 +491,13 @@ fn store_options(args: &Args) -> Result<StoreOptions, String> {
     if block_rows == 0 {
         return Err("--block-rows must be ≥ 1".into());
     }
-    Ok(StoreOptions { block_rows, dtype, codec, threads: args.usize("threads", 0)? })
+    Ok(StoreOptions {
+        block_rows,
+        dtype,
+        codec,
+        summaries: !args.flag("no-summaries"),
+        threads: args.usize("threads", 0)?,
+    })
 }
 
 /// Reject v3-only knobs when the output is not a v3 block store (`target`
@@ -493,11 +510,45 @@ fn reject_v3_knobs(args: &Args, target: &str) -> Result<(), String> {
             ));
         }
     }
+    if args.flag("no-summaries") {
+        return Err(format!(
+            "--no-summaries only applies to .bmx v3 output, not {target}"
+        ));
+    }
     Ok(())
 }
 
 fn cmd_convert(args: &Args) -> Result<(), String> {
     let pos = args.positional();
+    if args.flag("add-summaries") {
+        // Retrofit mode: decode an existing v3 store and append its
+        // summary section in place — no re-encode, no new file.
+        let [file] = pos else {
+            return Err("usage: convert <file.bmx> --add-summaries".into());
+        };
+        if !file.ends_with(".bmx") {
+            return Err(format!("--add-summaries needs a .bmx v3 file, got '{file}'"));
+        }
+        let path = PathBuf::from(file);
+        if loader::bmx_version(&path).map_err(|e| e.to_string())? != 3 {
+            return Err(format!(
+                "'{file}' is a legacy flat .bmx; reconvert it to v3 first \
+                 (`bigmeans convert` writes v3 by default)"
+            ));
+        }
+        let t0 = std::time::Instant::now();
+        let added = bigmeans::store::add_summaries(&path, args.usize("threads", 0)?)
+            .map_err(|e| e.to_string())?;
+        if added {
+            eprintln!(
+                "added per-block min/max summaries to {file} in {:.2}s",
+                t0.elapsed().as_secs_f64()
+            );
+        } else {
+            eprintln!("{file} already carries summaries — nothing to do");
+        }
+        return Ok(());
+    }
     if pos.len() != 2 {
         return Err("usage: convert <in.csv> <out.bmx>".into());
     }
@@ -539,7 +590,7 @@ fn cmd_verify(args: &Args) -> Result<(), String> {
             let store = BlockStore::open(&path).map_err(|e| e.to_string())?;
             let report = store.verify_all(threads).map_err(|e| e.to_string())?;
             eprintln!(
-                "ok: {} — {} blocks ({} × {}, {}/{}), {:.1} MiB encoded payload \
+                "ok: {} — {} blocks ({} × {}, {}/{}, {}), {:.1} MiB encoded payload \
                  verified in {:.2}s",
                 name,
                 report.blocks,
@@ -547,6 +598,11 @@ fn cmd_verify(args: &Args) -> Result<(), String> {
                 store.n(),
                 store.dtype().name(),
                 store.codec().name(),
+                if store.has_summaries() {
+                    "summaries consistent"
+                } else {
+                    "no summaries"
+                },
                 report.encoded_bytes as f64 / (1 << 20) as f64,
                 t0.elapsed().as_secs_f64()
             );

@@ -13,10 +13,15 @@ pub struct Counters {
     /// Distance-function evaluations (point↔centroid), the paper's `n_d`.
     pub distance_evals: u64,
     /// Distance evaluations *avoided* by triangle-inequality pruning (the
-    /// bounded kernel engine). Not included in `distance_evals`; an
-    /// unpruned run would have performed `distance_evals + pruned_evals`
-    /// (minus the rescans' bound-tightening evaluations).
+    /// bounded/Elkan kernel engines and the block-pruned final pass). Not
+    /// included in `distance_evals`; an unpruned run would have performed
+    /// `distance_evals + pruned_evals` (minus the rescans'
+    /// bound-tightening evaluations).
     pub pruned_evals: u64,
+    /// Store blocks of the final full-dataset pass whose bounding box was
+    /// wholly owned by one centroid, so the whole block bypassed the
+    /// k-wide assignment scan (see `store::prune`).
+    pub pruned_blocks: u64,
     /// Lloyd iterations executed against the *full* dataset (`n_full`).
     pub full_iterations: u64,
     /// Lloyd iterations executed against chunks (not part of `n_full`).
@@ -44,6 +49,7 @@ impl Counters {
     pub fn merge(&mut self, other: &Counters) {
         self.distance_evals += other.distance_evals;
         self.pruned_evals += other.pruned_evals;
+        self.pruned_blocks += other.pruned_blocks;
         self.full_iterations += other.full_iterations;
         self.chunk_iterations += other.chunk_iterations;
         self.chunks += other.chunks;
@@ -62,9 +68,11 @@ mod tests {
         let mut b = Counters::new();
         b.add_distance_evals(5);
         b.full_iterations = 3;
+        b.pruned_blocks = 4;
         a.merge(&b);
         assert_eq!(a.distance_evals, 15);
         assert_eq!(a.full_iterations, 3);
         assert_eq!(a.chunks, 2);
+        assert_eq!(a.pruned_blocks, 4);
     }
 }

@@ -80,6 +80,53 @@ fn dtype_decode(bytes: &[u8], dtype: Dtype) -> Vec<f32> {
     }
 }
 
+/// Per-dimension min/max of one block in the *decoded* domain: `n` mins
+/// followed by `n` maxs. For `f16` the bounds are taken over the
+/// quantised values (what a reader decodes), so they are valid for every
+/// value the block will ever serve. This is the single implementation the
+/// writer, the verifier, and `convert --add-summaries` all share — the
+/// three must agree bit-for-bit for summary verification to be exact.
+///
+/// Any non-finite value (NaN, ±∞) **poisons its dimension**: the bounds
+/// are pinned to the `(∞, −∞)` sentinels, which the pruner treats as
+/// "never prunable". This is load-bearing for exactness — a NaN
+/// coordinate makes every panel distance evaluate to `NaN.max(0.0) = 0`,
+/// so a box that silently ignored the NaN could be classified as owned
+/// while the unpruned scan labels the row differently.
+pub fn block_minmax(values: &[f32], dtype: Dtype, n: usize) -> Vec<f32> {
+    debug_assert_eq!(values.len() % n, 0);
+    let mut out = vec![0f32; 2 * n];
+    let (mins, maxs) = out.split_at_mut(n);
+    mins.fill(f32::INFINITY);
+    maxs.fill(f32::NEG_INFINITY);
+    let mut poisoned = vec![false; n];
+    for row in values.chunks_exact(n) {
+        for (d, &raw) in row.iter().enumerate() {
+            let v = match dtype {
+                Dtype::F32 | Dtype::F64 => raw,
+                Dtype::F16 => f32_from_f16(f16_from_f32(raw)),
+            };
+            if !v.is_finite() {
+                poisoned[d] = true;
+                continue;
+            }
+            if v < mins[d] {
+                mins[d] = v;
+            }
+            if v > maxs[d] {
+                maxs[d] = v;
+            }
+        }
+    }
+    for d in 0..n {
+        if poisoned[d] {
+            mins[d] = f32::INFINITY;
+            maxs[d] = f32::NEG_INFINITY;
+        }
+    }
+    out
+}
+
 /// Encode one block of `values` into its on-disk bytes.
 pub fn encode_block(values: &[f32], dtype: Dtype, codec: Codec) -> Vec<u8> {
     let raw = dtype_encode(values, dtype);
@@ -196,6 +243,40 @@ mod tests {
             .is_err());
         let lz = encode_block(&values, Dtype::F32, Codec::Lz);
         assert!(decode_block(&lz[..lz.len() - 1], values.len(), Dtype::F32, Codec::Lz).is_err());
+    }
+
+    #[test]
+    fn block_minmax_bounds_decoded_values() {
+        let values = sample_values(600, 13); // 200 rows × 3
+        for dtype in [Dtype::F32, Dtype::F64, Dtype::F16] {
+            let mm = block_minmax(&values, dtype, 3);
+            let enc = encode_block(&values, dtype, Codec::Shuffle);
+            let dec = decode_block(&enc, values.len(), dtype, Codec::Shuffle).unwrap();
+            // Recomputing over the decoded values must reproduce the same
+            // bits (the verify contract) …
+            assert_eq!(block_minmax(&dec, dtype, 3), mm, "{dtype:?}");
+            // … and every decoded value must sit inside its dimension's
+            // bounds.
+            for row in dec.chunks_exact(3) {
+                for (d, &v) in row.iter().enumerate() {
+                    assert!(v >= mm[d] && v <= mm[3 + d], "{dtype:?} dim {d}: {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_values_poison_their_dimension() {
+        // 3 rows × 2 dims; dim 0 carries a NaN, dim 1 an infinity.
+        let values = [1.0f32, 2.0, f32::NAN, 5.0, 3.0, f32::INFINITY];
+        let mm = block_minmax(&values, Dtype::F32, 2);
+        assert_eq!(mm[0], f32::INFINITY, "NaN dim must be unprunable");
+        assert_eq!(mm[2], f32::NEG_INFINITY);
+        assert_eq!(mm[1], f32::INFINITY, "inf dim must be unprunable");
+        assert_eq!(mm[3], f32::NEG_INFINITY);
+        // A clean block is unaffected.
+        let clean = block_minmax(&[1.0f32, 2.0, 3.0, 5.0], Dtype::F32, 2);
+        assert_eq!(clean, vec![1.0, 2.0, 3.0, 5.0]);
     }
 
     #[test]

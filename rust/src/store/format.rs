@@ -18,6 +18,10 @@ pub const BMX3_HEADER_LEN: usize = 64;
 /// u32 | reserved u32).
 pub const BLOCK_ENTRY_LEN: usize = 24;
 
+/// Bytes per dimension in the optional per-block summary section (one f32
+/// min + one f32 max).
+pub const SUMMARY_DIM_LEN: usize = 8;
+
 /// Default rows per block (≈ one chunk of the paper's default `s`).
 pub const DEFAULT_BLOCK_ROWS: usize = 4096;
 
@@ -139,6 +143,10 @@ pub struct StoreOptions {
     pub dtype: Dtype,
     /// Per-block codec.
     pub codec: Codec,
+    /// Write the per-block per-dimension min/max summary section (enables
+    /// the centroid-pruned final pass; `convert --add-summaries` can
+    /// retrofit it).
+    pub summaries: bool,
     /// Encode worker threads (0 = machine default).
     pub threads: usize,
 }
@@ -149,6 +157,7 @@ impl Default for StoreOptions {
             block_rows: DEFAULT_BLOCK_ROWS,
             dtype: Dtype::F32,
             codec: Codec::None,
+            summaries: true,
             threads: 0,
         }
     }
@@ -196,6 +205,13 @@ pub struct V3Header {
     pub index_off: u64,
     /// CRC-32 of the index-table bytes.
     pub index_crc: u32,
+    /// Absolute byte offset of the optional per-block min/max summary
+    /// section (0 = absent — the pre-summary v3 layout; readers treat
+    /// those files exactly as before).
+    pub summary_off: u64,
+    /// CRC-32 of the summary-section bytes (meaningless when
+    /// `summary_off == 0`).
+    pub summary_crc: u32,
 }
 
 impl V3Header {
@@ -208,6 +224,11 @@ impl V3Header {
         }
     }
 
+    /// Bytes the summary section occupies for this geometry.
+    pub fn summary_len(&self) -> u64 {
+        self.blocks() * (self.n as u64) * (SUMMARY_DIM_LEN as u64)
+    }
+
     pub fn encode(&self) -> [u8; BMX3_HEADER_LEN] {
         let mut out = [0u8; BMX3_HEADER_LEN];
         out[0..4].copy_from_slice(&BMX3_MAGIC);
@@ -218,6 +239,8 @@ impl V3Header {
         out[21] = self.codec.tag();
         out[24..32].copy_from_slice(&self.index_off.to_le_bytes());
         out[32..36].copy_from_slice(&self.index_crc.to_le_bytes());
+        out[36..44].copy_from_slice(&self.summary_off.to_le_bytes());
+        out[44..48].copy_from_slice(&self.summary_crc.to_le_bytes());
         out
     }
 
@@ -240,6 +263,11 @@ impl V3Header {
             .ok_or_else(|| anyhow!("{label}: unknown codec tag {}", bytes[21]))?;
         let index_off = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
         let index_crc = u32::from_le_bytes(bytes[32..36].try_into().unwrap());
+        // Summary extension (2026): files written before it carry zeroed
+        // reserved bytes here, which decode as "no summaries" — the
+        // version-tolerant read path.
+        let summary_off = u64::from_le_bytes(bytes[36..44].try_into().unwrap());
+        let summary_crc = u32::from_le_bytes(bytes[44..48].try_into().unwrap());
         if n == 0 {
             bail!("{label}: bmx v3 header has n = 0");
         }
@@ -257,7 +285,17 @@ impl V3Header {
             .ok_or_else(|| {
                 anyhow!("{label}: block geometry {block_rows}×{n} overflows")
             })?;
-        Ok(V3Header { m, n, block_rows, dtype, codec, index_off, index_crc })
+        Ok(V3Header {
+            m,
+            n,
+            block_rows,
+            dtype,
+            codec,
+            index_off,
+            index_crc,
+            summary_off,
+            summary_crc,
+        })
     }
 }
 
@@ -275,6 +313,8 @@ mod tests {
             codec: Codec::Lz,
             index_off: 0xDEAD_BEEF,
             index_crc: 0x1234_5678,
+            summary_off: 0xFEED_F00D,
+            summary_crc: 0x9ABC_DEF0,
         };
         let enc = h.encode();
         let back = V3Header::decode(&enc, "t").unwrap();
@@ -285,7 +325,31 @@ mod tests {
         assert_eq!(back.codec, h.codec);
         assert_eq!(back.index_off, h.index_off);
         assert_eq!(back.index_crc, h.index_crc);
+        assert_eq!(back.summary_off, h.summary_off);
+        assert_eq!(back.summary_crc, h.summary_crc);
         assert_eq!(back.blocks(), 123_456u64.div_ceil(4096));
+        assert_eq!(back.summary_len(), back.blocks() * 17 * SUMMARY_DIM_LEN as u64);
+    }
+
+    #[test]
+    fn zeroed_summary_fields_decode_as_absent() {
+        // The pre-summary layout: reserved bytes 36..48 were zeroed.
+        let mut h = V3Header {
+            m: 100,
+            n: 4,
+            block_rows: 16,
+            dtype: Dtype::F32,
+            codec: Codec::None,
+            index_off: 64,
+            index_crc: 7,
+            summary_off: 0,
+            summary_crc: 0,
+        };
+        let back = V3Header::decode(&h.encode(), "t").unwrap();
+        assert_eq!(back.summary_off, 0);
+        h.summary_off = 9999;
+        let back = V3Header::decode(&h.encode(), "t").unwrap();
+        assert_eq!(back.summary_off, 9999);
     }
 
     #[test]
@@ -304,6 +368,8 @@ mod tests {
             codec: Codec::None,
             index_off: 64,
             index_crc: 0,
+            summary_off: 0,
+            summary_crc: 0,
         };
         let mut bad_magic = good.encode();
         bad_magic[3] = b'9';

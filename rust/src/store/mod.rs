@@ -41,10 +41,15 @@
 //! 22      2      reserved     zeroed
 //! 24      8      index_off    u64  byte offset of the block-index table
 //! 32      4      index_crc    u32  CRC-32 of the index-table bytes
-//! 36      28     reserved     zeroed
+//! 36      8      summary_off  u64  byte offset of the per-block min/max
+//!                                  summary section (0 = absent)
+//! 44      4      summary_crc  u32  CRC-32 of the summary-section bytes
+//! 48      16     reserved     zeroed
 //! 64      …      blocks       encoded blocks, back to back
 //! index_off …    index        one 24-byte entry per block:
 //!                               offset u64 | enc_len u64 | crc u32 | pad u32
+//! summary_off …  summaries    per block: n × f32 min, then n × f32 max
+//!                              (8·n bytes per block, decoded-value domain)
 //! ```
 //!
 //! Block `i` holds rows `[i·block_rows, min(m, (i+1)·block_rows))`; its
@@ -52,6 +57,18 @@
 //! bytes, so verification never pays a decode it can skip. The index is
 //! written last (patching `index_off`/`index_crc`/`m` into the header on
 //! finish), keeping the writer single-pass.
+//!
+//! The **summary section** is the 2026 extension enabling the
+//! centroid-pruned final pass ([`prune`]): per block, each dimension's
+//! min/max over the *decoded* values (for `f16` that is the quantised
+//! domain, so the bounds hold for everything a reader sees). It is
+//! version-tolerant in both directions — the fields live in previously
+//! zeroed reserved header bytes, so pre-extension readers ignore the
+//! section (it sits past the index they stop at) and pre-extension files
+//! decode as `summary_off = 0` = "no summaries". `bigmeans convert
+//! --add-summaries` retrofits the section onto an existing file in place
+//! (decode-only — blocks are never re-encoded), and `bigmeans verify`
+//! cross-checks every stored summary against its block's decoded values.
 //!
 //! # Layering
 //!
@@ -78,10 +95,12 @@
 pub mod cache;
 pub mod codec;
 pub mod format;
+pub mod prune;
 pub mod source;
 pub mod writer;
 
 pub use cache::{BlockCache, DEFAULT_CACHE_BYTES};
 pub use format::{Codec, Dtype, StoreOptions, BMX3_MAGIC, DEFAULT_BLOCK_ROWS};
+pub use prune::PrunePlan;
 pub use source::{BlockStore, VerifyReport};
-pub use writer::{copy_to_store, BlockWriter};
+pub use writer::{add_summaries, copy_to_store, BlockWriter};

@@ -1,0 +1,229 @@
+//! Block-level centroid pruning for the final full-dataset pass.
+//!
+//! The same triangle-inequality geometry the Elkan/Hamerly kernel engines
+//! apply per *point* applies per *block*: every `.bmx` v3 block may carry a
+//! per-dimension bounding box (the summary section, see
+//! [`crate::store::format`]), and for a fixed centroid set the distance
+//! from any point in the box to centroid `j` is bracketed by
+//!
+//! * `dmin(j)` — the distance from `c_j` to the box (0 if inside), and
+//! * `dmax(j)` — the distance from `c_j` to the farthest box corner.
+//!
+//! If some centroid's `dmax` clears every other centroid's `dmin` — the
+//! closest-centroid-to-box upper bound vs. the second-closest lower bound —
+//! then **every** point of the block is strictly nearest that centroid, and
+//! the final pass can label the whole block with a single-centroid distance
+//! pass (`1` evaluation per point instead of `k`) without ever running the
+//! k-wide scan. The comparison carries the same per-evaluation fp slack as
+//! the kernel engines ([`crate::kernels::engine`]'s `eval_slack`), so a
+//! pruned block can never disagree with the panel kernel: labels and the
+//! objective stay bit-identical, enforced by `tests/store_v3.rs`.
+//!
+//! Degenerate centroids parked at `1e15` by the coordinator get a
+//! *per-centroid* slack term, so their enormous norms inflate only their
+//! own comparison (which they lose by ~30 orders of magnitude) instead of
+//! disabling pruning globally.
+
+use crate::kernels::engine::eval_slack;
+
+/// The per-block pruning decision for one centroid set.
+#[derive(Clone, Debug)]
+pub struct PrunePlan {
+    /// Rows per block (the geometry the decisions are indexed by).
+    pub block_rows: usize,
+    /// Per block: the owning centroid, or `None` when contested.
+    pub owner: Vec<Option<u32>>,
+}
+
+impl PrunePlan {
+    /// Number of blocks wholly owned by a single centroid.
+    pub fn owned_blocks(&self) -> usize {
+        self.owner.iter().filter(|o| o.is_some()).count()
+    }
+
+    /// Owner of the block containing `row`, if any.
+    pub fn owner_of_row(&self, row: usize) -> Option<u32> {
+        self.owner.get(row / self.block_rows).copied().flatten()
+    }
+}
+
+/// Classify every block of a summary section against `centroids`
+/// (row-major `(k, n)`). `minmax` holds `2n` values per block — `n` mins
+/// then `n` maxs, as stored in the `.bmx` v3 summary section.
+pub fn plan(
+    minmax: &[f32],
+    n: usize,
+    block_rows: usize,
+    centroids: &[f32],
+    k: usize,
+) -> PrunePlan {
+    assert!(n > 0 && block_rows > 0 && k > 0, "prune: degenerate geometry");
+    assert_eq!(minmax.len() % (2 * n), 0, "prune: summary shape");
+    assert_eq!(centroids.len(), k * n, "prune: centroid shape");
+    let nblocks = minmax.len() / (2 * n);
+    let slack_factor = eval_slack(n);
+    let c_sq: Vec<f64> = (0..k)
+        .map(|j| {
+            centroids[j * n..(j + 1) * n]
+                .iter()
+                .map(|&c| (c as f64) * (c as f64))
+                .sum()
+        })
+        .collect();
+    let mut owner = Vec::with_capacity(nblocks);
+    let mut dmin = vec![0f64; k];
+    let mut dmax = vec![0f64; k];
+    for b in 0..nblocks {
+        let lo = &minmax[b * 2 * n..b * 2 * n + n];
+        let hi = &minmax[b * 2 * n + n..(b + 1) * 2 * n];
+        owner.push(classify(lo, hi, centroids, &c_sq, k, n, slack_factor, &mut dmin, &mut dmax));
+    }
+    PrunePlan { block_rows, owner }
+}
+
+/// Decide one block: `Some(j)` when centroid `j` strictly wins every point
+/// of the box `[lo, hi]` under the kernel engines' fp-slack model.
+#[allow(clippy::too_many_arguments)]
+fn classify(
+    lo: &[f32],
+    hi: &[f32],
+    centroids: &[f32],
+    c_sq: &[f64],
+    k: usize,
+    n: usize,
+    slack_factor: f64,
+    dmin: &mut [f64],
+    dmax: &mut [f64],
+) -> Option<u32> {
+    // An empty/invalid box (all-NaN dimension keeps the ±∞ sentinels, or a
+    // corrupt summary) is never prunable.
+    if lo.iter().zip(hi).any(|(&l, &h)| !(l <= h)) {
+        return None;
+    }
+    // Largest ‖x‖² inside the box — the box-wide analogue of the kernels'
+    // per-point slack scale.
+    let x_sq_max: f64 = lo
+        .iter()
+        .zip(hi)
+        .map(|(&l, &h)| {
+            let l = l as f64;
+            let h = h as f64;
+            (l * l).max(h * h)
+        })
+        .sum();
+    let mut best = 0usize;
+    for j in 0..k {
+        let mut near = 0f64;
+        let mut far = 0f64;
+        let c = &centroids[j * n..(j + 1) * n];
+        for d in 0..n {
+            let cv = c[d] as f64;
+            let l = lo[d] as f64;
+            let h = hi[d] as f64;
+            let gap = if cv < l {
+                l - cv
+            } else if cv > h {
+                cv - h
+            } else {
+                0.0
+            };
+            near += gap * gap;
+            let span = (cv - l).abs().max((h - cv).abs());
+            far += span * span;
+        }
+        dmin[j] = near;
+        dmax[j] = far;
+        if far < dmax[best] {
+            best = j;
+        }
+    }
+    // Owned iff the candidate's farthest corner strictly clears every
+    // other centroid's nearest approach, with both evaluations' slack
+    // bands added (per-centroid, so a parked degenerate only inflates its
+    // own — comfortably losing — comparison).
+    let own_slack = (x_sq_max + c_sq[best]) * slack_factor;
+    for j in 0..k {
+        if j == best {
+            continue;
+        }
+        let other_slack = (x_sq_max + c_sq[j]) * slack_factor;
+        if dmax[best] + own_slack + other_slack >= dmin[j] {
+            return None;
+        }
+    }
+    Some(best as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// mins then maxs for one block.
+    fn mm(lo: &[f32], hi: &[f32]) -> Vec<f32> {
+        let mut v = lo.to_vec();
+        v.extend_from_slice(hi);
+        v
+    }
+
+    #[test]
+    fn tight_box_near_one_centroid_is_owned() {
+        // Box around (0, 0); centroids at the origin and far away.
+        let minmax = mm(&[-0.5, -0.5], &[0.5, 0.5]);
+        let centroids = vec![0.0f32, 0.0, 100.0, 100.0];
+        let p = plan(&minmax, 2, 8, &centroids, 2);
+        assert_eq!(p.owner, vec![Some(0)]);
+        assert_eq!(p.owned_blocks(), 1);
+        assert_eq!(p.owner_of_row(3), Some(0));
+        assert_eq!(p.owner_of_row(8), None); // past the only block
+    }
+
+    #[test]
+    fn box_straddling_the_midline_is_contested() {
+        // Box spans the bisector between the two centroids.
+        let minmax = mm(&[-10.0, -1.0], &[10.0, 1.0]);
+        let centroids = vec![-5.0f32, 0.0, 5.0, 0.0];
+        let p = plan(&minmax, 2, 8, &centroids, 2);
+        assert_eq!(p.owner, vec![None]);
+        assert_eq!(p.owned_blocks(), 0);
+    }
+
+    #[test]
+    fn parked_degenerate_centroid_does_not_block_pruning() {
+        // Third centroid parked at the coordinator's 1e15 sentinel: its own
+        // slack is huge but so is its distance — block stays owned.
+        let minmax = mm(&[-0.5, -0.5], &[0.5, 0.5]);
+        let centroids = vec![0.0f32, 0.0, 100.0, 100.0, 1.0e15, 1.0e15];
+        let p = plan(&minmax, 2, 8, &centroids, 3);
+        assert_eq!(p.owner, vec![Some(0)]);
+    }
+
+    #[test]
+    fn near_tie_respects_slack_and_stays_contested() {
+        // dmax(best) barely below dmin(other): the slack band must veto.
+        let minmax = mm(&[-1.0, 0.0], &[-0.999_999, 0.0]);
+        let centroids = vec![-2.0f32, 0.0, 0.0, 0.0]; // bisector at x = -1
+        let p = plan(&minmax, 2, 8, &centroids, 2);
+        assert_eq!(p.owner, vec![None]);
+    }
+
+    #[test]
+    fn multiple_blocks_classified_independently() {
+        let mut minmax = mm(&[-0.5, -0.5], &[0.5, 0.5]); // block 0 → centroid 0
+        minmax.extend(mm(&[99.5, 99.5], &[100.5, 100.5])); // block 1 → centroid 1
+        minmax.extend(mm(&[-10.0, -10.0], &[110.0, 110.0])); // block 2 contested
+        let centroids = vec![0.0f32, 0.0, 100.0, 100.0];
+        let p = plan(&minmax, 2, 4, &centroids, 2);
+        assert_eq!(p.owner, vec![Some(0), Some(1), None]);
+        assert_eq!(p.owner_of_row(0), Some(0));
+        assert_eq!(p.owner_of_row(5), Some(1));
+        assert_eq!(p.owner_of_row(9), None);
+    }
+
+    #[test]
+    fn nan_summary_never_prunes() {
+        let minmax = mm(&[f32::INFINITY, -0.5], &[f32::NEG_INFINITY, 0.5]);
+        let centroids = vec![0.0f32, 0.0, 100.0, 100.0];
+        let p = plan(&minmax, 2, 8, &centroids, 2);
+        assert_eq!(p.owner, vec![None]);
+    }
+}

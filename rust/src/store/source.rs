@@ -19,9 +19,9 @@ use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use crate::data::source::{AccessPattern, DataSource};
+use crate::data::source::{AccessPattern, BlockSummaries, DataSource};
 use crate::store::cache::{BlockCache, DEFAULT_CACHE_BYTES};
-use crate::store::codec::decode_block;
+use crate::store::codec::{block_minmax, decode_block};
 use crate::store::format::{BlockEntry, Codec, Dtype, V3Header, BLOCK_ENTRY_LEN, BMX3_HEADER_LEN};
 use crate::util::error::{Context, Result};
 use crate::util::hash::crc32;
@@ -57,6 +57,9 @@ pub struct BlockStore {
     dtype: Dtype,
     codec: Codec,
     entries: Vec<BlockEntry>,
+    /// Per-block decoded-domain min/max (`2n` values per block) when the
+    /// file carries the summary section.
+    summaries: Option<Vec<f32>>,
     backing: Backing,
     cache: BlockCache,
 }
@@ -120,6 +123,42 @@ impl BlockStore {
         }
         let entries: Vec<BlockEntry> =
             index_bytes.chunks_exact(BLOCK_ENTRY_LEN).map(BlockEntry::decode).collect();
+        // Optional summary section (version-tolerant: zeroed offset =
+        // pre-summary file, served exactly as before).
+        let summaries = if hdr.summary_off != 0 {
+            let summary_len = hdr.summary_len();
+            let summary_end = hdr
+                .summary_off
+                .checked_add(summary_len)
+                .ok_or_else(|| anyhow!("{label}: bmx v3 summary offset overflows"))?;
+            if hdr.summary_off < index_end || summary_end > file_len {
+                bail!(
+                    "{label}: bmx v3 summary section [{}, {summary_end}) outside the \
+                     file tail (index ends at {index_end}, file holds {file_len})",
+                    hdr.summary_off
+                );
+            }
+            let mut summary_raw = vec![0u8; summary_len as usize];
+            file.seek(SeekFrom::Start(hdr.summary_off))?;
+            file.read_exact(&mut summary_raw)
+                .with_context(|| format!("read bmx v3 summaries of {label}"))?;
+            let computed = crc32(&summary_raw);
+            if computed != hdr.summary_crc {
+                bail!(
+                    "{label}: bmx v3 summary checksum mismatch (expected {:#010x}, \
+                     computed {computed:#010x}) — file corrupt or truncated mid-write",
+                    hdr.summary_crc
+                );
+            }
+            Some(
+                summary_raw
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect(),
+            )
+        } else {
+            None
+        };
         for (i, e) in entries.iter().enumerate() {
             let ok = e.offset >= BMX3_HEADER_LEN as u64
                 && e.offset.checked_add(e.enc_len).is_some_and(|end| end <= hdr.index_off);
@@ -157,9 +196,53 @@ impl BlockStore {
             dtype: hdr.dtype,
             codec: hdr.codec,
             entries,
+            summaries,
             backing,
             cache: BlockCache::new(cache_bytes),
         })
+    }
+
+    /// Whether the file carries the per-block min/max summary section.
+    pub fn has_summaries(&self) -> bool {
+        self.summaries.is_some()
+    }
+
+    /// Recompute every block's summary from its decoded values (parallel;
+    /// `threads = 0` uses the machine default). This is the engine behind
+    /// `convert --add-summaries`; it CRC-checks each block as a side
+    /// effect.
+    pub fn compute_summaries(&self, threads: usize) -> Result<Vec<f32>> {
+        let nblocks = self.entries.len();
+        let n = self.n;
+        let mut out = vec![0f32; nblocks * 2 * n];
+        if nblocks == 0 {
+            return Ok(out);
+        }
+        let workers = if threads == 0 {
+            std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4)
+        } else {
+            threads
+        };
+        let pool = ThreadPool::new(workers.min(nblocks));
+        let mut failures: Vec<Option<String>> = vec![None; nblocks];
+        let jobs: Vec<_> = out
+            .chunks_mut(2 * n)
+            .zip(failures.iter_mut())
+            .enumerate()
+            .map(|(idx, (slot, fail))| {
+                move || match self.checked_decode(idx) {
+                    Ok(values) => {
+                        slot.copy_from_slice(&block_minmax(&values, self.dtype, n));
+                    }
+                    Err(e) => *fail = Some(e.to_string()),
+                }
+            })
+            .collect();
+        pool.scope_run_all(jobs);
+        if let Some(failure) = failures.into_iter().flatten().next() {
+            bail!("block store '{}': {failure}", self.name);
+        }
+        Ok(out)
     }
 
     /// True when the payload is memory-mapped.
@@ -274,9 +357,10 @@ impl BlockStore {
         arc
     }
 
-    /// Verify every block in parallel (CRC + full decode), returning the
-    /// **first** corrupt block's diagnostic. `threads = 0` uses the
-    /// machine default.
+    /// Verify every block in parallel (CRC + full decode, plus — when the
+    /// file carries summaries — per-block min/max consistency against the
+    /// decoded values), returning the **first** corrupt block's
+    /// diagnostic. `threads = 0` uses the machine default.
     pub fn verify_all(&self, threads: usize) -> Result<VerifyReport> {
         let nblocks = self.entries.len();
         if nblocks == 0 {
@@ -287,15 +371,33 @@ impl BlockStore {
         } else {
             threads
         };
+        let n = self.n;
         let pool = ThreadPool::new(workers.min(nblocks));
         let mut failures: Vec<Option<String>> = vec![None; nblocks];
         let jobs: Vec<_> = failures
             .iter_mut()
             .enumerate()
             .map(|(idx, slot)| {
-                move || {
-                    if let Err(e) = self.checked_decode(idx) {
-                        *slot = Some(e.to_string());
+                move || match self.checked_decode(idx) {
+                    Err(e) => *slot = Some(e.to_string()),
+                    Ok(values) => {
+                        if let Some(summaries) = &self.summaries {
+                            let stored = &summaries[idx * 2 * n..(idx + 1) * 2 * n];
+                            let fresh = block_minmax(&values, self.dtype, n);
+                            // Bit compare: writer and verifier share one
+                            // min/max implementation over the same decoded
+                            // values, so any difference is corruption.
+                            let same = stored
+                                .iter()
+                                .zip(&fresh)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                            if !same {
+                                *slot = Some(format!(
+                                    "summary mismatch for block {idx}: stored min/max \
+                                     disagrees with the decoded values"
+                                ));
+                            }
+                        }
                     }
                 }
             })
@@ -373,6 +475,13 @@ impl DataSource for BlockStore {
             Backing::Mmap(region) => region.advise(pattern.advice()),
             Backing::Pread(_) => {}
         }
+    }
+
+    fn block_summaries(&self) -> Option<BlockSummaries<'_>> {
+        self.summaries.as_ref().map(|minmax| BlockSummaries {
+            block_rows: self.block_rows,
+            minmax: minmax.as_slice(),
+        })
     }
 }
 
@@ -476,14 +585,32 @@ mod tests {
     fn corrupt_index_rejected_at_open() {
         let d = toy(64, 2);
         let p = tmp("index.bmx");
-        copy_to_store(&d, &p, StoreOptions { block_rows: 8, ..StoreOptions::default() })
-            .unwrap();
+        // summaries: false keeps the index as the trailing section.
+        let opts =
+            StoreOptions { block_rows: 8, summaries: false, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
         let last = bytes.len() - 2; // inside the trailing index table
         bytes[last] ^= 0xFF;
         std::fs::write(&p, &bytes).unwrap();
         let err = BlockStore::open(&p).unwrap_err().to_string();
         assert!(err.contains("index checksum"), "unexpected error: {err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn corrupt_summary_rejected_at_open() {
+        let d = toy(64, 2);
+        let p = tmp("summ.bmx");
+        copy_to_store(&d, &p, StoreOptions { block_rows: 8, ..StoreOptions::default() })
+            .unwrap();
+        assert!(BlockStore::open(&p).unwrap().has_summaries());
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 2; // inside the trailing summary section
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = BlockStore::open(&p).unwrap_err().to_string();
+        assert!(err.contains("summary checksum"), "unexpected error: {err}");
         let _ = std::fs::remove_file(&p);
     }
 

@@ -1,22 +1,28 @@
 //! Streaming `.bmx` v3 writer.
 //!
 //! [`BlockWriter`] buffers appended rows until whole blocks are available,
-//! encodes them (dtype conversion, codec, CRC-32) **in parallel** on an
-//! owned [`ThreadPool`] — encoding is the CPU cost of ingest, the write
-//! itself is sequential — and streams the encoded blocks out back to
-//! back. [`BlockWriter::finish`] flushes the final partial block, appends
-//! the block-index table, and patches the header (row count, index
-//! offset, index CRC), so memory stays O(pending rows) regardless of the
-//! dataset size.
+//! encodes them (dtype conversion, codec, CRC-32, and — by default — the
+//! per-block per-dimension min/max summary) **in parallel** on an owned
+//! [`ThreadPool`] — encoding is the CPU cost of ingest, the write itself
+//! is sequential — and streams the encoded blocks out back to back.
+//! [`BlockWriter::finish`] flushes the final partial block, appends the
+//! block-index table and the summary section, and patches the header (row
+//! count, index offset/CRC, summary offset/CRC), so memory stays
+//! O(pending rows + summaries) regardless of the dataset size.
+//! [`add_summaries`] retrofits the summary section onto an existing v3
+//! file by decoding (never re-encoding) its blocks.
 
-use std::fs::File;
+use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::bail;
 use crate::data::source::DataSource;
-use crate::store::codec::encode_block;
-use crate::store::format::{BlockEntry, StoreOptions, V3Header, BMX3_HEADER_LEN};
+use crate::store::codec::{block_minmax, encode_block};
+use crate::store::format::{
+    BlockEntry, StoreOptions, V3Header, BLOCK_ENTRY_LEN, BMX3_HEADER_LEN,
+};
+use crate::store::source::BlockStore;
 use crate::util::error::{Context, Result};
 use crate::util::hash::{crc32, Crc32};
 use crate::util::threadpool::ThreadPool;
@@ -31,6 +37,9 @@ pub struct BlockWriter {
     pending: Vec<f32>,
     rows: u64,
     entries: Vec<BlockEntry>,
+    /// Per-block decoded-domain min/max (`2n` values per block), built
+    /// alongside the entries when `opts.summaries` is set.
+    summaries: Vec<f32>,
     cursor: u64,
     pool: ThreadPool,
 }
@@ -56,6 +65,8 @@ impl BlockWriter {
             codec: opts.codec,
             index_off: 0,
             index_crc: 0,
+            summary_off: 0,
+            summary_crc: 0,
         };
         w.write_all(&header.encode())?;
         let workers = if opts.threads == 0 {
@@ -70,6 +81,7 @@ impl BlockWriter {
             pending: Vec::new(),
             rows: 0,
             entries: Vec::new(),
+            summaries: Vec::new(),
             cursor: BMX3_HEADER_LEN as u64,
             pool: ThreadPool::new(workers),
         })
@@ -104,8 +116,9 @@ impl BlockWriter {
             return Ok(());
         }
         let (dtype, codec) = (self.opts.dtype, self.opts.codec);
+        let (n, want_summaries) = (self.n, self.opts.summaries);
         let chunks: Vec<&[f32]> = self.pending[..take].chunks(block_values).collect();
-        let mut encoded: Vec<(Vec<u8>, u32)> = Vec::new();
+        let mut encoded: Vec<(Vec<u8>, u32, Vec<f32>)> = Vec::new();
         if chunks.len() > 1 && self.pool.size() > 1 {
             encoded.resize_with(chunks.len(), Default::default);
             let jobs: Vec<_> = chunks
@@ -116,7 +129,12 @@ impl BlockWriter {
                     move || {
                         let bytes = encode_block(chunk, dtype, codec);
                         let crc = crc32(&bytes);
-                        *slot = (bytes, crc);
+                        let mm = if want_summaries {
+                            block_minmax(chunk, dtype, n)
+                        } else {
+                            Vec::new()
+                        };
+                        *slot = (bytes, crc, mm);
                     }
                 })
                 .collect();
@@ -125,24 +143,27 @@ impl BlockWriter {
             for chunk in &chunks {
                 let bytes = encode_block(chunk, dtype, codec);
                 let crc = crc32(&bytes);
-                encoded.push((bytes, crc));
+                let mm =
+                    if want_summaries { block_minmax(chunk, dtype, n) } else { Vec::new() };
+                encoded.push((bytes, crc, mm));
             }
         }
-        for (bytes, crc) in &encoded {
+        for (bytes, crc, mm) in &encoded {
             self.w.write_all(bytes)?;
             self.entries.push(BlockEntry {
                 offset: self.cursor,
                 enc_len: bytes.len() as u64,
                 crc: *crc,
             });
+            self.summaries.extend_from_slice(mm);
             self.cursor += bytes.len() as u64;
         }
         self.pending.drain(..take);
         Ok(())
     }
 
-    /// Flush the tail block, append the index table, patch the header, and
-    /// return the row count.
+    /// Flush the tail block, append the index table (and the summary
+    /// section when enabled), patch the header, and return the row count.
     pub fn finish(mut self) -> Result<u64> {
         self.flush_complete_blocks(true)?;
         debug_assert!(self.pending.is_empty());
@@ -153,6 +174,15 @@ impl BlockWriter {
             index_crc.update(&bytes);
             self.w.write_all(&bytes)?;
         }
+        let mut summary_off = 0u64;
+        let mut summary_crc = 0u32;
+        if self.opts.summaries && !self.entries.is_empty() {
+            debug_assert_eq!(self.summaries.len(), self.entries.len() * 2 * self.n);
+            summary_off = index_off + (self.entries.len() * BLOCK_ENTRY_LEN) as u64;
+            let bytes = summary_bytes(&self.summaries);
+            summary_crc = crc32(&bytes);
+            self.w.write_all(&bytes)?;
+        }
         let header = V3Header {
             m: self.rows,
             n: self.n as u32,
@@ -161,6 +191,8 @@ impl BlockWriter {
             codec: self.opts.codec,
             index_off,
             index_crc: index_crc.finalize(),
+            summary_off,
+            summary_crc,
         };
         self.w.flush()?;
         self.w.seek(SeekFrom::Start(0))?;
@@ -173,6 +205,57 @@ impl BlockWriter {
     pub fn blocks_written(&self) -> usize {
         self.entries.len()
     }
+}
+
+/// Little-endian byte image of a summary vector (per block: `n` mins then
+/// `n` maxs).
+fn summary_bytes(summaries: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(summaries.len() * 4);
+    for v in summaries {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+/// Retrofit the per-block min/max summary section onto an existing v3
+/// file **in place** — blocks are decoded (CRC-checked) but never
+/// re-encoded: the section is appended at the end of the file and the
+/// header's summary offset/CRC are patched. Returns `false` (and changes
+/// nothing) when the file already carries summaries. `threads = 0` uses
+/// the machine default for the parallel decode.
+pub fn add_summaries(path: &Path, threads: usize) -> Result<bool> {
+    let store = BlockStore::open(path)?;
+    if store.has_summaries() {
+        return Ok(false);
+    }
+    let summaries = store.compute_summaries(threads)?;
+    let (n, nblocks) = (store.n(), store.blocks());
+    debug_assert_eq!(summaries.len(), nblocks * 2 * n);
+    drop(store); // release the mapping before rewriting the file
+    let mut file = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("reopen {} for summary append", path.display()))?;
+    let summary_off = file.metadata()?.len();
+    let bytes = summary_bytes(&summaries);
+    file.seek(SeekFrom::Start(summary_off))?;
+    file.write_all(&bytes)?;
+    // Make the appended section durable *before* the header points at it:
+    // a crash from here back leaves `summary_off = 0` — a valid
+    // pre-summary file — instead of a header referencing bytes that never
+    // reached disk.
+    file.sync_all()?;
+    // Patch only the summary fields (bytes 36..48), offset and CRC in one
+    // 12-byte write, so the rest of the header — and everything an old
+    // reader looks at — is untouched.
+    let mut patch = [0u8; 12];
+    patch[0..8].copy_from_slice(&summary_off.to_le_bytes());
+    patch[8..12].copy_from_slice(&crc32(&bytes).to_le_bytes());
+    file.seek(SeekFrom::Start(36))?;
+    file.write_all(&patch)?;
+    file.sync_all()?;
+    Ok(true)
 }
 
 /// Rows copied per slab when converting a whole [`DataSource`]: enough

@@ -173,12 +173,13 @@ mod tests {
 
     #[test]
     fn parse_arms_grid() {
-        let arms = TunerConfig::parse_arms("0.25, 0.5x ,1:bounded,2:panel").unwrap();
-        assert_eq!(arms.len(), 4);
+        let arms = TunerConfig::parse_arms("0.25, 0.5x ,1:bounded,2:panel,1:elkan").unwrap();
+        assert_eq!(arms.len(), 5);
         assert_eq!(arms[0], ArmSpec::new(0.25));
         assert_eq!(arms[1], ArmSpec::new(0.5));
         assert_eq!(arms[2].kernel, Some(KernelEngineKind::Bounded));
         assert_eq!(arms[3].kernel, Some(KernelEngineKind::Panel));
+        assert_eq!(arms[4].kernel, Some(KernelEngineKind::Elkan));
     }
 
     #[test]

@@ -24,18 +24,10 @@ pub struct Arm {
     pub kernel: KernelEngineKind,
 }
 
-/// Kernel name for labels/JSON (avoids building an engine just to ask).
-pub(crate) fn kernel_name(kind: KernelEngineKind) -> &'static str {
-    match kind {
-        KernelEngineKind::Panel => "panel",
-        KernelEngineKind::Bounded => "bounded",
-    }
-}
-
 impl Arm {
     /// Display label, e.g. `"0.5x/panel"`.
     pub fn label(&self) -> String {
-        format!("{}x/{}", self.multiplier, kernel_name(self.kernel))
+        format!("{}x/{}", self.multiplier, self.kernel.name())
     }
 
     /// Fresh telemetry slot for this arm.
@@ -43,7 +35,7 @@ impl Arm {
         ArmTrace {
             label: self.label(),
             chunk_rows: self.chunk_rows,
-            kernel: kernel_name(self.kernel).to_string(),
+            kernel: self.kernel.name().to_string(),
             ..Default::default()
         }
     }
@@ -147,11 +139,14 @@ mod tests {
         let tuner = TunerConfig::default().with_arms(vec![
             ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Panel) },
             ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Bounded) },
+            ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Elkan) },
         ]);
         let p = Portfolio::build(&cfg(3, 256), &tuner, 5000).unwrap();
-        assert_eq!(p.len(), 2);
+        assert_eq!(p.len(), 3);
         assert_eq!(p.arms[0].kernel, KernelEngineKind::Panel);
         assert_eq!(p.arms[1].kernel, KernelEngineKind::Bounded);
+        assert_eq!(p.arms[2].kernel, KernelEngineKind::Elkan);
+        assert_eq!(p.arms[2].label(), "1x/elkan");
     }
 
     #[test]

@@ -1,16 +1,18 @@
-//! Engine equivalence: the Hamerly-bounded kernel engine must be an *exact*
-//! drop-in for the blocked-panel engine — identical labels, counts, and
-//! centroid trajectories, objectives within fp slack — while performing
-//! strictly fewer distance evaluations on clustered data. Both engines
-//! share the decomposition arithmetic, so the comparisons here can be
-//! tight.
+//! Engine equivalence: the Hamerly-bounded and Elkan kernel engines must
+//! be *exact* drop-ins for the blocked-panel engine — identical labels,
+//! counts, and centroid trajectories, objectives within fp slack — while
+//! performing strictly fewer distance evaluations on clustered data. All
+//! engines share the decomposition arithmetic, so the comparisons here
+//! can be tight.
 
 use bigmeans::coordinator::config::{
     BigMeansConfig, KernelEngineKind, ParallelMode, StopCondition,
 };
 use bigmeans::data::bmx::{save_bmx, BmxSource};
 use bigmeans::data::synth::Synth;
-use bigmeans::kernels::engine::{BoundedEngine, KernelEngine, LloydState, PanelEngine};
+use bigmeans::kernels::engine::{
+    BoundedEngine, ElkanEngine, KernelEngine, LloydState, PanelEngine,
+};
 use bigmeans::kernels::{self, LloydParams};
 use bigmeans::metrics::Counters;
 use bigmeans::util::prop::{check, ClusterProblem, ClusterProblemGen};
@@ -28,35 +30,36 @@ fn seed_centroids(p: &ClusterProblem, rng: &mut Rng) -> Vec<f32> {
 }
 
 #[test]
-fn prop_bounded_lloyd_identical_to_panel_serial() {
-    // Full Lloyd runs across random shapes/seeds: the bounded engine must
-    // reproduce the panel engine's counts, iteration count, and (within
-    // 1e-6 relative) objective.
-    check(41, 60, &ClusterProblemGen::default(), |p| {
-        let mut rng = Rng::new(101);
-        let c0 = seed_centroids(p, &mut rng);
-        let params = LloydParams::default();
-        let mut ca = Counters::new();
-        let mut cb = Counters::new();
-        let a = kernels::lloyd_with_engine(
-            &p.points, &c0, p.m, p.n, p.k, params, None, &PanelEngine, &mut ca,
-        );
-        let b = kernels::lloyd_with_engine(
-            &p.points,
-            &c0,
-            p.m,
-            p.n,
-            p.k,
-            params,
-            None,
-            &BoundedEngine::default(),
-            &mut cb,
-        );
-        a.counts == b.counts
-            && a.iters == b.iters
-            && a.centroids == b.centroids
-            && (a.objective - b.objective).abs() <= 1e-6 * a.objective.abs() + 1e-9
-    });
+fn prop_pruning_engines_lloyd_identical_to_panel_serial() {
+    // Full Lloyd runs across random shapes/seeds: every pruning engine
+    // must reproduce the panel engine's counts, iteration count, centroid
+    // trajectory, and (within 1e-6 relative) objective.
+    let bounded = BoundedEngine::default();
+    let elkan = ElkanEngine::default();
+    let engines: [(&str, &dyn KernelEngine); 2] = [("bounded", &bounded), ("elkan", &elkan)];
+    for (name, engine) in engines {
+        check(41, 60, &ClusterProblemGen::default(), |p| {
+            let mut rng = Rng::new(101);
+            let c0 = seed_centroids(p, &mut rng);
+            let params = LloydParams::default();
+            let mut ca = Counters::new();
+            let mut cb = Counters::new();
+            let a = kernels::lloyd_with_engine(
+                &p.points, &c0, p.m, p.n, p.k, params, None, &PanelEngine, &mut ca,
+            );
+            let b = kernels::lloyd_with_engine(
+                &p.points, &c0, p.m, p.n, p.k, params, None, engine, &mut cb,
+            );
+            let ok = a.counts == b.counts
+                && a.iters == b.iters
+                && a.centroids == b.centroids
+                && (a.objective - b.objective).abs() <= 1e-6 * a.objective.abs() + 1e-9;
+            if !ok {
+                eprintln!("engine {name} diverged on m={} n={} k={}", p.m, p.n, p.k);
+            }
+            ok
+        });
+    }
 }
 
 #[test]
@@ -142,39 +145,87 @@ fn prop_bounded_parallel_lloyd_matches_quality() {
 }
 
 #[test]
-fn prop_bounded_step_labels_identical_each_iteration() {
+fn prop_pruning_engines_step_labels_identical_each_iteration() {
     // Step-level check: labels and mins agree with the panel engine at
-    // every single iteration, not just at convergence.
-    check(43, 40, &ClusterProblemGen::default(), |p| {
-        let mut rng = Rng::new(107);
-        let c0 = seed_centroids(p, &mut rng);
-        let mut c_a = c0.clone();
-        let mut c_b = c0;
-        let mut st_a = LloydState::new(p.m);
-        let mut st_b = LloydState::new(p.m);
-        let mut cnt_a = Counters::new();
-        let mut cnt_b = Counters::new();
+    // every single iteration, not just at convergence — for both pruning
+    // engines.
+    let bounded = BoundedEngine::default();
+    let elkan = ElkanEngine::default();
+    let engines: [&dyn KernelEngine; 2] = [&bounded, &elkan];
+    for engine in engines {
+        check(43, 40, &ClusterProblemGen::default(), |p| {
+            let mut rng = Rng::new(107);
+            let c0 = seed_centroids(p, &mut rng);
+            let mut c_a = c0.clone();
+            let mut c_b = c0;
+            let mut st_a = LloydState::new(p.m);
+            let mut st_b = LloydState::new(p.m);
+            let mut cnt_a = Counters::new();
+            let mut cnt_b = Counters::new();
+            let mut old = vec![0f32; p.k * p.n];
+            let panel = PanelEngine;
+            for _ in 0..5 {
+                let a =
+                    panel.assign_step(&p.points, &c_a, p.m, p.n, p.k, &mut st_a, &mut cnt_a);
+                let b =
+                    engine.assign_step(&p.points, &c_b, p.m, p.n, p.k, &mut st_b, &mut cnt_b);
+                if a.labels != b.labels || a.counts != b.counts || a.mins != b.mins {
+                    return false;
+                }
+                old.copy_from_slice(&c_a);
+                kernels::update_centroids(&a.sums, &a.counts, &mut c_a, p.k, p.n);
+                st_a.apply_update(&old, &c_a, p.k, p.n);
+                old.copy_from_slice(&c_b);
+                kernels::update_centroids(&b.sums, &b.counts, &mut c_b, p.k, p.n);
+                st_b.apply_update(&old, &c_b, p.k, p.n);
+                if c_a != c_b {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}
+
+#[test]
+fn prop_elkan_parallel_step_identical_to_serial() {
+    // Pool-parallel Elkan assignment (per-worker bound slices, including
+    // the rows·k lower-bound matrix) must match the serial Elkan path
+    // point-for-point on random, non-block-aligned shapes.
+    let gen = ClusterProblemGen {
+        m_range: (1, 3000), // crosses the 2·BLOCK_ROWS parallel threshold
+        n_range: (1, 10),
+        k_max: 6,
+        coord_range: (-60.0, 60.0),
+    };
+    let pool = ThreadPool::new(3);
+    check(45, 30, &gen, |p| {
+        let mut rng = Rng::new(113);
+        let mut c = seed_centroids(p, &mut rng);
         let mut old = vec![0f32; p.k * p.n];
-        let panel = PanelEngine;
-        let bounded = BoundedEngine::default();
-        for _ in 0..5 {
-            let a = panel.assign_step(&p.points, &c_a, p.m, p.n, p.k, &mut st_a, &mut cnt_a);
-            let b =
-                bounded.assign_step(&p.points, &c_b, p.m, p.n, p.k, &mut st_b, &mut cnt_b);
-            if a.labels != b.labels || a.counts != b.counts || a.mins != b.mins {
+        let mut st_s = LloydState::new(p.m);
+        let mut st_p = LloydState::new(p.m);
+        let mut cnt_s = Counters::new();
+        let mut cnt_p = Counters::new();
+        let engine = ElkanEngine::default();
+        for _ in 0..4 {
+            let a = engine.assign_step(&p.points, &c, p.m, p.n, p.k, &mut st_s, &mut cnt_s);
+            let b = engine.assign_step_parallel(
+                &pool, &p.points, &c, p.m, p.n, p.k, &mut st_p, &mut cnt_p,
+            );
+            if a.labels != b.labels
+                || a.mins != b.mins
+                || a.counts != b.counts
+                || (a.objective - b.objective).abs() > 1e-6 * a.objective.abs() + 1e-9
+            {
                 return false;
             }
-            old.copy_from_slice(&c_a);
-            kernels::update_centroids(&a.sums, &a.counts, &mut c_a, p.k, p.n);
-            st_a.apply_update(&old, &c_a, p.k, p.n);
-            old.copy_from_slice(&c_b);
-            kernels::update_centroids(&b.sums, &b.counts, &mut c_b, p.k, p.n);
-            st_b.apply_update(&old, &c_b, p.k, p.n);
-            if c_a != c_b {
-                return false;
-            }
+            old.copy_from_slice(&c);
+            kernels::update_centroids(&a.sums, &a.counts, &mut c, p.k, p.n);
+            st_s.apply_update(&old, &c, p.k, p.n);
+            st_p.apply_update(&old, &c, p.k, p.n);
         }
-        true
+        cnt_s.distance_evals == cnt_p.distance_evals && cnt_s.pruned_evals == cnt_p.pruned_evals
     });
 }
 
@@ -190,10 +241,10 @@ fn blobs(m: usize, n: usize, k_true: usize, seed: u64) -> Dataset {
 }
 
 #[test]
-fn bounded_pipeline_matches_panel_and_prunes_on_blobs() {
-    // Whole-pipeline equivalence: a sequential Big-means run with the
-    // bounded kernel reproduces the panel run's numbers while reporting a
-    // real pruning saving on separated blobs.
+fn pruning_pipelines_match_panel_and_prune_on_blobs() {
+    // Whole-pipeline equivalence: sequential Big-means runs with the
+    // bounded and Elkan kernels reproduce the panel run's numbers while
+    // reporting a real pruning saving on separated blobs.
     let data = blobs(6_000, 4, 4, 11);
     let cfg = |kernel| {
         BigMeansConfig::new(4, 1024)
@@ -203,22 +254,25 @@ fn bounded_pipeline_matches_panel_and_prunes_on_blobs() {
             .with_seed(5)
     };
     let panel = BigMeans::new(cfg(KernelEngineKind::Panel)).run(&data).unwrap();
-    let bounded = BigMeans::new(cfg(KernelEngineKind::Bounded)).run(&data).unwrap();
-    assert!(
-        (panel.objective - bounded.objective).abs() <= 1e-6 * panel.objective.abs(),
-        "objectives diverged: {} vs {}",
-        panel.objective,
-        bounded.objective
-    );
-    assert_eq!(panel.counters.chunks, bounded.counters.chunks);
     assert_eq!(panel.counters.pruned_evals, 0, "panel must never prune");
-    assert!(bounded.counters.pruned_evals > 0, "no pruning on separated blobs");
-    assert!(
-        bounded.counters.distance_evals < panel.counters.distance_evals,
-        "bounded ({}) did not save over panel ({})",
-        bounded.counters.distance_evals,
-        panel.counters.distance_evals
-    );
+    for kind in [KernelEngineKind::Bounded, KernelEngineKind::Elkan] {
+        let pruned = BigMeans::new(cfg(kind)).run(&data).unwrap();
+        assert!(
+            (panel.objective - pruned.objective).abs() <= 1e-6 * panel.objective.abs(),
+            "{kind:?}: objectives diverged: {} vs {}",
+            panel.objective,
+            pruned.objective
+        );
+        assert_eq!(panel.assignment, pruned.assignment, "{kind:?}");
+        assert_eq!(panel.counters.chunks, pruned.counters.chunks, "{kind:?}");
+        assert!(pruned.counters.pruned_evals > 0, "{kind:?}: no pruning on blobs");
+        assert!(
+            pruned.counters.distance_evals < panel.counters.distance_evals,
+            "{kind:?} ({}) did not save over panel ({})",
+            pruned.counters.distance_evals,
+            panel.counters.distance_evals
+        );
+    }
 }
 
 #[test]

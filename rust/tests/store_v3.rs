@@ -75,7 +75,13 @@ fn roundtrip_matrix_dtype_codec_backing() {
     for dtype in [Dtype::F32, Dtype::F64, Dtype::F16] {
         for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
             let p = tmp(&format!("rt_{}_{}.bmx", dtype.name(), codec.name()));
-            let opts = StoreOptions { block_rows: 128, dtype, codec, threads: 2 };
+            let opts = StoreOptions {
+                block_rows: 128,
+                dtype,
+                codec,
+                threads: 2,
+                ..StoreOptions::default()
+            };
             assert_eq!(copy_to_store(&d, &p, opts).unwrap(), (1_000, 5));
             assert_eq!(bmx_version(&p).unwrap(), 3);
             for (backing, store) in [
@@ -329,6 +335,198 @@ fn f16_store_clusters_with_bounded_quantisation_error() {
         "f16 objective drifted {rel:.4} from exact ({} vs {})",
         quant.objective,
         exact.objective
+    );
+    let _ = std::fs::remove_file(&p);
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical pruning: the block-pruned + double-buffered final pass.
+// ---------------------------------------------------------------------------
+
+/// Blobs *grouped by cluster* (rows sorted so fixed-size store blocks are
+/// pure single-cluster boxes) — the layout where block-level pruning
+/// fires. `per` rows per cluster, centers far apart, spread tiny.
+fn grouped_blobs(k_true: usize, per: usize, n: usize, seed: u64) -> Dataset {
+    use bigmeans::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let centers: Vec<f32> = (0..k_true * n).map(|_| rng.f32() * 200.0 - 100.0).collect();
+    let mut pts = Vec::with_capacity(k_true * per * n);
+    for c in 0..k_true {
+        for _ in 0..per {
+            for d in 0..n {
+                pts.push(centers[c * n + d] + 0.05 * rng.gaussian() as f32);
+            }
+        }
+    }
+    Dataset::from_vec("grouped", pts, k_true * per, n)
+}
+
+fn assert_same_final(a: &BigMeansResult, b: &BigMeansResult, label: &str) {
+    assert_eq!(
+        a.objective.to_bits(),
+        b.objective.to_bits(),
+        "{label}: objectives differ: {} vs {}",
+        a.objective,
+        b.objective
+    );
+    assert_eq!(a.centroids, b.centroids, "{label}: centroids differ");
+    assert_eq!(a.assignment, b.assignment, "{label}: assignments differ");
+}
+
+#[test]
+fn pruned_final_pass_bit_identical_across_dtype_codec() {
+    // For every dtype × codec: a store with summaries (pruned final pass)
+    // must reproduce the same store without summaries (unpruned) bit for
+    // bit — labels, objective, centroids — while skipping blocks and
+    // distance evaluations. Lossless dtypes must also match the in-memory
+    // run exactly.
+    let data = grouped_blobs(4, 1024, 5, 21);
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(4, 512, 25)).run(src).unwrap()
+    };
+    let mem = run(&data);
+    for dtype in [Dtype::F32, Dtype::F64, Dtype::F16] {
+        for codec in [Codec::None, Codec::Shuffle, Codec::Lz] {
+            let label = format!("{}/{}", dtype.name(), codec.name());
+            let p_sum = tmp(&format!("prune_sum_{}_{}.bmx", dtype.name(), codec.name()));
+            let p_plain = tmp(&format!("prune_plain_{}_{}.bmx", dtype.name(), codec.name()));
+            let base = StoreOptions { block_rows: 256, dtype, codec, ..StoreOptions::default() };
+            copy_to_store(&data, &p_sum, base).unwrap();
+            copy_to_store(&data, &p_plain, StoreOptions { summaries: false, ..base }).unwrap();
+            let pruned = run(&BlockStore::open(&p_sum).unwrap());
+            let plain = run(&BlockStore::open(&p_plain).unwrap());
+            assert_same_final(&pruned, &plain, &label);
+            assert!(
+                pruned.counters.pruned_blocks > 0,
+                "{label}: no blocks pruned on a grouped dataset"
+            );
+            assert_eq!(plain.counters.pruned_blocks, 0, "{label}");
+            assert!(
+                pruned.counters.distance_evals < plain.counters.distance_evals,
+                "{label}: pruning saved nothing ({} vs {})",
+                pruned.counters.distance_evals,
+                plain.counters.distance_evals
+            );
+            if dtype != Dtype::F16 {
+                assert_same_final(&pruned, &mem, &format!("{label} vs mem"));
+            }
+            let _ = std::fs::remove_file(&p_sum);
+            let _ = std::fs::remove_file(&p_plain);
+        }
+    }
+}
+
+#[test]
+fn crafted_fully_prunable_dataset_skips_every_block() {
+    // Block-pure, widely separated, tiny-spread blobs with k = k_true:
+    // once the search finds all four centers, *every* block's bounding box
+    // is wholly owned — pruned_blocks must equal the block count, and the
+    // result must still match the in-memory run bit for bit.
+    let data = grouped_blobs(4, 1024, 4, 22);
+    let p = tmp("prune_all.bmx");
+    let opts = StoreOptions { block_rows: 256, ..StoreOptions::default() };
+    copy_to_store(&data, &p, opts).unwrap();
+    let store = BlockStore::open(&p).unwrap();
+    assert_eq!(store.blocks(), 16);
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(4, 512, 30)).run(src).unwrap()
+    };
+    let mem = run(&data);
+    let pruned = run(&store);
+    assert_same_final(&mem, &pruned, "mem vs fully-pruned block store");
+    assert_eq!(
+        pruned.counters.pruned_blocks, 16,
+        "every block must be owned by one centroid"
+    );
+    // Final pass cost collapses from m·k to m evaluations: the pruned run
+    // must save (k−1)·m of the final pass (the chunk search is shared).
+    assert_eq!(
+        pruned.counters.pruned_evals,
+        (data.m() as u64) * 3,
+        "owned rows must avoid exactly k−1 evals each"
+    );
+    assert_eq!(mem.counters.pruned_blocks, 0);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn pruned_parallel_final_pass_matches_resident_parallel() {
+    // Same thread count on both sides, so the chunk searches are
+    // bit-reproducible and reach the same incumbent; the final pass then
+    // runs resident + sharded on mem vs pruned + double-buffered on the
+    // block store — per-point arithmetic and the row-ordered objective
+    // make them bit-identical despite completely different execution
+    // shapes.
+    let data = grouped_blobs(3, 2048, 4, 23);
+    let p = tmp("prune_threads.bmx");
+    copy_to_store(&data, &p, StoreOptions { block_rows: 512, ..StoreOptions::default() })
+        .unwrap();
+    let store = BlockStore::open(&p).unwrap();
+    let run = |src: &dyn DataSource| {
+        let mut cfg = BigMeansConfig::new(3, 512)
+            .with_stop(StopCondition::MaxChunks(15))
+            .with_parallel(ParallelMode::InnerParallel)
+            .with_seed(42);
+        cfg.threads = 4;
+        BigMeans::new(cfg).run(src).unwrap()
+    };
+    let mem = run(&data);
+    let pruned = run(&store);
+    assert_same_final(&mem, &pruned, "resident-parallel vs pruned-double-buffered");
+    assert!(pruned.counters.pruned_blocks > 0);
+    assert_eq!(mem.counters.pruned_blocks, 0);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn add_summaries_retrofits_and_verify_checks_consistency() {
+    use bigmeans::store::add_summaries;
+    use bigmeans::util::hash::crc32;
+
+    let data = grouped_blobs(3, 512, 4, 24);
+    let p = tmp("retrofit.bmx");
+    let opts = StoreOptions {
+        block_rows: 128,
+        codec: Codec::Lz,
+        summaries: false,
+        ..StoreOptions::default()
+    };
+    copy_to_store(&data, &p, opts).unwrap();
+    let before = BlockStore::open(&p).unwrap();
+    assert!(!before.has_summaries());
+    let run = |src: &dyn DataSource| {
+        BigMeans::new(sequential_cfg(3, 256, 15)).run(src).unwrap()
+    };
+    let unpruned = run(&before);
+    assert_eq!(unpruned.counters.pruned_blocks, 0);
+    drop(before);
+
+    // Retrofit in place (decode-only), then the same run prunes — and
+    // stays bit-identical.
+    assert!(add_summaries(&p, 2).unwrap());
+    let after = BlockStore::open(&p).unwrap();
+    assert!(after.has_summaries());
+    after.verify_all(2).unwrap();
+    let pruned = run(&after);
+    assert_same_final(&unpruned, &pruned, "retrofit");
+    assert!(pruned.counters.pruned_blocks > 0);
+    drop(after);
+    // Idempotent: a second retrofit is a no-op.
+    assert!(!add_summaries(&p, 2).unwrap());
+
+    // Forge a *CRC-consistent* but wrong summary value: verify must catch
+    // the inconsistency against the decoded block.
+    let mut bytes = std::fs::read(&p).unwrap();
+    let summary_off = u64::from_le_bytes(bytes[36..44].try_into().unwrap()) as usize;
+    bytes[summary_off..summary_off + 4].copy_from_slice(&f32::MIN.to_le_bytes());
+    let fresh_crc = crc32(&bytes[summary_off..]);
+    bytes[44..48].copy_from_slice(&fresh_crc.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    let forged = BlockStore::open(&p).unwrap(); // CRC passes…
+    let err = forged.verify_all(2).unwrap_err().to_string();
+    assert!(
+        err.contains("summary mismatch") && err.contains("block 0"),
+        "verify must flag the stale summary: {err}"
     );
     let _ = std::fs::remove_file(&p);
 }
