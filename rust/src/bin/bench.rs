@@ -1,6 +1,8 @@
-//! `bench` — engine, tuner, and storage benchmarks, no external deps.
+//! `bench` — engine, tuner, storage, and serving benchmarks, no external
+//! deps.
 //!
-//! Four suites (`--suite assign|tuner|io|final|all`, default `assign`):
+//! Five suites (`--suite assign|tuner|io|final|serve|all`, default
+//! `assign`):
 //!
 //! * **assign** — times the fused panel engine, the bounded
 //!   (Hamerly-pruned) engine, the Elkan engine, and the pre-fusion
@@ -23,14 +25,21 @@
 //!   baseline) vs. in-memory, emitting `BENCH_final.json` (final-pass
 //!   wall times, blocks skipped, decode-only scan time, and a
 //!   bit-identical objective cross-check).
+//! * **serve** — the clustering daemon: boots a server on an ephemeral
+//!   loopback port, fires batched assign queries from concurrent client
+//!   workers while an in-process publish hot-swaps the model mid-run,
+//!   checks every response bit-identical to the offline `assign_only`
+//!   labels for whichever generation answered, and emits
+//!   `BENCH_serve.json` (QPS, rows/s, client-side p50/p95/p99).
 //!
-//! CI runs scaled-down versions of all four as non-gating smoke steps.
+//! CI runs scaled-down versions of all five as non-gating smoke steps.
 //!
 //! ```text
-//! cargo run --release --bin bench -- [--suite assign|tuner|io|final|all] [--m N]
-//!     [--n N] [--k N] [--iters N] [--shots N] [--s N] [--out PATH]
+//! cargo run --release --bin bench -- [--suite assign|tuner|io|final|serve|all]
+//!     [--m N] [--n N] [--k N] [--iters N] [--shots N] [--s N] [--out PATH]
 //!     [--tuner-out PATH] [--io-m N] [--io-s N] [--io-samples N] [--block-rows N]
-//!     [--io-out PATH] [--final-m N] [--final-out PATH]
+//!     [--io-out PATH] [--final-m N] [--final-out PATH] [--serve-batch N]
+//!     [--serve-workers N] [--serve-requests N] [--serve-out PATH]
 //! ```
 
 use std::time::Instant;
@@ -497,6 +506,163 @@ fn final_suite(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The serve suite: concurrent batched queries against a live daemon with
+/// a mid-run hot-swap, gated on bit-identity against the offline kernel.
+fn serve_suite(args: &Args) -> Result<(), String> {
+    use bigmeans::serve::{Client, ModelArtifact, ModelRegistry, ServeOptions, Server};
+    use std::sync::Arc;
+
+    let k = args.usize("k", 64)?.max(1);
+    let n = args.usize("n", 16)?.max(1);
+    let batch_rows = args.usize("serve-batch", 4096)?.max(1);
+    let workers = args.usize("serve-workers", 4)?.max(1);
+    let requests = args.usize("serve-requests", 64)?.max(workers);
+    let out_path = args.get_or("serve-out", "BENCH_serve.json").to_string();
+
+    let mut rng = Rng::new(0x5E7E);
+    // Two independent centroid sets: the boot model and the hot-swap.
+    let models: Vec<Vec<f32>> = (0..2)
+        .map(|_| (0..k * n).map(|_| rng.f32() * 100.0 - 50.0).collect())
+        .collect();
+    let points = blob_data(&mut rng, batch_rows, n, k);
+    // Offline ground truth per served generation: any disagreement is a
+    // correctness bug, not noise, so it fails the suite.
+    let truth: Vec<Vec<u32>> = models
+        .iter()
+        .map(|c| {
+            let mut counters = Counters::new();
+            bigmeans::kernels::assign_only(&points, c, batch_rows, n, k, &mut counters).0
+        })
+        .collect();
+
+    let boot = ModelArtifact::new(k, n, 1, 0.0, Json::Null, models[0].clone())
+        .map_err(|e| e.to_string())?;
+    let registry = ModelRegistry::new(boot);
+    let server = Server::bind("127.0.0.1:0", Arc::clone(&registry), ServeOptions::default())
+        .map_err(|e| e.to_string())?;
+    let addr = server.local_addr().to_string();
+    let runner = std::thread::spawn(move || server.run());
+    let per_worker = requests / workers;
+    let swap_after = per_worker / 2;
+    eprintln!(
+        "serve: {workers} workers × {per_worker} requests of {batch_rows}×{n} rows \
+         (k={k}) against {addr}, hot-swap mid-run …"
+    );
+
+    let t0 = Instant::now();
+    let results: Vec<(Vec<f64>, bool, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let addr = addr.clone();
+                let points = &points;
+                let truth = &truth;
+                let models = &models;
+                let registry = Arc::clone(&registry);
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect worker");
+                    let mut lats = Vec::with_capacity(per_worker);
+                    let mut identical = true;
+                    let mut after_swap = 0u64;
+                    for i in 0..per_worker {
+                        if w == 0 && i == swap_after {
+                            // In-process publish: the bench measures the
+                            // swap's impact on live traffic; the file
+                            // watcher path is exercised by the CI smoke.
+                            let refreshed = ModelArtifact::new(
+                                k,
+                                n,
+                                2,
+                                0.0,
+                                Json::Null,
+                                models[1].clone(),
+                            )
+                            .expect("refreshed artifact");
+                            registry.publish(refreshed);
+                        }
+                        let t = Instant::now();
+                        let (generation, labels) =
+                            client.assign(points, batch_rows, n).expect("assign");
+                        lats.push(t.elapsed().as_secs_f64());
+                        let want = &truth[(generation as usize - 1).min(truth.len() - 1)];
+                        identical &= labels == *want;
+                        if generation >= 2 {
+                            after_swap += 1;
+                        }
+                    }
+                    (lats, identical, after_swap)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("serve worker")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut client = Client::connect(&addr).map_err(|e| e.to_string())?;
+    let (_, stats_json) = client.stats().map_err(|e| e.to_string())?;
+    client.shutdown().map_err(|e| e.to_string())?;
+    runner
+        .join()
+        .map_err(|_| "server thread panicked".to_string())?
+        .map_err(|e| e.to_string())?;
+
+    let bit_identical = results.iter().all(|(_, ok, _)| *ok);
+    let answered_after_swap: u64 = results.iter().map(|(_, _, a)| a).sum();
+    let mut lats: Vec<f64> =
+        results.iter().flat_map(|(l, _, _)| l.iter().copied()).collect();
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let total = lats.len();
+    let pct = |q: f64| -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        lats[((q * total as f64).ceil() as usize).clamp(1, total) - 1]
+    };
+    if !bit_identical {
+        return Err(
+            "serve suite: a served batch diverged from the offline assign_only labels"
+                .into(),
+        );
+    }
+    if answered_after_swap == 0 {
+        return Err("serve suite: no request observed the hot-swapped generation".into());
+    }
+    let qps = total as f64 / wall.max(1e-9);
+    eprintln!(
+        "serve: {total} responses in {wall:.3}s ({qps:.1} req/s, {:.3e} rows/s) | \
+         p50 {:.2}ms p95 {:.2}ms p99 {:.2}ms | {} swaps, {answered_after_swap} answers \
+         from the swapped model | bit-identical: {bit_identical}",
+        (total * batch_rows) as f64 / wall.max(1e-9),
+        pct(0.50) * 1e3,
+        pct(0.95) * 1e3,
+        pct(0.99) * 1e3,
+        registry.swaps(),
+    );
+
+    let server_stats =
+        Json::parse(&stats_json).map_err(|e| format!("parse server stats: {e}"))?;
+    let doc = obj(vec![
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("batch_rows", num(batch_rows as f64)),
+        ("workers", num(workers as f64)),
+        ("requests", num(total as f64)),
+        ("wall_secs", num(wall)),
+        ("qps", num(qps)),
+        ("rows_per_sec", num((total * batch_rows) as f64 / wall.max(1e-9))),
+        ("p50_ms", num(pct(0.50) * 1e3)),
+        ("p95_ms", num(pct(0.95) * 1e3)),
+        ("p99_ms", num(pct(0.99) * 1e3)),
+        ("swaps", num(registry.swaps() as f64)),
+        ("answered_after_swap", num(answered_after_swap as f64)),
+        ("bit_identical", Json::Bool(bit_identical)),
+        ("server", server_stats),
+    ]);
+    std::fs::write(&out_path, doc.to_string() + "\n")
+        .map_err(|e| format!("write {out_path}: {e}"))?;
+    eprintln!("wrote {out_path}");
+    Ok(())
+}
+
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), &["help"]) {
         Ok(a) => a,
@@ -507,11 +673,12 @@ fn main() {
     };
     if args.flag("help") {
         eprintln!(
-            "bench — engine, tuner, and storage benchmarks\n\
-             usage: bench [--suite assign|tuner|io|final|all] [--m N] [--n N] [--k N] \
-             [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH] \
+            "bench — engine, tuner, storage, and serving benchmarks\n\
+             usage: bench [--suite assign|tuner|io|final|serve|all] [--m N] [--n N] \
+             [--k N] [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH] \
              [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH] \
-             [--final-m N] [--final-out PATH]"
+             [--final-m N] [--final-out PATH] [--serve-batch N] [--serve-workers N] \
+             [--serve-requests N] [--serve-out PATH]"
         );
         return;
     }
@@ -588,14 +755,17 @@ fn main() {
         eprintln!("wrote {out_path}");
         Ok(())
     };
-    let result = match args.choice("suite", &["assign", "tuner", "io", "final", "all"]) {
+    let result = match args.choice("suite", &["assign", "tuner", "io", "final", "serve", "all"])
+    {
         Ok("tuner") => tuner_suite(&args),
         Ok("io") => io_suite(&args),
         Ok("final") => final_suite(&args),
+        Ok("serve") => serve_suite(&args),
         Ok("all") => assign_suite()
             .and_then(|()| tuner_suite(&args))
             .and_then(|()| io_suite(&args))
-            .and_then(|()| final_suite(&args)),
+            .and_then(|()| final_suite(&args))
+            .and_then(|()| serve_suite(&args)),
         Ok(_) => assign_suite(),
         Err(e) => Err(e),
     };

@@ -26,7 +26,7 @@ pub use config::{
 pub use parallel::{ShotExecutor, ShotReport};
 pub use solver::{ChunkSolver, FinalPassMode, NativeSolver};
 pub use stream::{
-    produce_from_source, ChunkQueue, DriftAction, StreamChunk, StreamResult,
+    produce_from_source, ChunkQueue, DriftAction, PublishFn, StreamChunk, StreamResult,
     StreamingBigMeans, ValidationPoint,
 };
 pub use vns::{run_vns, VnsConfig, VnsResult};

@@ -42,6 +42,7 @@ use crate::metrics::Counters;
 use crate::tuner::config::validation_rng;
 use crate::tuner::validation::Reservoir;
 use crate::util::rng::Rng;
+use crate::util::sync::{lock_recover, wait_recover};
 
 /// A chunk of streamed points (row-major `rows × n`).
 #[derive(Clone, Debug)]
@@ -74,10 +75,12 @@ impl ChunkQueue {
     }
 
     /// Blocking push; returns false if the queue is closed.
+    /// Poison-recovering: a panicked producer or consumer must not wedge
+    /// the other side of a long-running stream.
     pub fn push(&self, chunk: StreamChunk) -> bool {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         while st.items.len() >= self.capacity && !st.closed {
-            st = self.not_full.wait(st).unwrap();
+            st = wait_recover(&self.not_full, st);
         }
         if st.closed {
             return false;
@@ -89,7 +92,7 @@ impl ChunkQueue {
 
     /// Blocking pop; None when closed and drained.
     pub fn pop(&self) -> Option<StreamChunk> {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         loop {
             if let Some(c) = st.items.pop_front() {
                 self.not_full.notify_one();
@@ -98,20 +101,20 @@ impl ChunkQueue {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = wait_recover(&self.not_empty, st);
         }
     }
 
     /// Close the queue: producers stop, consumers drain.
     pub fn close(&self) {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = lock_recover(&self.inner);
         st.closed = true;
         self.not_full.notify_all();
         self.not_empty.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        lock_recover(&self.inner).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -195,6 +198,11 @@ pub struct StreamResult {
     pub remediations: u64,
 }
 
+/// Incumbent-publish hook: called with `(centroids, objective, ordinal)`
+/// every time the incumbent improves (`ordinal` counts improvements,
+/// starting at 1). See [`StreamingBigMeans::with_publish`].
+pub type PublishFn = Box<dyn Fn(&[f32], f64, u64) + Send + Sync>;
+
 /// Streaming Big-means consumer: pulls chunks from the queue, improves the
 /// incumbent, stops on the configured condition or when the stream closes.
 pub struct StreamingBigMeans {
@@ -207,6 +215,9 @@ pub struct StreamingBigMeans {
     validation_rows: usize,
     /// What a drift event triggers.
     drift_action: DriftAction,
+    /// Invoked on every incumbent improvement (the stream→registry
+    /// publish contract of serve mode).
+    publish: Option<PublishFn>,
 }
 
 impl StreamingBigMeans {
@@ -223,6 +234,7 @@ impl StreamingBigMeans {
             validate_every: 0,
             validation_rows: DEFAULT_VALIDATION_ROWS,
             drift_action: DriftAction::None,
+            publish: None,
         }
     }
 
@@ -239,6 +251,17 @@ impl StreamingBigMeans {
     /// be enabled to ever trigger).
     pub fn with_drift_action(mut self, action: DriftAction) -> Self {
         self.drift_action = action;
+        self
+    }
+
+    /// Install an incumbent-publish hook, called synchronously with
+    /// `(centroids, objective, ordinal)` each time a chunk improves the
+    /// incumbent. This is the producer half of serve mode's hot-swap
+    /// contract: the CLI wires it to write a model artifact that a
+    /// watching daemon picks up mid-flight. The hook runs on the consumer
+    /// thread — keep it cheap (an atomic file write, not a blocking RPC).
+    pub fn with_publish(mut self, hook: PublishFn) -> Self {
+        self.publish = Some(hook);
         self
     }
 
@@ -288,6 +311,9 @@ impl StreamingBigMeans {
                     objective: result.objective,
                 };
                 improvements += 1;
+                if let Some(hook) = &self.publish {
+                    hook(&incumbent.centroids, incumbent.objective, improvements);
+                }
             }
             if let Some(res) = reservoir.as_mut() {
                 res.observe_rows(&chunk.points, chunk.rows);
@@ -703,6 +729,48 @@ mod tests {
         let r = engine.run(&q);
         assert!(r.drift_events >= 1);
         assert_eq!(r.remediations, 0);
+    }
+
+    #[test]
+    fn publish_hook_fires_on_every_improvement() {
+        let cfg = BigMeansConfig::new(3, 256)
+            .with_stop(StopCondition::MaxChunks(30))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(1);
+        let published: Arc<Mutex<Vec<(Vec<f32>, f64, u64)>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&published);
+        let engine = StreamingBigMeans::new(cfg, 2).with_publish(Box::new(
+            move |centroids, objective, ordinal| {
+                sink.lock().unwrap().push((centroids.to_vec(), objective, ordinal));
+            },
+        ));
+        let q = ChunkQueue::new(4);
+        let qp = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            let mut rng = Rng::new(42);
+            for _ in 0..30 {
+                if !qp.push(blob_chunk(&mut rng, 256)) {
+                    break;
+                }
+            }
+            qp.close();
+        });
+        let r = engine.run(&q);
+        producer.join().unwrap();
+        let seen = published.lock().unwrap();
+        assert_eq!(seen.len() as u64, r.improvements, "one publish per improvement");
+        assert!(
+            seen.iter().enumerate().all(|(i, (_, _, ord))| *ord == i as u64 + 1),
+            "ordinals must count improvements from 1"
+        );
+        let last = seen.last().expect("at least one improvement");
+        assert_eq!(last.0, r.centroids, "last publish must be the final incumbent");
+        assert_eq!(last.1, r.best_chunk_objective);
+        assert!(
+            seen.windows(2).all(|w| w[1].1 < w[0].1),
+            "published objectives must be strictly improving"
+        );
     }
 
     #[test]

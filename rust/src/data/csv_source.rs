@@ -26,12 +26,15 @@
 //! anchor table to `<file>.csv.idx` (atomically, best-effort — a
 //! read-only directory just skips persistence), and later opens validate
 //! the sidecar against the CSV's byte length + mtime + requested stride
-//! and, on match, **memory-map it** instead of rescanning — an O(index)
-//! reopen with zero resident anchor memory. Any mismatch (CSV rewritten,
-//! different stride, corrupt sidecar) silently falls back to a fresh scan
-//! that rewrites the sidecar. Caveat shared with every stamp-validated
-//! cache: an edit that preserves both byte length and mtime is
-//! undetectable.
+//! **plus a content fingerprint** (CRC-32 of the file's first and last
+//! pages) and, on match, **memory-map it** instead of rescanning — an
+//! O(index) reopen with zero resident anchor memory. Any mismatch (CSV
+//! rewritten, different stride, corrupt sidecar, fingerprint drift)
+//! silently falls back to a fresh scan that rewrites the sidecar. The
+//! fingerprint closes the classic stamp-cache blind spot — a same-size
+//! rewrite within one mtime granule on a coarse-timestamp filesystem —
+//! for any edit touching either end of the file; an edit confined to the
+//! untouched middle of a large file remains the (accepted) residual risk.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
@@ -42,15 +45,21 @@ use crate::bail;
 use crate::data::source::DataSource;
 use crate::util::error::{Context, Result};
 use crate::util::hash::crc32;
+use crate::util::sync::lock_recover;
 
 #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
 use crate::util::mem::MmapRegion;
 
-/// Sidecar magic: "BM" + CSV-index + format version 1.
-const IDX_MAGIC: [u8; 8] = *b"BMCSIDX1";
+/// Sidecar magic: "BM" + CSV-index + format version 2 (v2 added the
+/// content fingerprint at header bytes 60..64; v1 sidecars simply fail
+/// the magic check and trigger one rescan that rewrites them).
+const IDX_MAGIC: [u8; 8] = *b"BMCSIDX2";
 
 /// Sidecar header bytes before the anchor table (keeps anchors 8-aligned).
 const IDX_HEADER_LEN: usize = 64;
+
+/// Bytes fingerprinted at each end of the CSV.
+const FP_PAGE: u64 = 4096;
 
 /// Identity stamp of a CSV file: the sidecar is valid only while both the
 /// byte length and the mtime it recorded still match.
@@ -73,6 +82,25 @@ impl CsvStamp {
             .unwrap_or((0, 0));
         Ok(CsvStamp { len: meta.len(), mtime_secs, mtime_nanos })
     }
+}
+
+/// Cheap content fingerprint: CRC-32 over the first and last [`FP_PAGE`]
+/// bytes of the CSV (the whole file when shorter than one page). Catches
+/// the same-size-rewrite-within-one-mtime-granule edit the stamp cannot.
+fn content_fingerprint(path: &Path, len: u64) -> Result<u32> {
+    let mut f =
+        File::open(path).with_context(|| format!("fingerprint {}", path.display()))?;
+    let mut buf = vec![0u8; len.min(FP_PAGE) as usize];
+    f.read_exact(&mut buf)
+        .with_context(|| format!("fingerprint head of {}", path.display()))?;
+    if len > FP_PAGE {
+        let mut tail = vec![0u8; FP_PAGE as usize];
+        f.seek(SeekFrom::Start(len - FP_PAGE))?;
+        f.read_exact(&mut tail)
+            .with_context(|| format!("fingerprint tail of {}", path.display()))?;
+        buf.extend_from_slice(&tail);
+    }
+    Ok(crc32(&buf))
 }
 
 /// Where the anchor table lives: scanned into RAM, or served from the
@@ -129,6 +157,7 @@ pub fn sidecar_path(path: &Path) -> PathBuf {
 
 fn encode_sidecar_header(
     stamp: &CsvStamp,
+    fingerprint: u32,
     n: usize,
     m: usize,
     stride: usize,
@@ -145,6 +174,7 @@ fn encode_sidecar_header(
     hdr[40..48].copy_from_slice(&(stride as u64).to_le_bytes());
     hdr[48..56].copy_from_slice(&(count as u64).to_le_bytes());
     hdr[56..60].copy_from_slice(&anchors_crc.to_le_bytes());
+    hdr[60..64].copy_from_slice(&fingerprint.to_le_bytes());
     hdr
 }
 
@@ -154,6 +184,7 @@ fn encode_sidecar_header(
 fn store_sidecar(
     idx_path: &Path,
     stamp: &CsvStamp,
+    fingerprint: u32,
     n: usize,
     m: usize,
     stride: usize,
@@ -163,7 +194,8 @@ fn store_sidecar(
     for &a in anchors {
         payload.extend_from_slice(&a.to_le_bytes());
     }
-    let hdr = encode_sidecar_header(stamp, n, m, stride, anchors.len(), crc32(&payload));
+    let hdr =
+        encode_sidecar_header(stamp, fingerprint, n, m, stride, anchors.len(), crc32(&payload));
     let tmp = {
         let mut os = idx_path.as_os_str().to_os_string();
         os.push(".tmp");
@@ -187,6 +219,7 @@ fn store_sidecar(
 fn load_sidecar(
     idx_path: &Path,
     stamp: &CsvStamp,
+    fingerprint: u32,
     stride: usize,
 ) -> Option<(usize, usize, AnchorStore)> {
     let mut f = File::open(idx_path).ok()?;
@@ -203,9 +236,11 @@ fn load_sidecar(
     let idx_stride = u64::from_le_bytes(hdr[40..48].try_into().unwrap());
     let count = u64::from_le_bytes(hdr[48..56].try_into().unwrap());
     let anchors_crc = u32::from_le_bytes(hdr[56..60].try_into().unwrap());
+    let idx_fingerprint = u32::from_le_bytes(hdr[60..64].try_into().unwrap());
     let fresh = csv_len == stamp.len
         && mtime_secs == stamp.mtime_secs
-        && mtime_nanos == stamp.mtime_nanos;
+        && mtime_nanos == stamp.mtime_nanos
+        && idx_fingerprint == fingerprint;
     if !fresh || idx_stride != stride as u64 || n == 0 || m == 0 {
         return None;
     }
@@ -267,8 +302,9 @@ impl CsvSource {
             .map(|s| s.to_string_lossy().into_owned())
             .unwrap_or_else(|| "csv".into());
         let stamp = CsvStamp::of(path)?;
+        let fingerprint = content_fingerprint(path, stamp.len)?;
         let idx_path = sidecar_path(path);
-        if let Some((m, n, anchors)) = load_sidecar(&idx_path, &stamp, stride) {
+        if let Some((m, n, anchors)) = load_sidecar(&idx_path, &stamp, fingerprint, stride) {
             let file = File::open(path)
                 .with_context(|| format!("open {}", path.display()))?;
             return Ok(CsvSource {
@@ -333,7 +369,7 @@ impl CsvSource {
         if m == 0 {
             bail!("{}: no data rows", path.display());
         }
-        store_sidecar(&idx_path, &stamp, n, m, stride, &anchors);
+        store_sidecar(&idx_path, &stamp, fingerprint, n, m, stride, &anchors);
         let file = reader.into_inner();
         Ok(CsvSource {
             name,
@@ -444,7 +480,9 @@ impl DataSource for CsvSource {
         assert_eq!(out.len() % self.n, 0, "read_rows: out shape");
         let rows = out.len() / self.n;
         assert!(start + rows <= self.m, "read_rows: out of bounds");
-        let f = self.file.lock().unwrap();
+        // Poison-recovering: scan_rows always seeks to an absolute anchor
+        // first, so no cursor state survives a panicked holder.
+        let f = lock_recover(&self.file);
         let mut reader = BufReader::new(&*f);
         let mut line = String::new();
         self.scan_rows(&mut reader, &mut line, start, rows, out);
@@ -454,7 +492,7 @@ impl DataSource for CsvSource {
         assert_eq!(out.len(), indices.len() * self.n, "sample_rows: out shape");
         // One lock + one reader/line buffer for the whole gather; each
         // index seeks within its own stride window.
-        let f = self.file.lock().unwrap();
+        let f = lock_recover(&self.file);
         let mut reader = BufReader::new(&*f);
         let mut line = String::new();
         for (slot, &row) in indices.iter().enumerate() {
@@ -637,6 +675,36 @@ mod tests {
         let mut out = vec![0f32; 2];
         reopened.read_rows(3, &mut out);
         assert_eq!(out, vec![70.0, 80.0]);
+        cleanup(&p);
+    }
+
+    #[test]
+    fn same_size_rewrite_within_mtime_granule_detected_by_fingerprint() {
+        let p = tmp("granule.csv");
+        std::fs::write(&p, "1,2\n30,4\n5,6\n").unwrap();
+        let _ = CsvSource::open(&p).unwrap();
+        assert!(CsvSource::open(&p).unwrap().index_from_sidecar());
+        // Same-byte-length rewrite with different content.
+        std::fs::write(&p, "10,2\n3,4\n5,6\n").unwrap();
+        // Forge the sidecar's stamp to the rewritten file's stamp — this
+        // is exactly what a same-size rewrite inside one mtime granule
+        // looks like on a coarse-timestamp filesystem.
+        let stamp = CsvStamp::of(&p).unwrap();
+        let idx = sidecar_path(&p);
+        let mut bytes = std::fs::read(&idx).unwrap();
+        bytes[8..16].copy_from_slice(&stamp.len.to_le_bytes());
+        bytes[16..24].copy_from_slice(&stamp.mtime_secs.to_le_bytes());
+        bytes[24..28].copy_from_slice(&stamp.mtime_nanos.to_le_bytes());
+        std::fs::write(&idx, &bytes).unwrap();
+        // The content fingerprint catches what the stamp cannot.
+        let src = CsvSource::open(&p).unwrap();
+        assert!(!src.index_from_sidecar(), "stale sidecar must be rejected");
+        assert_eq!(src.m(), 3);
+        let mut out = vec![0f32; 6];
+        src.read_rows(0, &mut out);
+        assert_eq!(out, vec![10.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        // The rescan healed the sidecar with the fresh fingerprint.
+        assert!(CsvSource::open(&p).unwrap().index_from_sidecar());
         cleanup(&p);
     }
 

@@ -118,6 +118,59 @@ pub fn assign_only(
     (labels, mins)
 }
 
+/// Pool-sharded stateless assignment into caller-owned buffers — the
+/// serve-mode batched query entry point. Rows are carved across the pool
+/// by [`partition_rows`] (falling back to one inline [`panel_assign_into`]
+/// pass when the batch is too small to parallelise); since per-point
+/// results are tiling-independent, the filled `labels`/`mins` are
+/// **bit-identical to [`assign_only`]** for every pool size. `c_sq` must
+/// be the per-centroid squared norms in centroid order (what
+/// [`assign_only`] computes internally) — precomputing it once per model
+/// is what lets a daemon amortise it across requests.
+#[allow(clippy::too_many_arguments)]
+pub fn assign_only_pooled(
+    pool: &ThreadPool,
+    points: &[f32],
+    centroids: &[f32],
+    c_sq: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    labels: &mut [u32],
+    mins: &mut [f32],
+    counters: &mut Counters,
+) {
+    assert_eq!(points.len(), m * n, "points shape");
+    assert_eq!(centroids.len(), k * n, "centroids shape");
+    assert_eq!(c_sq.len(), k, "c_sq shape");
+    assert_eq!(labels.len(), m, "labels shape");
+    assert_eq!(mins.len(), m, "mins shape");
+    match partition_rows(pool, m) {
+        None => panel_assign_into(points, centroids, c_sq, m, n, k, labels, mins),
+        Some(parts) => {
+            // partition_rows yields contiguous shards from row 0, so the
+            // output slices can be peeled off front to back.
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(parts.len());
+            let mut l_rest = labels;
+            let mut d_rest = mins;
+            for (start, end) in parts {
+                let take = end - start;
+                let (l, lr) = l_rest.split_at_mut(take);
+                let (d, dr) = d_rest.split_at_mut(take);
+                l_rest = lr;
+                d_rest = dr;
+                let pts = &points[start * n..end * n];
+                jobs.push(Box::new(move || {
+                    panel_assign_into(pts, centroids, c_sq, take, n, k, l, d);
+                }));
+            }
+            pool.scope_run_all(jobs);
+        }
+    }
+    counters.add_distance_evals((m as u64) * (k as u64));
+}
+
 /// The shared stateless panel pass: fills `labels`/`mins` for `rows`
 /// points using [`sq_dist_panel_argmin`] over `BLOCK_ROWS`-row tiles with
 /// precomputed centroid norms. Per-point results are independent of the
@@ -306,6 +359,38 @@ mod tests {
         assert_eq!(out.counts.iter().sum::<u64>(), m as u64);
         let sum_mins: f64 = out.mins.iter().map(|&x| x as f64).sum();
         assert!((out.objective - sum_mins).abs() < 1e-3);
+    }
+
+    #[test]
+    fn pooled_assign_bit_identical_to_assign_only() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        // Odd row counts straddle the partition threshold and leave a
+        // ragged tail shard; every pool size must agree bit-for-bit.
+        for m in [17usize, 511, 513, 2048 + 13] {
+            let (n, k) = (5, 7);
+            let pts: Vec<f32> = (0..m * n).map(|_| rng.f32() * 9.0 - 4.5).collect();
+            let cs: Vec<f32> = (0..k * n).map(|_| rng.f32() * 9.0 - 4.5).collect();
+            let c_sq: Vec<f32> =
+                (0..k).map(|j| sq_norm(&cs[j * n..(j + 1) * n])).collect();
+            let mut c1 = Counters::new();
+            let (want_labels, want_mins) = assign_only(&pts, &cs, m, n, k, &mut c1);
+            for threads in [1usize, 2, 5] {
+                let pool = ThreadPool::new(threads);
+                let mut labels = vec![0u32; m];
+                let mut mins = vec![0f32; m];
+                let mut c2 = Counters::new();
+                assign_only_pooled(
+                    &pool, &pts, &cs, &c_sq, m, n, k, &mut labels, &mut mins, &mut c2,
+                );
+                assert_eq!(labels, want_labels, "m={m} threads={threads}");
+                let same = mins
+                    .iter()
+                    .zip(&want_mins)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "mins must be bit-identical (m={m} threads={threads})");
+                assert_eq!(c1.distance_evals, c2.distance_evals);
+            }
+        }
     }
 
     #[test]

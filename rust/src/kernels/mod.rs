@@ -12,7 +12,8 @@ pub mod objective;
 pub mod update;
 
 pub use assign::{
-    assign_accumulate, assign_accumulate_parallel, assign_only, panel_assign_into, AssignOut,
+    assign_accumulate, assign_accumulate_parallel, assign_only, assign_only_pooled,
+    panel_assign_into, AssignOut,
 };
 pub use engine::{
     BoundedEngine, ElkanEngine, KernelEngine, KernelEngineKind, LloydState, PanelEngine,

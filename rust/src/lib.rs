@@ -60,6 +60,7 @@ pub mod data;
 pub mod kernels;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod tuner;
 pub mod util;
@@ -71,4 +72,5 @@ pub use data::bmx::BmxSource;
 pub use data::csv_source::CsvSource;
 pub use data::dataset::Dataset;
 pub use data::source::DataSource;
+pub use serve::{Client, ModelArtifact, ModelRegistry, Server, ServeOptions};
 pub use store::{BlockStore, BlockWriter, Codec, Dtype, StoreOptions};

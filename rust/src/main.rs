@@ -12,8 +12,12 @@
 //! * `generate` — write a synthetic catalog dataset to .fbin/.bmx
 //! * `catalog`  — list the dataset catalog
 //! * `artifacts`— inspect the AOT artifact manifest
+//! * `serve`    — long-running TCP daemon answering batched assign/score
+//!   queries from a `.bmm` model artifact, with `--watch` hot-swap
+//! * `query`    — one-shot client for a running daemon
 
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -25,6 +29,7 @@ use bigmeans::coordinator::config::{
 use bigmeans::coordinator::{produce_from_source, ChunkQueue, DriftAction, StreamingBigMeans};
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
 use bigmeans::runtime;
+use bigmeans::serve::{spawn_watcher, Client, ModelArtifact, ModelRegistry, ServeOptions, Server};
 use bigmeans::store::copy_to_store;
 use bigmeans::tuner::{self, ControllerKind, TunerConfig};
 use bigmeans::util::cli::Args;
@@ -55,11 +60,14 @@ SUBCOMMANDS:
                                   test; label-identical, prunes harder
                                   than bounded at O(m·k) bound memory
                         'native' is accepted as an alias for panel
-      --mode M          inner | chunks | seq | tune | stream (default inner)
+      --mode M          inner | chunks | seq | tune | stream | serve
+                        (default inner)
                         tune   = competitive portfolio tuner: bandit-
                                  scheduled arms race over sample sizes
                         stream = sequential pass through the file as an
                                  unbounded stream (drift check optional)
+                        serve  = alias for the `serve` subcommand (the
+                                 positional argument is the .bmm model)
       --backend B       mem | mmap | buffered | block  (default mem)
                         mmap/buffered/block cluster files out-of-core:
                         mmap = memory-mapped .bmx; buffered = positioned
@@ -75,6 +83,9 @@ SUBCOMMANDS:
       --skip-final      skip the full-dataset assignment pass
       --json            print a machine-readable run summary (objective,
                         counters incl. pruned evals, per-phase timings)
+      --save-model P    write the winning model (centroids + geometry +
+                        objective + provenance) to P as a `.bmm` artifact
+                        for `bigmeans serve` (needs the final pass)
     tune mode only:
       --tuner T         ucb | softmax          (default ucb)
       --arms SPEC       grid of sample-size multipliers, each optionally
@@ -90,6 +101,9 @@ SUBCOMMANDS:
                            the worst-contributing centroid with a
                            K-means++ draw from the validation reservoir
                            whenever a drift event fires
+      --publish P          atomically rewrite P (.bmm) on every incumbent
+                           improvement; a concurrent `serve --watch P`
+                           daemon hot-swaps each publish mid-flight
   convert <in.csv> <out.bmx>   Convert a CSV into the .bmx format
                       (blockwise, memory bounded by the row index)
       --format F        v3 (chunked block store, default) | v2 (legacy flat)
@@ -117,6 +131,25 @@ SUBCOMMANDS:
                       --codec as in convert)
   catalog             List catalog datasets
   artifacts           Show the AOT manifest
+  serve <model.bmm>   Run the clustering daemon: answers batched assign/
+                      score queries over TCP, sharded across the thread
+                      pool, bit-identical to the offline final pass
+      --addr A          listen address (default 127.0.0.1:7171; port 0
+                        picks an ephemeral port, printed on stderr)
+      --threads N       batch-sharding workers (default: machine)
+      --max-batch N     largest accepted rows per request (default 2^20)
+      --watch           poll the .bmm file and hot-swap refreshed models
+                        without dropping in-flight requests
+      --watch-ms N      watch poll cadence in ms (default 500)
+      --json            print the serving stats document on exit
+  query <host:port>   One-shot client for a running daemon
+      --op O            assign | score | stats | ping | shutdown
+                        (default assign)
+      --file F          assign/score: dataset file (.csv/.fbin/.bmx) whose
+                        leading rows become the query batch
+      --rows N          assign/score: batch rows (default min(m, 1024))
+      --json            machine-readable response (assign/score: labels;
+                        stats already prints JSON)
 ";
 
 fn main() {
@@ -126,7 +159,16 @@ fn main() {
         std::process::exit(2);
     }
     let sub = argv.remove(0);
-    let flags = ["full", "quick", "skip-final", "json", "help", "no-summaries", "add-summaries"];
+    let flags = [
+        "full",
+        "quick",
+        "skip-final",
+        "json",
+        "help",
+        "no-summaries",
+        "add-summaries",
+        "watch",
+    ];
     let args = match Args::parse_with_flags(argv, &flags) {
         Ok(a) => a,
         Err(e) => {
@@ -143,6 +185,8 @@ fn main() {
         "generate" => cmd_generate(&args),
         "catalog" => cmd_catalog(),
         "artifacts" => cmd_artifacts(),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -249,7 +293,12 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         StopCondition::MaxTime(Duration::from_secs_f64(time))
     };
     let mode_arg =
-        args.choice("mode", &["inner", "chunks", "seq", "tune", "stream"])?;
+        args.choice("mode", &["inner", "chunks", "seq", "tune", "stream", "serve"])?;
+    if mode_arg == "serve" {
+        // `cluster --mode serve model.bmm` is the serve subcommand: no
+        // dataset to load, no search to run.
+        return cmd_serve(args);
+    }
     let mode = match mode_arg {
         "chunks" | "tune" => ParallelMode::ChunkParallel,
         "seq" | "stream" => ParallelMode::Sequential,
@@ -320,6 +369,9 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     }
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
+    if let Some(path) = args.get("save-model") {
+        save_model(path, args, data.name(), engine_arg, mode_arg, k, s, data.n(), &r)?;
+    }
     if args.flag("json") {
         let doc = run_summary_json(
             data.name(),
@@ -411,11 +463,41 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
             "--drift-action reseed needs the drift check: set --validate-every N".into()
         );
     }
+    let publish_path = match args.get("publish") {
+        Some(p) if !p.ends_with(".bmm") => {
+            return Err(format!("--publish output must be a .bmm path, got '{p}'"));
+        }
+        other => other.map(PathBuf::from),
+    };
     let rows_per_chunk = cfg.chunk_size.max(1);
     let n = data.n();
     let engine = StreamingBigMeans::new(cfg, n)
         .with_validation(validate_every, validation_rows)
         .with_drift_action(drift_action);
+    let engine = match publish_path {
+        None => engine,
+        Some(path) => {
+            // Every incumbent improvement becomes an atomically rewritten
+            // `.bmm`; a `serve --watch` daemon hot-swaps each one. The
+            // improvement ordinal is the publisher generation, so the
+            // watcher's content-identity check sees monotonic progress.
+            let dataset = data.name().to_string();
+            engine.with_publish(Box::new(move |centroids, objective, ordinal| {
+                let k = centroids.len() / n;
+                let meta = obj(vec![
+                    ("dataset", jstr(&dataset)),
+                    ("mode", jstr("stream")),
+                    ("improvement", num(ordinal as f64)),
+                ]);
+                let saved =
+                    ModelArtifact::new(k, n, ordinal, objective, meta, centroids.to_vec())
+                        .and_then(|a| a.save(&path));
+                if let Err(e) = saved {
+                    eprintln!("publish: deferred to next improvement ({e})");
+                }
+            }))
+        }
+    };
     let queue = ChunkQueue::new(8);
     let t0 = std::time::Instant::now();
     let r = std::thread::scope(|scope| {
@@ -475,6 +557,190 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
             ("wall_secs", num(wall)),
         ]);
         println!("{}", doc.to_string());
+    }
+    Ok(())
+}
+
+/// `--save-model`: persist the winning centroids as a `.bmm` serving
+/// artifact (publisher generation 1) with run provenance in the metadata.
+#[allow(clippy::too_many_arguments)]
+fn save_model(
+    path: &str,
+    args: &Args,
+    dataset: &str,
+    engine: &str,
+    mode: &str,
+    k: usize,
+    chunk_size: usize,
+    n: usize,
+    r: &BigMeansResult,
+) -> Result<(), String> {
+    if !path.ends_with(".bmm") {
+        return Err(format!("--save-model output must be a .bmm path, got '{path}'"));
+    }
+    let meta = obj(vec![
+        ("dataset", jstr(dataset)),
+        ("engine", jstr(engine)),
+        ("mode", jstr(mode)),
+        ("k", num(k as f64)),
+        ("n", num(n as f64)),
+        ("chunk_size", num(chunk_size as f64)),
+        ("seed", num(args.u64("seed", 0xB16_3EA5)? as f64)),
+    ]);
+    ModelArtifact::new(k, n, 1, r.objective, meta, r.centroids.clone())
+        .and_then(|a| a.save(&PathBuf::from(path)))
+        .map_err(|e| e.to_string())?;
+    eprintln!("saved model artifact {path} (k={k}, n={n}, objective {:.6e})", r.objective);
+    Ok(())
+}
+
+/// `serve <model.bmm>`: the long-running clustering daemon.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let Some(model_path) = args.positional().first() else {
+        return Err("usage: serve <model.bmm> [--addr HOST:PORT] [--watch]".into());
+    };
+    if !model_path.ends_with(".bmm") {
+        return Err(format!("serve needs a .bmm model artifact, got '{model_path}'"));
+    }
+    let path = PathBuf::from(model_path);
+    let artifact = ModelArtifact::load(&path).map_err(|e| e.to_string())?;
+    let identity = (artifact.generation, artifact.payload_crc());
+    eprintln!(
+        "serving {model_path}: k={}, n={}, publisher generation {}, objective {:.6e}",
+        artifact.k, artifact.n, artifact.generation, artifact.objective
+    );
+    let registry = ModelRegistry::new(artifact);
+    let opts = ServeOptions {
+        threads: args.usize("threads", 0)?,
+        max_batch_rows: args.usize("max-batch", 1 << 20)?,
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7171");
+    let server = Server::bind(addr, Arc::clone(&registry), opts).map_err(|e| e.to_string())?;
+    eprintln!("listening on {}", server.local_addr());
+    let stop = server.shutdown_handle();
+    let watcher = if args.flag("watch") {
+        let interval = Duration::from_millis(args.u64("watch-ms", 500)?.max(1));
+        eprintln!("watching {model_path} for hot-swaps every {}ms", interval.as_millis());
+        Some(spawn_watcher(Arc::clone(&registry), path, interval, Arc::clone(&stop), identity))
+    } else {
+        None
+    };
+    let stats = server.stats();
+    let run = server.run().map_err(|e| e.to_string());
+    stop.store(true, Ordering::SeqCst);
+    if let Some(handle) = watcher {
+        let _ = handle.join();
+    }
+    run?;
+    eprintln!(
+        "served {} requests ({} errors) across {} hot-swaps",
+        stats.requests(),
+        stats.errors(),
+        registry.swaps()
+    );
+    if args.flag("json") {
+        println!("{}", stats.to_json(&registry).to_string());
+    }
+    Ok(())
+}
+
+/// `query <host:port>`: one-shot client for a running daemon.
+fn cmd_query(args: &Args) -> Result<(), String> {
+    let Some(addr) = args.positional().first() else {
+        return Err(
+            "usage: query <host:port> [--op assign|score|stats|ping|shutdown]".into()
+        );
+    };
+    let op = args.choice("op", &["assign", "score", "stats", "ping", "shutdown"])?;
+    let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
+    match op {
+        "stats" => {
+            let (generation, json) = client.stats().map_err(|e| e.to_string())?;
+            eprintln!("swap generation {generation}");
+            println!("{json}");
+            return Ok(());
+        }
+        "ping" => {
+            let generation = client.ping().map_err(|e| e.to_string())?;
+            println!("pong (swap generation {generation})");
+            return Ok(());
+        }
+        "shutdown" => {
+            let generation = client.shutdown().map_err(|e| e.to_string())?;
+            println!("daemon shutting down (swap generation {generation})");
+            return Ok(());
+        }
+        _ => {}
+    }
+    let Some(file) = args.get("file") else {
+        return Err(format!("--op {op} needs --file <dataset> (.csv/.fbin/.bmx)"));
+    };
+    let source = loader::open_source_with(&PathBuf::from(file), DataBackend::InMemory, 1)
+        .map_err(|e| e.to_string())?;
+    let (m, n) = (source.m(), source.n());
+    let rows = args.usize("rows", m.min(1024))?.min(m);
+    if rows == 0 {
+        return Err(format!("'{file}' has no rows to send"));
+    }
+    let mut points = vec![0f32; rows * n];
+    source.read_rows(0, &mut points);
+    let t0 = std::time::Instant::now();
+    if op == "assign" {
+        let (generation, labels) =
+            client.assign(&points, rows, n).map_err(|e| e.to_string())?;
+        let wall = t0.elapsed().as_secs_f64();
+        let distinct = labels.iter().collect::<std::collections::BTreeSet<_>>().len();
+        println!(
+            "assigned {rows} rows in {:.1}ms (swap generation {generation}, {distinct} \
+             distinct labels)",
+            wall * 1e3
+        );
+        if args.flag("json") {
+            let doc = obj(vec![
+                ("op", jstr("assign")),
+                ("generation", num(generation as f64)),
+                ("rows", num(rows as f64)),
+                ("wall_secs", num(wall)),
+                (
+                    "labels",
+                    bigmeans::util::json::arr(
+                        labels.iter().map(|&l| num(l as f64)).collect(),
+                    ),
+                ),
+            ]);
+            println!("{}", doc.to_string());
+        }
+    } else {
+        let (generation, labels, dists, objective) =
+            client.score(&points, rows, n).map_err(|e| e.to_string())?;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "scored {rows} rows in {:.1}ms (swap generation {generation}, batch SSE \
+             {objective:.6e})",
+            wall * 1e3
+        );
+        if args.flag("json") {
+            let doc = obj(vec![
+                ("op", jstr("score")),
+                ("generation", num(generation as f64)),
+                ("rows", num(rows as f64)),
+                ("objective", fnum(objective)),
+                ("wall_secs", num(wall)),
+                (
+                    "labels",
+                    bigmeans::util::json::arr(
+                        labels.iter().map(|&l| num(l as f64)).collect(),
+                    ),
+                ),
+                (
+                    "dists",
+                    bigmeans::util::json::arr(
+                        dists.iter().map(|&d| fnum(f64::from(d))).collect(),
+                    ),
+                ),
+            ]);
+            println!("{}", doc.to_string());
+        }
     }
     Ok(())
 }

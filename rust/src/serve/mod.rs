@@ -1,0 +1,29 @@
+//! Serve mode: a long-running, hot-swappable clustering daemon.
+//!
+//! The paper trains an MSSC model; this module *serves* it. Four layers,
+//! all `std`-only:
+//!
+//! * [`artifact`] — the versioned `.bmm` model artifact (centroids +
+//!   geometry + objective + provenance metadata, CRC-protected like
+//!   `.bmx`): what training writes and the daemon loads;
+//! * [`registry`] — [`ModelRegistry`], an `ArcSwap`-style atomic
+//!   hot-swap point (`RwLock<Arc<ServingModel>>` + generation counter)
+//!   with a file watcher so a concurrently running `--mode stream` job
+//!   can publish refreshed centroids mid-flight;
+//! * [`protocol`] — the length-prefixed TCP wire format and the
+//!   [`Client`] used by the CLI, the bench suite, and the tests;
+//! * [`server`] — the accept loop: batched assign/score requests sharded
+//!   across the [`crate::util::threadpool::ThreadPool`] via
+//!   [`crate::kernels::assign_only_pooled`], so served labels are
+//!   **bit-identical** to the offline `assign_only`/`canonical_final_pass`
+//!   output for whichever model generation answered.
+
+pub mod artifact;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use artifact::{ModelArtifact, BMM_HEADER_LEN, BMM_MAGIC};
+pub use protocol::{Client, Request, Response, ResponsePayload};
+pub use registry::{spawn_watcher, ModelRegistry, ServingModel};
+pub use server::{ServeOptions, ServeStats, Server};

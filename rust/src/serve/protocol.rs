@@ -1,0 +1,486 @@
+//! Length-prefixed TCP wire format (`std::net` only) and the [`Client`].
+//!
+//! Every frame is a `u32` little-endian byte length followed by the body;
+//! one request frame yields exactly one response frame on the same
+//! connection, in order. All multi-byte integers and floats are
+//! little-endian.
+//!
+//! ## Request body
+//!
+//! ```text
+//! [op u8][rows u32][n u32][points: rows × n × f32]
+//! ```
+//!
+//! `rows = n = 0` (no points) for the pointless ops (stats, ping,
+//! shutdown).
+//!
+//! ## Response body
+//!
+//! ```text
+//! [status u8][op u8][generation u64][payload…]
+//! ```
+//!
+//! `generation` is the registry swap generation of the model that
+//! answered — the hot-swap observability hook. Payload by op:
+//! assign → `[rows u32][labels u32 × rows]`;
+//! score  → `[rows u32][labels u32 × rows][dists f32 × rows][objective f64]`
+//! (objective = f64 row-order sum of the dists);
+//! stats  → `[len u32][JSON bytes]`;
+//! ping / shutdown → empty. Error status replaces the payload with
+//! `[len u32][message bytes]`.
+//!
+//! Clean EOF before a frame's first length byte is a normal disconnect
+//! ([`read_request`] returns `None`); EOF mid-frame is an error — there
+//! is deliberately no resynchronisation, a torn frame kills the
+//! connection, never desyncs it.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
+/// Frame size cap — rejects absurd lengths before allocating.
+pub const MAX_FRAME: usize = 1 << 28;
+
+const OP_ASSIGN: u8 = 1;
+const OP_SCORE: u8 = 2;
+const OP_STATS: u8 = 3;
+const OP_PING: u8 = 4;
+const OP_SHUTDOWN: u8 = 5;
+
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+/// A decoded request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Batched nearest-centroid labels for `rows × n` points.
+    Assign { rows: usize, n: usize, points: Vec<f32> },
+    /// Labels + squared distances + batch objective.
+    Score { rows: usize, n: usize, points: Vec<f32> },
+    /// Server counters as JSON.
+    Stats,
+    /// Liveness probe.
+    Ping,
+    /// Ask the daemon to stop accepting and drain.
+    Shutdown,
+}
+
+impl Request {
+    fn op(&self) -> u8 {
+        match self {
+            Request::Assign { .. } => OP_ASSIGN,
+            Request::Score { .. } => OP_SCORE,
+            Request::Stats => OP_STATS,
+            Request::Ping => OP_PING,
+            Request::Shutdown => OP_SHUTDOWN,
+        }
+    }
+}
+
+/// A decoded response frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    /// Registry swap generation of the model that answered.
+    pub generation: u64,
+    pub payload: ResponsePayload,
+}
+
+/// Response payload by operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponsePayload {
+    Assign { labels: Vec<u32> },
+    Score { labels: Vec<u32>, dists: Vec<f32>, objective: f64 },
+    Stats { json: String },
+    Pong,
+    ShuttingDown,
+    Error { message: String },
+}
+
+fn bad_frame(what: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("bad frame: {what}"))
+}
+
+/// Fill `buf` exactly; `Ok(false)` on clean EOF at the first byte,
+/// an error on EOF anywhere later (a torn frame).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(bad_frame("EOF mid-frame"));
+            }
+            Ok(got) => filled += got,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut len_bytes = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len_bytes)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME {
+        return Err(bad_frame(format!("length {len} exceeds cap {MAX_FRAME}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    debug_assert!(body.len() <= MAX_FRAME);
+    let mut frame = Vec::with_capacity(4 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    frame.extend_from_slice(body);
+    w.write_all(&frame)
+}
+
+/// Read one request frame; `None` on clean disconnect.
+pub fn read_request(r: &mut impl Read) -> io::Result<Option<Request>> {
+    let Some(body) = read_frame(r)? else { return Ok(None) };
+    if body.len() < 9 {
+        return Err(bad_frame("request shorter than its fixed fields"));
+    }
+    let op = body[0];
+    let rows = u32::from_le_bytes(body[1..5].try_into().unwrap()) as usize;
+    let n = u32::from_le_bytes(body[5..9].try_into().unwrap()) as usize;
+    let want = rows
+        .checked_mul(n)
+        .and_then(|v| v.checked_mul(4))
+        .and_then(|v| v.checked_add(9))
+        .ok_or_else(|| bad_frame("request geometry overflows"))?;
+    if body.len() != want {
+        return Err(bad_frame(format!(
+            "request holds {} bytes, {rows}x{n} points need {want}",
+            body.len()
+        )));
+    }
+    let points: Vec<f32> = body[9..]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    match op {
+        OP_ASSIGN => Ok(Some(Request::Assign { rows, n, points })),
+        OP_SCORE => Ok(Some(Request::Score { rows, n, points })),
+        OP_STATS if rows == 0 && n == 0 => Ok(Some(Request::Stats)),
+        OP_PING if rows == 0 && n == 0 => Ok(Some(Request::Ping)),
+        OP_SHUTDOWN if rows == 0 && n == 0 => Ok(Some(Request::Shutdown)),
+        _ => Err(bad_frame(format!("unknown op {op} (rows={rows}, n={n})"))),
+    }
+}
+
+/// Encode + send one request frame.
+pub fn write_request(w: &mut impl Write, req: &Request) -> io::Result<()> {
+    let (rows, n, points): (usize, usize, &[f32]) = match req {
+        Request::Assign { rows, n, points } | Request::Score { rows, n, points } => {
+            (*rows, *n, points)
+        }
+        _ => (0, 0, &[]),
+    };
+    let mut body = Vec::with_capacity(9 + points.len() * 4);
+    body.push(req.op());
+    body.extend_from_slice(&(rows as u32).to_le_bytes());
+    body.extend_from_slice(&(n as u32).to_le_bytes());
+    for v in points {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    write_frame(w, &body)
+}
+
+/// Encode + send one response frame.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
+    let mut body = Vec::new();
+    let (status, op) = match &resp.payload {
+        ResponsePayload::Assign { .. } => (STATUS_OK, OP_ASSIGN),
+        ResponsePayload::Score { .. } => (STATUS_OK, OP_SCORE),
+        ResponsePayload::Stats { .. } => (STATUS_OK, OP_STATS),
+        ResponsePayload::Pong => (STATUS_OK, OP_PING),
+        ResponsePayload::ShuttingDown => (STATUS_OK, OP_SHUTDOWN),
+        ResponsePayload::Error { .. } => (STATUS_ERR, 0),
+    };
+    body.push(status);
+    body.push(op);
+    body.extend_from_slice(&resp.generation.to_le_bytes());
+    match &resp.payload {
+        ResponsePayload::Assign { labels } => {
+            body.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+            for l in labels {
+                body.extend_from_slice(&l.to_le_bytes());
+            }
+        }
+        ResponsePayload::Score { labels, dists, objective } => {
+            body.extend_from_slice(&(labels.len() as u32).to_le_bytes());
+            for l in labels {
+                body.extend_from_slice(&l.to_le_bytes());
+            }
+            for d in dists {
+                body.extend_from_slice(&d.to_le_bytes());
+            }
+            body.extend_from_slice(&objective.to_le_bytes());
+        }
+        ResponsePayload::Stats { json } => {
+            body.extend_from_slice(&(json.len() as u32).to_le_bytes());
+            body.extend_from_slice(json.as_bytes());
+        }
+        ResponsePayload::Pong | ResponsePayload::ShuttingDown => {}
+        ResponsePayload::Error { message } => {
+            body.extend_from_slice(&(message.len() as u32).to_le_bytes());
+            body.extend_from_slice(message.as_bytes());
+        }
+    }
+    write_frame(w, &body)
+}
+
+fn take_u32(body: &[u8], at: usize) -> io::Result<u32> {
+    body.get(at..at + 4)
+        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        .ok_or_else(|| bad_frame("response too short"))
+}
+
+/// Read + decode one response frame (EOF is an error — the caller just
+/// sent a request, so a response is owed).
+pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
+    let body = read_frame(r)?.ok_or_else(|| bad_frame("EOF awaiting response"))?;
+    if body.len() < 10 {
+        return Err(bad_frame("response shorter than its fixed fields"));
+    }
+    let status = body[0];
+    let op = body[1];
+    let generation = u64::from_le_bytes(body[2..10].try_into().unwrap());
+    let rest = &body[10..];
+    if status == STATUS_ERR {
+        let len = take_u32(rest, 0)? as usize;
+        let raw = rest.get(4..4 + len).ok_or_else(|| bad_frame("error text truncated"))?;
+        let message = String::from_utf8_lossy(raw).into_owned();
+        return Ok(Response { generation, payload: ResponsePayload::Error { message } });
+    }
+    let payload = match op {
+        OP_ASSIGN | OP_SCORE => {
+            let rows = take_u32(rest, 0)? as usize;
+            let labels_end = 4 + rows * 4;
+            let raw = rest
+                .get(4..labels_end)
+                .ok_or_else(|| bad_frame("labels truncated"))?;
+            let labels: Vec<u32> = raw
+                .chunks_exact(4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            if op == OP_ASSIGN {
+                ResponsePayload::Assign { labels }
+            } else {
+                let dists_end = labels_end + rows * 4;
+                let raw = rest
+                    .get(labels_end..dists_end)
+                    .ok_or_else(|| bad_frame("dists truncated"))?;
+                let dists: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect();
+                let raw = rest
+                    .get(dists_end..dists_end + 8)
+                    .ok_or_else(|| bad_frame("objective truncated"))?;
+                let objective = f64::from_le_bytes(raw.try_into().unwrap());
+                ResponsePayload::Score { labels, dists, objective }
+            }
+        }
+        OP_STATS => {
+            let len = take_u32(rest, 0)? as usize;
+            let raw =
+                rest.get(4..4 + len).ok_or_else(|| bad_frame("stats text truncated"))?;
+            let json = String::from_utf8_lossy(raw).into_owned();
+            ResponsePayload::Stats { json }
+        }
+        OP_PING => ResponsePayload::Pong,
+        OP_SHUTDOWN => ResponsePayload::ShuttingDown,
+        _ => return Err(bad_frame(format!("unknown response op {op}"))),
+    };
+    Ok(Response { generation, payload })
+}
+
+/// Blocking client for the serve protocol — used by `--mode query`, the
+/// bench suite, and the integration tests.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon at `addr` (e.g. `127.0.0.1:7171`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow!("connect to {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream })
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        write_request(&mut self.stream, req)?;
+        let resp = read_response(&mut self.stream)?;
+        if let ResponsePayload::Error { message } = &resp.payload {
+            bail!("server error: {message}");
+        }
+        Ok(resp)
+    }
+
+    /// Batched nearest-centroid query: `(generation, labels)`.
+    pub fn assign(&mut self, points: &[f32], rows: usize, n: usize) -> Result<(u64, Vec<u32>)> {
+        if points.len() != rows * n {
+            bail!("assign: {} values for {rows}x{n} points", points.len());
+        }
+        let req = Request::Assign { rows, n, points: points.to_vec() };
+        match self.roundtrip(&req)? {
+            Response { generation, payload: ResponsePayload::Assign { labels } } => {
+                Ok((generation, labels))
+            }
+            other => bail!("assign: mismatched response {:?}", other.payload),
+        }
+    }
+
+    /// Batched score query: `(generation, labels, dists, objective)`.
+    pub fn score(
+        &mut self,
+        points: &[f32],
+        rows: usize,
+        n: usize,
+    ) -> Result<(u64, Vec<u32>, Vec<f32>, f64)> {
+        if points.len() != rows * n {
+            bail!("score: {} values for {rows}x{n} points", points.len());
+        }
+        let req = Request::Score { rows, n, points: points.to_vec() };
+        match self.roundtrip(&req)? {
+            Response {
+                generation,
+                payload: ResponsePayload::Score { labels, dists, objective },
+            } => Ok((generation, labels, dists, objective)),
+            other => bail!("score: mismatched response {:?}", other.payload),
+        }
+    }
+
+    /// Server counters as `(generation, JSON text)`.
+    pub fn stats(&mut self) -> Result<(u64, String)> {
+        match self.roundtrip(&Request::Stats)? {
+            Response { generation, payload: ResponsePayload::Stats { json } } => {
+                Ok((generation, json))
+            }
+            other => bail!("stats: mismatched response {:?}", other.payload),
+        }
+    }
+
+    /// Liveness probe; returns the serving generation.
+    pub fn ping(&mut self) -> Result<u64> {
+        Ok(self.roundtrip(&Request::Ping)?.generation)
+    }
+
+    /// Ask the daemon to stop; returns the final serving generation.
+    pub fn shutdown(&mut self) -> Result<u64> {
+        Ok(self.roundtrip(&Request::Shutdown)?.generation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_roundtrip(req: Request) {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let mut r: &[u8] = &buf;
+        let back = read_request(&mut r).unwrap().expect("frame present");
+        assert_eq!(back, req);
+        assert!(r.is_empty(), "exactly one frame consumed");
+    }
+
+    fn resp_roundtrip(resp: Response) {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let mut r: &[u8] = &buf;
+        let back = read_response(&mut r).unwrap();
+        assert_eq!(back, resp);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn requests_roundtrip() {
+        req_roundtrip(Request::Assign { rows: 3, n: 2, points: vec![1.0; 6] });
+        req_roundtrip(Request::Score {
+            rows: 2,
+            n: 3,
+            points: vec![0.5, -1.25, 3.0, 1e-9, -1e9, 0.0],
+        });
+        req_roundtrip(Request::Stats);
+        req_roundtrip(Request::Ping);
+        req_roundtrip(Request::Shutdown);
+    }
+
+    #[test]
+    fn responses_roundtrip() {
+        resp_roundtrip(Response {
+            generation: 3,
+            payload: ResponsePayload::Assign { labels: vec![0, 7, 2] },
+        });
+        resp_roundtrip(Response {
+            generation: 1,
+            payload: ResponsePayload::Score {
+                labels: vec![1, 0],
+                dists: vec![0.25, 9.5],
+                objective: 9.75,
+            },
+        });
+        resp_roundtrip(Response {
+            generation: 9,
+            payload: ResponsePayload::Stats { json: "{\"requests\":4}".into() },
+        });
+        resp_roundtrip(Response { generation: 2, payload: ResponsePayload::Pong });
+        resp_roundtrip(Response { generation: 2, payload: ResponsePayload::ShuttingDown });
+        resp_roundtrip(Response {
+            generation: 5,
+            payload: ResponsePayload::Error { message: "dims mismatch".into() },
+        });
+    }
+
+    #[test]
+    fn clean_eof_is_a_disconnect_and_torn_frames_are_errors() {
+        let mut empty: &[u8] = &[];
+        assert!(read_request(&mut empty).unwrap().is_none());
+        // A frame whose length promises more bytes than follow.
+        let mut torn: &[u8] = &[9, 0, 0, 0, 1, 2];
+        assert!(read_request(&mut torn).is_err());
+        // EOF inside the length prefix itself.
+        let mut torn: &[u8] = &[9, 0];
+        assert!(read_request(&mut torn).is_err());
+    }
+
+    #[test]
+    fn oversized_and_malformed_frames_rejected() {
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut r: &[u8] = &huge;
+        assert!(read_request(&mut r).is_err());
+        // Shape lies: body length disagrees with rows × n.
+        let mut body = vec![OP_ASSIGN];
+        body.extend_from_slice(&5u32.to_le_bytes());
+        body.extend_from_slice(&4u32.to_le_bytes());
+        body.extend_from_slice(&[0u8; 8]); // 2 floats, not 20
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &body).unwrap();
+        let mut r: &[u8] = &buf;
+        assert!(read_request(&mut r).is_err());
+        // Pointless op carrying points is malformed.
+        let mut body = vec![OP_PING];
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&[0u8; 4]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &body).unwrap();
+        let mut r: &[u8] = &buf;
+        assert!(read_request(&mut r).is_err());
+    }
+}

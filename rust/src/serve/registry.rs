@@ -1,0 +1,243 @@
+//! The model registry: an `ArcSwap`-style atomic hot-swap point.
+//!
+//! Request handlers grab `Arc<ServingModel>` snapshots; a publish builds
+//! the new model off to the side and swaps one pointer under a
+//! poison-recovering write lock held for nanoseconds. In-flight requests
+//! keep the `Arc` they cloned — **no request is ever dropped or torn by a
+//! swap**; each one is answered entirely by whichever generation it
+//! snapshotted.
+//!
+//! The swap **generation counter** is the registry's logical clock: it
+//! starts at 1 for the boot model and increments per publish. It is
+//! deliberately distinct from [`ModelArtifact::generation`] (the
+//! *publisher's* ordinal): a daemon restarted against generation-40
+//! centroids still begins at swap generation 1.
+//!
+//! [`spawn_watcher`] is the file half of the stream→registry publish
+//! contract: it polls the artifact path's `(len, mtime)` stat, reloads on
+//! change, and publishes only when the *content identity*
+//! `(artifact.generation, payload_crc)` actually differs — a rewritten
+//! but identical file swaps nothing. Load errors (torn write caught by
+//! CRC, transient I/O) are logged and retried on the next poll, never
+//! fatal: robustness-first, like the rest of the daemon.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use crate::kernels::distance::sq_norm;
+use crate::serve::artifact::ModelArtifact;
+use crate::util::sync::{read_recover, write_recover};
+
+/// An immutable, query-ready model snapshot.
+pub struct ServingModel {
+    /// The loaded artifact (centroids + geometry + provenance).
+    pub artifact: ModelArtifact,
+    /// Registry swap generation this model was installed as (1 = boot).
+    pub generation: u64,
+    /// Per-centroid squared norms, precomputed **in centroid order with
+    /// the same [`sq_norm`] arithmetic as `assign_only`** — the
+    /// precondition for served labels being bit-identical to the offline
+    /// pass.
+    pub c_sq: Vec<f32>,
+}
+
+impl ServingModel {
+    fn new(artifact: ModelArtifact, generation: u64) -> ServingModel {
+        let (k, n) = (artifact.k, artifact.n);
+        let c_sq: Vec<f32> =
+            (0..k).map(|j| sq_norm(&artifact.centroids[j * n..(j + 1) * n])).collect();
+        ServingModel { artifact, generation, c_sq }
+    }
+}
+
+/// Atomic hot-swap registry of the currently served model.
+pub struct ModelRegistry {
+    current: RwLock<Arc<ServingModel>>,
+    generation: AtomicU64,
+}
+
+impl ModelRegistry {
+    /// Boot the registry with its first model (swap generation 1).
+    pub fn new(artifact: ModelArtifact) -> Arc<ModelRegistry> {
+        let model = Arc::new(ServingModel::new(artifact, 1));
+        Arc::new(ModelRegistry {
+            current: RwLock::new(model),
+            generation: AtomicU64::new(1),
+        })
+    }
+
+    /// Snapshot the current model: one short read lock to clone an `Arc`.
+    /// The caller's snapshot stays valid across any number of swaps.
+    pub fn current(&self) -> Arc<ServingModel> {
+        Arc::clone(&read_recover(&self.current))
+    }
+
+    /// Install a new model atomically; returns its swap generation. The
+    /// expensive work (c_sq precompute) happens before the write lock,
+    /// which is held only for the pointer swap.
+    pub fn publish(&self, artifact: ModelArtifact) -> u64 {
+        let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let model = Arc::new(ServingModel::new(artifact, generation));
+        *write_recover(&self.current) = model;
+        generation
+    }
+
+    /// Current swap generation (1 = still the boot model).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::SeqCst)
+    }
+
+    /// Hot-swaps performed since boot.
+    pub fn swaps(&self) -> u64 {
+        self.generation().saturating_sub(1)
+    }
+}
+
+/// File stat identity used to cheaply detect "the artifact may have
+/// changed" before paying a full load + CRC validation.
+fn stat_of(path: &Path) -> Option<(u64, SystemTime)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.len(), meta.modified().ok()?))
+}
+
+/// Watch `path` and publish refreshed models into `registry` until `stop`
+/// is set. `initial_identity` is the `(artifact generation, payload CRC)`
+/// of the model the registry booted with, so an unchanged file on the
+/// first poll publishes nothing.
+///
+/// The poll loop sleeps in small increments so a stop request is honoured
+/// promptly even with a long `interval`.
+pub fn spawn_watcher(
+    registry: Arc<ModelRegistry>,
+    path: PathBuf,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+    initial_identity: (u64, u32),
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("bigmeans-model-watcher".into())
+        .spawn(move || {
+            let mut last_stat = stat_of(&path);
+            let mut last_identity = initial_identity;
+            let tick = Duration::from_millis(25).min(interval.max(Duration::from_millis(1)));
+            let mut elapsed = Duration::ZERO;
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(tick);
+                elapsed += tick;
+                if elapsed < interval {
+                    continue;
+                }
+                elapsed = Duration::ZERO;
+                let stat = stat_of(&path);
+                if stat == last_stat || stat.is_none() {
+                    continue;
+                }
+                match ModelArtifact::load(&path) {
+                    Err(e) => {
+                        // Torn write or transient I/O: keep serving the
+                        // old model, retry on the next poll.
+                        eprintln!("model watcher: reload deferred: {e}");
+                    }
+                    Ok(artifact) => {
+                        last_stat = stat;
+                        let identity = (artifact.generation, artifact.payload_crc());
+                        if identity == last_identity {
+                            continue; // rewritten but identical — no swap
+                        }
+                        let current_n = registry.current().artifact.n;
+                        if artifact.n != current_n {
+                            eprintln!(
+                                "model watcher: rejected publish: dims changed \
+                                 from {current_n} to {} (restart the daemon to \
+                                 change the served schema)",
+                                artifact.n
+                            );
+                            continue;
+                        }
+                        last_identity = identity;
+                        let generation = registry.publish(artifact);
+                        eprintln!(
+                            "model watcher: hot-swapped to swap generation {generation}"
+                        );
+                    }
+                }
+            }
+        })
+        .expect("spawn model watcher")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn artifact(gen: u64, centroids: Vec<f32>, n: usize) -> ModelArtifact {
+        let k = centroids.len() / n;
+        ModelArtifact::new(k, n, gen, 1.0, Json::Null, centroids).unwrap()
+    }
+
+    #[test]
+    fn publish_swaps_atomically_and_counts_generations() {
+        let reg = ModelRegistry::new(artifact(1, vec![0.0, 0.0, 1.0, 1.0], 2));
+        assert_eq!(reg.generation(), 1);
+        assert_eq!(reg.swaps(), 0);
+        let before = reg.current();
+        assert_eq!(before.generation, 1);
+        let g = reg.publish(artifact(2, vec![5.0, 5.0, 6.0, 6.0], 2));
+        assert_eq!(g, 2);
+        assert_eq!(reg.generation(), 2);
+        assert_eq!(reg.swaps(), 1);
+        // The old snapshot is still fully usable — no request it answers
+        // can be torn by the swap.
+        assert_eq!(before.artifact.centroids, vec![0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(reg.current().artifact.centroids, vec![5.0, 5.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn c_sq_matches_assign_only_preamble() {
+        let cs = vec![1.0f32, 2.0, -3.0, 0.5];
+        let reg = ModelRegistry::new(artifact(1, cs.clone(), 2));
+        let model = reg.current();
+        let want: Vec<f32> = (0..2).map(|j| sq_norm(&cs[j * 2..(j + 1) * 2])).collect();
+        let same =
+            model.c_sq.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "c_sq must be the exact assign_only preamble");
+    }
+
+    #[test]
+    fn watcher_publishes_a_refreshed_artifact() {
+        let dir = std::env::temp_dir().join("bigmeans_serve_registry_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("{}_watch.bmm", std::process::id()));
+        let a1 = artifact(1, vec![0.0, 0.0], 2);
+        a1.save(&path).unwrap();
+        let identity = (a1.generation, a1.payload_crc());
+        let reg = ModelRegistry::new(ModelArtifact::load(&path).unwrap());
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = spawn_watcher(
+            Arc::clone(&reg),
+            path.clone(),
+            Duration::from_millis(30),
+            Arc::clone(&stop),
+            identity,
+        );
+        // Give the watcher a first poll on the unchanged file.
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(reg.generation(), 1, "unchanged file must not swap");
+        // Publish a refreshed model (larger k → different byte length, so
+        // the stat check fires even on coarse-mtime filesystems).
+        artifact(2, vec![9.0, 9.0, 1.0, 1.0], 2).save(&path).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        while reg.generation() < 2 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(reg.generation(), 2, "watcher must pick up the new artifact");
+        assert_eq!(reg.current().artifact.centroids, vec![9.0, 9.0, 1.0, 1.0]);
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,461 @@
+//! The daemon: accept loop, per-connection handlers, live counters.
+//!
+//! One OS thread per connection reads frames in order; the compute inside
+//! each request is sharded across the shared
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool) via
+//! [`assign_only_pooled`], whose row-carved tiling is bit-identical to the
+//! offline `assign_only` pass — so a served label never disagrees with
+//! what a batch job would have produced from the same model generation.
+//!
+//! Shutdown is cooperative and drop-free: the handler that receives the
+//! shutdown op answers it first, then raises the stop flag, half-closes
+//! every live connection (each blocked reader sees EOF and drains out),
+//! and pokes the accept loop awake with a throwaway self-connection.
+//! Sockets carry **no read timeouts** — a timeout mid-frame would desync
+//! the length-prefixed stream; torn frames already kill exactly one
+//! connection.
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::kernels::assign_only_pooled;
+use crate::metrics::Counters;
+use crate::serve::protocol::{read_request, write_response, Request, Response, ResponsePayload};
+use crate::serve::registry::{ModelRegistry, ServingModel};
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::sync::lock_recover;
+use crate::util::threadpool::ThreadPool;
+
+/// Daemon tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Worker threads for sharding one batch; 0 = auto-size to the host.
+    pub threads: usize,
+    /// Largest accepted `rows` per request; bigger batches get an error
+    /// response, not a dropped connection.
+    pub max_batch_rows: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { threads: 0, max_batch_rows: 1 << 20 }
+    }
+}
+
+/// Log2-bucketed latency histogram: lock-free to record, coarse (power
+/// of two upper bounds) to read — exactly what p50/p95/p99 gauges need.
+struct LatencyHistogram {
+    /// `buckets[i]` counts requests with `2^(i-1) < latency_us <= 2^i`
+    /// (bucket 0 holds sub-microsecond requests).
+    buckets: [AtomicU64; 64],
+}
+
+impl LatencyHistogram {
+    fn new() -> LatencyHistogram {
+        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn record(&self, elapsed: Duration) {
+        let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
+        let i = if us == 0 { 0 } else { (64 - us.leading_zeros() as usize).min(63) };
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper-bound latency (seconds) of the bucket holding quantile `q`.
+    fn percentile_secs(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << i) as f64 * 1e-6;
+            }
+        }
+        (1u64 << 63) as f64 * 1e-6
+    }
+}
+
+/// Live request counters, shared by every connection handler.
+pub struct ServeStats {
+    started: Instant,
+    requests: AtomicU64,
+    data_requests: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    hist: LatencyHistogram,
+    agg: Mutex<Counters>,
+}
+
+impl ServeStats {
+    fn new() -> ServeStats {
+        ServeStats {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            data_requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            hist: LatencyHistogram::new(),
+            agg: Mutex::new(Counters::new()),
+        }
+    }
+
+    fn record(&self, elapsed: Duration, batch_rows: Option<usize>, counters: Option<&Counters>) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if let Some(rows) = batch_rows {
+            self.data_requests.fetch_add(1, Ordering::Relaxed);
+            self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        }
+        if let Some(c) = counters {
+            lock_recover(&self.agg).merge(c);
+        }
+        self.hist.record(elapsed);
+    }
+
+    fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests answered so far (all ops).
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Error responses sent so far.
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// The `--json` / stats-op document: throughput, batch shape, latency
+    /// percentiles, swap generation, and the kernel work counters.
+    pub fn to_json(&self, registry: &ModelRegistry) -> Json {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let data_requests = self.data_requests.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        let errors = self.errors.load(Ordering::Relaxed);
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let mean_batch =
+            if data_requests == 0 { 0.0 } else { rows as f64 / data_requests as f64 };
+        let distance_evals = lock_recover(&self.agg).distance_evals;
+        json::obj(vec![
+            ("requests", json::num(requests as f64)),
+            ("rows", json::num(rows as f64)),
+            ("errors", json::num(errors as f64)),
+            ("qps", json::num(requests as f64 / uptime)),
+            ("mean_batch_rows", json::num(mean_batch)),
+            ("p50_ms", json::num(self.hist.percentile_secs(0.50) * 1e3)),
+            ("p95_ms", json::num(self.hist.percentile_secs(0.95) * 1e3)),
+            ("p99_ms", json::num(self.hist.percentile_secs(0.99) * 1e3)),
+            ("generation", json::num(registry.generation() as f64)),
+            ("swaps", json::num(registry.swaps() as f64)),
+            ("distance_evals", json::num(distance_evals as f64)),
+            ("uptime_secs", json::num(self.started.elapsed().as_secs_f64())),
+        ])
+    }
+}
+
+/// Everything a connection handler needs, behind one `Arc`.
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    stats: Arc<ServeStats>,
+    pool: ThreadPool,
+    stop: Arc<AtomicBool>,
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    local_addr: SocketAddr,
+    max_batch_rows: usize,
+}
+
+/// The serving daemon. `bind` then `run`; `run` returns after a client
+/// sends the shutdown op (or [`Server::shutdown_handle`] is raised and
+/// the loop is woken by a connection).
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral test port) and prepare
+    /// the worker pool.
+    pub fn bind(addr: &str, registry: Arc<ModelRegistry>, opts: ServeOptions) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("bind serve addr {addr}"))?;
+        let local_addr = listener.local_addr().context("serve local_addr")?;
+        let pool = if opts.threads == 0 {
+            ThreadPool::with_default_size()
+        } else {
+            ThreadPool::new(opts.threads)
+        };
+        let shared = Arc::new(Shared {
+            registry,
+            stats: Arc::new(ServeStats::new()),
+            pool,
+            stop: Arc::new(AtomicBool::new(false)),
+            conns: Mutex::new(HashMap::new()),
+            local_addr,
+            max_batch_rows: opts.max_batch_rows.max(1),
+        });
+        Ok(Server { listener, shared })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.local_addr
+    }
+
+    /// Live counters, shared with every handler.
+    pub fn stats(&self) -> Arc<ServeStats> {
+        Arc::clone(&self.shared.stats)
+    }
+
+    /// Cooperative stop flag. Raising it externally (e.g. from a signal
+    /// handler) stops the accept loop at its next wake-up; the in-band
+    /// shutdown op raises it *and* wakes everything immediately.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shared.stop)
+    }
+
+    /// Accept connections until shutdown; joins every handler before
+    /// returning, so no response is ever abandoned mid-write.
+    pub fn run(&self) -> Result<()> {
+        let mut handles = Vec::new();
+        let mut next_id = 0u64;
+        loop {
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let (stream, _) = match self.listener.accept() {
+                Ok(pair) => pair,
+                Err(e) => {
+                    if self.shared.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    eprintln!("serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break; // the wake-up self-connection, or a racer
+            }
+            stream.set_nodelay(true).ok();
+            next_id += 1;
+            let id = next_id;
+            if let Ok(clone) = stream.try_clone() {
+                lock_recover(&self.shared.conns).insert(id, clone);
+            }
+            let shared = Arc::clone(&self.shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("bigmeans-serve-conn-{id}"))
+                .spawn(move || {
+                    handle_connection(stream, id, &shared);
+                    lock_recover(&shared.conns).remove(&id);
+                })
+                .context("spawn connection handler")?;
+            handles.push(handle);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Answer a batched assign/score request from one model snapshot.
+fn answer_batch(
+    shared: &Shared,
+    model: &ServingModel,
+    rows: usize,
+    n: usize,
+    points: &[f32],
+    score: bool,
+) -> (ResponsePayload, usize, Counters) {
+    let (k, dims) = (model.artifact.k, model.artifact.n);
+    debug_assert_eq!(n, dims);
+    let mut labels = vec![0u32; rows];
+    let mut mins = vec![0f32; rows];
+    let mut counters = Counters::new();
+    assign_only_pooled(
+        &shared.pool,
+        points,
+        &model.artifact.centroids,
+        &model.c_sq,
+        rows,
+        dims,
+        k,
+        &mut labels,
+        &mut mins,
+        &mut counters,
+    );
+    let payload = if score {
+        let objective: f64 = mins.iter().map(|&d| f64::from(d)).sum();
+        ResponsePayload::Score { labels, dists: mins, objective }
+    } else {
+        ResponsePayload::Assign { labels }
+    };
+    (payload, rows, counters)
+}
+
+/// Serve one connection until disconnect, torn frame, or shutdown.
+fn handle_connection(mut stream: TcpStream, _id: u64, shared: &Shared) {
+    loop {
+        let req = match read_request(&mut stream) {
+            Ok(Some(req)) => req,
+            // Clean disconnect, torn frame, or our own half-close during
+            // shutdown — all end exactly this connection.
+            Ok(None) | Err(_) => return,
+        };
+        let start = Instant::now();
+        let (rows_n, score) = match &req {
+            Request::Assign { rows, n, .. } => (Some((*rows, *n)), false),
+            Request::Score { rows, n, .. } => (Some((*rows, *n)), true),
+            _ => (None, false),
+        };
+        let response = match &req {
+            Request::Assign { points, .. } | Request::Score { points, .. } => {
+                let (rows, n) = rows_n.unwrap();
+                let model = shared.registry.current();
+                if n != model.artifact.n {
+                    shared.stats.record_error();
+                    Response {
+                        generation: model.generation,
+                        payload: ResponsePayload::Error {
+                            message: format!(
+                                "dims mismatch: request has {n}, model serves {}",
+                                model.artifact.n
+                            ),
+                        },
+                    }
+                } else if rows > shared.max_batch_rows {
+                    shared.stats.record_error();
+                    Response {
+                        generation: model.generation,
+                        payload: ResponsePayload::Error {
+                            message: format!(
+                                "batch of {rows} rows exceeds cap {}",
+                                shared.max_batch_rows
+                            ),
+                        },
+                    }
+                } else {
+                    let (payload, rows, counters) =
+                        answer_batch(shared, &model, rows, n, points, score);
+                    shared.stats.record(start.elapsed(), Some(rows), Some(&counters));
+                    Response { generation: model.generation, payload }
+                }
+            }
+            Request::Stats => {
+                let json = shared.stats.to_json(&shared.registry).to_string();
+                shared.stats.record(start.elapsed(), None, None);
+                Response {
+                    generation: shared.registry.generation(),
+                    payload: ResponsePayload::Stats { json },
+                }
+            }
+            Request::Ping => {
+                shared.stats.record(start.elapsed(), None, None);
+                Response {
+                    generation: shared.registry.generation(),
+                    payload: ResponsePayload::Pong,
+                }
+            }
+            Request::Shutdown => {
+                shared.stats.record(start.elapsed(), None, None);
+                Response {
+                    generation: shared.registry.generation(),
+                    payload: ResponsePayload::ShuttingDown,
+                }
+            }
+        };
+        if write_response(&mut stream, &response).is_err() {
+            return; // peer vanished mid-response; nothing to salvage
+        }
+        if matches!(req, Request::Shutdown) {
+            initiate_shutdown(shared);
+            return;
+        }
+    }
+}
+
+/// Raise the stop flag, half-close every live connection so blocked
+/// readers drain, and poke the accept loop awake.
+fn initiate_shutdown(shared: &Shared) {
+    shared.stop.store(true, Ordering::SeqCst);
+    for conn in lock_recover(&shared.conns).values() {
+        let _ = conn.shutdown(Shutdown::Both);
+    }
+    // `accept` has no timeout; a throwaway self-connection wakes it so it
+    // can observe the flag. Failure is fine — the next real connection
+    // (or an OS-level close) unblocks it the same way.
+    let _: io::Result<TcpStream> = TcpStream::connect(shared.local_addr);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::assign_only;
+    use crate::serve::artifact::ModelArtifact;
+    use crate::serve::protocol::Client;
+    use crate::util::rng::Rng;
+
+    fn boot(k: usize, n: usize, seed: u64) -> (Arc<ModelRegistry>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let centroids: Vec<f32> =
+            (0..k * n).map(|_| (rng.f64() * 10.0 - 5.0) as f32).collect();
+        let artifact =
+            ModelArtifact::new(k, n, 1, 123.0, Json::Null, centroids.clone()).unwrap();
+        (ModelRegistry::new(artifact), centroids)
+    }
+
+    #[test]
+    fn daemon_answers_bit_identically_then_shuts_down() {
+        let (k, n, rows) = (7, 3, 301);
+        let (registry, centroids) = boot(k, n, 11);
+        let server = Server::bind(
+            "127.0.0.1:0",
+            Arc::clone(&registry),
+            ServeOptions { threads: 2, max_batch_rows: 4096 },
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let runner = std::thread::spawn(move || server.run().unwrap());
+
+        let mut rng = Rng::new(99);
+        let points: Vec<f32> =
+            (0..rows * n).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect();
+        let mut counters = Counters::new();
+        let (want_labels, want_mins) =
+            assign_only(&points, &centroids, rows, n, k, &mut counters);
+
+        let mut client = Client::connect(&addr).unwrap();
+        let (generation, labels) = client.assign(&points, rows, n).unwrap();
+        assert_eq!(generation, 1);
+        assert_eq!(labels, want_labels);
+        let (_, labels2, dists, objective) = client.score(&points, rows, n).unwrap();
+        assert_eq!(labels2, want_labels);
+        let same = dists.iter().zip(&want_mins).all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "served dists must be bit-identical to assign_only mins");
+        let want_obj: f64 = want_mins.iter().map(|&d| f64::from(d)).sum();
+        assert_eq!(objective.to_bits(), want_obj.to_bits());
+
+        // Malformed batches get error responses on a live connection.
+        assert!(client.assign(&points[..rows * 2], rows, 2).is_err());
+        let huge = vec![0.0f32; 5000 * n];
+        assert!(client.assign(&huge, 5000, n).is_err());
+        let (_, json) = client.stats().unwrap();
+        let doc = Json::parse(&json).unwrap();
+        assert!(doc.get("requests").and_then(|v| v.as_f64()).unwrap() >= 3.0);
+        assert_eq!(doc.get("errors").and_then(|v| v.as_f64()).unwrap(), 2.0);
+
+        client.shutdown().unwrap();
+        runner.join().unwrap();
+    }
+}

@@ -25,6 +25,7 @@ use crate::store::codec::{block_minmax, decode_block};
 use crate::store::format::{BlockEntry, Codec, Dtype, V3Header, BLOCK_ENTRY_LEN, BMX3_HEADER_LEN};
 use crate::util::error::{Context, Result};
 use crate::util::hash::crc32;
+use crate::util::sync::lock_recover;
 use crate::util::threadpool::ThreadPool;
 use crate::{anyhow, bail};
 
@@ -150,12 +151,7 @@ impl BlockStore {
                     hdr.summary_crc
                 );
             }
-            Some(
-                summary_raw
-                    .chunks_exact(4)
-                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                    .collect(),
-            )
+            Some(parse_summaries(&summary_raw, blocks as usize, hdr.n as usize, &label)?)
         } else {
             None
         };
@@ -309,7 +305,10 @@ impl BlockStore {
             Backing::Pread(file) => {
                 let mut buf = vec![0u8; entry.enc_len as usize];
                 {
-                    let mut fh = file.lock().unwrap();
+                    // Poison-recovering: every use seeks to an absolute
+                    // offset before reading, so a panic that poisoned the
+                    // lock leaves no cursor state a later read depends on.
+                    let mut fh = lock_recover(file);
                     fh.seek(SeekFrom::Start(entry.offset))
                         .with_context(|| format!("seek to offset {}", entry.offset))?;
                     fh.read_exact(&mut buf)
@@ -411,6 +410,30 @@ impl BlockStore {
             encoded_bytes: self.entries.iter().map(|e| e.enc_len).sum(),
         })
     }
+}
+
+/// Decode the summary section after validating its exact length: it must
+/// hold `blocks × dims × 2` little-endian f32 values (min + max per
+/// dimension per block). Without this check `chunks_exact(4)` would
+/// silently drop trailing bytes of a CRC-consistent but wrong-length
+/// section, leaving a partial summary table that block pruning would
+/// mis-trust.
+fn parse_summaries(raw: &[u8], blocks: usize, n: usize, label: &str) -> Result<Vec<f32>> {
+    let want = blocks
+        .checked_mul(2 * n)
+        .and_then(|v| v.checked_mul(4))
+        .ok_or_else(|| anyhow!("{label}: bmx v3 summary geometry overflows"))?;
+    if raw.len() != want {
+        bail!(
+            "{label}: wrong-length summary section ({} bytes, geometry of \
+             {blocks} blocks x {n} dims needs exactly {want})",
+            raw.len()
+        );
+    }
+    Ok(raw
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect())
 }
 
 impl DataSource for BlockStore {
@@ -612,6 +635,17 @@ mod tests {
         let err = BlockStore::open(&p).unwrap_err().to_string();
         assert!(err.contains("summary checksum"), "unexpected error: {err}");
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn wrong_length_summary_section_is_a_named_error() {
+        let ok = parse_summaries(&[0u8; 2 * 2 * 2 * 4], 2, 2, "t").unwrap();
+        assert_eq!(ok.len(), 2 * 2 * 2);
+        for bad_len in [0usize, 3, 2 * 2 * 2 * 4 - 4, 2 * 2 * 2 * 4 + 1] {
+            let raw = vec![0u8; bad_len];
+            let err = parse_summaries(&raw, 2, 2, "t").unwrap_err().to_string();
+            assert!(err.contains("wrong-length summary section"), "{err}");
+        }
     }
 
     #[test]

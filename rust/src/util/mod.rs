@@ -13,4 +13,5 @@ pub mod matrix;
 pub mod mem;
 pub mod prop;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;

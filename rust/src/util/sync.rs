@@ -1,0 +1,107 @@
+//! Poison-recovering lock helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking thread into a process-wide
+//! cascade: every later lock of the same mutex panics on the poison flag.
+//! That was tolerable in a batch CLI (the run was lost anyway) but is an
+//! availability bug in a long-running daemon — a single panicked worker
+//! must not take down the serve loop. These helpers recover the guard from
+//! a poisoned lock instead of propagating.
+//!
+//! Recovery is sound for every use in this crate: the protected state is
+//! either re-derived after the guard is taken (job queues drained item by
+//! item, file handles re-positioned with an absolute seek before every
+//! read) or validated downstream (block CRCs), so a panic mid-critical-
+//! section cannot leave state a recovered reader would mis-trust.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock `m`, recovering the guard if the mutex is poisoned.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Wait on `cv`, recovering the guard if the mutex was poisoned while the
+/// waiter slept.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Read-lock `l`, recovering the guard if the lock is poisoned.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Write-lock `l`, recovering the guard if the lock is poisoned.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // Panic while holding the guard: the mutex is now poisoned.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7);
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recover_survives_a_poisoned_lock() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.read().is_err(), "rwlock must actually be poisoned");
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert_eq!(read_recover(&l).len(), 4);
+    }
+
+    #[test]
+    fn wait_recover_passes_through_on_healthy_lock() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut done = lock_recover(m);
+            while !*done {
+                done = wait_recover(cv, done);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock_recover(m) = true;
+            cv.notify_all();
+        }
+        waiter.join().unwrap();
+    }
+}

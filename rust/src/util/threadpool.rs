@@ -15,6 +15,8 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::sync::{lock_recover, wait_recover};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Shared {
@@ -67,9 +69,11 @@ impl ThreadPool {
         self.size
     }
 
-    /// Submit a fire-and-forget job.
+    /// Submit a fire-and-forget job. Poison-recovering: a panicked job
+    /// only ever poisons the injector between `push_back` calls, never
+    /// mid-mutation, so the queue contents stay coherent.
     fn submit(&self, job: Job) {
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = lock_recover(&self.shared.queue);
         q.push_back(job);
         drop(q);
         self.shared.available.notify_one();
@@ -126,7 +130,7 @@ impl ThreadPool {
                     sh.panicked.store(true, Ordering::SeqCst);
                 }
                 let (lock, cv) = &*pending;
-                let mut n = lock.lock().unwrap();
+                let mut n = lock_recover(lock);
                 *n -= 1;
                 if *n == 0 {
                     cv.notify_all();
@@ -134,9 +138,9 @@ impl ThreadPool {
             }));
         }
         let (lock, cv) = &*pending;
-        let mut n = lock.lock().unwrap();
+        let mut n = lock_recover(lock);
         while *n > 0 {
-            n = cv.wait(n).unwrap();
+            n = wait_recover(cv, n);
         }
         if self.shared.panicked.swap(false, Ordering::SeqCst) {
             panic!("a pooled job panicked");
@@ -191,22 +195,25 @@ impl ThreadPool {
                 let f = Arc::clone(&f);
                 move || {
                     let r = f(item);
-                    results.lock().unwrap()[i] = r;
+                    lock_recover(&results)[i] = r;
                 }
             })
             .collect();
         self.run_all(jobs);
-        Arc::try_unwrap(results)
+        match Arc::try_unwrap(results)
             .unwrap_or_else(|_| panic!("map results still shared"))
             .into_inner()
-            .unwrap()
+        {
+            Ok(v) => v,
+            Err(poisoned) => poisoned.into_inner(),
+        }
     }
 }
 
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_recover(&shared.queue);
             loop {
                 if let Some(job) = q.pop_front() {
                     break Some(job);
@@ -214,7 +221,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break None;
                 }
-                q = shared.available.wait(q).unwrap();
+                q = wait_recover(&shared.available, q);
             }
         };
         match job {
@@ -332,6 +339,27 @@ mod tests {
     fn panics_propagate() {
         let pool = ThreadPool::new(2);
         pool.run_all(vec![|| panic!("boom")]);
+    }
+
+    #[test]
+    fn pool_stays_usable_after_a_panicked_batch() {
+        // The daemon contract: one panicking job must not poison the pool.
+        let pool = ThreadPool::new(2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_all(vec![|| panic!("boom")]);
+        }));
+        assert!(boom.is_err(), "panic must still propagate to the caller");
+        for _ in 0..5 {
+            let c = SharedCounter::new();
+            let jobs: Vec<_> = (0..8)
+                .map(|_| {
+                    let c = c.clone();
+                    move || c.add(1)
+                })
+                .collect();
+            pool.run_all(jobs);
+            assert_eq!(c.get(), 8);
+        }
     }
 
     #[test]

@@ -1,0 +1,232 @@
+//! Integration: serve mode end to end. A live daemon on loopback answers
+//! concurrent batched assign/score queries while the model registry is
+//! hot-swapped underneath it — every response must be bit-identical to
+//! the offline `assign_only` pass *for the generation that answered it*,
+//! no request may be dropped, and the stats document must account for
+//! every swap. This is the serving contract: a label handed out over the
+//! wire never disagrees with what a batch job would have computed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bigmeans::kernels::assign_only;
+use bigmeans::metrics::Counters;
+use bigmeans::serve::{spawn_watcher, Client, ModelArtifact, ModelRegistry, ServeOptions, Server};
+use bigmeans::util::json::Json;
+use bigmeans::util::rng::Rng;
+
+fn centroids(rng: &mut Rng, k: usize, n: usize) -> Vec<f32> {
+    (0..k * n).map(|_| rng.f32() * 20.0 - 10.0).collect()
+}
+
+#[test]
+fn daemon_serves_bit_identical_labels_across_hot_swaps_without_drops() {
+    let (k, n) = (9, 5);
+    let mut rng = Rng::new(0xD05E);
+    let generations: Vec<Vec<f32>> = (0..3).map(|_| centroids(&mut rng, k, n)).collect();
+    let batch_rows = 257; // odd on purpose: exercises ragged row carving
+    let points: Vec<f32> =
+        (0..batch_rows * n).map(|_| rng.f32() * 20.0 - 10.0).collect();
+    // Offline truth per generation, from the exact kernel the daemon shards.
+    let truth: Vec<(Vec<u32>, Vec<f32>)> = generations
+        .iter()
+        .map(|c| {
+            let mut counters = Counters::new();
+            assign_only(&points, c, batch_rows, n, k, &mut counters)
+        })
+        .collect();
+
+    let boot =
+        ModelArtifact::new(k, n, 1, 0.0, Json::Null, generations[0].clone()).unwrap();
+    let registry = ModelRegistry::new(boot);
+    let server = Server::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        ServeOptions { threads: 3, max_batch_rows: 1 << 16 },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+
+    let workers = 4usize;
+    let per_worker = 30usize;
+    let answered: Vec<u64> = std::thread::scope(|scope| {
+        // Publisher: two hot-swaps land while the query threads are live.
+        let publisher = {
+            let registry = Arc::clone(&registry);
+            let generations = &generations;
+            scope.spawn(move || {
+                for (i, c) in generations.iter().enumerate().skip(1) {
+                    std::thread::sleep(Duration::from_millis(40));
+                    let artifact =
+                        ModelArtifact::new(k, n, (i + 1) as u64, 0.0, Json::Null, c.clone())
+                            .unwrap();
+                    registry.publish(artifact);
+                }
+            })
+        };
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let addr = addr.clone();
+                let points = &points;
+                let truth = &truth;
+                scope.spawn(move || {
+                    let mut client = Client::connect(&addr).unwrap();
+                    let mut answered = 0u64;
+                    for i in 0..per_worker {
+                        if (w + i) % 2 == 0 {
+                            let (generation, labels) =
+                                client.assign(points, batch_rows, n).unwrap();
+                            let (want_labels, _) = &truth[generation as usize - 1];
+                            assert_eq!(
+                                &labels, want_labels,
+                                "assign labels must match offline generation {generation}"
+                            );
+                        } else {
+                            let (generation, labels, dists, objective) =
+                                client.score(points, batch_rows, n).unwrap();
+                            let (want_labels, want_mins) =
+                                &truth[generation as usize - 1];
+                            assert_eq!(&labels, want_labels);
+                            let same = dists
+                                .iter()
+                                .zip(want_mins)
+                                .all(|(a, b)| a.to_bits() == b.to_bits());
+                            assert!(
+                                same,
+                                "score dists must be bit-identical for generation \
+                                 {generation}"
+                            );
+                            let want_obj: f64 =
+                                want_mins.iter().map(|&d| f64::from(d)).sum();
+                            assert_eq!(objective.to_bits(), want_obj.to_bits());
+                        }
+                        answered += 1;
+                        // Pacing so the publishes land mid-stream.
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    answered
+                })
+            })
+            .collect();
+        publisher.join().unwrap();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Zero dropped requests: every query got exactly one answer.
+    assert_eq!(answered.iter().sum::<u64>(), (workers * per_worker) as u64);
+    assert_eq!(registry.generation(), 3);
+
+    let mut client = Client::connect(&addr).unwrap();
+    let (generation, json) = client.stats().unwrap();
+    assert_eq!(generation, 3, "stats must report the post-swap generation");
+    let doc = Json::parse(&json).unwrap();
+    let get = |key: &str| doc.get(key).and_then(|v| v.as_f64()).unwrap();
+    assert!(get("requests") >= (workers * per_worker) as f64);
+    assert_eq!(get("swaps"), 2.0);
+    assert_eq!(get("errors"), 0.0);
+    assert!(get("rows") >= (workers * per_worker * batch_rows) as f64);
+    assert!(get("p99_ms") >= get("p50_ms"));
+    assert!(get("qps") > 0.0);
+    assert_eq!(client.ping().unwrap(), 3);
+    client.shutdown().unwrap();
+    runner.join().unwrap();
+}
+
+#[test]
+fn malformed_batches_get_error_responses_on_a_live_connection() {
+    let (k, n) = (3, 4);
+    let mut rng = Rng::new(0xE44);
+    let boot =
+        ModelArtifact::new(k, n, 1, 0.0, Json::Null, centroids(&mut rng, k, n)).unwrap();
+    let registry = ModelRegistry::new(boot);
+    let server = Server::bind(
+        "127.0.0.1:0",
+        Arc::clone(&registry),
+        ServeOptions { threads: 1, max_batch_rows: 8 },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let runner = std::thread::spawn(move || server.run().unwrap());
+
+    let mut client = Client::connect(&addr).unwrap();
+    // Wrong dimensionality: named error, connection stays up.
+    let bad_dims = vec![0.0f32; 6 * (n + 1)];
+    let err = client.assign(&bad_dims, 6, n + 1).unwrap_err();
+    assert!(format!("{err}").contains("dims mismatch"), "got: {err}");
+    // Over the batch cap: named error, connection stays up.
+    let too_big = vec![0.0f32; 9 * n];
+    let err = client.assign(&too_big, 9, n).unwrap_err();
+    assert!(format!("{err}").contains("exceeds cap"), "got: {err}");
+    // The same connection still answers a well-formed batch.
+    let fine = vec![0.5f32; 2 * n];
+    let (generation, labels) = client.assign(&fine, 2, n).unwrap();
+    assert_eq!(generation, 1);
+    assert_eq!(labels.len(), 2);
+    let (_, json) = client.stats().unwrap();
+    let doc = Json::parse(&json).unwrap();
+    assert_eq!(doc.get("errors").and_then(|v| v.as_f64()).unwrap(), 2.0);
+    client.shutdown().unwrap();
+    runner.join().unwrap();
+}
+
+#[test]
+fn file_watcher_feeds_the_daemon_published_artifacts() {
+    // The stream→registry publish contract end to end through the file
+    // system: save artifact → serve with a watcher → rewrite the artifact
+    // (as `--publish` does on an improvement) → the daemon answers from
+    // the refreshed model with no restart.
+    let (k, n) = (4, 3);
+    let mut rng = Rng::new(0xFEED);
+    let dir = std::env::temp_dir().join("bigmeans_serve_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{}_model.bmm", std::process::id()));
+    let c1 = centroids(&mut rng, k, n);
+    ModelArtifact::new(k, n, 1, 0.0, Json::Null, c1).unwrap().save(&path).unwrap();
+
+    let boot = ModelArtifact::load(&path).unwrap();
+    let identity = (boot.generation, boot.payload_crc());
+    let registry = ModelRegistry::new(boot);
+    let server =
+        Server::bind("127.0.0.1:0", Arc::clone(&registry), ServeOptions::default()).unwrap();
+    let addr = server.local_addr().to_string();
+    let stop = server.shutdown_handle();
+    let watcher = spawn_watcher(
+        Arc::clone(&registry),
+        path.clone(),
+        Duration::from_millis(30),
+        Arc::clone(&stop),
+        identity,
+    );
+    let runner = std::thread::spawn(move || server.run().unwrap());
+
+    // A concurrent trainer improves the model: a bigger payload guarantees
+    // the watcher's (len, mtime) stat check fires even on coarse-mtime
+    // filesystems. Same n — the daemon's schema never changes.
+    std::thread::sleep(Duration::from_millis(80));
+    let c2 = centroids(&mut rng, k + 2, n);
+    ModelArtifact::new(k + 2, n, 2, 0.0, Json::Null, c2.clone())
+        .unwrap()
+        .save(&path)
+        .unwrap();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while client.ping().unwrap() < 2 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(client.ping().unwrap(), 2, "watcher must hot-swap the rewrite");
+
+    let batch = 33usize;
+    let points: Vec<f32> = (0..batch * n).map(|_| rng.f32() * 20.0 - 10.0).collect();
+    let (generation, labels) = client.assign(&points, batch, n).unwrap();
+    assert_eq!(generation, 2);
+    let mut counters = Counters::new();
+    let (want, _) = assign_only(&points, &c2, batch, n, k + 2, &mut counters);
+    assert_eq!(labels, want, "answers must come from the refreshed centroids");
+
+    client.shutdown().unwrap();
+    runner.join().unwrap();
+    watcher.join().unwrap();
+    let _ = std::fs::remove_file(&path);
+}
