@@ -5,10 +5,12 @@
 //! `assign`):
 //!
 //! * **assign** — times the fused panel engine, the bounded
-//!   (Hamerly-pruned) engine, the Elkan engine, and the pre-fusion
-//!   two-pass reference kernel on a synthetic workload (default 1M×16,
-//!   k=64) — once on uniform data (worst case for pruning) and once on
-//!   separated Gaussian blobs (best case) — then emits
+//!   (Hamerly-pruned) engine, the Elkan engine, the rescan-adaptive
+//!   hybrid engine, and the pre-fusion two-pass reference kernel on a
+//!   synthetic workload (default 1M×16, k=64) — once on uniform data
+//!   (worst case for pruning) and once on separated Gaussian blobs (best
+//!   case) — plus a per-ISA A/B row (the panel engine forced onto the
+//!   scalar backend vs the detected-best SIMD dispatch), then emits
 //!   `BENCH_assign.json` with wall times and distance-eval counts.
 //! * **tuner** — races the competitive portfolio tuner against every
 //!   fixed-sample-size baseline from the same grid at an equal shot
@@ -49,9 +51,10 @@ use bigmeans::data::dataset::Dataset;
 use bigmeans::kernels::assign::{AssignOut, BLOCK_ROWS};
 use bigmeans::kernels::distance::{sq_dist_panel, sq_norm};
 use bigmeans::kernels::engine::{
-    BoundedEngine, ElkanEngine, KernelEngine, LloydState, PanelEngine,
+    BoundedEngine, ElkanEngine, HybridEngine, KernelEngine, LloydState, PanelEngine,
 };
 use bigmeans::kernels::update_centroids;
+use bigmeans::kernels::{active_isa, detect_isa, set_isa, DistanceIsa};
 use bigmeans::metrics::Counters;
 use bigmeans::data::source::DataSource;
 use bigmeans::store::{copy_to_store, BlockStore, Codec, Dtype, StoreOptions};
@@ -449,6 +452,11 @@ fn final_suite(args: &Args) -> Result<(), String> {
     let (r_pruned, _) = run(&pruned_store)?;
     let (r_plain, _) = run(&plain_store)?;
     let (r_mem, _) = run(&data)?;
+    // Per-ISA A/B: the in-memory run forced onto the scalar distance
+    // backend — bit-identical by the dispatch contract, slower at most.
+    set_isa(DistanceIsa::Scalar).expect("scalar is always available");
+    let (r_mem_scalar, _) = run(&data)?;
+    set_isa(detect_isa()).expect("detected isa must be available");
     // Decode-only full scan (fresh store so the cache is cold): the decode
     // bandwidth the double buffer hides behind the assignment shards.
     let scan_store = BlockStore::open(&plain_path).map_err(|e| e.to_string())?;
@@ -464,8 +472,10 @@ fn final_suite(args: &Args) -> Result<(), String> {
 
     let identical = r_pruned.objective.to_bits() == r_plain.objective.to_bits()
         && r_pruned.objective.to_bits() == r_mem.objective.to_bits()
+        && r_pruned.objective.to_bits() == r_mem_scalar.objective.to_bits()
         && r_pruned.assignment == r_plain.assignment
-        && r_pruned.assignment == r_mem.assignment;
+        && r_pruned.assignment == r_mem.assignment
+        && r_pruned.assignment == r_mem_scalar.assignment;
     let speedup = r_plain.cpu_full_secs / r_pruned.cpu_full_secs.max(1e-9);
     eprintln!(
         "final pass: pruned {:.3}s vs unpruned {:.3}s ({speedup:.2}×), mem {:.3}s | \
@@ -489,9 +499,11 @@ fn final_suite(args: &Args) -> Result<(), String> {
         ("codec", s(codec.name())),
         ("blocks", num(blocks as f64)),
         ("pruned_blocks", num(r_pruned.counters.pruned_blocks as f64)),
+        ("isa", s(active_isa().name())),
         ("pruned_final_secs", num(r_pruned.cpu_full_secs)),
         ("unpruned_final_secs", num(r_plain.cpu_full_secs)),
         ("mem_final_secs", num(r_mem.cpu_full_secs)),
+        ("mem_final_secs_scalar", num(r_mem_scalar.cpu_full_secs)),
         ("final_speedup", num(speedup)),
         ("decode_scan_secs", num(decode_secs)),
         ("pruned_evals", num(r_pruned.counters.pruned_evals as f64)),
@@ -700,12 +712,15 @@ fn main() {
         let panel = PanelEngine;
         let bounded = BoundedEngine::default();
         let elkan = ElkanEngine::default();
+        let hybrid = HybridEngine::default();
+        let best_isa = detect_isa();
         let mut cases = Vec::new();
         for (data_name, data) in [("uniform", &uniform), ("blobs", &blobs)] {
             for (engine_name, engine) in [
                 ("panel", &panel as &dyn KernelEngine),
                 ("bounded", &bounded),
                 ("elkan", &elkan),
+                ("hybrid", &hybrid),
             ] {
                 let name = format!("{engine_name}_{data_name}");
                 eprint!("{name:<20} ");
@@ -716,6 +731,20 @@ fn main() {
                 );
                 cases.push(c);
             }
+            // Per-ISA A/B: the same panel arithmetic forced onto the
+            // scalar backend — bit-identical by the dispatch contract,
+            // slower at most.
+            set_isa(DistanceIsa::Scalar).expect("scalar is always available");
+            let name = format!("panel_scalar_{data_name}");
+            eprint!("{name:<20} ");
+            let c = time_engine(&name, &panel, data, m, n, k, iters);
+            eprintln!(
+                "{:>8.3}s  n_d {:.3e}  (forced scalar isa)",
+                c.secs,
+                c.counters.distance_evals as f64
+            );
+            cases.push(c);
+            set_isa(best_isa).expect("detected isa must be available");
             let name = format!("reference_{data_name}");
             eprint!("{name:<20} ");
             let c = time_reference(&name, data, m, n, k, iters);
@@ -733,10 +762,14 @@ fn main() {
         let elkan_blobs = find("elkan_blobs");
         let elkan_ratio = full_evals / (elkan_blobs.counters.distance_evals as f64).max(1.0);
         let fused_speedup = find("reference_uniform").secs / find("panel_uniform").secs.max(1e-12);
+        let simd_speedup =
+            find("panel_scalar_uniform").secs / find("panel_uniform").secs.max(1e-12);
         eprintln!(
             "bounded/blobs eval reduction: {eval_ratio:.2}× \
              | elkan/blobs: {elkan_ratio:.2}× \
-             | fused panel vs seed kernel (uniform): {fused_speedup:.2}×"
+             | fused panel vs seed kernel (uniform): {fused_speedup:.2}× \
+             | {} vs scalar (uniform): {simd_speedup:.2}×",
+            best_isa.name()
         );
 
         let doc = obj(vec![
@@ -744,11 +777,13 @@ fn main() {
             ("n", num(n as f64)),
             ("k", num(k as f64)),
             ("iters", num(iters as f64)),
+            ("isa", s(active_isa().name())),
             ("full_evals", num(full_evals)),
             ("cases", arr(cases.iter().map(case_json).collect())),
             ("bounded_blobs_eval_reduction", num(eval_ratio)),
             ("elkan_blobs_eval_reduction", num(elkan_ratio)),
             ("fused_vs_reference_uniform_speedup", num(fused_speedup)),
+            ("simd_vs_scalar_uniform_speedup", num(simd_speedup)),
         ]);
         std::fs::write(&out_path, doc.to_string() + "\n")
             .map_err(|e| format!("write {out_path}: {e}"))?;

@@ -21,10 +21,12 @@ use crate::coordinator::sampler::ChunkSampler;
 use crate::coordinator::solver::{ChunkSolver, FinalPassMode, NativeSolver};
 use crate::coordinator::stop::StopState;
 use crate::data::source::{AccessPattern, DataSource};
+use crate::kernels::assign::PREFETCH_ROWS_AHEAD;
 use crate::kernels::distance::{sq_dist_decomp, sq_norm};
 use crate::kernels::{self, update::degenerate_indices};
 use crate::metrics::{Counters, PhaseTimer};
 use crate::store::prune::{self, PrunePlan};
+use crate::util::mem;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -150,6 +152,29 @@ impl BigMeans {
 /// and shard boundaries never change labels or the objective; this
 /// constant only shapes memory and overlap granularity.
 pub(crate) const FINAL_PASS_BLOCK_ROWS: usize = 8192;
+
+/// Minimum rows per shard of a final-pass slab segment — one panel block,
+/// so tiny fragments don't swamp the job queue.
+pub(crate) const FINAL_PASS_SHARD_ROWS: usize = 256;
+
+/// Soft cap on one shard's point bytes: a shard that fits a typical L2
+/// slice keeps the prefetched norm-pass rows resident for the panel pass
+/// that re-reads them.
+pub(crate) const SLAB_TILE_L2_BYTES: usize = 1 << 20;
+
+/// Shard size for one slab segment: roughly even across `workers`, at
+/// least [`FINAL_PASS_SHARD_ROWS`], capped so one shard's points fit
+/// [`SLAB_TILE_L2_BYTES`] (the floor wins for very wide rows). Shard
+/// boundaries never change per-point results, only load balance.
+fn slab_shard_rows(rows: usize, n: usize, workers: usize) -> usize {
+    let cap = (SLAB_TILE_L2_BYTES / (4 * n.max(1))).max(FINAL_PASS_SHARD_ROWS);
+    let shard = rows.div_ceil(workers.max(1)).clamp(FINAL_PASS_SHARD_ROWS, cap);
+    debug_assert!(
+        shard * n * 4 <= SLAB_TILE_L2_BYTES || shard == FINAL_PASS_SHARD_ROWS,
+        "shard of {shard} rows x {n} dims overflows the L2 tile budget"
+    );
+    shard
+}
 
 /// Final full-dataset pass + result assembly (shared between the
 /// sequential and chunk-parallel pipelines).
@@ -284,7 +309,14 @@ fn assign_owned_rows(
     labels: &mut [u32],
     mins: &mut [f32],
 ) {
+    let limit = points.len();
     for (i, x) in points.chunks_exact(n).enumerate() {
+        // Owned segments are a pure linear walk with one evaluation per
+        // row — memory-bound, so hint the streamed rows a little ahead.
+        // Clamping to one-past-end keeps the pointer arithmetic defined;
+        // the hint itself never faults.
+        let ahead = (i + PREFETCH_ROWS_AHEAD) * n;
+        mem::prefetch_read(points.as_ptr().wrapping_add(ahead.min(limit)) as *const u8);
         let x_sq = sq_norm(x);
         labels[i] = owner;
         mins[i] = sq_dist_decomp(x, x_sq, centroid, c_sq_j);
@@ -320,10 +352,8 @@ fn push_slab_jobs<'scope>(
         mins = min_rest;
         let pts = &points[off * n..(off + rows) * n];
         // Shard every segment (owned segments too — a fully-pruned pass
-        // would otherwise run one job per segment and idle the pool); keep
-        // shards at a panel block or more so tiny fragments don't swamp
-        // the queue. Shard boundaries never change per-point results.
-        let shard = rows.div_ceil(workers.max(1)).max(256);
+        // would otherwise run one job per segment and idle the pool).
+        let shard = slab_shard_rows(rows, n, workers);
         let mut lab_left = lab_seg;
         let mut min_left = min_seg;
         let mut done = 0usize;

@@ -9,12 +9,18 @@
 //!   end (the paper's parallelisation strategy 1).
 
 use crate::metrics::Counters;
+use crate::util::mem;
 use crate::util::threadpool::ThreadPool;
 
 use super::distance::{sq_dist_panel_argmin, sq_norm};
 
 /// Rows per panel block — sized so a `(BLOCK, k)` distance panel stays in L2.
 pub const BLOCK_ROWS: usize = 256;
+
+/// Software-prefetch distance (in point rows) for linear row walks: far
+/// enough ahead to hide DRAM latency behind one row's arithmetic, near
+/// enough that the line is still resident when the walk reaches it.
+pub const PREFETCH_ROWS_AHEAD: usize = 8;
 
 /// Output of the fused assignment step.
 #[derive(Clone, Debug)]
@@ -192,11 +198,19 @@ pub fn panel_assign_into(
     debug_assert_eq!(labels.len(), rows);
     debug_assert_eq!(mins.len(), rows);
     let mut x_sq = vec![0f32; BLOCK_ROWS.min(rows.max(1))];
+    let limit = points.len();
     let mut row = 0;
     while row < rows {
         let take = BLOCK_ROWS.min(rows - row);
         let block = &points[row * n..(row + take) * n];
         for (i, xs) in x_sq.iter_mut().take(take).enumerate() {
+            // The norm pass is the first touch of each tile; prefetching a
+            // few rows ahead hides DRAM latency on out-of-cache shards
+            // (serve batches, final-pass slabs). The panel pass right
+            // after re-reads the tile from cache. Clamping to one-past-end
+            // keeps the pointer arithmetic defined; the hint never faults.
+            let ahead = (row + i + PREFETCH_ROWS_AHEAD) * n;
+            mem::prefetch_read(points.as_ptr().wrapping_add(ahead.min(limit)) as *const u8);
             *xs = sq_norm(&block[i * n..(i + 1) * n]);
         }
         sq_dist_panel_argmin(

@@ -6,17 +6,44 @@
 //! reports how many *distance-function evaluations* it performed through
 //! [`crate::metrics::counters::DistanceCounter`]-compatible return values —
 //! the paper's `n_d` metric counts point↔centroid distance evaluations.
+//!
+//! The public entry points dispatch at runtime to the hand-written SIMD
+//! backends in [`super::simd`] when one is active; the `*_scalar`
+//! functions in this file are the auto-vectorized reference
+//! implementations every backend must match **bit for bit** (see the
+//! roofline section in [`super`] for the reduction-order contract).
+
+use super::simd;
 
 /// SIMD lane width for the accumulator arrays: 16 f32 = one AVX-512
 /// register (still fine on AVX2 — LLVM splits into two 8-lane registers).
+/// The explicit backends in [`super::simd`] tile by the same width.
 const LANES: usize = 16;
 
-/// Direct squared Euclidean distance between two vectors.
-///
-/// A `[f32; LANES]` accumulator array lets LLVM keep the whole reduction in
-/// vector registers without violating strict-FP ordering per lane.
-#[inline]
-pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+/// Pairwise tree reduction of one `[f32; LANES]` accumulator tile
+/// (`width = 8, 4, 2, 1`). The single source of truth for the combine
+/// order: the scalar kernels below and the SIMD backends all reduce their
+/// 16 lanes in exactly this order, which is what makes them bit-identical.
+#[inline(always)]
+fn reduce_lanes(acc: &mut [f32; LANES]) -> f32 {
+    let mut width = LANES / 2;
+    while width > 0 {
+        for l in 0..width {
+            acc[l] += acc[l + width];
+        }
+        width /= 2;
+    }
+    acc[0]
+}
+
+/// Shared lane-tiled accumulator loop: `Σ term(a[i], b[i])` with `LANES`
+/// independent per-lane partial sums (so LLVM keeps the whole reduction in
+/// vector registers without violating strict-FP ordering per lane), a
+/// separately-accumulated scalar tail, and the [`reduce_lanes`] tree.
+/// `sq_dist` and `dot` (hence `sq_norm`) are thin instantiations of this
+/// one loop.
+#[inline(always)]
+fn lane_accumulate<F: Fn(f32, f32) -> f32>(a: &[f32], b: &[f32], term: F) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f32; LANES];
     let chunks = a.len() / LANES;
@@ -25,52 +52,63 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
         let av = &a[j..j + LANES];
         let bv = &b[j..j + LANES];
         for l in 0..LANES {
-            let d = av[l] - bv[l];
-            acc[l] += d * d;
+            acc[l] += term(av[l], bv[l]);
         }
     }
     let mut tail = 0.0f32;
     for j in chunks * LANES..a.len() {
-        let d = a[j] - b[j];
-        tail += d * d;
+        tail += term(a[j], b[j]);
     }
-    // Pairwise tree reduction keeps the combine order deterministic.
-    let mut width = LANES / 2;
-    while width > 0 {
-        for l in 0..width {
-            acc[l] += acc[l + width];
-        }
-        width /= 2;
+    reduce_lanes(&mut acc) + tail
+}
+
+/// Scalar reference for [`sq_dist`] (auto-vectorized lane tiles).
+#[inline]
+pub(crate) fn sq_dist_scalar(a: &[f32], b: &[f32]) -> f32 {
+    lane_accumulate(a, b, |x, y| {
+        let d = x - y;
+        d * d
+    })
+}
+
+/// Scalar reference for [`dot`] (auto-vectorized lane tiles).
+#[inline]
+pub(crate) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    lane_accumulate(a, b, |x, y| x * y)
+}
+
+/// Direct squared Euclidean distance between two vectors.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == simd::DistanceIsa::Avx2 {
+        // SAFETY: Avx2 only activates after runtime feature detection.
+        return unsafe { simd::avx2::sq_dist(a, b) };
     }
-    acc[0] + tail
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == simd::DistanceIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64; lengths are asserted above.
+        return unsafe { simd::neon::sq_dist(a, b) };
+    }
+    sq_dist_scalar(a, b)
 }
 
 /// Dot product (used by the decomposition path).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; LANES];
-    let chunks = a.len() / LANES;
-    for i in 0..chunks {
-        let j = i * LANES;
-        let av = &a[j..j + LANES];
-        let bv = &b[j..j + LANES];
-        for l in 0..LANES {
-            acc[l] += av[l] * bv[l];
-        }
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == simd::DistanceIsa::Avx2 {
+        // SAFETY: Avx2 only activates after runtime feature detection.
+        return unsafe { simd::avx2::dot(a, b) };
     }
-    let mut tail = 0.0f32;
-    for j in chunks * LANES..a.len() {
-        tail += a[j] * b[j];
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == simd::DistanceIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64; lengths are asserted above.
+        return unsafe { simd::neon::dot(a, b) };
     }
-    let mut width = LANES / 2;
-    while width > 0 {
-        for l in 0..width {
-            acc[l] += acc[l + width];
-        }
-        width /= 2;
-    }
-    acc[0] + tail
+    dot_scalar(a, b)
 }
 
 /// Squared L2 norm.
@@ -150,6 +188,8 @@ pub fn sq_dist_panel(
 /// stays in registers instead of round-tripping through a `rows×k` buffer
 /// and a second scan. Distance values and tie-breaking (lowest index wins)
 /// are bit-identical to [`sq_dist_panel`] followed by a forward argmin.
+/// Dispatches the whole panel loop to the active SIMD backend so the
+/// micro-kernel inlines into it.
 #[allow(clippy::too_many_arguments)]
 pub fn sq_dist_panel_argmin(
     points: &[f32],
@@ -167,6 +207,40 @@ pub fn sq_dist_panel_argmin(
     debug_assert_eq!(labels.len(), rows);
     debug_assert_eq!(mins.len(), rows);
     debug_assert!(k > 0);
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == simd::DistanceIsa::Avx2 {
+        // SAFETY: Avx2 only activates after runtime feature detection.
+        return unsafe {
+            simd::avx2::sq_dist_panel_argmin(
+                points, x_sq, centroids, c_sq, rows, k, n, labels, mins,
+            )
+        };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == simd::DistanceIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64; shapes are asserted above.
+        return unsafe {
+            simd::neon::sq_dist_panel_argmin(
+                points, x_sq, centroids, c_sq, rows, k, n, labels, mins,
+            )
+        };
+    }
+    sq_dist_panel_argmin_scalar(points, x_sq, centroids, c_sq, rows, k, n, labels, mins)
+}
+
+/// Scalar reference for [`sq_dist_panel_argmin`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sq_dist_panel_argmin_scalar(
+    points: &[f32],
+    x_sq: &[f32],
+    centroids: &[f32],
+    c_sq: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    labels: &mut [u32],
+    mins: &mut [f32],
+) {
     let k4 = k / 4 * 4;
     for i in 0..rows {
         let x = &points[i * n..(i + 1) * n];
@@ -178,7 +252,7 @@ pub fn sq_dist_panel_argmin(
             let c1 = &centroids[(j + 1) * n..(j + 2) * n];
             let c2 = &centroids[(j + 2) * n..(j + 3) * n];
             let c3 = &centroids[(j + 3) * n..(j + 4) * n];
-            let (p0, p1, p2, p3) = dot4(x, c0, c1, c2, c3);
+            let (p0, p1, p2, p3) = dot4_scalar(x, c0, c1, c2, c3);
             let d0 = (x_sq[i] + c_sq[j] - 2.0 * p0).max(0.0);
             let d1 = (x_sq[i] + c_sq[j + 1] - 2.0 * p1).max(0.0);
             let d2 = (x_sq[i] + c_sq[j + 2] - 2.0 * p2).max(0.0);
@@ -203,7 +277,7 @@ pub fn sq_dist_panel_argmin(
         }
         while j < k {
             let c = &centroids[j * n..(j + 1) * n];
-            let d = (x_sq[i] + c_sq[j] - 2.0 * dot(x, c)).max(0.0);
+            let d = (x_sq[i] + c_sq[j] - 2.0 * dot_scalar(x, c)).max(0.0);
             if d < best_d {
                 best_d = d;
                 best = j as u32;
@@ -275,9 +349,34 @@ pub fn nearest2_decomp(
     (j1, d1, d2)
 }
 
-/// Four simultaneous dot products against a shared left vector.
+/// Four simultaneous dot products against a shared left vector,
+/// dispatched to the active SIMD backend.
 #[inline]
 fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> (f32, f32, f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if simd::active_isa() == simd::DistanceIsa::Avx2 {
+        // SAFETY: Avx2 only activates after runtime feature detection.
+        return unsafe { simd::avx2::dot4(x, c0, c1, c2, c3) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if simd::active_isa() == simd::DistanceIsa::Neon {
+        // SAFETY: NEON is baseline on aarch64.
+        return unsafe { simd::neon::dot4(x, c0, c1, c2, c3) };
+    }
+    dot4_scalar(x, c0, c1, c2, c3)
+}
+
+/// Scalar reference for the 4-wide micro-kernel. The four accumulator
+/// tiles are fully independent, so this is bit-identical to four separate
+/// [`dot_scalar`] calls — the SIMD backends rely on that equivalence.
+#[inline]
+pub(crate) fn dot4_scalar(
+    x: &[f32],
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+) -> (f32, f32, f32, f32) {
     let n = x.len();
     let mut a0 = [0.0f32; LANES];
     let mut a1 = [0.0f32; LANES];
@@ -305,17 +404,12 @@ fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> (f32, f32,
         t2 += x[j] * c2[j];
         t3 += x[j] * c3[j];
     }
-    let mut width = LANES / 2;
-    while width > 0 {
-        for l in 0..width {
-            a0[l] += a0[l + width];
-            a1[l] += a1[l + width];
-            a2[l] += a2[l + width];
-            a3[l] += a3[l + width];
-        }
-        width /= 2;
-    }
-    (a0[0] + t0, a1[0] + t1, a2[0] + t2, a3[0] + t3)
+    (
+        reduce_lanes(&mut a0) + t0,
+        reduce_lanes(&mut a1) + t1,
+        reduce_lanes(&mut a2) + t2,
+        reduce_lanes(&mut a3) + t3,
+    )
 }
 
 #[cfg(test)]
@@ -343,6 +437,25 @@ mod tests {
     }
 
     #[test]
+    fn scalar_helpers_agree_with_public_entry_points_numerically() {
+        // Whatever backend is active, the dispatched value must be the
+        // bit-exact scalar value — the dispatch is invisible.
+        let a: Vec<f32> = (0..37).map(|i| (i as f32 * 0.61 - 9.0).sin() * 5.0).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 * 0.23 + 2.0).cos() * 5.0).collect();
+        assert_eq!(sq_dist(&a, &b).to_bits(), sq_dist_scalar(&a, &b).to_bits());
+        assert_eq!(dot(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits());
+        let four = dot4(&a, &b, &a, &b, &a);
+        let fours = dot4_scalar(&a, &b, &a, &b, &a);
+        assert_eq!(four.0.to_bits(), fours.0.to_bits());
+        assert_eq!(four.1.to_bits(), fours.1.to_bits());
+        assert_eq!(four.2.to_bits(), fours.2.to_bits());
+        assert_eq!(four.3.to_bits(), fours.3.to_bits());
+        // dot4's independent accumulators == four standalone dots.
+        assert_eq!(fours.0.to_bits(), dot_scalar(&a, &b).to_bits());
+        assert_eq!(fours.1.to_bits(), dot_scalar(&a, &a).to_bits());
+    }
+
+    #[test]
     fn nearest_picks_min_and_breaks_ties_low() {
         let centroids = [0.0f32, 0.0, 5.0, 5.0, 0.0, 0.0]; // c0 == c2
         let (idx, d) = nearest(&[1.0, 0.0], &centroids, 3, 2);
@@ -367,6 +480,17 @@ mod tests {
             let mut labels = vec![0u32; rows];
             let mut mins = vec![0f32; rows];
             sq_dist_panel_argmin(&pts, &x_sq, &cs, &c_sq, rows, k, n, &mut labels, &mut mins);
+            // The explicitly-scalar panel must agree bit for bit with the
+            // dispatched one, whichever backend is live.
+            let mut labels_s = vec![0u32; rows];
+            let mut mins_s = vec![0f32; rows];
+            sq_dist_panel_argmin_scalar(
+                &pts, &x_sq, &cs, &c_sq, rows, k, n, &mut labels_s, &mut mins_s,
+            );
+            assert_eq!(labels, labels_s, "rows={rows} k={k} n={n}");
+            for i in 0..rows {
+                assert_eq!(mins[i].to_bits(), mins_s[i].to_bits());
+            }
             for i in 0..rows {
                 let row = &panel[i * k..(i + 1) * k];
                 let mut best = 0usize;

@@ -23,7 +23,16 @@
 //!   with the inter-centroid-distance test (`d(c_l, c_j) ≥ 2·upper` rules
 //!   centroid `j` out without touching the point). More memory
 //!   (`O(m·k)` bounds) but finer pruning than Hamerly: a point only
-//!   re-evaluates the centroids its bounds cannot exclude.
+//!   re-evaluates the centroids its bounds cannot exclude. The bound
+//!   matrix is stored as `u16` quanta with one-sided rounding (see the
+//!   quantisation slack model in [`super`]), so it costs 2 bytes per
+//!   point-centroid pair instead of 8.
+//! * [`HybridEngine`] — rescan-adaptive composition: every chunk starts on
+//!   the Hamerly path (cheap `O(m)` bounds) and watches the observed
+//!   rescan rate; once a step rescans more than a threshold fraction of
+//!   the chunk, the state flips permanently to the Elkan path. Labels are
+//!   identical either way — the switch only moves work between pruning
+//!   strategies.
 //!
 //! Pruning in both engines is *exact*: every engine uses the identical
 //! decomposition arithmetic, so labels, counts, and objectives agree
@@ -52,6 +61,8 @@ pub enum KernelEngineKind {
     /// Elkan-bound pruned exact assignment (k+1 bounds per point plus the
     /// inter-centroid-distance test).
     Elkan,
+    /// Rescan-adaptive Hamerly→Elkan composition (per-chunk switch).
+    Hybrid,
 }
 
 impl KernelEngineKind {
@@ -61,15 +72,17 @@ impl KernelEngineKind {
             KernelEngineKind::Panel => Box::new(PanelEngine),
             KernelEngineKind::Bounded => Box::new(BoundedEngine::default()),
             KernelEngineKind::Elkan => Box::new(ElkanEngine::default()),
+            KernelEngineKind::Hybrid => Box::new(HybridEngine::default()),
         }
     }
 
-    /// Parse a CLI token (`panel` / `bounded` / `elkan`).
+    /// Parse a CLI token (`panel` / `bounded` / `elkan` / `hybrid`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "panel" => Some(KernelEngineKind::Panel),
             "bounded" => Some(KernelEngineKind::Bounded),
             "elkan" => Some(KernelEngineKind::Elkan),
+            "hybrid" => Some(KernelEngineKind::Hybrid),
             _ => None,
         }
     }
@@ -80,6 +93,7 @@ impl KernelEngineKind {
             KernelEngineKind::Panel => "panel",
             KernelEngineKind::Bounded => "bounded",
             KernelEngineKind::Elkan => "elkan",
+            KernelEngineKind::Hybrid => "hybrid",
         }
     }
 }
@@ -88,8 +102,9 @@ impl KernelEngineKind {
 ///
 /// For the bounded engine this holds the current label plus Hamerly
 /// upper/lower bounds; the Elkan engine swaps the single lower bound for
-/// `k` per-centroid lower bounds (all in *distance*, not squared-distance,
-/// domain — the triangle inequality is linear). The panel engine never
+/// `k` per-centroid lower bounds, quantised to `u16` (all in *distance*,
+/// not squared-distance, domain — the triangle inequality is linear). The
+/// panel engine never
 /// activates it, and the vectors allocate lazily, so carrying a
 /// `LloydState` through a panel run costs nothing.
 #[derive(Clone, Debug)]
@@ -100,17 +115,27 @@ pub struct LloydState {
     upper: Vec<f64>,
     /// Hamerly: lower bound on the distance to every *other* centroid.
     lower: Vec<f64>,
-    /// Elkan: per-centroid lower bounds, row-major `(m, k)`. Empty unless
+    /// Elkan: per-centroid lower bounds, row-major `(m, k)`, stored as
+    /// `u16` quanta of [`LloydState::q_scale`] with one-sided rounding so
+    /// a dequantised bound never exceeds the true distance. Empty unless
     /// the Elkan engine activated the state.
-    lower_k: Vec<f64>,
+    lower_q: Vec<u16>,
     /// `k` the Elkan bounds were allocated for (0 = Hamerly/none).
     bound_k: usize,
+    /// Distance represented by one `lower_q` quantum, fixed for one bound
+    /// lifetime (set whenever the Elkan bounds (re)initialise).
+    q_scale: f64,
     /// Cached `‖x‖²` per point — invariant across iterations (the points
     /// of one Lloyd run never change), filled by the init pass.
     x_sq: Vec<f32>,
     /// Set by the first bounded assignment; `apply_update` is a no-op (and
     /// drift tracking is skipped entirely) while inactive.
     active: bool,
+    /// The hybrid engine's per-chunk decision: once the observed rescan
+    /// rate trips the switch, the state runs Elkan for the rest of its
+    /// life. One-way by design — the trigger condition (a collapsed
+    /// Hamerly lower bound) does not heal.
+    hybrid_elkan: bool,
 }
 
 impl LloydState {
@@ -123,10 +148,12 @@ impl LloydState {
             labels: Vec::new(),
             upper: Vec::new(),
             lower: Vec::new(),
-            lower_k: Vec::new(),
+            lower_q: Vec::new(),
             bound_k: 0,
+            q_scale: 0.0,
             x_sq: Vec::new(),
             active: false,
+            hybrid_elkan: false,
         }
     }
 
@@ -157,22 +184,22 @@ impl LloydState {
             // Elkan bounds from a previous engine are meaningless for the
             // Hamerly test (and would mis-route `apply_update`): drop them
             // and start the bounds over.
-            self.lower_k = Vec::new();
+            self.lower_q = Vec::new();
             self.bound_k = 0;
             self.active = false;
         }
     }
 
-    /// Materialise the per-point vectors plus the `(m, k)` Elkan lower
-    /// bounds (first Elkan use).
+    /// Materialise the per-point vectors plus the `(m, k)` quantised Elkan
+    /// lower bounds (first Elkan use).
     fn ensure_allocated_elkan(&mut self, k: usize) {
         if self.labels.len() != self.m {
             self.labels = vec![0u32; self.m];
             self.upper = vec![0f64; self.m];
             self.x_sq = vec![0f32; self.m];
         }
-        if self.bound_k != k || self.lower_k.len() != self.m * k {
-            self.lower_k = vec![0f64; self.m * k];
+        if self.bound_k != k || self.lower_q.len() != self.m * k {
+            self.lower_q = vec![0u16; self.m * k];
             self.bound_k = k;
             self.active = false; // bounds for a different k are meaningless
         }
@@ -231,14 +258,23 @@ impl LloydState {
         if max1 == 0.0 {
             return; // nothing moved — bounds stay exact
         }
-        if self.bound_k == k && !self.lower_k.is_empty() {
-            // Elkan: every centroid relaxes its own lower-bound column.
+        if self.bound_k == k && !self.lower_q.is_empty() {
+            // Elkan: every centroid relaxes its own lower-bound column, in
+            // whole quanta rounded *up* so the dequantised bound shrinks by
+            // at least the true drift (admissible). `as u16` saturates, and
+            // `saturating_sub` floors at zero, so extreme drifts merely
+            // collapse the bound.
+            let scale = self.q_scale;
+            let mut dq = vec![0u16; k];
+            for (q, dj) in dq.iter_mut().zip(&drift) {
+                *q = (dj / scale).ceil() as u16;
+            }
             for i in 0..self.labels.len() {
                 let l = self.labels[i] as usize;
                 self.upper[i] += drift[l];
-                let row = &mut self.lower_k[i * k..(i + 1) * k];
-                for (lb, dj) in row.iter_mut().zip(&drift) {
-                    *lb = (*lb - dj).max(0.0);
+                let row = &mut self.lower_q[i * k..(i + 1) * k];
+                for (lb, q) in row.iter_mut().zip(&dq) {
+                    *lb = lb.saturating_sub(*q);
                 }
             }
         } else {
@@ -261,12 +297,12 @@ struct StateSlice<'a> {
     x_sq: &'a mut [f32],
 }
 
-/// The Elkan analogue of [`StateSlice`]: `lower_k` windows `rows·k`
-/// per-centroid lower bounds.
+/// The Elkan analogue of [`StateSlice`]: `lower_q` windows `rows·k`
+/// quantised per-centroid lower bounds.
 struct ElkanSlice<'a> {
     labels: &'a mut [u32],
     upper: &'a mut [f64],
-    lower_k: &'a mut [f64],
+    lower_q: &'a mut [u16],
     x_sq: &'a mut [f32],
 }
 
@@ -694,10 +730,35 @@ struct ElkanGeometry {
     cc_lo: Vec<f64>,
     /// `s_lo[l]` ≤ `0.5 · min_{j≠l} d(c_l, c_j)`.
     s_lo: Vec<f64>,
+    /// Distance per lower-bound quantum for this step (copied from the
+    /// state, so every worker stores and dequantises identically).
+    q_scale: f64,
+}
+
+/// Distance represented by one `u16` lower-bound quantum: sized so the
+/// largest distance a run can plausibly produce (`2·max‖x‖ + max‖c‖`,
+/// padded by one) spans the 16-bit range. Computed serially and
+/// deterministically once per bound lifetime — the parallel path derives
+/// the identical scale, so rescan behaviour matches the serial path
+/// exactly. Larger distances merely saturate the stored bound downward,
+/// which is admissible.
+fn quant_scale(points: &[f32], n: usize, c_sq: &[f32]) -> f64 {
+    let max_x_sq = points.chunks_exact(n.max(1)).map(sq_norm).fold(0f32, f32::max) as f64;
+    let max_c_sq = c_sq.iter().cloned().fold(0f32, f32::max) as f64;
+    (2.0 * max_x_sq.sqrt() + max_c_sq.sqrt() + 1.0) / (u16::MAX as f64)
+}
+
+/// Quantise a lower bound (distance domain). Truncation rounds toward
+/// zero and the `as` cast saturates at both ends (NaN → 0), so the
+/// dequantised value never exceeds `d`: quantisation can only *weaken* a
+/// lower bound, never overstate it.
+#[inline]
+fn quantize_lb(d: f64, scale: f64) -> u16 {
+    (d / scale) as u16
 }
 
 impl ElkanEngine {
-    fn geometry(&self, centroids: &[f32], k: usize, n: usize) -> ElkanGeometry {
+    fn geometry(&self, centroids: &[f32], k: usize, n: usize, q_scale: f64) -> ElkanGeometry {
         let deflate = 1.0 - self.margin;
         let mut cc_lo = vec![0f64; k * k];
         let mut s_lo = vec![f64::INFINITY; k];
@@ -714,7 +775,7 @@ impl ElkanEngine {
         if k == 1 {
             s_lo[0] = f64::INFINITY;
         }
-        ElkanGeometry { cc_lo, s_lo }
+        ElkanGeometry { cc_lo, s_lo, q_scale }
     }
 
     /// Serial Elkan assignment over one contiguous row block (the parallel
@@ -735,8 +796,9 @@ impl ElkanEngine {
         let rows = slice.labels.len();
         debug_assert_eq!(points.len(), rows * n);
         debug_assert_eq!(centroids.len(), k * n);
-        debug_assert_eq!(slice.lower_k.len(), rows * k);
-        let ElkanSlice { labels, upper, lower_k, x_sq: x_sq_cache } = slice;
+        debug_assert_eq!(slice.lower_q.len(), rows * k);
+        let ElkanSlice { labels, upper, lower_q, x_sq: x_sq_cache } = slice;
+        let q_scale = geo.q_scale;
         let c_sq_max = c_sq.iter().cloned().fold(0f32, f32::max) as f64;
         let slack_factor = eval_slack(n);
         let mut out_labels = vec![0u32; rows];
@@ -749,7 +811,7 @@ impl ElkanEngine {
 
         for i in 0..rows {
             let x = &points[i * n..(i + 1) * n];
-            let lb_row = &mut lower_k[i * k..(i + 1) * k];
+            let lb_row = &mut lower_q[i * k..(i + 1) * k];
             let (best, best_d) = if !active {
                 // Init pass: evaluate every centroid in index order (panel
                 // arithmetic + tie-breaking), seeding all k lower bounds
@@ -761,7 +823,7 @@ impl ElkanEngine {
                 let mut bd = f32::INFINITY;
                 for (j, lb) in lb_row.iter_mut().enumerate() {
                     let d = sq_dist_decomp(x, x_sq, &centroids[j * n..(j + 1) * n], c_sq[j]);
-                    *lb = (d as f64).sqrt();
+                    *lb = quantize_lb((d as f64).sqrt(), q_scale);
                     if d < bd {
                         bd = d;
                         bj = j;
@@ -778,7 +840,7 @@ impl ElkanEngine {
                 let d_l = sq_dist_decomp(x, x_sq, &centroids[l * n..(l + 1) * n], c_sq[l]);
                 let u = (d_l as f64).sqrt();
                 upper[i] = u;
-                lb_row[l] = u;
+                lb_row[l] = quantize_lb(u, q_scale);
                 let thr = u * (1.0 + self.margin);
                 let slack = (x_sq as f64 + c_sq_max) * slack_factor;
                 let thr2s = thr * thr + slack;
@@ -817,7 +879,7 @@ impl ElkanEngine {
                             }
                             continue;
                         }
-                        let lb = lb_row[j];
+                        let lb = lb_row[j] as f64 * q_scale;
                         if lb > 0.0 && thr2s <= lb * lb {
                             pruned += 1;
                             continue;
@@ -829,7 +891,7 @@ impl ElkanEngine {
                         }
                         let d = sq_dist_decomp(x, x_sq, &centroids[j * n..(j + 1) * n], c_sq[j]);
                         evals += 1;
-                        lb_row[j] = (d as f64).sqrt();
+                        lb_row[j] = quantize_lb((d as f64).sqrt(), q_scale);
                         if d < bd {
                             bd = d;
                             bj = j;
@@ -880,12 +942,17 @@ impl KernelEngine for ElkanEngine {
         assert!(k > 0, "k must be positive");
         state.ensure_allocated_elkan(k);
         let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
-        let geo = self.geometry(centroids, k, n);
+        if !state.active {
+            // New bound lifetime: fix the quantum before any bound is
+            // stored.
+            state.q_scale = quant_scale(points, n, &c_sq);
+        }
+        let geo = self.geometry(centroids, k, n, state.q_scale);
         let active = state.active;
         let slice = ElkanSlice {
             labels: &mut state.labels[..],
             upper: &mut state.upper[..],
-            lower_k: &mut state.lower_k[..],
+            lower_q: &mut state.lower_q[..],
             x_sq: &mut state.x_sq[..],
         };
         let out = self.elkan_block(points, centroids, n, k, &c_sq, &geo, slice, active, counters);
@@ -914,13 +981,18 @@ impl KernelEngine for ElkanEngine {
         };
         state.ensure_allocated_elkan(k);
         let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
-        let geo = self.geometry(centroids, k, n);
+        if !state.active {
+            // Same serial, deterministic pre-scan as the serial path, so
+            // both derive the identical quantum.
+            state.q_scale = quant_scale(points, n, &c_sq);
+        }
+        let geo = self.geometry(centroids, k, n, state.q_scale);
         let active = state.active;
         let mut views: Vec<(usize, ElkanSlice<'_>)> = Vec::with_capacity(jobs.len());
         {
             let mut lab_rest: &mut [u32] = &mut state.labels;
             let mut up_rest: &mut [f64] = &mut state.upper;
-            let mut lo_rest: &mut [f64] = &mut state.lower_k;
+            let mut lo_rest: &mut [u16] = &mut state.lower_q;
             let mut xs_rest: &mut [f32] = &mut state.x_sq;
             for &(start, end) in &jobs {
                 let rows = end - start;
@@ -932,7 +1004,7 @@ impl KernelEngine for ElkanEngine {
                 up_rest = up_tail;
                 lo_rest = lo_tail;
                 xs_rest = xs_tail;
-                views.push((start, ElkanSlice { labels: lab, upper: up, lower_k: lo, x_sq: xs }));
+                views.push((start, ElkanSlice { labels: lab, upper: up, lower_q: lo, x_sq: xs }));
             }
         }
         let mut partials: Vec<Option<(usize, AssignOut, Counters)>> =
@@ -977,6 +1049,112 @@ impl KernelEngine for ElkanEngine {
             counters.merge(&local);
         }
         AssignOut { labels, mins, sums, counts, objective }
+    }
+}
+
+/// Rescan-adaptive Hamerly→Elkan composition.
+///
+/// Every chunk starts on the Hamerly path ([`BoundedEngine`]): two bounds
+/// per point, `O(m)` state, ideal while most points prune. Hamerly's
+/// accounting makes the observed rescan rate exact — a step over an
+/// active state spends one evaluation per pruned point and `k + 1` per
+/// rescan, so `rescans = (evals − m) / k`. Once a step rescans more than
+/// `switch_threshold · m` points, the chunk's [`LloydState`] flips
+/// permanently to the Elkan path ([`ElkanEngine`]), whose per-centroid
+/// bounds keep pruning where Hamerly's single lower bound has collapsed.
+/// Both constituent engines are panel-exact, so the switch never changes
+/// a label — it only moves work between pruning strategies. Switches are
+/// counted in [`Counters::hybrid_switches`].
+pub struct HybridEngine {
+    bounded: BoundedEngine,
+    elkan: ElkanEngine,
+    /// Rescanned fraction of the chunk above which the state switches.
+    pub switch_threshold: f64,
+}
+
+impl Default for HybridEngine {
+    fn default() -> Self {
+        HybridEngine {
+            bounded: BoundedEngine::default(),
+            elkan: ElkanEngine::default(),
+            switch_threshold: 0.25,
+        }
+    }
+}
+
+impl HybridEngine {
+    /// Decide from one step's counters whether the chunk should switch.
+    /// Init passes (`!was_active`) are excluded — their `m·k` evaluations
+    /// say nothing about steady-state rescan behaviour.
+    fn should_switch(&self, was_active: bool, step: &Counters, m: usize, k: usize) -> bool {
+        if !was_active || k < 2 || m == 0 {
+            return false;
+        }
+        let rescans = step.distance_evals.saturating_sub(m as u64) / k as u64;
+        (rescans as f64) > self.switch_threshold * (m as f64)
+    }
+}
+
+impl KernelEngine for HybridEngine {
+    fn kind(&self) -> KernelEngineKind {
+        KernelEngineKind::Hybrid
+    }
+
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn assign_step(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        if state.hybrid_elkan {
+            return self.elkan.assign_step(points, centroids, m, n, k, state, counters);
+        }
+        let was_active = state.active;
+        let mut cnt = Counters::new();
+        let out = self.bounded.assign_step(points, centroids, m, n, k, state, &mut cnt);
+        if self.should_switch(was_active, &cnt, m, k) {
+            state.hybrid_elkan = true;
+            cnt.hybrid_switches += 1;
+        }
+        counters.merge(&cnt);
+        out
+    }
+
+    fn assign_step_parallel(
+        &self,
+        pool: &ThreadPool,
+        points: &[f32],
+        centroids: &[f32],
+        m: usize,
+        n: usize,
+        k: usize,
+        state: &mut LloydState,
+        counters: &mut Counters,
+    ) -> AssignOut {
+        if state.hybrid_elkan {
+            let elkan = &self.elkan;
+            return elkan.assign_step_parallel(pool, points, centroids, m, n, k, state, counters);
+        }
+        let was_active = state.active;
+        let mut cnt = Counters::new();
+        let bounded = &self.bounded;
+        let out = bounded.assign_step_parallel(pool, points, centroids, m, n, k, state, &mut cnt);
+        // The per-worker counters are summed before the decision, so the
+        // switch step is identical to the serial path's.
+        if self.should_switch(was_active, &cnt, m, k) {
+            state.hybrid_elkan = true;
+            cnt.hybrid_switches += 1;
+        }
+        counters.merge(&cnt);
+        out
     }
 }
 
@@ -1124,12 +1302,18 @@ mod tests {
         assert_eq!(KernelEngineKind::parse("panel"), Some(KernelEngineKind::Panel));
         assert_eq!(KernelEngineKind::parse("bounded"), Some(KernelEngineKind::Bounded));
         assert_eq!(KernelEngineKind::parse("elkan"), Some(KernelEngineKind::Elkan));
+        assert_eq!(KernelEngineKind::parse("hybrid"), Some(KernelEngineKind::Hybrid));
         assert_eq!(KernelEngineKind::parse("warp"), None);
         assert_eq!(KernelEngineKind::Panel.build().name(), "panel");
         assert_eq!(KernelEngineKind::Bounded.build().kind(), KernelEngineKind::Bounded);
         assert_eq!(KernelEngineKind::Elkan.build().name(), "elkan");
-        for kind in [KernelEngineKind::Panel, KernelEngineKind::Bounded, KernelEngineKind::Elkan]
-        {
+        assert_eq!(KernelEngineKind::Hybrid.build().name(), "hybrid");
+        for kind in [
+            KernelEngineKind::Panel,
+            KernelEngineKind::Bounded,
+            KernelEngineKind::Elkan,
+            KernelEngineKind::Hybrid,
+        ] {
             assert_eq!(KernelEngineKind::parse(kind.name()), Some(kind));
         }
     }
@@ -1234,6 +1418,66 @@ mod tests {
             update_centroids(&a.sums, &a.counts, &mut c, k, n);
             shared.apply_update(&old, &c, k, n);
         }
+    }
+
+    #[test]
+    fn hybrid_matches_panel_and_takes_the_switch() {
+        // Uniform random data keeps Hamerly rescanning, so with a zero
+        // threshold the hybrid engine must take the Elkan switch — while
+        // staying bit-identical to the panel engine at every step, before
+        // and after.
+        let (m, n, k) = (300, 4, 8);
+        let (pts, cs) = random_problem(7, m, n, k);
+        let hybrid = HybridEngine { switch_threshold: 0.0, ..HybridEngine::default() };
+        let panel = PanelEngine;
+        let mut c = cs.clone();
+        let mut st_h = LloydState::new(m);
+        let mut st_p = LloydState::new(m);
+        let mut cnt_h = Counters::new();
+        let mut cnt_p = Counters::new();
+        let mut old = vec![0f32; k * n];
+        for step in 0..6 {
+            let a = hybrid.assign_step(&pts, &c, m, n, k, &mut st_h, &mut cnt_h);
+            let b = panel.assign_step(&pts, &c, m, n, k, &mut st_p, &mut cnt_p);
+            assert_eq!(a.labels, b.labels, "step {step}");
+            assert_eq!(a.mins, b.mins, "step {step}");
+            assert_eq!(a.counts, b.counts, "step {step}");
+            old.copy_from_slice(&c);
+            update_centroids(&a.sums, &a.counts, &mut c, k, n);
+            st_h.apply_update(&old, &c, k, n);
+        }
+        assert_eq!(cnt_h.hybrid_switches, 1, "expected exactly one Hamerly→Elkan switch");
+        assert!(st_h.hybrid_elkan, "state should have latched the Elkan path");
+    }
+
+    #[test]
+    fn parallel_hybrid_matches_serial_hybrid() {
+        let (m, n, k) = (2048, 4, 5);
+        let (pts, cs) = random_problem(3, m, n, k);
+        let pool = ThreadPool::new(4);
+        let engine = HybridEngine::default();
+        let mut c = cs.clone();
+        let mut st_s = LloydState::new(m);
+        let mut st_p = LloydState::new(m);
+        let mut cnt_s = Counters::new();
+        let mut cnt_p = Counters::new();
+        let mut old = vec![0f32; k * n];
+        for _ in 0..4 {
+            let a = engine.assign_step(&pts, &c, m, n, k, &mut st_s, &mut cnt_s);
+            let b = engine.assign_step_parallel(&pool, &pts, &c, m, n, k, &mut st_p, &mut cnt_p);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.mins, b.mins);
+            assert_eq!(a.counts, b.counts);
+            old.copy_from_slice(&c);
+            update_centroids(&a.sums, &a.counts, &mut c, k, n);
+            st_s.apply_update(&old, &c, k, n);
+            st_p.apply_update(&old, &c, k, n);
+        }
+        // Summed step counters drive the switch, so serial and parallel
+        // must make the same decision at the same step.
+        assert_eq!(cnt_s.distance_evals, cnt_p.distance_evals);
+        assert_eq!(cnt_s.pruned_evals, cnt_p.pruned_evals);
+        assert_eq!(cnt_s.hybrid_switches, cnt_p.hybrid_switches);
     }
 
     #[test]

@@ -2,6 +2,44 @@
 //! artifacts implement (assignment, reduction, Lloyd, K-means++,
 //! objective), for arbitrary shapes and for the baseline algorithms.
 //! Cross-checked against the HLO path in `tests/integration_runtime.rs`.
+//!
+//! # Roofline: the SIMD dispatch table
+//!
+//! Every byte the system touches — sampling shots, Lloyd iterations, the
+//! canonical final pass, served `assign` batches — funnels through the
+//! distance primitives, so their throughput sets the whole pipeline's
+//! ceiling. [`distance`] keeps the auto-vectorized scalar tiles as the
+//! reference implementation and dispatches at runtime to the explicit
+//! backends in [`simd`]:
+//!
+//! | ISA      | arch    | selection                               |
+//! |----------|---------|-----------------------------------------|
+//! | `scalar` | any     | always available (the reference)        |
+//! | `avx2`   | x86_64  | `is_x86_feature_detected!("avx2")`      |
+//! | `neon`   | aarch64 | architecture baseline                   |
+//!
+//! Selection order: CLI `--isa` ([`simd::set_isa`]) > `BIGMEANS_ISA` env >
+//! auto-detect, resolved once and cached in an atomic.
+//!
+//! **Reduction-order contract.** All backends are bit-identical to the
+//! scalar path: 16 independent f32 lane accumulators filled in chunk
+//! order, combined by a pairwise tree (width 8 → 4 → 2 → 1), with a
+//! separately-accumulated scalar tail added last — and *no* fused
+//! multiply-add anywhere, because the scalar reference is uncontracted.
+//! This is what lets the ISA be swapped mid-process (bench A/B rows, the
+//! `--isa` test matrix) without perturbing a single label: the gating
+//! sweep in `tests/property_engines.rs` bit-compares every backend.
+//!
+//! **Quantisation slack model.** The Elkan engine's `O(m·k)` lower-bound
+//! matrix is stored as `u16` quanta of a per-activation scale
+//! (`LloydState`), cutting bound-state traffic 4× vs `f64`. Rounding is
+//! one-sided: stores truncate toward zero and saturate downward, drift
+//! relaxation subtracts `ceil(drift/scale)` quanta, so a dequantised
+//! bound never exceeds the true distance. Quantisation therefore only
+//! *weakens* bounds — each quantised bound forgoes at most one scale-step
+//! of pruning power (the slack), buying extra rescans but never a wrong
+//! label; labels and objectives stay bit-identical to the exact-bound
+//! engines.
 
 pub mod assign;
 pub mod distance;
@@ -9,6 +47,7 @@ pub mod engine;
 pub mod kmeanspp;
 pub mod lloyd;
 pub mod objective;
+pub mod simd;
 pub mod update;
 
 pub use assign::{
@@ -16,9 +55,11 @@ pub use assign::{
     panel_assign_into, AssignOut,
 };
 pub use engine::{
-    BoundedEngine, ElkanEngine, KernelEngine, KernelEngineKind, LloydState, PanelEngine,
+    BoundedEngine, ElkanEngine, HybridEngine, KernelEngine, KernelEngineKind, LloydState,
+    PanelEngine,
 };
 pub use kmeanspp::{kmeanspp, reseed_degenerate, reseed_degenerate_random};
 pub use lloyd::{lloyd, lloyd_with_engine, LloydParams, LloydResult};
 pub use objective::{objective, objective_parallel};
+pub use simd::{active_isa, detect as detect_isa, set_isa, DistanceIsa};
 pub use update::{degenerate_indices, update_centroids};

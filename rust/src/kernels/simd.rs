@@ -1,0 +1,595 @@
+//! Runtime-dispatched SIMD backends for the distance primitives.
+//!
+//! The scalar `[f32; LANES]` tiles in [`super::distance`] rely on LLVM's
+//! auto-vectorizer; this module provides hand-written `std::arch`
+//! equivalents (AVX2 on x86_64, NEON on aarch64) selected **once at
+//! startup** behind a [`DistanceIsa`] dispatch table. The contract that
+//! makes runtime dispatch safe to hot-swap anywhere — mid-run, per bench
+//! row, per test — is *bit-identicality*: every backend performs the exact
+//! same f32 operations in the exact same order as the scalar reference
+//! (see the roofline section in [`super`]), so the choice of ISA is
+//! observable only in wall-clock time, never in labels or objectives.
+//!
+//! Two rules keep that true:
+//!
+//! * **No fused multiply-add.** Rust never contracts `a * b + c` in the
+//!   scalar path, so `_mm256_fmadd_ps` / `vfmaq_f32` would change the
+//!   rounding. All backends use separate multiply and add.
+//! * **Same reduction tree.** The scalar kernels keep `LANES = 16`
+//!   independent accumulators combined by a pairwise tree
+//!   (`width = 8, 4, 2, 1`) plus a separately-accumulated scalar tail.
+//!   The SIMD kernels hold the same 16 lanes in registers (2×8 on AVX2,
+//!   4×4 on NEON) and reduce them with the same tree, then add the same
+//!   scalar tail last.
+//!
+//! Selection order: explicit [`set_isa`] (CLI `--isa`) > the
+//! `BIGMEANS_ISA` environment variable > [`detect`]. The gating sweep in
+//! `tests/property_engines.rs` bit-compares every backend against scalar.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which SIMD backend the distance primitives dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistanceIsa {
+    /// The auto-vectorized scalar tiles in `kernels::distance` (always
+    /// available; the reference for bit-identicality).
+    Scalar = 1,
+    /// Hand-written AVX2 kernels (x86_64, runtime-detected).
+    Avx2 = 2,
+    /// Hand-written NEON kernels (aarch64 baseline).
+    Neon = 3,
+}
+
+impl DistanceIsa {
+    /// Canonical token (CLI/JSON labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            DistanceIsa::Scalar => "scalar",
+            DistanceIsa::Avx2 => "avx2",
+            DistanceIsa::Neon => "neon",
+        }
+    }
+
+    /// Parse a CLI/env token (`scalar` / `avx2` / `neon`). `auto` is not a
+    /// concrete ISA — callers map it to [`detect`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(DistanceIsa::Scalar),
+            "avx2" => Some(DistanceIsa::Avx2),
+            "neon" => Some(DistanceIsa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Whether this backend can run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            DistanceIsa::Scalar => true,
+            DistanceIsa::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            DistanceIsa::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// Best backend available on this host.
+#[allow(unreachable_code)]
+pub fn detect() -> DistanceIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return DistanceIsa::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return DistanceIsa::Neon;
+    }
+    DistanceIsa::Scalar
+}
+
+/// 0 = uninitialised; otherwise a `DistanceIsa` discriminant. Relaxed
+/// ordering is enough: every backend is bit-identical, so a racing reader
+/// seeing the old value computes the same result.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// The backend the distance primitives currently dispatch to. Initialises
+/// lazily on first use: `BIGMEANS_ISA` (`auto`/`scalar`/`avx2`/`neon`) if
+/// set and available, else [`detect`].
+#[inline]
+pub fn active_isa() -> DistanceIsa {
+    match ACTIVE.load(Ordering::Relaxed) {
+        1 => DistanceIsa::Scalar,
+        2 => DistanceIsa::Avx2,
+        3 => DistanceIsa::Neon,
+        _ => init_isa(),
+    }
+}
+
+#[cold]
+fn init_isa() -> DistanceIsa {
+    let isa = match std::env::var("BIGMEANS_ISA") {
+        Ok(v) => DistanceIsa::parse(v.trim()).filter(|i| i.available()).unwrap_or_else(detect),
+        Err(_) => detect(),
+    };
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    isa
+}
+
+/// Pin the dispatch to one backend (CLI `--isa`, bench A/B rows, the
+/// SIMD ≡ scalar property sweep). Fails if the host cannot run it.
+pub fn set_isa(isa: DistanceIsa) -> Result<(), String> {
+    if !isa.available() {
+        return Err(format!("isa `{}` is not available on this host", isa.name()));
+    }
+    ACTIVE.store(isa as u8, Ordering::Relaxed);
+    Ok(())
+}
+
+/// AVX2 kernels. Every function mirrors its scalar counterpart in
+/// `kernels::distance` operation for operation; see the module docs for
+/// the reduction-order contract.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Must match `distance::LANES` — the tile the reduction tree spans.
+    const LANES: usize = 16;
+
+    /// Reduce 16 lanes held as two 8-lane registers (`lo` = lanes 0–7,
+    /// `hi` = lanes 8–15) with the scalar pairwise tree:
+    /// width-8 (`lo + hi`), width-4, width-2, width-1.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce16(lo: __m256, hi: __m256) -> f32 {
+        let v = _mm256_add_ps(lo, hi);
+        let w = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        let x = _mm_add_ps(w, _mm_movehl_ps(w, w));
+        _mm_cvtss_f32(_mm_add_ss(x, _mm_movehdup_ps(x)))
+    }
+
+    /// Direct squared Euclidean distance; bit-identical to
+    /// `distance::sq_dist`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut lo = _mm256_setzero_ps();
+        let mut hi = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let j = i * LANES;
+            let (a0, a1) = (_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(ap.add(j + 8)));
+            let (b0, b1) = (_mm256_loadu_ps(bp.add(j)), _mm256_loadu_ps(bp.add(j + 8)));
+            let d0 = _mm256_sub_ps(a0, b0);
+            let d1 = _mm256_sub_ps(a1, b1);
+            // mul + add, never fmadd — the scalar path is uncontracted.
+            lo = _mm256_add_ps(lo, _mm256_mul_ps(d0, d0));
+            hi = _mm256_add_ps(hi, _mm256_mul_ps(d1, d1));
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..n {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        reduce16(lo, hi) + tail
+    }
+
+    /// Dot product; bit-identical to `distance::dot`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available on the running CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut lo = _mm256_setzero_ps();
+        let mut hi = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let j = i * LANES;
+            let (a0, a1) = (_mm256_loadu_ps(ap.add(j)), _mm256_loadu_ps(ap.add(j + 8)));
+            let (b0, b1) = (_mm256_loadu_ps(bp.add(j)), _mm256_loadu_ps(bp.add(j + 8)));
+            lo = _mm256_add_ps(lo, _mm256_mul_ps(a0, b0));
+            hi = _mm256_add_ps(hi, _mm256_mul_ps(a1, b1));
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..n {
+            tail += a[j] * b[j];
+        }
+        reduce16(lo, hi) + tail
+    }
+
+    /// Four simultaneous dot products against a shared left vector;
+    /// bit-identical to `distance::dot4_scalar`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available on the running CPU.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4(
+        x: &[f32],
+        c0: &[f32],
+        c1: &[f32],
+        c2: &[f32],
+        c3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = x.len();
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        let chunks = n / LANES;
+        let xp = x.as_ptr();
+        let (p0, p1, p2, p3) = (c0.as_ptr(), c1.as_ptr(), c2.as_ptr(), c3.as_ptr());
+        let mut lo0 = _mm256_setzero_ps();
+        let mut hi0 = _mm256_setzero_ps();
+        let mut lo1 = _mm256_setzero_ps();
+        let mut hi1 = _mm256_setzero_ps();
+        let mut lo2 = _mm256_setzero_ps();
+        let mut hi2 = _mm256_setzero_ps();
+        let mut lo3 = _mm256_setzero_ps();
+        let mut hi3 = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let j = i * LANES;
+            let xlo = _mm256_loadu_ps(xp.add(j));
+            let xhi = _mm256_loadu_ps(xp.add(j + 8));
+            lo0 = _mm256_add_ps(lo0, _mm256_mul_ps(xlo, _mm256_loadu_ps(p0.add(j))));
+            hi0 = _mm256_add_ps(hi0, _mm256_mul_ps(xhi, _mm256_loadu_ps(p0.add(j + 8))));
+            lo1 = _mm256_add_ps(lo1, _mm256_mul_ps(xlo, _mm256_loadu_ps(p1.add(j))));
+            hi1 = _mm256_add_ps(hi1, _mm256_mul_ps(xhi, _mm256_loadu_ps(p1.add(j + 8))));
+            lo2 = _mm256_add_ps(lo2, _mm256_mul_ps(xlo, _mm256_loadu_ps(p2.add(j))));
+            hi2 = _mm256_add_ps(hi2, _mm256_mul_ps(xhi, _mm256_loadu_ps(p2.add(j + 8))));
+            lo3 = _mm256_add_ps(lo3, _mm256_mul_ps(xlo, _mm256_loadu_ps(p3.add(j))));
+            hi3 = _mm256_add_ps(hi3, _mm256_mul_ps(xhi, _mm256_loadu_ps(p3.add(j + 8))));
+        }
+        let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0, 0.0, 0.0);
+        for j in chunks * LANES..n {
+            t0 += x[j] * c0[j];
+            t1 += x[j] * c1[j];
+            t2 += x[j] * c2[j];
+            t3 += x[j] * c3[j];
+        }
+        (
+            reduce16(lo0, hi0) + t0,
+            reduce16(lo1, hi1) + t1,
+            reduce16(lo2, hi2) + t2,
+            reduce16(lo3, hi3) + t3,
+        )
+    }
+
+    /// Fused distance panel + per-row argmin; the whole loop is compiled
+    /// with AVX2 enabled so [`dot4`]/[`dot`] inline into it. Bit-identical
+    /// to `distance::sq_dist_panel_argmin` (same decomposition arithmetic,
+    /// same strict-`<` lowest-index tie-breaking).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2 is available on the running CPU.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sq_dist_panel_argmin(
+        points: &[f32],
+        x_sq: &[f32],
+        centroids: &[f32],
+        c_sq: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        labels: &mut [u32],
+        mins: &mut [f32],
+    ) {
+        debug_assert_eq!(points.len(), rows * n);
+        debug_assert_eq!(centroids.len(), k * n);
+        debug_assert_eq!(labels.len(), rows);
+        debug_assert_eq!(mins.len(), rows);
+        debug_assert!(k > 0);
+        let k4 = k / 4 * 4;
+        for i in 0..rows {
+            let x = &points[i * n..(i + 1) * n];
+            let mut best = 0u32;
+            let mut best_d = f32::INFINITY;
+            let mut j = 0;
+            while j < k4 {
+                let c0 = &centroids[j * n..(j + 1) * n];
+                let c1 = &centroids[(j + 1) * n..(j + 2) * n];
+                let c2 = &centroids[(j + 2) * n..(j + 3) * n];
+                let c3 = &centroids[(j + 3) * n..(j + 4) * n];
+                let (p0, p1, p2, p3) = dot4(x, c0, c1, c2, c3);
+                let d0 = (x_sq[i] + c_sq[j] - 2.0 * p0).max(0.0);
+                let d1 = (x_sq[i] + c_sq[j + 1] - 2.0 * p1).max(0.0);
+                let d2 = (x_sq[i] + c_sq[j + 2] - 2.0 * p2).max(0.0);
+                let d3 = (x_sq[i] + c_sq[j + 3] - 2.0 * p3).max(0.0);
+                if d0 < best_d {
+                    best_d = d0;
+                    best = j as u32;
+                }
+                if d1 < best_d {
+                    best_d = d1;
+                    best = (j + 1) as u32;
+                }
+                if d2 < best_d {
+                    best_d = d2;
+                    best = (j + 2) as u32;
+                }
+                if d3 < best_d {
+                    best_d = d3;
+                    best = (j + 3) as u32;
+                }
+                j += 4;
+            }
+            while j < k {
+                let c = &centroids[j * n..(j + 1) * n];
+                let d = (x_sq[i] + c_sq[j] - 2.0 * dot(x, c)).max(0.0);
+                if d < best_d {
+                    best_d = d;
+                    best = j as u32;
+                }
+                j += 1;
+            }
+            labels[i] = best;
+            mins[i] = best_d;
+        }
+    }
+}
+
+/// NEON kernels (aarch64 baseline — no runtime detection needed). Same
+/// reduction-order contract as the AVX2 module: 16 lanes as four 4-lane
+/// registers, pairwise tree, scalar tail last, no fused multiply-add.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use core::arch::aarch64::*;
+
+    /// Must match `distance::LANES`.
+    const LANES: usize = 16;
+
+    /// Reduce 16 lanes held as four 4-lane registers (`a0` = lanes 0–3 …
+    /// `a3` = lanes 12–15) with the scalar pairwise tree.
+    #[inline]
+    unsafe fn reduce16(a0: float32x4_t, a1: float32x4_t, a2: float32x4_t, a3: float32x4_t) -> f32 {
+        // width-8: lanes l += l+8.
+        let v0 = vaddq_f32(a0, a2);
+        let v1 = vaddq_f32(a1, a3);
+        // width-4.
+        let w = vaddq_f32(v0, v1);
+        // width-2.
+        let x = vadd_f32(vget_low_f32(w), vget_high_f32(w));
+        // width-1.
+        vget_lane_f32::<0>(x) + vget_lane_f32::<1>(x)
+    }
+
+    /// Direct squared Euclidean distance; bit-identical to
+    /// `distance::sq_dist`.
+    ///
+    /// # Safety
+    /// Dereferences raw slice pointers; the slices must be equal-length
+    /// (checked in debug builds).
+    pub unsafe fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        for i in 0..chunks {
+            let j = i * LANES;
+            let d0 = vsubq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j)));
+            let d1 = vsubq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4)));
+            let d2 = vsubq_f32(vld1q_f32(ap.add(j + 8)), vld1q_f32(bp.add(j + 8)));
+            let d3 = vsubq_f32(vld1q_f32(ap.add(j + 12)), vld1q_f32(bp.add(j + 12)));
+            a0 = vaddq_f32(a0, vmulq_f32(d0, d0));
+            a1 = vaddq_f32(a1, vmulq_f32(d1, d1));
+            a2 = vaddq_f32(a2, vmulq_f32(d2, d2));
+            a3 = vaddq_f32(a3, vmulq_f32(d3, d3));
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..n {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        reduce16(a0, a1, a2, a3) + tail
+    }
+
+    /// Dot product; bit-identical to `distance::dot`.
+    ///
+    /// # Safety
+    /// Dereferences raw slice pointers; the slices must be equal-length
+    /// (checked in debug builds).
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut a0 = vdupq_n_f32(0.0);
+        let mut a1 = vdupq_n_f32(0.0);
+        let mut a2 = vdupq_n_f32(0.0);
+        let mut a3 = vdupq_n_f32(0.0);
+        for i in 0..chunks {
+            let j = i * LANES;
+            a0 = vaddq_f32(a0, vmulq_f32(vld1q_f32(ap.add(j)), vld1q_f32(bp.add(j))));
+            a1 = vaddq_f32(a1, vmulq_f32(vld1q_f32(ap.add(j + 4)), vld1q_f32(bp.add(j + 4))));
+            a2 = vaddq_f32(a2, vmulq_f32(vld1q_f32(ap.add(j + 8)), vld1q_f32(bp.add(j + 8))));
+            a3 = vaddq_f32(a3, vmulq_f32(vld1q_f32(ap.add(j + 12)), vld1q_f32(bp.add(j + 12))));
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..n {
+            tail += a[j] * b[j];
+        }
+        reduce16(a0, a1, a2, a3) + tail
+    }
+
+    /// Four simultaneous dot products against a shared left vector;
+    /// bit-identical to `distance::dot4_scalar`.
+    ///
+    /// # Safety
+    /// Dereferences raw slice pointers; all five slices must be
+    /// equal-length (checked in debug builds).
+    #[inline]
+    pub unsafe fn dot4(
+        x: &[f32],
+        c0: &[f32],
+        c1: &[f32],
+        c2: &[f32],
+        c3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = x.len();
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        // Four outputs × four lane groups would need 16 live accumulators;
+        // run the shared-x dot per centroid instead — x reloads stay in L1.
+        (dot(x, c0), dot(x, c1), dot(x, c2), dot(x, c3))
+    }
+
+    /// Fused distance panel + per-row argmin; bit-identical to
+    /// `distance::sq_dist_panel_argmin`.
+    ///
+    /// # Safety
+    /// Dereferences raw slice pointers; shapes must satisfy the debug
+    /// assertions.
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn sq_dist_panel_argmin(
+        points: &[f32],
+        x_sq: &[f32],
+        centroids: &[f32],
+        c_sq: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        labels: &mut [u32],
+        mins: &mut [f32],
+    ) {
+        debug_assert_eq!(points.len(), rows * n);
+        debug_assert_eq!(centroids.len(), k * n);
+        debug_assert_eq!(labels.len(), rows);
+        debug_assert_eq!(mins.len(), rows);
+        debug_assert!(k > 0);
+        let k4 = k / 4 * 4;
+        for i in 0..rows {
+            let x = &points[i * n..(i + 1) * n];
+            let mut best = 0u32;
+            let mut best_d = f32::INFINITY;
+            let mut j = 0;
+            while j < k4 {
+                let c0 = &centroids[j * n..(j + 1) * n];
+                let c1 = &centroids[(j + 1) * n..(j + 2) * n];
+                let c2 = &centroids[(j + 2) * n..(j + 3) * n];
+                let c3 = &centroids[(j + 3) * n..(j + 4) * n];
+                let (p0, p1, p2, p3) = dot4(x, c0, c1, c2, c3);
+                let d0 = (x_sq[i] + c_sq[j] - 2.0 * p0).max(0.0);
+                let d1 = (x_sq[i] + c_sq[j + 1] - 2.0 * p1).max(0.0);
+                let d2 = (x_sq[i] + c_sq[j + 2] - 2.0 * p2).max(0.0);
+                let d3 = (x_sq[i] + c_sq[j + 3] - 2.0 * p3).max(0.0);
+                if d0 < best_d {
+                    best_d = d0;
+                    best = j as u32;
+                }
+                if d1 < best_d {
+                    best_d = d1;
+                    best = (j + 1) as u32;
+                }
+                if d2 < best_d {
+                    best_d = d2;
+                    best = (j + 2) as u32;
+                }
+                if d3 < best_d {
+                    best_d = d3;
+                    best = (j + 3) as u32;
+                }
+                j += 4;
+            }
+            while j < k {
+                let c = &centroids[j * n..(j + 1) * n];
+                let d = (x_sq[i] + c_sq[j] - 2.0 * dot(x, c)).max(0.0);
+                if d < best_d {
+                    best_d = d;
+                    best = j as u32;
+                }
+                j += 1;
+            }
+            labels[i] = best;
+            mins[i] = best_d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip_and_scalar_always_available() {
+        for isa in [DistanceIsa::Scalar, DistanceIsa::Avx2, DistanceIsa::Neon] {
+            assert_eq!(DistanceIsa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(DistanceIsa::parse("auto"), None);
+        assert_eq!(DistanceIsa::parse("sse9"), None);
+        assert!(DistanceIsa::Scalar.available());
+        assert!(detect().available());
+        // The detected ISA must be settable; scalar always is.
+        assert!(set_isa(detect()).is_ok());
+        assert!(set_isa(DistanceIsa::Scalar).is_ok());
+        assert_eq!(active_isa(), DistanceIsa::Scalar);
+        assert!(set_isa(detect()).is_ok());
+    }
+
+    #[test]
+    fn unavailable_isa_is_rejected() {
+        // At most one of these is the host arch; the other must refuse.
+        let foreign =
+            if cfg!(target_arch = "aarch64") { DistanceIsa::Avx2 } else { DistanceIsa::Neon };
+        assert!(set_isa(foreign).is_err());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_bit_match_scalar() {
+        use crate::kernels::distance;
+        if !DistanceIsa::Avx2.available() {
+            return; // nothing to compare on this host
+        }
+        let mut state = 0x1234_5678_9ABC_DEFu64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) * 16.0 - 8.0
+        };
+        for n in [1usize, 3, 7, 8, 15, 16, 17, 31, 32, 33, 48, 100] {
+            let a: Vec<f32> = (0..n).map(|_| next()).collect();
+            let b: Vec<f32> = (0..n).map(|_| next()).collect();
+            let c: Vec<f32> = (0..n).map(|_| next()).collect();
+            let d: Vec<f32> = (0..n).map(|_| next()).collect();
+            let e: Vec<f32> = (0..n).map(|_| next()).collect();
+            unsafe {
+                assert_eq!(
+                    avx2::sq_dist(&a, &b).to_bits(),
+                    distance::sq_dist_scalar(&a, &b).to_bits(),
+                    "sq_dist n={n}"
+                );
+                assert_eq!(
+                    avx2::dot(&a, &b).to_bits(),
+                    distance::dot_scalar(&a, &b).to_bits(),
+                    "dot n={n}"
+                );
+                let simd4 = avx2::dot4(&a, &b, &c, &d, &e);
+                let ref4 = distance::dot4_scalar(&a, &b, &c, &d, &e);
+                assert_eq!(simd4.0.to_bits(), ref4.0.to_bits(), "dot4.0 n={n}");
+                assert_eq!(simd4.1.to_bits(), ref4.1.to_bits(), "dot4.1 n={n}");
+                assert_eq!(simd4.2.to_bits(), ref4.2.to_bits(), "dot4.2 n={n}");
+                assert_eq!(simd4.3.to_bits(), ref4.3.to_bits(), "dot4.3 n={n}");
+            }
+        }
+    }
+}

@@ -28,6 +28,7 @@ use bigmeans::coordinator::config::{
 };
 use bigmeans::coordinator::{produce_from_source, ChunkQueue, DriftAction, StreamingBigMeans};
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
+use bigmeans::kernels::{active_isa, detect_isa, set_isa, DistanceIsa};
 use bigmeans::runtime;
 use bigmeans::serve::{spawn_watcher, Client, ModelArtifact, ModelRegistry, ServeOptions, Server};
 use bigmeans::store::copy_to_store;
@@ -48,7 +49,8 @@ SUBCOMMANDS:
       --s N             chunk size (default 4096)
       --time SECS       cpu_max budget (default 3)
       --chunks N        max chunks (default unlimited)
-      --engine E        panel | bounded | elkan | pjrt (default panel)
+      --engine E        panel | bounded | elkan | hybrid | pjrt
+                        (default panel)
                         panel   = exact blocked-panel kernels (fused
                                   distance panel + argmin)
                         bounded = Hamerly triangle-inequality pruning:
@@ -59,7 +61,16 @@ SUBCOMMANDS:
                                   bounds + the inter-centroid-distance
                                   test; label-identical, prunes harder
                                   than bounded at O(m·k) bound memory
+                        hybrid  = rescan-adaptive: each chunk starts on
+                                  the Hamerly path and switches to Elkan
+                                  once the observed rescan rate trips the
+                                  threshold; label-identical to panel
                         'native' is accepted as an alias for panel
+      --isa I           auto | scalar | avx2 | neon (default auto):
+                        distance-kernel SIMD backend. Every choice is
+                        bit-identical; ISAs the host lacks are rejected.
+                        (BIGMEANS_ISA env is the fallback when the flag
+                        is absent)
       --mode M          inner | chunks | seq | tune | stream | serve
                         (default inner)
                         tune   = competitive portfolio tuner: bandit-
@@ -137,6 +148,8 @@ SUBCOMMANDS:
       --addr A          listen address (default 127.0.0.1:7171; port 0
                         picks an ephemeral port, printed on stderr)
       --threads N       batch-sharding workers (default: machine)
+      --isa I           auto | scalar | avx2 | neon (default auto):
+                        distance-kernel SIMD backend (bit-identical)
       --max-batch N     largest accepted rows per request (default 2^20)
       --watch           poll the .bmm file and hot-swap refreshed models
                         without dropping in-flight requests
@@ -229,6 +242,17 @@ fn load_source(
         .map_err(|e| e.to_string())
 }
 
+/// Resolve `--isa` (auto | scalar | avx2 | neon) and pin the
+/// distance-kernel backend before any kernel runs. `auto` re-runs
+/// detection explicitly so a stale `BIGMEANS_ISA` env value cannot leak
+/// into an `--isa auto` run; a named ISA the host lacks is an error.
+fn apply_isa_flag(args: &Args) -> Result<(), String> {
+    match DistanceIsa::parse(args.choice("isa", &["auto", "scalar", "avx2", "neon"])?) {
+        Some(isa) => set_isa(isa),
+        None => set_isa(detect_isa()),
+    }
+}
+
 /// `num` that degrades NaN/∞ to JSON null (NaN is not valid JSON).
 fn fnum(x: f64) -> Json {
     if x.is_finite() {
@@ -260,6 +284,7 @@ fn run_summary_json(
         ("k", num(k as f64)),
         ("chunk_size", num(chunk_size as f64)),
         ("engine", jstr(engine)),
+        ("isa", jstr(active_isa().name())),
         ("mode", jstr(mode)),
         ("objective", fnum(r.objective)),
         ("best_chunk_objective", fnum(r.best_chunk_objective)),
@@ -268,6 +293,7 @@ fn run_summary_json(
         ("distance_evals", num(r.counters.distance_evals as f64)),
         ("pruned_evals", num(r.counters.pruned_evals as f64)),
         ("pruned_blocks", num(r.counters.pruned_blocks as f64)),
+        ("hybrid_switches", num(r.counters.hybrid_switches as f64)),
         ("chunk_iterations", num(r.counters.chunk_iterations as f64)),
         ("full_iterations", num(r.counters.full_iterations as f64)),
         ("cpu_init_secs", num(r.cpu_init_secs)),
@@ -309,7 +335,9 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         "random" => ReinitStrategy::Random,
         other => return Err(format!("bad --reinit '{other}'")),
     };
-    let engine_arg = args.choice("engine", &["panel", "native", "bounded", "elkan", "pjrt"])?;
+    let engine_arg =
+        args.choice("engine", &["panel", "native", "bounded", "elkan", "hybrid", "pjrt"])?;
+    apply_isa_flag(args)?;
     let engine = if engine_arg == "pjrt" { Engine::Pjrt } else { Engine::Native };
     // `KernelEngineKind::parse` is the source of truth for kernel tokens;
     // "native" (compat alias) and "pjrt" fall back to the panel kernel.
@@ -335,6 +363,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         data.m(),
         data.n(),
     );
+    eprintln!("distance kernels: isa={}", active_isa().name());
     match mode_arg {
         // The tune/stream paths drive native solvers directly; erroring
         // beats silently relabelling a PJRT request as native numbers.
@@ -603,12 +632,14 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err(format!("serve needs a .bmm model artifact, got '{model_path}'"));
     }
     let path = PathBuf::from(model_path);
+    apply_isa_flag(args)?;
     let artifact = ModelArtifact::load(&path).map_err(|e| e.to_string())?;
     let identity = (artifact.generation, artifact.payload_crc());
     eprintln!(
         "serving {model_path}: k={}, n={}, publisher generation {}, objective {:.6e}",
         artifact.k, artifact.n, artifact.generation, artifact.objective
     );
+    eprintln!("distance kernels: isa={}", active_isa().name());
     let registry = ModelRegistry::new(artifact);
     let opts = ServeOptions {
         threads: args.usize("threads", 0)?,

@@ -28,6 +28,9 @@ pub struct Counters {
     pub chunk_iterations: u64,
     /// Chunks processed (`n_s`).
     pub chunks: u64,
+    /// Hamerly→Elkan switches taken by the hybrid kernel engine (one per
+    /// chunk state at most — the switch is one-way).
+    pub hybrid_switches: u64,
 }
 
 impl Counters {
@@ -53,6 +56,7 @@ impl Counters {
         self.full_iterations += other.full_iterations;
         self.chunk_iterations += other.chunk_iterations;
         self.chunks += other.chunks;
+        self.hybrid_switches += other.hybrid_switches;
     }
 }
 

@@ -151,6 +151,7 @@ impl ServeStats {
             ("requests", json::num(requests as f64)),
             ("rows", json::num(rows as f64)),
             ("errors", json::num(errors as f64)),
+            ("isa", json::s(crate::kernels::active_isa().name())),
             ("qps", json::num(requests as f64 / uptime)),
             ("mean_batch_rows", json::num(mean_batch)),
             ("p50_ms", json::num(self.hist.percentile_secs(0.50) * 1e3)),

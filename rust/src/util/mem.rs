@@ -60,6 +60,30 @@ pub fn madvise(ptr: *mut u8, len: usize, advice: Advice) {
     }
 }
 
+/// Best-effort prefetch of the cache line containing `p` into L1 with
+/// read intent. Purely a scheduling hint: prefetch instructions never
+/// fault, so any address value is fine — callers still keep `p` inside
+/// (or one-past) a live allocation via `wrapping_add` + clamping so the
+/// *pointer arithmetic* stays defined. Compiles to a no-op on
+/// architectures without a prefetch hint.
+#[inline(always)]
+pub fn prefetch_read(p: *const u8) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: `prefetcht0` is baseline SSE on x86_64 and never faults.
+    unsafe {
+        use core::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<{ _MM_HINT_T0 }>(p as *const i8);
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: `prfm pldl1keep` is a hint; it never faults and writes
+    // nothing.
+    unsafe {
+        core::arch::asm!("prfm pldl1keep, [{0}]", in(reg) p, options(nostack, preserves_flags));
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = p;
+}
+
 #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
 mod map_sys {
     //! Raw `mmap` FFI — the process links libc anyway, so no crate needed.

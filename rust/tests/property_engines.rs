@@ -1,9 +1,11 @@
-//! Engine equivalence: the Hamerly-bounded and Elkan kernel engines must
-//! be *exact* drop-ins for the blocked-panel engine — identical labels,
-//! counts, and centroid trajectories, objectives within fp slack — while
-//! performing strictly fewer distance evaluations on clustered data. All
-//! engines share the decomposition arithmetic, so the comparisons here
-//! can be tight.
+//! Engine equivalence: the Hamerly-bounded, Elkan (u16-quantised
+//! bounds), and rescan-adaptive hybrid kernel engines must be *exact*
+//! drop-ins for the blocked-panel engine — identical labels, counts, and
+//! centroid trajectories, objectives within fp slack — while performing
+//! strictly fewer distance evaluations on clustered data. All engines
+//! share the decomposition arithmetic, so the comparisons here can be
+//! tight. The dispatched-SIMD sweep at the bottom additionally gates the
+//! bit-identity of every runtime ISA backend against scalar.
 
 use bigmeans::coordinator::config::{
     BigMeansConfig, KernelEngineKind, ParallelMode, StopCondition,
@@ -11,9 +13,9 @@ use bigmeans::coordinator::config::{
 use bigmeans::data::bmx::{save_bmx, BmxSource};
 use bigmeans::data::synth::Synth;
 use bigmeans::kernels::engine::{
-    BoundedEngine, ElkanEngine, KernelEngine, LloydState, PanelEngine,
+    BoundedEngine, ElkanEngine, HybridEngine, KernelEngine, LloydState, PanelEngine,
 };
-use bigmeans::kernels::{self, LloydParams};
+use bigmeans::kernels::{self, detect_isa, set_isa, DistanceIsa, LloydParams};
 use bigmeans::metrics::Counters;
 use bigmeans::util::prop::{check, ClusterProblem, ClusterProblemGen};
 use bigmeans::util::rng::Rng;
@@ -36,7 +38,9 @@ fn prop_pruning_engines_lloyd_identical_to_panel_serial() {
     // trajectory, and (within 1e-6 relative) objective.
     let bounded = BoundedEngine::default();
     let elkan = ElkanEngine::default();
-    let engines: [(&str, &dyn KernelEngine); 2] = [("bounded", &bounded), ("elkan", &elkan)];
+    let hybrid = HybridEngine::default();
+    let engines: [(&str, &dyn KernelEngine); 3] =
+        [("bounded", &bounded), ("elkan", &elkan), ("hybrid", &hybrid)];
     for (name, engine) in engines {
         check(41, 60, &ClusterProblemGen::default(), |p| {
             let mut rng = Rng::new(101);
@@ -151,7 +155,8 @@ fn prop_pruning_engines_step_labels_identical_each_iteration() {
     // engines.
     let bounded = BoundedEngine::default();
     let elkan = ElkanEngine::default();
-    let engines: [&dyn KernelEngine; 2] = [&bounded, &elkan];
+    let hybrid = HybridEngine::default();
+    let engines: [&dyn KernelEngine; 3] = [&bounded, &elkan, &hybrid];
     for engine in engines {
         check(43, 40, &ClusterProblemGen::default(), |p| {
             let mut rng = Rng::new(107);
@@ -229,6 +234,140 @@ fn prop_elkan_parallel_step_identical_to_serial() {
     });
 }
 
+#[test]
+fn prop_quantised_elkan_exact_labels_under_coarse_quanta() {
+    // Wide coordinate ranges force coarse u16 quanta for the Elkan
+    // lower-bound matrix. The rounding contract (floor on store, ceil on
+    // drift relaxation) may only ever weaken a bound, so labels, mins,
+    // and the centroid trajectory must still match the exact panel
+    // engine at every step — only the pruning rate is allowed to suffer.
+    let gen = ClusterProblemGen {
+        m_range: (20, 1500),
+        n_range: (1, 12),
+        k_max: 8,
+        coord_range: (-5000.0, 5000.0),
+    };
+    let panel = PanelEngine;
+    let elkan = ElkanEngine::default();
+    check(47, 40, &gen, |p| {
+        let mut rng = Rng::new(131);
+        let c0 = seed_centroids(p, &mut rng);
+        let mut c_a = c0.clone();
+        let mut c_b = c0;
+        let mut st_a = LloydState::new(p.m);
+        let mut st_b = LloydState::new(p.m);
+        let mut cnt_a = Counters::new();
+        let mut cnt_b = Counters::new();
+        let mut old = vec![0f32; p.k * p.n];
+        for _ in 0..5 {
+            let a = panel.assign_step(&p.points, &c_a, p.m, p.n, p.k, &mut st_a, &mut cnt_a);
+            let b = elkan.assign_step(&p.points, &c_b, p.m, p.n, p.k, &mut st_b, &mut cnt_b);
+            if a.labels != b.labels || a.mins != b.mins || a.counts != b.counts {
+                return false;
+            }
+            old.copy_from_slice(&c_a);
+            kernels::update_centroids(&a.sums, &a.counts, &mut c_a, p.k, p.n);
+            st_a.apply_update(&old, &c_a, p.k, p.n);
+            old.copy_from_slice(&c_b);
+            kernels::update_centroids(&b.sums, &b.counts, &mut c_b, p.k, p.n);
+            st_b.apply_update(&old, &c_b, p.k, p.n);
+            if c_a != c_b {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_hybrid_parallel_step_identical_to_serial() {
+    // Pool-parallel hybrid assignment must match the serial hybrid path
+    // point-for-point — including taking the Hamerly→Elkan switch on the
+    // same step, because the decision reads per-step counters that are
+    // summed across workers before the rescan rate is computed.
+    let gen = ClusterProblemGen {
+        m_range: (1, 3000), // crosses the 2·BLOCK_ROWS parallel threshold
+        n_range: (1, 10),
+        k_max: 6,
+        coord_range: (-60.0, 60.0),
+    };
+    let pool = ThreadPool::new(3);
+    check(48, 30, &gen, |p| {
+        let mut rng = Rng::new(137);
+        let mut c = seed_centroids(p, &mut rng);
+        let mut old = vec![0f32; p.k * p.n];
+        let mut st_s = LloydState::new(p.m);
+        let mut st_p = LloydState::new(p.m);
+        let mut cnt_s = Counters::new();
+        let mut cnt_p = Counters::new();
+        let engine = HybridEngine::default();
+        for _ in 0..4 {
+            let a = engine.assign_step(&p.points, &c, p.m, p.n, p.k, &mut st_s, &mut cnt_s);
+            let b = engine.assign_step_parallel(
+                &pool, &p.points, &c, p.m, p.n, p.k, &mut st_p, &mut cnt_p,
+            );
+            if a.labels != b.labels
+                || a.mins != b.mins
+                || a.counts != b.counts
+                || (a.objective - b.objective).abs() > 1e-6 * a.objective.abs() + 1e-9
+            {
+                return false;
+            }
+            old.copy_from_slice(&c);
+            kernels::update_centroids(&a.sums, &a.counts, &mut c, p.k, p.n);
+            st_s.apply_update(&old, &c, p.k, p.n);
+            st_p.apply_update(&old, &c, p.k, p.n);
+        }
+        cnt_s.distance_evals == cnt_p.distance_evals
+            && cnt_s.pruned_evals == cnt_p.pruned_evals
+            && cnt_s.hybrid_switches == cnt_p.hybrid_switches
+    });
+}
+
+#[test]
+fn prop_dispatched_simd_bit_identical_to_scalar() {
+    // Gating roofline contract: the runtime-dispatched SIMD kernels must
+    // reproduce the scalar lane-tiled reduction bit-for-bit — identical
+    // labels, mins, sums, and objective bits — across random shapes, on
+    // both the serial and the pooled panel paths. This is the only test
+    // in this binary that toggles the process-wide ISA; every other test
+    // is ISA-agnostic precisely because of this equivalence.
+    let gen = ClusterProblemGen {
+        m_range: (1, 3000),
+        n_range: (1, 24),
+        k_max: 8,
+        coord_range: (-60.0, 60.0),
+    };
+    let pool = ThreadPool::new(3);
+    let best = detect_isa();
+    check(46, 30, &gen, |p| {
+        let mut rng = Rng::new(127);
+        let c = seed_centroids(p, &mut rng);
+        let panel = PanelEngine;
+        let run = |isa| {
+            set_isa(isa).expect("selected isa must be available");
+            let mut st_s = LloydState::new(p.m);
+            let mut st_p = LloydState::new(p.m);
+            let mut cnt = Counters::new();
+            let a = panel.assign_step(&p.points, &c, p.m, p.n, p.k, &mut st_s, &mut cnt);
+            let b = panel.assign_step_parallel(
+                &pool, &p.points, &c, p.m, p.n, p.k, &mut st_p, &mut cnt,
+            );
+            (a, b)
+        };
+        let (s_ser, s_par) = run(DistanceIsa::Scalar);
+        let (v_ser, v_par) = run(best);
+        s_ser.labels == v_ser.labels
+            && s_ser.mins == v_ser.mins
+            && s_ser.sums == v_ser.sums
+            && s_ser.objective.to_bits() == v_ser.objective.to_bits()
+            && s_par.labels == v_par.labels
+            && s_par.mins == v_par.mins
+            && s_par.sums == v_par.sums
+            && s_par.objective.to_bits() == v_par.objective.to_bits()
+    });
+}
+
 fn blobs(m: usize, n: usize, k_true: usize, seed: u64) -> Dataset {
     Synth::GaussianMixture {
         m,
@@ -255,7 +394,7 @@ fn pruning_pipelines_match_panel_and_prune_on_blobs() {
     };
     let panel = BigMeans::new(cfg(KernelEngineKind::Panel)).run(&data).unwrap();
     assert_eq!(panel.counters.pruned_evals, 0, "panel must never prune");
-    for kind in [KernelEngineKind::Bounded, KernelEngineKind::Elkan] {
+    for kind in [KernelEngineKind::Bounded, KernelEngineKind::Elkan, KernelEngineKind::Hybrid] {
         let pruned = BigMeans::new(cfg(kind)).run(&data).unwrap();
         assert!(
             (panel.objective - pruned.objective).abs() <= 1e-6 * panel.objective.abs(),
