@@ -48,6 +48,7 @@ use std::time::Instant;
 
 use bigmeans::coordinator::config::{ParallelMode, StopCondition};
 use bigmeans::data::dataset::Dataset;
+use bigmeans::data::source::DataSource;
 use bigmeans::kernels::assign::{AssignOut, BLOCK_ROWS};
 use bigmeans::kernels::distance::{sq_dist_panel, sq_norm};
 use bigmeans::kernels::engine::{
@@ -56,7 +57,7 @@ use bigmeans::kernels::engine::{
 use bigmeans::kernels::update_centroids;
 use bigmeans::kernels::{active_isa, detect_isa, set_isa, DistanceIsa};
 use bigmeans::metrics::Counters;
-use bigmeans::data::source::DataSource;
+use bigmeans::obs;
 use bigmeans::store::{copy_to_store, BlockStore, Codec, Dtype, StoreOptions};
 use bigmeans::tuner::{self, ArmSpec, TunerConfig};
 use bigmeans::util::cli::Args;
@@ -141,6 +142,7 @@ fn time_engine(
     let mut objective = 0f64;
     let t0 = Instant::now();
     for _ in 0..iters {
+        let _span = obs::tracer().span("bench.iter", "assign_step");
         let out = engine.assign_step(pts, &c, m, n, k, &mut state, &mut counters);
         objective = out.objective;
         old.copy_from_slice(&c);
@@ -188,6 +190,8 @@ fn case_json(c: &Case) -> Json {
         ("secs", num(c.secs)),
         ("distance_evals", num(c.counters.distance_evals as f64)),
         ("pruned_evals", num(c.counters.pruned_evals as f64)),
+        ("pruned_blocks", num(c.counters.pruned_blocks as f64)),
+        ("hybrid_switches", num(c.counters.hybrid_switches as f64)),
         ("objective", num(c.objective)),
     ])
 }
@@ -507,6 +511,7 @@ fn final_suite(args: &Args) -> Result<(), String> {
         ("final_speedup", num(speedup)),
         ("decode_scan_secs", num(decode_secs)),
         ("pruned_evals", num(r_pruned.counters.pruned_evals as f64)),
+        ("hybrid_switches", num(r_pruned.counters.hybrid_switches as f64)),
         ("distance_evals_pruned", num(r_pruned.counters.distance_evals as f64)),
         ("distance_evals_unpruned", num(r_plain.counters.distance_evals as f64)),
         ("objective", num(r_pruned.objective)),
@@ -726,8 +731,11 @@ fn main() {
                 eprint!("{name:<20} ");
                 let c = time_engine(&name, engine, data, m, n, k, iters);
                 eprintln!(
-                    "{:>8.3}s  n_d {:.3e}  pruned {:.3e}",
-                    c.secs, c.counters.distance_evals as f64, c.counters.pruned_evals as f64
+                    "{:>8.3}s  n_d {:.3e}  pruned {:.3e}  switches {}",
+                    c.secs,
+                    c.counters.distance_evals as f64,
+                    c.counters.pruned_evals as f64,
+                    c.counters.hybrid_switches
                 );
                 cases.push(c);
             }
@@ -755,6 +763,26 @@ fn main() {
             );
             cases.push(c);
         }
+
+        // Observability A/B: the same panel/uniform loop with metrics and
+        // (unsinked) tracing enabled. Observers are a branch on a relaxed
+        // atomic when off and buffer-only when on, so the delta must stay
+        // within run-to-run noise.
+        let obs_off =
+            cases.iter().find(|c| c.name == "panel_uniform").map(|c| c.secs).unwrap_or(0.0);
+        obs::metrics().enable();
+        obs::tracer().enable_unsinked();
+        let name = "panel_uniform_obs";
+        eprint!("{name:<20} ");
+        let c = time_engine(name, &panel, &uniform, m, n, k, iters);
+        obs::tracer().disable_and_clear();
+        obs::metrics().disable();
+        let obs_ratio = c.secs / obs_off.max(1e-12);
+        eprintln!(
+            "{:>8.3}s  n_d {:.3e}  (metrics + tracing on; {obs_ratio:.3}× vs disabled)",
+            c.secs, c.counters.distance_evals as f64
+        );
+        cases.push(c);
 
         let find = |name: &str| cases.iter().find(|c| c.name == name).unwrap();
         let bounded_blobs = find("bounded_blobs");
@@ -784,6 +812,7 @@ fn main() {
             ("elkan_blobs_eval_reduction", num(elkan_ratio)),
             ("fused_vs_reference_uniform_speedup", num(fused_speedup)),
             ("simd_vs_scalar_uniform_speedup", num(simd_speedup)),
+            ("obs_enabled_vs_disabled_ratio", num(obs_ratio)),
         ]);
         std::fs::write(&out_path, doc.to_string() + "\n")
             .map_err(|e| format!("write {out_path}: {e}"))?;

@@ -25,6 +25,7 @@ use crate::kernels::assign::PREFETCH_ROWS_AHEAD;
 use crate::kernels::distance::{sq_dist_decomp, sq_norm};
 use crate::kernels::{self, update::degenerate_indices};
 use crate::metrics::{Counters, PhaseTimer};
+use crate::obs;
 use crate::store::prune::{self, PrunePlan};
 use crate::util::mem;
 use crate::util::rng::Rng;
@@ -415,6 +416,8 @@ pub(crate) fn canonical_final_pass(
     if m == 0 {
         return (Vec::new(), 0.0);
     }
+    let tracer = obs::tracer();
+    let _pass_span = tracer.span("final.pass", "canonical_final_pass");
     let c_sq: Vec<f32> = (0..k).map(|j| sq_norm(&centroids[j * n..(j + 1) * n])).collect();
     let plan = data
         .block_summaries()
@@ -475,6 +478,7 @@ pub(crate) fn canonical_final_pass(
             data.read_rows(0, &mut cur[..buf_rows * n]);
             let mut labels_rest: &mut [u32] = &mut labels;
             for s in 0..nslabs {
+                let _slab_span = tracer.span("final.slab", "slab");
                 let start = s * slab_rows;
                 let rows = slab_rows.min(m - start);
                 let (lab_slab, lab_tail) = labels_rest.split_at_mut(rows);
@@ -541,6 +545,31 @@ pub(crate) fn canonical_final_pass(
     counters.add_pruned_evals(owned_rows * (k as u64 - 1));
     if let Some(plan) = &plan {
         counters.pruned_blocks += plan.owned_blocks() as u64;
+    }
+    let metrics = obs::metrics();
+    if metrics.enabled() {
+        let eng = [("engine", "final"), ("isa", kernels::active_isa().name())];
+        metrics
+            .counter(
+                "bigmeans_distance_evals_total",
+                "Exact point-to-centroid distance evaluations (paper n_d)",
+                &eng,
+            )
+            .add(contested_rows * k as u64 + owned_rows);
+        metrics
+            .counter(
+                "bigmeans_pruned_evals_total",
+                "Distance evaluations avoided by bound-based pruning",
+                &eng,
+            )
+            .add(owned_rows * (k as u64 - 1));
+        metrics
+            .counter(
+                "bigmeans_pruned_blocks_total",
+                "Blocks skipped whole by bounding-box pruning in the final pass",
+                &[],
+            )
+            .add(plan.as_ref().map(|p| p.owned_blocks() as u64).unwrap_or(0));
     }
     (labels, objective)
 }

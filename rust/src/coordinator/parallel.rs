@@ -40,6 +40,7 @@ use crate::coordinator::stop::StopState;
 use crate::data::source::{AccessPattern, DataSource};
 use crate::kernels::update::degenerate_indices;
 use crate::metrics::{Counters, PhaseTimer};
+use crate::obs;
 use crate::util::rng::Rng;
 
 /// Worker-progress monitor: chunk totals plus worker liveness under one
@@ -113,6 +114,55 @@ pub struct ShotExecutor<'a> {
     chunk_rows: usize,
     solver: NativeSolver,
     sampler: ChunkSampler,
+    obs: ShotObs,
+}
+
+/// Registry handles cached per executor, labeled by engine and ISA. All
+/// recording is delta-based off the worker's own [`Counters`], so the
+/// metrics are pure observers of work that would happen identically
+/// without them.
+struct ShotObs {
+    distance_evals: obs::Counter,
+    pruned_evals: obs::Counter,
+    chunks: obs::Counter,
+    hybrid_switches: obs::Counter,
+    shot_duration: obs::Histogram,
+}
+
+impl ShotObs {
+    fn new(kernel: crate::kernels::KernelEngineKind) -> ShotObs {
+        let m = obs::metrics();
+        let engine = kernel.name();
+        let isa = crate::kernels::active_isa().name();
+        let eng = [("engine", engine), ("isa", isa)];
+        ShotObs {
+            distance_evals: m.counter(
+                "bigmeans_distance_evals_total",
+                "Exact point-to-centroid distance evaluations (paper n_d)",
+                &eng,
+            ),
+            pruned_evals: m.counter(
+                "bigmeans_pruned_evals_total",
+                "Distance evaluations avoided by bound-based pruning",
+                &eng,
+            ),
+            chunks: m.counter(
+                "bigmeans_chunks_total",
+                "Chunks processed by shots (paper n_s)",
+                &[("engine", engine)],
+            ),
+            hybrid_switches: m.counter(
+                "bigmeans_hybrid_switches_total",
+                "Hybrid engine switches between Elkan and rescan strategies",
+                &[("engine", engine)],
+            ),
+            shot_duration: m.histogram(
+                "bigmeans_shot_duration_seconds",
+                "Wall time of one Big-means shot (sample, reseed, local search)",
+                &[("engine", engine)],
+            ),
+        }
+    }
 }
 
 impl<'a> ShotExecutor<'a> {
@@ -135,6 +185,7 @@ impl<'a> ShotExecutor<'a> {
             chunk_rows: rows,
             solver: NativeSolver::sequential_with_kernel(cfg.lloyd, kernel),
             sampler: ChunkSampler::new(rows, data.n()),
+            obs: ShotObs::new(kernel),
         }
     }
 
@@ -153,34 +204,63 @@ impl<'a> ShotExecutor<'a> {
         counters: &mut Counters,
         scorer: Option<&ShotScorer>,
     ) -> ShotReport {
+        let tracer = obs::tracer();
+        // One branch when everything is off: no clock reads, no deltas.
+        let t0 = (tracer.enabled() || obs::metrics().enabled()).then(Instant::now);
+        let base_evals = counters.distance_evals;
+        let base_pruned = counters.pruned_evals;
+        let base_switches = counters.hybrid_switches;
+        let _shot_span = tracer.span("shot", "run_shot");
         let (n, k) = (self.data.n(), self.cfg.k);
         let snap = incumbent.snapshot();
-        let (chunk, rows) = self.sampler.sample(self.data, rng);
+        let (chunk, rows) = {
+            let _span = tracer.span("shot.sample", "sample");
+            self.sampler.sample(self.data, rng)
+        };
         let mut seed_c = snap.centroids.clone();
-        reseed(
-            self.cfg,
-            chunk,
-            rows,
-            n,
-            k,
-            &mut seed_c,
-            &snap.degenerate,
-            rng,
-            counters,
-        );
-        let result = self.solver.lloyd(chunk, rows, n, k, &seed_c, counters);
+        {
+            let _span = tracer.span("shot.reseed", "reseed");
+            reseed(
+                self.cfg,
+                chunk,
+                rows,
+                n,
+                k,
+                &mut seed_c,
+                &snap.degenerate,
+                rng,
+                counters,
+            );
+        }
+        let result = {
+            let _span = tracer.span("shot.lloyd", "lloyd");
+            self.solver.lloyd(chunk, rows, n, k, &seed_c, counters)
+        };
         counters.chunk_iterations += result.iters as u64;
         counters.chunks += 1;
         let degenerate = degenerate_indices(&result.counts);
         let offered = match scorer {
-            Some(score) => score(&result.centroids, &degenerate, counters),
+            Some(score) => {
+                let _span = tracer.span("shot.score", "score");
+                score(&result.centroids, &degenerate, counters)
+            }
             None => result.objective,
         };
-        let accepted = incumbent.offer(Solution {
-            degenerate,
-            centroids: result.centroids,
-            objective: offered,
-        });
+        let accepted = {
+            let _span = tracer.span("shot.offer", "offer");
+            incumbent.offer(Solution {
+                degenerate,
+                centroids: result.centroids,
+                objective: offered,
+            })
+        };
+        if let Some(t0) = t0 {
+            self.obs.shot_duration.observe(t0.elapsed());
+            self.obs.distance_evals.add(counters.distance_evals - base_evals);
+            self.obs.pruned_evals.add(counters.pruned_evals - base_pruned);
+            self.obs.hybrid_switches.add(counters.hybrid_switches - base_switches);
+            self.obs.chunks.inc();
+        }
         ShotReport {
             chunk_objective: result.objective,
             offered_objective: offered,

@@ -241,8 +241,9 @@ fn should_verify(hdr: &BmxHeader, path: &Path) -> bool {
     }
     let payload = hdr.need - hdr.header_len as u64;
     if payload > BMX_VERIFY_EAGER_LIMIT {
-        eprintln!(
-            "note: skipping checksum validation of {} ({payload} payload bytes \
+        crate::log_info!(
+            "data.bmx",
+            "skipping checksum validation of {} ({payload} payload bytes \
              exceeds the {BMX_VERIFY_EAGER_LIMIT}-byte eager-verify limit)",
             path.display()
         );
@@ -320,8 +321,9 @@ pub fn verify_bmx(path: &Path) -> Result<u64> {
 /// Warn (once per open) when a legacy v1 file without a checksum loads.
 fn warn_v1(hdr: &BmxHeader, path: &Path) {
     if hdr.checksum.is_none() {
-        eprintln!(
-            "warning: {} is a v1 .bmx without a payload checksum; rewrite it \
+        crate::log_warn!(
+            "data.bmx",
+            "{} is a v1 .bmx without a payload checksum; rewrite it \
              (`bigmeans convert` / `generate`) to add integrity checking",
             path.display()
         );

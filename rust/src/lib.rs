@@ -59,6 +59,7 @@ pub mod coordinator;
 pub mod data;
 pub mod kernels;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod store;

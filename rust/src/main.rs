@@ -16,7 +16,7 @@
 //!   queries from a `.bmm` model artifact, with `--watch` hot-swap
 //! * `query`    — one-shot client for a running daemon
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
@@ -29,13 +29,17 @@ use bigmeans::coordinator::config::{
 use bigmeans::coordinator::{produce_from_source, ChunkQueue, DriftAction, StreamingBigMeans};
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
 use bigmeans::kernels::{active_isa, detect_isa, set_isa, DistanceIsa};
+use bigmeans::obs;
 use bigmeans::runtime;
 use bigmeans::serve::{spawn_watcher, Client, ModelArtifact, ModelRegistry, ServeOptions, Server};
 use bigmeans::store::copy_to_store;
 use bigmeans::tuner::{self, ControllerKind, TunerConfig};
 use bigmeans::util::cli::Args;
 use bigmeans::util::json::{num, obj, s as jstr, Json};
-use bigmeans::{BigMeans, BigMeansResult, BlockStore, Codec, DataSource, Dtype, StoreOptions};
+use bigmeans::{
+    log_info, log_warn, BigMeans, BigMeansResult, BlockStore, Codec, DataSource, Dtype,
+    StoreOptions,
+};
 
 const USAGE: &str = "\
 bigmeans — scalable K-means clustering for big data (Big-means, PatRec 2022)
@@ -97,6 +101,15 @@ SUBCOMMANDS:
       --save-model P    write the winning model (centroids + geometry +
                         objective + provenance) to P as a `.bmm` artifact
                         for `bigmeans serve` (needs the final pass)
+      --trace P         write the run's span timeline (shots, final-pass
+                        slabs, block decodes, tuner pulls) to P as Chrome
+                        trace-event JSON — open in Perfetto or
+                        chrome://tracing (see docs/OBSERVABILITY.md)
+      --metrics-out P   write the run's metric registry to P as Prometheus
+                        text exposition (validate with `metrics-lint`)
+      --log-level L     error | warn | info | debug | trace (default info;
+                        BIGMEANS_LOG env is the fallback) — accepted by
+                        every subcommand
     tune mode only:
       --tuner T         ucb | softmax          (default ucb)
       --arms SPEC       grid of sample-size multipliers, each optionally
@@ -154,6 +167,9 @@ SUBCOMMANDS:
       --watch           poll the .bmm file and hot-swap refreshed models
                         without dropping in-flight requests
       --watch-ms N      watch poll cadence in ms (default 500)
+      --metrics-addr A  expose the metric registry as Prometheus text
+                        exposition over HTTP (`GET /metrics`) at A,
+                        e.g. 127.0.0.1:9091
       --json            print the serving stats document on exit
   query <host:port>   One-shot client for a running daemon
       --op O            assign | score | stats | ping | shutdown
@@ -163,6 +179,13 @@ SUBCOMMANDS:
       --rows N          assign/score: batch rows (default min(m, 1024))
       --json            machine-readable response (assign/score: labels;
                         stats already prints JSON)
+  metrics-lint <a.prom> [b.prom]   Validate Prometheus exposition files
+                      (CI's scrape gate); given a second, later scrape,
+                      also check counter monotonicity across the two
+  trace-lint <t.json> Validate a Chrome trace-event document
+      --min-cats N      require ≥ N distinct span categories (default 1)
+
+Metric families, trace schema, Grafana quickstart: docs/OBSERVABILITY.md
 ";
 
 fn main() {
@@ -189,6 +212,10 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if let Err(e) = obs::log::init(args.get("log-level")) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
     let code = match sub.as_str() {
         "cluster" => cmd_cluster(&args),
         "convert" => cmd_convert(&args),
@@ -200,6 +227,8 @@ fn main() {
         "artifacts" => cmd_artifacts(),
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
+        "metrics-lint" => cmd_metrics_lint(&args),
+        "trace-lint" => cmd_trace_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -354,16 +383,28 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     cfg.skip_final_assignment = args.flag("skip-final");
     cfg.engine = engine;
 
+    // Observability sinks. Both are pure observers: enabling them never
+    // changes labels or objectives (gated by tests/property_obs.rs).
+    let metrics_out = args.get("metrics-out").map(PathBuf::from);
+    if metrics_out.is_some() {
+        obs::metrics().enable();
+        obs::register_core(kernel.name(), active_isa().name());
+    }
+    if let Some(p) = args.get("trace") {
+        obs::tracer().enable(Path::new(p));
+    }
+
     // The config's backend choice decides how the dataset file is opened.
     let data = load_source(args, cfg.backend, cfg.index_stride)?;
 
-    eprintln!(
+    log_info!(
+        "cluster",
         "dataset '{}': m={}, n={}  |  k={k}, s={s}, engine={engine:?}/{kernel:?}, mode={mode_arg}, backend={backend:?}",
         data.name(),
         data.m(),
         data.n(),
     );
-    eprintln!("distance kernels: isa={}", active_isa().name());
+    log_info!("cluster", "distance kernels: isa={}", active_isa().name());
     match mode_arg {
         // The tune/stream paths drive native solvers directly; erroring
         // beats silently relabelling a PJRT request as native numbers.
@@ -373,8 +414,16 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
                  --engine panel or --engine bounded"
             ));
         }
-        "tune" => return run_tune(args, cfg, data),
-        "stream" => return run_stream(args, cfg, data),
+        "tune" => {
+            let run = run_tune(args, cfg, data);
+            flush_obs(metrics_out.as_deref())?;
+            return run;
+        }
+        "stream" => {
+            let run = run_stream(args, cfg, data);
+            flush_obs(metrics_out.as_deref())?;
+            return run;
+        }
         _ => {}
     }
     let bm = match engine {
@@ -414,6 +463,20 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             wall,
         );
         println!("{}", doc.to_string());
+    }
+    flush_obs(metrics_out.as_deref())
+}
+
+/// Flush the per-run observability sinks: the `--metrics-out` Prometheus
+/// exposition and the `--trace` Chrome trace document.
+fn flush_obs(metrics_out: Option<&Path>) -> Result<(), String> {
+    if let Some(path) = metrics_out {
+        std::fs::write(path, obs::metrics().render())
+            .map_err(|e| format!("write metrics {}: {e}", path.display()))?;
+        log_info!("obs", "wrote metrics exposition {}", path.display());
+    }
+    if let Some(path) = obs::tracer().flush()? {
+        log_info!("obs", "wrote trace {}", path.display());
     }
     Ok(())
 }
@@ -522,7 +585,7 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
                     ModelArtifact::new(k, n, ordinal, objective, meta, centroids.to_vec())
                         .and_then(|a| a.save(&path));
                 if let Err(e) = saved {
-                    eprintln!("publish: deferred to next improvement ({e})");
+                    log_warn!("stream.publish", "deferred to next improvement ({e})");
                 }
             }))
         }
@@ -619,7 +682,11 @@ fn save_model(
     ModelArtifact::new(k, n, 1, r.objective, meta, r.centroids.clone())
         .and_then(|a| a.save(&PathBuf::from(path)))
         .map_err(|e| e.to_string())?;
-    eprintln!("saved model artifact {path} (k={k}, n={n}, objective {:.6e})", r.objective);
+    log_info!(
+        "cluster",
+        "saved model artifact {path} (k={k}, n={n}, objective {:.6e})",
+        r.objective
+    );
     Ok(())
 }
 
@@ -633,13 +700,29 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let path = PathBuf::from(model_path);
     apply_isa_flag(args)?;
+    // Enable metrics before the model registry and server exist, so their
+    // boot-time registrations (swap gauge, per-op families) record.
+    let metrics_server = match args.get("metrics-addr") {
+        None => None,
+        Some(maddr) => {
+            obs::metrics().enable();
+            obs::register_core("serve", active_isa().name());
+            let ms = obs::MetricsServer::start(maddr, obs::metrics())?;
+            log_info!("serve", "metrics exposition on http://{}/metrics", ms.addr());
+            Some(ms)
+        }
+    };
     let artifact = ModelArtifact::load(&path).map_err(|e| e.to_string())?;
     let identity = (artifact.generation, artifact.payload_crc());
-    eprintln!(
+    log_info!(
+        "serve",
         "serving {model_path}: k={}, n={}, publisher generation {}, objective {:.6e}",
-        artifact.k, artifact.n, artifact.generation, artifact.objective
+        artifact.k,
+        artifact.n,
+        artifact.generation,
+        artifact.objective
     );
-    eprintln!("distance kernels: isa={}", active_isa().name());
+    log_info!("serve", "distance kernels: isa={}", active_isa().name());
     let registry = ModelRegistry::new(artifact);
     let opts = ServeOptions {
         threads: args.usize("threads", 0)?,
@@ -651,7 +734,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let stop = server.shutdown_handle();
     let watcher = if args.flag("watch") {
         let interval = Duration::from_millis(args.u64("watch-ms", 500)?.max(1));
-        eprintln!("watching {model_path} for hot-swaps every {}ms", interval.as_millis());
+        log_info!(
+            "serve",
+            "watching {model_path} for hot-swaps every {}ms",
+            interval.as_millis()
+        );
         Some(spawn_watcher(Arc::clone(&registry), path, interval, Arc::clone(&stop), identity))
     } else {
         None
@@ -662,8 +749,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if let Some(handle) = watcher {
         let _ = handle.join();
     }
+    if let Some(ms) = metrics_server {
+        ms.shutdown();
+    }
     run?;
-    eprintln!(
+    log_info!(
+        "serve",
         "served {} requests ({} errors) across {} hot-swaps",
         stats.requests(),
         stats.errors(),
@@ -773,6 +864,75 @@ fn cmd_query(args: &Args) -> Result<(), String> {
             println!("{}", doc.to_string());
         }
     }
+    Ok(())
+}
+
+/// `metrics-lint <a.prom> [b.prom]`: validate Prometheus text exposition
+/// (CI's scrape gate); with a second, later scrape, also check counter
+/// monotonicity across the two.
+fn cmd_metrics_lint(args: &Args) -> Result<(), String> {
+    let pos = args.positional();
+    if pos.is_empty() || pos.len() > 2 {
+        return Err("usage: metrics-lint <scrape.prom> [later-scrape.prom]".into());
+    }
+    let read = |p: &str| std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"));
+    let first = obs::lint::lint_exposition(&read(&pos[0])?)
+        .map_err(|e| format!("{}: {e}", pos[0]))?;
+    println!("{}: ok — {} families, {} samples", pos[0], first.families.len(), first.samples);
+    if let Some(later) = pos.get(1) {
+        let second = obs::lint::lint_exposition(&read(later)?)
+            .map_err(|e| format!("{later}: {e}"))?;
+        let checked = obs::lint::check_monotone(&first, &second)
+            .map_err(|e| format!("{} -> {later}: {e}", pos[0]))?;
+        println!("{later}: ok — {checked} counter series monotone across the scrapes");
+    }
+    Ok(())
+}
+
+/// `trace-lint <out.trace.json>`: validate a Chrome trace-event document
+/// (complete events with cat/name/ts/dur/pid/tid) and optionally require
+/// a minimum number of distinct span categories.
+fn cmd_trace_lint(args: &Args) -> Result<(), String> {
+    let Some(path) = args.positional().first() else {
+        return Err("usage: trace-lint <out.trace.json> [--min-cats N]".into());
+    };
+    let min_cats = args.usize("min-cats", 1)?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| format!("{path}: no traceEvents array"))?;
+    let mut cats = std::collections::BTreeSet::new();
+    for (i, ev) in events.iter().enumerate() {
+        let field = |key: &str| {
+            ev.get(key).ok_or_else(|| format!("{path}: event {i} missing '{key}'"))
+        };
+        let ph = field("ph")?.as_str().unwrap_or_default();
+        if ph != "X" {
+            return Err(format!("{path}: event {i} has ph '{ph}', expected 'X'"));
+        }
+        let cat = field("cat")?
+            .as_str()
+            .ok_or_else(|| format!("{path}: event {i} 'cat' is not a string"))?;
+        if field("name")?.as_str().is_none() {
+            return Err(format!("{path}: event {i} 'name' is not a string"));
+        }
+        for key in ["ts", "dur", "pid", "tid"] {
+            if field(key)?.as_f64().is_none() {
+                return Err(format!("{path}: event {i} '{key}' is not a number"));
+            }
+        }
+        cats.insert(cat.to_string());
+    }
+    let listed = cats.iter().cloned().collect::<Vec<_>>().join(", ");
+    if cats.len() < min_cats {
+        return Err(format!(
+            "{path}: {} distinct span categories ({listed}), need at least {min_cats}",
+            cats.len()
+        ));
+    }
+    println!("{path}: ok — {} events across {} categories ({listed})", events.len(), cats.len());
     Ok(())
 }
 

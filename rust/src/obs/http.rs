@@ -1,0 +1,171 @@
+//! Minimal HTTP/1.1 responder for `GET /metrics`.
+//!
+//! Serves Prometheus text exposition from the process registry on a
+//! dedicated listener (`serve --metrics-addr HOST:PORT`), independent of
+//! the custom TCP protocol port so scrapers never contend with assign
+//! traffic. One request per connection (`Connection: close`), headers
+//! capped at 8 KiB, anything but `GET /metrics` answered 404. Shutdown
+//! follows the serve daemon's pattern: set the stop flag, then self-
+//! connect to wake the blocking `accept`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::Registry;
+
+const MAX_HEADER_BYTES: usize = 8 * 1024;
+
+/// Handle to a running metrics listener; [`MetricsServer::shutdown`]
+/// stops it and joins the accept thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` and serve `registry.render()` on `GET /metrics` until
+    /// [`MetricsServer::shutdown`].
+    pub fn start(addr: &str, registry: &'static Registry) -> Result<MetricsServer, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("metrics: bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| format!("metrics: local_addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_for_thread = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metrics-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_for_thread.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => handle_request(stream, registry),
+                        Err(e) => {
+                            crate::log_warn!("obs.http", "accept failed: {e}");
+                        }
+                    }
+                }
+            })
+            .map_err(|e| format!("metrics: spawn listener: {e}"))?;
+        crate::log_info!("obs.http", "metrics exposition listening on http://{local}/metrics");
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful when the caller asked for port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the listener thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        if self.handle.is_some() {
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(self.addr);
+            if let Some(handle) = self.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+fn handle_request(mut stream: TcpStream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    // Read until the end of the request headers; the body (none expected
+    // for GET) is ignored.
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > MAX_HEADER_BYTES {
+                    break;
+                }
+            }
+            Err(_) => return,
+        }
+    }
+    let request_line = match std::str::from_utf8(&buf) {
+        Ok(text) => text.lines().next().unwrap_or("").to_string(),
+        Err(_) => String::new(),
+    };
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let response = if method == "GET" && (path == "/metrics" || path == "/metrics/") {
+        let body = registry.render();
+        format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    } else {
+        let body = "not found; try GET /metrics\n";
+        format!(
+            "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    };
+    let _ = stream.write_all(response.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut stream = TcpStream::connect(addr).expect("connect metrics server");
+        let req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n");
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_everything_else() {
+        // A dedicated leaked registry keeps this test independent of the
+        // process-wide one other tests may mutate.
+        let registry: &'static Registry = Box::leak(Box::new(Registry::new()));
+        registry.enable();
+        registry
+            .counter("http_test_total", "test counter", &[("op", "x")])
+            .add(3);
+        let server = MetricsServer::start("127.0.0.1:0", registry).expect("start");
+        let addr = server.addr();
+
+        let ok = http_get(addr, "/metrics");
+        assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "got: {ok}");
+        assert!(ok.contains("text/plain; version=0.0.4"));
+        assert!(ok.contains("# TYPE http_test_total counter"));
+        assert!(ok.contains("http_test_total{op=\"x\"} 3"));
+
+        let missing = http_get(addr, "/nope");
+        assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
+
+        server.shutdown();
+    }
+}

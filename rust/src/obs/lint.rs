@@ -1,0 +1,314 @@
+//! A small Prometheus text-exposition lint, used by the `metrics-lint`
+//! CLI subcommand and CI's scrape gate.
+//!
+//! Checks (per exposition):
+//! * every sample belongs to a family announced by a preceding `# TYPE`;
+//! * `# TYPE` appears at most once per family, after its `# HELP`;
+//! * a family's lines are contiguous (no family is split or repeated);
+//! * sample values parse as floats (`+Inf`/`-Inf`/`NaN` accepted);
+//! * histogram `_bucket` series are cumulative (non-decreasing in `le`
+//!   order as emitted) and agree with `_count`.
+//!
+//! [`check_monotone`] compares two scrapes: every counter series (and
+//! histogram `_bucket`/`_count`/`_sum`) present in both must not have
+//! decreased — the property Prometheus rate() relies on.
+
+use std::collections::BTreeMap;
+
+/// Parsed exposition: family name → (type token, series name+labels →
+/// value, in emission order).
+pub struct Exposition {
+    pub families: BTreeMap<String, FamilyLint>,
+    pub samples: usize,
+}
+
+pub struct FamilyLint {
+    pub kind: String,
+    /// Series in emission order: (full sample name incl. labels, value).
+    pub series: Vec<(String, f64)>,
+}
+
+/// Map a sample name to its family, folding histogram suffixes.
+fn family_of<'a>(name: &'a str, declared: &BTreeMap<String, FamilyLint>) -> &'a str {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if declared.get(base).is_some_and(|f| f.kind == "histogram") {
+                return base;
+            }
+        }
+    }
+    name
+}
+
+fn parse_value(tok: &str) -> Result<f64, String> {
+    match tok {
+        "+Inf" => Ok(f64::INFINITY),
+        "-Inf" => Ok(f64::NEG_INFINITY),
+        "NaN" => Ok(f64::NAN),
+        t => t.parse::<f64>().map_err(|_| format!("bad sample value '{t}'")),
+    }
+}
+
+/// Lint one exposition document. Returns the parsed structure so callers
+/// can run [`check_monotone`] across two scrapes.
+pub fn lint_exposition(text: &str) -> Result<Exposition, String> {
+    let mut families: BTreeMap<String, FamilyLint> = BTreeMap::new();
+    let mut helped: Vec<String> = Vec::new();
+    // Families whose sample block has ended; reappearing is an error.
+    let mut closed: Vec<String> = Vec::new();
+    let mut current: Option<String> = None;
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let err = |msg: String| format!("line {}: {msg}", lineno + 1);
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or_default().to_string();
+            if name.is_empty() {
+                return Err(err("HELP line without a metric name".into()));
+            }
+            helped.push(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (name, kind) = (
+                it.next().unwrap_or_default().to_string(),
+                it.next().unwrap_or_default().to_string(),
+            );
+            let known = ["counter", "gauge", "histogram", "summary", "untyped"];
+            if !known.contains(&kind.as_str()) {
+                return Err(err(format!("unknown TYPE '{kind}' for '{name}'")));
+            }
+            if families.contains_key(&name) {
+                return Err(err(format!("duplicate TYPE line for family '{name}'")));
+            }
+            if !helped.contains(&name) {
+                return Err(err(format!("TYPE for '{name}' without a preceding HELP")));
+            }
+            families.insert(name.clone(), FamilyLint { kind, series: Vec::new() });
+            if let Some(prev) = current.replace(name) {
+                closed.push(prev);
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        // Sample line: name[{labels}] value [timestamp]
+        let name_end = line.find(['{', ' ']).ok_or_else(|| {
+            err(format!("malformed sample line '{line}'"))
+        })?;
+        let bare_name = &line[..name_end];
+        let family = family_of(bare_name, &families).to_string();
+        if !families.contains_key(&family) {
+            return Err(err(format!(
+                "sample '{bare_name}' before its family's TYPE line"
+            )));
+        }
+        if closed.contains(&family) {
+            return Err(err(format!(
+                "family '{family}' reappears after other families' samples"
+            )));
+        }
+        if current.as_deref() != Some(&family) {
+            return Err(err(format!(
+                "sample '{bare_name}' interleaved into family '{}'",
+                current.as_deref().unwrap_or("<none>")
+            )));
+        }
+        let (series, value_part) = match line[name_end..].strip_prefix('{') {
+            Some(rest) => {
+                let close = rest.find('}').ok_or_else(|| {
+                    err(format!("unterminated label set in '{line}'"))
+                })?;
+                (&line[..name_end + 1 + close + 1], rest[close + 1..].trim())
+            }
+            None => (bare_name, line[name_end..].trim()),
+        };
+        let value_tok = value_part.split_whitespace().next().ok_or_else(|| {
+            err(format!("sample '{bare_name}' has no value"))
+        })?;
+        let value = parse_value(value_tok).map_err(err)?;
+        let fam = families.get_mut(&family).expect("family presence checked");
+        fam.series.push((series.to_string(), value));
+        samples += 1;
+    }
+    // Histogram internal consistency: buckets cumulative, +Inf == _count.
+    for (name, fam) in &families {
+        if fam.kind != "histogram" {
+            continue;
+        }
+        let mut last_bucket: Option<(String, f64)> = None;
+        let mut inf: BTreeMap<String, f64> = BTreeMap::new();
+        for (series, value) in &fam.series {
+            if let Some(rest) = series.strip_prefix(name.as_str()) {
+                if rest.starts_with("_bucket") {
+                    let base = strip_le_label(series);
+                    if let Some((prev_base, prev)) = &last_bucket {
+                        if *prev_base == base && value < prev {
+                            return Err(format!(
+                                "histogram '{name}': bucket counts not cumulative \
+                                 at {series}"
+                            ));
+                        }
+                    }
+                    if series.contains("le=\"+Inf\"") {
+                        inf.insert(base.clone(), *value);
+                    }
+                    last_bucket = Some((base, *value));
+                } else if rest.starts_with("_count") {
+                    let base = series.clone();
+                    let key = base
+                        .strip_prefix(name.as_str())
+                        .and_then(|r| r.strip_prefix("_count"))
+                        .unwrap_or("")
+                        .to_string();
+                    let inf_key = inf.keys().find(|k| le_base_matches(k, &key));
+                    if let Some(ik) = inf_key {
+                        if (inf[ik] - value).abs() > 0.0 {
+                            return Err(format!(
+                                "histogram '{name}': _count {value} disagrees with \
+                                 +Inf bucket {}",
+                                inf[ik]
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Exposition { families, samples })
+}
+
+/// The `_bucket` series identity with its `le` label removed, so
+/// cumulativity is checked within one label set.
+fn strip_le_label(series: &str) -> String {
+    let mut out = String::with_capacity(series.len());
+    let mut rest = series;
+    while let Some(pos) = rest.find("le=\"") {
+        out.push_str(&rest[..pos]);
+        let after = &rest[pos + 4..];
+        match after.find('"') {
+            Some(end) => rest = after[end + 1..].trim_start_matches(','),
+            None => return out,
+        }
+    }
+    out.push_str(rest);
+    out.replace(",}", "}").replace("{}", "")
+}
+
+fn le_base_matches(bucket_base: &str, count_labels: &str) -> bool {
+    // bucket_base is "name_bucket{labels}" sans le; count_labels is the
+    // label suffix of the _count series. Loose match: same label suffix.
+    bucket_base.ends_with(count_labels)
+        || (count_labels.is_empty() && !bucket_base.contains('{'))
+}
+
+/// Counter monotonicity across two scrapes: every counter (and histogram
+/// `_bucket`/`_count`/`_sum`) series present in both must not decrease.
+pub fn check_monotone(first: &Exposition, second: &Exposition) -> Result<usize, String> {
+    let mut checked = 0usize;
+    for (name, fam_a) in &first.families {
+        let Some(fam_b) = second.families.get(name) else { continue };
+        if fam_a.kind != "counter" && fam_a.kind != "histogram" {
+            continue;
+        }
+        let a: BTreeMap<&str, f64> =
+            fam_a.series.iter().map(|(s, v)| (s.as_str(), *v)).collect();
+        for (series, vb) in &fam_b.series {
+            if let Some(va) = a.get(series.as_str()) {
+                if vb < va {
+                    return Err(format!(
+                        "counter '{series}' went backwards: {va} -> {vb}"
+                    ));
+                }
+                checked += 1;
+            }
+        }
+    }
+    Ok(checked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# HELP a_total counts a
+# TYPE a_total counter
+a_total{op=\"x\"} 3
+a_total{op=\"y\"} 4
+# HELP h_seconds hist
+# TYPE h_seconds histogram
+h_seconds_bucket{le=\"0.001\"} 2
+h_seconds_bucket{le=\"+Inf\"} 5
+h_seconds_sum 0.25
+h_seconds_count 5
+";
+
+    #[test]
+    fn accepts_well_formed_exposition() {
+        let e = lint_exposition(GOOD).unwrap();
+        assert_eq!(e.samples, 6);
+        assert_eq!(e.families["a_total"].kind, "counter");
+        assert_eq!(e.families["h_seconds"].kind, "histogram");
+    }
+
+    #[test]
+    fn rejects_sample_before_type() {
+        let bad = "a_total 3\n";
+        assert!(lint_exposition(bad).unwrap_err().contains("TYPE"));
+    }
+
+    #[test]
+    fn rejects_duplicate_family() {
+        let bad = "\
+# HELP a_total x
+# TYPE a_total counter
+a_total 1
+# HELP a_total x
+# TYPE a_total counter
+a_total 2
+";
+        assert!(lint_exposition(bad).unwrap_err().contains("duplicate"));
+    }
+
+    #[test]
+    fn rejects_split_family() {
+        let bad = "\
+# HELP a_total x
+# TYPE a_total counter
+a_total{op=\"x\"} 1
+# HELP b_total y
+# TYPE b_total counter
+b_total 1
+a_total{op=\"y\"} 2
+";
+        assert!(lint_exposition(bad).unwrap_err().contains("reappears"));
+    }
+
+    #[test]
+    fn rejects_non_cumulative_buckets() {
+        let bad = "\
+# HELP h_seconds x
+# TYPE h_seconds histogram
+h_seconds_bucket{le=\"0.001\"} 5
+h_seconds_bucket{le=\"+Inf\"} 3
+h_seconds_sum 1
+h_seconds_count 3
+";
+        assert!(lint_exposition(bad).unwrap_err().contains("cumulative"));
+    }
+
+    #[test]
+    fn monotone_check_catches_regressions() {
+        let a = lint_exposition(GOOD).unwrap();
+        let b = lint_exposition(&GOOD.replace("a_total{op=\"x\"} 3", "a_total{op=\"x\"} 9"))
+            .unwrap();
+        assert!(check_monotone(&a, &b).unwrap() > 0);
+        assert!(check_monotone(&b, &a).unwrap_err().contains("backwards"));
+    }
+}

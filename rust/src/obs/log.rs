@@ -1,0 +1,182 @@
+//! Leveled, timestamped stderr logging — the structured replacement for
+//! the ad-hoc `eprintln!` progress and warning lines.
+//!
+//! One line per record: `2026-08-07T12:34:56.789Z WARN serve.watcher:
+//! message`, machine-parseable (fixed field order, UTC, target-tagged).
+//! The max level is a relaxed `AtomicU8`, resolved once at startup from
+//! the `--log-level` flag, else the `BIGMEANS_LOG` env var, else `info`.
+//! The [`crate::log_warn!`]-family macros gate the formatting cost on
+//! [`enabled`], so suppressed records cost one relaxed load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Resolve and install the max level: explicit flag value, else the
+/// `BIGMEANS_LOG` env var, else `info`. Returns an error for an
+/// unrecognised level token (listing the accepted ones).
+pub fn init(flag: Option<&str>) -> Result<(), String> {
+    let token = match flag {
+        Some(t) => Some(t.to_string()),
+        None => std::env::var("BIGMEANS_LOG").ok(),
+    };
+    let level = match token {
+        None => Level::Info,
+        Some(t) => Level::parse(&t).ok_or_else(|| {
+            format!("bad log level '{t}': expected error|warn|info|debug|trace")
+        })?,
+    };
+    set_max_level(level);
+    Ok(())
+}
+
+/// Install the max level directly.
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current max level.
+pub fn max_level() -> Level {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Whether records at `level` are currently emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (already level-gated by the macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("{} {:<5} {target}: {args}", timestamp_utc(), level.name());
+}
+
+/// `YYYY-MM-DDTHH:MM:SS.mmmZ` from the system clock, hand-rolled (no
+/// chrono offline). Days-to-civil conversion per Howard Hinnant's
+/// `civil_from_days` algorithm.
+pub fn timestamp_utc() -> String {
+    let dur = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let secs = dur.as_secs();
+    let millis = dur.subsec_millis();
+    let days = (secs / 86_400) as i64;
+    let tod = secs % 86_400;
+    let (h, mi, s) = (tod / 3600, (tod % 3600) / 60, tod % 60);
+    let (y, m, d) = civil_from_days(days);
+    format!("{y:04}-{m:02}-{d:02}T{h:02}:{mi:02}:{s:02}.{millis:03}Z")
+}
+
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Log at an explicit level: `log_at!(Level::Warn, "target", "...", ..)`.
+#[macro_export]
+macro_rules! log_at {
+    ($level:expr, $target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($level) {
+            $crate::obs::log::log($level, $target, format_args!($($arg)*));
+        }
+    };
+}
+
+/// `log_error!("target", "fmt", args...)`.
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::log_at!($crate::obs::log::Level::Error, $target, $($arg)*)
+    };
+}
+
+/// `log_warn!("target", "fmt", args...)`.
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::log_at!($crate::obs::log::Level::Warn, $target, $($arg)*)
+    };
+}
+
+/// `log_info!("target", "fmt", args...)`.
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::log_at!($crate::obs::log::Level::Info, $target, $($arg)*)
+    };
+}
+
+/// `log_debug!("target", "fmt", args...)`.
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::log_at!($crate::obs::log::Level::Debug, $target, $($arg)*)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse_and_order() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn civil_from_days_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // leap year
+        assert_eq!(civil_from_days(19_782), (2024, 2, 29));
+        assert_eq!(civil_from_days(20_672), (2026, 8, 7));
+    }
+}

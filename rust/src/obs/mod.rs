@@ -1,0 +1,72 @@
+//! Zero-dependency observability: metrics, tracing, and leveled logging.
+//!
+//! Three pillars, all observers of the computation and never participants
+//! in it (bit-identicality contracts hold with everything enabled):
+//!
+//! * [`registry`] — a process-wide lock-free metric registry (atomic
+//!   counters, gauges, log2 histograms) with labeled families, rendered
+//!   as Prometheus text exposition. The process singleton is [`metrics`];
+//!   it starts disabled, so every handle is a branch-on-relaxed-atomic
+//!   no-op until `--metrics-out` / `--metrics-addr` enables it.
+//! * [`trace`] — shot-lifecycle spans in Chrome trace-event JSON
+//!   (`--trace out.trace.json`), ring-buffered per thread, flushed at
+//!   exit. Singleton: [`tracer`].
+//! * [`log`] — leveled, timestamped, target-tagged stderr records
+//!   (`--log-level`, `BIGMEANS_LOG`) replacing ad-hoc `eprintln!`.
+//!
+//! [`lint`] validates exposition documents (CI's scrape gate) and
+//! [`http`] serves `GET /metrics` for `serve --metrics-addr`.
+//!
+//! The full metric catalogue lives in `docs/OBSERVABILITY.md`.
+
+pub mod http;
+pub mod lint;
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+use std::sync::OnceLock;
+
+pub use http::MetricsServer;
+pub use registry::{Counter, Gauge, Histogram, Kind, Log2Histogram, Registry};
+pub use trace::{tracer, Span, Tracer};
+
+/// The process-wide metric registry. Disabled until [`Registry::enable`];
+/// handles registered while disabled record nothing.
+pub fn metrics() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Pre-register the core families for an engine so a scrape taken before
+/// any traffic (or any shot) still exposes them with zero values — the
+/// serve daemon calls this at boot with its model's engine and ISA.
+pub fn register_core(engine: &str, isa: &str) {
+    let m = metrics();
+    let eng = [("engine", engine), ("isa", isa)];
+    m.counter(
+        "bigmeans_distance_evals_total",
+        "Exact point-to-centroid distance evaluations (paper n_d)",
+        &eng,
+    );
+    m.counter(
+        "bigmeans_pruned_evals_total",
+        "Distance evaluations avoided by bound-based pruning",
+        &eng,
+    );
+    m.counter(
+        "bigmeans_pruned_blocks_total",
+        "Blocks skipped whole by bounding-box pruning in the final pass",
+        &[],
+    );
+    m.counter(
+        "bigmeans_hybrid_switches_total",
+        "Hybrid engine switches between Elkan and rescan strategies",
+        &[("engine", engine)],
+    );
+    m.histogram(
+        "bigmeans_shot_duration_seconds",
+        "Wall time of one Big-means shot (sample, reseed, local search)",
+        &[("engine", engine)],
+    );
+}

@@ -1,0 +1,501 @@
+//! The lock-free metric registry: atomic counters, gauges, and log2
+//! histograms behind Prometheus-style labeled families.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc` clones
+//! of the registered cell; recording is one relaxed-atomic branch on the
+//! registry's enabled flag plus one relaxed RMW — observers never take a
+//! lock on the hot path and never participate in the computation they
+//! watch, so the bit-identicality contracts survive instrumentation by
+//! construction. The family map itself is a `Mutex<BTreeMap>`, touched
+//! only at registration and render time.
+//!
+//! [`Registry::render`] emits the Prometheus text exposition format
+//! (version 0.0.4): `# HELP` / `# TYPE` comment lines followed by the
+//! family's samples, histograms as cumulative `_bucket{le=...}` series
+//! plus `_sum` / `_count`. Output is deterministic (families and series
+//! sorted), which the exposition lint in [`super::lint`] leans on.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::sync::lock_recover;
+
+/// Log2-bucketed latency histogram: lock-free to record, coarse (power
+/// of two upper bounds) to read. `buckets[i]` counts observations with
+/// `2^(i-1) < micros <= 2^i` (bucket 0 holds sub-microsecond ones), so a
+/// quantile estimate is the upper bound of the bucket holding the target
+/// rank — always `>=` the true quantile and at most 2× above it (the
+/// bound the property tests in `tests/property_obs.rs` enforce). Shared
+/// by the serve daemon's per-op stats and the registry's histograms.
+pub struct Log2Histogram {
+    buckets: [AtomicU64; 64],
+    sum_us: AtomicU64,
+}
+
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Log2Histogram {
+    pub fn new() -> Log2Histogram {
+        Log2Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a microsecond value.
+    #[inline]
+    pub fn bucket_index(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (64 - us.leading_zeros() as usize).min(63)
+        }
+    }
+
+    /// Upper bound (seconds) of bucket `i`.
+    #[inline]
+    pub fn bucket_upper_secs(i: usize) -> f64 {
+        if i >= 63 {
+            f64::INFINITY
+        } else {
+            (1u64 << i) as f64 * 1e-6
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, elapsed: Duration) {
+        self.record_us(elapsed.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        self.buckets[Self::bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the per-bucket counts.
+    pub fn counts(&self) -> [u64; 64] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Total observations.
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Sum of observed values in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    /// Upper-bound latency (seconds) of the bucket holding quantile `q`.
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        Self::percentile_secs_merged(&[self], q)
+    }
+
+    /// Quantile over the union of several histograms (e.g. the serve
+    /// daemon's assign + score ops merged for the backward-compatible
+    /// top-level percentiles).
+    pub fn percentile_secs_merged(hists: &[&Log2Histogram], q: f64) -> f64 {
+        let mut counts = [0u64; 64];
+        for h in hists {
+            for (acc, c) in counts.iter_mut().zip(h.counts()) {
+                *acc += c;
+            }
+        }
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (1u64 << i) as f64 * 1e-6;
+            }
+        }
+        (1u64 << 63) as f64 * 1e-6
+    }
+}
+
+/// Metric kind, mirroring the Prometheus `# TYPE` vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Cell {
+    Counter(Arc<AtomicU64>),
+    /// f64 bits in an AtomicU64.
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<Log2Histogram>),
+}
+
+struct Family {
+    help: String,
+    kind: Kind,
+    label_names: Vec<String>,
+    series: BTreeMap<Vec<String>, Cell>,
+}
+
+/// A monotone counter handle. Recording is a relaxed enabled-check plus a
+/// relaxed `fetch_add`; cloning shares the underlying cell.
+#[derive(Clone)]
+pub struct Counter {
+    enabled: Arc<AtomicBool>,
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge handle: last-write-wins f64.
+#[derive(Clone)]
+pub struct Gauge {
+    enabled: Arc<AtomicBool>,
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.cell.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+/// A histogram handle over a shared [`Log2Histogram`].
+#[derive(Clone)]
+pub struct Histogram {
+    enabled: Arc<AtomicBool>,
+    hist: Arc<Log2Histogram>,
+}
+
+impl Histogram {
+    #[inline]
+    pub fn observe(&self, elapsed: Duration) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.hist.record(elapsed);
+        }
+    }
+
+    /// The shared histogram (for percentile reads in tests/telemetry).
+    pub fn inner(&self) -> &Log2Histogram {
+        &self.hist
+    }
+}
+
+/// A process-wide (or test-local) family registry.
+pub struct Registry {
+    enabled: Arc<AtomicBool>,
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// A fresh registry, **disabled**: every handle it vends is a no-op
+    /// until [`Registry::enable`] flips the shared flag.
+    pub fn new() -> Registry {
+        Registry {
+            enabled: Arc::new(AtomicBool::new(false)),
+            families: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Start recording. Values accumulated before enabling stay zero.
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop recording (bench A/B rows); accumulated values are kept.
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Register (or look up) a counter series. `labels` are
+    /// `(name, value)` pairs; re-registering the same name with a
+    /// different kind or label-name set panics — that is a programming
+    /// error the exposition lint would otherwise flag at scrape time.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let cell = self.series(name, help, Kind::Counter, labels, |_| {
+            Cell::Counter(Arc::new(AtomicU64::new(0)))
+        });
+        match cell {
+            Cell::Counter(c) => Counter { enabled: Arc::clone(&self.enabled), cell: c },
+            _ => unreachable!("kind checked in series()"),
+        }
+    }
+
+    /// Register (or look up) a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let cell = self.series(name, help, Kind::Gauge, labels, |_| {
+            Cell::Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+        });
+        match cell {
+            Cell::Gauge(c) => Gauge { enabled: Arc::clone(&self.enabled), cell: c },
+            _ => unreachable!("kind checked in series()"),
+        }
+    }
+
+    /// Register (or look up) a histogram series.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Histogram {
+        let cell = self.series(name, help, Kind::Histogram, labels, |_| {
+            Cell::Histogram(Arc::new(Log2Histogram::new()))
+        });
+        match cell {
+            Cell::Histogram(h) => {
+                Histogram { enabled: Arc::clone(&self.enabled), hist: h }
+            }
+            _ => unreachable!("kind checked in series()"),
+        }
+    }
+
+    fn series(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        make: impl FnOnce(&[(&str, &str)]) -> Cell,
+    ) -> Cell {
+        let label_names: Vec<String> = labels.iter().map(|(k, _)| k.to_string()).collect();
+        let label_values: Vec<String> = labels.iter().map(|(_, v)| v.to_string()).collect();
+        let mut fams = lock_recover(&self.families);
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            label_names: label_names.clone(),
+            series: BTreeMap::new(),
+        });
+        assert_eq!(
+            fam.kind, kind,
+            "metric family '{name}' re-registered with a different kind"
+        );
+        assert_eq!(
+            fam.label_names, label_names,
+            "metric family '{name}' re-registered with different label names"
+        );
+        let cell = fam.series.entry(label_values).or_insert_with(|| make(labels));
+        match cell {
+            Cell::Counter(c) => Cell::Counter(Arc::clone(c)),
+            Cell::Gauge(c) => Cell::Gauge(Arc::clone(c)),
+            Cell::Histogram(h) => Cell::Histogram(Arc::clone(h)),
+        }
+    }
+
+    /// Render the Prometheus text exposition (format version 0.0.4).
+    pub fn render(&self) -> String {
+        let fams = lock_recover(&self.families);
+        let mut out = String::new();
+        for (name, fam) in fams.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", escape_help(&fam.help));
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind.name());
+            for (values, cell) in &fam.series {
+                let labels = format_labels(&fam.label_names, values);
+                match cell {
+                    Cell::Counter(c) => {
+                        let _ =
+                            writeln!(out, "{name}{labels} {}", c.load(Ordering::Relaxed));
+                    }
+                    Cell::Gauge(c) => {
+                        let v = f64::from_bits(c.load(Ordering::Relaxed));
+                        let _ = writeln!(out, "{name}{labels} {}", format_value(v));
+                    }
+                    Cell::Histogram(h) => {
+                        render_histogram(&mut out, name, &fam.label_names, values, h);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Cumulative `_bucket` series up to the highest non-empty bucket, then
+/// `+Inf`, `_sum`, `_count` — the standard Prometheus histogram shape.
+fn render_histogram(
+    out: &mut String,
+    name: &str,
+    label_names: &[String],
+    values: &[String],
+    h: &Log2Histogram,
+) {
+    let counts = h.counts();
+    let highest = counts.iter().rposition(|&c| c > 0);
+    let mut cumulative = 0u64;
+    if let Some(hi) = highest {
+        for (i, &c) in counts.iter().enumerate().take(hi + 1) {
+            cumulative += c;
+            let le = format_value(Log2Histogram::bucket_upper_secs(i));
+            let labels = format_labels_with(label_names, values, &[("le", &le)]);
+            let _ = writeln!(out, "{name}_bucket{labels} {cumulative}");
+        }
+    }
+    let inf_labels = format_labels_with(label_names, values, &[("le", "+Inf")]);
+    let _ = writeln!(out, "{name}_bucket{inf_labels} {cumulative}");
+    let plain = format_labels(label_names, values);
+    let _ = writeln!(out, "{name}_sum{plain} {}", format_value(h.sum_secs()));
+    let _ = writeln!(out, "{name}_count{plain} {cumulative}");
+}
+
+fn format_value(v: f64) -> String {
+    if v.is_infinite() {
+        if v > 0.0 { "+Inf".into() } else { "-Inf".into() }
+    } else if v.is_nan() {
+        "NaN".into()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn format_labels(names: &[String], values: &[String]) -> String {
+    format_labels_with(names, values, &[])
+}
+
+fn format_labels_with(names: &[String], values: &[String], extra: &[(&str, &str)]) -> String {
+    if names.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let mut parts = Vec::with_capacity(names.len() + extra.len());
+    for (k, v) in names.iter().zip(values) {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    for (k, v) in extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn escape_help(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handles_are_noops() {
+        let reg = Registry::new();
+        let c = reg.counter("t_total", "t", &[]);
+        c.add(5);
+        assert_eq!(c.value(), 0);
+        reg.enable();
+        c.add(5);
+        assert_eq!(c.value(), 5);
+    }
+
+    #[test]
+    fn series_are_shared_by_name_and_labels() {
+        let reg = Registry::new();
+        reg.enable();
+        let a = reg.counter("x_total", "x", &[("op", "assign")]);
+        let b = reg.counter("x_total", "x", &[("op", "assign")]);
+        let other = reg.counter("x_total", "x", &[("op", "score")]);
+        a.inc();
+        b.inc();
+        other.add(7);
+        assert_eq!(a.value(), 2);
+        assert_eq!(other.value(), 7);
+    }
+
+    #[test]
+    fn render_emits_help_type_then_samples() {
+        let reg = Registry::new();
+        reg.enable();
+        reg.counter("b_total", "counts b", &[("op", "x")]).add(3);
+        reg.gauge("a_gauge", "gauge a", &[]).set(1.5);
+        let h = reg.histogram("c_seconds", "hist c", &[]);
+        h.observe(Duration::from_micros(3));
+        let text = reg.render();
+        // Families sorted; HELP precedes TYPE precedes samples.
+        let a = text.find("# HELP a_gauge").unwrap();
+        let b = text.find("# HELP b_total").unwrap();
+        assert!(a < b);
+        assert!(text.contains("# TYPE b_total counter"));
+        assert!(text.contains("b_total{op=\"x\"} 3"));
+        assert!(text.contains("a_gauge 1.5"));
+        assert!(text.contains("# TYPE c_seconds histogram"));
+        // 3µs lands in bucket 2 (upper bound 4µs = 4e-6 s).
+        assert!(text.contains("c_seconds_bucket{le=\"0.000004\"} 1"));
+        assert!(text.contains("c_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("c_seconds_count 1"));
+    }
+
+    #[test]
+    fn histogram_bucket_math() {
+        assert_eq!(Log2Histogram::bucket_index(0), 0);
+        assert_eq!(Log2Histogram::bucket_index(1), 1);
+        assert_eq!(Log2Histogram::bucket_index(2), 2);
+        assert_eq!(Log2Histogram::bucket_index(3), 2);
+        assert_eq!(Log2Histogram::bucket_index(4), 3);
+        assert_eq!(Log2Histogram::bucket_index(u64::MAX), 63);
+    }
+
+    #[test]
+    fn merged_percentile_spans_histograms() {
+        let a = Log2Histogram::new();
+        let b = Log2Histogram::new();
+        for _ in 0..99 {
+            a.record_us(1); // bucket 1, bound 2µs
+        }
+        b.record_us(1_000_000); // bucket 20, bound ~2.1s
+        let p50 = Log2Histogram::percentile_secs_merged(&[&a, &b], 0.50);
+        let p99 = Log2Histogram::percentile_secs_merged(&[&a, &b], 0.999);
+        assert!(p50 <= 4e-6, "p50 {p50}");
+        assert!(p99 >= 1.0, "p99 {p99}");
+    }
+}

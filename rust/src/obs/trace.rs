@@ -1,0 +1,238 @@
+//! Shot-lifecycle tracing: Chrome trace-event-format spans, ring-buffered
+//! per thread and flushed once at exit.
+//!
+//! A [`Span`] guard records one `ph:"X"` complete event (category, name,
+//! start, duration) when dropped. The enabled check is a single relaxed
+//! atomic load, so a disabled tracer costs one branch per span site and
+//! never calls `Instant::now()` — the hot path stays untouched unless the
+//! user asked for a trace. Each thread buffers its events in a
+//! lazily-registered shard behind its own mutex (uncontended except at
+//! flush), capped at [`SHARD_CAP`] events; overflow increments a dropped
+//! counter instead of growing without bound.
+//!
+//! [`Tracer::flush_to`] serialises every shard through
+//! [`crate::util::json`] into the `{"traceEvents": [...]}` document that
+//! Perfetto / `chrome://tracing` loads directly. Tracing is an observer:
+//! it never branches the computation it watches, so the bit-identicality
+//! contracts hold with tracing enabled (gated by `tests/property_obs.rs`).
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::sync::lock_recover;
+
+/// Per-thread event cap; beyond it events are counted as dropped.
+pub const SHARD_CAP: usize = 1 << 16;
+
+struct Event {
+    cat: &'static str,
+    name: Cow<'static, str>,
+    ts_us: u64,
+    dur_us: u64,
+}
+
+struct Shard {
+    tid: u64,
+    events: Vec<Event>,
+    dropped: u64,
+}
+
+struct TracerState {
+    out_path: Option<PathBuf>,
+    shards: Vec<Arc<Mutex<Shard>>>,
+    next_tid: u64,
+}
+
+/// The process-wide tracer (see [`tracer`]).
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    state: Mutex<TracerState>,
+}
+
+thread_local! {
+    static LOCAL_SHARD: RefCell<Option<Arc<Mutex<Shard>>>> = const { RefCell::new(None) };
+}
+
+impl Tracer {
+    fn new() -> Tracer {
+        Tracer {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            state: Mutex::new(TracerState {
+                out_path: None,
+                shards: Vec::new(),
+                next_tid: 0,
+            }),
+        }
+    }
+
+    /// Start collecting spans; [`Tracer::flush`] will write them to
+    /// `path` as a Chrome trace-event JSON document.
+    pub fn enable(&self, path: &Path) {
+        lock_recover(&self.state).out_path = Some(path.to_path_buf());
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Collect spans without a file sink (bench A/B rows); flush drops
+    /// the events.
+    pub fn enable_unsinked(&self) {
+        lock_recover(&self.state).out_path = None;
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop collecting and discard everything buffered so far.
+    pub fn disable_and_clear(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+        let mut st = lock_recover(&self.state);
+        st.out_path = None;
+        for shard in &st.shards {
+            let mut sh = lock_recover(shard);
+            sh.events.clear();
+            sh.dropped = 0;
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Open a span with a static name. One relaxed load when disabled.
+    #[inline]
+    pub fn span(&'static self, cat: &'static str, name: &'static str) -> Span {
+        if !self.enabled() {
+            return Span { live: None };
+        }
+        Span { live: Some((self, cat, Cow::Borrowed(name), Instant::now())) }
+    }
+
+    /// Open a span with a runtime name (e.g. a tuner arm label).
+    #[inline]
+    pub fn span_dyn(&'static self, cat: &'static str, name: String) -> Span {
+        if !self.enabled() {
+            return Span { live: None };
+        }
+        Span { live: Some((self, cat, Cow::Owned(name), Instant::now())) }
+    }
+
+    fn record(&self, cat: &'static str, name: Cow<'static, str>, start: Instant) {
+        let ts_us = start.duration_since(self.epoch).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        LOCAL_SHARD.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                let mut st = lock_recover(&self.state);
+                st.next_tid += 1;
+                let shard = Arc::new(Mutex::new(Shard {
+                    tid: st.next_tid,
+                    events: Vec::new(),
+                    dropped: 0,
+                }));
+                st.shards.push(Arc::clone(&shard));
+                *slot = Some(shard);
+            }
+            let shard = slot.as_ref().expect("shard just installed");
+            let mut sh = lock_recover(shard);
+            if sh.events.len() >= SHARD_CAP {
+                sh.dropped += 1;
+            } else {
+                sh.events.push(Event { cat, name, ts_us, dur_us });
+            }
+        });
+    }
+
+    /// Events currently buffered across all shards (telemetry/tests).
+    pub fn buffered(&self) -> (usize, u64) {
+        let st = lock_recover(&self.state);
+        let mut events = 0;
+        let mut dropped = 0;
+        for shard in &st.shards {
+            let sh = lock_recover(shard);
+            events += sh.events.len();
+            dropped += sh.dropped;
+        }
+        (events, dropped)
+    }
+
+    /// Serialise every buffered span to the Chrome trace-event JSON
+    /// document, draining the shards.
+    pub fn render(&self) -> Json {
+        let st = lock_recover(&self.state);
+        let mut events = Vec::new();
+        let mut dropped = 0u64;
+        for shard in &st.shards {
+            let mut sh = lock_recover(shard);
+            dropped += sh.dropped;
+            sh.dropped = 0;
+            let tid = sh.tid;
+            for ev in sh.events.drain(..) {
+                events.push(json::obj(vec![
+                    ("ph", json::s("X")),
+                    ("cat", json::s(ev.cat)),
+                    ("name", json::s(&ev.name)),
+                    ("ts", json::num(ev.ts_us as f64)),
+                    ("dur", json::num(ev.dur_us as f64)),
+                    ("pid", json::num(1.0)),
+                    ("tid", json::num(tid as f64)),
+                ]));
+            }
+        }
+        json::obj(vec![
+            ("traceEvents", json::arr(events)),
+            ("displayTimeUnit", json::s("ms")),
+            ("droppedEvents", json::num(dropped as f64)),
+        ])
+    }
+
+    /// Write the buffered trace to the path given at [`Tracer::enable`]
+    /// time (no-op when tracing is off or unsinked). Returns the path
+    /// written, so callers can log it.
+    pub fn flush(&self) -> Result<Option<PathBuf>, String> {
+        if !self.enabled() {
+            return Ok(None);
+        }
+        let path = lock_recover(&self.state).out_path.clone();
+        match path {
+            None => {
+                self.render(); // drain the shards
+                Ok(None)
+            }
+            Some(path) => {
+                self.flush_to(&path)?;
+                Ok(Some(path))
+            }
+        }
+    }
+
+    /// Write the buffered trace to an explicit path.
+    pub fn flush_to(&self, path: &Path) -> Result<(), String> {
+        let doc = self.render();
+        std::fs::write(path, doc.to_string() + "\n")
+            .map_err(|e| format!("write trace {}: {e}", path.display()))
+    }
+}
+
+/// RAII span guard: drop records the event.
+pub struct Span {
+    live: Option<(&'static Tracer, &'static str, Cow<'static, str>, Instant)>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((tracer, cat, name, start)) = self.live.take() {
+            tracer.record(cat, name, start);
+        }
+    }
+}
+
+/// The process-wide tracer singleton.
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(Tracer::new)
+}

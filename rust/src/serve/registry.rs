@@ -28,6 +28,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, SystemTime};
 
 use crate::kernels::distance::sq_norm;
+use crate::obs;
 use crate::serve::artifact::ModelArtifact;
 use crate::util::sync::{read_recover, write_recover};
 
@@ -57,15 +58,30 @@ impl ServingModel {
 pub struct ModelRegistry {
     current: RwLock<Arc<ServingModel>>,
     generation: AtomicU64,
+    m_generation: obs::Gauge,
+    m_swaps: obs::Counter,
 }
 
 impl ModelRegistry {
     /// Boot the registry with its first model (swap generation 1).
     pub fn new(artifact: ModelArtifact) -> Arc<ModelRegistry> {
         let model = Arc::new(ServingModel::new(artifact, 1));
+        let m = obs::metrics();
+        let m_generation = m.gauge(
+            "bigmeans_model_generation",
+            "Swap generation of the currently served model (1 = boot)",
+            &[],
+        );
+        m_generation.set(1.0);
         Arc::new(ModelRegistry {
             current: RwLock::new(model),
             generation: AtomicU64::new(1),
+            m_generation,
+            m_swaps: m.counter(
+                "bigmeans_model_swaps_total",
+                "Model hot-swaps performed since daemon boot",
+                &[],
+            ),
         })
     }
 
@@ -82,6 +98,8 @@ impl ModelRegistry {
         let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
         let model = Arc::new(ServingModel::new(artifact, generation));
         *write_recover(&self.current) = model;
+        self.m_generation.set(generation as f64);
+        self.m_swaps.inc();
         generation
     }
 
@@ -135,11 +153,12 @@ pub fn spawn_watcher(
                 if stat == last_stat || stat.is_none() {
                     continue;
                 }
+                let _span = obs::tracer().span("serve.watch", "reload");
                 match ModelArtifact::load(&path) {
                     Err(e) => {
                         // Torn write or transient I/O: keep serving the
                         // old model, retry on the next poll.
-                        eprintln!("model watcher: reload deferred: {e}");
+                        crate::log_warn!("serve.watcher", "reload deferred: {e}");
                     }
                     Ok(artifact) => {
                         last_stat = stat;
@@ -149,18 +168,19 @@ pub fn spawn_watcher(
                         }
                         let current_n = registry.current().artifact.n;
                         if artifact.n != current_n {
-                            eprintln!(
-                                "model watcher: rejected publish: dims changed \
-                                 from {current_n} to {} (restart the daemon to \
-                                 change the served schema)",
+                            crate::log_warn!(
+                                "serve.watcher",
+                                "rejected publish: dims changed from {current_n} to {} \
+                                 (restart the daemon to change the served schema)",
                                 artifact.n
                             );
                             continue;
                         }
                         last_identity = identity;
                         let generation = registry.publish(artifact);
-                        eprintln!(
-                            "model watcher: hot-swapped to swap generation {generation}"
+                        crate::log_info!(
+                            "serve.watcher",
+                            "hot-swapped to swap generation {generation}"
                         );
                     }
                 }

@@ -24,6 +24,7 @@ use std::time::{Duration, Instant};
 
 use crate::kernels::assign_only_pooled;
 use crate::metrics::Counters;
+use crate::obs::{self, Log2Histogram};
 use crate::serve::protocol::{read_request, write_response, Request, Response, ResponsePayload};
 use crate::serve::registry::{ModelRegistry, ServingModel};
 use crate::util::error::{Context, Result};
@@ -47,42 +48,60 @@ impl Default for ServeOptions {
     }
 }
 
-/// Log2-bucketed latency histogram: lock-free to record, coarse (power
-/// of two upper bounds) to read — exactly what p50/p95/p99 gauges need.
-struct LatencyHistogram {
-    /// `buckets[i]` counts requests with `2^(i-1) < latency_us <= 2^i`
-    /// (bucket 0 holds sub-microsecond requests).
-    buckets: [AtomicU64; 64],
+/// Request operation class for stats/metrics attribution. `Other` covers
+/// stats/ping/shutdown so housekeeping traffic never pollutes the data-op
+/// latency percentiles.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Assign = 0,
+    Score = 1,
+    Other = 2,
 }
 
-impl LatencyHistogram {
-    fn new() -> LatencyHistogram {
-        LatencyHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
-    }
+/// Per-op counters + latency histogram, mirrored into the process metric
+/// registry (the mirror handles are branch-on-relaxed no-ops unless
+/// `--metrics-addr`/`--metrics-out` enabled the registry).
+struct OpStats {
+    requests: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    hist: Log2Histogram,
+    m_requests: obs::Counter,
+    m_rows: obs::Counter,
+    m_errors: obs::Counter,
+    m_hist: obs::Histogram,
+}
 
-    fn record(&self, elapsed: Duration) {
-        let us = elapsed.as_micros().min(u128::from(u64::MAX)) as u64;
-        let i = if us == 0 { 0 } else { (64 - us.leading_zeros() as usize).min(63) };
-        self.buckets[i].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Upper-bound latency (seconds) of the bucket holding quantile `q`.
-    fn percentile_secs(&self, q: f64) -> f64 {
-        let counts: Vec<u64> =
-            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
+impl OpStats {
+    fn new(op: &'static str) -> OpStats {
+        let m = obs::metrics();
+        let labels = [("op", op)];
+        OpStats {
+            requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            hist: Log2Histogram::new(),
+            m_requests: m.counter(
+                "bigmeans_serve_requests_total",
+                "Requests answered by the serve daemon (including error responses)",
+                &labels,
+            ),
+            m_rows: m.counter(
+                "bigmeans_serve_rows_total",
+                "Data rows processed by the serve daemon",
+                &labels,
+            ),
+            m_errors: m.counter(
+                "bigmeans_serve_errors_total",
+                "Error responses sent by the serve daemon",
+                &labels,
+            ),
+            m_hist: m.histogram(
+                "bigmeans_serve_request_duration_seconds",
+                "Server-side request handling latency",
+                &labels,
+            ),
         }
-        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut seen = 0u64;
-        for (i, c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                return (1u64 << i) as f64 * 1e-6;
-            }
-        }
-        (1u64 << 63) as f64 * 1e-6
     }
 }
 
@@ -93,37 +112,76 @@ pub struct ServeStats {
     data_requests: AtomicU64,
     rows: AtomicU64,
     errors: AtomicU64,
-    hist: LatencyHistogram,
+    /// Indexed by `Op as usize`.
+    ops: [OpStats; 3],
     agg: Mutex<Counters>,
+    m_distance_evals: obs::Counter,
+    m_pruned_evals: obs::Counter,
 }
 
 impl ServeStats {
     fn new() -> ServeStats {
+        let m = obs::metrics();
+        let eng = [("engine", "serve"), ("isa", crate::kernels::active_isa().name())];
         ServeStats {
             started: Instant::now(),
             requests: AtomicU64::new(0),
             data_requests: AtomicU64::new(0),
             rows: AtomicU64::new(0),
             errors: AtomicU64::new(0),
-            hist: LatencyHistogram::new(),
+            ops: [OpStats::new("assign"), OpStats::new("score"), OpStats::new("other")],
             agg: Mutex::new(Counters::new()),
+            m_distance_evals: m.counter(
+                "bigmeans_distance_evals_total",
+                "Exact point-to-centroid distance evaluations (paper n_d)",
+                &eng,
+            ),
+            m_pruned_evals: m.counter(
+                "bigmeans_pruned_evals_total",
+                "Distance evaluations avoided by bound-based pruning",
+                &eng,
+            ),
         }
     }
 
-    fn record(&self, elapsed: Duration, batch_rows: Option<usize>, counters: Option<&Counters>) {
+    fn record(
+        &self,
+        op: Op,
+        elapsed: Duration,
+        batch_rows: Option<usize>,
+        counters: Option<&Counters>,
+    ) {
         self.requests.fetch_add(1, Ordering::Relaxed);
+        let os = &self.ops[op as usize];
+        os.requests.fetch_add(1, Ordering::Relaxed);
+        os.m_requests.inc();
         if let Some(rows) = batch_rows {
             self.data_requests.fetch_add(1, Ordering::Relaxed);
             self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+            os.rows.fetch_add(rows as u64, Ordering::Relaxed);
+            os.m_rows.add(rows as u64);
         }
         if let Some(c) = counters {
             lock_recover(&self.agg).merge(c);
+            self.m_distance_evals.add(c.distance_evals);
+            self.m_pruned_evals.add(c.pruned_evals);
         }
-        self.hist.record(elapsed);
+        os.hist.record(elapsed);
+        os.m_hist.observe(elapsed);
     }
 
-    fn record_error(&self) {
+    /// An answered error response counts as a request too (it occupied
+    /// the handler and the client got a reply), attributed to its op.
+    fn record_error(&self, op: Op, elapsed: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
         self.errors.fetch_add(1, Ordering::Relaxed);
+        let os = &self.ops[op as usize];
+        os.requests.fetch_add(1, Ordering::Relaxed);
+        os.errors.fetch_add(1, Ordering::Relaxed);
+        os.m_requests.inc();
+        os.m_errors.inc();
+        os.hist.record(elapsed);
+        os.m_hist.observe(elapsed);
     }
 
     /// Requests answered so far (all ops).
@@ -136,8 +194,22 @@ impl ServeStats {
         self.errors.load(Ordering::Relaxed)
     }
 
+    fn op_json(&self, op: Op) -> Json {
+        let os = &self.ops[op as usize];
+        json::obj(vec![
+            ("requests", json::num(os.requests.load(Ordering::Relaxed) as f64)),
+            ("rows", json::num(os.rows.load(Ordering::Relaxed) as f64)),
+            ("errors", json::num(os.errors.load(Ordering::Relaxed) as f64)),
+            ("p50_ms", json::num(os.hist.percentile_secs(0.50) * 1e3)),
+            ("p95_ms", json::num(os.hist.percentile_secs(0.95) * 1e3)),
+            ("p99_ms", json::num(os.hist.percentile_secs(0.99) * 1e3)),
+        ])
+    }
+
     /// The `--json` / stats-op document: throughput, batch shape, latency
-    /// percentiles, swap generation, and the kernel work counters.
+    /// percentiles, swap generation, and the kernel work counters. The
+    /// top-level percentiles cover the data ops only (assign + score
+    /// merged); housekeeping ops report under `ops.other`.
     pub fn to_json(&self, registry: &ModelRegistry) -> Json {
         let requests = self.requests.load(Ordering::Relaxed);
         let data_requests = self.data_requests.load(Ordering::Relaxed);
@@ -146,7 +218,12 @@ impl ServeStats {
         let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
         let mean_batch =
             if data_requests == 0 { 0.0 } else { rows as f64 / data_requests as f64 };
-        let distance_evals = lock_recover(&self.agg).distance_evals;
+        let (distance_evals, pruned_evals, pruned_blocks, hybrid_switches) = {
+            let agg = lock_recover(&self.agg);
+            (agg.distance_evals, agg.pruned_evals, agg.pruned_blocks, agg.hybrid_switches)
+        };
+        let data_hists =
+            [&self.ops[Op::Assign as usize].hist, &self.ops[Op::Score as usize].hist];
         json::obj(vec![
             ("requests", json::num(requests as f64)),
             ("rows", json::num(rows as f64)),
@@ -154,12 +231,32 @@ impl ServeStats {
             ("isa", json::s(crate::kernels::active_isa().name())),
             ("qps", json::num(requests as f64 / uptime)),
             ("mean_batch_rows", json::num(mean_batch)),
-            ("p50_ms", json::num(self.hist.percentile_secs(0.50) * 1e3)),
-            ("p95_ms", json::num(self.hist.percentile_secs(0.95) * 1e3)),
-            ("p99_ms", json::num(self.hist.percentile_secs(0.99) * 1e3)),
+            (
+                "p50_ms",
+                json::num(Log2Histogram::percentile_secs_merged(&data_hists, 0.50) * 1e3),
+            ),
+            (
+                "p95_ms",
+                json::num(Log2Histogram::percentile_secs_merged(&data_hists, 0.95) * 1e3),
+            ),
+            (
+                "p99_ms",
+                json::num(Log2Histogram::percentile_secs_merged(&data_hists, 0.99) * 1e3),
+            ),
+            (
+                "ops",
+                json::obj(vec![
+                    ("assign", self.op_json(Op::Assign)),
+                    ("score", self.op_json(Op::Score)),
+                    ("other", self.op_json(Op::Other)),
+                ]),
+            ),
             ("generation", json::num(registry.generation() as f64)),
             ("swaps", json::num(registry.swaps() as f64)),
             ("distance_evals", json::num(distance_evals as f64)),
+            ("pruned_evals", json::num(pruned_evals as f64)),
+            ("pruned_blocks", json::num(pruned_blocks as f64)),
+            ("hybrid_switches", json::num(hybrid_switches as f64)),
             ("uptime_secs", json::num(self.started.elapsed().as_secs_f64())),
         ])
     }
@@ -240,7 +337,7 @@ impl Server {
                     if self.shared.stop.load(Ordering::SeqCst) {
                         break;
                     }
-                    eprintln!("serve: accept failed: {e}");
+                    crate::log_warn!("serve", "accept failed: {e}");
                     continue;
                 }
             };
@@ -323,9 +420,12 @@ fn handle_connection(mut stream: TcpStream, _id: u64, shared: &Shared) {
         let response = match &req {
             Request::Assign { points, .. } | Request::Score { points, .. } => {
                 let (rows, n) = rows_n.unwrap();
+                let (op, op_name) =
+                    if score { (Op::Score, "score") } else { (Op::Assign, "assign") };
+                let _span = obs::tracer().span("serve.request", op_name);
                 let model = shared.registry.current();
                 if n != model.artifact.n {
-                    shared.stats.record_error();
+                    shared.stats.record_error(op, start.elapsed());
                     Response {
                         generation: model.generation,
                         payload: ResponsePayload::Error {
@@ -336,7 +436,7 @@ fn handle_connection(mut stream: TcpStream, _id: u64, shared: &Shared) {
                         },
                     }
                 } else if rows > shared.max_batch_rows {
-                    shared.stats.record_error();
+                    shared.stats.record_error(op, start.elapsed());
                     Response {
                         generation: model.generation,
                         payload: ResponsePayload::Error {
@@ -349,27 +449,27 @@ fn handle_connection(mut stream: TcpStream, _id: u64, shared: &Shared) {
                 } else {
                     let (payload, rows, counters) =
                         answer_batch(shared, &model, rows, n, points, score);
-                    shared.stats.record(start.elapsed(), Some(rows), Some(&counters));
+                    shared.stats.record(op, start.elapsed(), Some(rows), Some(&counters));
                     Response { generation: model.generation, payload }
                 }
             }
             Request::Stats => {
                 let json = shared.stats.to_json(&shared.registry).to_string();
-                shared.stats.record(start.elapsed(), None, None);
+                shared.stats.record(Op::Other, start.elapsed(), None, None);
                 Response {
                     generation: shared.registry.generation(),
                     payload: ResponsePayload::Stats { json },
                 }
             }
             Request::Ping => {
-                shared.stats.record(start.elapsed(), None, None);
+                shared.stats.record(Op::Other, start.elapsed(), None, None);
                 Response {
                     generation: shared.registry.generation(),
                     payload: ResponsePayload::Pong,
                 }
             }
             Request::Shutdown => {
-                shared.stats.record(start.elapsed(), None, None);
+                shared.stats.record(Op::Other, start.elapsed(), None, None);
                 Response {
                     generation: shared.registry.generation(),
                     payload: ResponsePayload::ShuttingDown,
@@ -455,6 +555,16 @@ mod tests {
         let doc = Json::parse(&json).unwrap();
         assert!(doc.get("requests").and_then(|v| v.as_f64()).unwrap() >= 3.0);
         assert_eq!(doc.get("errors").and_then(|v| v.as_f64()).unwrap(), 2.0);
+        // Per-op split: both malformed batches were assign ops, and the
+        // housekeeping ops never pollute the data-op histograms.
+        let ops = doc.get("ops").expect("stats json has per-op block");
+        let op = |name: &str, key: &str| {
+            ops.get(name).and_then(|o| o.get(key)).and_then(|v| v.as_f64()).unwrap()
+        };
+        assert_eq!(op("assign", "errors"), 2.0);
+        assert_eq!(op("assign", "requests"), 3.0);
+        assert_eq!(op("score", "requests"), 1.0);
+        assert_eq!(op("other", "errors"), 0.0);
 
         client.shutdown().unwrap();
         runner.join().unwrap();

@@ -20,6 +20,8 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::obs;
+
 /// Default decoded-block budget (bytes).
 pub const DEFAULT_CACHE_BYTES: usize = 128 << 20;
 
@@ -40,6 +42,9 @@ struct CacheState {
 pub struct BlockCache {
     inner: Mutex<CacheState>,
     cap_bytes: usize,
+    m_hits: obs::Counter,
+    m_misses: obs::Counter,
+    m_resident: obs::Gauge,
 }
 
 impl BlockCache {
@@ -47,6 +52,7 @@ impl BlockCache {
     /// block larger than the budget is still admitted (the budget then
     /// holds exactly that block).
     pub fn new(cap_bytes: usize) -> Self {
+        let m = obs::metrics();
         BlockCache {
             inner: Mutex::new(CacheState {
                 map: HashMap::new(),
@@ -56,6 +62,21 @@ impl BlockCache {
                 misses: 0,
             }),
             cap_bytes,
+            m_hits: m.counter(
+                "bigmeans_block_cache_hits_total",
+                "Decoded-block cache lookups answered from memory",
+                &[],
+            ),
+            m_misses: m.counter(
+                "bigmeans_block_cache_misses_total",
+                "Decoded-block cache lookups that required a block decode",
+                &[],
+            ),
+            m_resident: m.gauge(
+                "bigmeans_block_cache_resident_bytes",
+                "Decoded f32 bytes currently held by the block cache",
+                &[],
+            ),
         }
     }
 
@@ -71,6 +92,11 @@ impl BlockCache {
         match &hit {
             Some(_) => st.hits += 1,
             None => st.misses += 1,
+        }
+        drop(st);
+        match &hit {
+            Some(_) => self.m_hits.inc(),
+            None => self.m_misses.inc(),
         }
         hit
     }
@@ -100,6 +126,9 @@ impl BlockCache {
         }
         st.resident_bytes += bytes;
         st.map.insert(block, Slot { data, stamp });
+        let resident = st.resident_bytes;
+        drop(st);
+        self.m_resident.set(resident as f64);
     }
 
     /// `(hits, misses)` since creation.

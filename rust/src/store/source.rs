@@ -20,6 +20,7 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::data::source::{AccessPattern, BlockSummaries, DataSource};
+use crate::obs;
 use crate::store::cache::{BlockCache, DEFAULT_CACHE_BYTES};
 use crate::store::codec::{block_minmax, decode_block};
 use crate::store::format::{BlockEntry, Codec, Dtype, V3Header, BLOCK_ENTRY_LEN, BMX3_HEADER_LEN};
@@ -63,6 +64,7 @@ pub struct BlockStore {
     summaries: Option<Vec<f32>>,
     backing: Backing,
     cache: BlockCache,
+    m_decoded: obs::Counter,
 }
 
 impl BlockStore {
@@ -195,6 +197,11 @@ impl BlockStore {
             summaries,
             backing,
             cache: BlockCache::new(cache_bytes),
+            m_decoded: obs::metrics().counter(
+                "bigmeans_blocks_decoded_total",
+                "Store blocks decoded (CRC + codec + dtype pass)",
+                &[],
+            ),
         })
     }
 
@@ -348,9 +355,11 @@ impl BlockStore {
         if let Some(hit) = self.cache.get(idx) {
             return hit;
         }
+        let _span = obs::tracer().span("store.decode", "block");
         let decoded = self.checked_decode(idx).unwrap_or_else(|e| {
             panic!("block store '{}': {e}", self.name);
         });
+        self.m_decoded.inc();
         let arc = Arc::new(decoded);
         self.cache.insert(idx, Arc::clone(&arc));
         arc

@@ -34,6 +34,7 @@ use crate::coordinator::solver::NativeSolver;
 use crate::data::source::{AccessPattern, DataSource};
 use crate::metrics::bandit::TunerTrace;
 use crate::metrics::{Counters, PhaseTimer};
+use crate::obs;
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
 
@@ -72,6 +73,33 @@ struct Scheduler {
     controller: Box<dyn BanditController>,
     rng: Rng,
     trace: TunerTrace,
+}
+
+/// Per-arm observability handles (pure observers — never consulted by the
+/// race, so they cannot perturb pull order or rewards).
+struct ArmObs {
+    label: String,
+    pulls: obs::Counter,
+    accepted: obs::Counter,
+}
+
+impl ArmObs {
+    fn new(label: String) -> ArmObs {
+        let m = obs::metrics();
+        ArmObs {
+            pulls: m.counter(
+                "bigmeans_tuner_arm_pulls_total",
+                "Bandit pulls (shots fired) per tuner arm",
+                &[("arm", &label)],
+            ),
+            accepted: m.counter(
+                "bigmeans_tuner_arm_accepted_total",
+                "Accepted incumbent offers per tuner arm",
+                &[("arm", &label)],
+            ),
+            label,
+        }
+    }
 }
 
 /// Run a competitive race over the portfolio. Shot budget / time budget
@@ -134,6 +162,8 @@ pub fn run_race(
             })
         })
         .collect();
+    let arm_obs: Vec<ArmObs> =
+        portfolio.arms.iter().map(|arm| ArmObs::new(arm.label())).collect();
     let scorer = |centroids: &[f32], degenerate: &[usize], counters: &mut Counters| {
         validation.objective(centroids, degenerate, k, counters)
     };
@@ -164,12 +194,21 @@ pub fn run_race(
                         let Scheduler { controller, rng, .. } = &mut *s;
                         controller.select(rng)
                     };
+                    let obs_arm = &arm_obs[arm_id];
+                    let tracer = obs::tracer();
+                    let _pull_span = tracer
+                        .enabled()
+                        .then(|| tracer.span_dyn("tuner.pull", obs_arm.label.clone()));
                     let (report, before) = {
                         let mut st = arm_states[arm_id].lock().unwrap();
                         let before = incumbent.snapshot().objective;
                         let ArmState { rng, exec, counters } = &mut *st;
                         (exec.run_shot(&incumbent, rng, counters, Some(scorer_ref)), before)
                     };
+                    obs_arm.pulls.inc();
+                    if report.accepted {
+                        obs_arm.accepted.inc();
+                    }
                     // Reward only *accepted* offers: with several workers the
                     // `before` snapshot can go stale while a shot runs, and a
                     // rejected offer must not earn credit against it. At one

@@ -15,6 +15,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::obs;
 use crate::util::sync::{lock_recover, wait_recover};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -31,6 +32,7 @@ pub struct ThreadPool {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
+    m_jobs: obs::Counter,
 }
 
 impl ThreadPool {
@@ -52,7 +54,19 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { shared, workers, size }
+        let m = obs::metrics();
+        m.counter(
+            "bigmeans_threadpool_threads_started_total",
+            "Worker threads spawned by thread pools since process start",
+            &[],
+        )
+        .add(size as u64);
+        let m_jobs = m.counter(
+            "bigmeans_threadpool_jobs_total",
+            "Jobs submitted to thread-pool injector queues",
+            &[],
+        );
+        ThreadPool { shared, workers, size, m_jobs }
     }
 
     /// Pool sized to the machine (logical cores).
@@ -73,6 +87,7 @@ impl ThreadPool {
     /// only ever poisons the injector between `push_back` calls, never
     /// mid-mutation, so the queue contents stay coherent.
     fn submit(&self, job: Job) {
+        self.m_jobs.inc();
         let mut q = lock_recover(&self.shared.queue);
         q.push_back(job);
         drop(q);

@@ -1,0 +1,284 @@
+//! Property tests for the observability subsystem: log2-histogram
+//! quantile bounds on adversarial distributions, exposition lint
+//! round-trips over real `Registry::render` output, trace-document
+//! shape, and the load-bearing contract that enabling metrics and
+//! tracing never changes a clustering run's bits.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::data::Synth;
+use bigmeans::obs::{self, lint, Log2Histogram, Registry};
+use bigmeans::util::json::Json;
+use bigmeans::BigMeans;
+
+/// The tracer and the `obs::metrics()` registry are process singletons;
+/// tests that flip their enabled flags serialize on this lock so the
+/// harness's parallel test threads cannot observe each other's state.
+static GLOBAL_OBS: Mutex<()> = Mutex::new(());
+
+fn lock_global() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_OBS.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Log2Histogram quantile bounds.
+//
+// The estimator returns the upper bound of the bucket holding the target
+// rank, so for any sample set it must bracket the true quantile from
+// above by at most the bucket width: true <= est <= 2 * max(true, 1µs).
+// ---------------------------------------------------------------------------
+
+/// True quantile (seconds) using the same rank rule as the estimator:
+/// the element at rank `ceil(q * total)` (1-based) of the sorted samples.
+fn true_quantile_secs(samples_us: &[u64], q: f64) -> f64 {
+    let mut sorted = samples_us.to_vec();
+    sorted.sort_unstable();
+    let total = sorted.len() as u64;
+    let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+    sorted[(target - 1) as usize] as f64 * 1e-6
+}
+
+fn assert_quantile_bounds(name: &str, samples_us: &[u64]) {
+    let h = Log2Histogram::new();
+    for &us in samples_us {
+        h.record_us(us);
+    }
+    assert_eq!(h.total(), samples_us.len() as u64);
+    for &q in &[0.50, 0.95, 0.99] {
+        let truth = true_quantile_secs(samples_us, q);
+        let est = h.percentile_secs(q);
+        assert!(
+            truth <= est && est <= 2.0 * truth.max(1e-6),
+            "{name}: q={q} true {truth:.3e} est {est:.3e} violates \
+             true <= est <= 2*max(true, 1e-6)"
+        );
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_all_one_bucket() {
+    // Every sample identical: the estimator must report exactly the
+    // bucket upper bound of that one value at every quantile.
+    for &v in &[0u64, 1, 7, 4096, 1_000_000] {
+        let samples = vec![v; 257];
+        assert_quantile_bounds("all-one-bucket", &samples);
+        let h = Log2Histogram::new();
+        for &us in &samples {
+            h.record_us(us);
+        }
+        assert_eq!(h.percentile_secs(0.5), h.percentile_secs(0.999));
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_bimodal() {
+    // Two widely separated modes: the p50/p99 split must land on the
+    // correct mode for several mixture ratios, including the adversarial
+    // 50/50 split where the median sits exactly on the mode boundary.
+    for &(lo_count, hi_count) in &[(999usize, 1usize), (500, 500), (1, 999), (90, 10)] {
+        let mut samples = vec![3u64; lo_count];
+        samples.extend(std::iter::repeat(1_000_000u64).take(hi_count));
+        assert_quantile_bounds("bimodal", &samples);
+    }
+    // With 1% of mass in the slow mode, p50 is fast and p99+ is slow.
+    let mut samples = vec![3u64; 990];
+    samples.extend(std::iter::repeat(1_000_000u64).take(10));
+    let h = Log2Histogram::new();
+    for &us in &samples {
+        h.record_us(us);
+    }
+    assert!(h.percentile_secs(0.50) <= 4e-6);
+    assert!(h.percentile_secs(0.995) >= 1.0);
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone_ramp() {
+    // A linear ramp exercises every low bucket and checks the estimate
+    // stays monotone in q (a cumulative-count scan must never regress).
+    let samples: Vec<u64> = (0..10_000u64).collect();
+    assert_quantile_bounds("ramp", &samples);
+    let h = Log2Histogram::new();
+    for &us in &samples {
+        h.record_us(us);
+    }
+    let mut prev = 0.0f64;
+    for i in 1..=100 {
+        let est = h.percentile_secs(i as f64 / 100.0);
+        assert!(est >= prev, "quantile estimate regressed at q={}", i as f64 / 100.0);
+        prev = est;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exposition lint over real registry output.
+// ---------------------------------------------------------------------------
+
+/// A local registry shaped like the process one: labeled counters, a
+/// gauge, and a multi-series histogram.
+fn populated_registry() -> Registry {
+    let reg = Registry::new();
+    reg.enable();
+    reg.counter("t_distance_evals_total", "evals", &[("engine", "panel"), ("isa", "scalar")])
+        .add(12);
+    reg.counter("t_distance_evals_total", "evals", &[("engine", "elkan"), ("isa", "scalar")])
+        .add(5);
+    reg.gauge("t_resident_bytes", "resident", &[]).set(1.5e6);
+    let h = reg.histogram("t_request_seconds", "latency", &[("op", "assign")]);
+    h.observe(Duration::from_micros(3));
+    h.observe(Duration::from_micros(900));
+    reg.histogram("t_request_seconds", "latency", &[("op", "score")])
+        .observe(Duration::from_micros(40));
+    reg
+}
+
+#[test]
+fn rendered_exposition_passes_lint() {
+    let reg = populated_registry();
+    let e = lint::lint_exposition(&reg.render()).expect("render must lint clean");
+    assert_eq!(e.families.len(), 3);
+    assert_eq!(e.families["t_distance_evals_total"].kind, "counter");
+    assert_eq!(e.families["t_request_seconds"].kind, "histogram");
+    assert!(e.samples >= 5);
+}
+
+#[test]
+fn rendered_expositions_stay_monotone_across_scrapes() {
+    let reg = populated_registry();
+    let first = lint::lint_exposition(&reg.render()).unwrap();
+    // More traffic between scrapes: counters and buckets only grow.
+    reg.counter("t_distance_evals_total", "evals", &[("engine", "panel"), ("isa", "scalar")])
+        .add(100);
+    reg.histogram("t_request_seconds", "latency", &[("op", "assign")])
+        .observe(Duration::from_micros(7));
+    let second = lint::lint_exposition(&reg.render()).unwrap();
+    let checked = lint::check_monotone(&first, &second).expect("no counter may regress");
+    assert!(checked > 0, "monotone check must cover at least one series");
+    // The reverse direction must be flagged as a regression.
+    assert!(lint::check_monotone(&second, &first).unwrap_err().contains("backwards"));
+}
+
+#[test]
+fn lint_rejects_adversarial_documents() {
+    let good = populated_registry().render();
+    // Duplicate TYPE line for an existing family.
+    let dup = format!(
+        "{good}# HELP t_resident_bytes resident\n# TYPE t_resident_bytes gauge\nt_resident_bytes 2\n"
+    );
+    assert!(lint::lint_exposition(&dup).unwrap_err().contains("duplicate"));
+    // A sample with no announced family.
+    let orphan = format!("{good}mystery_total 1\n");
+    assert!(lint::lint_exposition(&orphan).unwrap_err().contains("TYPE"));
+}
+
+// ---------------------------------------------------------------------------
+// Global tracer: one test, because the tracer is a process singleton.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn global_tracer_buffers_renders_and_clears() {
+    let _g = lock_global();
+    let tracer = obs::tracer();
+    tracer.disable_and_clear();
+
+    // Disabled spans are free: nothing buffers.
+    drop(tracer.span("shot", "noop"));
+    assert_eq!(tracer.buffered().0, 0);
+
+    tracer.enable_unsinked();
+    {
+        let _outer = tracer.span("shot", "chunk");
+        drop(tracer.span("shot.sample", "draw"));
+        drop(tracer.span("shot.lloyd", "iterate"));
+        drop(tracer.span_dyn("tuner.pull", "0.5x/panel".to_string()));
+    }
+    let (buffered, dropped) = tracer.buffered();
+    assert_eq!(buffered, 4);
+    assert_eq!(dropped, 0);
+
+    // Render drains the shards into a Chrome trace-event document.
+    let doc: Json = tracer.render();
+    let events = doc
+        .get("traceEvents")
+        .and_then(|j| j.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(events.len(), 4);
+    let mut cats: Vec<&str> = Vec::new();
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(|j| j.as_str()), Some("X"));
+        assert!(ev.get("ts").and_then(|j| j.as_f64()).is_some());
+        assert!(ev.get("dur").and_then(|j| j.as_f64()).is_some());
+        assert!(ev.get("pid").and_then(|j| j.as_f64()).is_some());
+        assert!(ev.get("tid").and_then(|j| j.as_f64()).is_some());
+        cats.push(ev.get("cat").and_then(|j| j.as_str()).expect("cat string"));
+    }
+    cats.sort_unstable();
+    assert_eq!(cats, ["shot", "shot.lloyd", "shot.sample", "tuner.pull"]);
+    assert_eq!(tracer.buffered().0, 0, "render drains the buffers");
+
+    // The document round-trips through the JSON parser Perfetto-style.
+    let reparsed = Json::parse(&doc.to_string()).expect("trace document reparses");
+    assert!(reparsed.get("traceEvents").is_some());
+
+    // The ring cap drops instead of growing without bound.
+    for _ in 0..(obs::trace::SHARD_CAP + 10) {
+        drop(tracer.span("shot", "flood"));
+    }
+    let (buffered, dropped) = tracer.buffered();
+    assert_eq!(buffered, obs::trace::SHARD_CAP);
+    assert_eq!(dropped, 10);
+
+    tracer.disable_and_clear();
+    assert_eq!(tracer.buffered(), (0, 0));
+    drop(tracer.span("shot", "after-clear"));
+    assert_eq!(tracer.buffered().0, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identicality: observers never participate.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_and_tracing_do_not_change_clustering_bits() {
+    let _g = lock_global();
+    let data = Synth::GaussianMixture {
+        m: 12_000,
+        n: 6,
+        k_true: 7,
+        spread: 0.3,
+        box_half_width: 25.0,
+    }
+    .generate("obs-ab", 17);
+    let run = || {
+        let cfg = BigMeansConfig::new(7, 1024)
+            .with_stop(StopCondition::MaxChunks(20))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(41);
+        BigMeans::new(cfg).run(&data).unwrap()
+    };
+
+    obs::tracer().disable_and_clear();
+    obs::metrics().disable();
+    let plain = run();
+
+    obs::metrics().enable();
+    obs::register_core("panel", "scalar");
+    obs::tracer().enable_unsinked();
+    let observed = run();
+    let (spans, _) = obs::tracer().buffered();
+    obs::tracer().disable_and_clear();
+    obs::metrics().disable();
+
+    assert!(spans > 0, "an observed run must actually emit spans");
+    assert_eq!(
+        plain.objective.to_bits(),
+        observed.objective.to_bits(),
+        "objective changed under observation: {} vs {}",
+        plain.objective,
+        observed.objective
+    );
+    assert_eq!(plain.assignment, observed.assignment);
+    assert_eq!(plain.centroids, observed.centroids);
+    assert_eq!(plain.counters.distance_evals, observed.counters.distance_evals);
+}
