@@ -1,0 +1,232 @@
+//! Bench regression gating: diff two bench JSON documents and flag the
+//! performance leaves that got worse than a tolerance.
+//!
+//! `bench --compare BASELINE.json --tolerance PCT` runs a suite, then
+//! feeds the freshly written output document and the committed baseline
+//! through [`compare_docs`]; any regression beyond the tolerance makes
+//! the binary exit nonzero, so CI can gate on "no suite got slower".
+//!
+//! Only leaves whose key names mark them as performance measurements are
+//! compared (wall times, throughputs, speedups, overhead ratios) — the
+//! configuration echo, objectives, and counters are deterministic and
+//! belong to correctness tests, not a noise-tolerant perf gate. Direction
+//! is inferred from the key name: `*_secs`/`*_ms`/`*_ratio` regress
+//! upward, `*qps`/`*_per_s(ec)`/`*speedup`/`*reduction`/`*mb_per_s`
+//! regress downward. A baseline key missing from the candidate is always
+//! a regression (a renamed metric must re-baseline explicitly).
+
+use crate::util::json::Json;
+
+/// Noise floor: leaves where both sides are below this are skipped —
+/// relative tolerance on a sub-millisecond timing is pure jitter.
+pub const COMPARE_NOISE_FLOOR: f64 = 1e-3;
+
+/// Which way a measured leaf regresses, inferred from its key name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    /// Wall times, latencies, overhead ratios: bigger is worse.
+    LowerIsBetter,
+    /// Throughputs, speedups, pruning reductions: smaller is worse.
+    HigherIsBetter,
+    /// Config echo, objectives, counters: not a perf leaf — skip.
+    NotPerf,
+}
+
+fn direction(key: &str) -> Direction {
+    // Higher-is-better suffixes first: "warm_speedup" must not fall into
+    // a generic substring trap, and "*_per_s" covers rows_per_sec too.
+    for suffix in ["qps", "_per_s", "_per_sec", "speedup", "reduction", "mb_per_s"] {
+        if key.ends_with(suffix) {
+            return Direction::HigherIsBetter;
+        }
+    }
+    for suffix in ["secs", "_ms", "_ratio"] {
+        if key.ends_with(suffix) {
+            return Direction::LowerIsBetter;
+        }
+    }
+    Direction::NotPerf
+}
+
+/// Diff `candidate` against `baseline`: returns one human-readable line
+/// per regression beyond `tolerance_pct` (empty = gate passes). Walks the
+/// baseline document, so candidate-only keys (new metrics) never fail.
+pub fn compare_docs(baseline: &Json, candidate: &Json, tolerance_pct: f64) -> Vec<String> {
+    let mut regressions = Vec::new();
+    walk(baseline, candidate, "", tolerance_pct, &mut regressions);
+    regressions
+}
+
+fn walk(base: &Json, cand: &Json, path: &str, tol: f64, out: &mut Vec<String>) {
+    match base {
+        Json::Obj(map) => {
+            for (key, bval) in map {
+                let sub = if path.is_empty() { key.clone() } else { format!("{path}.{key}") };
+                match cand.get(key) {
+                    Some(cval) => walk(bval, cval, &sub, tol, out),
+                    None => {
+                        if leaf_is_perf(bval, key) {
+                            out.push(format!("{sub}: present in baseline, missing in candidate"));
+                        }
+                    }
+                }
+            }
+        }
+        Json::Arr(items) => {
+            let Json::Arr(cand_items) = cand else {
+                out.push(format!("{path}: baseline is an array, candidate is not"));
+                return;
+            };
+            for (i, bval) in items.iter().enumerate() {
+                let sub = format!("{path}[{}]", label_for(bval, i));
+                match cand_items.get(i) {
+                    Some(cval) => walk(bval, cval, &sub, tol, out),
+                    None => out.push(format!("{sub}: missing in candidate")),
+                }
+            }
+        }
+        Json::Num(bnum) => {
+            let key = path.rsplit('.').next().unwrap_or(path);
+            let dir = direction(key);
+            if dir == Direction::NotPerf {
+                return;
+            }
+            let Some(cnum) = cand.as_f64() else {
+                out.push(format!("{path}: baseline is a number, candidate is not"));
+                return;
+            };
+            check_leaf(path, *bnum, cnum, dir, tol, out);
+        }
+        _ => {}
+    }
+}
+
+/// A stable array-element label: the element's `name`/`codec`/`workload`
+/// tag when it has one, else the index.
+fn label_for(element: &Json, index: usize) -> String {
+    for tag in ["name", "workload", "codec", "dtype", "multiplier"] {
+        if let Some(v) = element.get(tag) {
+            if let Some(text) = v.as_str() {
+                return text.to_string();
+            }
+            if let Some(x) = v.as_f64() {
+                return format!("{tag}={x}");
+            }
+        }
+    }
+    index.to_string()
+}
+
+fn leaf_is_perf(value: &Json, key: &str) -> bool {
+    matches!(value, Json::Num(_)) && direction(key) != Direction::NotPerf
+}
+
+fn check_leaf(path: &str, base: f64, cand: f64, dir: Direction, tol: f64, out: &mut Vec<String>) {
+    if !base.is_finite() || !cand.is_finite() {
+        out.push(format!("{path}: non-finite value (baseline {base}, candidate {cand})"));
+        return;
+    }
+    if base.abs().max(cand.abs()) < COMPARE_NOISE_FLOOR {
+        return; // both below the noise floor — jitter, not signal
+    }
+    let factor = tol / 100.0;
+    let (worse, allowed) = match dir {
+        Direction::LowerIsBetter => (cand > base * (1.0 + factor), base * (1.0 + factor)),
+        Direction::HigherIsBetter => (cand < base * (1.0 - factor), base * (1.0 - factor)),
+        Direction::NotPerf => return,
+    };
+    if worse {
+        let change = if base.abs() > 1e-12 { (cand / base - 1.0) * 100.0 } else { f64::INFINITY };
+        out.push(format!(
+            "{path}: {cand:.6} vs baseline {base:.6} ({change:+.1}%, allowed {allowed:.6})"
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{arr, num, obj, s};
+
+    fn doc(secs: f64, qps: f64) -> Json {
+        obj(vec![
+            ("m", num(1000.0)),
+            ("wall_secs", num(secs)),
+            ("qps", num(qps)),
+            (
+                "cases",
+                arr(vec![obj(vec![
+                    ("name", s("panel_uniform")),
+                    ("secs", num(secs)),
+                    ("distance_evals", num(5e6)),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let base = doc(2.0, 100.0);
+        assert!(compare_docs(&base, &base, 10.0).is_empty());
+    }
+
+    #[test]
+    fn improvements_and_non_perf_drift_pass() {
+        let base = doc(2.0, 100.0);
+        // Faster, higher throughput, and a changed counter: all fine.
+        let mut cand = doc(1.0, 250.0);
+        if let Json::Obj(map) = &mut cand {
+            map.insert("m".into(), num(9999.0));
+        }
+        assert!(compare_docs(&base, &cand, 10.0).is_empty());
+    }
+
+    #[test]
+    fn slower_time_and_lower_throughput_fail() {
+        let base = doc(2.0, 100.0);
+        let cand = doc(3.0, 50.0);
+        let regressions = compare_docs(&base, &cand, 25.0);
+        // wall_secs, qps, and the per-case secs all regressed.
+        assert_eq!(regressions.len(), 3, "{regressions:?}");
+        assert!(regressions.iter().any(|r| r.starts_with("wall_secs:")));
+        assert!(regressions.iter().any(|r| r.starts_with("qps:")));
+        assert!(regressions.iter().any(|r| r.contains("cases[panel_uniform].secs")));
+    }
+
+    #[test]
+    fn tolerance_is_respected() {
+        let base = doc(2.0, 100.0);
+        let cand = doc(2.2, 95.0); // +10% on both timings, -5% qps
+        assert!(compare_docs(&base, &cand, 25.0).is_empty());
+        // At 5% the two timing leaves fail; qps sits exactly on the edge
+        // (strict inequality) and passes.
+        assert_eq!(compare_docs(&base, &cand, 5.0).len(), 2);
+    }
+
+    #[test]
+    fn missing_perf_key_is_a_regression() {
+        let base = doc(2.0, 100.0);
+        let mut cand = doc(2.0, 100.0);
+        if let Json::Obj(map) = &mut cand {
+            map.remove("qps");
+        }
+        let regressions = compare_docs(&base, &cand, 25.0);
+        assert_eq!(regressions.len(), 1);
+        assert!(regressions[0].contains("missing in candidate"));
+    }
+
+    #[test]
+    fn noise_floor_skips_tiny_timings() {
+        let base = obj(vec![("warm_secs", num(2e-4))]);
+        let cand = obj(vec![("warm_secs", num(9e-4))]); // 4.5× but microseconds
+        assert!(compare_docs(&base, &cand, 10.0).is_empty());
+    }
+
+    #[test]
+    fn ratio_keys_regress_upward() {
+        let base = obj(vec![("obs_enabled_vs_disabled_ratio", num(1.0))]);
+        let cand = obj(vec![("obs_enabled_vs_disabled_ratio", num(1.6))]);
+        assert_eq!(compare_docs(&base, &cand, 25.0).len(), 1);
+        assert!(compare_docs(&base, &cand, 100.0).is_empty());
+    }
+}

@@ -6,8 +6,11 @@
 //!   clustering details);
 //! * [`figures`] — Figures 1–4 series (distance evals / objective vs k)
 //!   and convergence traces;
-//! * [`report`] — markdown/CSV rendering into `target/reports/`.
+//! * [`report`] — markdown/CSV rendering into `target/reports/`;
+//! * [`compare`] — bench regression gating (`bench --compare`): diff two
+//!   bench JSON documents and flag perf leaves beyond a tolerance.
 
+pub mod compare;
 pub mod figures;
 pub mod report;
 pub mod runner;

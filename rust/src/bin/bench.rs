@@ -34,7 +34,12 @@
 //!   labels for whichever generation answered, and emits
 //!   `BENCH_serve.json` (QPS, rows/s, client-side p50/p95/p99).
 //!
-//! CI runs scaled-down versions of all five as non-gating smoke steps.
+//! CI runs scaled-down versions of all five as non-gating smoke steps,
+//! plus one *gating* regression check: `--compare BASELINE.json
+//! [--tolerance PCT]` diffs the suite's output document against a
+//! committed baseline after the run and exits nonzero when a perf leaf
+//! (wall time, throughput, speedup, overhead ratio) regressed beyond the
+//! tolerance (see `bench_harness::compare`).
 //!
 //! ```text
 //! cargo run --release --bin bench -- [--suite assign|tuner|io|final|serve|all]
@@ -42,6 +47,7 @@
 //!     [--tuner-out PATH] [--io-m N] [--io-s N] [--io-samples N] [--block-rows N]
 //!     [--io-out PATH] [--final-m N] [--final-out PATH] [--serve-batch N]
 //!     [--serve-workers N] [--serve-requests N] [--serve-out PATH]
+//!     [--compare BASELINE.json] [--tolerance PCT]
 //! ```
 
 use std::time::Instant;
@@ -695,7 +701,8 @@ fn main() {
              [--k N] [--iters N] [--shots N] [--s N] [--out PATH] [--tuner-out PATH] \
              [--io-m N] [--io-s N] [--io-samples N] [--block-rows N] [--io-out PATH] \
              [--final-m N] [--final-out PATH] [--serve-batch N] [--serve-workers N] \
-             [--serve-requests N] [--serve-out PATH]"
+             [--serve-requests N] [--serve-out PATH] [--compare BASELINE.json] \
+             [--tolerance PCT]"
         );
         return;
     }
@@ -784,6 +791,23 @@ fn main() {
         );
         cases.push(c);
 
+        // Flight-recorder A/B: the recorder alone (no metrics, no trace
+        // file) — the always-on configuration `cluster` ships with. Spans
+        // route into the bounded rings via the tracer's recorder tap, so
+        // this measures the actual shipped hot path; the overhead row must
+        // also stay within run-to-run noise.
+        obs::recorder().enable_unsinked();
+        let name = "panel_uniform_recorder";
+        eprint!("{name:<20} ");
+        let c = time_engine(name, &panel, &uniform, m, n, k, iters);
+        obs::recorder().disable_and_clear();
+        let recorder_ratio = c.secs / obs_off.max(1e-12);
+        eprintln!(
+            "{:>8.3}s  n_d {:.3e}  (flight recorder on; {recorder_ratio:.3}× vs disabled)",
+            c.secs, c.counters.distance_evals as f64
+        );
+        cases.push(c);
+
         let find = |name: &str| cases.iter().find(|c| c.name == name).unwrap();
         let bounded_blobs = find("bounded_blobs");
         let eval_ratio = full_evals / (bounded_blobs.counters.distance_evals as f64).max(1.0);
@@ -813,6 +837,7 @@ fn main() {
             ("fused_vs_reference_uniform_speedup", num(fused_speedup)),
             ("simd_vs_scalar_uniform_speedup", num(simd_speedup)),
             ("obs_enabled_vs_disabled_ratio", num(obs_ratio)),
+            ("recorder_enabled_vs_disabled_ratio", num(recorder_ratio)),
         ]);
         std::fs::write(&out_path, doc.to_string() + "\n")
             .map_err(|e| format!("write {out_path}: {e}"))?;
@@ -833,8 +858,56 @@ fn main() {
         Ok(_) => assign_suite(),
         Err(e) => Err(e),
     };
+    let result = result.and_then(|()| maybe_compare(&args));
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);
     }
+}
+
+/// `--compare BASELINE.json [--tolerance PCT]`: after the suite runs,
+/// diff its freshly written output document against a committed baseline
+/// and exit nonzero on any perf leaf beyond the tolerance — CI's bench
+/// regression gate.
+fn maybe_compare(args: &Args) -> Result<(), String> {
+    let Some(baseline_path) = args.get("compare") else {
+        return Ok(());
+    };
+    let tolerance = args.f64("tolerance", 25.0)?;
+    let suite = args.choice("suite", &["assign", "tuner", "io", "final", "serve", "all"])?;
+    let candidate_path = match suite {
+        "tuner" => args.get_or("tuner-out", "BENCH_tuner.json"),
+        "io" => args.get_or("io-out", "BENCH_io.json"),
+        "final" => args.get_or("final-out", "BENCH_final.json"),
+        "serve" => args.get_or("serve-out", "BENCH_serve.json"),
+        "all" => {
+            return Err(
+                "--compare gates one suite's document; run it per suite, not --suite all"
+                    .into(),
+            );
+        }
+        _ => args.get_or("out", "BENCH_assign.json"),
+    };
+    let read_doc = |p: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("{p}: {e}"))
+    };
+    let baseline = read_doc(baseline_path)?;
+    let candidate = read_doc(candidate_path)?;
+    let regressions =
+        bigmeans::bench_harness::compare::compare_docs(&baseline, &candidate, tolerance);
+    if regressions.is_empty() {
+        eprintln!(
+            "compare: ok — {candidate_path} within {tolerance}% of {baseline_path} on every \
+             perf leaf"
+        );
+        return Ok(());
+    }
+    for r in &regressions {
+        eprintln!("regression: {r}");
+    }
+    Err(format!(
+        "{} perf regression(s) in {candidate_path} vs {baseline_path} (tolerance {tolerance}%)",
+        regressions.len()
+    ))
 }

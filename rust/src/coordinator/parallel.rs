@@ -43,6 +43,19 @@ use crate::metrics::{Counters, PhaseTimer};
 use crate::obs;
 use crate::util::rng::Rng;
 
+/// Crash-path test hook: when `BIGMEANS_PANIC_IN_SHOT` is set, the first
+/// shot panics inside its `shot.lloyd` span. The env var is read once
+/// (relaxed `OnceLock`), so production shots pay one branch on a cached
+/// bool. Used by `tests/integration_panic.rs` to prove a mid-run panic
+/// still leaves a valid trace file and a diagnostics dump.
+#[inline]
+fn maybe_injected_panic() {
+    static INJECT: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    if *INJECT.get_or_init(|| std::env::var_os("BIGMEANS_PANIC_IN_SHOT").is_some()) {
+        panic!("injected shot panic (BIGMEANS_PANIC_IN_SHOT)");
+    }
+}
+
 /// Worker-progress monitor: chunk totals plus worker liveness under one
 /// mutex, with a condvar the coordinator blocks on. Workers notify after
 /// each processed chunk and once on exit, so the coordinator wakes exactly
@@ -205,8 +218,10 @@ impl<'a> ShotExecutor<'a> {
         scorer: Option<&ShotScorer>,
     ) -> ShotReport {
         let tracer = obs::tracer();
+        let sink = obs::report_sink();
         // One branch when everything is off: no clock reads, no deltas.
-        let t0 = (tracer.enabled() || obs::metrics().enabled()).then(Instant::now);
+        let t0 = (tracer.enabled() || obs::metrics().enabled() || sink.enabled())
+            .then(Instant::now);
         let base_evals = counters.distance_evals;
         let base_pruned = counters.pruned_evals;
         let base_switches = counters.hybrid_switches;
@@ -234,6 +249,7 @@ impl<'a> ShotExecutor<'a> {
         }
         let result = {
             let _span = tracer.span("shot.lloyd", "lloyd");
+            maybe_injected_panic();
             self.solver.lloyd(chunk, rows, n, k, &seed_c, counters)
         };
         counters.chunk_iterations += result.iters as u64;
@@ -260,6 +276,13 @@ impl<'a> ShotExecutor<'a> {
             self.obs.pruned_evals.add(counters.pruned_evals - base_pruned);
             self.obs.hybrid_switches.add(counters.hybrid_switches - base_switches);
             self.obs.chunks.inc();
+            sink.record_shot(
+                result.objective,
+                offered,
+                accepted,
+                result.iters,
+                Some(t0.elapsed().as_secs_f64()),
+            );
         }
         ShotReport {
             chunk_objective: result.objective,

@@ -304,7 +304,19 @@ impl StreamingBigMeans {
             counters.chunk_iterations += result.iters as u64;
             counters.chunks += 1;
             stop.record_chunk();
-            if result.objective < incumbent.objective {
+            let improved = result.objective < incumbent.objective;
+            // Report-sink tap (no-op unless `--report` enabled it): the
+            // stream loop is its own chunk pipeline, not a ShotExecutor,
+            // so it records its descent trace here. No per-chunk timing —
+            // streaming never reads the clock per chunk.
+            crate::obs::report_sink().record_shot(
+                result.objective,
+                result.objective,
+                improved,
+                result.iters,
+                None,
+            );
+            if improved {
                 incumbent = Solution {
                     degenerate: degenerate_indices(&result.counts),
                     centroids: result.centroids,

@@ -107,6 +107,18 @@ SUBCOMMANDS:
                         chrome://tracing (see docs/OBSERVABILITY.md)
       --metrics-out P   write the run's metric registry to P as Prometheus
                         text exposition (validate with `metrics-lint`)
+      --metrics-push A  POST the final exposition to a Prometheus push
+                        gateway at A (HOST:PORT) when the run exits —
+                        batch runs finish faster than a scrape interval
+      --report P        write a versioned run-report JSON to P: per-shot
+                        objective descent, bandit audit (tune), drift
+                        audit (stream), counters, config echo. Render it
+                        with `bigmeans report P out.html`
+      --diag P          flight-recorder crash-dump path (default
+                        bigmeans.diag.json). The recorder is always on:
+                        a panic or SIGTERM writes the most recent spans,
+                        warn/error logs, and metric snapshots to P,
+                        naming the span that was open when the run died
       --log-level L     error | warn | info | debug | trace (default info;
                         BIGMEANS_LOG env is the fallback) — accepted by
                         every subcommand
@@ -167,13 +179,18 @@ SUBCOMMANDS:
       --watch           poll the .bmm file and hot-swap refreshed models
                         without dropping in-flight requests
       --watch-ms N      watch poll cadence in ms (default 500)
-      --metrics-addr A  expose the metric registry as Prometheus text
-                        exposition over HTTP (`GET /metrics`) at A,
-                        e.g. 127.0.0.1:9091
+      --metrics-addr A  expose the metric registry over HTTP at A, e.g.
+                        127.0.0.1:9091 — `GET /metrics` is Prometheus
+                        text exposition, `GET /healthz` a JSON health
+                        document (model generation + swap history)
+      --diag P          flight-recorder crash-dump path (without it the
+                        recorder still runs, answering `query --op
+                        dump-diagnostics`, but crashes dump nowhere)
       --json            print the serving stats document on exit
   query <host:port>   One-shot client for a running daemon
-      --op O            assign | score | stats | ping | shutdown
-                        (default assign)
+      --op O            assign | score | stats | ping | dump-diagnostics
+                        | shutdown (default assign); dump-diagnostics
+                        prints the daemon's flight-recorder document
       --file F          assign/score: dataset file (.csv/.fbin/.bmx) whose
                         leading rows become the query batch
       --rows N          assign/score: batch rows (default min(m, 1024))
@@ -181,9 +198,14 @@ SUBCOMMANDS:
                         stats already prints JSON)
   metrics-lint <a.prom> [b.prom]   Validate Prometheus exposition files
                       (CI's scrape gate); given a second, later scrape,
-                      also check counter monotonicity across the two
+                      also check counter monotonicity across the two.
+                      `.json` arguments are linted as `cluster --report`
+                      run-report documents instead
   trace-lint <t.json> Validate a Chrome trace-event document
       --min-cats N      require ≥ N distinct span categories (default 1)
+  report <run.json> <out.html>   Render a `cluster --report` document as
+                      a self-contained HTML page (inline SVG descent and
+                      latency charts, no external assets)
 
 Metric families, trace schema, Grafana quickstart: docs/OBSERVABILITY.md
 ";
@@ -229,6 +251,7 @@ fn main() {
         "query" => cmd_query(&args),
         "metrics-lint" => cmd_metrics_lint(&args),
         "trace-lint" => cmd_trace_lint(&args),
+        "report" => cmd_report(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -383,15 +406,25 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     cfg.skip_final_assignment = args.flag("skip-final");
     cfg.engine = engine;
 
-    // Observability sinks. Both are pure observers: enabling them never
+    // Observability sinks. All are pure observers: enabling them never
     // changes labels or objectives (gated by tests/property_obs.rs).
     let metrics_out = args.get("metrics-out").map(PathBuf::from);
-    if metrics_out.is_some() {
+    let metrics_push = args.get("metrics-push").map(str::to_string);
+    if metrics_out.is_some() || metrics_push.is_some() {
         obs::metrics().enable();
         obs::register_core(kernel.name(), active_isa().name());
     }
     if let Some(p) = args.get("trace") {
         obs::tracer().enable(Path::new(p));
+    }
+    // The flight recorder is always on: a panic or SIGTERM dumps the last
+    // few seconds of spans/logs/metric snapshots to the --diag path, and
+    // the crash handlers close the --trace JSON so it stays parseable.
+    obs::recorder().enable(Path::new(args.get_or("diag", "bigmeans.diag.json")));
+    obs::install_crash_handlers();
+    let report_out = args.get("report").map(PathBuf::from);
+    if report_out.is_some() {
+        obs::report_sink().enable();
     }
 
     // The config's backend choice decides how the dataset file is opened.
@@ -416,12 +449,12 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         }
         "tune" => {
             let run = run_tune(args, cfg, data);
-            flush_obs(metrics_out.as_deref())?;
+            flush_obs(metrics_out.as_deref(), metrics_push.as_deref())?;
             return run;
         }
         "stream" => {
             let run = run_stream(args, cfg, data);
-            flush_obs(metrics_out.as_deref())?;
+            flush_obs(metrics_out.as_deref(), metrics_push.as_deref())?;
             return run;
         }
         _ => {}
@@ -464,20 +497,85 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         );
         println!("{}", doc.to_string());
     }
-    flush_obs(metrics_out.as_deref())
+    if let Some(path) = report_out.as_deref() {
+        let mut rep = obs::RunReport::new(mode_arg);
+        rep.config = report_config(data.name(), data.m(), data.n(), k, s, engine_arg, backend);
+        rep.shots = obs::report_sink().drain();
+        rep.result = vec![
+            ("objective", fnum(r.objective)),
+            ("best_chunk_objective", fnum(r.best_chunk_objective)),
+            ("improvements", num(r.improvements as f64)),
+            ("cpu_init_secs", num(r.cpu_init_secs)),
+            ("cpu_full_secs", num(r.cpu_full_secs)),
+            ("wall_secs", num(wall)),
+        ];
+        rep.counters = report_counters(&r.counters);
+        write_report(path, &rep)?;
+    }
+    flush_obs(metrics_out.as_deref(), metrics_push.as_deref())
 }
 
 /// Flush the per-run observability sinks: the `--metrics-out` Prometheus
-/// exposition and the `--trace` Chrome trace document.
-fn flush_obs(metrics_out: Option<&Path>) -> Result<(), String> {
+/// exposition, the `--metrics-push` gateway POST, and the `--trace`
+/// Chrome trace document.
+fn flush_obs(metrics_out: Option<&Path>, metrics_push: Option<&str>) -> Result<(), String> {
     if let Some(path) = metrics_out {
         std::fs::write(path, obs::metrics().render())
             .map_err(|e| format!("write metrics {}: {e}", path.display()))?;
         log_info!("obs", "wrote metrics exposition {}", path.display());
     }
+    if let Some(addr) = metrics_push {
+        obs::http::push_exposition(addr, "bigmeans", &obs::metrics().render())?;
+        log_info!("obs", "pushed metrics exposition to {addr}");
+    }
     if let Some(path) = obs::tracer().flush()? {
         log_info!("obs", "wrote trace {}", path.display());
     }
+    Ok(())
+}
+
+/// Run-configuration echo shared by every mode's `--report` document.
+fn report_config(
+    dataset: &str,
+    m: usize,
+    n: usize,
+    k: usize,
+    chunk_size: usize,
+    engine: &str,
+    backend: DataBackend,
+) -> Vec<(&'static str, Json)> {
+    vec![
+        ("dataset", jstr(dataset)),
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("chunk_size", num(chunk_size as f64)),
+        ("engine", jstr(engine)),
+        ("isa", jstr(active_isa().name())),
+        ("backend", jstr(&format!("{backend:?}"))),
+    ]
+}
+
+/// The work counters every mode's `--report` document carries.
+fn report_counters(c: &bigmeans::metrics::Counters) -> Vec<(&'static str, Json)> {
+    vec![
+        ("distance_evals", num(c.distance_evals as f64)),
+        ("pruned_evals", num(c.pruned_evals as f64)),
+        ("pruned_blocks", num(c.pruned_blocks as f64)),
+        ("hybrid_switches", num(c.hybrid_switches as f64)),
+        ("chunks", num(c.chunks as f64)),
+        ("chunk_iterations", num(c.chunk_iterations as f64)),
+        ("full_iterations", num(c.full_iterations as f64)),
+    ]
+}
+
+/// Lint and write one `--report` run-report JSON document.
+fn write_report(path: &Path, report: &obs::RunReport) -> Result<(), String> {
+    let doc = report.to_json();
+    obs::report::lint_report(&doc).map_err(|e| format!("internal: {e}"))?;
+    std::fs::write(path, doc.to_string() + "\n")
+        .map_err(|e| format!("write report {}: {e}", path.display()))?;
+    log_info!("obs", "wrote run report {}", path.display());
     Ok(())
 }
 
@@ -536,6 +634,29 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
         ]);
         println!("{}", doc.to_string());
     }
+    if let Some(path) = args.get("report").map(PathBuf::from) {
+        let mut rep = obs::RunReport::new("tune");
+        rep.config = report_config(
+            data.name(),
+            data.m(),
+            data.n(),
+            cfg.k,
+            cfg.chunk_size,
+            cfg.kernel.name(),
+            cfg.backend,
+        );
+        rep.shots = obs::report_sink().drain();
+        rep.result = vec![
+            ("objective", fnum(r.objective)),
+            ("validation_objective", fnum(race.validation_objective)),
+            ("chosen_chunk_rows", num(race.chosen_chunk_rows as f64)),
+            ("improvements", num(r.improvements as f64)),
+            ("wall_secs", num(wall)),
+        ];
+        rep.counters = report_counters(&r.counters);
+        rep.tuner = Some(race.trace.to_json());
+        write_report(&path, &rep)?;
+    }
     Ok(())
 }
 
@@ -562,6 +683,8 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
         other => other.map(PathBuf::from),
     };
     let rows_per_chunk = cfg.chunk_size.max(1);
+    // The config moves into the engine; the report echo needs these after.
+    let (cfg_k, cfg_kernel, cfg_backend) = (cfg.k, cfg.kernel, cfg.backend);
     let n = data.n();
     let engine = StreamingBigMeans::new(cfg, n)
         .with_validation(validate_every, validation_rows)
@@ -650,6 +773,45 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
         ]);
         println!("{}", doc.to_string());
     }
+    if let Some(path) = args.get("report").map(PathBuf::from) {
+        let mut rep = obs::RunReport::new("stream");
+        rep.config = report_config(
+            data.name(),
+            data.m(),
+            data.n(),
+            cfg_k,
+            rows_per_chunk,
+            cfg_kernel.name(),
+            cfg_backend,
+        );
+        rep.shots = obs::report_sink().drain();
+        rep.result = vec![
+            ("best_chunk_objective", fnum(r.best_chunk_objective)),
+            ("chunks", num(r.chunks_processed as f64)),
+            ("improvements", num(r.improvements as f64)),
+            ("wall_secs", num(wall)),
+        ];
+        rep.counters = report_counters(&r.counters);
+        rep.stream = Some(obj(vec![
+            ("drift_events", num(r.drift_events as f64)),
+            ("remediations", num(r.remediations as f64)),
+            (
+                "validation_trace",
+                bigmeans::util::json::arr(
+                    r.validation_trace
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("chunk", num(p.chunk as f64)),
+                                ("objective", fnum(p.objective)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+        write_report(&path, &rep)?;
+    }
     Ok(())
 }
 
@@ -700,18 +862,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
     let path = PathBuf::from(model_path);
     apply_isa_flag(args)?;
+    // The flight recorder always runs (it feeds the dump-diagnostics op);
+    // crashes only write a file when --diag names one.
+    match args.get("diag") {
+        Some(p) => obs::recorder().enable(Path::new(p)),
+        None => obs::recorder().enable_unsinked(),
+    }
+    obs::install_crash_handlers();
     // Enable metrics before the model registry and server exist, so their
     // boot-time registrations (swap gauge, per-op families) record.
-    let metrics_server = match args.get("metrics-addr") {
-        None => None,
-        Some(maddr) => {
-            obs::metrics().enable();
-            obs::register_core("serve", active_isa().name());
-            let ms = obs::MetricsServer::start(maddr, obs::metrics())?;
-            log_info!("serve", "metrics exposition on http://{}/metrics", ms.addr());
-            Some(ms)
-        }
-    };
+    let metrics_addr = args.get("metrics-addr");
+    if metrics_addr.is_some() {
+        obs::metrics().enable();
+        obs::register_core("serve", active_isa().name());
+    }
     let artifact = ModelArtifact::load(&path).map_err(|e| e.to_string())?;
     let identity = (artifact.generation, artifact.payload_crc());
     log_info!(
@@ -724,6 +888,24 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     );
     log_info!("serve", "distance kernels: isa={}", active_isa().name());
     let registry = ModelRegistry::new(artifact);
+    let metrics_server = match metrics_addr {
+        None => None,
+        Some(maddr) => {
+            let health_registry = Arc::clone(&registry);
+            let health: obs::http::HealthFn = Arc::new(move || {
+                obj(vec![
+                    ("status", jstr("ok")),
+                    ("generation", num(health_registry.generation() as f64)),
+                    ("swaps", num(health_registry.swaps() as f64)),
+                    ("swap_history", health_registry.history_json()),
+                ])
+            });
+            let ms =
+                obs::MetricsServer::start_with_health(maddr, obs::metrics(), Some(health))?;
+            log_info!("serve", "metrics exposition on http://{}/metrics", ms.addr());
+            Some(ms)
+        }
+    };
     let opts = ServeOptions {
         threads: args.usize("threads", 0)?,
         max_batch_rows: args.usize("max-batch", 1 << 20)?,
@@ -770,14 +952,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 fn cmd_query(args: &Args) -> Result<(), String> {
     let Some(addr) = args.positional().first() else {
         return Err(
-            "usage: query <host:port> [--op assign|score|stats|ping|shutdown]".into()
+            "usage: query <host:port> \
+             [--op assign|score|stats|ping|dump-diagnostics|shutdown]"
+                .into(),
         );
     };
-    let op = args.choice("op", &["assign", "score", "stats", "ping", "shutdown"])?;
+    let op = args
+        .choice("op", &["assign", "score", "stats", "ping", "dump-diagnostics", "shutdown"])?;
     let mut client = Client::connect(addr).map_err(|e| e.to_string())?;
     match op {
         "stats" => {
             let (generation, json) = client.stats().map_err(|e| e.to_string())?;
+            eprintln!("swap generation {generation}");
+            println!("{json}");
+            return Ok(());
+        }
+        "dump-diagnostics" => {
+            let (generation, json) = client.dump_diagnostics().map_err(|e| e.to_string())?;
             eprintln!("swap generation {generation}");
             println!("{json}");
             return Ok(());
@@ -873,9 +1064,18 @@ fn cmd_query(args: &Args) -> Result<(), String> {
 fn cmd_metrics_lint(args: &Args) -> Result<(), String> {
     let pos = args.positional();
     if pos.is_empty() || pos.len() > 2 {
-        return Err("usage: metrics-lint <scrape.prom> [later-scrape.prom]".into());
+        return Err("usage: metrics-lint <scrape.prom|report.json> [later-scrape.prom]".into());
     }
     let read = |p: &str| std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"));
+    if pos[0].ends_with(".json") {
+        // Run-report documents ride the same CI lint gate as expositions.
+        for p in pos {
+            let doc = Json::parse(&read(p)?).map_err(|e| format!("{p}: {e}"))?;
+            let shots = obs::report::lint_report(&doc).map_err(|e| format!("{p}: {e}"))?;
+            println!("{p}: ok — run report, {shots} shots");
+        }
+        return Ok(());
+    }
     let first = obs::lint::lint_exposition(&read(&pos[0])?)
         .map_err(|e| format!("{}: {e}", pos[0]))?;
     println!("{}: ok — {} families, {} samples", pos[0], first.families.len(), first.samples);
@@ -933,6 +1133,28 @@ fn cmd_trace_lint(args: &Args) -> Result<(), String> {
         ));
     }
     println!("{path}: ok — {} events across {} categories ({listed})", events.len(), cats.len());
+    Ok(())
+}
+
+/// `report <run.json> <out.html>`: render a `cluster --report` document
+/// as a self-contained HTML page (lints the document first, so a broken
+/// report fails loudly instead of rendering an empty page).
+fn cmd_report(args: &Args) -> Result<(), String> {
+    let pos = args.positional();
+    if pos.len() != 2 {
+        return Err("usage: report <run.json> <out.html>".into());
+    }
+    let text =
+        std::fs::read_to_string(&pos[0]).map_err(|e| format!("read {}: {e}", pos[0]))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", pos[0]))?;
+    let shots = obs::report::lint_report(&doc).map_err(|e| format!("{}: {e}", pos[0]))?;
+    let html = obs::report::render_html(&doc);
+    std::fs::write(&pos[1], &html).map_err(|e| format!("write {}: {e}", pos[1]))?;
+    eprintln!(
+        "wrote {} ({shots} shots, {:.1} KiB, self-contained)",
+        pos[1],
+        html.len() as f64 / 1024.0
+    );
     Ok(())
 }
 

@@ -1,12 +1,20 @@
-//! Minimal HTTP/1.1 responder for `GET /metrics`.
+//! Minimal HTTP/1.1 responder for `GET /metrics` + `GET /healthz`, and
+//! a push-gateway client for batch runs.
 //!
 //! Serves Prometheus text exposition from the process registry on a
 //! dedicated listener (`serve --metrics-addr HOST:PORT`), independent of
 //! the custom TCP protocol port so scrapers never contend with assign
-//! traffic. One request per connection (`Connection: close`), headers
-//! capped at 8 KiB, anything but `GET /metrics` answered 404. Shutdown
-//! follows the serve daemon's pattern: set the stop flag, then self-
-//! connect to wake the blocking `accept`.
+//! traffic. `GET /healthz` answers a JSON health document — liveness plus
+//! whatever the daemon's health callback reports (model generation,
+//! swap-generation history). One request per connection
+//! (`Connection: close`), headers capped at 8 KiB, anything else answered
+//! 404. Shutdown follows the serve daemon's pattern: set the stop flag,
+//! then self-connect to wake the blocking `accept`.
+//!
+//! [`push_exposition`] is the other direction: a batch `cluster` run that
+//! finishes inside one scrape interval would never be scraped, so
+//! `--metrics-push HOST:PORT` POSTs the final exposition to a Prometheus
+//! push gateway at exit (standard `/metrics/job/<job>` path).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -15,9 +23,15 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::util::json::Json;
+
 use super::Registry;
 
 const MAX_HEADER_BYTES: usize = 8 * 1024;
+
+/// Health-document callback for `GET /healthz` (the serve daemon passes
+/// one reporting model generation and swap history).
+pub type HealthFn = Arc<dyn Fn() -> Json + Send + Sync>;
 
 /// Handle to a running metrics listener; [`MetricsServer::shutdown`]
 /// stops it and joins the accept thread.
@@ -29,8 +43,19 @@ pub struct MetricsServer {
 
 impl MetricsServer {
     /// Bind `addr` and serve `registry.render()` on `GET /metrics` until
-    /// [`MetricsServer::shutdown`].
+    /// [`MetricsServer::shutdown`]. `/healthz` answers a plain liveness
+    /// document.
     pub fn start(addr: &str, registry: &'static Registry) -> Result<MetricsServer, String> {
+        Self::start_with_health(addr, registry, None)
+    }
+
+    /// [`MetricsServer::start`] with a health callback: `GET /healthz`
+    /// answers its JSON document (status, generation, swap history).
+    pub fn start_with_health(
+        addr: &str,
+        registry: &'static Registry,
+        health: Option<HealthFn>,
+    ) -> Result<MetricsServer, String> {
         let listener =
             TcpListener::bind(addr).map_err(|e| format!("metrics: bind {addr}: {e}"))?;
         let local = listener
@@ -46,7 +71,7 @@ impl MetricsServer {
                         break;
                     }
                     match conn {
-                        Ok(stream) => handle_request(stream, registry),
+                        Ok(stream) => handle_request(stream, registry, health.as_ref()),
                         Err(e) => {
                             crate::log_warn!("obs.http", "accept failed: {e}");
                         }
@@ -86,7 +111,7 @@ impl Drop for MetricsServer {
     }
 }
 
-fn handle_request(mut stream: TcpStream, registry: &Registry) {
+fn handle_request(mut stream: TcpStream, registry: &Registry, health: Option<&HealthFn>) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
     let mut buf = Vec::with_capacity(512);
@@ -119,8 +144,20 @@ fn handle_request(mut stream: TcpStream, registry: &Registry) {
             body.len(),
             body
         )
+    } else if method == "GET" && (path == "/healthz" || path == "/healthz/") {
+        let doc = match health {
+            Some(h) => h(),
+            None => crate::util::json::obj(vec![("status", crate::util::json::s("ok"))]),
+        };
+        let body = doc.to_string() + "\n";
+        format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: application/json; charset=utf-8\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        )
     } else {
-        let body = "not found; try GET /metrics\n";
+        let body = "not found; try GET /metrics or GET /healthz\n";
         format!(
             "HTTP/1.1 404 Not Found\r\nContent-Type: text/plain; charset=utf-8\r\n\
              Content-Length: {}\r\nConnection: close\r\n\r\n{}",
@@ -130,6 +167,54 @@ fn handle_request(mut stream: TcpStream, registry: &Registry) {
     };
     let _ = stream.write_all(response.as_bytes());
     let _ = stream.flush();
+}
+
+/// POST a Prometheus text exposition to a push gateway at
+/// `addr` (`HOST:PORT`), under the standard `/metrics/job/<job>` grouping
+/// path. Same hand-rolled HTTP/1.1 framing as the responder above; any
+/// non-2xx status (or no status at all) is an error.
+pub fn push_exposition(addr: &str, job: &str, body: &str) -> Result<(), String> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| format!("metrics-push: connect {addr}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let request = format!(
+        "POST /metrics/job/{job} HTTP/1.1\r\nHost: {addr}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream
+        .write_all(request.as_bytes())
+        .map_err(|e| format!("metrics-push: send to {addr}: {e}"))?;
+    let _ = stream.flush();
+    let mut response = Vec::new();
+    let mut chunk = [0u8; 512];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                response.extend_from_slice(&chunk[..n]);
+                if response.len() >= MAX_HEADER_BYTES || response.windows(2).any(|w| w == b"\r\n")
+                {
+                    break; // the status line is all we need
+                }
+            }
+            Err(e) => return Err(format!("metrics-push: read status from {addr}: {e}")),
+        }
+    }
+    let status_line = std::str::from_utf8(&response)
+        .ok()
+        .and_then(|t| t.lines().next())
+        .unwrap_or("")
+        .to_string();
+    let code = status_line.split_whitespace().nth(1).and_then(|c| c.parse::<u16>().ok());
+    match code {
+        Some(c) if (200..300).contains(&c) => Ok(()),
+        Some(c) => Err(format!("metrics-push: gateway {addr} answered {c}: {status_line}")),
+        None => Err(format!("metrics-push: no HTTP status from {addr}: '{status_line}'")),
+    }
 }
 
 #[cfg(test)]
@@ -167,5 +252,77 @@ mod tests {
         assert!(missing.starts_with("HTTP/1.1 404"), "got: {missing}");
 
         server.shutdown();
+    }
+
+    #[test]
+    fn healthz_answers_default_and_callback_documents() {
+        let registry: &'static Registry = Box::leak(Box::new(Registry::new()));
+        let server = MetricsServer::start("127.0.0.1:0", registry).expect("start");
+        let plain = http_get(server.addr(), "/healthz");
+        assert!(plain.starts_with("HTTP/1.1 200 OK\r\n"), "got: {plain}");
+        assert!(plain.contains("\"status\":\"ok\""));
+        server.shutdown();
+
+        let health: HealthFn = Arc::new(|| {
+            crate::util::json::obj(vec![
+                ("status", crate::util::json::s("ok")),
+                ("generation", crate::util::json::num(7.0)),
+            ])
+        });
+        let server = MetricsServer::start_with_health("127.0.0.1:0", registry, Some(health))
+            .expect("start with health");
+        let body = http_get(server.addr(), "/healthz");
+        assert!(body.contains("application/json"), "got: {body}");
+        assert!(body.contains("\"generation\":7"), "got: {body}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn push_exposition_posts_and_checks_status() {
+        use std::io::BufRead;
+        // A one-shot fake gateway: accept, read the request, answer 202.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream);
+            let mut request_line = String::new();
+            reader.read_line(&mut request_line).unwrap();
+            let mut len = 0usize;
+            loop {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                if let Some(v) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+                    len = v.trim().parse().unwrap();
+                }
+                if line == "\r\n" {
+                    break;
+                }
+            }
+            let mut body = vec![0u8; len];
+            reader.read_exact(&mut body).unwrap();
+            let mut stream = reader.into_inner();
+            stream
+                .write_all(b"HTTP/1.1 202 Accepted\r\nContent-Length: 0\r\n\r\n")
+                .unwrap();
+            (request_line, String::from_utf8(body).unwrap())
+        });
+        let exposition = "# TYPE push_test_total counter\npush_test_total 5\n";
+        push_exposition(&addr.to_string(), "bigmeans", exposition).expect("push ok");
+        let (request_line, body) = seen.join().unwrap();
+        assert!(request_line.starts_with("POST /metrics/job/bigmeans HTTP/1.1"));
+        assert_eq!(body, exposition);
+
+        // A gateway that answers 500 must surface as an error.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut sink = [0u8; 1024];
+            let _ = stream.read(&mut sink);
+            let _ = stream.write_all(b"HTTP/1.1 500 Internal Server Error\r\n\r\n");
+        });
+        let err = push_exposition(&addr.to_string(), "bigmeans", "x 1\n").unwrap_err();
+        assert!(err.contains("500"), "got: {err}");
     }
 }

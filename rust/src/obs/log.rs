@@ -86,9 +86,18 @@ pub fn enabled(level: Level) -> bool {
     level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
 }
 
-/// Emit one record (already level-gated by the macros).
+/// Emit one record (already level-gated by the macros). Warn/error
+/// records are also tapped into the flight recorder when it is enabled,
+/// so a crash dump carries the run's recent complaints.
 pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
-    eprintln!("{} {:<5} {target}: {args}", timestamp_utc(), level.name());
+    let ts = timestamp_utc();
+    if level <= Level::Warn {
+        let recorder = crate::obs::recorder::recorder();
+        if recorder.enabled() {
+            recorder.record_log(&ts, level.name(), target, &format!("{args}"));
+        }
+    }
+    eprintln!("{ts} {:<5} {target}: {args}", level.name());
 }
 
 /// `YYYY-MM-DDTHH:MM:SS.mmmZ` from the system clock, hand-rolled (no

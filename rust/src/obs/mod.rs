@@ -14,21 +14,34 @@
 //! * [`log`] — leveled, timestamped, target-tagged stderr records
 //!   (`--log-level`, `BIGMEANS_LOG`) replacing ad-hoc `eprintln!`.
 //!
+//! Two diagnostics rungs sit on top: [`recorder`] — an always-on bounded
+//! flight recorder (recent spans, warn/error records, metric snapshots)
+//! dumped on panic/SIGTERM/demand — and [`report`] — versioned per-run
+//! JSON reports (`cluster --report`) rendered to self-contained HTML by
+//! the `report` subcommand.
+//!
 //! [`lint`] validates exposition documents (CI's scrape gate) and
-//! [`http`] serves `GET /metrics` for `serve --metrics-addr`.
+//! [`http`] serves `GET /metrics` + `GET /healthz` for
+//! `serve --metrics-addr`, plus the push-gateway client
+//! ([`http::push_exposition`]) for batch runs shorter than a scrape
+//! interval.
 //!
 //! The full metric catalogue lives in `docs/OBSERVABILITY.md`.
 
 pub mod http;
 pub mod lint;
 pub mod log;
+pub mod recorder;
 pub mod registry;
+pub mod report;
 pub mod trace;
 
 use std::sync::OnceLock;
 
 pub use http::MetricsServer;
+pub use recorder::{install_crash_handlers, recorder, Recorder};
 pub use registry::{Counter, Gauge, Histogram, Kind, Log2Histogram, Registry};
+pub use report::{report_sink, ReportSink, RunReport};
 pub use trace::{tracer, Span, Tracer};
 
 /// The process-wide metric registry. Disabled until [`Registry::enable`];

@@ -1,0 +1,521 @@
+//! Always-on bounded flight recorder: the last few seconds of a run,
+//! dumpable at the moment of death.
+//!
+//! Metrics answer "how much", traces answer "where did the time go" — but
+//! both are lost (or were never enabled) when a process dies mid-run. The
+//! recorder keeps a bounded ring of the most recent span completions, every
+//! warn/error log record, and periodic metric snapshots, so a panic hook, a
+//! SIGTERM handler, or a serve `dump-diagnostics` request can write one
+//! diagnostics JSON naming the span that was open when the world ended.
+//!
+//! Contracts (same as the rest of `obs`, gated by `tests/property_obs.rs`):
+//!
+//! * **Observers never participate**: when disabled, every tap is one
+//!   relaxed atomic load; when enabled, writers claim a ring slot with a
+//!   `fetch_add` and a `try_lock` — they *never block* (a contended slot
+//!   counts a drop instead), so the recorder cannot perturb scheduling.
+//! * **Bounded memory**: each ring holds a fixed number of slots and
+//!   overwrites the oldest entry; nothing grows with run length.
+//! * **Bit-identicality**: labels and objective are bit-identical with the
+//!   recorder enabled or disabled.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::sync::lock_recover;
+
+/// Span-completion ring capacity.
+pub const SPAN_RING_CAP: usize = 256;
+/// Warn/error log-record ring capacity.
+pub const LOG_RING_CAP: usize = 128;
+/// Metric-snapshot ring capacity.
+pub const SNAPSHOT_RING_CAP: usize = 8;
+/// Per-snapshot exposition cap (snapshots beyond it are truncated).
+pub const SNAPSHOT_MAX_BYTES: usize = 16 * 1024;
+/// Minimum microseconds between periodic metric snapshots.
+pub const SNAPSHOT_PERIOD_US: u64 = 1_000_000;
+/// Schema tag of the diagnostics document.
+pub const DIAGNOSTICS_SCHEMA: &str = "bigmeans.diagnostics.v1";
+
+/// Bounded multi-producer ring: a slot is claimed by `fetch_add` on the
+/// head sequence and written under a `try_lock` — a writer that loses the
+/// (rare) race for a wrapping slot drops its entry rather than block.
+struct Ring<T: Clone> {
+    slots: Vec<Mutex<Option<(u64, T)>>>,
+    head: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl<T: Clone> Ring<T> {
+    fn new(cap: usize) -> Ring<T> {
+        Ring {
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    fn push(&self, value: T) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        match slot.try_lock() {
+            Ok(mut guard) => *guard = Some((seq, value)),
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Entries ever pushed (survivors are the newest `cap` of these).
+    fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Non-destructive snapshot, oldest first.
+    fn collect_sorted(&self) -> Vec<T> {
+        let mut entries: Vec<(u64, T)> = self
+            .slots
+            .iter()
+            .filter_map(|slot| lock_recover(slot).clone())
+            .collect();
+        entries.sort_by_key(|(seq, _)| *seq);
+        entries.into_iter().map(|(_, v)| v).collect()
+    }
+
+    fn clear(&self) {
+        for slot in &self.slots {
+            *lock_recover(slot) = None;
+        }
+        self.head.store(0, Ordering::Relaxed);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+#[derive(Clone)]
+struct SpanRec {
+    cat: &'static str,
+    name: String,
+    ts_us: u64,
+    dur_us: u64,
+}
+
+#[derive(Clone)]
+struct LogRec {
+    ts: String,
+    level: &'static str,
+    target: String,
+    message: String,
+}
+
+#[derive(Clone)]
+struct SnapRec {
+    at_us: u64,
+    exposition: String,
+}
+
+thread_local! {
+    /// Open spans on this thread, innermost last — what the panic hook
+    /// reads to name the span that was live when the thread died.
+    static SPAN_STACK: RefCell<Vec<(&'static str, Cow<'static, str>)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// The process-wide flight recorder (see [`recorder`]).
+pub struct Recorder {
+    enabled: AtomicBool,
+    epoch: Instant,
+    spans: Ring<SpanRec>,
+    logs: Ring<LogRec>,
+    snapshots: Ring<SnapRec>,
+    last_snapshot_us: AtomicU64,
+    diag_path: Mutex<Option<PathBuf>>,
+    crash_dumped: AtomicBool,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            spans: Ring::new(SPAN_RING_CAP),
+            logs: Ring::new(LOG_RING_CAP),
+            snapshots: Ring::new(SNAPSHOT_RING_CAP),
+            last_snapshot_us: AtomicU64::new(0),
+            diag_path: Mutex::new(None),
+            crash_dumped: AtomicBool::new(false),
+        }
+    }
+
+    /// Start recording, dumping to `path` on crash (panic or SIGTERM).
+    pub fn enable(&self, path: &Path) {
+        *lock_recover(&self.diag_path) = Some(path.to_path_buf());
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Start recording with no crash-dump file (tests, serve-op-only use).
+    pub fn enable_unsinked(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop recording and clear every ring.
+    pub fn disable_and_clear(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+        *lock_recover(&self.diag_path) = None;
+        self.spans.clear();
+        self.logs.clear();
+        self.snapshots.clear();
+        self.last_snapshot_us.store(0, Ordering::Relaxed);
+        self.crash_dumped.store(false, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// The configured crash-dump path, if any.
+    pub fn diag_path(&self) -> Option<PathBuf> {
+        lock_recover(&self.diag_path).clone()
+    }
+
+    /// Tap: one completed span (called by the tracer; pre-gated there).
+    pub(crate) fn record_span(&self, cat: &'static str, name: &str, ts_us: u64, dur_us: u64) {
+        self.spans.push(SpanRec { cat, name: name.to_string(), ts_us, dur_us });
+        self.maybe_snapshot(ts_us);
+    }
+
+    /// Tap: one warn/error log record (called by `obs::log`; pre-gated).
+    pub(crate) fn record_log(&self, ts: &str, level: &'static str, target: &str, message: &str) {
+        self.logs.push(LogRec {
+            ts: ts.to_string(),
+            level,
+            target: target.to_string(),
+            message: message.to_string(),
+        });
+    }
+
+    /// Periodic metric snapshot, rate-limited by a CAS on the last-taken
+    /// stamp so concurrent span completions elect exactly one snapshotter.
+    fn maybe_snapshot(&self, now_us: u64) {
+        let registry = super::metrics();
+        if !registry.enabled() {
+            return;
+        }
+        let last = self.last_snapshot_us.load(Ordering::Relaxed);
+        if now_us < last.saturating_add(SNAPSHOT_PERIOD_US) {
+            return;
+        }
+        if self
+            .last_snapshot_us
+            .compare_exchange(last, now_us, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return; // someone else is taking this one
+        }
+        self.snapshots.push(SnapRec {
+            at_us: now_us,
+            exposition: truncate_utf8(registry.render(), SNAPSHOT_MAX_BYTES),
+        });
+    }
+
+    /// The full diagnostics document. Non-destructive: the rings keep
+    /// recording, so a serve `dump-diagnostics` probe can be issued
+    /// repeatedly. `crash` carries panic/signal context when dying.
+    pub fn dump_json(&self, trigger: &str, crash: Option<Json>) -> Json {
+        let registry = super::metrics();
+        let mut snapshots: Vec<Json> = self
+            .snapshots
+            .collect_sorted()
+            .into_iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("at_us", json::num(s.at_us as f64)),
+                    ("exposition", json::s(&s.exposition)),
+                ])
+            })
+            .collect();
+        if registry.enabled() {
+            // Final snapshot at dump time — the numbers at the moment of
+            // death are the ones a post-mortem wants most.
+            snapshots.push(json::obj(vec![
+                ("at_us", json::num(self.epoch.elapsed().as_micros() as f64)),
+                ("exposition", json::s(&truncate_utf8(registry.render(), SNAPSHOT_MAX_BYTES))),
+            ]));
+        }
+        let spans: Vec<Json> = self
+            .spans
+            .collect_sorted()
+            .into_iter()
+            .map(|sp| {
+                json::obj(vec![
+                    ("cat", json::s(sp.cat)),
+                    ("name", json::s(&sp.name)),
+                    ("ts_us", json::num(sp.ts_us as f64)),
+                    ("dur_us", json::num(sp.dur_us as f64)),
+                ])
+            })
+            .collect();
+        let logs: Vec<Json> = self
+            .logs
+            .collect_sorted()
+            .into_iter()
+            .map(|l| {
+                json::obj(vec![
+                    ("ts", json::s(&l.ts)),
+                    ("level", json::s(l.level)),
+                    ("target", json::s(&l.target)),
+                    ("message", json::s(&l.message)),
+                ])
+            })
+            .collect();
+        json::obj(vec![
+            ("schema", json::s(DIAGNOSTICS_SCHEMA)),
+            ("written_at", json::s(&super::log::timestamp_utc())),
+            ("trigger", json::s(trigger)),
+            ("uptime_us", json::num(self.epoch.elapsed().as_micros() as f64)),
+            ("crash", crash.unwrap_or(Json::Null)),
+            ("spans", json::arr(spans)),
+            ("spans_recorded", json::num(self.spans.recorded() as f64)),
+            ("spans_dropped", json::num(self.spans.dropped() as f64)),
+            ("logs", json::arr(logs)),
+            ("logs_recorded", json::num(self.logs.recorded() as f64)),
+            ("logs_dropped", json::num(self.logs.dropped() as f64)),
+            ("metrics_snapshots", json::arr(snapshots)),
+        ])
+    }
+
+    /// Write the diagnostics document to an explicit path.
+    pub fn dump_to(&self, path: &Path, trigger: &str, crash: Option<Json>) -> Result<(), String> {
+        let doc = self.dump_json(trigger, crash);
+        std::fs::write(path, doc.to_string() + "\n")
+            .map_err(|e| format!("write diagnostics {}: {e}", path.display()))
+    }
+
+    /// Crash-path dump to the configured path; only the *first* crash wins
+    /// (a panicking worker and the unwinding main thread must not race the
+    /// same file). Returns the path written, if any.
+    fn dump_on_crash(&self, trigger: &str, crash: Option<Json>) -> Option<PathBuf> {
+        if !self.enabled() || self.crash_dumped.swap(true, Ordering::SeqCst) {
+            return None;
+        }
+        let path = self.diag_path()?;
+        self.dump_to(&path, trigger, crash).ok()?;
+        Some(path)
+    }
+}
+
+fn truncate_utf8(mut text: String, max: usize) -> String {
+    if text.len() > max {
+        let mut cut = max;
+        while cut > 0 && !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        text.truncate(cut);
+    }
+    text
+}
+
+/// The process-wide flight recorder singleton. Disabled until
+/// [`Recorder::enable`]; every tap is a relaxed-atomic no-op until then.
+pub fn recorder() -> &'static Recorder {
+    static RECORDER: OnceLock<Recorder> = OnceLock::new();
+    RECORDER.get_or_init(Recorder::new)
+}
+
+/// Push an open span onto this thread's stack; returns whether it was
+/// pushed (the recorder was enabled), so the guard knows to pop.
+pub(crate) fn stack_push(cat: &'static str, name: Cow<'static, str>) -> bool {
+    if !recorder().enabled() {
+        return false;
+    }
+    SPAN_STACK.with(|stack| stack.borrow_mut().push((cat, name)));
+    true
+}
+
+pub(crate) fn stack_pop() {
+    SPAN_STACK.with(|stack| {
+        stack.borrow_mut().pop();
+    });
+}
+
+/// The current thread's open spans, outermost first (`cat` values).
+pub fn current_span_stack() -> Vec<String> {
+    SPAN_STACK.with(|stack| {
+        stack
+            .borrow()
+            .iter()
+            .map(|(cat, name)| {
+                if cat == name {
+                    (*cat).to_string()
+                } else {
+                    format!("{cat}:{name}")
+                }
+            })
+            .collect()
+    })
+}
+
+/// Install the crash handlers: a panic hook (chaining the previous one)
+/// and, on unix, a SIGTERM handler. Both flush the tracer — so a `--trace`
+/// file is a complete, closed JSON document even when the run dies — and
+/// dump the flight recorder to its configured diagnostics path, naming the
+/// panicking span. Idempotent.
+pub fn install_crash_handlers() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            prev(info);
+            let message = if let Some(s) = info.payload().downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = info.payload().downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            let location = info
+                .location()
+                .map(|l| format!("{}:{}:{}", l.file(), l.line(), l.column()))
+                .unwrap_or_else(|| "unknown".to_string());
+            let stack = current_span_stack();
+            let crash = json::obj(vec![
+                ("kind", json::s("panic")),
+                ("message", json::s(&message)),
+                ("location", json::s(&location)),
+                (
+                    "thread",
+                    json::s(std::thread::current().name().unwrap_or("unnamed")),
+                ),
+                (
+                    "panicking_span",
+                    stack.last().map(|s| json::s(s)).unwrap_or(Json::Null),
+                ),
+                ("span_stack", json::arr(stack.iter().map(|s| json::s(s)).collect())),
+            ]);
+            crash_dump("panic", Some(crash));
+        }));
+        #[cfg(unix)]
+        sig::install();
+    });
+}
+
+/// Shared crash path: flush the tracer (closing the trace JSON), then dump
+/// the recorder. Called from the panic hook and the SIGTERM handler.
+fn crash_dump(trigger: &str, crash: Option<Json>) {
+    // The hook runs *before* unwinding, so buffered spans of the dying
+    // thread are still in their shards — flush writes a valid document.
+    let _ = super::tracer().flush();
+    if let Some(path) = recorder().dump_on_crash(trigger, crash) {
+        eprintln!("flight recorder: diagnostics dumped to {}", path.display());
+    }
+}
+
+#[cfg(unix)]
+mod sig {
+    use crate::util::json::{self, Json};
+    use std::os::raw::c_int;
+
+    const SIGTERM: c_int = 15;
+    const SIG_DFL: usize = 0;
+
+    extern "C" {
+        fn signal(signum: c_int, handler: usize) -> usize;
+        fn raise(signum: c_int) -> c_int;
+    }
+
+    extern "C" fn on_sigterm(_sig: c_int) {
+        // Best-effort: file writes are not strictly async-signal-safe, but
+        // the process is about to die anyway — a torn dump beats none.
+        let crash = json::obj(vec![
+            ("kind", json::s("signal")),
+            ("signal", json::s("SIGTERM")),
+            ("panicking_span", Json::Null),
+            (
+                "span_stack",
+                json::arr(super::current_span_stack().iter().map(|s| json::s(s)).collect()),
+            ),
+        ]);
+        super::crash_dump("sigterm", Some(crash));
+        unsafe {
+            signal(SIGTERM, SIG_DFL);
+            raise(SIGTERM);
+        }
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_sigterm as *const () as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_and_stays_bounded() {
+        let ring: Ring<u64> = Ring::new(8);
+        for i in 0..100u64 {
+            ring.push(i);
+        }
+        let got = ring.collect_sorted();
+        assert_eq!(got.len(), 8);
+        assert_eq!(got, (92..100).collect::<Vec<_>>());
+        assert_eq!(ring.recorded(), 100);
+        ring.clear();
+        assert!(ring.collect_sorted().is_empty());
+        assert_eq!(ring.recorded(), 0);
+    }
+
+    #[test]
+    fn ring_survives_concurrent_writers() {
+        let ring: Ring<u64> = Ring::new(16);
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let ring = &ring;
+                scope.spawn(move || {
+                    for i in 0..1000 {
+                        ring.push(t * 10_000 + i);
+                    }
+                });
+            }
+        });
+        let survivors = ring.collect_sorted();
+        assert!(survivors.len() <= 16);
+        assert_eq!(ring.recorded(), 4000);
+        // Drops are possible (slot try_lock races) but bounded by writes.
+        assert!(ring.dropped() <= 4000);
+    }
+
+    #[test]
+    fn truncate_respects_char_boundaries() {
+        assert_eq!(truncate_utf8("abcdef".into(), 4), "abcd");
+        // 'é' is two bytes; cutting mid-char must back off.
+        let s = "aé".to_string();
+        assert_eq!(truncate_utf8(s, 2), "a");
+    }
+
+    #[test]
+    fn span_stack_push_pop_tracks_depth() {
+        // The recorder singleton may be enabled by other tests; drive the
+        // stack helpers directly.
+        SPAN_STACK.with(|s| s.borrow_mut().clear());
+        SPAN_STACK.with(|s| s.borrow_mut().push(("shot", Cow::Borrowed("run_shot"))));
+        SPAN_STACK.with(|s| s.borrow_mut().push(("shot.lloyd", Cow::Borrowed("lloyd"))));
+        let stack = current_span_stack();
+        assert_eq!(stack, vec!["shot:run_shot", "shot.lloyd:lloyd"]);
+        stack_pop();
+        stack_pop();
+        assert!(current_span_stack().is_empty());
+    }
+}

@@ -98,32 +98,46 @@ impl Tracer {
         }
     }
 
+    /// Whether spans should be captured: the tracer proper is on, or the
+    /// flight recorder wants span completions. Two relaxed loads when
+    /// everything is off.
     #[inline]
     pub fn enabled(&self) -> bool {
-        self.enabled.load(Ordering::Relaxed)
+        self.enabled.load(Ordering::Relaxed) || super::recorder::recorder().enabled()
     }
 
     /// Open a span with a static name. One relaxed load when disabled.
     #[inline]
     pub fn span(&'static self, cat: &'static str, name: &'static str) -> Span {
         if !self.enabled() {
-            return Span { live: None };
+            return Span { live: None, stacked: false };
         }
-        Span { live: Some((self, cat, Cow::Borrowed(name), Instant::now())) }
+        let stacked = super::recorder::stack_push(cat, Cow::Borrowed(name));
+        Span { live: Some((self, cat, Cow::Borrowed(name), Instant::now())), stacked }
     }
 
     /// Open a span with a runtime name (e.g. a tuner arm label).
     #[inline]
     pub fn span_dyn(&'static self, cat: &'static str, name: String) -> Span {
         if !self.enabled() {
-            return Span { live: None };
+            return Span { live: None, stacked: false };
         }
-        Span { live: Some((self, cat, Cow::Owned(name), Instant::now())) }
+        let stacked = super::recorder::stack_push(cat, Cow::Owned(name.clone()));
+        Span { live: Some((self, cat, Cow::Owned(name), Instant::now())), stacked }
     }
 
     fn record(&self, cat: &'static str, name: Cow<'static, str>, start: Instant) {
         let ts_us = start.duration_since(self.epoch).as_micros() as u64;
         let dur_us = start.elapsed().as_micros() as u64;
+        let recorder = super::recorder::recorder();
+        if recorder.enabled() {
+            recorder.record_span(cat, &name, ts_us, dur_us);
+        }
+        // Shards buffer only for the tracer proper — a recorder-only run
+        // must not grow trace memory it will never flush.
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
         LOCAL_SHARD.with(|slot| {
             let mut slot = slot.borrow_mut();
             if slot.is_none() {
@@ -218,15 +232,20 @@ impl Tracer {
     }
 }
 
-/// RAII span guard: drop records the event.
+/// RAII span guard: drop records the event (and pops this thread's
+/// flight-recorder span stack when the open pushed onto it).
 pub struct Span {
     live: Option<(&'static Tracer, &'static str, Cow<'static, str>, Instant)>,
+    stacked: bool,
 }
 
 impl Drop for Span {
     fn drop(&mut self) {
         if let Some((tracer, cat, name, start)) = self.live.take() {
             tracer.record(cat, name, start);
+        }
+        if self.stacked {
+            super::recorder::stack_pop();
         }
     }
 }

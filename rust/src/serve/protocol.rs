@@ -12,7 +12,7 @@
 //! ```
 //!
 //! `rows = n = 0` (no points) for the pointless ops (stats, ping,
-//! shutdown).
+//! shutdown, dump-diagnostics).
 //!
 //! ## Response body
 //!
@@ -25,7 +25,7 @@
 //! assign → `[rows u32][labels u32 × rows]`;
 //! score  → `[rows u32][labels u32 × rows][dists f32 × rows][objective f64]`
 //! (objective = f64 row-order sum of the dists);
-//! stats  → `[len u32][JSON bytes]`;
+//! stats / dump-diagnostics → `[len u32][JSON bytes]`;
 //! ping / shutdown → empty. Error status replaces the payload with
 //! `[len u32][message bytes]`.
 //!
@@ -48,6 +48,7 @@ const OP_SCORE: u8 = 2;
 const OP_STATS: u8 = 3;
 const OP_PING: u8 = 4;
 const OP_SHUTDOWN: u8 = 5;
+const OP_DUMP_DIAGNOSTICS: u8 = 6;
 
 const STATUS_OK: u8 = 0;
 const STATUS_ERR: u8 = 1;
@@ -65,6 +66,9 @@ pub enum Request {
     Ping,
     /// Ask the daemon to stop accepting and drain.
     Shutdown,
+    /// Flight-recorder diagnostics dump as JSON (on-demand triage of a
+    /// live daemon — the third dump trigger besides panic and SIGTERM).
+    DumpDiagnostics,
 }
 
 impl Request {
@@ -75,6 +79,7 @@ impl Request {
             Request::Stats => OP_STATS,
             Request::Ping => OP_PING,
             Request::Shutdown => OP_SHUTDOWN,
+            Request::DumpDiagnostics => OP_DUMP_DIAGNOSTICS,
         }
     }
 }
@@ -93,6 +98,7 @@ pub enum ResponsePayload {
     Assign { labels: Vec<u32> },
     Score { labels: Vec<u32>, dists: Vec<f32>, objective: f64 },
     Stats { json: String },
+    Diagnostics { json: String },
     Pong,
     ShuttingDown,
     Error { message: String },
@@ -174,6 +180,9 @@ pub fn read_request(r: &mut impl Read) -> io::Result<Option<Request>> {
         OP_STATS if rows == 0 && n == 0 => Ok(Some(Request::Stats)),
         OP_PING if rows == 0 && n == 0 => Ok(Some(Request::Ping)),
         OP_SHUTDOWN if rows == 0 && n == 0 => Ok(Some(Request::Shutdown)),
+        OP_DUMP_DIAGNOSTICS if rows == 0 && n == 0 => {
+            Ok(Some(Request::DumpDiagnostics))
+        }
         _ => Err(bad_frame(format!("unknown op {op} (rows={rows}, n={n})"))),
     }
 }
@@ -203,6 +212,7 @@ pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
         ResponsePayload::Assign { .. } => (STATUS_OK, OP_ASSIGN),
         ResponsePayload::Score { .. } => (STATUS_OK, OP_SCORE),
         ResponsePayload::Stats { .. } => (STATUS_OK, OP_STATS),
+        ResponsePayload::Diagnostics { .. } => (STATUS_OK, OP_DUMP_DIAGNOSTICS),
         ResponsePayload::Pong => (STATUS_OK, OP_PING),
         ResponsePayload::ShuttingDown => (STATUS_OK, OP_SHUTDOWN),
         ResponsePayload::Error { .. } => (STATUS_ERR, 0),
@@ -227,7 +237,7 @@ pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
             }
             body.extend_from_slice(&objective.to_le_bytes());
         }
-        ResponsePayload::Stats { json } => {
+        ResponsePayload::Stats { json } | ResponsePayload::Diagnostics { json } => {
             body.extend_from_slice(&(json.len() as u32).to_le_bytes());
             body.extend_from_slice(json.as_bytes());
         }
@@ -292,12 +302,16 @@ pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
                 ResponsePayload::Score { labels, dists, objective }
             }
         }
-        OP_STATS => {
+        OP_STATS | OP_DUMP_DIAGNOSTICS => {
             let len = take_u32(rest, 0)? as usize;
             let raw =
                 rest.get(4..4 + len).ok_or_else(|| bad_frame("stats text truncated"))?;
             let json = String::from_utf8_lossy(raw).into_owned();
-            ResponsePayload::Stats { json }
+            if op == OP_STATS {
+                ResponsePayload::Stats { json }
+            } else {
+                ResponsePayload::Diagnostics { json }
+            }
         }
         OP_PING => ResponsePayload::Pong,
         OP_SHUTDOWN => ResponsePayload::ShuttingDown,
@@ -374,6 +388,16 @@ impl Client {
         }
     }
 
+    /// Flight-recorder diagnostics dump as `(generation, JSON text)`.
+    pub fn dump_diagnostics(&mut self) -> Result<(u64, String)> {
+        match self.roundtrip(&Request::DumpDiagnostics)? {
+            Response { generation, payload: ResponsePayload::Diagnostics { json } } => {
+                Ok((generation, json))
+            }
+            other => bail!("dump-diagnostics: mismatched response {:?}", other.payload),
+        }
+    }
+
     /// Liveness probe; returns the serving generation.
     pub fn ping(&mut self) -> Result<u64> {
         Ok(self.roundtrip(&Request::Ping)?.generation)
@@ -418,6 +442,7 @@ mod tests {
         req_roundtrip(Request::Stats);
         req_roundtrip(Request::Ping);
         req_roundtrip(Request::Shutdown);
+        req_roundtrip(Request::DumpDiagnostics);
     }
 
     #[test]
@@ -437,6 +462,12 @@ mod tests {
         resp_roundtrip(Response {
             generation: 9,
             payload: ResponsePayload::Stats { json: "{\"requests\":4}".into() },
+        });
+        resp_roundtrip(Response {
+            generation: 4,
+            payload: ResponsePayload::Diagnostics {
+                json: "{\"schema\":\"bigmeans.diagnostics.v1\"}".into(),
+            },
         });
         resp_roundtrip(Response { generation: 2, payload: ResponsePayload::Pong });
         resp_roundtrip(Response { generation: 2, payload: ResponsePayload::ShuttingDown });

@@ -23,14 +23,15 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, SystemTime};
 
 use crate::kernels::distance::sq_norm;
 use crate::obs;
 use crate::serve::artifact::ModelArtifact;
-use crate::util::sync::{read_recover, write_recover};
+use crate::util::json::{self, Json};
+use crate::util::sync::{lock_recover, read_recover, write_recover};
 
 /// An immutable, query-ready model snapshot.
 pub struct ServingModel {
@@ -54,10 +55,50 @@ impl ServingModel {
     }
 }
 
+/// Newest swap-history entries kept (older ones roll off).
+pub const SWAP_HISTORY_CAP: usize = 64;
+
+/// One recorded model install — the boot model or a hot-swap.
+#[derive(Clone, Debug)]
+pub struct SwapEvent {
+    /// Registry swap generation installed (1 = boot).
+    pub generation: u64,
+    /// The publisher's ordinal carried by the artifact.
+    pub artifact_generation: u64,
+    /// Training objective recorded in the artifact.
+    pub objective: f64,
+    /// UTC wall-clock timestamp of the install.
+    pub at: String,
+}
+
+impl SwapEvent {
+    fn of(artifact: &ModelArtifact, generation: u64) -> SwapEvent {
+        SwapEvent {
+            generation,
+            artifact_generation: artifact.generation,
+            objective: artifact.objective,
+            at: crate::obs::log::timestamp_utc(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("generation", json::num(self.generation as f64)),
+            ("artifact_generation", json::num(self.artifact_generation as f64)),
+            ("objective", json::num(self.objective)),
+            ("at", json::s(&self.at)),
+        ])
+    }
+}
+
 /// Atomic hot-swap registry of the currently served model.
 pub struct ModelRegistry {
     current: RwLock<Arc<ServingModel>>,
     generation: AtomicU64,
+    /// Bounded install log (boot + hot-swaps), newest last — surfaced by
+    /// `GET /healthz` so "what swapped, when, to what objective" is
+    /// answerable without daemon logs.
+    history: Mutex<Vec<SwapEvent>>,
     m_generation: obs::Gauge,
     m_swaps: obs::Counter,
 }
@@ -65,6 +106,7 @@ pub struct ModelRegistry {
 impl ModelRegistry {
     /// Boot the registry with its first model (swap generation 1).
     pub fn new(artifact: ModelArtifact) -> Arc<ModelRegistry> {
+        let boot = SwapEvent::of(&artifact, 1);
         let model = Arc::new(ServingModel::new(artifact, 1));
         let m = obs::metrics();
         let m_generation = m.gauge(
@@ -76,6 +118,7 @@ impl ModelRegistry {
         Arc::new(ModelRegistry {
             current: RwLock::new(model),
             generation: AtomicU64::new(1),
+            history: Mutex::new(vec![boot]),
             m_generation,
             m_swaps: m.counter(
                 "bigmeans_model_swaps_total",
@@ -96,11 +139,26 @@ impl ModelRegistry {
     /// which is held only for the pointer swap.
     pub fn publish(&self, artifact: ModelArtifact) -> u64 {
         let generation = self.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let event = SwapEvent::of(&artifact, generation);
         let model = Arc::new(ServingModel::new(artifact, generation));
         *write_recover(&self.current) = model;
+        {
+            let mut history = lock_recover(&self.history);
+            if history.len() >= SWAP_HISTORY_CAP {
+                history.remove(0);
+            }
+            history.push(event);
+        }
         self.m_generation.set(generation as f64);
         self.m_swaps.inc();
         generation
+    }
+
+    /// The bounded install log (boot + hot-swaps), newest last, as a JSON
+    /// array — the `/healthz` swap-history surface.
+    pub fn history_json(&self) -> Json {
+        let history = lock_recover(&self.history);
+        json::arr(history.iter().map(SwapEvent::to_json).collect())
     }
 
     /// Current swap generation (1 = still the boot model).
@@ -214,6 +272,32 @@ mod tests {
         // can be torn by the swap.
         assert_eq!(before.artifact.centroids, vec![0.0, 0.0, 1.0, 1.0]);
         assert_eq!(reg.current().artifact.centroids, vec![5.0, 5.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn swap_history_is_bounded_and_ordered() {
+        let reg = ModelRegistry::new(artifact(1, vec![0.0, 0.0], 2));
+        for g in 0..(SWAP_HISTORY_CAP as u64 + 10) {
+            reg.publish(artifact(g + 2, vec![g as f32, 0.0], 2));
+        }
+        let doc = reg.history_json();
+        let entries = doc.as_arr().expect("history is a JSON array");
+        assert_eq!(entries.len(), SWAP_HISTORY_CAP, "history must stay bounded");
+        let gens: Vec<f64> = entries
+            .iter()
+            .map(|e| e.get("generation").and_then(|v| v.as_f64()).unwrap())
+            .collect();
+        assert!(gens.windows(2).all(|w| w[1] == w[0] + 1.0), "newest last: {gens:?}");
+        assert_eq!(
+            *gens.last().unwrap() as u64,
+            reg.generation(),
+            "last entry is the serving generation"
+        );
+        for e in entries {
+            assert!(e.get("at").and_then(|v| v.as_str()).is_some());
+            assert!(e.get("objective").and_then(|v| v.as_f64()).is_some());
+            assert!(e.get("artifact_generation").and_then(|v| v.as_f64()).is_some());
+        }
     }
 
     #[test]

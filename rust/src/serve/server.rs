@@ -461,6 +461,16 @@ fn handle_connection(mut stream: TcpStream, _id: u64, shared: &Shared) {
                     payload: ResponsePayload::Stats { json },
                 }
             }
+            Request::DumpDiagnostics => {
+                let json = obs::recorder()
+                    .dump_json("serve-request", None)
+                    .to_string();
+                shared.stats.record(Op::Other, start.elapsed(), None, None);
+                Response {
+                    generation: shared.registry.generation(),
+                    payload: ResponsePayload::Diagnostics { json },
+                }
+            }
             Request::Ping => {
                 shared.stats.record(Op::Other, start.elapsed(), None, None);
                 Response {

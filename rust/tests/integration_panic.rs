@@ -1,0 +1,171 @@
+//! End-to-end crash-path and report-pipeline tests driving the real
+//! `bigmeans` binary as a subprocess.
+//!
+//! The crash test sets `BIGMEANS_PANIC_IN_SHOT` so the first shot panics
+//! inside its `shot.lloyd` span, then asserts the two guarantees the
+//! flight recorder makes about a dying run:
+//!
+//! * the `--trace` file is still valid JSON (the panic hook flushes the
+//!   tracer and closes the document before the process unwinds), and
+//! * the `--diag` dump exists, parses, and names the panicking span.
+//!
+//! The report test exercises the happy path of the same plumbing:
+//! `cluster --report` → `report` (HTML render) → `metrics-lint`.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use bigmeans::util::json::Json;
+
+/// A unique scratch directory under the target tmpdir.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bigmeans_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a small headerless CSV: `m` rows in 4 dims, three well-separated
+/// blobs laid out deterministically (no RNG needed — the subprocess only
+/// has to iterate, not find good clusters).
+fn write_csv(path: &Path, m: usize) {
+    let mut text = String::with_capacity(m * 32);
+    for i in 0..m {
+        let center = (i % 3) as f64 * 10.0;
+        let jitter = ((i * 7919) % 100) as f64 / 200.0; // 0.0 .. 0.5
+        for d in 0..4 {
+            if d > 0 {
+                text.push(',');
+            }
+            text.push_str(&format!("{:.4}", center + jitter + d as f64 * 0.01));
+        }
+        text.push('\n');
+    }
+    std::fs::write(path, text).unwrap();
+}
+
+fn bigmeans_cmd(dir: &Path) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_bigmeans"));
+    cmd.current_dir(dir);
+    cmd
+}
+
+fn parse_file(path: &Path) -> Json {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    Json::parse(&text).unwrap_or_else(|e| panic!("parse {}: {e}", path.display()))
+}
+
+#[test]
+fn panic_mid_run_leaves_valid_trace_and_diagnostics() {
+    let dir = scratch("panic");
+    let csv = dir.join("data.csv");
+    write_csv(&csv, 600);
+    let trace = dir.join("trace.json");
+    let diag = dir.join("diag.json");
+
+    // --mode chunks routes through ShotExecutor::run_shot, where the
+    // injection hook lives; the worker panics inside `shot.lloyd`. The
+    // 1s time budget bounds the coordinator's condvar wait: panicked
+    // workers never report progress, so the deadline is what wakes it.
+    let out = bigmeans_cmd(&dir)
+        .args(["cluster", "data.csv", "--k", "3", "--s", "128", "--time", "1"])
+        .args(["--chunks", "12", "--mode", "chunks", "--threads", "2"])
+        .args(["--skip-final", "--trace", "trace.json", "--diag", "diag.json"])
+        .env("BIGMEANS_PANIC_IN_SHOT", "1")
+        .output()
+        .expect("spawn bigmeans");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "injected panic must fail the run\n{stderr}");
+    assert!(
+        stderr.contains("flight recorder: diagnostics dumped"),
+        "crash handler should announce the dump\n{stderr}"
+    );
+
+    // The trace survived the panic as a parseable document: the hook
+    // flushed the buffered spans and closed the JSON before unwinding.
+    let trace_doc = parse_file(&trace);
+    let events = trace_doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("trace document has a traceEvents array")
+        .to_vec();
+    assert!(
+        !events.is_empty(),
+        "spans completed before the panic (sample/reseed) must be present"
+    );
+
+    // The diagnostics dump names the panic and the span it died inside.
+    let diag_doc = parse_file(&diag);
+    assert_eq!(
+        diag_doc.get("schema").and_then(|v| v.as_str()),
+        Some("bigmeans.diagnostics.v1")
+    );
+    assert_eq!(diag_doc.get("trigger").and_then(|v| v.as_str()), Some("panic"));
+    let crash = diag_doc.get("crash").expect("crash context present");
+    assert_eq!(crash.get("kind").and_then(|v| v.as_str()), Some("panic"));
+    let message = crash.get("message").and_then(|v| v.as_str()).unwrap_or("");
+    assert!(message.contains("injected shot panic"), "crash message: {message}");
+    let panicking =
+        crash.get("panicking_span").and_then(|v| v.as_str()).unwrap_or("");
+    assert!(
+        panicking.contains("shot.lloyd"),
+        "panicking span should be shot.lloyd, got '{panicking}'"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn report_pipeline_renders_and_lints_end_to_end() {
+    let dir = scratch("report");
+    let csv = dir.join("data.csv");
+    write_csv(&csv, 600);
+
+    let out = bigmeans_cmd(&dir)
+        .args(["cluster", "data.csv", "--k", "3", "--s", "128"])
+        .args(["--chunks", "10", "--mode", "chunks", "--threads", "2"])
+        .args(["--skip-final", "--report", "report.json"])
+        .output()
+        .expect("spawn bigmeans");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "cluster --report failed\n{stderr}");
+
+    // The report parses, carries the versioned schema, and has shots.
+    let doc = parse_file(&dir.join("report.json"));
+    assert_eq!(
+        doc.get("schema").and_then(|v| v.as_str()),
+        Some("bigmeans.run_report.v1")
+    );
+    let shots = doc.get("shots").and_then(|v| v.as_arr()).unwrap().to_vec();
+    assert!(!shots.is_empty(), "chunk shots must be recorded");
+
+    // The same document passes the CI lint gate...
+    let lint = bigmeans_cmd(&dir)
+        .args(["metrics-lint", "report.json"])
+        .output()
+        .expect("spawn bigmeans");
+    assert!(
+        lint.status.success(),
+        "metrics-lint rejected the report\n{}",
+        String::from_utf8_lossy(&lint.stderr)
+    );
+
+    // ...and renders to a self-contained HTML document with SVG charts.
+    let render = bigmeans_cmd(&dir)
+        .args(["report", "report.json", "report.html"])
+        .output()
+        .expect("spawn bigmeans");
+    assert!(
+        render.status.success(),
+        "report render failed\n{}",
+        String::from_utf8_lossy(&render.stderr)
+    );
+    let html = std::fs::read_to_string(dir.join("report.html")).unwrap();
+    assert!(html.contains("<svg"), "charts must be inline SVG");
+    assert!(html.ends_with("</body></html>\n"));
+    assert!(!html.contains("http://") && !html.contains("https://"), "self-contained");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,8 +1,9 @@
 //! Property tests for the observability subsystem: log2-histogram
 //! quantile bounds on adversarial distributions, exposition lint
 //! round-trips over real `Registry::render` output, trace-document
-//! shape, and the load-bearing contract that enabling metrics and
-//! tracing never changes a clustering run's bits.
+//! shape, flight-recorder boundedness, and the load-bearing contract
+//! that enabling metrics, tracing, or the recorder never changes a
+//! clustering run's bits.
 
 use std::sync::Mutex;
 use std::time::Duration;
@@ -275,6 +276,113 @@ fn metrics_and_tracing_do_not_change_clustering_bits() {
         plain.objective.to_bits(),
         observed.objective.to_bits(),
         "objective changed under observation: {} vs {}",
+        plain.objective,
+        observed.objective
+    );
+    assert_eq!(plain.assignment, observed.assignment);
+    assert_eq!(plain.centroids, observed.centroids);
+    assert_eq!(plain.counters.distance_evals, observed.counters.distance_evals);
+}
+
+// ---------------------------------------------------------------------------
+// Flight recorder: bounded memory, and the same never-participate contract.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recorder_memory_stays_bounded_under_span_floods() {
+    let _g = lock_global();
+    let rec = obs::recorder();
+    obs::tracer().disable_and_clear();
+    obs::metrics().disable();
+    rec.disable_and_clear();
+    rec.enable_unsinked();
+
+    // Far more span completions than the ring holds, from several threads
+    // at once. The tracer proper stays off: spans reach the recorder
+    // through the tracer's tap without buffering any shard entries.
+    let per_thread = bigmeans::obs::recorder::SPAN_RING_CAP * 10;
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            scope.spawn(move || {
+                for _ in 0..per_thread {
+                    drop(obs::tracer().span("shot", "flood"));
+                }
+            });
+        }
+    });
+    assert_eq!(obs::tracer().buffered().0, 0, "tracer-off spans must not buffer");
+
+    let doc = rec.dump_json("property-test", None);
+    let spans = doc.get("spans").and_then(|j| j.as_arr()).expect("spans array");
+    assert!(
+        spans.len() <= bigmeans::obs::recorder::SPAN_RING_CAP,
+        "span ring exceeded its cap: {}",
+        spans.len()
+    );
+    let recorded = doc.get("spans_recorded").and_then(|j| j.as_f64()).expect("spans_recorded");
+    assert!(
+        recorded >= (4 * per_thread) as f64 * 0.99,
+        "fetch_add head must count (almost) every push, got {recorded}"
+    );
+
+    // Warn-level log records ride a second bounded ring.
+    for i in 0..(bigmeans::obs::recorder::LOG_RING_CAP + 32) {
+        bigmeans::log_warn!("prop.recorder", "flood record {i}");
+    }
+    let doc = rec.dump_json("property-test", None);
+    let logs = doc.get("logs").and_then(|j| j.as_arr()).expect("logs array");
+    assert!(!logs.is_empty(), "warn records must reach the recorder");
+    assert!(logs.len() <= bigmeans::obs::recorder::LOG_RING_CAP);
+
+    // The document is well-formed JSON with the versioned schema tag.
+    let text = doc.to_string();
+    let back = Json::parse(&text).expect("diagnostics document reparses");
+    assert_eq!(
+        back.get("schema").and_then(|j| j.as_str()),
+        Some(bigmeans::obs::recorder::DIAGNOSTICS_SCHEMA)
+    );
+
+    rec.disable_and_clear();
+    drop(obs::tracer().span("shot", "after-clear"));
+    let cleared = rec.dump_json("property-test", None);
+    assert_eq!(cleared.get("spans").and_then(|j| j.as_arr()).map(|a| a.len()), Some(0));
+}
+
+#[test]
+fn flight_recorder_does_not_change_clustering_bits() {
+    let _g = lock_global();
+    let data = Synth::GaussianMixture {
+        m: 12_000,
+        n: 6,
+        k_true: 7,
+        spread: 0.3,
+        box_half_width: 25.0,
+    }
+    .generate("recorder-ab", 23);
+    let run = || {
+        let cfg = BigMeansConfig::new(7, 1024)
+            .with_stop(StopCondition::MaxChunks(20))
+            .with_parallel(ParallelMode::Sequential)
+            .with_seed(43);
+        BigMeans::new(cfg).run(&data).unwrap()
+    };
+
+    obs::tracer().disable_and_clear();
+    obs::metrics().disable();
+    obs::recorder().disable_and_clear();
+    let plain = run();
+
+    obs::recorder().enable_unsinked();
+    let observed = run();
+    let doc = obs::recorder().dump_json("ab-test", None);
+    obs::recorder().disable_and_clear();
+
+    let spans = doc.get("spans").and_then(|j| j.as_arr()).map(|a| a.len()).unwrap_or(0);
+    assert!(spans > 0, "a recorded run must actually capture spans");
+    assert_eq!(
+        plain.objective.to_bits(),
+        observed.objective.to_bits(),
+        "objective changed under the flight recorder: {} vs {}",
         plain.objective,
         observed.objective
     );
