@@ -420,8 +420,10 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     // The flight recorder is always on: a panic or SIGTERM dumps the last
     // few seconds of spans/logs/metric snapshots to the --diag path, and
     // the crash handlers close the --trace JSON so it stays parseable.
-    obs::recorder().enable(Path::new(args.get_or("diag", "bigmeans.diag.json")));
+    // Handlers install first: they block SIGTERM before any obs thread
+    // spawns, so the signal can only land on the watcher's sigwait.
     obs::install_crash_handlers();
+    obs::recorder().enable(Path::new(args.get_or("diag", "bigmeans.diag.json")));
     let report_out = args.get("report").map(PathBuf::from);
     if report_out.is_some() {
         obs::report_sink().enable();
@@ -863,12 +865,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let path = PathBuf::from(model_path);
     apply_isa_flag(args)?;
     // The flight recorder always runs (it feeds the dump-diagnostics op);
-    // crashes only write a file when --diag names one.
+    // crashes only write a file when --diag names one. Handlers install
+    // first so SIGTERM is blocked before any obs thread spawns.
+    obs::install_crash_handlers();
     match args.get("diag") {
         Some(p) => obs::recorder().enable(Path::new(p)),
         None => obs::recorder().enable_unsinked(),
     }
-    obs::install_crash_handlers();
     // Enable metrics before the model registry and server exist, so their
     // boot-time registrations (swap gauge, per-op families) record.
     let metrics_addr = args.get("metrics-addr");
@@ -1058,33 +1061,36 @@ fn cmd_query(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// `metrics-lint <a.prom> [b.prom]`: validate Prometheus text exposition
-/// (CI's scrape gate); with a second, later scrape, also check counter
-/// monotonicity across the two.
+/// `metrics-lint <file> [file]`: CI's lint gate. `.json` files validate
+/// as run-report documents, everything else as Prometheus text
+/// exposition; two expositions additionally get a counter-monotonicity
+/// check in argument order (earlier scrape first).
 fn cmd_metrics_lint(args: &Args) -> Result<(), String> {
     let pos = args.positional();
     if pos.is_empty() || pos.len() > 2 {
         return Err("usage: metrics-lint <scrape.prom|report.json> [later-scrape.prom]".into());
     }
     let read = |p: &str| std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"));
-    if pos[0].ends_with(".json") {
-        // Run-report documents ride the same CI lint gate as expositions.
-        for p in pos {
+    // Each file lints by its own extension (.json = run report, anything
+    // else = Prometheus exposition), so a mixed invocation never tries to
+    // JSON-parse a .prom scrape. Monotonicity is checked when two
+    // expositions are given, in argument order (earlier scrape first).
+    let mut expositions: Vec<(&str, obs::lint::Exposition)> = Vec::new();
+    for p in pos {
+        if p.ends_with(".json") {
             let doc = Json::parse(&read(p)?).map_err(|e| format!("{p}: {e}"))?;
             let shots = obs::report::lint_report(&doc).map_err(|e| format!("{p}: {e}"))?;
             println!("{p}: ok — run report, {shots} shots");
+        } else {
+            let exp = obs::lint::lint_exposition(&read(p)?).map_err(|e| format!("{p}: {e}"))?;
+            println!("{p}: ok — {} families, {} samples", exp.families.len(), exp.samples);
+            expositions.push((p.as_str(), exp));
         }
-        return Ok(());
     }
-    let first = obs::lint::lint_exposition(&read(&pos[0])?)
-        .map_err(|e| format!("{}: {e}", pos[0]))?;
-    println!("{}: ok — {} families, {} samples", pos[0], first.families.len(), first.samples);
-    if let Some(later) = pos.get(1) {
-        let second = obs::lint::lint_exposition(&read(later)?)
-            .map_err(|e| format!("{later}: {e}"))?;
-        let checked = obs::lint::check_monotone(&first, &second)
-            .map_err(|e| format!("{} -> {later}: {e}", pos[0]))?;
-        println!("{later}: ok — {checked} counter series monotone across the scrapes");
+    if let [(first_path, first), (later_path, second)] = &expositions[..] {
+        let checked = obs::lint::check_monotone(first, second)
+            .map_err(|e| format!("{first_path} -> {later_path}: {e}"))?;
+        println!("{later_path}: ok — {checked} counter series monotone across the scrapes");
     }
     Ok(())
 }

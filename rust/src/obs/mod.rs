@@ -38,6 +38,39 @@ pub mod trace;
 
 use std::sync::OnceLock;
 
+/// Thread-local marker for "this thread currently holds an obs lock"
+/// (tracer state/shards, the registry family map, recorder bookkeeping).
+/// The panic hook consults it before flushing: a panic raised *inside*
+/// one of those critical sections still holds the lock on the panicking
+/// thread, and re-taking a non-reentrant mutex from the hook would
+/// deadlock the process instead of letting it die with the message.
+pub(crate) mod section {
+    use std::cell::Cell;
+
+    thread_local! {
+        static DEPTH: Cell<u32> = const { Cell::new(0) };
+    }
+
+    /// RAII marker: depth > 0 while any guard on this thread is live.
+    pub(crate) struct Guard;
+
+    pub(crate) fn enter() -> Guard {
+        DEPTH.with(|d| d.set(d.get() + 1));
+        Guard
+    }
+
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+        }
+    }
+
+    /// Whether the current thread is inside an obs lock section.
+    pub(crate) fn active() -> bool {
+        DEPTH.with(|d| d.get()) > 0
+    }
+}
+
 pub use http::MetricsServer;
 pub use recorder::{install_crash_handlers, recorder, Recorder};
 pub use registry::{Counter, Gauge, Histogram, Kind, Log2Histogram, Registry};

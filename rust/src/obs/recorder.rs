@@ -4,9 +4,10 @@
 //! Metrics answer "how much", traces answer "where did the time go" — but
 //! both are lost (or were never enabled) when a process dies mid-run. The
 //! recorder keeps a bounded ring of the most recent span completions, every
-//! warn/error log record, and periodic metric snapshots, so a panic hook, a
-//! SIGTERM handler, or a serve `dump-diagnostics` request can write one
-//! diagnostics JSON naming the span that was open when the world ended.
+//! warn/error log record, and periodic metric snapshots, so a panic hook,
+//! the SIGTERM watcher thread, or a serve `dump-diagnostics` request can
+//! write one diagnostics JSON naming the span that was open when the world
+//! ended.
 //!
 //! Contracts (same as the rest of `obs`, gated by `tests/property_obs.rs`):
 //!
@@ -23,7 +24,7 @@ use std::borrow::Cow;
 use std::cell::RefCell;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, Once, OnceLock};
+use std::sync::{Mutex, Once, OnceLock, TryLockError};
 use std::time::Instant;
 
 use crate::util::json::{self, Json};
@@ -80,12 +81,18 @@ impl<T: Clone> Ring<T> {
         self.dropped.load(Ordering::Relaxed)
     }
 
-    /// Non-destructive snapshot, oldest first.
+    /// Non-destructive snapshot, oldest first. Readers use `try_lock`
+    /// like the writers: a slot mid-write is skipped, never waited on, so
+    /// the crash path cannot block on a lock the dying thread holds.
     fn collect_sorted(&self) -> Vec<T> {
         let mut entries: Vec<(u64, T)> = self
             .slots
             .iter()
-            .filter_map(|slot| lock_recover(slot).clone())
+            .filter_map(|slot| match slot.try_lock() {
+                Ok(guard) => guard.clone(),
+                Err(TryLockError::Poisoned(poisoned)) => poisoned.into_inner().clone(),
+                Err(TryLockError::WouldBlock) => None,
+            })
             .collect();
         entries.sort_by_key(|(seq, _)| *seq);
         entries.into_iter().map(|(_, v)| v).collect()
@@ -136,7 +143,6 @@ pub struct Recorder {
     spans: Ring<SpanRec>,
     logs: Ring<LogRec>,
     snapshots: Ring<SnapRec>,
-    last_snapshot_us: AtomicU64,
     diag_path: Mutex<Option<PathBuf>>,
     crash_dumped: AtomicBool,
 }
@@ -149,7 +155,6 @@ impl Recorder {
             spans: Ring::new(SPAN_RING_CAP),
             logs: Ring::new(LOG_RING_CAP),
             snapshots: Ring::new(SNAPSHOT_RING_CAP),
-            last_snapshot_us: AtomicU64::new(0),
             diag_path: Mutex::new(None),
             crash_dumped: AtomicBool::new(false),
         }
@@ -157,23 +162,26 @@ impl Recorder {
 
     /// Start recording, dumping to `path` on crash (panic or SIGTERM).
     pub fn enable(&self, path: &Path) {
+        let _section = super::section::enter();
         *lock_recover(&self.diag_path) = Some(path.to_path_buf());
         self.enabled.store(true, Ordering::Relaxed);
+        spawn_snapshot_thread();
     }
 
     /// Start recording with no crash-dump file (tests, serve-op-only use).
     pub fn enable_unsinked(&self) {
         self.enabled.store(true, Ordering::Relaxed);
+        spawn_snapshot_thread();
     }
 
     /// Stop recording and clear every ring.
     pub fn disable_and_clear(&self) {
+        let _section = super::section::enter();
         self.enabled.store(false, Ordering::Relaxed);
         *lock_recover(&self.diag_path) = None;
         self.spans.clear();
         self.logs.clear();
         self.snapshots.clear();
-        self.last_snapshot_us.store(0, Ordering::Relaxed);
         self.crash_dumped.store(false, Ordering::Relaxed);
     }
 
@@ -184,13 +192,24 @@ impl Recorder {
 
     /// The configured crash-dump path, if any.
     pub fn diag_path(&self) -> Option<PathBuf> {
+        let _section = super::section::enter();
         lock_recover(&self.diag_path).clone()
+    }
+
+    /// Crash-safe variant: never blocks. A contended path lock (the rare
+    /// enable/disable race) forfeits the dump rather than hanging a dying
+    /// process.
+    fn diag_path_try(&self) -> Option<PathBuf> {
+        match self.diag_path.try_lock() {
+            Ok(guard) => guard.clone(),
+            Err(TryLockError::Poisoned(poisoned)) => poisoned.into_inner().clone(),
+            Err(TryLockError::WouldBlock) => None,
+        }
     }
 
     /// Tap: one completed span (called by the tracer; pre-gated there).
     pub(crate) fn record_span(&self, cat: &'static str, name: &str, ts_us: u64, dur_us: u64) {
         self.spans.push(SpanRec { cat, name: name.to_string(), ts_us, dur_us });
-        self.maybe_snapshot(ts_us);
     }
 
     /// Tap: one warn/error log record (called by `obs::log`; pre-gated).
@@ -200,30 +219,6 @@ impl Recorder {
             level,
             target: target.to_string(),
             message: message.to_string(),
-        });
-    }
-
-    /// Periodic metric snapshot, rate-limited by a CAS on the last-taken
-    /// stamp so concurrent span completions elect exactly one snapshotter.
-    fn maybe_snapshot(&self, now_us: u64) {
-        let registry = super::metrics();
-        if !registry.enabled() {
-            return;
-        }
-        let last = self.last_snapshot_us.load(Ordering::Relaxed);
-        if now_us < last.saturating_add(SNAPSHOT_PERIOD_US) {
-            return;
-        }
-        if self
-            .last_snapshot_us
-            .compare_exchange(last, now_us, Ordering::Relaxed, Ordering::Relaxed)
-            .is_err()
-        {
-            return; // someone else is taking this one
-        }
-        self.snapshots.push(SnapRec {
-            at_us: now_us,
-            exposition: truncate_utf8(registry.render(), SNAPSHOT_MAX_BYTES),
         });
     }
 
@@ -307,10 +302,44 @@ impl Recorder {
         if !self.enabled() || self.crash_dumped.swap(true, Ordering::SeqCst) {
             return None;
         }
-        let path = self.diag_path()?;
+        let path = self.diag_path_try()?;
         self.dump_to(&path, trigger, crash).ok()?;
         Some(path)
     }
+}
+
+/// Spawn (once) the detached snapshot thread: every [`SNAPSHOT_PERIOD_US`]
+/// it captures the metric exposition into the snapshot ring. A dedicated
+/// thread keeps registry serialisation (string formatting, allocation)
+/// off the workers' span-completion path — the recorder is always on in
+/// cluster runs, so the hot path must not pay for snapshots — and stamps
+/// each snapshot with the *current* elapsed time rather than a span's
+/// start timestamp. Idle cost while disabled: one wake per period.
+fn spawn_snapshot_thread() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let _ = std::thread::Builder::new()
+            .name("bigmeans-snapshot".into())
+            .spawn(|| {
+                // This thread can exist before install_crash_handlers sets
+                // the process mask; it must never be SIGTERM's delivery
+                // target or the watcher would lose the dump.
+                #[cfg(unix)]
+                sig::block_current_thread();
+                loop {
+                    std::thread::sleep(std::time::Duration::from_micros(SNAPSHOT_PERIOD_US));
+                    let rec = recorder();
+                    let registry = super::metrics();
+                    if !rec.enabled() || !registry.enabled() {
+                        continue;
+                    }
+                    rec.snapshots.push(SnapRec {
+                        at_us: rec.epoch.elapsed().as_micros() as u64,
+                        exposition: truncate_utf8(registry.render(), SNAPSHOT_MAX_BYTES),
+                    });
+                }
+            });
+    });
 }
 
 fn truncate_utf8(mut text: String, max: usize) -> String {
@@ -365,16 +394,24 @@ pub fn current_span_stack() -> Vec<String> {
 }
 
 /// Install the crash handlers: a panic hook (chaining the previous one)
-/// and, on unix, a SIGTERM handler. Both flush the tracer — so a `--trace`
-/// file is a complete, closed JSON document even when the run dies — and
-/// dump the flight recorder to its configured diagnostics path, naming the
-/// panicking span. Idempotent.
+/// and, on unix, a SIGTERM watcher thread. Both flush the tracer — so a
+/// `--trace` file is a complete, closed JSON document even when the run
+/// dies — and dump the flight recorder to its configured diagnostics
+/// path, naming the panicking span. Idempotent.
 pub fn install_crash_handlers() {
     static ONCE: Once = Once::new();
     ONCE.call_once(|| {
         let prev = std::panic::take_hook();
         std::panic::set_hook(Box::new(move |info| {
             prev(info);
+            // A panic raised inside an obs lock section (tracer shards,
+            // registry family map, recorder bookkeeping) still holds that
+            // non-reentrant mutex on this thread; flushing here would
+            // self-deadlock and hang the process instead of letting it
+            // die. Degrade to the chained hook only.
+            if super::section::active() {
+                return;
+            }
             let message = if let Some(s) = info.payload().downcast_ref::<&str>() {
                 (*s).to_string()
             } else if let Some(s) = info.payload().downcast_ref::<String>() {
@@ -421,40 +458,91 @@ fn crash_dump(trigger: &str, crash: Option<Json>) {
 
 #[cfg(unix)]
 mod sig {
+    //! SIGTERM handling via a dedicated `sigwait` thread, not an async
+    //! signal handler. The dump takes mutexes and allocates; doing that
+    //! inside a handler that interrupted a thread holding one of those
+    //! locks (or sitting inside malloc) deadlocks the process instead of
+    //! terminating it. So the signal is blocked process-wide (threads
+    //! spawned after install inherit the mask) and a watcher thread waits
+    //! for it synchronously, dumps from ordinary thread context where
+    //! locking is safe, then unblocks and re-raises so the exit status
+    //! still says "killed by SIGTERM".
+
     use crate::util::json::{self, Json};
     use std::os::raw::c_int;
 
     const SIGTERM: c_int = 15;
-    const SIG_DFL: usize = 0;
+    #[cfg(target_os = "linux")]
+    const SIG_BLOCK: c_int = 0;
+    #[cfg(target_os = "linux")]
+    const SIG_UNBLOCK: c_int = 1;
+    #[cfg(not(target_os = "linux"))]
+    const SIG_BLOCK: c_int = 1;
+    #[cfg(not(target_os = "linux"))]
+    const SIG_UNBLOCK: c_int = 2;
+
+    /// At least as large as any unix `sigset_t` (glibc 128 B, musl 8 B,
+    /// macOS 4 B); `sigemptyset`/`sigaddset` fill in the real layout.
+    #[repr(C)]
+    struct SigSet([u64; 16]);
 
     extern "C" {
-        fn signal(signum: c_int, handler: usize) -> usize;
+        fn sigemptyset(set: *mut SigSet) -> c_int;
+        fn sigaddset(set: *mut SigSet, signum: c_int) -> c_int;
+        fn pthread_sigmask(how: c_int, set: *const SigSet, old: *mut SigSet) -> c_int;
+        fn sigwait(set: *const SigSet, sig: *mut c_int) -> c_int;
         fn raise(signum: c_int) -> c_int;
     }
 
-    extern "C" fn on_sigterm(_sig: c_int) {
-        // Best-effort: file writes are not strictly async-signal-safe, but
-        // the process is about to die anyway — a torn dump beats none.
-        let crash = json::obj(vec![
-            ("kind", json::s("signal")),
-            ("signal", json::s("SIGTERM")),
-            ("panicking_span", Json::Null),
-            (
-                "span_stack",
-                json::arr(super::current_span_stack().iter().map(|s| json::s(s)).collect()),
-            ),
-        ]);
-        super::crash_dump("sigterm", Some(crash));
+    fn term_set() -> SigSet {
+        let mut set = SigSet([0; 16]);
         unsafe {
-            signal(SIGTERM, SIG_DFL);
-            raise(SIGTERM);
+            sigemptyset(&mut set);
+            sigaddset(&mut set, SIGTERM);
+        }
+        set
+    }
+
+    /// Block SIGTERM on the calling thread — for obs threads that may be
+    /// spawned before [`install`] sets the inheritable process mask.
+    pub fn block_current_thread() {
+        unsafe {
+            pthread_sigmask(SIG_BLOCK, &term_set(), std::ptr::null_mut());
         }
     }
 
     pub fn install() {
+        // Block SIGTERM on the installing thread. install runs before the
+        // worker pools spawn, so every later thread inherits the mask and
+        // kernel delivery has nowhere to land but the watcher's sigwait.
         unsafe {
-            signal(SIGTERM, on_sigterm as *const () as usize);
+            pthread_sigmask(SIG_BLOCK, &term_set(), std::ptr::null_mut());
         }
+        let _ = std::thread::Builder::new()
+            .name("bigmeans-sigterm".into())
+            .spawn(|| {
+                let set = term_set();
+                let mut sig: c_int = 0;
+                if unsafe { sigwait(&set, &mut sig) } != 0 {
+                    return;
+                }
+                // SIGTERM is process-directed: no one thread's span stack
+                // is "the" dying one, so the crash context leaves it
+                // empty — the spans ring still names recent work.
+                let crash = json::obj(vec![
+                    ("kind", json::s("signal")),
+                    ("signal", json::s("SIGTERM")),
+                    ("panicking_span", Json::Null),
+                    ("span_stack", json::arr(Vec::new())),
+                ]);
+                super::crash_dump("sigterm", Some(crash));
+                unsafe {
+                    // The default disposition was never replaced; unblock
+                    // on this thread and re-raise to die with SIGTERM.
+                    pthread_sigmask(SIG_UNBLOCK, &set, std::ptr::null_mut());
+                    raise(SIGTERM);
+                }
+            });
     }
 }
 

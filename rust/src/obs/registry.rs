@@ -309,6 +309,7 @@ impl Registry {
     ) -> Cell {
         let label_names: Vec<String> = labels.iter().map(|(k, _)| k.to_string()).collect();
         let label_values: Vec<String> = labels.iter().map(|(_, v)| v.to_string()).collect();
+        let _section = super::section::enter();
         let mut fams = lock_recover(&self.families);
         let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
             help: help.to_string(),
@@ -334,6 +335,7 @@ impl Registry {
 
     /// Render the Prometheus text exposition (format version 0.0.4).
     pub fn render(&self) -> String {
+        let _section = super::section::enter();
         let fams = lock_recover(&self.families);
         let mut out = String::new();
         for (name, fam) in fams.iter() {

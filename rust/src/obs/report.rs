@@ -86,7 +86,10 @@ impl ReportSink {
         self.enabled.load(Ordering::Relaxed)
     }
 
-    /// Record one shot (call only when [`ReportSink::enabled`]).
+    /// Record one shot. A relaxed-atomic no-op unless the sink is
+    /// enabled — call sites tap unconditionally, so this guard is what
+    /// keeps a default (no `--report`) run from buffering events without
+    /// bound or taking the shots mutex on the hot path.
     pub fn record_shot(
         &self,
         chunk_objective: f64,
@@ -95,6 +98,9 @@ impl ReportSink {
         iters: u32,
         secs: Option<f64>,
     ) {
+        if !self.enabled() {
+            return;
+        }
         let mut shots = lock_recover(&self.shots);
         let seq = shots.len() as u64;
         shots.push(ShotEvent {
@@ -515,6 +521,20 @@ mod tests {
         assert!(html.contains("Shot latency"));
         assert!(!html.contains("http://"), "must not reference external assets");
         assert!(!html.contains("https://"));
+    }
+
+    #[test]
+    fn disabled_sink_buffers_nothing() {
+        // Executors tap record_shot unconditionally; the sink itself must
+        // drop events while disabled or every default run leaks memory.
+        let sink = ReportSink::new();
+        sink.record_shot(10.0, 10.0, true, 3, None);
+        assert!(sink.drain().is_empty());
+        sink.enable();
+        sink.record_shot(9.0, 9.0, false, 2, None);
+        sink.disable_and_clear();
+        sink.record_shot(8.0, 8.0, false, 1, None);
+        assert!(sink.drain().is_empty());
     }
 
     #[test]

@@ -75,6 +75,7 @@ impl Tracer {
     /// Start collecting spans; [`Tracer::flush`] will write them to
     /// `path` as a Chrome trace-event JSON document.
     pub fn enable(&self, path: &Path) {
+        let _section = super::section::enter();
         lock_recover(&self.state).out_path = Some(path.to_path_buf());
         self.enabled.store(true, Ordering::Relaxed);
     }
@@ -82,12 +83,14 @@ impl Tracer {
     /// Collect spans without a file sink (bench A/B rows); flush drops
     /// the events.
     pub fn enable_unsinked(&self) {
+        let _section = super::section::enter();
         lock_recover(&self.state).out_path = None;
         self.enabled.store(true, Ordering::Relaxed);
     }
 
     /// Stop collecting and discard everything buffered so far.
     pub fn disable_and_clear(&self) {
+        let _section = super::section::enter();
         self.enabled.store(false, Ordering::Relaxed);
         let mut st = lock_recover(&self.state);
         st.out_path = None;
@@ -127,6 +130,7 @@ impl Tracer {
     }
 
     fn record(&self, cat: &'static str, name: Cow<'static, str>, start: Instant) {
+        let _section = super::section::enter();
         let ts_us = start.duration_since(self.epoch).as_micros() as u64;
         let dur_us = start.elapsed().as_micros() as u64;
         let recorder = super::recorder::recorder();
@@ -163,6 +167,7 @@ impl Tracer {
 
     /// Events currently buffered across all shards (telemetry/tests).
     pub fn buffered(&self) -> (usize, u64) {
+        let _section = super::section::enter();
         let st = lock_recover(&self.state);
         let mut events = 0;
         let mut dropped = 0;
@@ -177,6 +182,7 @@ impl Tracer {
     /// Serialise every buffered span to the Chrome trace-event JSON
     /// document, draining the shards.
     pub fn render(&self) -> Json {
+        let _section = super::section::enter();
         let st = lock_recover(&self.state);
         let mut events = Vec::new();
         let mut dropped = 0u64;
@@ -211,7 +217,10 @@ impl Tracer {
         if !self.enabled() {
             return Ok(None);
         }
-        let path = lock_recover(&self.state).out_path.clone();
+        let path = {
+            let _section = super::section::enter();
+            lock_recover(&self.state).out_path.clone()
+        };
         match path {
             None => {
                 self.render(); // drain the shards

@@ -117,6 +117,59 @@ fn panic_mid_run_leaves_valid_trace_and_diagnostics() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// SIGTERM mid-run must terminate the process (with SIGTERM exit status,
+/// not a hang) after the watcher thread writes the diagnostics dump. This
+/// is the regression test for the old async-signal-handler design, which
+/// took mutexes and allocated inside the handler and could deadlock.
+#[cfg(unix)]
+#[test]
+fn sigterm_mid_run_dumps_diagnostics_and_dies() {
+    use std::os::unix::process::ExitStatusExt;
+
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+
+    let dir = scratch("sigterm");
+    let csv = dir.join("data.csv");
+    write_csv(&csv, 600);
+    let diag = dir.join("diag.json");
+
+    // A generous time budget keeps the run alive until the signal lands;
+    // if the kill were ever lost the run still exits on its own.
+    let mut child = bigmeans_cmd(&dir)
+        .args(["cluster", "data.csv", "--k", "3", "--s", "128", "--time", "30"])
+        .args(["--mode", "chunks", "--threads", "2"])
+        .args(["--skip-final", "--diag", "diag.json"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawn bigmeans");
+    // Let it install the handlers and get a few shots in.
+    std::thread::sleep(std::time::Duration::from_millis(1500));
+    assert_eq!(unsafe { kill(child.id() as i32, SIGTERM) }, 0, "kill(SIGTERM) failed");
+    let out = child.wait_with_output().expect("wait for bigmeans");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+
+    assert_eq!(
+        out.status.signal(),
+        Some(SIGTERM),
+        "process must die by SIGTERM after the dump, not hang or exit clean\n{stderr}"
+    );
+    assert!(
+        stderr.contains("flight recorder: diagnostics dumped"),
+        "watcher should announce the dump\n{stderr}"
+    );
+    let diag_doc = parse_file(&diag);
+    assert_eq!(diag_doc.get("trigger").and_then(|v| v.as_str()), Some("sigterm"));
+    let crash = diag_doc.get("crash").expect("crash context present");
+    assert_eq!(crash.get("kind").and_then(|v| v.as_str()), Some("signal"));
+    assert_eq!(crash.get("signal").and_then(|v| v.as_str()), Some("SIGTERM"));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn report_pipeline_renders_and_lints_end_to_end() {
     let dir = scratch("report");
