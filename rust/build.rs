@@ -1,0 +1,43 @@
+//! Toolchain probe for the AVX-512 kernels.
+//!
+//! The stable `_mm512_*` f32 intrinsics landed in rustc 1.89, so the
+//! `kernels::simd::avx512` module is compiled only when the active
+//! compiler has them. Older toolchains simply compile the backend out:
+//! `DistanceIsa::Avx512.available()` then returns false and runtime
+//! dispatch falls back to AVX2, keeping the crate buildable everywhere
+//! without feature flags or nightly.
+
+use std::env;
+use std::process::Command;
+
+/// `$RUSTC --version` is at least `major.minor`. Conservative: any probe
+/// failure reports false, which only disables the optional backend.
+fn rustc_at_least(major: u32, minor: u32) -> bool {
+    let rustc = env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = match Command::new(&rustc).arg("--version").output() {
+        Ok(o) if o.status.success() => o,
+        _ => return false,
+    };
+    let text = String::from_utf8_lossy(&out.stdout);
+    // "rustc 1.89.0 (abc 2025-…)" — second token, split on non-digits so
+    // nightly/beta suffixes ("1.91.0-nightly") parse too.
+    let version = match text.split_whitespace().nth(1) {
+        Some(v) => v,
+        None => return false,
+    };
+    let mut parts = version.split(|c: char| !c.is_ascii_digit());
+    let maj: u32 = parts.next().and_then(|p| p.parse().ok()).unwrap_or(0);
+    let min: u32 = parts.next().and_then(|p| p.parse().ok()).unwrap_or(0);
+    (maj, min) >= (major, minor)
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Always declare the cfg so `clippy -D warnings` under check-cfg stays
+    // clean whether or not the gate fires.
+    println!("cargo:rustc-check-cfg=cfg(bigmeans_avx512)");
+    let arch = env::var("CARGO_CFG_TARGET_ARCH").unwrap_or_default();
+    if arch == "x86_64" && rustc_at_least(1, 89) {
+        println!("cargo:rustc-cfg=bigmeans_avx512");
+    }
+}

@@ -9,9 +9,11 @@
 //!   hybrid engine, and the pre-fusion two-pass reference kernel on a
 //!   synthetic workload (default 1M×16, k=64) — once on uniform data
 //!   (worst case for pruning) and once on separated Gaussian blobs (best
-//!   case) — plus a per-ISA A/B row (the panel engine forced onto the
-//!   scalar backend vs the detected-best SIMD dispatch), then emits
-//!   `BENCH_assign.json` with wall times and distance-eval counts.
+//!   case) — plus per-ISA A/B rows (the panel engine forced onto the
+//!   scalar backend vs the detected-best SIMD dispatch, and onto avx512
+//!   on hosts that detect it; the avx512 rows are skipped, not failed,
+//!   elsewhere), then emits `BENCH_assign.json` with wall times and
+//!   distance-eval counts.
 //! * **tuner** — races the competitive portfolio tuner against every
 //!   fixed-sample-size baseline from the same grid at an equal shot
 //!   budget (default 1M×16 uniform + blob workloads) and emits
@@ -24,9 +26,11 @@
 //! * **final** — the hierarchical-pruned final pass: the same blocked
 //!   blob workload clustered through a block store with min/max
 //!   summaries (pruned + double-buffered) vs. one without (unpruned
-//!   baseline) vs. in-memory, emitting `BENCH_final.json` (final-pass
-//!   wall times, blocks skipped, decode-only scan time, and a
-//!   bit-identical objective cross-check).
+//!   baseline) vs. in-memory, plus a decode-free f16 A/B (fused raw-f16
+//!   widening vs. the decoded-f32 cache path, bit-identical to each
+//!   other) and a conditional avx512 row, emitting `BENCH_final.json`
+//!   (final-pass wall times, blocks skipped, decode-only scan time, and
+//!   bit-identical objective cross-checks).
 //! * **serve** — the clustering daemon: boots a server on an ephemeral
 //!   loopback port, fires batched assign queries from concurrent client
 //!   workers while an in-process publish hot-swaps the model mid-run,
@@ -467,6 +471,17 @@ fn final_suite(args: &Args) -> Result<(), String> {
     set_isa(DistanceIsa::Scalar).expect("scalar is always available");
     let (r_mem_scalar, _) = run(&data)?;
     set_isa(detect_isa()).expect("detected isa must be available");
+    // AVX-512 A/B: skipped (not failed) on hosts without it, so the row
+    // must never land in a committed baseline.
+    let r_mem_avx512 = if DistanceIsa::Avx512.available() {
+        set_isa(DistanceIsa::Avx512).expect("avx512 detected as available");
+        let (r, _) = run(&data)?;
+        set_isa(detect_isa()).expect("detected isa must be available");
+        Some(r)
+    } else {
+        eprintln!("mem_final_secs_avx512: skipped (avx512 not detected)");
+        None
+    };
     // Decode-only full scan (fresh store so the cache is cold): the decode
     // bandwidth the double buffer hides behind the assignment shards.
     let scan_store = BlockStore::open(&plain_path).map_err(|e| e.to_string())?;
@@ -485,7 +500,11 @@ fn final_suite(args: &Args) -> Result<(), String> {
         && r_pruned.objective.to_bits() == r_mem_scalar.objective.to_bits()
         && r_pruned.assignment == r_plain.assignment
         && r_pruned.assignment == r_mem.assignment
-        && r_pruned.assignment == r_mem_scalar.assignment;
+        && r_pruned.assignment == r_mem_scalar.assignment
+        && r_mem_avx512.iter().all(|r| {
+            r.objective.to_bits() == r_pruned.objective.to_bits()
+                && r.assignment == r_pruned.assignment
+        });
     let speedup = r_plain.cpu_full_secs / r_pruned.cpu_full_secs.max(1e-9);
     eprintln!(
         "final pass: pruned {:.3}s vs unpruned {:.3}s ({speedup:.2}×), mem {:.3}s | \
@@ -499,9 +518,42 @@ fn final_suite(args: &Args) -> Result<(), String> {
     if !identical {
         return Err("final suite: pruned pass diverged from the unpruned baseline".into());
     }
+
+    // Decode-free f16 A/B: the same workload through an f16/raw store,
+    // once on the fused path (raw blocks widened on the fly, decoded-f32
+    // cache bypassed) and once forced through the decode path. The two
+    // must be bit-identical to each other; their objective legitimately
+    // differs from the f32 runs (the data was quantised on ingest), so
+    // the cross-check is fused-vs-decoded only.
+    let f16_path = dir.join("final_f16.bmx");
+    copy_to_store(
+        &data,
+        &f16_path,
+        StoreOptions { dtype: Dtype::F16, codec: Codec::None, ..base },
+    )
+    .map_err(|e| e.to_string())?;
+    let f16_fused = BlockStore::open(&f16_path).map_err(|e| e.to_string())?;
+    let fused_active = f16_fused.fused_f16_active();
+    let (r_f16_fused, _) = run(&f16_fused)?;
+    let f16_decoded = BlockStore::open(&f16_path).map_err(|e| e.to_string())?;
+    f16_decoded.set_fused_f16(false);
+    let (r_f16_decoded, _) = run(&f16_decoded)?;
+    let f16_identical = r_f16_fused.objective.to_bits() == r_f16_decoded.objective.to_bits()
+        && r_f16_fused.assignment == r_f16_decoded.assignment;
+    let f16_speedup = r_f16_decoded.cpu_full_secs / r_f16_fused.cpu_full_secs.max(1e-9);
+    eprintln!(
+        "f16 final pass: fused {:.3}s vs decoded {:.3}s ({f16_speedup:.2}×, fused path \
+         {}) | bit-identical: {f16_identical}",
+        r_f16_fused.cpu_full_secs,
+        r_f16_decoded.cpu_full_secs,
+        if fused_active { "active" } else { "inactive" },
+    );
+    if !f16_identical {
+        return Err("final suite: decode-free f16 pass diverged from the decode path".into());
+    }
     let _ = std::fs::remove_dir_all(&dir);
 
-    let doc = obj(vec![
+    let mut entries = vec![
         ("m", num(m as f64)),
         ("n", num(n as f64)),
         ("k", num(k as f64)),
@@ -522,7 +574,18 @@ fn final_suite(args: &Args) -> Result<(), String> {
         ("distance_evals_unpruned", num(r_plain.counters.distance_evals as f64)),
         ("objective", num(r_pruned.objective)),
         ("bit_identical", Json::Bool(identical)),
-    ]);
+        ("f16_fused_active", Json::Bool(fused_active)),
+        ("f16_fused_final_secs", num(r_f16_fused.cpu_full_secs)),
+        ("f16_decoded_final_secs", num(r_f16_decoded.cpu_full_secs)),
+        ("f16_fused_speedup", num(f16_speedup)),
+        ("f16_bit_identical", Json::Bool(f16_identical)),
+    ];
+    // Conditional row: present only on hosts that detected avx512, so it
+    // must stay out of committed baselines.
+    if let Some(r) = &r_mem_avx512 {
+        entries.push(("mem_final_secs_avx512", num(r.cpu_full_secs)));
+    }
+    let doc = obj(entries);
     std::fs::write(&out_path, doc.to_string() + "\n")
         .map_err(|e| format!("write {out_path}: {e}"))?;
     eprintln!("wrote {out_path}");
@@ -760,6 +823,24 @@ fn main() {
             );
             cases.push(c);
             set_isa(best_isa).expect("detected isa must be available");
+            // AVX-512 A/B: only on hosts that detect it — the row is
+            // skipped (not failed) elsewhere, so it must never land in a
+            // committed baseline (a missing baseline key would gate).
+            if DistanceIsa::Avx512.available() {
+                set_isa(DistanceIsa::Avx512).expect("avx512 detected as available");
+                let name = format!("panel_avx512_{data_name}");
+                eprint!("{name:<20} ");
+                let c = time_engine(&name, &panel, data, m, n, k, iters);
+                eprintln!(
+                    "{:>8.3}s  n_d {:.3e}  (forced avx512 isa)",
+                    c.secs,
+                    c.counters.distance_evals as f64
+                );
+                cases.push(c);
+                set_isa(best_isa).expect("detected isa must be available");
+            } else {
+                eprintln!("panel_avx512_{data_name}: skipped (avx512 not detected)");
+            }
             let name = format!("reference_{data_name}");
             eprint!("{name:<20} ");
             let c = time_reference(&name, data, m, n, k, iters);
@@ -824,7 +905,7 @@ fn main() {
             best_isa.name()
         );
 
-        let doc = obj(vec![
+        let mut entries = vec![
             ("m", num(m as f64)),
             ("n", num(n as f64)),
             ("k", num(k as f64)),
@@ -838,7 +919,14 @@ fn main() {
             ("simd_vs_scalar_uniform_speedup", num(simd_speedup)),
             ("obs_enabled_vs_disabled_ratio", num(obs_ratio)),
             ("recorder_enabled_vs_disabled_ratio", num(recorder_ratio)),
-        ]);
+        ];
+        // Conditional summary key: present only when the avx512 rows ran.
+        if let Some(c) = cases.iter().find(|c| c.name == "panel_avx512_uniform") {
+            let avx512_speedup = find("panel_scalar_uniform").secs / c.secs.max(1e-12);
+            eprintln!("avx512 vs scalar (uniform): {avx512_speedup:.2}×");
+            entries.push(("avx512_vs_scalar_uniform_speedup", num(avx512_speedup)));
+        }
+        let doc = obj(entries);
         std::fs::write(&out_path, doc.to_string() + "\n")
             .map_err(|e| format!("write {out_path}: {e}"))?;
         eprintln!("wrote {out_path}");

@@ -65,8 +65,12 @@ impl BigMeans {
             ParallelMode::Sequential => 1,
             _ => config.threads,
         };
-        let solver =
-            Box::new(NativeSolver::with_kernel(config.lloyd, threads, config.kernel));
+        let solver = Box::new(NativeSolver::with_kernel_threshold(
+            config.lloyd,
+            threads,
+            config.kernel,
+            config.hybrid_threshold,
+        ));
         BigMeans { config, solver }
     }
 

@@ -92,6 +92,12 @@ pub struct BigMeansConfig {
     /// Skip the final full-dataset assignment (paper §4.1 notes it is
     /// optional for some applications).
     pub skip_final_assignment: bool,
+    /// Rescan-rate cutoff for the hybrid kernel engine's Hamerly→Elkan
+    /// switch. `None` keeps the engine's built-in default (0.25);
+    /// `--mode tune` with threshold arms learns a per-dataset value and
+    /// records it in the `.bmm` meta so later runs can reuse it. Ignored
+    /// by the other engines.
+    pub hybrid_threshold: Option<f64>,
 }
 
 impl BigMeansConfig {
@@ -112,6 +118,7 @@ impl BigMeansConfig {
             threads: 0,
             seed: 0xB16_3EA5,
             skip_final_assignment: false,
+            hybrid_threshold: None,
         }
     }
 
@@ -142,6 +149,11 @@ impl BigMeansConfig {
 
     pub fn with_backend(mut self, backend: DataBackend) -> Self {
         self.backend = backend;
+        self
+    }
+
+    pub fn with_hybrid_threshold(mut self, threshold: Option<f64>) -> Self {
+        self.hybrid_threshold = threshold;
         self
     }
 

@@ -181,22 +181,39 @@ impl ShotObs {
 impl<'a> ShotExecutor<'a> {
     /// Executor with the configured chunk size and kernel engine.
     pub fn new(cfg: &'a BigMeansConfig, data: &'a dyn DataSource) -> Self {
-        Self::with_chunk_size(cfg, data, cfg.chunk_size, cfg.kernel)
+        Self::with_chunk_size_threshold(cfg, data, cfg.chunk_size, cfg.kernel, cfg.hybrid_threshold)
     }
 
-    /// Executor with an explicit chunk size / kernel engine (one tuner arm).
+    /// Executor with an explicit chunk size / kernel engine (one tuner
+    /// arm); the hybrid switch threshold comes from the config.
     pub fn with_chunk_size(
         cfg: &'a BigMeansConfig,
         data: &'a dyn DataSource,
         chunk_size: usize,
         kernel: crate::kernels::KernelEngineKind,
     ) -> Self {
+        Self::with_chunk_size_threshold(cfg, data, chunk_size, kernel, cfg.hybrid_threshold)
+    }
+
+    /// Executor with everything explicit, including the hybrid switch
+    /// threshold (threshold-arm tuner races price several values of it).
+    pub fn with_chunk_size_threshold(
+        cfg: &'a BigMeansConfig,
+        data: &'a dyn DataSource,
+        chunk_size: usize,
+        kernel: crate::kernels::KernelEngineKind,
+        hybrid_threshold: Option<f64>,
+    ) -> Self {
         let rows = chunk_size.min(data.m()).max(1);
         ShotExecutor {
             cfg,
             data,
             chunk_rows: rows,
-            solver: NativeSolver::sequential_with_kernel(cfg.lloyd, kernel),
+            solver: NativeSolver::sequential_with_kernel_threshold(
+                cfg.lloyd,
+                kernel,
+                hybrid_threshold,
+            ),
             sampler: ChunkSampler::new(rows, data.n()),
             obs: ShotObs::new(kernel),
         }
@@ -407,7 +424,12 @@ pub fn run_chunk_parallel(
         }
     };
     // Final full-dataset pass uses an inner-parallel native solver.
-    let final_solver = NativeSolver::with_kernel(cfg.lloyd, cfg.threads, cfg.kernel);
+    let final_solver = NativeSolver::with_kernel_threshold(
+        cfg.lloyd,
+        cfg.threads,
+        cfg.kernel,
+        cfg.hybrid_threshold,
+    );
     Ok(crate::coordinator::bigmeans::finish(
         cfg,
         &final_solver,

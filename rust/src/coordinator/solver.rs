@@ -76,12 +76,24 @@ impl NativeSolver {
 
     /// Build with an explicit kernel engine selection.
     pub fn with_kernel(params: LloydParams, threads: usize, kernel: KernelEngineKind) -> Self {
+        Self::with_kernel_threshold(params, threads, kernel, None)
+    }
+
+    /// Build with an explicit kernel engine and hybrid switch threshold
+    /// (`None` = the engine default; see
+    /// [`KernelEngineKind::build_with_threshold`]).
+    pub fn with_kernel_threshold(
+        params: LloydParams,
+        threads: usize,
+        kernel: KernelEngineKind,
+        hybrid_threshold: Option<f64>,
+    ) -> Self {
         let pool = match threads {
             1 => None,
             0 => Some(ThreadPool::with_default_size()),
             t => Some(ThreadPool::new(t)),
         };
-        NativeSolver { params, pool, engine: kernel.build() }
+        NativeSolver { params, pool, engine: kernel.build_with_threshold(hybrid_threshold) }
     }
 
     /// Fully sequential solver (deterministic tests).
@@ -91,7 +103,17 @@ impl NativeSolver {
 
     /// Fully sequential solver with an explicit kernel engine.
     pub fn sequential_with_kernel(params: LloydParams, kernel: KernelEngineKind) -> Self {
-        NativeSolver { params, pool: None, engine: kernel.build() }
+        Self::sequential_with_kernel_threshold(params, kernel, None)
+    }
+
+    /// Fully sequential solver with an explicit kernel engine and hybrid
+    /// switch threshold.
+    pub fn sequential_with_kernel_threshold(
+        params: LloydParams,
+        kernel: KernelEngineKind,
+        hybrid_threshold: Option<f64>,
+    ) -> Self {
+        NativeSolver { params, pool: None, engine: kernel.build_with_threshold(hybrid_threshold) }
     }
 
     /// Name of the configured kernel engine.

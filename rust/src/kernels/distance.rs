@@ -81,6 +81,11 @@ pub(crate) fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+    if simd::active_isa() == simd::DistanceIsa::Avx512 {
+        // SAFETY: Avx512 only activates after runtime feature detection.
+        return unsafe { simd::avx512::sq_dist(a, b) };
+    }
     #[cfg(target_arch = "x86_64")]
     if simd::active_isa() == simd::DistanceIsa::Avx2 {
         // SAFETY: Avx2 only activates after runtime feature detection.
@@ -98,6 +103,11 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+    if simd::active_isa() == simd::DistanceIsa::Avx512 {
+        // SAFETY: Avx512 only activates after runtime feature detection.
+        return unsafe { simd::avx512::dot(a, b) };
+    }
     #[cfg(target_arch = "x86_64")]
     if simd::active_isa() == simd::DistanceIsa::Avx2 {
         // SAFETY: Avx2 only activates after runtime feature detection.
@@ -207,6 +217,15 @@ pub fn sq_dist_panel_argmin(
     debug_assert_eq!(labels.len(), rows);
     debug_assert_eq!(mins.len(), rows);
     debug_assert!(k > 0);
+    #[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+    if simd::active_isa() == simd::DistanceIsa::Avx512 {
+        // SAFETY: Avx512 only activates after runtime feature detection.
+        return unsafe {
+            simd::avx512::sq_dist_panel_argmin(
+                points, x_sq, centroids, c_sq, rows, k, n, labels, mins,
+            )
+        };
+    }
     #[cfg(target_arch = "x86_64")]
     if simd::active_isa() == simd::DistanceIsa::Avx2 {
         // SAFETY: Avx2 only activates after runtime feature detection.
@@ -353,6 +372,11 @@ pub fn nearest2_decomp(
 /// dispatched to the active SIMD backend.
 #[inline]
 fn dot4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> (f32, f32, f32, f32) {
+    #[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+    if simd::active_isa() == simd::DistanceIsa::Avx512 {
+        // SAFETY: Avx512 only activates after runtime feature detection.
+        return unsafe { simd::avx512::dot4(x, c0, c1, c2, c3) };
+    }
     #[cfg(target_arch = "x86_64")]
     if simd::active_isa() == simd::DistanceIsa::Avx2 {
         // SAFETY: Avx2 only activates after runtime feature detection.

@@ -68,11 +68,22 @@ pub enum KernelEngineKind {
 impl KernelEngineKind {
     /// Instantiate the engine.
     pub fn build(self) -> Box<dyn KernelEngine> {
+        self.build_with_threshold(None)
+    }
+
+    /// Instantiate the engine with an explicit hybrid switch threshold.
+    /// Only the hybrid engine consults it — a learned or configured
+    /// rescan-rate cutoff replaces [`HybridEngine::default`]'s fixed
+    /// 0.25; `None` (and every other engine) is exactly [`Self::build`].
+    pub fn build_with_threshold(self, hybrid_threshold: Option<f64>) -> Box<dyn KernelEngine> {
         match self {
             KernelEngineKind::Panel => Box::new(PanelEngine),
             KernelEngineKind::Bounded => Box::new(BoundedEngine::default()),
             KernelEngineKind::Elkan => Box::new(ElkanEngine::default()),
-            KernelEngineKind::Hybrid => Box::new(HybridEngine::default()),
+            KernelEngineKind::Hybrid => match hybrid_threshold {
+                Some(t) => Box::new(HybridEngine { switch_threshold: t, ..HybridEngine::default() }),
+                None => Box::new(HybridEngine::default()),
+            },
         }
     }
 
@@ -1072,12 +1083,16 @@ pub struct HybridEngine {
     pub switch_threshold: f64,
 }
 
+/// Built-in Hamerly→Elkan switch threshold (rescanned fraction of the
+/// chunk). `--hybrid-threshold` / a tuner-learned value override it.
+pub const DEFAULT_HYBRID_THRESHOLD: f64 = 0.25;
+
 impl Default for HybridEngine {
     fn default() -> Self {
         HybridEngine {
             bounded: BoundedEngine::default(),
             elkan: ElkanEngine::default(),
-            switch_threshold: 0.25,
+            switch_threshold: DEFAULT_HYBRID_THRESHOLD,
         }
     }
 }
@@ -1092,6 +1107,16 @@ impl HybridEngine {
         }
         let rescans = step.distance_evals.saturating_sub(m as u64) / k as u64;
         (rescans as f64) > self.switch_threshold * (m as f64)
+    }
+}
+
+/// Record one steady-state Hamerly step's rescan count and row count
+/// into `cnt` (the hybrid rescan-rate accounting). Init passes are
+/// excluded for the same reason `should_switch` excludes them.
+fn record_rescans(was_active: bool, cnt: &mut Counters, m: usize, k: usize) {
+    if was_active && k >= 2 && m > 0 {
+        cnt.hybrid_rescans += cnt.distance_evals.saturating_sub(m as u64) / k as u64;
+        cnt.hybrid_scan_rows += m as u64;
     }
 }
 
@@ -1120,6 +1145,7 @@ impl KernelEngine for HybridEngine {
         let was_active = state.active;
         let mut cnt = Counters::new();
         let out = self.bounded.assign_step(points, centroids, m, n, k, state, &mut cnt);
+        record_rescans(was_active, &mut cnt, m, k);
         if self.should_switch(was_active, &cnt, m, k) {
             state.hybrid_elkan = true;
             cnt.hybrid_switches += 1;
@@ -1148,7 +1174,9 @@ impl KernelEngine for HybridEngine {
         let bounded = &self.bounded;
         let out = bounded.assign_step_parallel(pool, points, centroids, m, n, k, state, &mut cnt);
         // The per-worker counters are summed before the decision, so the
-        // switch step is identical to the serial path's.
+        // switch step — and the rescan accounting — is identical to the
+        // serial path's.
+        record_rescans(was_active, &mut cnt, m, k);
         if self.should_switch(was_active, &cnt, m, k) {
             state.hybrid_elkan = true;
             cnt.hybrid_switches += 1;

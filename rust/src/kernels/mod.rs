@@ -12,14 +12,17 @@
 //! reference implementation and dispatches at runtime to the explicit
 //! backends in [`simd`]:
 //!
-//! | ISA      | arch    | selection                               |
-//! |----------|---------|-----------------------------------------|
-//! | `scalar` | any     | always available (the reference)        |
-//! | `avx2`   | x86_64  | `is_x86_feature_detected!("avx2")`      |
-//! | `neon`   | aarch64 | architecture baseline                   |
+//! | ISA      | arch    | selection                                         |
+//! |----------|---------|---------------------------------------------------|
+//! | `scalar` | any     | always available (the reference)                  |
+//! | `avx512` | x86_64  | `is_x86_feature_detected!("avx512f")` + rustc≥1.89 |
+//! | `avx2`   | x86_64  | `is_x86_feature_detected!("avx2")`                |
+//! | `neon`   | aarch64 | architecture baseline                             |
 //!
-//! Selection order: CLI `--isa` ([`simd::set_isa`]) > `BIGMEANS_ISA` env >
-//! auto-detect, resolved once and cached in an atomic.
+//! Selection order: CLI `--isa` ([`simd::set_isa`], which rejects an
+//! unavailable request with an error listing [`simd::detected_isas`]) >
+//! `BIGMEANS_ISA` env > auto-detect (avx512 > avx2 > neon > scalar),
+//! resolved once and cached in an atomic.
 //!
 //! **Reduction-order contract.** All backends are bit-identical to the
 //! scalar path: 16 independent f32 lane accumulators filled in chunk
@@ -56,10 +59,10 @@ pub use assign::{
 };
 pub use engine::{
     BoundedEngine, ElkanEngine, HybridEngine, KernelEngine, KernelEngineKind, LloydState,
-    PanelEngine,
+    PanelEngine, DEFAULT_HYBRID_THRESHOLD,
 };
 pub use kmeanspp::{kmeanspp, reseed_degenerate, reseed_degenerate_random};
 pub use lloyd::{lloyd, lloyd_with_engine, LloydParams, LloydResult};
 pub use objective::{objective, objective_parallel};
-pub use simd::{active_isa, detect as detect_isa, set_isa, DistanceIsa};
+pub use simd::{active_isa, detect as detect_isa, detected_isas, set_isa, DistanceIsa};
 pub use update::{degenerate_indices, update_centroids};

@@ -2,8 +2,8 @@
 //!
 //! The scalar `[f32; LANES]` tiles in [`super::distance`] rely on LLVM's
 //! auto-vectorizer; this module provides hand-written `std::arch`
-//! equivalents (AVX2 on x86_64, NEON on aarch64) selected **once at
-//! startup** behind a [`DistanceIsa`] dispatch table. The contract that
+//! equivalents (AVX-512 and AVX2 on x86_64, NEON on aarch64) selected
+//! **once at startup** behind a [`DistanceIsa`] dispatch table. The contract that
 //! makes runtime dispatch safe to hot-swap anywhere — mid-run, per bench
 //! row, per test — is *bit-identicality*: every backend performs the exact
 //! same f32 operations in the exact same order as the scalar reference
@@ -18,13 +18,25 @@
 //! * **Same reduction tree.** The scalar kernels keep `LANES = 16`
 //!   independent accumulators combined by a pairwise tree
 //!   (`width = 8, 4, 2, 1`) plus a separately-accumulated scalar tail.
-//!   The SIMD kernels hold the same 16 lanes in registers (2×8 on AVX2,
-//!   4×4 on NEON) and reduce them with the same tree, then add the same
-//!   scalar tail last.
+//!   The SIMD kernels hold the same 16 lanes in registers (1×16 on
+//!   AVX-512, 2×8 on AVX2, 4×4 on NEON) and reduce them with the same
+//!   tree, then add the same scalar tail last. The AVX-512 kernels
+//!   process 32-element tiles per iteration, but as two *sequential*
+//!   adds into one 16-lane accumulator — lane `l` still sees chunk `2i`
+//!   before chunk `2i+1`, exactly the scalar per-lane order.
 //!
-//! Selection order: explicit [`set_isa`] (CLI `--isa`) > the
-//! `BIGMEANS_ISA` environment variable > [`detect`]. The gating sweep in
+//! Selection order: explicit [`set_isa`] (CLI `--isa`, which *fails* with
+//! an error listing the detected ISAs when the host lacks the request) >
+//! the `BIGMEANS_ISA` environment variable (silently falls back to
+//! [`detect`] when unavailable, so one exported variable can span a
+//! heterogeneous fleet) > [`detect`], whose preference order is
+//! avx512 > avx2 > neon > scalar. The gating sweep in
 //! `tests/property_engines.rs` bit-compares every backend against scalar.
+//!
+//! AVX-512 needs rustc ≥ 1.89 for the stable `_mm512_*` intrinsics;
+//! `build.rs` probes the toolchain and sets `cfg(bigmeans_avx512)`. On
+//! older compilers the backend is compiled out and dispatch falls back
+//! to AVX2.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
@@ -38,6 +50,9 @@ pub enum DistanceIsa {
     Avx2 = 2,
     /// Hand-written NEON kernels (aarch64 baseline).
     Neon = 3,
+    /// Hand-written AVX-512 kernels (x86_64, runtime-detected; needs
+    /// rustc ≥ 1.89 — see `build.rs`).
+    Avx512 = 4,
 }
 
 impl DistanceIsa {
@@ -47,16 +62,18 @@ impl DistanceIsa {
             DistanceIsa::Scalar => "scalar",
             DistanceIsa::Avx2 => "avx2",
             DistanceIsa::Neon => "neon",
+            DistanceIsa::Avx512 => "avx512",
         }
     }
 
-    /// Parse a CLI/env token (`scalar` / `avx2` / `neon`). `auto` is not a
-    /// concrete ISA — callers map it to [`detect`].
+    /// Parse a CLI/env token (`scalar` / `avx2` / `neon` / `avx512`).
+    /// `auto` is not a concrete ISA — callers map it to [`detect`].
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "scalar" => Some(DistanceIsa::Scalar),
             "avx2" => Some(DistanceIsa::Avx2),
             "neon" => Some(DistanceIsa::Neon),
+            "avx512" => Some(DistanceIsa::Avx512),
             _ => None,
         }
     }
@@ -76,15 +93,30 @@ impl DistanceIsa {
                 }
             }
             DistanceIsa::Neon => cfg!(target_arch = "aarch64"),
+            DistanceIsa::Avx512 => {
+                #[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(all(target_arch = "x86_64", bigmeans_avx512)))]
+                {
+                    false
+                }
+            }
         }
     }
 }
 
-/// Best backend available on this host.
+/// Best backend available on this host. Preference order:
+/// avx512 > avx2 > neon > scalar.
 #[allow(unreachable_code)]
 pub fn detect() -> DistanceIsa {
     #[cfg(target_arch = "x86_64")]
     {
+        #[cfg(bigmeans_avx512)]
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return DistanceIsa::Avx512;
+        }
         if std::arch::is_x86_feature_detected!("avx2") {
             return DistanceIsa::Avx2;
         }
@@ -96,20 +128,31 @@ pub fn detect() -> DistanceIsa {
     DistanceIsa::Scalar
 }
 
+/// Every backend the current host can run, best-first — i.e. the
+/// [`detect`] preference order filtered to what is available. Always
+/// ends with `scalar`.
+pub fn detected_isas() -> Vec<DistanceIsa> {
+    [DistanceIsa::Avx512, DistanceIsa::Avx2, DistanceIsa::Neon, DistanceIsa::Scalar]
+        .into_iter()
+        .filter(|isa| isa.available())
+        .collect()
+}
+
 /// 0 = uninitialised; otherwise a `DistanceIsa` discriminant. Relaxed
 /// ordering is enough: every backend is bit-identical, so a racing reader
 /// seeing the old value computes the same result.
 static ACTIVE: AtomicU8 = AtomicU8::new(0);
 
 /// The backend the distance primitives currently dispatch to. Initialises
-/// lazily on first use: `BIGMEANS_ISA` (`auto`/`scalar`/`avx2`/`neon`) if
-/// set and available, else [`detect`].
+/// lazily on first use: `BIGMEANS_ISA` (`auto`/`scalar`/`avx2`/`neon`/
+/// `avx512`) if set and available, else [`detect`].
 #[inline]
 pub fn active_isa() -> DistanceIsa {
     match ACTIVE.load(Ordering::Relaxed) {
         1 => DistanceIsa::Scalar,
         2 => DistanceIsa::Avx2,
         3 => DistanceIsa::Neon,
+        4 => DistanceIsa::Avx512,
         _ => init_isa(),
     }
 }
@@ -125,10 +168,17 @@ fn init_isa() -> DistanceIsa {
 }
 
 /// Pin the dispatch to one backend (CLI `--isa`, bench A/B rows, the
-/// SIMD ≡ scalar property sweep). Fails if the host cannot run it.
+/// SIMD ≡ scalar property sweep). Fails — naming the request and listing
+/// every ISA this host *can* run — instead of silently falling back, so
+/// a typo'd or over-optimistic `--isa avx512` surfaces immediately.
 pub fn set_isa(isa: DistanceIsa) -> Result<(), String> {
     if !isa.available() {
-        return Err(format!("isa `{}` is not available on this host", isa.name()));
+        let detected: Vec<&str> = detected_isas().iter().map(|i| i.name()).collect();
+        return Err(format!(
+            "isa `{}` is not available on this host (detected: {})",
+            isa.name(),
+            detected.join(", ")
+        ));
     }
     ACTIVE.store(isa as u8, Ordering::Relaxed);
     Ok(())
@@ -279,6 +329,243 @@ pub mod avx2 {
     /// Caller must ensure AVX2 is available on the running CPU.
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx2")]
+    pub unsafe fn sq_dist_panel_argmin(
+        points: &[f32],
+        x_sq: &[f32],
+        centroids: &[f32],
+        c_sq: &[f32],
+        rows: usize,
+        k: usize,
+        n: usize,
+        labels: &mut [u32],
+        mins: &mut [f32],
+    ) {
+        debug_assert_eq!(points.len(), rows * n);
+        debug_assert_eq!(centroids.len(), k * n);
+        debug_assert_eq!(labels.len(), rows);
+        debug_assert_eq!(mins.len(), rows);
+        debug_assert!(k > 0);
+        let k4 = k / 4 * 4;
+        for i in 0..rows {
+            let x = &points[i * n..(i + 1) * n];
+            let mut best = 0u32;
+            let mut best_d = f32::INFINITY;
+            let mut j = 0;
+            while j < k4 {
+                let c0 = &centroids[j * n..(j + 1) * n];
+                let c1 = &centroids[(j + 1) * n..(j + 2) * n];
+                let c2 = &centroids[(j + 2) * n..(j + 3) * n];
+                let c3 = &centroids[(j + 3) * n..(j + 4) * n];
+                let (p0, p1, p2, p3) = dot4(x, c0, c1, c2, c3);
+                let d0 = (x_sq[i] + c_sq[j] - 2.0 * p0).max(0.0);
+                let d1 = (x_sq[i] + c_sq[j + 1] - 2.0 * p1).max(0.0);
+                let d2 = (x_sq[i] + c_sq[j + 2] - 2.0 * p2).max(0.0);
+                let d3 = (x_sq[i] + c_sq[j + 3] - 2.0 * p3).max(0.0);
+                if d0 < best_d {
+                    best_d = d0;
+                    best = j as u32;
+                }
+                if d1 < best_d {
+                    best_d = d1;
+                    best = (j + 1) as u32;
+                }
+                if d2 < best_d {
+                    best_d = d2;
+                    best = (j + 2) as u32;
+                }
+                if d3 < best_d {
+                    best_d = d3;
+                    best = (j + 3) as u32;
+                }
+                j += 4;
+            }
+            while j < k {
+                let c = &centroids[j * n..(j + 1) * n];
+                let d = (x_sq[i] + c_sq[j] - 2.0 * dot(x, c)).max(0.0);
+                if d < best_d {
+                    best_d = d;
+                    best = j as u32;
+                }
+                j += 1;
+            }
+            labels[i] = best;
+            mins[i] = best_d;
+        }
+    }
+}
+
+/// AVX-512 kernels. The 16 scalar lane accumulators live in **one** zmm
+/// register; each main-loop iteration covers a 32-element tile as two
+/// *dependent* adds into that accumulator, so lane `l` accumulates chunk
+/// `2i` before chunk `2i+1` — the scalar per-lane order. An odd trailing
+/// 16-element chunk gets a single add, and the sub-16 tail stays the
+/// sequential scalar loop (a masked vector tail would reassociate the
+/// tail sum and break bit-identicality). Reduction splits the zmm into
+/// the same `lo`/`hi` ymm halves the AVX2 backend keeps in registers and
+/// replays its pairwise tree; the split uses two `extractf32x4` + an
+/// `insertf128` so only AVX512F is required (no DQ).
+#[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+pub mod avx512 {
+    use core::arch::x86_64::*;
+
+    /// Must match `distance::LANES` — the tile the reduction tree spans.
+    const LANES: usize = 16;
+
+    /// Reduce the 16 lanes of one zmm accumulator with the scalar
+    /// pairwise tree: width-8 (`lo + hi`), width-4, width-2, width-1.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    unsafe fn reduce16(v: __m512) -> f32 {
+        let lo = _mm512_castps512_ps256(v);
+        let hi = _mm256_insertf128_ps::<1>(
+            _mm256_castps128_ps256(_mm512_extractf32x4_ps::<2>(v)),
+            _mm512_extractf32x4_ps::<3>(v),
+        );
+        let w = _mm256_add_ps(lo, hi);
+        let x = _mm_add_ps(_mm256_castps256_ps128(w), _mm256_extractf128_ps::<1>(w));
+        let y = _mm_add_ps(x, _mm_movehl_ps(x, x));
+        _mm_cvtss_f32(_mm_add_ss(y, _mm_movehdup_ps(y)))
+    }
+
+    /// Direct squared Euclidean distance; bit-identical to
+    /// `distance::sq_dist`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available on the running CPU.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm512_setzero_ps();
+        let pairs = chunks / 2;
+        for i in 0..pairs {
+            let j = i * 2 * LANES;
+            let d0 = _mm512_sub_ps(_mm512_loadu_ps(ap.add(j)), _mm512_loadu_ps(bp.add(j)));
+            let d1 = _mm512_sub_ps(
+                _mm512_loadu_ps(ap.add(j + LANES)),
+                _mm512_loadu_ps(bp.add(j + LANES)),
+            );
+            // mul + add, never fmadd — and two sequential adds into the
+            // one accumulator to preserve the scalar per-lane order.
+            acc = _mm512_add_ps(acc, _mm512_mul_ps(d0, d0));
+            acc = _mm512_add_ps(acc, _mm512_mul_ps(d1, d1));
+        }
+        if chunks % 2 == 1 {
+            let j = (chunks - 1) * LANES;
+            let d = _mm512_sub_ps(_mm512_loadu_ps(ap.add(j)), _mm512_loadu_ps(bp.add(j)));
+            acc = _mm512_add_ps(acc, _mm512_mul_ps(d, d));
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..n {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        reduce16(acc) + tail
+    }
+
+    /// Dot product; bit-identical to `distance::dot`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available on the running CPU.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let chunks = n / LANES;
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc = _mm512_setzero_ps();
+        let pairs = chunks / 2;
+        for i in 0..pairs {
+            let j = i * 2 * LANES;
+            let p0 = _mm512_mul_ps(_mm512_loadu_ps(ap.add(j)), _mm512_loadu_ps(bp.add(j)));
+            let p1 = _mm512_mul_ps(
+                _mm512_loadu_ps(ap.add(j + LANES)),
+                _mm512_loadu_ps(bp.add(j + LANES)),
+            );
+            acc = _mm512_add_ps(acc, p0);
+            acc = _mm512_add_ps(acc, p1);
+        }
+        if chunks % 2 == 1 {
+            let j = (chunks - 1) * LANES;
+            let p = _mm512_mul_ps(_mm512_loadu_ps(ap.add(j)), _mm512_loadu_ps(bp.add(j)));
+            acc = _mm512_add_ps(acc, p);
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..n {
+            tail += a[j] * b[j];
+        }
+        reduce16(acc) + tail
+    }
+
+    /// Four simultaneous dot products against a shared left vector;
+    /// bit-identical to `distance::dot4_scalar`.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available on the running CPU.
+    #[inline]
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot4(
+        x: &[f32],
+        c0: &[f32],
+        c1: &[f32],
+        c2: &[f32],
+        c3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = x.len();
+        debug_assert!(c0.len() == n && c1.len() == n && c2.len() == n && c3.len() == n);
+        let chunks = n / LANES;
+        let xp = x.as_ptr();
+        let (p0, p1, p2, p3) = (c0.as_ptr(), c1.as_ptr(), c2.as_ptr(), c3.as_ptr());
+        let mut a0 = _mm512_setzero_ps();
+        let mut a1 = _mm512_setzero_ps();
+        let mut a2 = _mm512_setzero_ps();
+        let mut a3 = _mm512_setzero_ps();
+        let pairs = chunks / 2;
+        for i in 0..pairs {
+            let j = i * 2 * LANES;
+            let x0 = _mm512_loadu_ps(xp.add(j));
+            let x1 = _mm512_loadu_ps(xp.add(j + LANES));
+            a0 = _mm512_add_ps(a0, _mm512_mul_ps(x0, _mm512_loadu_ps(p0.add(j))));
+            a0 = _mm512_add_ps(a0, _mm512_mul_ps(x1, _mm512_loadu_ps(p0.add(j + LANES))));
+            a1 = _mm512_add_ps(a1, _mm512_mul_ps(x0, _mm512_loadu_ps(p1.add(j))));
+            a1 = _mm512_add_ps(a1, _mm512_mul_ps(x1, _mm512_loadu_ps(p1.add(j + LANES))));
+            a2 = _mm512_add_ps(a2, _mm512_mul_ps(x0, _mm512_loadu_ps(p2.add(j))));
+            a2 = _mm512_add_ps(a2, _mm512_mul_ps(x1, _mm512_loadu_ps(p2.add(j + LANES))));
+            a3 = _mm512_add_ps(a3, _mm512_mul_ps(x0, _mm512_loadu_ps(p3.add(j))));
+            a3 = _mm512_add_ps(a3, _mm512_mul_ps(x1, _mm512_loadu_ps(p3.add(j + LANES))));
+        }
+        if chunks % 2 == 1 {
+            let j = (chunks - 1) * LANES;
+            let x0 = _mm512_loadu_ps(xp.add(j));
+            a0 = _mm512_add_ps(a0, _mm512_mul_ps(x0, _mm512_loadu_ps(p0.add(j))));
+            a1 = _mm512_add_ps(a1, _mm512_mul_ps(x0, _mm512_loadu_ps(p1.add(j))));
+            a2 = _mm512_add_ps(a2, _mm512_mul_ps(x0, _mm512_loadu_ps(p2.add(j))));
+            a3 = _mm512_add_ps(a3, _mm512_mul_ps(x0, _mm512_loadu_ps(p3.add(j))));
+        }
+        let (mut t0, mut t1, mut t2, mut t3) = (0.0f32, 0.0, 0.0, 0.0);
+        for j in chunks * LANES..n {
+            t0 += x[j] * c0[j];
+            t1 += x[j] * c1[j];
+            t2 += x[j] * c2[j];
+            t3 += x[j] * c3[j];
+        }
+        (reduce16(a0) + t0, reduce16(a1) + t1, reduce16(a2) + t2, reduce16(a3) + t3)
+    }
+
+    /// Fused distance panel + per-row argmin; the whole loop is compiled
+    /// with AVX-512F enabled so [`dot4`]/[`dot`] inline into it.
+    /// Bit-identical to `distance::sq_dist_panel_argmin` (same
+    /// decomposition arithmetic, same strict-`<` lowest-index
+    /// tie-breaking).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX-512F is available on the running CPU.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx512f")]
     pub unsafe fn sq_dist_panel_argmin(
         points: &[f32],
         x_sq: &[f32],
@@ -532,7 +819,9 @@ mod tests {
 
     #[test]
     fn parse_name_roundtrip_and_scalar_always_available() {
-        for isa in [DistanceIsa::Scalar, DistanceIsa::Avx2, DistanceIsa::Neon] {
+        for isa in
+            [DistanceIsa::Scalar, DistanceIsa::Avx2, DistanceIsa::Neon, DistanceIsa::Avx512]
+        {
             assert_eq!(DistanceIsa::parse(isa.name()), Some(isa));
         }
         assert_eq!(DistanceIsa::parse("auto"), None);
@@ -547,11 +836,32 @@ mod tests {
     }
 
     #[test]
-    fn unavailable_isa_is_rejected() {
-        // At most one of these is the host arch; the other must refuse.
+    fn unavailable_isa_is_rejected_with_detected_list() {
+        // At most one of these is the host arch; the other must refuse
+        // with an error naming the request and the detected ISAs.
         let foreign =
             if cfg!(target_arch = "aarch64") { DistanceIsa::Avx2 } else { DistanceIsa::Neon };
-        assert!(set_isa(foreign).is_err());
+        let err = set_isa(foreign).unwrap_err();
+        assert!(err.contains(foreign.name()), "error must name the rejected isa: {err}");
+        assert!(err.contains("detected:"), "error must list detected isas: {err}");
+        assert!(err.contains("scalar"), "scalar is always detected: {err}");
+    }
+
+    #[test]
+    fn detect_order_prefers_widest_available_isa() {
+        let detected = detected_isas();
+        // Scalar is always last; detect() is always the head.
+        assert_eq!(detected.last().copied(), Some(DistanceIsa::Scalar));
+        assert_eq!(detect(), detected[0]);
+        // The list must follow the documented preference order:
+        // avx512 > avx2 > neon > scalar.
+        let order =
+            [DistanceIsa::Avx512, DistanceIsa::Avx2, DistanceIsa::Neon, DistanceIsa::Scalar];
+        let positions: Vec<usize> = detected
+            .iter()
+            .map(|isa| order.iter().position(|o| o == isa).expect("unknown isa"))
+            .collect();
+        assert!(positions.windows(2).all(|w| w[0] < w[1]), "detected_isas out of order");
     }
 
     #[cfg(target_arch = "x86_64")]
@@ -590,6 +900,88 @@ mod tests {
                 assert_eq!(simd4.2.to_bits(), ref4.2.to_bits(), "dot4.2 n={n}");
                 assert_eq!(simd4.3.to_bits(), ref4.3.to_bits(), "dot4.3 n={n}");
             }
+        }
+    }
+
+    #[cfg(all(target_arch = "x86_64", bigmeans_avx512))]
+    #[test]
+    fn avx512_kernels_bit_match_scalar() {
+        use crate::kernels::distance;
+        if !DistanceIsa::Avx512.available() {
+            return; // nothing to compare on this host
+        }
+        let mut state = 0xFEED_F00D_5EED_0001u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) * 16.0 - 8.0
+        };
+        // Shapes straddle every tail regime of the 32-element tile: sub-16
+        // scalar tails, one odd trailing 16-chunk (n = 48), and multiples
+        // of 32.
+        for n in [1usize, 3, 7, 8, 15, 16, 17, 31, 32, 33, 47, 48, 63, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| next()).collect();
+            let b: Vec<f32> = (0..n).map(|_| next()).collect();
+            let c: Vec<f32> = (0..n).map(|_| next()).collect();
+            let d: Vec<f32> = (0..n).map(|_| next()).collect();
+            let e: Vec<f32> = (0..n).map(|_| next()).collect();
+            unsafe {
+                assert_eq!(
+                    avx512::sq_dist(&a, &b).to_bits(),
+                    distance::sq_dist_scalar(&a, &b).to_bits(),
+                    "sq_dist n={n}"
+                );
+                assert_eq!(
+                    avx512::dot(&a, &b).to_bits(),
+                    distance::dot_scalar(&a, &b).to_bits(),
+                    "dot n={n}"
+                );
+                let simd4 = avx512::dot4(&a, &b, &c, &d, &e);
+                let ref4 = distance::dot4_scalar(&a, &b, &c, &d, &e);
+                assert_eq!(simd4.0.to_bits(), ref4.0.to_bits(), "dot4.0 n={n}");
+                assert_eq!(simd4.1.to_bits(), ref4.1.to_bits(), "dot4.1 n={n}");
+                assert_eq!(simd4.2.to_bits(), ref4.2.to_bits(), "dot4.2 n={n}");
+                assert_eq!(simd4.3.to_bits(), ref4.3.to_bits(), "dot4.3 n={n}");
+            }
+        }
+        // Panel argmin: a small dense panel with a masked-tail n.
+        let (rows, k, n) = (9usize, 7usize, 33usize);
+        let points: Vec<f32> = (0..rows * n).map(|_| next()).collect();
+        let centroids: Vec<f32> = (0..k * n).map(|_| next()).collect();
+        let x_sq: Vec<f32> = (0..rows)
+            .map(|i| {
+                let x = &points[i * n..(i + 1) * n];
+                distance::dot_scalar(x, x)
+            })
+            .collect();
+        let c_sq: Vec<f32> = (0..k)
+            .map(|j| {
+                let c = &centroids[j * n..(j + 1) * n];
+                distance::dot_scalar(c, c)
+            })
+            .collect();
+        let mut labels = vec![0u32; rows];
+        let mut mins = vec![0f32; rows];
+        let mut ref_labels = vec![0u32; rows];
+        let mut ref_mins = vec![0f32; rows];
+        unsafe {
+            avx512::sq_dist_panel_argmin(
+                &points, &x_sq, &centroids, &c_sq, rows, k, n, &mut labels, &mut mins,
+            );
+        }
+        distance::sq_dist_panel_argmin_scalar(
+            &points,
+            &x_sq,
+            &centroids,
+            &c_sq,
+            rows,
+            k,
+            n,
+            &mut ref_labels,
+            &mut ref_mins,
+        );
+        assert_eq!(labels, ref_labels);
+        for (m, r) in mins.iter().zip(&ref_mins) {
+            assert_eq!(m.to_bits(), r.to_bits());
         }
     }
 }

@@ -28,7 +28,9 @@ use bigmeans::coordinator::config::{
 };
 use bigmeans::coordinator::{produce_from_source, ChunkQueue, DriftAction, StreamingBigMeans};
 use bigmeans::data::{catalog, convert, loader, PAPER_K_GRID};
-use bigmeans::kernels::{active_isa, detect_isa, set_isa, DistanceIsa};
+use bigmeans::kernels::{
+    active_isa, detect_isa, set_isa, DistanceIsa, DEFAULT_HYBRID_THRESHOLD,
+};
 use bigmeans::obs;
 use bigmeans::runtime;
 use bigmeans::serve::{spawn_watcher, Client, ModelArtifact, ModelRegistry, ServeOptions, Server};
@@ -70,11 +72,22 @@ SUBCOMMANDS:
                                   once the observed rescan rate trips the
                                   threshold; label-identical to panel
                         'native' is accepted as an alias for panel
-      --isa I           auto | scalar | avx2 | neon (default auto):
-                        distance-kernel SIMD backend. Every choice is
-                        bit-identical; ISAs the host lacks are rejected.
-                        (BIGMEANS_ISA env is the fallback when the flag
-                        is absent)
+      --hybrid-threshold T  hybrid engine: rescan-rate cutoff for the
+                        Hamerly→Elkan switch (default 0.25). `--mode
+                        tune` with `:hybrid@T` arms learns a per-dataset
+                        value; see --reuse-threshold
+      --reuse-threshold P  load the learned hybrid threshold from the
+                        `.bmm` model at P (written by `--mode tune
+                        --save-model`); an explicit --hybrid-threshold
+                        wins over it
+      --isa I           auto | scalar | avx2 | neon | avx512 (default
+                        auto): distance-kernel SIMD backend. Every choice
+                        is bit-identical; auto detection prefers
+                        avx512 > avx2 > neon > scalar, and a named ISA
+                        the host lacks is rejected with the detected
+                        list. (BIGMEANS_ISA env is the fallback when the
+                        flag is absent; unlike --isa it falls back to
+                        detection silently)
       --mode M          inner | chunks | seq | tune | stream | serve
                         (default inner)
                         tune   = competitive portfolio tuner: bandit-
@@ -125,8 +138,11 @@ SUBCOMMANDS:
     tune mode only:
       --tuner T         ucb | softmax          (default ucb)
       --arms SPEC       grid of sample-size multipliers, each optionally
-                        `:kernel` (default 0.25,0.5,1,2,4), e.g.
-                        `0.5,1:panel,1:bounded,4`
+                        `:kernel` or `:kernel@threshold` (default
+                        0.25,0.5,1,2,4), e.g. `0.5,1:panel,1:bounded,4`
+                        or `1:hybrid@0.1,1:hybrid@0.25,1:hybrid@0.5` —
+                        `@T` races hybrid switch thresholds; the winner
+                        lands in the `.bmm` meta under --save-model
       --exploration C   UCB exploration constant (default 1.0)
       --temperature T   softmax temperature (default 0.1)
       --validation-rows N  reservoir validation sample size (default 4096)
@@ -173,8 +189,10 @@ SUBCOMMANDS:
       --addr A          listen address (default 127.0.0.1:7171; port 0
                         picks an ephemeral port, printed on stderr)
       --threads N       batch-sharding workers (default: machine)
-      --isa I           auto | scalar | avx2 | neon (default auto):
-                        distance-kernel SIMD backend (bit-identical)
+      --isa I           auto | scalar | avx2 | neon | avx512 (default
+                        auto): distance-kernel SIMD backend
+                        (bit-identical; unavailable ISAs are rejected
+                        with the detected list)
       --max-batch N     largest accepted rows per request (default 2^20)
       --watch           poll the .bmm file and hot-swap refreshed models
                         without dropping in-flight requests
@@ -294,15 +312,48 @@ fn load_source(
         .map_err(|e| e.to_string())
 }
 
-/// Resolve `--isa` (auto | scalar | avx2 | neon) and pin the
+/// Resolve `--isa` (auto | scalar | avx2 | neon | avx512) and pin the
 /// distance-kernel backend before any kernel runs. `auto` re-runs
 /// detection explicitly so a stale `BIGMEANS_ISA` env value cannot leak
-/// into an `--isa auto` run; a named ISA the host lacks is an error.
+/// into an `--isa auto` run; a named ISA the host lacks is an error
+/// naming every detected ISA.
 fn apply_isa_flag(args: &Args) -> Result<(), String> {
-    match DistanceIsa::parse(args.choice("isa", &["auto", "scalar", "avx2", "neon"])?) {
+    match DistanceIsa::parse(args.choice("isa", &["auto", "scalar", "avx2", "neon", "avx512"])?)
+    {
         Some(isa) => set_isa(isa),
         None => set_isa(detect_isa()),
     }
+}
+
+/// Resolve the hybrid switch threshold: an explicit `--hybrid-threshold`
+/// wins over `--reuse-threshold P` (the value a `--mode tune
+/// --save-model` run recorded in the model's meta).
+fn resolve_hybrid_threshold(args: &Args) -> Result<Option<f64>, String> {
+    if let Some(text) = args.get("hybrid-threshold") {
+        let t: f64 =
+            text.parse().map_err(|_| format!("--hybrid-threshold: bad value '{text}'"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("--hybrid-threshold must be ≥ 0, got '{text}'"));
+        }
+        return Ok(Some(t));
+    }
+    let Some(path) = args.get("reuse-threshold") else {
+        return Ok(None);
+    };
+    if !path.ends_with(".bmm") {
+        return Err(format!("--reuse-threshold needs a .bmm model path, got '{path}'"));
+    }
+    let artifact = ModelArtifact::load(&PathBuf::from(path))
+        .map_err(|e| format!("--reuse-threshold: {e}"))?;
+    let t = artifact.meta.get("hybrid_threshold").and_then(Json::as_f64).ok_or_else(|| {
+        format!(
+            "--reuse-threshold: '{path}' records no hybrid_threshold in its meta (write \
+             one with `--mode tune --arms 1:hybrid@0.1,1:hybrid@0.25,1:hybrid@0.5 \
+             --save-model {path}`)"
+        )
+    })?;
+    log_info!("cluster", "reusing learned hybrid threshold {t} from {path}");
+    Ok(Some(t))
 }
 
 /// `num` that degrades NaN/∞ to JSON null (NaN is not valid JSON).
@@ -326,6 +377,7 @@ fn run_summary_json(
     chunk_size: usize,
     engine: &str,
     mode: &str,
+    hybrid_threshold: Option<f64>,
     r: &BigMeansResult,
     wall: f64,
 ) -> Json {
@@ -346,6 +398,10 @@ fn run_summary_json(
         ("pruned_evals", num(r.counters.pruned_evals as f64)),
         ("pruned_blocks", num(r.counters.pruned_blocks as f64)),
         ("hybrid_switches", num(r.counters.hybrid_switches as f64)),
+        ("hybrid_threshold", hybrid_threshold.map(num).unwrap_or(Json::Null)),
+        ("hybrid_rescans", num(r.counters.hybrid_rescans as f64)),
+        ("hybrid_scan_rows", num(r.counters.hybrid_scan_rows as f64)),
+        ("hybrid_rescan_rate", num(r.counters.hybrid_rescan_rate())),
         ("chunk_iterations", num(r.counters.chunk_iterations as f64)),
         ("full_iterations", num(r.counters.full_iterations as f64)),
         ("cpu_init_secs", num(r.cpu_init_secs)),
@@ -394,11 +450,13 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     // `KernelEngineKind::parse` is the source of truth for kernel tokens;
     // "native" (compat alias) and "pjrt" fall back to the panel kernel.
     let kernel = KernelEngineKind::parse(engine_arg).unwrap_or(KernelEngineKind::Panel);
+    let hybrid_threshold = resolve_hybrid_threshold(args)?;
     let mut cfg = BigMeansConfig::new(k, s)
         .with_stop(stop)
         .with_parallel(mode)
         .with_backend(backend)
         .with_kernel(kernel)
+        .with_hybrid_threshold(hybrid_threshold)
         .with_seed(args.u64("seed", 0xB16_3EA5)?);
     cfg.reinit = reinit;
     cfg.index_stride = args.usize("index-stride", 1)?;
@@ -461,6 +519,10 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
         }
         _ => {}
     }
+    // The active threshold only exists for the hybrid engine: the
+    // configured/learned override, or the engine's built-in default.
+    let active_threshold = (kernel == KernelEngineKind::Hybrid)
+        .then(|| cfg.hybrid_threshold.unwrap_or(DEFAULT_HYBRID_THRESHOLD));
     let bm = match engine {
         Engine::Native => BigMeans::new(cfg),
         Engine::Pjrt => runtime::pjrt_bigmeans(cfg, &runtime::default_artifacts_dir())
@@ -480,10 +542,25 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
     if r.counters.pruned_blocks > 0 {
         println!("pruned blocks (final)    : {}", r.counters.pruned_blocks);
     }
+    if let Some(t) = active_threshold {
+        println!("hybrid threshold         : {t}");
+        println!("hybrid rescan rate       : {:.4}", r.counters.hybrid_rescan_rate());
+    }
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
     if let Some(path) = args.get("save-model") {
-        save_model(path, args, data.name(), engine_arg, mode_arg, k, s, data.n(), &r)?;
+        save_model(
+            path,
+            args,
+            data.name(),
+            engine_arg,
+            mode_arg,
+            k,
+            s,
+            data.n(),
+            active_threshold,
+            &r,
+        )?;
     }
     if args.flag("json") {
         let doc = run_summary_json(
@@ -494,6 +571,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             s,
             engine_arg,
             mode_arg,
+            active_threshold,
             &r,
             wall,
         );
@@ -507,6 +585,7 @@ fn cmd_cluster(args: &Args) -> Result<(), String> {
             ("objective", fnum(r.objective)),
             ("best_chunk_objective", fnum(r.best_chunk_objective)),
             ("improvements", num(r.improvements as f64)),
+            ("hybrid_threshold", active_threshold.map(num).unwrap_or(Json::Null)),
             ("cpu_init_secs", num(r.cpu_init_secs)),
             ("cpu_full_secs", num(r.cpu_full_secs)),
             ("wall_secs", num(wall)),
@@ -565,6 +644,9 @@ fn report_counters(c: &bigmeans::metrics::Counters) -> Vec<(&'static str, Json)>
         ("pruned_evals", num(c.pruned_evals as f64)),
         ("pruned_blocks", num(c.pruned_blocks as f64)),
         ("hybrid_switches", num(c.hybrid_switches as f64)),
+        ("hybrid_rescans", num(c.hybrid_rescans as f64)),
+        ("hybrid_scan_rows", num(c.hybrid_scan_rows as f64)),
+        ("hybrid_rescan_rate", num(c.hybrid_rescan_rate())),
         ("chunks", num(c.chunks as f64)),
         ("chunk_iterations", num(c.chunk_iterations as f64)),
         ("full_iterations", num(c.full_iterations as f64)),
@@ -602,6 +684,10 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
     println!("shots (n_s)              : {}", r.counters.chunks);
     println!("incumbent improvements   : {}", r.improvements);
     println!("chosen sample size       : {}", race.chosen_chunk_rows);
+    if let Some(t) = race.chosen_threshold {
+        println!("chosen hybrid threshold  : {t}");
+        println!("hybrid rescan rate       : {:.4}", r.counters.hybrid_rescan_rate());
+    }
     println!("controller               : {}", race.trace.controller);
     for arm in &race.trace.arms {
         println!(
@@ -615,6 +701,22 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
     }
     println!("cpu_init / cpu_full      : {:.3}s / {:.3}s", r.cpu_init_secs, r.cpu_full_secs);
     println!("wall time                : {wall:.3}s");
+    if let Some(path) = args.get("save-model") {
+        // The learned threshold rides along in the meta, so a later
+        // `cluster --reuse-threshold` or `serve` run can pick it up.
+        save_model(
+            path,
+            args,
+            data.name(),
+            cfg.kernel.name(),
+            "tune",
+            cfg.k,
+            race.chosen_chunk_rows,
+            data.n(),
+            race.chosen_threshold,
+            r,
+        )?;
+    }
     if args.flag("json") {
         let kernel_name = cfg.kernel.name();
         let summary = run_summary_json(
@@ -625,6 +727,7 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
             cfg.chunk_size,
             kernel_name,
             "tune",
+            race.chosen_threshold,
             r,
             wall,
         );
@@ -633,6 +736,7 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
             ("tuner", race.trace.to_json()),
             ("validation_objective", fnum(race.validation_objective)),
             ("chosen_chunk_rows", num(race.chosen_chunk_rows as f64)),
+            ("chosen_threshold", race.chosen_threshold.map(num).unwrap_or(Json::Null)),
         ]);
         println!("{}", doc.to_string());
     }
@@ -652,6 +756,7 @@ fn run_tune(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Resu
             ("objective", fnum(r.objective)),
             ("validation_objective", fnum(race.validation_objective)),
             ("chosen_chunk_rows", num(race.chosen_chunk_rows as f64)),
+            ("chosen_threshold", race.chosen_threshold.map(num).unwrap_or(Json::Null)),
             ("improvements", num(r.improvements as f64)),
             ("wall_secs", num(wall)),
         ];
@@ -819,6 +924,9 @@ fn run_stream(args: &Args, cfg: BigMeansConfig, data: Box<dyn DataSource>) -> Re
 
 /// `--save-model`: persist the winning centroids as a `.bmm` serving
 /// artifact (publisher generation 1) with run provenance in the metadata.
+/// A `Some` hybrid threshold (configured, or tuner-learned in `--mode
+/// tune`) is recorded under `hybrid_threshold` so `--reuse-threshold`
+/// and the serve stats document can surface it.
 #[allow(clippy::too_many_arguments)]
 fn save_model(
     path: &str,
@@ -829,12 +937,13 @@ fn save_model(
     k: usize,
     chunk_size: usize,
     n: usize,
+    hybrid_threshold: Option<f64>,
     r: &BigMeansResult,
 ) -> Result<(), String> {
     if !path.ends_with(".bmm") {
         return Err(format!("--save-model output must be a .bmm path, got '{path}'"));
     }
-    let meta = obj(vec![
+    let mut meta_entries = vec![
         ("dataset", jstr(dataset)),
         ("engine", jstr(engine)),
         ("mode", jstr(mode)),
@@ -842,7 +951,11 @@ fn save_model(
         ("n", num(n as f64)),
         ("chunk_size", num(chunk_size as f64)),
         ("seed", num(args.u64("seed", 0xB16_3EA5)? as f64)),
-    ]);
+    ];
+    if let Some(t) = hybrid_threshold {
+        meta_entries.push(("hybrid_threshold", num(t)));
+    }
+    let meta = obj(meta_entries);
     ModelArtifact::new(k, n, 1, r.objective, meta, r.centroids.clone())
         .and_then(|a| a.save(&PathBuf::from(path)))
         .map_err(|e| e.to_string())?;

@@ -31,6 +31,15 @@ pub struct Counters {
     /// Hamerly→Elkan switches taken by the hybrid kernel engine (one per
     /// chunk state at most — the switch is one-way).
     pub hybrid_switches: u64,
+    /// Rescans observed by the hybrid engine's steady-state Hamerly steps
+    /// (`(evals − m) / k` per step — exact under Hamerly accounting).
+    /// Deterministic: derived from the merged per-step counters, so the
+    /// serial and pool-parallel paths agree bit for bit.
+    pub hybrid_rescans: u64,
+    /// Rows examined by those same steps — the denominator of the
+    /// observed rescan *rate* `hybrid_rescans / hybrid_scan_rows` that
+    /// the learned switch threshold is priced against.
+    pub hybrid_scan_rows: u64,
 }
 
 impl Counters {
@@ -57,6 +66,18 @@ impl Counters {
         self.chunk_iterations += other.chunk_iterations;
         self.chunks += other.chunks;
         self.hybrid_switches += other.hybrid_switches;
+        self.hybrid_rescans += other.hybrid_rescans;
+        self.hybrid_scan_rows += other.hybrid_scan_rows;
+    }
+
+    /// Observed hybrid rescan rate (0 when the hybrid Hamerly path never
+    /// ran a steady-state step).
+    pub fn hybrid_rescan_rate(&self) -> f64 {
+        if self.hybrid_scan_rows == 0 {
+            0.0
+        } else {
+            self.hybrid_rescans as f64 / self.hybrid_scan_rows as f64
+        }
     }
 }
 

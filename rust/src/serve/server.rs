@@ -253,6 +253,20 @@ impl ServeStats {
             ),
             ("generation", json::num(registry.generation() as f64)),
             ("swaps", json::num(registry.swaps() as f64)),
+            // Learned hybrid switch threshold carried by the served
+            // model's meta (written by `--mode tune --save-model`);
+            // null for models trained without one.
+            (
+                "hybrid_threshold",
+                registry
+                    .current()
+                    .artifact
+                    .meta
+                    .get("hybrid_threshold")
+                    .and_then(Json::as_f64)
+                    .map(json::num)
+                    .unwrap_or(Json::Null),
+            ),
             ("distance_evals", json::num(distance_evals as f64)),
             ("pruned_evals", json::num(pruned_evals as f64)),
             ("pruned_blocks", json::num(pruned_blocks as f64)),

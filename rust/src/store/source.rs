@@ -13,10 +13,23 @@
 //! Per the [`DataSource`] contract, corruption discovered *during a read*
 //! panics with a diagnostic naming the block; constructors and
 //! `verify_all` return errors instead.
+//!
+//! **Decode-free f16 path.** When the file stores `dtype f16` with
+//! `codec none` on the mmap backing, the payload *is* the matrix — raw
+//! little-endian f16, no codec framing. Reads then skip the
+//! decode-to-f32 slab copy and the decoded-block LRU entirely: each
+//! row is widened f16→f32 element-by-element straight into the caller's
+//! buffer, halving memory traffic. Widening is exact (every f16 value
+//! is representable in f32) and performs the same per-element
+//! conversion as `dtype_decode`, so labels and objectives are
+//! bit-identical to the decode path. Block CRCs are still enforced —
+//! once per block, on its first raw touch. Bypassed cache lookups are
+//! counted in `bigmeans_store_cache_bypass_total`.
 
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::data::source::{AccessPattern, BlockSummaries, DataSource};
@@ -25,6 +38,7 @@ use crate::store::cache::{BlockCache, DEFAULT_CACHE_BYTES};
 use crate::store::codec::{block_minmax, decode_block};
 use crate::store::format::{BlockEntry, Codec, Dtype, V3Header, BLOCK_ENTRY_LEN, BMX3_HEADER_LEN};
 use crate::util::error::{Context, Result};
+use crate::util::half::f32_from_f16;
 use crate::util::hash::crc32;
 use crate::util::sync::lock_recover;
 use crate::util::threadpool::ThreadPool;
@@ -65,6 +79,13 @@ pub struct BlockStore {
     backing: Backing,
     cache: BlockCache,
     m_decoded: obs::Counter,
+    /// Reads take the decode-free raw-f16 path (dtype f16, codec none,
+    /// mmap backing; disable with [`Self::set_fused_f16`]).
+    fused_f16: AtomicBool,
+    /// Per-block "raw bytes CRC-verified" bitmap for the decode-free
+    /// path, which never runs the decoder that normally checks CRCs.
+    raw_checked: Vec<AtomicBool>,
+    m_bypass: obs::Counter,
 }
 
 impl BlockStore {
@@ -186,7 +207,8 @@ impl BlockStore {
             let _ = prefer_mmap;
             Backing::Pread(Mutex::new(file))
         };
-        Ok(BlockStore {
+        let nblocks = entries.len();
+        let store = BlockStore {
             name,
             m: hdr.m as usize,
             n: hdr.n as usize,
@@ -202,7 +224,16 @@ impl BlockStore {
                 "Store blocks decoded (CRC + codec + dtype pass)",
                 &[],
             ),
-        })
+            fused_f16: AtomicBool::new(false),
+            raw_checked: (0..nblocks).map(|_| AtomicBool::new(false)).collect(),
+            m_bypass: obs::metrics().counter(
+                "bigmeans_store_cache_bypass_total",
+                "Decode-free f16 block reads that bypassed the decoded-f32 cache",
+                &[],
+            ),
+        };
+        store.set_fused_f16(true); // on by default whenever eligible
+        Ok(store)
     }
 
     /// Whether the file carries the per-block min/max summary section.
@@ -285,6 +316,21 @@ impl BlockStore {
         self.cache.stats()
     }
 
+    /// Whether reads currently take the decode-free f16 fast path.
+    pub fn fused_f16_active(&self) -> bool {
+        self.fused_f16.load(Ordering::Relaxed)
+    }
+
+    /// Enable/disable the decode-free f16 path. Enabling is a no-op on
+    /// ineligible stores (dtype ≠ f16, codec ≠ none, or no mmap backing);
+    /// disabling forces the decode-then-cache path, which the A/B bench
+    /// rows and the fused ≡ decoded bit-identity tests rely on.
+    pub fn set_fused_f16(&self, on: bool) {
+        let eligible =
+            self.dtype == Dtype::F16 && self.codec == Codec::None && self.is_mmap();
+        self.fused_f16.store(on && eligible, Ordering::Relaxed);
+    }
+
     /// The encoded byte range `[start, end)` of block `idx` (tests and
     /// diagnostics — this is where a corruption probe should flip bytes).
     pub fn block_byte_range(&self, idx: usize) -> (u64, u64) {
@@ -347,6 +393,41 @@ impl BlockStore {
             Err(io) => Err(io),
         };
         flat.with_context(|| format!("block {idx} of {}", self.entries.len()))
+    }
+
+    /// Run `f` over the raw little-endian f16 payload of block `idx`
+    /// (the decode-free path). The CRC — which the decoder would
+    /// normally enforce — is checked once per block, on its first raw
+    /// touch, through a per-block bitmap; corruption panics naming the
+    /// block, exactly like [`Self::block`].
+    fn with_raw_f16<R>(&self, idx: usize, f: impl FnOnce(&[u8]) -> R) -> R {
+        let entry = self.entries[idx];
+        let values_len = self.rows_in_block(idx) * self.n;
+        let res = self
+            .with_encoded(&entry, |bytes| {
+                if !self.raw_checked[idx].load(Ordering::Relaxed) {
+                    let computed = crc32(bytes);
+                    if computed != entry.crc {
+                        bail!(
+                            "checksum mismatch (expected {:#010x}, computed \
+                             {computed:#010x}) — file corrupt or truncated mid-write",
+                            entry.crc
+                        );
+                    }
+                    if bytes.len() != values_len * 2 {
+                        bail!(
+                            "raw f16 block holds {} bytes, geometry needs exactly {}",
+                            bytes.len(),
+                            values_len * 2
+                        );
+                    }
+                    self.raw_checked[idx].store(true, Ordering::Relaxed);
+                }
+                Ok(f(bytes))
+            })
+            .and_then(|inner| inner)
+            .with_context(|| format!("block {idx} of {}", self.entries.len()));
+        res.unwrap_or_else(|e| panic!("block store '{}': {e}", self.name))
     }
 
     /// Decoded block `idx` through the LRU cache. Corruption panics with
@@ -445,6 +526,17 @@ fn parse_summaries(raw: &[u8], blocks: usize, n: usize, label: &str) -> Result<V
         .collect())
 }
 
+/// Widen raw little-endian f16 payload bytes into `out`. Exact: every
+/// f16 value is representable in f32 and this is the same per-element
+/// conversion `dtype_decode` performs (no accumulation, no rounding),
+/// so the fused path is bit-identical to decode-then-f32.
+fn widen_f16(raw: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(raw.len(), out.len() * 2);
+    for (slot, pair) in out.iter_mut().zip(raw.chunks_exact(2)) {
+        *slot = f32_from_f16(u16::from_le_bytes([pair[0], pair[1]]));
+    }
+}
+
 impl DataSource for BlockStore {
     fn name(&self) -> &str {
         &self.name
@@ -465,13 +557,24 @@ impl DataSource for BlockStore {
         assert!(start + rows <= self.m, "read_rows: range out of bounds");
         let mut row = start;
         let mut filled = 0usize;
+        let fused = self.fused_f16_active();
         while filled < rows {
             let idx = row / self.block_rows;
             let within = row - idx * self.block_rows;
             let take = (self.block_rows - within).min(rows - filled);
-            let block = self.block(idx);
-            out[filled * n..(filled + take) * n]
-                .copy_from_slice(&block[within * n..(within + take) * n]);
+            if fused {
+                self.m_bypass.inc();
+                self.with_raw_f16(idx, |bytes| {
+                    widen_f16(
+                        &bytes[within * n * 2..(within + take) * n * 2],
+                        &mut out[filled * n..(filled + take) * n],
+                    );
+                });
+            } else {
+                let block = self.block(idx);
+                out[filled * n..(filled + take) * n]
+                    .copy_from_slice(&block[within * n..(within + take) * n]);
+            }
             row += take;
             filled += take;
         }
@@ -480,6 +583,29 @@ impl DataSource for BlockStore {
     fn sample_rows(&self, indices: &[usize], out: &mut [f32]) {
         let n = self.n;
         assert_eq!(out.len(), indices.len() * n, "sample_rows: out shape");
+        if self.fused_f16_active() {
+            // Decode-free gather: the raw f16 row is sliced straight off
+            // the mapping, so there is no block Arc to hold. Count one
+            // bypass per block *switch* to mirror the cache-lookup count
+            // the decode path would have issued.
+            let mut last: Option<usize> = None;
+            for (slot, &i) in indices.iter().enumerate() {
+                assert!(i < self.m, "sample_rows: row {i} out of bounds");
+                let idx = i / self.block_rows;
+                if last != Some(idx) {
+                    self.m_bypass.inc();
+                    last = Some(idx);
+                }
+                let within = i - idx * self.block_rows;
+                self.with_raw_f16(idx, |bytes| {
+                    widen_f16(
+                        &bytes[within * n * 2..(within + 1) * n * 2],
+                        &mut out[slot * n..(slot + 1) * n],
+                    );
+                });
+            }
+            return;
+        }
         // Consecutive indices usually land in the same block (samplers
         // sort their draws for locality) — hold the last block across
         // iterations to skip even the cache lock.
@@ -666,6 +792,110 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() - 40]).unwrap();
         assert!(BlockStore::open(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn fused_f16_reads_bit_match_decode_path_and_bypass_cache() {
+        let d = toy(100, 5); // n = 5: every row widens through a ragged tail
+        let p = tmp("fused.bmx");
+        let opts =
+            StoreOptions { block_rows: 16, dtype: Dtype::F16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let fused = BlockStore::open(&p).unwrap();
+        if !fused.is_mmap() {
+            return; // no mmap on this target: the fused path cannot engage
+        }
+        assert!(fused.fused_f16_active());
+        let decoded = BlockStore::open(&p).unwrap();
+        decoded.set_fused_f16(false);
+        assert!(!decoded.fused_f16_active());
+        let mut a = vec![0f32; 40 * 5];
+        let mut b = vec![0f32; 40 * 5];
+        fused.read_rows(10, &mut a); // spans blocks 0..=3
+        decoded.read_rows(10, &mut b);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+        // The fused store never touched the decoded-block cache; the
+        // decode path populated it as always.
+        assert_eq!(fused.cache_stats(), (0, 0));
+        assert_ne!(decoded.cache_stats(), (0, 0));
+        // Gather path, with repeats and block switches.
+        let idx = [0usize, 1, 15, 16, 17, 50, 99, 99, 3];
+        let mut ga = vec![0f32; idx.len() * 5];
+        let mut gb = vec![0f32; idx.len() * 5];
+        fused.sample_rows(&idx, &mut ga);
+        decoded.sample_rows(&idx, &mut gb);
+        assert_eq!(bits(&ga), bits(&gb));
+        assert_eq!(fused.cache_stats(), (0, 0));
+        // Re-enabling after a decode run flips the path back.
+        decoded.set_fused_f16(true);
+        assert!(decoded.fused_f16_active());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn fused_f16_requires_raw_codec_and_mmap() {
+        let d = toy(64, 3);
+        // f16 + shuffle: codec framing means no raw payload to slice.
+        let p = tmp("fused_shuf.bmx");
+        let opts = StoreOptions {
+            block_rows: 16,
+            dtype: Dtype::F16,
+            codec: Codec::Shuffle,
+            ..StoreOptions::default()
+        };
+        copy_to_store(&d, &p, opts).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        assert!(!s.fused_f16_active());
+        s.set_fused_f16(true); // enabling an ineligible store is a no-op
+        assert!(!s.fused_f16_active());
+        let _ = std::fs::remove_file(&p);
+        // f16 + raw, but buffered backing: pread cannot slice in place.
+        let p = tmp("fused_pread.bmx");
+        let opts =
+            StoreOptions { block_rows: 16, dtype: Dtype::F16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let s = BlockStore::open_buffered(&p).unwrap();
+        assert!(!s.fused_f16_active());
+        let _ = std::fs::remove_file(&p);
+        // f32 + raw: nothing to widen.
+        let p = tmp("fused_f32.bmx");
+        copy_to_store(&d, &p, StoreOptions { block_rows: 16, ..StoreOptions::default() })
+            .unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        assert!(!s.fused_f16_active());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn fused_f16_read_of_corrupt_block_panics_with_block_index() {
+        let d = toy(80, 2);
+        let p = tmp("fused_panic.bmx");
+        let opts =
+            StoreOptions { block_rows: 16, dtype: Dtype::F16, ..StoreOptions::default() };
+        copy_to_store(&d, &p, opts).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        if !s.is_mmap() {
+            return;
+        }
+        let (lo, _) = s.block_byte_range(2);
+        drop(s);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[lo as usize] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let s = BlockStore::open(&p).unwrap();
+        assert!(s.fused_f16_active());
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut out = vec![0f32; 2];
+            s.read_rows(40, &mut out); // row 40 lives in block 2
+        }))
+        .unwrap_err();
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".into());
+        assert!(msg.contains("block 2"), "panic must name the block: {msg}");
         let _ = std::fs::remove_file(&p);
     }
 

@@ -50,7 +50,8 @@ impl ControllerKind {
 }
 
 /// One entry of the arm grid: a sample-size multiplier applied to the base
-/// chunk size, plus an optional kernel-engine override.
+/// chunk size, plus optional kernel-engine and hybrid-switch-threshold
+/// overrides.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ArmSpec {
     /// Chunk rows = `round(multiplier × BigMeansConfig::chunk_size)`,
@@ -58,11 +59,16 @@ pub struct ArmSpec {
     pub multiplier: f64,
     /// Kernel engine for this arm (`None` = the run's configured engine).
     pub kernel: Option<KernelEngineKind>,
+    /// Hybrid Hamerly→Elkan switch threshold for this arm (`None` = the
+    /// run's configured threshold, falling back to the engine default).
+    /// Only meaningful with the hybrid kernel — the race prices a small
+    /// threshold grid and records the winner in the model meta.
+    pub threshold: Option<f64>,
 }
 
 impl ArmSpec {
     pub fn new(multiplier: f64) -> Self {
-        ArmSpec { multiplier, kernel: None }
+        ArmSpec { multiplier, kernel: None, threshold: None }
     }
 }
 
@@ -105,8 +111,10 @@ impl TunerConfig {
         self
     }
 
-    /// Parse a CLI grid spec: comma-separated entries of `MULT` or
-    /// `MULT:KERNEL`, e.g. `0.25,0.5,1,2` or `1:panel,1:bounded,4`.
+    /// Parse a CLI grid spec: comma-separated entries of `MULT`,
+    /// `MULT:KERNEL`, or `MULT:KERNEL@THRESHOLD`, e.g. `0.25,0.5,1,2`,
+    /// `1:panel,1:bounded,4`, or `1:hybrid@0.1,1:hybrid@0.5`. The `@T`
+    /// suffix sets the hybrid Hamerly→Elkan switch threshold for that arm.
     pub fn parse_arms(spec: &str) -> Result<Vec<ArmSpec>, String> {
         let mut arms = Vec::new();
         for entry in spec.split(',') {
@@ -114,13 +122,27 @@ impl TunerConfig {
             if entry.is_empty() {
                 continue;
             }
-            let (mult_text, kernel) = match entry.split_once(':') {
-                None => (entry, None),
+            let (mult_text, kernel, threshold) = match entry.split_once(':') {
+                None => (entry, None, None),
                 Some((m, k)) => {
-                    let kind = KernelEngineKind::parse(k.trim()).ok_or_else(|| {
-                        format!("--arms: unknown kernel '{}' in '{entry}'", k.trim())
+                    let (kernel_text, threshold) = match k.split_once('@') {
+                        None => (k.trim(), None),
+                        Some((kt, t)) => {
+                            let value: f64 = t.trim().parse().map_err(|_| {
+                                format!("--arms: bad threshold '{}' in '{entry}'", t.trim())
+                            })?;
+                            if !value.is_finite() || value < 0.0 {
+                                return Err(format!(
+                                    "--arms: threshold must be ≥ 0, got '{entry}'"
+                                ));
+                            }
+                            (kt.trim(), Some(value))
+                        }
+                    };
+                    let kind = KernelEngineKind::parse(kernel_text).ok_or_else(|| {
+                        format!("--arms: unknown kernel '{kernel_text}' in '{entry}'")
                     })?;
-                    (m.trim(), Some(kind))
+                    (m.trim(), Some(kind), threshold)
                 }
             };
             let mult_text = mult_text.strip_suffix('x').unwrap_or(mult_text);
@@ -130,7 +152,7 @@ impl TunerConfig {
             if !multiplier.is_finite() || multiplier <= 0.0 {
                 return Err(format!("--arms: multiplier must be > 0, got '{entry}'"));
             }
-            arms.push(ArmSpec { multiplier, kernel });
+            arms.push(ArmSpec { multiplier, kernel, threshold });
         }
         if arms.is_empty() {
             return Err("--arms: empty grid".into());
@@ -180,6 +202,23 @@ mod tests {
         assert_eq!(arms[2].kernel, Some(KernelEngineKind::Bounded));
         assert_eq!(arms[3].kernel, Some(KernelEngineKind::Panel));
         assert_eq!(arms[4].kernel, Some(KernelEngineKind::Elkan));
+        assert!(arms.iter().all(|a| a.threshold.is_none()));
+    }
+
+    #[test]
+    fn parse_arms_threshold_suffix() {
+        let arms =
+            TunerConfig::parse_arms("1:hybrid@0.1, 2x:hybrid@0.5 ,1:hybrid,0.5").unwrap();
+        assert_eq!(arms.len(), 4);
+        assert_eq!(arms[0].kernel, Some(KernelEngineKind::Hybrid));
+        assert_eq!(arms[0].threshold, Some(0.1));
+        assert_eq!(arms[1].multiplier, 2.0);
+        assert_eq!(arms[1].threshold, Some(0.5));
+        assert_eq!(arms[2].threshold, None);
+        assert_eq!(arms[3], ArmSpec::new(0.5));
+        // Zero is a valid threshold (switch on any rescan at all).
+        let zero = TunerConfig::parse_arms("1:hybrid@0").unwrap();
+        assert_eq!(zero[0].threshold, Some(0.0));
     }
 
     #[test]
@@ -189,6 +228,9 @@ mod tests {
         assert!(TunerConfig::parse_arms("-1").is_err());
         assert!(TunerConfig::parse_arms("0").is_err());
         assert!(TunerConfig::parse_arms("1:warp").is_err());
+        assert!(TunerConfig::parse_arms("1:hybrid@").is_err());
+        assert!(TunerConfig::parse_arms("1:hybrid@nan").is_err());
+        assert!(TunerConfig::parse_arms("1:hybrid@-0.5").is_err());
     }
 
     #[test]

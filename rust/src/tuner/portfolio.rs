@@ -11,7 +11,8 @@ use crate::metrics::bandit::ArmTrace;
 
 use super::config::TunerConfig;
 
-/// One competitor: a chunk size and a kernel engine.
+/// One competitor: a chunk size, a kernel engine, and (for hybrid arms)
+/// an optional switch-threshold override.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Arm {
     /// Index into the portfolio (stable for the whole race).
@@ -22,12 +23,18 @@ pub struct Arm {
     pub chunk_rows: usize,
     /// Kernel engine running this arm's local search.
     pub kernel: KernelEngineKind,
+    /// Hybrid Hamerly→Elkan switch threshold (`None` = the run's
+    /// configured threshold, falling back to the engine default).
+    pub threshold: Option<f64>,
 }
 
 impl Arm {
-    /// Display label, e.g. `"0.5x/panel"`.
+    /// Display label, e.g. `"0.5x/panel"` or `"1x/hybrid@0.1"`.
     pub fn label(&self) -> String {
-        format!("{}x/{}", self.multiplier, self.kernel.name())
+        match self.threshold {
+            Some(t) => format!("{}x/{}@{t}", self.multiplier, self.kernel.name()),
+            None => format!("{}x/{}", self.multiplier, self.kernel.name()),
+        }
     }
 
     /// Fresh telemetry slot for this arm.
@@ -50,8 +57,8 @@ pub struct Portfolio {
 impl Portfolio {
     /// Resolve the grid against a dataset of `m` rows: scale, clamp to
     /// `[k, m]`, resolve kernel overrides, and collapse duplicates (two
-    /// specs that clamp to the same `(rows, kernel)` pair would race
-    /// identical competitors and only dilute the budget).
+    /// specs that clamp to the same `(rows, kernel, threshold)` triple
+    /// would race identical competitors and only dilute the budget).
     pub fn build(
         cfg: &BigMeansConfig,
         tuner: &TunerConfig,
@@ -73,7 +80,10 @@ impl Portfolio {
             let raw = (cfg.chunk_size as f64 * spec.multiplier).round() as usize;
             let rows = raw.clamp(lo, m);
             let kernel = spec.kernel.unwrap_or(cfg.kernel);
-            if arms.iter().any(|a| a.chunk_rows == rows && a.kernel == kernel) {
+            let threshold = spec.threshold.or(cfg.hybrid_threshold);
+            if arms.iter().any(|a| {
+                a.chunk_rows == rows && a.kernel == kernel && a.threshold == threshold
+            }) {
                 continue;
             }
             arms.push(Arm {
@@ -81,6 +91,7 @@ impl Portfolio {
                 multiplier: spec.multiplier,
                 chunk_rows: rows,
                 kernel,
+                threshold,
             });
         }
         Ok(Portfolio { arms })
@@ -137,9 +148,9 @@ mod tests {
     #[test]
     fn kernel_override_separates_otherwise_equal_arms() {
         let tuner = TunerConfig::default().with_arms(vec![
-            ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Panel) },
-            ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Bounded) },
-            ArmSpec { multiplier: 1.0, kernel: Some(KernelEngineKind::Elkan) },
+            ArmSpec { kernel: Some(KernelEngineKind::Panel), ..ArmSpec::new(1.0) },
+            ArmSpec { kernel: Some(KernelEngineKind::Bounded), ..ArmSpec::new(1.0) },
+            ArmSpec { kernel: Some(KernelEngineKind::Elkan), ..ArmSpec::new(1.0) },
         ]);
         let p = Portfolio::build(&cfg(3, 256), &tuner, 5000).unwrap();
         assert_eq!(p.len(), 3);
@@ -147,6 +158,34 @@ mod tests {
         assert_eq!(p.arms[1].kernel, KernelEngineKind::Bounded);
         assert_eq!(p.arms[2].kernel, KernelEngineKind::Elkan);
         assert_eq!(p.arms[2].label(), "1x/elkan");
+    }
+
+    #[test]
+    fn threshold_separates_otherwise_equal_arms() {
+        let hybrid = |t: Option<f64>| ArmSpec {
+            kernel: Some(KernelEngineKind::Hybrid),
+            threshold: t,
+            ..ArmSpec::new(1.0)
+        };
+        let tuner = TunerConfig::default().with_arms(vec![
+            hybrid(Some(0.1)),
+            hybrid(Some(0.5)),
+            hybrid(Some(0.1)), // duplicate — collapses
+            hybrid(None),
+        ]);
+        let p = Portfolio::build(&cfg(3, 256), &tuner, 5000).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.arms[0].threshold, Some(0.1));
+        assert_eq!(p.arms[0].label(), "1x/hybrid@0.1");
+        assert_eq!(p.arms[1].threshold, Some(0.5));
+        assert_eq!(p.arms[2].threshold, None);
+        assert_eq!(p.arms[2].label(), "1x/hybrid");
+        // A run-level threshold resolves `None` arms, merging them with an
+        // explicit arm at the same value.
+        let cfg_t = cfg(3, 256).with_hybrid_threshold(Some(0.5));
+        let p = Portfolio::build(&cfg_t, &tuner, 5000).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.arms[1].threshold, Some(0.5));
     }
 
     #[test]

@@ -57,6 +57,10 @@ pub struct RaceResult {
     /// Chunk rows of the most-pulled arm (the tuner's answer to "what
     /// sample size should I have configured?").
     pub chosen_chunk_rows: usize,
+    /// Hybrid switch threshold of the most-pulled arm (`None` when the
+    /// winning arm carried no override). Recorded in the `.bmm` meta by
+    /// `--mode tune --save-model` so later runs can reuse it.
+    pub chosen_threshold: Option<f64>,
 }
 
 /// Per-arm mutable state: the dedicated RNG stream, the shot executor
@@ -157,7 +161,13 @@ pub fn run_race(
         .map(|arm| {
             Mutex::new(ArmState {
                 rng: arm_rng(cfg.seed, arm.id),
-                exec: ShotExecutor::with_chunk_size(cfg, data, arm.chunk_rows, arm.kernel),
+                exec: ShotExecutor::with_chunk_size_threshold(
+                    cfg,
+                    data,
+                    arm.chunk_rows,
+                    arm.kernel,
+                    arm.threshold,
+                ),
                 counters: Counters::new(),
             })
         })
@@ -239,10 +249,11 @@ pub fn run_race(
     }
     let trace = sched.trace;
     let improvements = trace.total_accepted();
-    let chosen_chunk_rows = trace
-        .best_arm()
-        .map(|i| portfolio.arms[i].chunk_rows)
-        .unwrap_or(cfg.chunk_size.min(m));
+    let best_arm = trace.best_arm();
+    let chosen_chunk_rows =
+        best_arm.map(|i| portfolio.arms[i].chunk_rows).unwrap_or(cfg.chunk_size.min(m));
+    let chosen_threshold =
+        best_arm.and_then(|i| portfolio.arms[i].threshold).or(cfg.hybrid_threshold);
 
     let snap = incumbent.snapshot();
     let validation_objective = snap.objective;
@@ -251,7 +262,12 @@ pub fn run_race(
         objective: snap.objective,
         degenerate: snap.degenerate.clone(),
     };
-    let final_solver = NativeSolver::with_kernel(cfg.lloyd, cfg.threads, cfg.kernel);
+    let final_solver = NativeSolver::with_kernel_threshold(
+        cfg.lloyd,
+        cfg.threads,
+        cfg.kernel,
+        chosen_threshold.or(cfg.hybrid_threshold),
+    );
     let result = finish(
         cfg,
         &final_solver,
@@ -261,7 +277,7 @@ pub fn run_race(
         counters,
         timer,
     );
-    Ok(RaceResult { result, trace, validation_objective, chosen_chunk_rows })
+    Ok(RaceResult { result, trace, validation_objective, chosen_chunk_rows, chosen_threshold })
 }
 
 #[cfg(test)]
@@ -308,6 +324,26 @@ mod tests {
         // Per-arm pulls sum to the budget.
         let total: u64 = r.trace.arms.iter().map(|a| a.pulls).sum();
         assert_eq!(total, 12);
+    }
+
+    #[test]
+    fn threshold_arms_race_and_record_the_winner() {
+        use crate::kernels::engine::KernelEngineKind;
+        let data = blobs(4000, 5);
+        let hybrid = |t: f64| ArmSpec {
+            kernel: Some(KernelEngineKind::Hybrid),
+            threshold: Some(t),
+            ..ArmSpec::new(1.0)
+        };
+        let tuner =
+            TunerConfig::default().with_arms(vec![hybrid(0.05), hybrid(0.25), hybrid(1.0)]);
+        let r = run_race(&base_cfg(9), &tuner, &data).unwrap();
+        assert_eq!(r.trace.total_pulls(), 9);
+        let t = r.chosen_threshold.expect("all arms carry a threshold");
+        assert!([0.05, 0.25, 1.0].contains(&t));
+        assert!(r.result.objective.is_finite());
+        // Labels distinguish the arms.
+        assert_eq!(r.trace.arms[0].label, "1x/hybrid@0.05");
     }
 
     #[test]

@@ -368,6 +368,77 @@ fn prop_dispatched_simd_bit_identical_to_scalar() {
     });
 }
 
+#[test]
+fn prop_fused_f16_reads_bit_identical_to_decode_path() {
+    // Decode-free f16 contract, fuzzed over shapes: for dtype = f16 ×
+    // codec = none the fused reader slices raw halfwords off the mapping
+    // and widens per element — it must hand back exactly the same f32
+    // bytes as the decode-to-slab path AND the reference per-element
+    // quantisation, across random (m, n) including masked SIMD tails
+    // (n % 32 != 0) and block geometries down to single-row blocks. Byte
+    // equality here makes every engine × ISA combination downstream
+    // bit-identical for free (the engines only ever see these buffers);
+    // CI re-runs this binary under BIGMEANS_ISA=scalar and =auto on top.
+    use bigmeans::store::{copy_to_store, BlockStore, Codec, Dtype, StoreOptions};
+    use bigmeans::util::half::{f16_from_f32, f32_from_f16};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static TRIAL: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join("bigmeans_engine_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let gen = ClusterProblemGen {
+        m_range: (1, 2000),
+        n_range: (1, 40), // crosses the 32-lane tile boundary
+        k_max: 6,
+        coord_range: (-60.0, 60.0),
+    };
+    check(49, 25, &gen, |p| {
+        let trial = TRIAL.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("{}_fused_{trial}.bmx", std::process::id()));
+        let block_rows = 1 + p.m % 117; // includes single-row blocks (m % 117 == 0)
+        let opts = StoreOptions {
+            block_rows,
+            dtype: Dtype::F16,
+            codec: Codec::None,
+            ..StoreOptions::default()
+        };
+        let d = Dataset::from_vec("fused_prop", p.points.clone(), p.m, p.n);
+        copy_to_store(&d, &path, opts).unwrap();
+        let fused = BlockStore::open(&path).unwrap();
+        if !fused.is_mmap() {
+            let _ = std::fs::remove_file(&path);
+            return true; // the fused path needs mmap backing on this target
+        }
+        let decoded = BlockStore::open(&path).unwrap();
+        decoded.set_fused_f16(false);
+        let reference: Vec<f32> =
+            p.points.iter().map(|&v| f32_from_f16(f16_from_f32(v))).collect();
+        let mut a = vec![0f32; p.m * p.n];
+        let mut b = vec![0f32; p.m * p.n];
+        fused.read_rows(0, &mut a);
+        decoded.read_rows(0, &mut b);
+        let mut ok = fused.fused_f16_active() && a == b && a == reference;
+        // Scattered gather, reverse order so consecutive draws hop blocks.
+        let idx: Vec<usize> = (0..p.m).rev().step_by(2).collect();
+        let mut ga = vec![0f32; idx.len() * p.n];
+        let mut gb = vec![0f32; idx.len() * p.n];
+        fused.sample_rows(&idx, &mut ga);
+        decoded.sample_rows(&idx, &mut gb);
+        ok = ok && ga == gb;
+        for (slot, &i) in idx.iter().enumerate() {
+            ok = ok && ga[slot * p.n..(slot + 1) * p.n] == reference[i * p.n..(i + 1) * p.n];
+        }
+        let _ = std::fs::remove_file(&path);
+        if !ok {
+            eprintln!(
+                "fused f16 diverged on m={} n={} block_rows={block_rows}",
+                p.m, p.n
+            );
+        }
+        ok
+    });
+}
+
 fn blobs(m: usize, n: usize, k_true: usize, seed: u64) -> Dataset {
     Synth::GaussianMixture {
         m,

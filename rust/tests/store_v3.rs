@@ -17,7 +17,9 @@
 
 use std::path::PathBuf;
 
-use bigmeans::coordinator::config::{BigMeansConfig, ParallelMode, StopCondition};
+use bigmeans::coordinator::config::{
+    BigMeansConfig, KernelEngineKind, ParallelMode, StopCondition,
+};
 use bigmeans::coordinator::{produce_from_source, ChunkQueue, StreamingBigMeans};
 use bigmeans::data::bmx::save_bmx;
 use bigmeans::data::synth::Synth;
@@ -337,6 +339,100 @@ fn f16_store_clusters_with_bounded_quantisation_error() {
         exact.objective
     );
     let _ = std::fs::remove_file(&p);
+}
+
+// ---------------------------------------------------------------------------
+// Decode-free f16 compute (dtype = f16 × codec = none × mmap backing).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fused_f16_pipeline_bit_identical_to_decoded_across_engines_and_codecs() {
+    // The fused reader widens raw f16 halfwords per element with the same
+    // conversion the decode-to-slab path uses, so a full Big-means run
+    // over the fused store must reproduce the decode-then-f32 run bit for
+    // bit — for every kernel engine, on a shape with masked SIMD tails
+    // (n % 32 != 0) and a single-row final block (10241 = 40·256 + 1).
+    // The lz store decodes to the same values (the codec is lossless over
+    // the f16 payload) but can never fuse, covering the codec axis too.
+    // CI runs this binary under BIGMEANS_ISA=scalar and =auto, which adds
+    // the ISA axis on top.
+    let data = blobs(10_241, 7, 4, 31);
+    let p = tmp("fused_engines.bmx");
+    let base = StoreOptions {
+        block_rows: 256,
+        dtype: Dtype::F16,
+        codec: Codec::None,
+        ..StoreOptions::default()
+    };
+    copy_to_store(&data, &p, base).unwrap();
+    let fused = BlockStore::open(&p).unwrap();
+    if !fused.is_mmap() {
+        return; // the fused path needs mmap backing on this target
+    }
+    assert!(fused.fused_f16_active());
+    let decoded = BlockStore::open(&p).unwrap();
+    decoded.set_fused_f16(false);
+    assert!(!decoded.fused_f16_active());
+    let p_lz = tmp("fused_engines_lz.bmx");
+    copy_to_store(&data, &p_lz, StoreOptions { codec: Codec::Lz, ..base }).unwrap();
+    let via_lz = BlockStore::open(&p_lz).unwrap();
+    assert!(!via_lz.fused_f16_active(), "a compressed store must never fuse");
+    for kind in [
+        KernelEngineKind::Panel,
+        KernelEngineKind::Bounded,
+        KernelEngineKind::Elkan,
+        KernelEngineKind::Hybrid,
+    ] {
+        let run = |src: &dyn DataSource| {
+            BigMeans::new(sequential_cfg(4, 1024, 12).with_kernel(kind)).run(src).unwrap()
+        };
+        let a = run(&fused);
+        assert_bit_identical(&a, &run(&decoded), &format!("fused vs decoded ({kind:?})"));
+        assert_bit_identical(&a, &run(&via_lz), &format!("fused vs f16/lz ({kind:?})"));
+    }
+    // The fused store served every read without the decoded-f32 cache.
+    assert_eq!(fused.cache_stats(), (0, 0), "fused reads must bypass the LRU");
+    let (hits, misses) = decoded.cache_stats();
+    assert!(hits + misses > 0, "decoded comparator must have used the cache");
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&p_lz);
+}
+
+#[test]
+fn fused_f16_awkward_shapes_read_bit_identical_to_decode() {
+    // Raw read parity on the shapes most likely to trip a vector tail:
+    // n = 33 (one full 32-lane tile + 1-element scalar tail per row),
+    // single-row blocks (block_rows = 1), and a one-row store.
+    for (m, n, block_rows) in [(257usize, 33usize, 64usize), (17, 33, 1), (1, 5, 256)] {
+        let d = blobs(m, n, 3, 32 + m as u64);
+        let p = tmp(&format!("fused_tail_{m}_{n}_{block_rows}.bmx"));
+        let opts = StoreOptions {
+            block_rows,
+            dtype: Dtype::F16,
+            codec: Codec::None,
+            ..StoreOptions::default()
+        };
+        copy_to_store(&d, &p, opts).unwrap();
+        let fused = BlockStore::open(&p).unwrap();
+        if !fused.is_mmap() {
+            return;
+        }
+        let decoded = BlockStore::open(&p).unwrap();
+        decoded.set_fused_f16(false);
+        let label = format!("m={m} n={n} block_rows={block_rows}");
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        fused.read_rows(0, &mut a);
+        decoded.read_rows(0, &mut b);
+        assert_eq!(a, b, "{label}: full read");
+        let idx: Vec<usize> = (0..m).rev().step_by(3).collect();
+        let mut ga = vec![0f32; idx.len() * n];
+        let mut gb = vec![0f32; idx.len() * n];
+        fused.sample_rows(&idx, &mut ga);
+        decoded.sample_rows(&idx, &mut gb);
+        assert_eq!(ga, gb, "{label}: scattered gather");
+        let _ = std::fs::remove_file(&p);
+    }
 }
 
 // ---------------------------------------------------------------------------
